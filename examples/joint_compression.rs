@@ -1,0 +1,59 @@
+//! Joint sparsification + quantization (the Figure 6 experiment): compare
+//! 50% sparse + 4-bit (3 effective bits/weight with the bitmask) against
+//! size-equivalent 3-bit GPTQ — which in this codebase is literally the same
+//! artifact with sparsity = 0, the paper's own observation that SparseGPT
+//! generalizes GPTQ.
+//!
+//! Run: cargo run --release --example joint_compression [-- <config>]
+
+use anyhow::Result;
+use sparsegpt::bench::{eval_one, prune_variant};
+use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::eval::report::{fmt_ppl, Table};
+use sparsegpt::harness::Workspace;
+use sparsegpt::solver::quant::effective_bits;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+fn main() -> Result<()> {
+    let config = std::env::args().nth(1).unwrap_or_else(|| "small".to_string());
+    let ws = Workspace::open()?;
+    let dense = ws.load_model(&config)?;
+    let dense_ppl = eval_one(&ws, &dense, "synth-wiki")?;
+
+    let variants: Vec<(String, PruneMethod, f64)> = vec![
+        (
+            "50% + 4-bit".into(),
+            PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: Some(4) },
+            effective_bits(0.5, 4.0),
+        ),
+        (
+            "GPTQ 3-bit".into(),
+            PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.0), quant_bits: Some(3) },
+            3.0,
+        ),
+        (
+            "50% + 3-bit".into(),
+            PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: Some(3) },
+            effective_bits(0.5, 3.0),
+        ),
+        (
+            "2:4 + 4-bit".into(),
+            PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: Some(4) },
+            effective_bits(0.5, 4.0),
+        ),
+    ];
+
+    let mut table = Table::new(
+        &format!("joint compression: {config} on synth-wiki (dense {})", fmt_ppl(dense_ppl)),
+        &["variant", "bits/weight", "ppl"],
+    );
+    for (label, method, bits) in variants {
+        let out = prune_variant(&ws, &dense, method)?;
+        let ppl = eval_one(&ws, &out.params, "synth-wiki")?;
+        println!("{label}: ppl {}", fmt_ppl(ppl));
+        table.row(vec![label, format!("{bits:.1}"), fmt_ppl(ppl)]);
+    }
+    print!("{}", table.render());
+    table.save(&ws.report_dir, &format!("joint_{config}"))?;
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Sparsity sweep (the Figure 1 / Figure 5 experiment): SparseGPT vs
+//! magnitude pruning at uniform per-layer sparsities 10%..80% on one model,
+//! printing the perplexity series the paper plots.
+//!
+//! Run: cargo run --release --example sparsity_sweep [-- <config> [dataset]]
+
+use anyhow::Result;
+use sparsegpt::bench::{eval_one, prune_variant};
+use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::eval::report::{fmt_ppl, Table};
+use sparsegpt::harness::Workspace;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+fn main() -> Result<()> {
+    let config = std::env::args().nth(1).unwrap_or_else(|| "small".to_string());
+    let dataset = std::env::args().nth(2).unwrap_or_else(|| "synth-wiki".to_string());
+    let ws = Workspace::open()?;
+    let dense = ws.load_model(&config)?;
+    let dense_ppl = eval_one(&ws, &dense, &dataset)?;
+    println!("dense {config} on {dataset}: ppl {}", fmt_ppl(dense_ppl));
+
+    let mut table = Table::new(
+        &format!("sparsity sweep: {config} on {dataset} (dense {})", fmt_ppl(dense_ppl)),
+        &["sparsity", "sparsegpt", "magnitude"],
+    );
+    for p in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8] {
+        let s = prune_variant(
+            &ws,
+            &dense,
+            PruneMethod::SparseGpt { pattern: Pattern::Unstructured(p), quant_bits: None },
+        )?;
+        let m = prune_variant(
+            &ws,
+            &dense,
+            PruneMethod::Magnitude { pattern: Pattern::Unstructured(p) },
+        )?;
+        let ps = eval_one(&ws, &s.params, &dataset)?;
+        let pm = eval_one(&ws, &m.params, &dataset)?;
+        println!("p={p:.1}: sparsegpt {} magnitude {}", fmt_ppl(ps), fmt_ppl(pm));
+        table.row(vec![format!("{:.0}%", p * 100.0), fmt_ppl(ps), fmt_ppl(pm)]);
+    }
+    print!("{}", table.render());
+    table.save(&ws.report_dir, &format!("sweep_{config}"))?;
+    Ok(())
+}

@@ -1,0 +1,31 @@
+"""Layer 2: AdaPrune baseline (Hubara et al., 2021) — magnitude mask (chosen
+on the Rust side) followed by gradient-descent reconstruction of the kept
+weights on the layer-wise objective
+
+    f(W_hat) = 1/2 tr((W_hat - W) H (W_hat - W)^T),   H = X X^T,
+
+whose gradient is (W_hat - W) H, projected onto the mask each step. The
+original uses SGD over calibration batches; with H precomputed the two are
+the same objective (this is also the memory-optimized reformulation of
+Frantar & Alistarh 2022 cited by the paper as the tuned baseline).
+
+The learning rate enters as a runtime scalar: the Rust driver sets
+lr = 1 / lambda_max(H) (power-iteration estimate), the classic stable step
+size for quadratic objectives.
+"""
+
+import jax
+import jax.numpy as jnp
+
+ADAPRUNE_STEPS = 256
+
+
+def adaprune_fn(w, mask, h, lr):
+    """(W, keep_mask, H, lr) -> reconstructed W_hat (pruned entries exactly 0)."""
+    wh = w * mask
+
+    def body(_, wh):
+        g = (wh - w) @ h
+        return wh - lr * g * mask
+
+    return jax.lax.fori_loop(0, ADAPRUNE_STEPS, body, wh)

@@ -1,0 +1,222 @@
+"""AOT driver: enumerate every artifact, lower to HLO text, write manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime consumes
+``artifacts/manifest.json`` plus the ``*.hlo.txt`` files and Python never
+appears on the request path again.
+
+Artifact inventory (shapes static per config; scalars are runtime inputs):
+  train_step_<cfg>   (P, P, P, step, lr, tokens(tb,S+1))->(P, P, P, loss)
+  nll_<cfg>          (P, tokens(eb,S+1)) -> nll(eb,S)
+  embed_<cfg>        (P, tokens(eb,S)) -> hidden(eb,S,d)
+  block_fwd_<cfg>    (block_slice, hidden) -> (hidden', x_qkv, x_wo, x_fc1, x_fc2)
+  sparsegpt_<r>x<c>      (W, HinvChol, p, qlevels) -> (W_hat, mask)
+  sparsegpt24_<r>x<c>    2:4 variant (same inputs; p ignored)
+  sparsegpt48_<r>x<c>    4:8 variant
+  sparsegpt_bs<Bs>_<r>x<c>  Fig-10 ablation (jnp solver), `small` shapes only
+  adaprune_<r>x<c>       (W, mask, H, lr) -> W_hat
+  hessian_<dim>          (X(chunk,dim)) -> X^T X
+
+Incremental: existing .hlo.txt files are kept unless --force; the manifest is
+always rewritten from the full enumeration (merged with a previous manifest
+when --configs restricts the set).
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ABLATION_BS, BLOCKSIZE, CHUNK_TOKENS, CONFIGS, SEQ, VOCAB
+from . import model, train
+from .sparsegpt import sparsegpt_layer_fn, sparsegpt_layer_jnp_fn
+from .adaprune import adaprune_fn, ADAPRUNE_STEPS
+from .kernels.hessian import hessian_chunk
+from .linalg_jnp import hessian_prep_fn
+from .hlo import lower_to_hlo_text
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sparsegpt_nm_fn(nm, w, hinv_chol, qlevels):
+    return sparsegpt_layer_fn(w, hinv_chol, jnp.float32(0.0), qlevels, nm=nm)
+
+
+def _shape_entry(s):
+    return [str(s.dtype), list(s.shape)]
+
+
+def enumerate_artifacts(config_names):
+    """name -> (fn, example_args). Deduped across configs."""
+    arts = {}
+
+    for name in config_names:
+        cfg = CONFIGS[name]
+        P = _spec((cfg.n_params,))
+        tb_tok = _spec((cfg.train_batch, SEQ + 1), I32)
+        eb_tok1 = _spec((cfg.eval_batch, SEQ + 1), I32)
+        eb_tok = _spec((cfg.eval_batch, SEQ), I32)
+        hid = _spec((cfg.eval_batch, SEQ, cfg.d))
+        blk = _spec((cfg.block_size,))
+        s = _spec(())
+
+        arts[f"train_step_{name}"] = (
+            functools.partial(train.train_step_fn, cfg),
+            (P, P, P, s, s, tb_tok),
+        )
+        arts[f"nll_{name}"] = (functools.partial(model.nll_fn, cfg), (P, eb_tok1))
+        arts[f"next_logits_{name}"] = (
+            functools.partial(model.next_logits_fn, cfg),
+            (P, _spec((1, SEQ), I32)),
+        )
+        arts[f"embed_{name}"] = (functools.partial(model.embed_fn, cfg), (P, eb_tok))
+        arts[f"block_fwd_{name}"] = (
+            functools.partial(model.block_fwd_fn, cfg),
+            (blk, hid),
+        )
+        arts[f"block_hess_{name}"] = (
+            functools.partial(model.block_hess_fn, cfg),
+            (blk, hid, s),
+        )
+        arts[f"block_prop_{name}"] = (
+            functools.partial(model.block_prop_fn, cfg),
+            (blk, hid),
+        )
+
+        for (r, c) in cfg.prune_shapes():
+            w = _spec((r, c))
+            hc = _spec((c, c))
+            arts[f"sparsegpt_{r}x{c}"] = (sparsegpt_layer_fn, (w, hc, s, s))
+            # n:m variants ignore the sparsity scalar, and XLA drops unused
+            # parameters during lowering — so their signature omits it.
+            arts[f"sparsegpt24_{r}x{c}"] = (
+                functools.partial(_sparsegpt_nm_fn, (2, 4)),
+                (w, hc, s),
+            )
+            arts[f"sparsegpt48_{r}x{c}"] = (
+                functools.partial(_sparsegpt_nm_fn, (4, 8)),
+                (w, hc, s),
+            )
+            arts[f"adaprune_{r}x{c}"] = (adaprune_fn, (w, w, hc, s))
+
+        for dim in cfg.hessian_dims():
+            arts[f"hessian_{dim}"] = (hessian_chunk, (_spec((CHUNK_TOKENS, dim)),))
+            arts[f"hessian_prep_{dim}"] = (
+                hessian_prep_fn,
+                (_spec((dim, dim)), _spec(())),
+            )
+
+        if name == "small":
+            for (r, c) in cfg.prune_shapes():
+                for bs in ABLATION_BS:
+                    if bs > c or c % bs != 0 or bs == BLOCKSIZE:
+                        continue
+                    arts[f"sparsegpt_bs{bs}_{r}x{c}"] = (
+                        functools.partial(sparsegpt_layer_jnp_fn, bs),
+                        (_spec((r, c)), _spec((c, c)), s, s),
+                    )
+
+    return arts
+
+
+def config_manifest_entry(cfg):
+    return {
+        "d": cfg.d,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "ffn": cfg.ffn,
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "n_params": cfg.n_params,
+        "block_size": cfg.block_size,
+        "train_batch": cfg.train_batch,
+        "eval_batch": cfg.eval_batch,
+        "param_layout": [
+            [n, off, list(shape)] for n, (off, shape) in cfg.param_offsets().items()
+        ],
+        "block_layout": [
+            [n, off, list(shape)] for n, (off, shape) in cfg.block_offsets().items()
+        ],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="all")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    names = list(CONFIGS) if args.configs == "all" else args.configs.split(",")
+    for n in names:
+        if n not in CONFIGS:
+            sys.exit(f"unknown config {n!r}; have {list(CONFIGS)}")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {
+        "version": 1,
+        "seq": SEQ,
+        "vocab": VOCAB,
+        "chunk_tokens": CHUNK_TOKENS,
+        "blocksize": BLOCKSIZE,
+        "adaprune_steps": ADAPRUNE_STEPS,
+        "configs": {},
+        "artifacts": {},
+    }
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        manifest["configs"].update(old.get("configs", {}))
+        manifest["artifacts"].update(old.get("artifacts", {}))
+
+    for name in names:
+        manifest["configs"][name] = config_manifest_entry(CONFIGS[name])
+
+    arts = enumerate_artifacts(names)
+    total = len(arts)
+    for idx, (aname, (fn, ex_args)) in enumerate(sorted(arts.items())):
+        if args.only and args.only not in aname:
+            continue
+        out_shapes = jax.eval_shape(fn, *ex_args)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        fname = f"{aname}.hlo.txt"
+        manifest["artifacts"][aname] = {
+            "file": fname,
+            "inputs": [_shape_entry(a) for a in ex_args],
+            "outputs": [_shape_entry(o) for o in out_shapes],
+        }
+        path = os.path.join(args.out_dir, fname)
+        if os.path.exists(path) and not args.force:
+            continue
+        t0 = time.time()
+        text = lower_to_hlo_text(fn, ex_args)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        print(
+            f"[{idx + 1}/{total}] {aname}: {len(text) / 1e6:.2f} MB "
+            f"in {time.time() - t0:.1f}s",
+            flush=True,
+        )
+
+    with open(manifest_path + ".tmp", "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(manifest_path + ".tmp", manifest_path)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Model family configs + artifact enumeration.
+
+The flat-parameter layout defined here is mirrored bit-for-bit by
+``rust/src/model/layout.rs``; any change must be made in both places.
+All parameters are f32, row-major, concatenated in the order below:
+
+  tok_embed (V, d)
+  pos_embed (S, d)
+  ln1_g (L, d)   ln1_b (L, d)
+  wq (L, d, d)   wk (L, d, d)   wv (L, d, d)   wo (L, d, d)
+  ln2_g (L, d)   ln2_b (L, d)
+  w1 (L, F, d)   w2 (L, d, F)
+  lnf_g (d)      lnf_b (d)
+
+Linears are bias-free and stored (out, in); a layer computes ``x @ W.T``.
+The LM head is tied to ``tok_embed`` (the paper excludes embeddings and the
+head from pruning, as standard).
+
+A *block slice* (the input to the ``block_fwd`` artifact) is block ``l``'s
+parameters concatenated flat in the order:
+  ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, w2
+"""
+
+from dataclasses import dataclass, field
+
+
+VOCAB = 512
+SEQ = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d: int
+    layers: int
+    heads: int
+    train_batch: int
+    eval_batch: int = 8
+    vocab: int = VOCAB
+    seq: int = SEQ
+
+    @property
+    def ffn(self) -> int:
+        return 4 * self.d
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+    # ---- flat layout ----------------------------------------------------
+    def param_entries(self):
+        """(name, shape) in flat concatenation order."""
+        d, L, F = self.d, self.layers, self.ffn
+        return [
+            ("tok_embed", (self.vocab, d)),
+            ("pos_embed", (self.seq, d)),
+            ("ln1_g", (L, d)),
+            ("ln1_b", (L, d)),
+            ("wq", (L, d, d)),
+            ("wk", (L, d, d)),
+            ("wv", (L, d, d)),
+            ("wo", (L, d, d)),
+            ("ln2_g", (L, d)),
+            ("ln2_b", (L, d)),
+            ("w1", (L, F, d)),
+            ("w2", (L, d, F)),
+            ("lnf_g", (d,)),
+            ("lnf_b", (d,)),
+        ]
+
+    def param_offsets(self):
+        """name -> (offset, shape) into the flat vector."""
+        out, off = {}, 0
+        for name, shape in self.param_entries():
+            n = 1
+            for s in shape:
+                n *= s
+            out[name] = (off, shape)
+            off += n
+        return out
+
+    @property
+    def n_params(self) -> int:
+        off = 0
+        for _, shape in self.param_entries():
+            n = 1
+            for s in shape:
+                n *= s
+            off += n
+        return off
+
+    # ---- per-block slice -------------------------------------------------
+    def block_entries(self):
+        d, F = self.d, self.ffn
+        return [
+            ("ln1_g", (d,)),
+            ("ln1_b", (d,)),
+            ("wq", (d, d)),
+            ("wk", (d, d)),
+            ("wv", (d, d)),
+            ("wo", (d, d)),
+            ("ln2_g", (d,)),
+            ("ln2_b", (d,)),
+            ("w1", (F, d)),
+            ("w2", (d, F)),
+        ]
+
+    def block_offsets(self):
+        out, off = {}, 0
+        for name, shape in self.block_entries():
+            n = 1
+            for s in shape:
+                n *= s
+            out[name] = (off, shape)
+            off += n
+        return out
+
+    @property
+    def block_size(self) -> int:
+        off = 0
+        for _, shape in self.block_entries():
+            n = 1
+            for s in shape:
+                n *= s
+            off += n
+        return off
+
+    def prune_shapes(self):
+        """Distinct (d_row, d_col) of prunable linears: q/k/v/o, fc1, fc2."""
+        d, F = self.d, self.ffn
+        return [(d, d), (F, d), (d, F)]
+
+    def hessian_dims(self):
+        return [self.d, self.ffn]
+
+
+CONFIGS = {
+    c.name: c
+    for c in [
+        # name,        d,   L,  h, train_batch — stand-ins for OPT sizes
+        ModelConfig("nano", 64, 2, 2, 32),
+        ModelConfig("micro", 128, 4, 4, 16),
+        ModelConfig("small", 256, 6, 8, 8),
+        ModelConfig("medium", 512, 8, 8, 4),
+        ModelConfig("large", 768, 12, 12, 2),
+    ]
+}
+
+# Calibration is fed in chunks of EVAL_BATCH segments; a chunk contributes
+# EVAL_BATCH * SEQ activation rows to each Hessian.
+CHUNK_TOKENS = 8 * SEQ  # 1024
+
+# Lazy-update / mask-selection blocksize of the primary (Pallas) solver.
+BLOCKSIZE = 128
+# Mask-selection blocksizes for the Fig-10 ablation (jnp solver variants,
+# lowered only for the `small` config).
+ABLATION_BS = [1, 16, 64, 128, 512, 1024]

@@ -1,0 +1,21 @@
+"""Lowering utilities: jitted JAX function -> HLO text.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 (behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True`` — the Rust side always unwraps a
+tuple, even for single outputs.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

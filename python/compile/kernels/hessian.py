@@ -1,0 +1,37 @@
+"""Layer 1: Pallas kernel for layer-wise Hessian accumulation H = X^T X.
+
+X is one calibration chunk of activation rows (N, dim); the coordinator sums
+chunk results on the Rust side (zero rows contribute nothing, so short chunks
+are zero-padded there). The grid tiles the (dim, dim) output into MXU-shaped
+(T, T) blocks; each program contracts the full N dimension with one
+``jnp.dot`` so the HBM->VMEM schedule is one column-strip pair per program
+(2 * N*T*4 bytes = 1 MiB at N=1024, T=128 — comfortably VMEM resident).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hessian_kernel(xi_ref, xj_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        xi_ref[...].T, xj_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def hessian_chunk(x, *, interpret=True):
+    """(N, dim) f32 -> (dim, dim) f32 = X^T X."""
+    n, dim = x.shape
+    t = 128 if dim % 128 == 0 else dim
+    grid = (dim // t, dim // t)
+    return pl.pallas_call(
+        _hessian_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, t), lambda i, j: (0, i)),
+            pl.BlockSpec((n, t), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dim, dim), jnp.float32),
+        interpret=interpret,
+    )(x, x)

@@ -1,0 +1,199 @@
+"""Layer 1: Pallas kernels for the SparseGPT column sweep (Algorithm 1 core).
+
+The kernel processes one lazy-update window of ``B`` consecutive columns of
+the weight matrix. The grid tiles the rows (each program owns an
+``R_TILE x B`` VMEM-resident block of ``W``); the sequential dependence of
+Algorithm 1 lives in an in-kernel ``fori_loop`` over the window's columns:
+
+  for j in window:
+      err_j   = (w_j - keep_j * q(w_j)) / Hinv[j, j]          (Eq. 3 / Eq. 7)
+      W[:, j+1:B] -= err_j * Hinv[j, j+1:B]                    (OBS update)
+      W[:, j]  = keep_j * q(w_j)                               (freeze)
+
+``Hinv`` here is the window-diagonal slice of the upper-triangular Cholesky
+factor of (XX^T + λI)^{-1}, computed once per layer on the Rust side (f64)
+and shared by every row — the paper's Hessian-synchronization trick. The
+trailing update beyond the window (lazy batching, the GPTQ enhancement) is a
+single MXU-shaped matmul done at Layer 2 with the error block ``E`` this
+kernel emits.
+
+Two variants:
+  * unstructured — the keep-mask for the window is selected at Layer 2
+    (adaptive per-``Bs``-block global top-k, Sec. 3.2) and passed in;
+  * n:m semi-structured — selection happens *inside* the kernel per group of
+    ``m`` columns using the updated weights (Sec. 3.3), exactly ``n`` zeros
+    per group per row, via a comparison-count ranking (no sort needed for
+    m ∈ {4, 8}).
+
+Joint sparsification + quantization (Sec. 3.5) is supported in both via the
+per-row asymmetric grid (scale/zero) computed at Layer 2 from the original
+weights; ``qmeta = [qflag, qlevels]`` disables it at runtime when 0.
+
+Hardware adaptation (paper: A100/CUDA, PyTorch): rows->grid programs replace
+the GPU's row-parallel batched rank-1 updates; the window is one VMEM
+residency (R_TILE*B + B*B + R_TILE*B floats ~ 320 KiB at 128x128 tiles,
+far under ~16 MiB VMEM, leaving room for double buffering); the rank-1
+update is VPU work and the trailing block update maps to the MXU. Kernels
+are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §7 for the real-TPU roofline estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize(wj, scale, zero, qflag, qlevels):
+    """RTN on the per-row asymmetric grid; identity when qflag == 0."""
+    q = jnp.clip(jnp.round(wj / scale + zero), 0.0, qlevels)
+    deq = scale * (q - zero)
+    return jnp.where(qflag > 0.0, deq, wj)
+
+
+def _prune_window_kernel(w_ref, m_ref, hinv_ref, scale_ref, zero_ref, qmeta_ref,
+                         wout_ref, e_ref):
+    """Unstructured variant: keep-mask precomputed at Layer 2."""
+    w = w_ref[...]            # (R, B)
+    keep = m_ref[...]         # (R, B) 1.0 = keep
+    hinv = hinv_ref[...]      # (B, B) upper-triangular factor slice
+    scale = scale_ref[...]    # (R, 1)
+    zero = zero_ref[...]      # (R, 1)
+    qflag = qmeta_ref[0, 0]
+    qlevels = qmeta_ref[0, 1]
+    R, B = w.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (R, B), 1)
+
+    def body(j, carry):
+        w, e = carry
+        wj = jax.lax.dynamic_slice_in_dim(w, j, 1, axis=1)       # (R,1)
+        kj = jax.lax.dynamic_slice_in_dim(keep, j, 1, axis=1)    # (R,1)
+        frozen = kj * _quantize(wj, scale, zero, qflag, qlevels)
+        dj = jax.lax.dynamic_slice(hinv, (j, j), (1, 1))         # (1,1)
+        err = (wj - frozen) / dj                                 # (R,1)
+        hrow = jax.lax.dynamic_slice(hinv, (j, 0), (1, B))       # (1,B)
+        w = jnp.where(col > j, w - err * hrow, w)
+        w = jnp.where(col == j, frozen, w)
+        e = jnp.where(col == j, err, e)
+        return w, e
+
+    w, e = jax.lax.fori_loop(0, B, body, (w, jnp.zeros_like(w)))
+    wout_ref[...] = w
+    e_ref[...] = e
+
+
+def _group_ranks(s):
+    """Stable ranks within the last axis: rank_i = #{j : s_j < s_i or
+    (s_j == s_i and j < i)}. Exact n-of-m selection even with ties."""
+    m = s.shape[-1]
+    si = s[..., :, None]
+    sj = s[..., None, :]
+    idx_i = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    idx_j = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    less = (sj < si) | ((sj == si) & (idx_j < idx_i))
+    return jnp.sum(less.astype(jnp.int32), axis=-1)  # (..., m)
+
+
+def _prune_window_nm_kernel(n, m, w_ref, hinv_ref, scale_ref, zero_ref,
+                            qmeta_ref, wout_ref, e_ref, mout_ref):
+    """n:m variant: per-group mask selected in-kernel from *updated* weights
+    (paper: blocksize Bs = m), exactly n zeros per m consecutive columns."""
+    w = w_ref[...]            # (R, B)
+    hinv = hinv_ref[...]      # (B, B)
+    scale = scale_ref[...]
+    zero = zero_ref[...]
+    qflag = qmeta_ref[0, 0]
+    qlevels = qmeta_ref[0, 1]
+    R, B = w.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (R, B), 1)
+    diag = jnp.diagonal(hinv).reshape(1, B)
+
+    def group_body(g, carry):
+        w, e, keep_acc = carry
+        j0 = g * m
+        wg = jax.lax.dynamic_slice(w, (0, j0), (R, m))          # (R, m)
+        dg = jax.lax.dynamic_slice(diag, (0, j0), (1, m))       # (1, m)
+        s = jnp.square(wg) / jnp.square(dg)                     # OBS saliency
+        ranks = _group_ranks(s)                                 # (R, m)
+        keep_g = (ranks >= n).astype(w.dtype)                   # prune n smallest
+
+        def col_body(jj, carry2):
+            w, e = carry2
+            j = j0 + jj
+            wj = jax.lax.dynamic_slice_in_dim(w, j, 1, axis=1)
+            kj = jax.lax.dynamic_slice_in_dim(keep_g, jj, 1, axis=1)
+            frozen = kj * _quantize(wj, scale, zero, qflag, qlevels)
+            dj = jax.lax.dynamic_slice(hinv, (j, j), (1, 1))
+            err = (wj - frozen) / dj
+            hrow = jax.lax.dynamic_slice(hinv, (j, 0), (1, B))
+            w = jnp.where(col > j, w - err * hrow, w)
+            w = jnp.where(col == j, frozen, w)
+            e = jnp.where(col == j, err, e)
+            return w, e
+
+        w, e = jax.lax.fori_loop(0, m, col_body, (w, e))
+        in_group = (col >= j0) & (col < j0 + m)
+        gmask = jax.lax.dynamic_update_slice(jnp.zeros_like(w), keep_g, (0, j0))
+        keep_acc = jnp.where(in_group, gmask, keep_acc)
+        return w, e, keep_acc
+
+    z = jnp.zeros_like(w)
+    w, e, keep = jax.lax.fori_loop(0, B // m, group_body, (w, z, z))
+    wout_ref[...] = w
+    e_ref[...] = e
+    mout_ref[...] = keep
+
+
+def _row_tile(d_row: int) -> int:
+    return 128 if d_row % 128 == 0 else d_row
+
+
+def prune_window(w, keep, hinv_win, scale, zero, qmeta, *, interpret=True):
+    """Apply the unstructured column sweep to one window.
+
+    w: (d_row, B); keep: (d_row, B); hinv_win: (B, B); scale/zero: (d_row, 1);
+    qmeta: (1, 2) = [[qflag, qlevels]].  Returns (w_out, e) both (d_row, B).
+    """
+    d_row, B = w.shape
+    R = _row_tile(d_row)
+    grid = (d_row // R,)
+    row_spec = pl.BlockSpec((R, B), lambda i: (i, 0))
+    shared = pl.BlockSpec((B, B), lambda i: (0, 0))
+    vec_spec = pl.BlockSpec((R, 1), lambda i: (i, 0))
+    meta_spec = pl.BlockSpec((1, 2), lambda i: (0, 0))
+    return pl.pallas_call(
+        _prune_window_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, shared, vec_spec, vec_spec, meta_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_row, B), w.dtype),
+            jax.ShapeDtypeStruct((d_row, B), w.dtype),
+        ],
+        interpret=interpret,
+    )(w, keep, hinv_win, scale, zero, qmeta)
+
+
+def prune_window_nm(n, m, w, hinv_win, scale, zero, qmeta, *, interpret=True):
+    """n:m column sweep for one window. Returns (w_out, e, keep_mask)."""
+    d_row, B = w.shape
+    assert B % m == 0
+    R = _row_tile(d_row)
+    grid = (d_row // R,)
+    row_spec = pl.BlockSpec((R, B), lambda i: (i, 0))
+    shared = pl.BlockSpec((B, B), lambda i: (0, 0))
+    vec_spec = pl.BlockSpec((R, 1), lambda i: (i, 0))
+    meta_spec = pl.BlockSpec((1, 2), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_prune_window_nm_kernel, n, m),
+        grid=grid,
+        in_specs=[row_spec, shared, vec_spec, vec_spec, meta_spec],
+        out_specs=[row_spec, row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_row, B), w.dtype),
+            jax.ShapeDtypeStruct((d_row, B), w.dtype),
+            jax.ShapeDtypeStruct((d_row, B), w.dtype),
+        ],
+        interpret=interpret,
+    )(w, hinv_win, scale, zero, qmeta)

@@ -1,0 +1,127 @@
+"""Pure-NumPy oracle for the SparseGPT algorithm (Algorithm 1) and the
+Hessian accumulation. Written as a direct, naive transcription of the paper's
+pseudocode — deliberately sharing no code with the Pallas/JAX implementations
+it validates.
+
+Conventions (matching the production path):
+  * ``hinv_chol`` is the upper-triangular Cholesky factor of
+    (X X^T + λ I)^{-1} transposed, i.e. ``Cholesky(H^{-1})^T``; Algorithm 1's
+    ``[H^{-1}]_jj`` / row reads refer to this factor.
+  * keep-mask: 1.0 = kept, 0.0 = pruned.
+  * Unstructured selection: per ``Bs``-column block, prune the
+    ``round(p * numel)`` entries of smallest saliency w^2 / [H^{-1}]_cc^2
+    over the whole (d_row x Bs) block (stable-rank tie-break by index).
+  * n:m selection: per row, per group of m consecutive columns, prune the n
+    smallest-saliency entries, selected when the sweep reaches the group
+    (i.e. from already-updated weights).
+  * Joint quantization (Eq. 7): per-row asymmetric RTN grid computed from the
+    ORIGINAL weights; frozen kept weights are quantized, errors propagated.
+"""
+
+import numpy as np
+
+
+def ref_hessian(x):
+    x = np.asarray(x, dtype=np.float64)
+    return (x.T @ x).astype(np.float32)
+
+
+def quant_grid(w, levels):
+    """Per-row asymmetric min/max grid over the original weights.
+    Returns (scale, zero) with shapes (d_row, 1)."""
+    lo = np.minimum(w.min(axis=1, keepdims=True), 0.0)
+    hi = np.maximum(w.max(axis=1, keepdims=True), 0.0)
+    scale = (hi - lo) / max(float(levels), 1.0)
+    scale = np.where(scale <= 0.0, 1.0, scale)
+    zero = np.round(-lo / scale)
+    return scale, zero
+
+
+def _quantize(w, scale, zero, levels):
+    q = np.clip(np.round(w / scale + zero), 0.0, float(levels))
+    return scale * (q - zero)
+
+
+def _stable_ranks(flat):
+    order = np.argsort(flat, kind="stable")
+    ranks = np.empty_like(order)
+    ranks[order] = np.arange(flat.size)
+    return ranks
+
+
+def ref_sparsegpt(
+    w,
+    hinv_chol,
+    sparsity=None,
+    nm=None,
+    blocksize=128,
+    mask_blocksize=128,
+    quant_levels=0,
+    dtype=np.float64,
+):
+    """Run Algorithm 1 on one layer. Returns (w_hat, keep_mask) as float32.
+
+    w: (d_row, d_col); hinv_chol: (d_col, d_col) upper factor;
+    exactly one of ``sparsity`` (float in [0,1]) or ``nm`` ((n, m)) set —
+    ``sparsity=0.0`` with ``quant_levels>0`` is GPTQ-style pure quantization.
+    """
+    w = np.array(w, dtype=dtype)
+    hc = np.asarray(hinv_chol, dtype=dtype)
+    d_row, d_col = w.shape
+    B = min(blocksize, d_col)
+    Bs = min(mask_blocksize, d_col)
+    keep = np.ones((d_row, d_col), dtype=dtype)
+    diag = np.diag(hc).copy()
+
+    if quant_levels > 0:
+        scale, zero = quant_grid(w, quant_levels)
+
+    def frozen_value(col_vals, keep_col):
+        if quant_levels > 0:
+            return keep_col * _quantize(col_vals, scale[:, 0], zero[:, 0], quant_levels)
+        return keep_col * col_vals
+
+    for i in range(0, d_col, B):
+        ib = min(i + B, d_col)
+        err_block = np.zeros((d_row, ib - i), dtype=dtype)
+        for j in range(i, ib):
+            if nm is None and j % Bs == 0:
+                je = min(j + Bs, d_col)
+                s = np.square(w[:, j:je]) / np.square(diag[j:je])[None, :]
+                k = int(round(sparsity * s.size))
+                ranks = _stable_ranks(s.reshape(-1)).reshape(s.shape)
+                keep[:, j:je] = (ranks >= k).astype(dtype)
+            if nm is not None and j % nm[1] == 0:
+                n_, m_ = nm
+                je = j + m_
+                s = np.square(w[:, j:je]) / np.square(diag[j:je])[None, :]
+                for r in range(d_row):
+                    ranks = _stable_ranks(s[r])
+                    keep[r, j:je] = (ranks >= n_).astype(dtype)
+            fz = frozen_value(w[:, j], keep[:, j])
+            err = (w[:, j] - fz) / diag[j]
+            w[:, j + 1 : ib] -= np.outer(err, hc[j, j + 1 : ib])
+            w[:, j] = fz
+            err_block[:, j - i] = err
+        w[:, ib:] -= err_block @ hc[i:ib, ib:]
+
+    return w.astype(np.float32), keep.astype(np.float32)
+
+
+def ref_adaprune(w, mask, h, lr, steps):
+    """Gradient-descent reconstruction of the masked layer on the AdaPrune
+    objective tr((W_hat - W) H (W_hat - W)^T); oracle for the HLO artifact."""
+    w = np.asarray(w, dtype=np.float64)
+    h = np.asarray(h, dtype=np.float64)
+    mask = np.asarray(mask, dtype=np.float64)
+    wh = w * mask
+    for _ in range(steps):
+        g = (wh - w) @ h
+        wh = wh - lr * g * mask
+    return wh.astype(np.float32)
+
+
+def layer_sq_error(w_orig, w_hat, h):
+    """||(W - W_hat) X||_F^2 = tr(dW H dW^T) with the *undamped* H."""
+    dw = np.asarray(w_orig, np.float64) - np.asarray(w_hat, np.float64)
+    return float(np.sum((dw @ np.asarray(h, np.float64)) * dw))

@@ -1,0 +1,123 @@
+"""Blocked dense linear algebra in pure jnp (no LAPACK custom-calls).
+
+The pinned xla_extension 0.5.1 behind the Rust runtime cannot execute the
+custom-calls that ``jnp.linalg.cholesky``/``inv`` lower to on CPU, so the
+Hessian preparation chain of SparseGPT —
+
+    H_damped = H + damp * mean(diag H) * I          (App. A dampening)
+    L        = chol(H_damped)
+    H^{-1}   = L^{-T} L^{-1}
+    U        = chol(H^{-1})^T   (upper factor consumed by Algorithm 1)
+
+— is implemented here with explicit right-looking blocked algorithms whose
+panel work is masked ``fori_loop`` arithmetic and whose trailing updates are
+plain matmuls (the XLA CPU backend executes those near-roofline). Lowered
+once per layer width as the ``hessian_prep_<dim>`` artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+PANEL = 128
+
+
+def _chol_unblocked(a):
+    """Cholesky (lower) of a small SPD block via masked right-looking steps.
+    a: (b, b). Runs b fori steps of O(b^2) masked arithmetic."""
+    b = a.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+
+    def body(j, a):
+        piv = jnp.sqrt(jax.lax.dynamic_slice(a, (j, j), (1, 1)))  # (1,1)
+        colj = jax.lax.dynamic_slice(a, (0, j), (b, 1)) / piv     # (b,1)
+        colj = jnp.where(row[:, :1] > j, colj, jnp.where(row[:, :1] == j, piv, 0.0))
+        # trailing update: a[j+1:, j+1:] -= colj[j+1:] colj[j+1:]^T
+        outer = colj * colj.reshape(1, b)[:, :]  # broadcast (b,1)*(1,b) -> (b,b)
+        outer = colj @ colj.T
+        upd = jnp.where((row > j) & (col > j), outer, 0.0)
+        a = a - upd
+        # write the finalized column j (and zero above-diagonal of column j)
+        a = jnp.where(col == j, colj, a)
+        return a
+
+    a = jax.lax.fori_loop(0, b, body, a)
+    return jnp.tril(a)
+
+
+def _tril_inverse_unblocked(l):
+    """Inverse of a small lower-triangular block via forward substitution:
+    columnwise solve L x = e_j, all columns in parallel (masked updates)."""
+    b = l.shape[0]
+    eye = jnp.eye(b, dtype=l.dtype)
+    row = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+
+    def body(i, x):
+        # x[i, :] = (eye[i, :] - L[i, :i] @ x[:i, :]) / L[i, i]
+        li = jax.lax.dynamic_slice(l, (i, 0), (1, b))          # (1,b)
+        mask = (row < i).astype(l.dtype)                        # zero rows >= i
+        acc = (li * mask[:, 0:1].T) @ x                         # (1,b) of partial sums
+        ei = jax.lax.dynamic_slice(eye, (i, 0), (1, b))
+        lii = jax.lax.dynamic_slice(l, (i, i), (1, 1))
+        xi = (ei - acc) / lii
+        return jax.lax.dynamic_update_slice(x, xi, (i, 0))
+
+    return jax.lax.fori_loop(0, b, body, jnp.zeros_like(l))
+
+
+def blocked_cholesky(a, panel=PANEL):
+    """Lower Cholesky factor of SPD ``a`` (n divisible by panel or n<=panel)."""
+    n = a.shape[0]
+    if n <= panel:
+        return _chol_unblocked(a)
+    assert n % panel == 0
+    nb = n // panel
+    blocks = [[a[i * panel:(i + 1) * panel, j * panel:(j + 1) * panel]
+               for j in range(nb)] for i in range(nb)]
+    lower = [[jnp.zeros((panel, panel), a.dtype) for _ in range(nb)] for _ in range(nb)]
+    for k in range(nb):
+        lkk = _chol_unblocked(blocks[k][k])
+        lower[k][k] = lkk
+        lkk_inv_t = _tril_inverse_unblocked(lkk).T
+        for i in range(k + 1, nb):
+            lower[i][k] = blocks[i][k] @ lkk_inv_t
+        for i in range(k + 1, nb):
+            for j in range(k + 1, i + 1):
+                blocks[i][j] = blocks[i][j] - lower[i][k] @ lower[j][k].T
+    return jnp.block(lower)
+
+
+def blocked_tril_inverse(l, panel=PANEL):
+    """Inverse of lower-triangular ``l`` by blocked forward substitution."""
+    n = l.shape[0]
+    if n <= panel:
+        return _tril_inverse_unblocked(l)
+    assert n % panel == 0
+    nb = n // panel
+    lb = [[l[i * panel:(i + 1) * panel, j * panel:(j + 1) * panel]
+           for j in range(nb)] for i in range(nb)]
+    x = [[jnp.zeros((panel, panel), l.dtype) for _ in range(nb)] for _ in range(nb)]
+    for i in range(nb):
+        x[i][i] = _tril_inverse_unblocked(lb[i][i])
+    for i in range(1, nb):
+        for j in range(i - 1, -1, -1):
+            acc = jnp.zeros((panel, panel), l.dtype)
+            for k in range(j, i):
+                acc = acc + lb[i][k] @ x[k][j]
+            x[i][j] = -(x[i][i] @ acc)
+    return jnp.block(x)
+
+
+def hessian_prep_fn(h, damp):
+    """Artifact: (H, damp) -> upper Cholesky factor U of (H + damp*mean(diag)*I)^{-1}
+    with H^{-1} = U^T U — the factor Algorithm 1 consumes."""
+    n = h.shape[0]
+    mean_diag = jnp.mean(jnp.diagonal(h))
+    # guard fully-zero Hessians (dead layers): fall back to identity scale
+    mean_diag = jnp.where(mean_diag <= 0.0, 1.0, mean_diag)
+    hd = h + damp * mean_diag * jnp.eye(n, dtype=h.dtype)
+    l = blocked_cholesky(hd)
+    linv = blocked_tril_inverse(l)
+    hinv = linv.T @ linv
+    c = blocked_cholesky(hinv)
+    return c.T

@@ -1,0 +1,219 @@
+"""Layer 2: OPT-style decoder-only transformer over a flat parameter vector.
+
+Everything here is pure JAX (no torch, no python on the request path): these
+functions are traced once by ``aot.py`` and lowered to HLO text artifacts
+executed from the Rust runtime.
+
+Design notes
+------------
+* All parameters live in ONE flat f32 vector (layout in ``configs.py``),
+  so the Rust<->HLO boundary is a single literal per state tensor.
+* Blocks are executed with ``lax.scan`` over stacked (L, ...) block params:
+  keeps the HLO small and the trace/lowering time flat in depth.
+* GELU uses the explicit tanh approximation — ``jax.nn.gelu``'s erf path can
+  lower to custom calls that the pinned xla_extension 0.5.1 cannot execute.
+* No linear algebra (cholesky/inv) is done here; the solver artifacts take a
+  precomputed Cholesky factor from the Rust side for the same reason.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# flat-vector (un)packing
+# --------------------------------------------------------------------------
+
+def unflatten(cfg: ModelConfig, flat):
+    """Flat f32 vector -> dict of named parameter arrays."""
+    out = {}
+    for name, (off, shape) in cfg.param_offsets().items():
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+    return out
+
+
+def unflatten_block(cfg: ModelConfig, flat_block):
+    """Flat per-block slice -> dict of block parameter arrays."""
+    out = {}
+    for name, (off, shape) in cfg.block_offsets().items():
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = jax.lax.dynamic_slice_in_dim(flat_block, off, n).reshape(shape)
+    return out
+
+
+def stacked_block_params(params):
+    """Dict of (L, ...) arrays that ``lax.scan`` iterates over."""
+    keys = ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b", "w1", "w2"]
+    return {k: params[k] for k in keys}
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def gelu_tanh(x):
+    # 0.5x(1 + tanh(sqrt(2/pi)(x + 0.044715 x^3))) — explicit, custom-call free
+    c = 0.7978845608028654
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def causal_attention(cfg: ModelConfig, q, k, v):
+    """q,k,v: (B, T, d) -> (B, T, d) concatenated head outputs (input to wo)."""
+    B, T, d = q.shape
+    h, hd = cfg.heads, cfg.head_dim
+
+    def split(x):
+        return x.reshape(B, T, h, hd).transpose(0, 2, 1, 3)  # (B,h,T,hd)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((T, T), dtype=jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(B, T, d)
+
+
+def block_forward(cfg: ModelConfig, bp, x):
+    """One transformer block. Returns (x_out, captures).
+
+    Captures are the inputs of each prunable linear, flattened to
+    (B*T, d_in) — exactly what the layer-wise Hessians H = X^T X need:
+      x_qkv : input of wq/wk/wv (post-ln1; they share one Hessian)
+      x_wo  : input of wo (concatenated head outputs)
+      x_fc1 : input of w1 (post-ln2)
+      x_fc2 : input of w2 (post-GELU)
+    """
+    B, T, d = x.shape
+    a = layer_norm(x, bp["ln1_g"], bp["ln1_b"])
+    q = a @ bp["wq"].T
+    k = a @ bp["wk"].T
+    v = a @ bp["wv"].T
+    attn = causal_attention(cfg, q, k, v)
+    x = x + attn @ bp["wo"].T
+    u = layer_norm(x, bp["ln2_g"], bp["ln2_b"])
+    g = gelu_tanh(u @ bp["w1"].T)
+    x = x + g @ bp["w2"].T
+    captures = {
+        "x_qkv": a.reshape(B * T, d),
+        "x_wo": attn.reshape(B * T, d),
+        "x_fc1": u.reshape(B * T, d),
+        "x_fc2": g.reshape(B * T, cfg.ffn),
+    }
+    return x, captures
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+def embed(cfg: ModelConfig, params, tokens):
+    """tokens (B, T) int32 -> hidden (B, T, d)."""
+    T = tokens.shape[1]
+    return params["tok_embed"][tokens] + params["pos_embed"][:T][None]
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens):
+    x = embed(cfg, params, tokens)
+    bps = stacked_block_params(params)
+
+    def step(h, bp):
+        h, _ = block_forward(cfg, bp, h)
+        return h, None
+
+    x, _ = jax.lax.scan(step, x, bps)
+    return layer_norm(x, params["lnf_g"], params["lnf_b"])
+
+
+def logits_fn(cfg: ModelConfig, params, tokens):
+    h = forward_hidden(cfg, params, tokens)
+    return h @ params["tok_embed"].T  # tied head
+
+
+def nll_fn(cfg: ModelConfig, flat, tokens):
+    """tokens (B, T+1) int32 -> per-position negative log-likelihood (B, T).
+
+    Serves both perplexity evaluation (summed in Rust, HuggingFace full-stride
+    procedure) and the zero-shot harness (candidate log-likelihood ranking
+    with Rust-side masks).
+    """
+    params = unflatten(cfg, flat)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = logits_fn(cfg, params, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+
+
+def embed_fn(cfg: ModelConfig, flat, tokens):
+    """Artifact: (flat_params, tokens (B,T)) -> hidden (B,T,d)."""
+    return embed(cfg, unflatten(cfg, flat), tokens)
+
+
+def block_fwd_fn(cfg: ModelConfig, flat_block, hidden):
+    """Artifact: (block_slice, hidden) -> (hidden_out, x_qkv, x_wo, x_fc1, x_fc2).
+
+    Driven per-block from the Rust coordinator during sequential pruning:
+    one pass with dense block weights collects the Hessian inputs, a second
+    pass with the pruned slice produces the next block's inputs.
+    """
+    bp = unflatten_block(cfg, flat_block)
+    out, cap = block_forward(cfg, bp, hidden)
+    return out, cap["x_qkv"], cap["x_wo"], cap["x_fc1"], cap["x_fc2"]
+
+
+def next_logits_fn(cfg: ModelConfig, flat, tokens):
+    """Artifact: (flat_params, tokens (1, T)) -> next-token logits (vocab,).
+
+    Drives the Rust-side sampler (`eval::generate`) — a demo/debug feature
+    showing compressed models still generate coherent text."""
+    params = unflatten(cfg, flat)
+    logits = logits_fn(cfg, params, tokens)
+    return logits[0, -1, :]
+
+
+def block_prop_fn(cfg: ModelConfig, flat_block, hidden):
+    """Lean propagation artifact: (block_slice, hidden) -> hidden_out only.
+    Used after a block is pruned — the captures of `block_fwd_fn` would be
+    dead outputs whose device->host copies dominate marshalling cost."""
+    bp = unflatten_block(cfg, flat_block)
+    out, _ = block_forward(cfg, bp, hidden)
+    return out
+
+
+def block_hess_fn(cfg: ModelConfig, flat_block, hidden, valid_rows):
+    """Fused capture + Hessian artifact (the L2 perf-pass optimization):
+    (block_slice, hidden (B,T,d), valid_rows scalar) ->
+    (hidden_out, H_qkv (d,d), H_wo (d,d), H_fc1 (d,d), H_fc2 (F,F)).
+
+    Computes this chunk's contribution X^T X of every capture inside one
+    HLO module (calling the Pallas hessian kernel), so the coordinator does
+    one dispatch per (chunk, block) instead of five, and the big activation
+    buffers never cross the runtime boundary. Rows >= valid_rows (zero
+    padding of short calibration chunks) are masked out before the products.
+    """
+    from .kernels.hessian import hessian_chunk
+
+    bp = unflatten_block(cfg, flat_block)
+    out, cap = block_forward(cfg, bp, hidden)
+    n_rows = hidden.shape[0] * hidden.shape[1]
+    row_ok = (
+        jax.lax.broadcasted_iota(jnp.int32, (n_rows, 1), 0)
+        < valid_rows.astype(jnp.int32)
+    ).astype(hidden.dtype)
+    hs = [
+        hessian_chunk(cap[k] * row_ok) for k in ["x_qkv", "x_wo", "x_fc1", "x_fc2"]
+    ]
+    return (out, *hs)

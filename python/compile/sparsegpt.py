@@ -1,0 +1,129 @@
+"""Layer 2: the full SparseGPT layer solver (Algorithm 1), assembling the
+Pallas window kernel, the adaptive mask selection (Sec. 3.2), the lazy
+trailing updates and the joint-quantization grid (Sec. 3.5) into one graph
+per (d_row, d_col, pattern), AOT-lowered to an HLO artifact.
+
+Inputs at runtime (all from the Rust coordinator):
+  w          (d_row, d_col) the layer weights
+  hinv_chol  (d_col, d_col) upper Cholesky factor of (XX^T + λI)^{-1},
+             computed in f64 on the Rust side (keeps LAPACK custom-calls out
+             of the HLO; the pinned xla_extension cannot execute them)
+  p          () target sparsity in [0, 1) — runtime scalar, so one artifact
+             serves every sweep point (0.0 = pure quantization = GPTQ)
+  qlevels    () quantization levels (2^bits - 1), 0 disables quantization
+
+Outputs: (w_hat, keep_mask) both (d_row, d_col) f32.
+
+With ``sparsity = 0`` and ``qlevels > 0`` this graph *is* GPTQ — the paper's
+observation that both algorithms share the column-greedy framework — and is
+used as the quantization baseline of Figure 6.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.prune_block import prune_window, prune_window_nm
+from .configs import BLOCKSIZE
+
+
+def _quant_params(w, qlevels):
+    """Per-row asymmetric RTN grid from the ORIGINAL weights. The grid always
+    contains 0 so pruned weights stay exactly representable."""
+    lo = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
+    hi = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    scale = (hi - lo) / jnp.maximum(qlevels, 1.0)
+    scale = jnp.where(scale <= 0.0, 1.0, scale)
+    zero = jnp.round(-lo / scale)
+    qflag = (qlevels > 0.0).astype(w.dtype)
+    qmeta = jnp.stack([qflag, qlevels]).reshape(1, 2)
+    return scale, zero, qmeta
+
+
+def _stable_ranks_flat(flat):
+    order = jnp.argsort(flat, stable=True)
+    return jnp.argsort(order, stable=True)
+
+
+def _select_window_mask(w_win, diag_win, p):
+    """Adaptive selection over one (d_row x Bs) block: prune the
+    round(p * numel) entries of smallest saliency w^2 / diag^2 globally in
+    the block (non-uniform per column — the outlier-feature motivation)."""
+    s = jnp.square(w_win) / jnp.square(diag_win)[None, :]
+    flat = s.reshape(-1)
+    ranks = _stable_ranks_flat(flat)
+    k = jnp.round(p * flat.size).astype(jnp.int32)
+    return (ranks >= k).astype(w_win.dtype).reshape(w_win.shape)
+
+
+def sparsegpt_layer_fn(w, hinv_chol, p, qlevels, *, nm=None, interpret=True):
+    """Full Algorithm 1 over all columns; windows of BLOCKSIZE are processed
+    by the Pallas kernel, trailing lazy updates are MXU matmuls here."""
+    d_row, d_col = w.shape
+    B = min(BLOCKSIZE, d_col)
+    assert d_col % B == 0
+    diag = jnp.diagonal(hinv_chol)
+    scale, zero, qmeta = _quant_params(w, qlevels)
+    mask = jnp.ones_like(w)
+
+    for i in range(0, d_col, B):
+        ib = i + B
+        w_win = w[:, i:ib]
+        hinv_win = hinv_chol[i:ib, i:ib]
+        if nm is None:
+            keep = _select_window_mask(w_win, diag[i:ib], p)
+            w_new, e = prune_window(
+                w_win, keep, hinv_win, scale, zero, qmeta, interpret=interpret
+            )
+        else:
+            n_, m_ = nm
+            w_new, e, keep = prune_window_nm(
+                n_, m_, w_win, hinv_win, scale, zero, qmeta, interpret=interpret
+            )
+        w = w.at[:, i:ib].set(w_new)
+        mask = mask.at[:, i:ib].set(keep)
+        if ib < d_col:
+            w = w.at[:, ib:].add(-(e @ hinv_chol[i:ib, ib:]))
+
+    return w, mask
+
+
+def sparsegpt_layer_jnp_fn(mask_blocksize, w, hinv_chol, p, qlevels):
+    """Pure-jnp variant with arbitrary mask-selection blocksize ``Bs``
+    (Fig. 10 ablation). fori-loop over columns, full-width masked updates
+    (algebraically identical to lazy batching); selection every Bs columns.
+    Requires Bs to divide d_col."""
+    d_row, d_col = w.shape
+    Bs = mask_blocksize
+    assert d_col % Bs == 0
+    diag = jnp.diagonal(hinv_chol)
+    scale, zero, qmeta = _quant_params(w, qlevels)
+    qflag, qlv = qmeta[0, 0], qmeta[0, 1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, d_col), 1)
+    diag_row = diag.reshape(1, d_col)
+
+    def body(j, carry):
+        w, mask = carry
+
+        def select(mask):
+            w_blk = jax.lax.dynamic_slice(w, (0, j), (d_row, Bs))
+            d_blk = jax.lax.dynamic_slice(diag_row, (0, j), (1, Bs))
+            s = jnp.square(w_blk) / jnp.square(d_blk)
+            ranks = _stable_ranks_flat(s.reshape(-1))
+            k = jnp.round(p * (d_row * Bs)).astype(jnp.int32)
+            keep = (ranks >= k).astype(w.dtype).reshape(d_row, Bs)
+            return jax.lax.dynamic_update_slice(mask, keep, (0, j))
+
+        mask = jax.lax.cond(j % Bs == 0, select, lambda m: m, mask)
+        wj = jax.lax.dynamic_slice(w, (0, j), (d_row, 1))
+        kj = jax.lax.dynamic_slice(mask, (0, j), (d_row, 1))
+        q = jnp.clip(jnp.round(wj / scale + zero), 0.0, qlv)
+        frozen = kj * jnp.where(qflag > 0.0, scale * (q - zero), wj)
+        dj = jax.lax.dynamic_slice(diag_row, (0, j), (1, 1))
+        err = (wj - frozen) / dj
+        hrow = jax.lax.dynamic_slice(hinv_chol, (j, 0), (1, d_col))
+        w = jnp.where(col > j, w - err * hrow, w)
+        w = jnp.where(col == j, frozen, w)
+        return w, mask
+
+    w, mask = jax.lax.fori_loop(0, d_col, body, (w, jnp.ones_like(w)))
+    return w, mask

@@ -1,0 +1,40 @@
+"""Layer 2: training step (fwd + bwd + Adam) over the flat parameter vector.
+
+Lowered once per config to ``train_step_<cfg>.hlo.txt``; the Rust launcher
+owns the training loop, LR schedule, data order and checkpointing. The step
+counter and learning rate enter as runtime scalars so a single artifact
+serves any schedule.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import nll_fn
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0
+
+
+def loss_fn(cfg: ModelConfig, flat, tokens):
+    return jnp.mean(nll_fn(cfg, flat, tokens))
+
+
+def train_step_fn(cfg: ModelConfig, flat, m, v, step, lr, tokens):
+    """(params, adam_m, adam_v, step, lr, tokens (B,T+1)) ->
+    (params', m', v', loss).
+
+    ``step`` is the 1-based step number as f32 (bias correction);
+    global-norm gradient clipping at GRAD_CLIP.
+    """
+    loss, g = jax.value_and_grad(loss_fn, argnums=1)(cfg, flat, tokens)
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(g)) + 1e-12)
+    g = g * jnp.minimum(1.0, GRAD_CLIP / gnorm)
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * jnp.square(g)
+    mhat = m / (1.0 - ADAM_B1**step)
+    vhat = v / (1.0 - ADAM_B2**step)
+    flat = flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return flat, m, v, loss

@@ -1,0 +1,49 @@
+"""The fused capture+Hessian artifact and the lean propagation artifact must
+agree exactly with the reference block_fwd + oracle Hessian path."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.configs import ModelConfig
+from compile import model
+from compile.kernels.ref import ref_hessian
+
+CFG = ModelConfig("t", d=32, layers=2, heads=2, train_batch=2, eval_batch=2, seq=16)
+
+
+def _setup(seed=0):
+    rng = np.random.default_rng(seed)
+    blk = jnp.array((rng.normal(size=(CFG.block_size,)) * 0.05).astype(np.float32))
+    hid = jnp.array(rng.normal(size=(CFG.eval_batch, CFG.seq, CFG.d)).astype(np.float32))
+    return blk, hid
+
+
+def test_block_hess_matches_unfused():
+    blk, hid = _setup()
+    out_ref = model.block_fwd_fn(CFG, blk, hid)
+    n_rows = CFG.eval_batch * CFG.seq
+    fused = model.block_hess_fn(CFG, blk, hid, jnp.float32(n_rows))
+    np.testing.assert_allclose(np.array(fused[0]), np.array(out_ref[0]), atol=1e-5)
+    for i, cap in enumerate(out_ref[1:], start=1):
+        h_ref = ref_hessian(np.array(cap))
+        np.testing.assert_allclose(np.array(fused[i]), h_ref, atol=2e-2, rtol=1e-4)
+
+
+def test_block_hess_masks_padded_rows():
+    blk, hid = _setup(1)
+    n_rows = CFG.eval_batch * CFG.seq
+    valid = n_rows - CFG.seq  # one padded segment
+    fused = model.block_hess_fn(CFG, blk, hid, jnp.float32(valid))
+    # reference: zero the padded capture rows before X^T X
+    outs = model.block_fwd_fn(CFG, blk, hid)
+    for i, cap in enumerate(outs[1:], start=1):
+        cap = np.array(cap)
+        cap[valid:] = 0.0
+        np.testing.assert_allclose(np.array(fused[i]), ref_hessian(cap), atol=2e-2, rtol=1e-4)
+
+
+def test_block_prop_matches_block_fwd_hidden():
+    blk, hid = _setup(2)
+    h1 = model.block_prop_fn(CFG, blk, hid)
+    h2 = model.block_fwd_fn(CFG, blk, hid)[0]
+    np.testing.assert_allclose(np.array(h1), np.array(h2), atol=1e-6)

@@ -1,0 +1,56 @@
+"""Blocked jnp linalg (the hessian_prep artifact body) vs NumPy/f64."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.linalg_jnp import (
+    blocked_cholesky,
+    blocked_tril_inverse,
+    hessian_prep_fn,
+)
+
+
+def spd(rng, n, mult=2):
+    x = rng.normal(size=(mult * n, n)).astype(np.float32)
+    return (x.T @ x).astype(np.float32)
+
+
+@given(n=st.sampled_from([16, 64, 128, 256]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_blocked_cholesky(n, seed):
+    rng = np.random.default_rng(seed)
+    h = spd(rng, n) + np.eye(n, dtype=np.float32)
+    l = np.array(blocked_cholesky(jnp.array(h)))
+    ref = np.linalg.cholesky(h.astype(np.float64))
+    assert np.abs(l - ref).max() / np.abs(ref).max() < 1e-4
+    assert np.allclose(np.triu(l, 1), 0.0)
+
+
+@given(n=st.sampled_from([16, 128, 256]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_blocked_tril_inverse(n, seed):
+    rng = np.random.default_rng(seed)
+    h = spd(rng, n) + np.eye(n, dtype=np.float32)
+    l = np.linalg.cholesky(h.astype(np.float64)).astype(np.float32)
+    li = np.array(blocked_tril_inverse(jnp.array(l)))
+    assert np.abs(li @ l - np.eye(n)).max() < 1e-3
+    assert np.allclose(np.triu(li, 1), 0.0)
+
+
+def test_hessian_prep_matches_f64_chain():
+    rng = np.random.default_rng(0)
+    for n in [64, 256, 512]:
+        h = spd(rng, n)
+        u = np.array(hessian_prep_fn(jnp.array(h), jnp.float32(0.01)))
+        hd = h.astype(np.float64) + 0.01 * np.mean(np.diag(h)) * np.eye(n)
+        ref = np.linalg.cholesky(np.linalg.inv(hd)).T
+        assert np.abs(u - ref).max() / np.abs(ref).max() < 1e-4
+        # factor property: H^{-1} = U^T U
+        assert np.allclose(u.T @ u, np.linalg.inv(hd), rtol=1e-3, atol=1e-5)
+
+
+def test_hessian_prep_zero_hessian_guard():
+    """A dead layer (all-zero activations) must still produce a finite factor."""
+    u = np.array(hessian_prep_fn(jnp.zeros((64, 64), jnp.float32), jnp.float32(0.01)))
+    assert np.isfinite(u).all()

@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas window kernels vs the NumPy oracle.
+
+Hypothesis sweeps shapes, sparsities, patterns and quantization grids; every
+case asserts elementwise agreement of both the reconstructed weights and the
+selected mask (the oracle and the kernels share tie-break semantics by
+construction, so masks must match exactly).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.prune_block import prune_window, prune_window_nm
+from compile.kernels.ref import ref_sparsegpt, quant_grid
+from compile.sparsegpt import _select_window_mask
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def make_problem(rng, d_row, d_col, damp=0.01):
+    w = rng.normal(size=(d_row, d_col)).astype(np.float32)
+    x = rng.normal(size=(2 * d_col, d_col)).astype(np.float32)
+    h = x.T @ x
+    h += damp * np.trace(h) / d_col * np.eye(d_col)
+    hinv = np.linalg.inv(h)
+    hc = np.linalg.cholesky(hinv).T.astype(np.float32)  # upper factor
+    return w, hc
+
+
+def run_window(w, hc, p, qlevels):
+    """Single-window (d_col == B) path through the production kernel."""
+    d_row, d_col = w.shape
+    diag = np.diag(hc)
+    keep = _select_window_mask(jnp.array(w), jnp.array(diag), jnp.float32(p))
+    if qlevels > 0:
+        scale, zero = quant_grid(w, qlevels)
+    else:
+        scale, zero = np.ones((d_row, 1)), np.zeros((d_row, 1))
+    qmeta = np.array([[1.0 if qlevels > 0 else 0.0, float(qlevels)]], np.float32)
+    w_out, e = prune_window(
+        jnp.array(w), keep, jnp.array(hc),
+        jnp.array(scale, np.float32), jnp.array(zero, np.float32), jnp.array(qmeta),
+    )
+    return np.array(w_out), np.array(keep), np.array(e)
+
+
+@given(
+    d_row=st.sampled_from([16, 64, 128]),
+    d_col=st.sampled_from([32, 64, 128]),
+    p=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_unstructured_window_matches_oracle(d_row, d_col, p, seed):
+    rng = np.random.default_rng(seed)
+    w, hc = make_problem(rng, d_row, d_col)
+    w_out, keep, _ = run_window(w, hc, p, 0)
+    w_ref, keep_ref = ref_sparsegpt(
+        w, hc, sparsity=p, blocksize=d_col, mask_blocksize=d_col
+    )
+    np.testing.assert_array_equal(keep, keep_ref)
+    np.testing.assert_allclose(w_out, w_ref, atol=5e-5, rtol=1e-4)
+
+
+@given(
+    d_row=st.sampled_from([16, 64]),
+    nm=st.sampled_from([(2, 4), (4, 8), (1, 4), (3, 4)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_nm_window_matches_oracle(d_row, nm, seed):
+    rng = np.random.default_rng(seed)
+    d_col = 64
+    w, hc = make_problem(rng, d_row, d_col)
+    qmeta = np.array([[0.0, 0.0]], np.float32)
+    w_out, e, keep = prune_window_nm(
+        nm[0], nm[1], jnp.array(w), jnp.array(hc),
+        jnp.ones((d_row, 1), np.float32), jnp.zeros((d_row, 1), np.float32),
+        jnp.array(qmeta),
+    )
+    w_ref, keep_ref = ref_sparsegpt(w, hc, nm=nm, blocksize=d_col)
+    np.testing.assert_array_equal(np.array(keep), keep_ref)
+    np.testing.assert_allclose(np.array(w_out), w_ref, atol=5e-5, rtol=1e-4)
+    # exactly n zeros per m consecutive weights, per row
+    groups = np.array(keep).reshape(d_row, d_col // nm[1], nm[1])
+    assert (groups.sum(-1) == nm[1] - nm[0]).all()
+
+
+@given(
+    p=st.floats(0.0, 0.8),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_joint_quantization_matches_oracle(p, bits, seed):
+    rng = np.random.default_rng(seed)
+    w, hc = make_problem(rng, 32, 64)
+    levels = 2**bits - 1
+    w_out, keep, _ = run_window(w, hc, p, levels)
+    w_ref, keep_ref = ref_sparsegpt(
+        w, hc, sparsity=p, blocksize=64, mask_blocksize=64, quant_levels=levels
+    )
+    np.testing.assert_array_equal(keep, keep_ref)
+    np.testing.assert_allclose(w_out, w_ref, atol=5e-5, rtol=1e-4)
+    # every surviving weight sits exactly on the per-row grid
+    scale, zero = quant_grid(w, levels)
+    wq = np.array(w_out)
+    onto = np.round(wq / scale + zero)
+    np.testing.assert_allclose(wq, scale * (onto - zero), atol=1e-5)
+
+
+def test_pruned_entries_are_exactly_zero():
+    rng = np.random.default_rng(7)
+    w, hc = make_problem(rng, 64, 128)
+    w_out, keep, _ = run_window(w, hc, 0.6, 0)
+    assert (w_out[keep == 0.0] == 0.0).all()
+
+
+def test_mask_density_exact():
+    rng = np.random.default_rng(8)
+    w, hc = make_problem(rng, 64, 128)
+    for p in [0.0, 0.25, 0.5, 0.75]:
+        _, keep, _ = run_window(w, hc, p, 0)
+        assert keep.sum() == round((1 - p) * keep.size)
+
+
+def test_zero_sparsity_no_quant_is_identity():
+    rng = np.random.default_rng(9)
+    w, hc = make_problem(rng, 32, 64)
+    w_out, keep, e = run_window(w, hc, 0.0, 0)
+    np.testing.assert_allclose(w_out, w, atol=1e-6)
+    assert keep.all() and np.abs(e).max() == 0.0
+
+
+def test_error_block_matches_definition():
+    """E[:, j] must equal (w_j_at_processing_time - frozen_j) / hinv_jj."""
+    rng = np.random.default_rng(10)
+    w, hc = make_problem(rng, 16, 32)
+    w_out, keep, e = run_window(w, hc, 0.5, 0)
+    # kept columns generate zero error when not quantizing
+    assert (e[keep == 1.0] == 0.0).all()
+    # pruned entries generated nonzero error wherever the running weight was nonzero
+    assert (np.abs(e[keep == 0.0]) > 0).mean() > 0.9

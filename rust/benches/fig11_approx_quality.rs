@@ -1,0 +1,63 @@
+//! Figure 11: how close SparseGPT's partial-update approximation gets to
+//! exact (per-row masked least-squares) reconstruction, layer by layer, at
+//! 50% sparsity. The exact comparator is the O(d_row * d_col^3) solver the
+//! paper's algorithm exists to avoid, so we run it on the `micro` config
+//! with row subsampling and report the relative error ratio
+//! (solver_error / exact_error - 1, the paper plots ~10-20%).
+
+use anyhow::Result;
+use sparsegpt::bench::{env_configs, env_usize, finish, prune_variant_opts};
+use sparsegpt::coordinator::{PruneMethod, PruneOptions};
+use sparsegpt::eval::report::Table;
+use sparsegpt::harness::Workspace;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open()?;
+    let config = env_configs(&["micro"]).remove(0);
+    let rows = env_usize("SPARSEGPT_BENCH_EXACT_ROWS", 32);
+    let dense = ws.load_model(&config)?;
+
+    let out = prune_variant_opts(
+        &ws,
+        &dense,
+        PruneOptions {
+            method: PruneMethod::SparseGpt {
+                pattern: Pattern::Unstructured(0.5),
+                quant_bits: None,
+            },
+            exact_rows: Some(rows),
+            ..Default::default()
+        },
+        sparsegpt::bench::calib_segments(),
+        0,
+    )?;
+
+    let mut table = Table::new(
+        &format!("Figure 11 (approximation quality, {config}, {rows} rows/matrix)"),
+        &["layer", "matrix", "exact err", "sparsegpt err", "rel. excess"],
+    );
+    let mut ratios = Vec::new();
+    for r in &out.reports {
+        if let Some((exact, solver)) = r.exact_vs_solver {
+            let excess = if exact > 0.0 { solver / exact - 1.0 } else { 0.0 };
+            ratios.push(excess);
+            table.row(vec![
+                r.layer.to_string(),
+                r.kind.label().to_string(),
+                format!("{exact:.3e}"),
+                format!("{solver:.3e}"),
+                format!("{:+.1}%", excess * 100.0),
+            ]);
+        }
+    }
+    let mean = ratios.iter().sum::<f64>() / ratios.len().max(1) as f64;
+    table.row(vec![
+        "-".into(),
+        "mean".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:+.1}%", mean * 100.0),
+    ]);
+    finish(&ws, &table, "fig11_approx_quality")
+}

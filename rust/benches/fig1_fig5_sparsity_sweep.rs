@@ -1,0 +1,53 @@
+//! Figures 1 and 5: perplexity vs uniform sparsity (10%..80%) for SparseGPT
+//! vs magnitude pruning, on the two largest trained configs (the OPT-175B /
+//! BLOOM-176B stand-ins).
+
+use anyhow::Result;
+use sparsegpt::bench::{env_configs, eval_one, finish, prune_variant};
+use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::eval::report::{fmt_ppl, Table};
+use sparsegpt::harness::Workspace;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open()?;
+    let configs = env_configs(&["medium", "small"]);
+    let points: Vec<f64> = match std::env::var("SPARSEGPT_BENCH_POINTS") {
+        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        _ => vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8],
+    };
+
+    for (i, config) in configs.iter().enumerate() {
+        let dense = match ws.load_model(config) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("skipping {config}: {e:#}");
+                continue;
+            }
+        };
+        let dense_ppl = eval_one(&ws, &dense, "synth-wiki")?;
+        let fig = if i == 0 { "Figure 1" } else { "Figure 5" };
+        let mut table = Table::new(
+            &format!("{fig} ({config}, synth-wiki, dense {})", fmt_ppl(dense_ppl)),
+            &["sparsity", "sparsegpt", "magnitude"],
+        );
+        for &p in &points {
+            let s = prune_variant(
+                &ws,
+                &dense,
+                PruneMethod::SparseGpt { pattern: Pattern::Unstructured(p), quant_bits: None },
+            )?;
+            let m = prune_variant(
+                &ws,
+                &dense,
+                PruneMethod::Magnitude { pattern: Pattern::Unstructured(p) },
+            )?;
+            let ps = eval_one(&ws, &s.params, "synth-wiki")?;
+            let pm = eval_one(&ws, &m.params, "synth-wiki")?;
+            println!("{config} p={p:.1}: sparsegpt {} magnitude {}", fmt_ppl(ps), fmt_ppl(pm));
+            table.row(vec![format!("{:.0}%", p * 100.0), fmt_ppl(ps), fmt_ppl(pm)]);
+        }
+        finish(&ws, &table, &format!("fig1_fig5_{config}"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Figure 6 (+ App. C "50% + 3-bit"): joint sparsification + quantization
+//! vs size-equivalent pure quantization across the family. The GPTQ
+//! baseline is the same artifact with sparsity 0 — the paper's observation
+//! that both algorithms share the column-greedy framework.
+
+use anyhow::Result;
+use sparsegpt::bench::{env_configs, eval_one, finish, prune_variant};
+use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::eval::report::{fmt_ppl, Table};
+use sparsegpt::harness::Workspace;
+use sparsegpt::solver::quant::effective_bits;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open()?;
+    let configs = env_configs(&["small", "medium"]);
+
+    let mut header = vec!["variant".to_string(), "bits/w".to_string()];
+    header.extend(configs.iter().cloned());
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Figure 6 (synth-wiki ppl)", &hdr);
+
+    let variants: Vec<(&str, f64, Option<PruneMethod>)> = vec![
+        ("dense fp32", 32.0, None),
+        (
+            "sparsegpt 50%+4bit",
+            effective_bits(0.5, 4.0),
+            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: Some(4) }),
+        ),
+        (
+            "gptq 3bit",
+            3.0,
+            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.0), quant_bits: Some(3) }),
+        ),
+        (
+            "sparsegpt 50%+3bit",
+            effective_bits(0.5, 3.0),
+            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: Some(3) }),
+        ),
+        (
+            "gptq 2.5bit(rtn grid)",
+            2.5,
+            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.0), quant_bits: Some(2) }),
+        ),
+        (
+            "sparsegpt 2:4+4bit",
+            effective_bits(0.5, 4.0),
+            Some(PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: Some(4) }),
+        ),
+        (
+            "sparsegpt 4:8+4bit",
+            effective_bits(0.5, 4.0),
+            Some(PruneMethod::SparseGpt { pattern: Pattern::NM(4, 8), quant_bits: Some(4) }),
+        ),
+    ];
+
+    for (label, bits, method) in variants {
+        let mut cells = vec![label.to_string(), format!("{bits:.1}")];
+        for config in &configs {
+            let dense = match ws.load_model(config) {
+                Ok(p) => p,
+                Err(_) => {
+                    cells.push("-".into());
+                    continue;
+                }
+            };
+            let ppl = match &method {
+                None => eval_one(&ws, &dense, "synth-wiki")?,
+                Some(m) => {
+                    let out = prune_variant(&ws, &dense, m.clone())?;
+                    eval_one(&ws, &out.params, "synth-wiki")?
+                }
+            };
+            println!("{label} / {config}: {}", fmt_ppl(ppl));
+            cells.push(fmt_ppl(ppl));
+        }
+        table.row(cells);
+    }
+    finish(&ws, &table, "fig6_joint_quant")
+}

@@ -1,0 +1,88 @@
+//! Figure 7 + Tables 5/6: partial 2:4 sensitivity. Which 2/3 of the model
+//! should be 2:4-sparsified (skip one layer type vs one depth third), and
+//! the prefix-fraction sequence 1/2, 2/3, 3/4, 4/5, full that a single
+//! sequential SparseGPT pass can produce.
+
+use anyhow::Result;
+use sparsegpt::bench::{env_configs, eval_all, finish, prune_variant_opts};
+use sparsegpt::coordinator::{PruneMethod, PruneOptions, SkipSpec};
+use sparsegpt::eval::report::{fmt_ppl, Table};
+use sparsegpt::harness::Workspace;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open()?;
+    let config = env_configs(&["small"]).remove(0);
+    let dense = ws.load_model(&config)?;
+    let calib = sparsegpt::bench::calib_segments();
+    let method = PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: None };
+
+    // --- Figure 7: skip one layer type or one third ---
+    let mut t7 = Table::new(
+        &format!("Figure 7 (partial 2:4 sensitivity, {config})"),
+        &["skip", "sparsity", "wiki", "ptb", "c4"],
+    );
+    let skips = [
+        SkipSpec::LayerType("attn".into()),
+        SkipSpec::LayerType("fc1".into()),
+        SkipSpec::LayerType("fc2".into()),
+        SkipSpec::Third(0),
+        SkipSpec::Third(1),
+        SkipSpec::Third(2),
+    ];
+    for skip in skips {
+        let label = skip.label();
+        let out = prune_variant_opts(
+            &ws,
+            &dense,
+            PruneOptions { method: method.clone(), skip, ..Default::default() },
+            calib,
+            0,
+        )?;
+        let ppl = eval_all(&ws, &out.params)?;
+        println!("{label}: wiki {}", fmt_ppl(ppl["synth-wiki"]));
+        t7.row(vec![
+            label,
+            format!("{:.3}", out.overall_sparsity()),
+            fmt_ppl(ppl["synth-wiki"]),
+            fmt_ppl(ppl["synth-ptb"]),
+            fmt_ppl(ppl["synth-c4-val"]),
+        ]);
+    }
+    finish(&ws, &t7, "fig7_partial_24")?;
+
+    // --- Tables 5/6: prefix fractions ---
+    let mut t5 = Table::new(
+        &format!("Table 5/6 (prefix 2:4, {config})"),
+        &["fraction", "wiki", "ptb", "c4"],
+    );
+    let dense_ppl = eval_all(&ws, &dense)?;
+    t5.row(vec![
+        "dense".into(),
+        fmt_ppl(dense_ppl["synth-wiki"]),
+        fmt_ppl(dense_ppl["synth-ptb"]),
+        fmt_ppl(dense_ppl["synth-c4-val"]),
+    ]);
+    for frac in [0.5, 2.0 / 3.0, 1.0] {
+        let out = prune_variant_opts(
+            &ws,
+            &dense,
+            PruneOptions {
+                method: method.clone(),
+                skip: SkipSpec::PrefixFraction(frac),
+                ..Default::default()
+            },
+            calib,
+            0,
+        )?;
+        let ppl = eval_all(&ws, &out.params)?;
+        println!("prefix {frac:.2}: wiki {}", fmt_ppl(ppl["synth-wiki"]));
+        t5.row(vec![
+            format!("{frac:.2}"),
+            fmt_ppl(ppl["synth-wiki"]),
+            fmt_ppl(ppl["synth-ptb"]),
+            fmt_ppl(ppl["synth-c4-val"]),
+        ]);
+    }
+    finish(&ws, &t5, "table5_6_prefix_24")
+}

@@ -1,0 +1,101 @@
+//! Appendix A ablations on the `small` config at 50% unstructured sparsity:
+//!   Figure 8 — number of calibration segments (powers of two),
+//!   Figure 9 — Hessian dampening multiplier (powers of ten),
+//!   Figure 10 — adaptive mask-selection blocksize Bs,
+//!   plus the 5-seed calibration-sensitivity check (mean ± std).
+
+use anyhow::Result;
+use sparsegpt::bench::{env_configs, eval_one, finish, prune_variant_opts};
+use sparsegpt::coordinator::{PruneMethod, PruneOptions};
+use sparsegpt::eval::report::{fmt_ppl, Table};
+use sparsegpt::harness::Workspace;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+use sparsegpt::util::timer::Stats;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open()?;
+    let config = env_configs(&["small"]).remove(0);
+    let dense = ws.load_model(&config)?;
+    let sgpt =
+        PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: None };
+
+    // Figure 8: calibration samples
+    let mut t8 = Table::new(&format!("Figure 8 (calibration samples, {config})"), &["segments", "wiki ppl"]);
+    for n in [8usize, 32, 128] {
+        let out = prune_variant_opts(
+            &ws,
+            &dense,
+            PruneOptions { method: sgpt.clone(), ..Default::default() },
+            n,
+            0,
+        )?;
+        let ppl = eval_one(&ws, &out.params, "synth-wiki")?;
+        println!("calib {n}: {}", fmt_ppl(ppl));
+        t8.row(vec![n.to_string(), fmt_ppl(ppl)]);
+    }
+    finish(&ws, &t8, "fig8_calibration")?;
+
+    // Figure 9: dampening
+    let mut t9 = Table::new(&format!("Figure 9 (Hessian dampening, {config})"), &["damp", "wiki ppl"]);
+    for damp in [1e-3, 1e-2, 1e-1, 1.0] {
+        let out = prune_variant_opts(
+            &ws,
+            &dense,
+            PruneOptions { method: sgpt.clone(), damp, ..Default::default() },
+            sparsegpt::bench::calib_segments(),
+            0,
+        )?;
+        let ppl = eval_one(&ws, &out.params, "synth-wiki")?;
+        println!("damp {damp:.0e}: {}", fmt_ppl(ppl));
+        t9.row(vec![format!("{damp:.0e}"), fmt_ppl(ppl)]);
+    }
+    finish(&ws, &t9, "fig9_dampening")?;
+
+    // Figure 10: mask-selection blocksize (Bs > layer width clamps down)
+    let mut t10 = Table::new(&format!("Figure 10 (mask blocksize, {config})"), &["Bs", "wiki ppl"]);
+    for bs in [1usize, 64, 128, 1024] {
+        let method = if bs == 128 {
+            sgpt.clone() // the production Pallas path
+        } else {
+            PruneMethod::SparseGptBs { sparsity: 0.5, mask_blocksize: bs }
+        };
+        let out = prune_variant_opts(
+            &ws,
+            &dense,
+            PruneOptions { method, ..Default::default() },
+            sparsegpt::bench::calib_segments(),
+            0,
+        )?;
+        let ppl = eval_one(&ws, &out.params, "synth-wiki")?;
+        println!("Bs {bs}: {}", fmt_ppl(ppl));
+        t10.row(vec![bs.to_string(), fmt_ppl(ppl)]);
+    }
+    finish(&ws, &t10, "fig10_blocksize")?;
+
+    // App A: sensitivity to calibration seed (5 runs)
+    let mut ppls = Vec::new();
+    for seed in 0..3u64 {
+        let out = prune_variant_opts(
+            &ws,
+            &dense,
+            PruneOptions { method: sgpt.clone(), ..Default::default() },
+            sparsegpt::bench::calib_segments(),
+            seed,
+        )?;
+        let ppl = eval_one(&ws, &out.params, "synth-wiki")?;
+        println!("seed {seed}: {}", fmt_ppl(ppl));
+        ppls.push(ppl);
+    }
+    let s = Stats::from(ppls);
+    let mut ts = Table::new(
+        &format!("App A seed sensitivity ({config}, 3 seeds)"),
+        &["mean ppl", "std", "min", "max"],
+    );
+    ts.row(vec![
+        format!("{:.3}", s.mean),
+        format!("{:.3}", s.std),
+        format!("{:.3}", s.min),
+        format!("{:.3}", s.max),
+    ]);
+    finish(&ws, &ts, "appA_seed_sensitivity")
+}

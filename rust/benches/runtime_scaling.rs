@@ -1,0 +1,118 @@
+//! The paper's runtime claim (Sec. 4: SparseGPT prunes 175B in ~4h while
+//! AdaPrune needs hours for 1.3B; complexity O(d_col^3 + d_row d_col^2) vs
+//! exact O(d_row d_col^3)): per-layer solver wall-clock across the family's
+//! widths for SparseGPT (HLO artifact), AdaPrune (GD reconstruction
+//! artifact), the Rust reference solver, and exact reconstruction (smallest
+//! shapes only), plus the fitted scaling exponent of the SparseGPT path.
+
+use anyhow::Result;
+use sparsegpt::bench::finish;
+use sparsegpt::eval::report::Table;
+use sparsegpt::harness::Workspace;
+use sparsegpt::runtime::ArgValue;
+use sparsegpt::solver::exact::exact_reconstruction;
+use sparsegpt::solver::hessian::dampened_hinv_chol_f64;
+use sparsegpt::solver::magnitude::magnitude_prune;
+use sparsegpt::solver::sparsegpt_ref::{ref_sparsegpt, Pattern};
+use sparsegpt::tensor::linalg::{dampen, Mat};
+use sparsegpt::tensor::Tensor;
+use sparsegpt::util::prng::Rng;
+use sparsegpt::util::timer::Timer;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open()?;
+    let mut rng = Rng::new(0);
+    let dims = [64usize, 128, 256, 512, 768];
+    let mut table = Table::new(
+        "Runtime scaling (per (d,d) layer, seconds)",
+        &["d", "sparsegpt(hlo)", "rust-ref", "adaprune(hlo)", "exact"],
+    );
+    let mut log_pairs = Vec::new();
+
+    for d in dims {
+        let w = Tensor::new(vec![d, d], (0..d * d).map(|_| rng.normal_f32()).collect());
+        let n = 2 * d;
+        let x = Tensor::new(vec![n, d], (0..n * d).map(|_| rng.normal_f32()).collect());
+        let h = x.transpose2().matmul(&x);
+        let hc = dampened_hinv_chol_f64(&h, 0.01).unwrap();
+
+        // HLO solver (compile excluded — it is a one-time cost per shape)
+        let name = format!("sparsegpt_{d}x{d}");
+        ws.rt.executable(&name)?;
+        let t = Timer::start();
+        let _ = ws.rt.run(
+            &name,
+            &[
+                ArgValue::F32(w.data()),
+                ArgValue::F32(hc.data()),
+                ArgValue::Scalar(0.5),
+                ArgValue::Scalar(0.0),
+            ],
+        )?;
+        let t_hlo = t.secs();
+        log_pairs.push(((d as f64).ln(), t_hlo.ln()));
+
+        // pure-Rust reference
+        let t = Timer::start();
+        let _ = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.5), 0, 128);
+        let t_ref = t.secs();
+
+        // AdaPrune artifact (256 GD steps)
+        let aname = format!("adaprune_{d}x{d}");
+        let t_ada = if ws.rt.manifest.artifacts.contains_key(&aname) {
+            ws.rt.executable(&aname)?;
+            let (_, mask) = magnitude_prune(&w, 0.5);
+            let t = Timer::start();
+            let _ = ws.rt.run(
+                &aname,
+                &[
+                    ArgValue::F32(w.data()),
+                    ArgValue::F32(mask.data()),
+                    ArgValue::F32(h.data()),
+                    ArgValue::Scalar(1e-4),
+                ],
+            )?;
+            format!("{:.3}", t.secs())
+        } else {
+            "-".into()
+        };
+
+        // exact reconstruction (d <= 128 only; O(d^4) beyond that)
+        let t_exact = if d <= 128 {
+            let hd_m = dampen(&Mat::from_f32(d, h.data()), 0.01);
+            let hd = Tensor::new(vec![d, d], hd_m.to_f32());
+            let (_, mask) = magnitude_prune(&w, 0.5);
+            let t = Timer::start();
+            let _ = exact_reconstruction(&w, &mask, &hd, None)?;
+            format!("{:.3}", t.secs())
+        } else {
+            "-".into()
+        };
+
+        println!("d={d}: hlo {t_hlo:.3}s ref {t_ref:.3}s ada {t_ada} exact {t_exact}");
+        table.row(vec![
+            d.to_string(),
+            format!("{t_hlo:.3}"),
+            format!("{t_ref:.3}"),
+            t_ada,
+            t_exact,
+        ]);
+    }
+
+    // least-squares exponent of t ~ d^k for the HLO path
+    let n = log_pairs.len() as f64;
+    let sx: f64 = log_pairs.iter().map(|p| p.0).sum();
+    let sy: f64 = log_pairs.iter().map(|p| p.1).sum();
+    let sxx: f64 = log_pairs.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = log_pairs.iter().map(|p| p.0 * p.1).sum();
+    let k = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    table.row(vec![
+        "fit".into(),
+        format!("~d^{k:.2}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    println!("sparsegpt(hlo) scaling exponent: {k:.2} (paper predicts <= 3)");
+    finish(&ws, &table, "runtime_scaling")
+}

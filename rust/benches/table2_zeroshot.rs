@@ -1,0 +1,72 @@
+//! Table 2: zero-shot accuracy of the largest routinely-trained model,
+//! dense vs magnitude-50% vs SparseGPT-{50%, 4:8, 2:4}, over the five
+//! synthetic tasks (Lambada/PIQA/ARC-e/ARC-c/StoryCloze analogs).
+
+use anyhow::Result;
+use sparsegpt::bench::{env_configs, env_usize, finish, prune_variant};
+use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::data::corpus::Lexicon;
+use sparsegpt::eval::report::Table;
+use sparsegpt::eval::zeroshot::{gen_items, zero_shot_accuracy, ZeroShotTask};
+use sparsegpt::harness::Workspace;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open()?;
+    let config = env_configs(&["medium"]).remove(0);
+    let n_items = env_usize("SPARSEGPT_BENCH_ITEMS", 100);
+    let dense = ws.load_model(&config)?;
+    let tok = ws.tokenizer()?;
+    let lex = Lexicon::new(0);
+
+    let mut header = vec!["method".to_string(), "spars.".to_string()];
+    for t in ZeroShotTask::ALL {
+        header.push(t.name().to_string());
+    }
+    header.push("avg".to_string());
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&format!("Table 2 (zero-shot, {config})"), &hdr);
+
+    let variants: Vec<(String, Option<PruneMethod>)> = vec![
+        ("dense".into(), None),
+        (
+            "magnitude-50%".into(),
+            Some(PruneMethod::Magnitude { pattern: Pattern::Unstructured(0.5) }),
+        ),
+        (
+            "sparsegpt-50%".into(),
+            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: None }),
+        ),
+        (
+            "sparsegpt-4:8".into(),
+            Some(PruneMethod::SparseGpt { pattern: Pattern::NM(4, 8), quant_bits: None }),
+        ),
+        (
+            "sparsegpt-2:4".into(),
+            Some(PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: None }),
+        ),
+    ];
+
+    for (label, method) in variants {
+        let (params, sparsity) = match method {
+            None => (dense.clone(), 0.0),
+            Some(m) => {
+                let out = prune_variant(&ws, &dense, m)?;
+                let s = out.overall_sparsity();
+                (out.params, s)
+            }
+        };
+        let mut cells = vec![label.clone(), format!("{sparsity:.2}")];
+        let mut sum = 0.0;
+        for task in ZeroShotTask::ALL {
+            let items = gen_items(task, &lex, 7, n_items);
+            let acc = zero_shot_accuracy(&ws.rt, &params, &tok, &items)?;
+            sum += acc;
+            cells.push(format!("{:.1}", acc * 100.0));
+        }
+        cells.push(format!("{:.1}", sum / ZeroShotTask::ALL.len() as f64 * 100.0));
+        println!("{label}: done");
+        table.row(cells);
+    }
+    finish(&ws, &table, "table2_zeroshot")
+}

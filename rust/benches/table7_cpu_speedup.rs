@@ -1,0 +1,72 @@
+//! Table 7: CPU inference acceleration from unstructured sparsity
+//! (the DeepSparse experiment). We run the full linear-layer stack of one
+//! model (all blocks' q/k/v/out/fc1/fc2) over a 400-token batch — the
+//! paper's OPT-2.7B setting — dense vs CSR at 40/50/60% sparsity, and
+//! report end-to-end speedups (paper: 1.57x / 1.82x / 2.16x).
+
+use anyhow::Result;
+use sparsegpt::bench::{env_configs, finish};
+use sparsegpt::eval::report::Table;
+use sparsegpt::harness::Workspace;
+use sparsegpt::model::layout::PRUNABLE_KINDS;
+use sparsegpt::solver::magnitude::magnitude_prune;
+use sparsegpt::sparse::{dense_layer, CsrMatrix};
+use sparsegpt::tensor::Tensor;
+use sparsegpt::util::prng::Rng;
+use sparsegpt::util::timer::bench_fn;
+
+const TOKENS: usize = 400;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open()?;
+    let config = env_configs(&["medium"]).remove(0);
+    let cfg = ws.config(&config)?;
+    let mut rng = Rng::new(0);
+
+    // one weight stack (all blocks, all linears) with random weights —
+    // runtime depends only on shape/sparsity, not on trained values
+    let shapes: Vec<(usize, usize)> = (0..cfg.layers)
+        .flat_map(|_| PRUNABLE_KINDS.iter().map(|k| k.shape(&cfg)).collect::<Vec<_>>())
+        .collect();
+    let dense_ws: Vec<Tensor> = shapes
+        .iter()
+        .map(|(r, c)| Tensor::new(vec![*r, *c], (0..r * c).map(|_| rng.normal_f32()).collect()))
+        .collect();
+    let xs: Vec<Tensor> = shapes
+        .iter()
+        .map(|(_, c)| Tensor::new(vec![TOKENS, *c], (0..TOKENS * c).map(|_| rng.normal_f32()).collect()))
+        .collect();
+
+    let dense_stats = bench_fn(1, 3, || {
+        for (w, x) in dense_ws.iter().zip(&xs) {
+            std::hint::black_box(dense_layer(x, w));
+        }
+    });
+    println!("dense stack: {:.3}s", dense_stats.median);
+
+    let mut table = Table::new(
+        &format!("Table 7 (CPU unstructured speedup, {config}, {TOKENS} tokens)"),
+        &["sparsity", "dense s", "sparse s", "speedup", "ideal"],
+    );
+    for p in [0.4, 0.5, 0.6] {
+        let csrs: Vec<CsrMatrix> = dense_ws
+            .iter()
+            .map(|w| CsrMatrix::from_dense(&magnitude_prune(w, p).0))
+            .collect();
+        let sparse_stats = bench_fn(1, 3, || {
+            for (w, x) in csrs.iter().zip(&xs) {
+                std::hint::black_box(w.layer(x));
+            }
+        });
+        let speedup = dense_stats.median / sparse_stats.median;
+        println!("p={p}: {:.3}s -> {:.3}s ({speedup:.2}x)", dense_stats.median, sparse_stats.median);
+        table.row(vec![
+            format!("{:.0}%", p * 100.0),
+            format!("{:.3}", dense_stats.median),
+            format!("{:.3}", sparse_stats.median),
+            format!("{speedup:.2}x"),
+            format!("{:.2}x", 1.0 / (1.0 - p)),
+        ]);
+    }
+    finish(&ws, &table, "table7_cpu_speedup")
+}

@@ -1,0 +1,53 @@
+//! Table 8: per-layer 2:4 structured matmul speedups at the three matrix
+//! shapes of the flagship model (the paper uses OPT-175B's Q/K/V/Out, FC1,
+//! FC2 at 2048 tokens on CUTLASS vs cuBLAS and reports 1.79x/1.67x/1.54x;
+//! we use the `large` config's scaled shapes on the CPU engine).
+
+use anyhow::Result;
+use sparsegpt::bench::{env_configs, env_usize, finish};
+use sparsegpt::eval::report::Table;
+use sparsegpt::harness::Workspace;
+use sparsegpt::solver::magnitude::magnitude_prune_nm;
+use sparsegpt::sparse::{dense_layer, NmMatrix};
+use sparsegpt::tensor::Tensor;
+use sparsegpt::util::prng::Rng;
+use sparsegpt::util::timer::bench_fn;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open()?;
+    let config = env_configs(&["large"]).remove(0);
+    let cfg = ws.config(&config)?;
+    let tokens = env_usize("SPARSEGPT_BENCH_TOKENS", 2048);
+    let mut rng = Rng::new(0);
+
+    let shapes = [
+        ("Q/K/V/Out", cfg.d, cfg.d),
+        ("FC1", cfg.ffn, cfg.d),
+        ("FC2", cfg.d, cfg.ffn),
+    ];
+    let mut table = Table::new(
+        &format!("Table 8 (2:4 matmul speedup, {config} shapes, {tokens} tokens)"),
+        &["weight", "dense ms", "2:4 ms", "speedup"],
+    );
+    for (label, r, c) in shapes {
+        let w = Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect());
+        let (w24, _) = magnitude_prune_nm(&w, 2, 4);
+        let nm = NmMatrix::from_dense(&w24, 2, 4)?;
+        let x = Tensor::new(vec![tokens, c], (0..tokens * c).map(|_| rng.normal_f32()).collect());
+        let d = bench_fn(1, 3, || {
+            std::hint::black_box(dense_layer(&x, &w));
+        });
+        let s = bench_fn(1, 3, || {
+            std::hint::black_box(nm.layer(&x));
+        });
+        let speedup = d.median / s.median;
+        println!("{label}: dense {:.1}ms 2:4 {:.1}ms ({speedup:.2}x)", d.median * 1e3, s.median * 1e3);
+        table.row(vec![
+            label.to_string(),
+            format!("{:.1}", d.median * 1e3),
+            format!("{:.1}", s.median * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    finish(&ws, &table, "table8_24_matmul")
+}

@@ -1,0 +1,96 @@
+//! Shared support for the benchmark binaries (one per paper table/figure)
+//! and the examples: variant pruning, evaluation over all corpora, report
+//! plumbing. Benches run via `cargo bench` with `harness = false` (criterion
+//! is unavailable offline); each prints a paper-shaped table and saves
+//! txt/csv copies under `reports/`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::{PruneMethod, PruneOptions, PruneOutcome, Pruner, SkipSpec};
+use crate::eval::perplexity;
+use crate::harness::{Workspace, DEFAULT_CALIB_SEGMENTS};
+use crate::model::layout::FlatParams;
+
+/// Env-tunable knobs so heavy benches can be scaled to the machine:
+///   SPARSEGPT_BENCH_CONFIGS   comma list (default per bench)
+///   SPARSEGPT_BENCH_SEGMENTS  eval segments per dataset (default 128)
+///   SPARSEGPT_BENCH_CALIB     calibration segments (default 128)
+pub fn env_configs(default: &[&str]) -> Vec<String> {
+    match std::env::var("SPARSEGPT_BENCH_CONFIGS") {
+        Ok(v) if !v.is_empty() => v.split(',').map(|s| s.trim().to_string()).collect(),
+        _ => default.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn eval_segments() -> usize {
+    env_usize("SPARSEGPT_BENCH_SEGMENTS", 128)
+}
+
+pub fn calib_segments() -> usize {
+    env_usize("SPARSEGPT_BENCH_CALIB", DEFAULT_CALIB_SEGMENTS)
+}
+
+/// Prune a fresh copy of `dense` with `method` and default options.
+pub fn prune_variant(
+    ws: &Workspace,
+    dense: &FlatParams,
+    method: PruneMethod,
+) -> Result<PruneOutcome> {
+    prune_variant_opts(
+        ws,
+        dense,
+        PruneOptions { method, ..Default::default() },
+        calib_segments(),
+        0,
+    )
+}
+
+pub fn prune_variant_opts(
+    ws: &Workspace,
+    dense: &FlatParams,
+    opts: PruneOptions,
+    n_calib: usize,
+    calib_seed: u64,
+) -> Result<PruneOutcome> {
+    let chunks = ws.calib_chunks(&dense.cfg, n_calib, calib_seed)?;
+    Pruner::new(&ws.rt).prune(dense.clone(), &chunks, &opts)
+}
+
+/// Perplexity on every eval corpus; key -> ppl.
+pub fn eval_all(ws: &Workspace, params: &FlatParams) -> Result<BTreeMap<String, f64>> {
+    let segs = eval_segments();
+    let mut out = BTreeMap::new();
+    for (name, ds) in ws.eval_datasets()? {
+        out.insert(name, perplexity(&ws.rt, params, &ds, segs)?.ppl);
+    }
+    Ok(out)
+}
+
+/// Perplexity on one corpus.
+pub fn eval_one(ws: &Workspace, params: &FlatParams, ds_name: &str) -> Result<f64> {
+    let ds = ws.dataset(ds_name)?;
+    Ok(perplexity(&ws.rt, params, &ds, eval_segments())?.ppl)
+}
+
+/// Load the trained model for `config` or explain how to get one.
+pub fn require_model(ws: &Workspace, config: &str) -> Result<FlatParams> {
+    ws.load_model(config)
+}
+
+/// Common skeleton: print + persist a report table.
+pub fn finish(ws: &Workspace, table: &crate::eval::report::Table, stem: &str) -> Result<()> {
+    print!("{}", table.render());
+    table.save(&ws.report_dir, stem)?;
+    println!("(saved reports/{stem}.txt + .csv)\n");
+    Ok(())
+}
+
+pub fn default_skip() -> SkipSpec {
+    SkipSpec::None
+}

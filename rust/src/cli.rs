@@ -1,0 +1,123 @@
+//! Minimal argument parser for the launcher (clap is unavailable offline).
+//! Supports `--flag value`, `--flag=value` and boolean `--flag`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub bools: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.bools.push(name.to_string());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("--{name} needs a value"))?;
+                    if v.starts_with("--") {
+                        bail!("--{name} needs a value (got {v})");
+                    }
+                    out.flags.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+}
+
+/// Parse "2:4" into (2, 4).
+pub fn parse_nm(s: &str) -> Result<(usize, usize)> {
+    let (n, m) = s.split_once(':').ok_or_else(|| anyhow!("expected n:m, got {s}"))?;
+    let (n, m): (usize, usize) = (n.parse()?, m.parse()?);
+    if n == 0 || m == 0 || n >= m {
+        bail!("invalid n:m pattern {s}");
+    }
+    Ok((n, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&v(&["prune", "--config", "nano", "--force", "--damp=0.1"]), &["force"]).unwrap();
+        assert_eq!(a.positional, vec!["prune"]);
+        assert_eq!(a.get("config"), Some("nano"));
+        assert_eq!(a.f64_or("damp", 0.0).unwrap(), 0.1);
+        assert!(a.has("force"));
+        assert!(!a.has("other"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&v(&["--config"]), &[]).is_err());
+        assert!(Args::parse(&v(&["--config", "--x"]), &[]).is_err());
+    }
+
+    #[test]
+    fn nm_parsing() {
+        assert_eq!(parse_nm("2:4").unwrap(), (2, 4));
+        assert_eq!(parse_nm("4:8").unwrap(), (4, 8));
+        assert!(parse_nm("4:2").is_err());
+        assert!(parse_nm("24").is_err());
+    }
+}

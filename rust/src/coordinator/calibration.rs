@@ -1,0 +1,95 @@
+//! Calibration batching: random corpus segments are grouped into fixed-size
+//! chunks matching the `block_fwd`/`hessian` artifact shapes; short final
+//! chunks are zero-padded and the padded activation rows are zeroed before
+//! Hessian accumulation (zero rows contribute nothing to X^T X).
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelCfg;
+
+#[derive(Clone, Debug)]
+pub struct CalibChunks {
+    /// per chunk: eval_batch * seq token ids (padded with 0)
+    pub tokens: Vec<Vec<i32>>,
+    /// per chunk: number of valid activation rows (valid_segments * seq)
+    pub valid_rows: Vec<usize>,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+impl CalibChunks {
+    pub fn new(cfg: &ModelCfg, segments: &[Vec<i32>]) -> Result<CalibChunks> {
+        if segments.is_empty() {
+            bail!("no calibration segments");
+        }
+        let (batch, seq) = (cfg.eval_batch, cfg.seq);
+        let mut tokens = Vec::new();
+        let mut valid_rows = Vec::new();
+        for group in segments.chunks(batch) {
+            let mut chunk = Vec::with_capacity(batch * seq);
+            for s in group {
+                if s.len() != seq {
+                    bail!("calibration segment has {} tokens, expected {seq}", s.len());
+                }
+                chunk.extend_from_slice(s);
+            }
+            chunk.resize(batch * seq, 0); // zero-pad missing segments
+            tokens.push(chunk);
+            valid_rows.push(group.len() * seq);
+        }
+        Ok(CalibChunks { tokens, valid_rows, seq, batch })
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.valid_rows.iter().sum()
+    }
+
+    /// Zero all rows beyond `valid` in a (rows, dim) activation buffer.
+    pub fn mask_padding(buf: &mut [f32], rows: usize, dim: usize, valid: usize) {
+        debug_assert_eq!(buf.len(), rows * dim);
+        if valid < rows {
+            buf[valid * dim..].fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layout::tests::tiny_cfg;
+
+    #[test]
+    fn chunks_pad_and_count() {
+        let mut cfg = tiny_cfg();
+        cfg.eval_batch = 2;
+        cfg.seq = 4;
+        let segs: Vec<Vec<i32>> = (0..3).map(|i| vec![i as i32; 4]).collect();
+        let c = CalibChunks::new(&cfg, &segs).unwrap();
+        assert_eq!(c.n_chunks(), 2);
+        assert_eq!(c.valid_rows, vec![8, 4]);
+        assert_eq!(c.tokens[1][..4], [2, 2, 2, 2]);
+        assert_eq!(c.tokens[1][4..], [0, 0, 0, 0]);
+        assert_eq!(c.total_rows(), 12);
+    }
+
+    #[test]
+    fn rejects_bad_segment_length() {
+        let mut cfg = tiny_cfg();
+        cfg.eval_batch = 2;
+        cfg.seq = 4;
+        assert!(CalibChunks::new(&cfg, &[vec![0; 3]]).is_err());
+        assert!(CalibChunks::new(&cfg, &[]).is_err());
+    }
+
+    #[test]
+    fn mask_padding_zeroes_tail() {
+        let mut buf = vec![1.0f32; 4 * 3];
+        CalibChunks::mask_padding(&mut buf, 4, 3, 2);
+        assert!(buf[..6].iter().all(|&x| x == 1.0));
+        assert!(buf[6..].iter().all(|&x| x == 0.0));
+    }
+}

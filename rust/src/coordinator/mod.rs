@@ -1,0 +1,19 @@
+//! The compression pipeline coordinator (Layer 3).
+//!
+//! Owns the paper's sequential layer-by-layer schedule (Sec. 4 "we sparsify
+//! Transformer layers sequentially in order, which significantly reduces
+//! memory requirements"): calibration activations are propagated block by
+//! block, each block's Hessians are accumulated from its *own* inputs, the
+//! block's six linears are compressed, and the pruned block produces the
+//! next block's inputs. Python never runs here — every tensor operation is
+//! an AOT artifact executed through the PJRT runtime.
+
+pub mod calibration;
+pub mod partial;
+pub mod pipeline;
+pub mod trainer;
+
+pub use calibration::CalibChunks;
+pub use partial::SkipSpec;
+pub use pipeline::{PruneMethod, PruneOptions, PruneOutcome, Pruner};
+pub use trainer::{TrainOptions, Trainer};

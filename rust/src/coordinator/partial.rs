@@ -1,0 +1,104 @@
+//! Partial-pruning policies for the sensitivity experiments.
+//!
+//! Fig. 7 prunes 2/3 of OPT-175B/BLOOM-176B to 2:4 while skipping either one
+//! layer *type* (attention / fc1 / fc2) or one *third* of consecutive blocks
+//! (front / middle / back); Tables 5–6 prune a prefix fraction of blocks and
+//! keep the rest dense (exploiting the solver's sequential nature).
+
+use crate::model::layout::LinearKind;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum SkipSpec {
+    /// prune everything
+    None,
+    /// skip all linears of one type: "attn" | "fc1" | "fc2"
+    LayerType(String),
+    /// skip one third of consecutive blocks: 0 = front, 1 = middle, 2 = back
+    Third(usize),
+    /// prune only the first `ceil(frac * layers)` blocks (Tables 5-6)
+    PrefixFraction(f64),
+}
+
+impl SkipSpec {
+    pub fn should_prune(&self, layer: usize, kind: LinearKind, n_layers: usize) -> bool {
+        match self {
+            SkipSpec::None => true,
+            SkipSpec::LayerType(t) => kind.layer_type() != t,
+            SkipSpec::Third(t) => {
+                let third = (layer * 3) / n_layers; // 0, 1, 2
+                third != *t
+            }
+            SkipSpec::PrefixFraction(frac) => {
+                let cutoff = (frac * n_layers as f64).ceil() as usize;
+                layer < cutoff
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SkipSpec::None => "full".into(),
+            SkipSpec::LayerType(t) => format!("skip-{t}"),
+            SkipSpec::Third(0) => "skip-front".into(),
+            SkipSpec::Third(1) => "skip-middle".into(),
+            SkipSpec::Third(2) => "skip-back".into(),
+            SkipSpec::Third(t) => format!("skip-third-{t}"),
+            SkipSpec::PrefixFraction(f) => format!("prefix-{f:.2}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_prunes_everything() {
+        for l in 0..12 {
+            assert!(SkipSpec::None.should_prune(l, LinearKind::Wq, 12));
+        }
+    }
+
+    #[test]
+    fn layer_type_skips_exactly_that_type() {
+        let s = SkipSpec::LayerType("fc1".into());
+        assert!(!s.should_prune(0, LinearKind::Fc1, 12));
+        assert!(s.should_prune(0, LinearKind::Fc2, 12));
+        assert!(s.should_prune(0, LinearKind::Wq, 12));
+        let a = SkipSpec::LayerType("attn".into());
+        for k in [LinearKind::Wq, LinearKind::Wk, LinearKind::Wv, LinearKind::Wo] {
+            assert!(!a.should_prune(3, k, 12));
+        }
+        assert!(a.should_prune(3, LinearKind::Fc1, 12));
+    }
+
+    #[test]
+    fn thirds_partition_blocks() {
+        let n = 12;
+        for l in 0..n {
+            let pruned_count = (0..3)
+                .filter(|&t| SkipSpec::Third(t).should_prune(l, LinearKind::Wq, n))
+                .count();
+            assert_eq!(pruned_count, 2, "each layer skipped by exactly one third");
+        }
+        // front third = layers 0..4 for n=12
+        let f = SkipSpec::Third(0);
+        assert!(!f.should_prune(0, LinearKind::Wq, n));
+        assert!(!f.should_prune(3, LinearKind::Wq, n));
+        assert!(f.should_prune(4, LinearKind::Wq, n));
+    }
+
+    #[test]
+    fn prefix_fraction_boundaries() {
+        let s = SkipSpec::PrefixFraction(0.5);
+        let n = 8;
+        for l in 0..4 {
+            assert!(s.should_prune(l, LinearKind::Fc2, n));
+        }
+        for l in 4..8 {
+            assert!(!s.should_prune(l, LinearKind::Fc2, n));
+        }
+        assert!(SkipSpec::PrefixFraction(1.0).should_prune(7, LinearKind::Wo, 8));
+        assert!(!SkipSpec::PrefixFraction(0.0).should_prune(0, LinearKind::Wo, 8));
+    }
+}

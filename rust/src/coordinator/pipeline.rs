@@ -1,0 +1,465 @@
+//! The one-shot compression pipeline (the system the paper contributes).
+//!
+//! For each transformer block, in order:
+//!   1. run `block_fwd` over the calibration chunks with the block's current
+//!      (dense) weights, collecting the inputs X of each of its six linears;
+//!   2. accumulate the four layer Hessians H = sum X^T X (`hessian_<dim>`,
+//!      q/k/v share one) and prepare the inverse-Cholesky factor
+//!      (`hessian_prep_<dim>`, App-A dampening);
+//!   3. compress each linear with the configured method — SparseGPT
+//!      (unstructured / 2:4 / 4:8, optionally joint with quantization),
+//!      magnitude, or AdaPrune — honoring the partial-pruning skip policy;
+//!   4. re-run `block_fwd` with the *pruned* weights so the next block
+//!      calibrates against the compressed model's activations (the paper's
+//!      sequential memory-saving schedule).
+//!
+//! The whole pass is one-shot: no gradients, no finetuning.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::calibration::CalibChunks;
+use crate::coordinator::partial::SkipSpec;
+use crate::model::layout::{Capture, FlatParams, LinearKind, PRUNABLE_KINDS};
+use crate::runtime::{ArgValue, Runtime};
+use crate::solver::hessian::{lambda_max, layer_sq_error, HessianAccumulator};
+use crate::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+use crate::solver::sparsegpt_ref::Pattern;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum PruneMethod {
+    /// the paper's solver; `quant_bits` enables joint compression (Eq. 7)
+    SparseGpt { pattern: Pattern, quant_bits: Option<u32> },
+    /// Fig-10 ablation: jnp solver variant with mask blocksize Bs
+    SparseGptBs { sparsity: f64, mask_blocksize: usize },
+    /// layer-wise magnitude baseline (optionally quantize survivors RTN)
+    Magnitude { pattern: Pattern },
+    /// magnitude mask + GD reconstruction baseline
+    AdaPrune { sparsity: f64 },
+}
+
+impl PruneMethod {
+    pub fn label(&self) -> String {
+        match self {
+            PruneMethod::SparseGpt { pattern, quant_bits } => {
+                let p = match pattern {
+                    Pattern::Unstructured(p) => format!("{:.0}%", p * 100.0),
+                    Pattern::NM(n, m) => format!("{n}:{m}"),
+                };
+                match quant_bits {
+                    Some(b) => format!("sparsegpt-{p}+{b}bit"),
+                    None => format!("sparsegpt-{p}"),
+                }
+            }
+            PruneMethod::SparseGptBs { sparsity, mask_blocksize } => {
+                format!("sparsegpt-{:.0}%-bs{}", sparsity * 100.0, mask_blocksize)
+            }
+            PruneMethod::Magnitude { pattern } => match pattern {
+                Pattern::Unstructured(p) => format!("magnitude-{:.0}%", p * 100.0),
+                Pattern::NM(n, m) => format!("magnitude-{n}:{m}"),
+            },
+            PruneMethod::AdaPrune { sparsity } => format!("adaprune-{:.0}%", sparsity * 100.0),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PruneOptions {
+    pub method: PruneMethod,
+    /// Hessian dampening multiplier (paper default 1e-2, Fig-9 ablation)
+    pub damp: f64,
+    pub skip: SkipSpec,
+    /// record per-matrix layer errors tr(dW H dW^T) — O(d^3), small models
+    pub record_errors: bool,
+    /// additionally solve the EXACT per-row masked reconstruction (Eq. 2)
+    /// on this many subsampled rows and record its error — O(rows * d^3),
+    /// the Fig-11 comparator; use only on micro/small models
+    pub exact_rows: Option<usize>,
+}
+
+impl Default for PruneOptions {
+    fn default() -> Self {
+        PruneOptions {
+            method: PruneMethod::SparseGpt {
+                pattern: Pattern::Unstructured(0.5),
+                quant_bits: None,
+            },
+            damp: 0.01,
+            skip: SkipSpec::None,
+            record_errors: false,
+            exact_rows: None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MatrixReport {
+    pub layer: usize,
+    pub kind: LinearKind,
+    pub sparsity: f64,
+    pub skipped: bool,
+    pub solver_secs: f64,
+    /// layer error tr(dW H dW^T) when record_errors is set
+    pub sq_error: Option<f64>,
+    /// same-mask exact-reconstruction error on the subsampled rows, paired
+    /// with the solver's error on those SAME rows (Fig-11 ratio)
+    pub exact_vs_solver: Option<(f64, f64)>,
+}
+
+#[derive(Debug)]
+pub struct PruneOutcome {
+    pub params: FlatParams,
+    pub reports: Vec<MatrixReport>,
+    pub total_secs: f64,
+    pub hessian_secs: f64,
+    pub solver_secs: f64,
+    pub propagate_secs: f64,
+}
+
+impl PruneOutcome {
+    pub fn overall_sparsity(&self) -> f64 {
+        self.params.prunable_sparsity()
+    }
+}
+
+/// Fig-11 comparator: on `nrows` evenly-spaced rows, solve the exact
+/// masked reconstruction (Eq. 2, f64, with the same dampened H and the
+/// solver's own mask) and return (exact_error, solver_error) on those rows.
+fn exact_vs_solver_error(
+    w: &Tensor,
+    w_solver: &Tensor,
+    mask: &Tensor,
+    h: &Tensor,
+    damp: f64,
+    nrows: usize,
+) -> Result<(f64, f64)> {
+    use crate::solver::exact::exact_reconstruction;
+    use crate::tensor::linalg::{dampen, Mat};
+    let d_row = w.rows();
+    let stride = (d_row / nrows.min(d_row)).max(1);
+    let rows: Vec<usize> = (0..d_row).step_by(stride).take(nrows).collect();
+    let hd_mat = dampen(&Mat::from_f32(h.rows(), h.data()), damp);
+    let hd = Tensor::new(vec![h.rows(), h.cols()], hd_mat.to_f32());
+    let w_exact = exact_reconstruction(w, mask, &hd, Some(&rows))?;
+    let row_error = |what: &Tensor| -> f64 {
+        let mut total = 0.0;
+        for &r in &rows {
+            let c = w.cols();
+            let mut dw = vec![0.0f64; c];
+            for j in 0..c {
+                dw[j] = (w.at2(r, j) - what.at2(r, j)) as f64;
+            }
+            for j in 0..c {
+                if dw[j] == 0.0 {
+                    continue;
+                }
+                let hrow = hd.row(j);
+                let mut s = 0.0f64;
+                for k in 0..c {
+                    s += hrow[k] as f64 * dw[k];
+                }
+                total += dw[j] * s;
+            }
+        }
+        total
+    };
+    Ok((row_error(&w_exact), row_error(w_solver)))
+}
+
+pub struct Pruner<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+impl<'rt> Pruner<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Pruner<'rt> {
+        Pruner { rt }
+    }
+
+    /// Run the one-shot pipeline. `params` is consumed and returned pruned.
+    pub fn prune(
+        &self,
+        mut params: FlatParams,
+        chunks: &CalibChunks,
+        opts: &PruneOptions,
+    ) -> Result<PruneOutcome> {
+        let cfg = params.cfg.clone();
+        let t_total = Instant::now();
+        let mut reports = Vec::new();
+        let (mut hessian_secs, mut solver_secs, mut propagate_secs) = (0.0, 0.0, 0.0);
+
+        // 1. embed all calibration chunks (params marshalled once)
+        let t0 = Instant::now();
+        let plit = self.rt.cache_f32(&params.data, &[cfg.n_params])?;
+        let mut hidden: Vec<Tensor> = Vec::with_capacity(chunks.n_chunks());
+        for toks in &chunks.tokens {
+            let out = self
+                .rt
+                .run(&format!("embed_{}", cfg.name), &[ArgValue::Cached(&plit), ArgValue::I32(toks)])
+                .context("embed")?;
+            hidden.push(out.into_iter().next().unwrap());
+        }
+        drop(plit);
+        propagate_secs += t0.elapsed().as_secs_f64();
+
+        // the fused capture+Hessian artifact is the fast path (one dispatch
+        // per chunk instead of five, activations never cross the boundary);
+        // SPARSEGPT_UNFUSED_HESSIANS=1 selects the original path (perf A/B)
+        let fused_name = format!("block_hess_{}", cfg.name);
+        let use_fused = std::env::var_os("SPARSEGPT_UNFUSED_HESSIANS").is_none()
+            && self.rt.manifest.artifacts.contains_key(&fused_name);
+
+        for layer in 0..cfg.layers {
+            // 2. capture pass with dense block weights -> Hessians
+            let t0 = Instant::now();
+            let block = params.block_slice(layer)?;
+            let blit = self.rt.cache_f32(&block, &[cfg.block_size])?;
+            let mut accs: HashMap<Capture, HessianAccumulator> = Capture::ALL
+                .iter()
+                .map(|c| (*c, HessianAccumulator::new(c.dim(&cfg))))
+                .collect();
+            for (ci, h) in hidden.iter().enumerate() {
+                let valid = chunks.valid_rows[ci];
+                if use_fused {
+                    let outs = self
+                        .rt
+                        .run(
+                            &fused_name,
+                            &[
+                                ArgValue::Cached(&blit),
+                                ArgValue::F32(h.data()),
+                                ArgValue::Scalar(valid as f32),
+                            ],
+                        )
+                        .context("block_hess")?;
+                    // outputs: hidden_out, H_qkv, H_wo, H_fc1, H_fc2
+                    for cap in Capture::ALL {
+                        accs.get_mut(&cap)
+                            .unwrap()
+                            .add(&outs[cap.output_index()], valid)?;
+                    }
+                } else {
+                    let outs = self.block_fwd(&cfg.name, &block, h)?;
+                    for cap in Capture::ALL {
+                        let dim = cap.dim(&cfg);
+                        let mut x = outs[cap.output_index()].clone();
+                        CalibChunks::mask_padding(
+                            x.data_mut(),
+                            chunks.batch * chunks.seq,
+                            dim,
+                            valid,
+                        );
+                        let hcv = self
+                            .rt
+                            .run(&format!("hessian_{dim}"), &[ArgValue::F32(x.data())])
+                            .context("hessian")?;
+                        accs.get_mut(&cap).unwrap().add(&hcv[0], valid)?;
+                    }
+                }
+            }
+            hessian_secs += t0.elapsed().as_secs_f64();
+
+            // 3. prepare inverse factors once per capture group, then solve
+            let mut prepared: HashMap<Capture, Tensor> = HashMap::new();
+            for kind in PRUNABLE_KINDS {
+                if !opts.skip.should_prune(layer, kind, cfg.layers) {
+                    reports.push(MatrixReport {
+                        layer,
+                        kind,
+                        sparsity: 0.0,
+                        skipped: true,
+                        solver_secs: 0.0,
+                        sq_error: None,
+                        exact_vs_solver: None,
+                    });
+                    continue;
+                }
+                let cap = kind.capture();
+                let h = &accs[&cap].h;
+                let t1 = Instant::now();
+                let w = params.get_linear(kind, layer)?;
+                let (w_new, mask) = match &opts.method {
+                    PruneMethod::Magnitude { pattern } => match pattern {
+                        Pattern::Unstructured(p) => magnitude_prune(&w, *p),
+                        Pattern::NM(n, m) => magnitude_prune_nm(&w, *n, *m),
+                    },
+                    PruneMethod::AdaPrune { sparsity } => {
+                        let (_, mask) = magnitude_prune(&w, *sparsity);
+                        let lam = lambda_max(h, 0x5eed ^ layer as u64);
+                        let lr = if lam > 0.0 { (1.0 / lam) as f32 } else { 0.0 };
+                        let (r, c) = kind.shape(&cfg);
+                        let out = self
+                            .rt
+                            .run(
+                                &format!("adaprune_{r}x{c}"),
+                                &[
+                                    ArgValue::F32(w.data()),
+                                    ArgValue::F32(mask.data()),
+                                    ArgValue::F32(h.data()),
+                                    ArgValue::Scalar(lr),
+                                ],
+                            )
+                            .context("adaprune")?;
+                        (out.into_iter().next().unwrap(), mask)
+                    }
+                    method => {
+                        // SparseGPT variants need the inverse-Cholesky factor
+                        let hc = match prepared.get(&cap) {
+                            Some(hc) => hc.clone(),
+                            None => {
+                                let dim = cap.dim(&cfg);
+                                let out = self
+                                    .rt
+                                    .run(
+                                        &format!("hessian_prep_{dim}"),
+                                        &[ArgValue::F32(h.data()), ArgValue::Scalar(opts.damp as f32)],
+                                    )
+                                    .context("hessian_prep")?;
+                                let hc = out.into_iter().next().unwrap();
+                                if !hc.data().iter().all(|x| x.is_finite()) {
+                                    bail!(
+                                        "hessian_prep produced non-finite factor \
+                                         (layer {layer} {kind:?}); increase --damp"
+                                    );
+                                }
+                                prepared.insert(cap, hc.clone());
+                                hc
+                            }
+                        };
+                        let (r, c) = kind.shape(&cfg);
+                        let mut out = match method {
+                            PruneMethod::SparseGpt { pattern, quant_bits } => {
+                                let qlevels =
+                                    quant_bits.map(|b| (1u32 << b) - 1).unwrap_or(0) as f32;
+                                match pattern {
+                                    Pattern::Unstructured(p) => self.rt.run(
+                                        &format!("sparsegpt_{r}x{c}"),
+                                        &[
+                                            ArgValue::F32(w.data()),
+                                            ArgValue::F32(hc.data()),
+                                            ArgValue::Scalar(*p as f32),
+                                            ArgValue::Scalar(qlevels),
+                                        ],
+                                    )?,
+                                    Pattern::NM(n, m) => self.rt.run(
+                                        &format!("sparsegpt{n}{m}_{r}x{c}"),
+                                        &[
+                                            ArgValue::F32(w.data()),
+                                            ArgValue::F32(hc.data()),
+                                            ArgValue::Scalar(qlevels),
+                                        ],
+                                    )?,
+                                }
+                            }
+                            PruneMethod::SparseGptBs { sparsity, mask_blocksize } => {
+                                // clamp Bs to the largest lowered variant that
+                                // divides this layer's width (Fig-10 semantics:
+                                // selection blocks never exceed the layer)
+                                let name = self.bs_artifact(*mask_blocksize, r, c);
+                                self.rt.run(
+                                    &name,
+                                    &[
+                                        ArgValue::F32(w.data()),
+                                        ArgValue::F32(hc.data()),
+                                        ArgValue::Scalar(*sparsity as f32),
+                                        ArgValue::Scalar(0.0),
+                                    ],
+                                )?
+                            }
+                            _ => unreachable!(),
+                        };
+                        let mask = out.pop().unwrap();
+                        (out.pop().unwrap(), mask)
+                    }
+                };
+                let dt = t1.elapsed().as_secs_f64();
+                solver_secs += dt;
+                let sq_error = opts.record_errors.then(|| layer_sq_error(&w, &w_new, h));
+                let exact_vs_solver = match opts.exact_rows {
+                    Some(nrows) => {
+                        Some(exact_vs_solver_error(&w, &w_new, &mask, h, opts.damp, nrows)?)
+                    }
+                    None => None,
+                };
+                reports.push(MatrixReport {
+                    layer,
+                    kind,
+                    sparsity: w_new.sparsity(),
+                    skipped: false,
+                    solver_secs: dt,
+                    sq_error,
+                    exact_vs_solver,
+                });
+                params.set_linear(kind, layer, &w_new)?;
+            }
+
+            // 4. propagate with pruned weights (block slice marshalled once;
+            // the lean hidden-only artifact avoids copying dead captures)
+            let t2 = Instant::now();
+            let prop_name = format!("block_prop_{}", cfg.name);
+            let prop_name = if self.rt.manifest.artifacts.contains_key(&prop_name) {
+                prop_name
+            } else {
+                format!("block_fwd_{}", cfg.name)
+            };
+            let block = params.block_slice(layer)?;
+            let blit = self.rt.cache_f32(&block, &[cfg.block_size])?;
+            for h in hidden.iter_mut() {
+                let outs = self
+                    .rt
+                    .run(&prop_name, &[ArgValue::Cached(&blit), ArgValue::F32(h.data())])
+                    .context("block propagate")?;
+                *h = outs.into_iter().next().unwrap();
+            }
+            propagate_secs += t2.elapsed().as_secs_f64();
+        }
+
+        Ok(PruneOutcome {
+            params,
+            reports,
+            total_secs: t_total.elapsed().as_secs_f64(),
+            hessian_secs,
+            solver_secs,
+            propagate_secs,
+        })
+    }
+
+    /// Pick the Bs-ablation artifact for shape (r, c): exact if lowered,
+    /// otherwise the largest lowered Bs <= min(bs, c) (falling back to the
+    /// production Bs=128 solver).
+    fn bs_artifact(&self, bs: usize, r: usize, c: usize) -> String {
+        let exact = format!("sparsegpt_bs{bs}_{r}x{c}");
+        if self.rt.manifest.artifacts.contains_key(&exact) {
+            return exact;
+        }
+        let mut best: Option<usize> = None;
+        let prefix = "sparsegpt_bs";
+        let suffix = format!("_{r}x{c}");
+        for name in self.rt.manifest.artifacts.keys() {
+            if let Some(rest) = name.strip_prefix(prefix) {
+                if let Some(v) = rest.strip_suffix(&suffix) {
+                    if let Ok(v) = v.parse::<usize>() {
+                        if v <= bs.min(c) && best.map_or(true, |b| v > b) {
+                            best = Some(v);
+                        }
+                    }
+                }
+            }
+        }
+        match best {
+            Some(v) if v > 128 || bs.min(c) < 128 => format!("sparsegpt_bs{v}{suffix}"),
+            _ => format!("sparsegpt_{r}x{c}"), // production Bs=128 path
+        }
+    }
+
+    fn block_fwd(&self, cfg_name: &str, block: &[f32], hidden: &Tensor) -> Result<Vec<Tensor>> {
+        self.rt
+            .run(
+                &format!("block_fwd_{cfg_name}"),
+                &[ArgValue::F32(block), ArgValue::F32(hidden.data())],
+            )
+            .context("block_fwd")
+    }
+}

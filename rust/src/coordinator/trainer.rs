@@ -1,0 +1,189 @@
+//! Training driver: the Rust loop around the `train_step_<cfg>` artifact
+//! (fwd + bwd + Adam inside XLA). Owns the LR schedule (linear warmup +
+//! cosine decay), data order, loss logging and checkpointing — the e2e
+//! example uses this to pretrain the model family from scratch.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::Dataset;
+use crate::model::checkpoint::Checkpoint;
+use crate::model::layout::FlatParams;
+use crate::runtime::{ArgValue, Runtime};
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub base_lr: f64,
+    pub warmup: usize,
+    /// decay to this fraction of base_lr at the final step
+    pub min_lr_frac: f64,
+    pub seed: u64,
+    pub log_every: usize,
+    pub checkpoint_every: usize,
+    pub out: Option<PathBuf>,
+}
+
+impl TrainOptions {
+    /// Sensible defaults per config scale.
+    pub fn for_config(name: &str, steps: usize) -> TrainOptions {
+        let base_lr = match name {
+            "nano" | "micro" => 3e-3,
+            "small" => 1.5e-3,
+            "medium" => 8e-4,
+            _ => 5e-4,
+        };
+        TrainOptions {
+            steps,
+            base_lr,
+            warmup: (steps / 10).clamp(10, 100),
+            min_lr_frac: 0.1,
+            seed: 0,
+            log_every: 20,
+            checkpoint_every: 0,
+            out: None,
+        }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f64 {
+        let warm = self.warmup.max(1);
+        if step <= warm {
+            return self.base_lr * step as f64 / warm as f64;
+        }
+        let t = (step - warm) as f64 / (self.steps - warm).max(1) as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t.min(1.0)).cos());
+        self.base_lr * (self.min_lr_frac + (1.0 - self.min_lr_frac) * cos)
+    }
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+#[derive(Debug)]
+pub struct TrainOutcome {
+    pub params: FlatParams,
+    pub adam: (Vec<f32>, Vec<f32>),
+    pub losses: Vec<(usize, f64)>,
+    pub final_step: u64,
+    pub secs: f64,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Trainer<'rt> {
+        Trainer { rt }
+    }
+
+    /// Train (or continue training) `params` on `data`.
+    pub fn train(
+        &self,
+        params: FlatParams,
+        adam: Option<(Vec<f32>, Vec<f32>)>,
+        start_step: u64,
+        data: &Dataset,
+        opts: &TrainOptions,
+    ) -> Result<TrainOutcome> {
+        let cfg = params.cfg.clone();
+        let artifact = format!("train_step_{}", cfg.name);
+        let mut rng = Rng::new(opts.seed ^ 0x7ea1_9a9e);
+        let n = cfg.n_params;
+        let (mut m, mut v) = adam.unwrap_or((vec![0.0; n], vec![0.0; n]));
+        let mut p = params.data;
+        let mut losses = Vec::new();
+        let t0 = Instant::now();
+
+        for s in 1..=opts.steps {
+            let step = start_step + s as u64;
+            let toks = data.train_batch(&mut rng, cfg.train_batch, cfg.seq)?;
+            let lr = opts.lr_at(s) as f32;
+            let out = self
+                .rt
+                .run(
+                    &artifact,
+                    &[
+                        ArgValue::F32(&p),
+                        ArgValue::F32(&m),
+                        ArgValue::F32(&v),
+                        ArgValue::Scalar(step as f32),
+                        ArgValue::Scalar(lr),
+                        ArgValue::I32(&toks),
+                    ],
+                )
+                .with_context(|| format!("train step {step}"))?;
+            let mut it = out.into_iter();
+            p = it.next().unwrap().into_data();
+            m = it.next().unwrap().into_data();
+            v = it.next().unwrap().into_data();
+            let loss = it.next().unwrap().data()[0] as f64;
+            if s % opts.log_every == 0 || s == 1 || s == opts.steps {
+                let dt = t0.elapsed().as_secs_f64();
+                println!(
+                    "[train {}] step {step} loss {loss:.4} lr {lr:.2e} ({:.2} s/step)",
+                    cfg.name,
+                    dt / s as f64
+                );
+                losses.push((step as usize, loss));
+            }
+            if opts.checkpoint_every > 0 && s % opts.checkpoint_every == 0 {
+                if let Some(dir) = &opts.out {
+                    self.save(dir, &cfg.name, step, &p, &m, &v)?;
+                }
+            }
+        }
+        let final_step = start_step + opts.steps as u64;
+        if let Some(dir) = &opts.out {
+            self.save(dir, &cfg.name, final_step, &p, &m, &v)?;
+        }
+        Ok(TrainOutcome {
+            params: FlatParams::new(&cfg, p)?,
+            adam: (m, v),
+            losses,
+            final_step,
+            secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn save(
+        &self,
+        dir: &PathBuf,
+        name: &str,
+        step: u64,
+        p: &[f32],
+        m: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        let ck = Checkpoint {
+            config_name: name.to_string(),
+            step,
+            params: p.to_vec(),
+            adam: Some((m.to_vec(), v.to_vec())),
+        };
+        let path = Checkpoint::path_for(dir, name, "");
+        ck.save(&path)?;
+        println!("[train {name}] checkpoint -> {path:?} (step {step})");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let o = TrainOptions { warmup: 10, steps: 100, base_lr: 1e-3, min_lr_frac: 0.1, seed: 0, log_every: 1, checkpoint_every: 0, out: None };
+        assert!(o.lr_at(1) < o.lr_at(10));
+        assert!((o.lr_at(10) - 1e-3).abs() < 1e-12);
+        assert!(o.lr_at(50) < 1e-3);
+        assert!(o.lr_at(100) >= 1e-4 - 1e-12);
+        assert!(o.lr_at(100) < o.lr_at(50));
+    }
+
+    #[test]
+    fn defaults_scale_with_config() {
+        assert!(TrainOptions::for_config("nano", 100).base_lr > TrainOptions::for_config("medium", 100).base_lr);
+    }
+}

@@ -1,0 +1,286 @@
+//! Synthetic corpus generators.
+//!
+//! The paper calibrates on C4 and evaluates on raw-WikiText2, PTB and a C4
+//! validation subset. Offline, we build three corpora with *distinct
+//! distributions over a shared lexicon* so that (a) pruning calibration
+//! never sees eval-distribution text (the paper's zero-shot property), and
+//! (b) one BPE tokenizer covers all of them:
+//!
+//!   * `C4`  — mixed web-ish templates, varied punctuation and lengths
+//!             (calibration + validation)
+//!   * `Wiki` — encyclopedic templates with headings and definition forms
+//!   * `Ptb` — newswire-ish, lowercase, no punctuation (the paper notes PTB
+//!             is punctuation-free and concatenates without separators)
+//!
+//! Text is generated from a topic-Markov PCFG over an invented syllabic
+//! lexicon: function-word syntax gives local structure, topic chains give
+//! longer-range structure — enough signal that a small trained transformer
+//! has meaningfully low perplexity, which is what layer-wise pruning needs
+//! (activations with real correlational structure, i.e. non-trivial
+//! Hessians with outlier directions).
+
+use crate::util::prng::Rng;
+
+pub const N_TOPICS: usize = 8;
+const NOUNS_PER_TOPIC: usize = 24;
+const VERBS_PER_TOPIC: usize = 12;
+const ADJS_PER_TOPIC: usize = 12;
+const SHARED_NOUNS: usize = 40;
+const SHARED_VERBS: usize = 24;
+const SHARED_ADJS: usize = 20;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusStyle {
+    C4,
+    Wiki,
+    Ptb,
+}
+
+impl CorpusStyle {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusStyle::C4 => "synth-c4",
+            CorpusStyle::Wiki => "synth-wiki",
+            CorpusStyle::Ptb => "synth-ptb",
+        }
+    }
+
+    pub fn all() -> [CorpusStyle; 3] {
+        [CorpusStyle::C4, CorpusStyle::Wiki, CorpusStyle::Ptb]
+    }
+}
+
+/// The shared invented vocabulary, organized by part of speech and topic.
+#[derive(Clone, Debug)]
+pub struct Lexicon {
+    pub topic_nouns: Vec<Vec<String>>,
+    pub topic_verbs: Vec<Vec<String>>,
+    pub topic_adjs: Vec<Vec<String>>,
+    pub shared_nouns: Vec<String>,
+    pub shared_verbs: Vec<String>,
+    pub shared_adjs: Vec<String>,
+    pub names: Vec<String>,
+}
+
+fn make_word(rng: &mut Rng, syllables: usize) -> String {
+    const ONSETS: [&str; 16] = [
+        "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "st", "br",
+    ];
+    const VOWELS: [&str; 8] = ["a", "e", "i", "o", "u", "ai", "ea", "ou"];
+    const CODAS: [&str; 8] = ["", "", "n", "r", "s", "l", "m", "k"];
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push_str(ONSETS[rng.below(ONSETS.len())]);
+        w.push_str(VOWELS[rng.below(VOWELS.len())]);
+        w.push_str(CODAS[rng.below(CODAS.len())]);
+    }
+    w
+}
+
+fn make_words(rng: &mut Rng, n: usize, syllables: std::ops::Range<usize>) -> Vec<String> {
+    let mut out = Vec::with_capacity(n);
+    let mut seen = std::collections::HashSet::new();
+    while out.len() < n {
+        let s = syllables.start + rng.below(syllables.end - syllables.start);
+        let w = make_word(rng, s);
+        if seen.insert(w.clone()) {
+            out.push(w);
+        }
+    }
+    out
+}
+
+impl Lexicon {
+    /// Deterministic lexicon; all corpora and tasks share it.
+    pub fn new(seed: u64) -> Lexicon {
+        let mut rng = Rng::new(seed ^ 0x1e_c0de);
+        Lexicon {
+            topic_nouns: (0..N_TOPICS)
+                .map(|_| make_words(&mut rng, NOUNS_PER_TOPIC, 2..4))
+                .collect(),
+            topic_verbs: (0..N_TOPICS)
+                .map(|_| make_words(&mut rng, VERBS_PER_TOPIC, 2..3))
+                .collect(),
+            topic_adjs: (0..N_TOPICS)
+                .map(|_| make_words(&mut rng, ADJS_PER_TOPIC, 2..3))
+                .collect(),
+            shared_nouns: make_words(&mut rng, SHARED_NOUNS, 1..3),
+            shared_verbs: make_words(&mut rng, SHARED_VERBS, 1..3),
+            shared_adjs: make_words(&mut rng, SHARED_ADJS, 1..3),
+            names: make_words(&mut rng, 30, 2..4)
+                .into_iter()
+                .map(|w| {
+                    let mut c = w.chars();
+                    c.next().map(|f| f.to_uppercase().collect::<String>() + c.as_str()).unwrap()
+                })
+                .collect(),
+        }
+    }
+
+    /// Zipf-ish sample from a topic-biased word class: with prob `bias`
+    /// draw a topic word, otherwise a shared word; rank-weighted.
+    fn sample<'a>(
+        &'a self,
+        rng: &mut Rng,
+        topic_list: &'a [Vec<String>],
+        shared: &'a [String],
+        topic: usize,
+        bias: f64,
+    ) -> &'a str {
+        let list: &[String] =
+            if rng.f64() < bias { &topic_list[topic] } else { shared };
+        // Zipf over ranks
+        let weights: Vec<f64> = (0..list.len()).map(|i| 1.0 / (i + 1) as f64).collect();
+        &list[rng.weighted(&weights)]
+    }
+
+    pub fn noun(&self, rng: &mut Rng, topic: usize, bias: f64) -> &str {
+        self.sample(rng, &self.topic_nouns, &self.shared_nouns, topic, bias)
+    }
+
+    pub fn verb(&self, rng: &mut Rng, topic: usize, bias: f64) -> &str {
+        self.sample(rng, &self.topic_verbs, &self.shared_verbs, topic, bias)
+    }
+
+    pub fn adj(&self, rng: &mut Rng, topic: usize, bias: f64) -> &str {
+        self.sample(rng, &self.topic_adjs, &self.shared_adjs, topic, bias)
+    }
+
+    pub fn name(&self, rng: &mut Rng) -> &str {
+        self.names[rng.below(self.names.len())].as_str()
+    }
+}
+
+/// One generated sentence + the topic it was drawn from (tasks need this).
+pub struct Sentence {
+    pub text: String,
+    pub topic: usize,
+    /// the final content word (the cloze target for the lambada-like task)
+    pub final_word: String,
+}
+
+pub fn gen_sentence(lex: &Lexicon, rng: &mut Rng, topic: usize, style: CorpusStyle) -> Sentence {
+    let bias = 0.75;
+    let n1 = lex.noun(rng, topic, bias).to_string();
+    let v = lex.verb(rng, topic, bias).to_string();
+    let a = lex.adj(rng, topic, bias).to_string();
+    let n2 = lex.noun(rng, topic, bias).to_string();
+    let nm = lex.name(rng).to_string();
+    let template = rng.below(6);
+    let (text, final_word) = match (style, template) {
+        (CorpusStyle::Wiki, 0) => (format!("the {n1} of {n2} is a {a} {n1}"), n1.clone()),
+        (CorpusStyle::Wiki, 1) => (format!("{nm} is known as the {n1} that {v} the {n2}"), n2.clone()),
+        (CorpusStyle::Wiki, 2) => (format!("in the {n1} , the {a} {n2} {v}"), v.clone()),
+        (CorpusStyle::Ptb, 0) => (format!("the {a} {n1} {v} the {n2}"), n2.clone()),
+        (CorpusStyle::Ptb, 1) => (format!("{n1} and {n2} {v} in the {a} {n1}"), n1.clone()),
+        (_, 0) => (format!("the {n1} {v} a {a} {n2}"), n2.clone()),
+        (_, 1) => (format!("{nm} {v} the {n2} near the {a} {n1}"), n1.clone()),
+        (_, 2) => (format!("a {a} {n1} always {v} the {n2}"), n2.clone()),
+        (_, 3) => (format!("when the {n1} {v} , the {n2} is {a}"), a.clone()),
+        (_, 4) => (format!("every {n2} in the {n1} {v}"), v.clone()),
+        _ => (format!("the {n2} of the {a} {n1} {v}"), v.clone()),
+    };
+    // PTB is punctuation-free (the paper's preprocessing note)
+    let text = if style == CorpusStyle::Ptb { text.replace(" ,", "") } else { text };
+    Sentence { text, topic, final_word }
+}
+
+/// Generate a corpus of roughly `target_bytes` characters.
+pub fn gen_corpus(lex: &Lexicon, style: CorpusStyle, seed: u64, target_bytes: usize) -> String {
+    let mut rng = Rng::new(seed ^ 0xc0_4955 ^ style.name().len() as u64);
+    let mut out = String::with_capacity(target_bytes + 4096);
+    let mut topic = rng.below(N_TOPICS);
+    while out.len() < target_bytes {
+        // topic Markov chain: stay with prob .7
+        if rng.f64() > 0.7 {
+            topic = rng.below(N_TOPICS);
+        }
+        let n_sent = 3 + rng.below(9);
+        match style {
+            CorpusStyle::Wiki => {
+                out.push_str(&format!("= {} =\n", lex.noun(&mut rng, topic, 0.9)));
+                for _ in 0..n_sent {
+                    let s = gen_sentence(lex, &mut rng, topic, style);
+                    out.push_str(&s.text);
+                    out.push_str(" . ");
+                }
+                out.push_str("\n\n");
+            }
+            CorpusStyle::Ptb => {
+                // no punctuation, lowercase, direct concatenation
+                for _ in 0..n_sent {
+                    let s = gen_sentence(lex, &mut rng, topic, style);
+                    out.push_str(&s.text.to_lowercase());
+                    out.push(' ');
+                }
+                out.push('\n');
+            }
+            CorpusStyle::C4 => {
+                for _ in 0..n_sent {
+                    let s = gen_sentence(lex, &mut rng, topic, style);
+                    out.push_str(&s.text);
+                    match rng.below(4) {
+                        0 => out.push_str(". "),
+                        1 => out.push_str(" . "),
+                        2 => out.push_str(", "),
+                        _ => out.push_str(". "),
+                    }
+                }
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexicon_deterministic_and_disjoint_classes() {
+        let a = Lexicon::new(1);
+        let b = Lexicon::new(1);
+        assert_eq!(a.topic_nouns, b.topic_nouns);
+        assert_eq!(a.shared_verbs, b.shared_verbs);
+        let c = Lexicon::new(2);
+        assert_ne!(a.topic_nouns, c.topic_nouns);
+    }
+
+    #[test]
+    fn corpora_have_distinct_styles() {
+        let lex = Lexicon::new(0);
+        let c4 = gen_corpus(&lex, CorpusStyle::C4, 0, 20_000);
+        let wiki = gen_corpus(&lex, CorpusStyle::Wiki, 0, 20_000);
+        let ptb = gen_corpus(&lex, CorpusStyle::Ptb, 0, 20_000);
+        assert!(c4.len() >= 20_000);
+        assert!(wiki.contains("= "));
+        assert!(!ptb.contains('.') && !ptb.contains(','));
+        assert_ne!(&c4[..1000], &wiki[..1000]);
+    }
+
+    #[test]
+    fn sentences_expose_cloze_targets() {
+        let lex = Lexicon::new(3);
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let s = gen_sentence(&lex, &mut rng, 2, CorpusStyle::C4);
+            assert!(s.text.contains(&s.final_word));
+            // final content word really is at the end of the sentence
+            assert!(s.text.trim_end().ends_with(&s.final_word));
+        }
+    }
+
+    #[test]
+    fn corpus_deterministic() {
+        let lex = Lexicon::new(0);
+        assert_eq!(
+            gen_corpus(&lex, CorpusStyle::C4, 7, 5_000),
+            gen_corpus(&lex, CorpusStyle::C4, 7, 5_000)
+        );
+        assert_ne!(
+            gen_corpus(&lex, CorpusStyle::C4, 7, 5_000),
+            gen_corpus(&lex, CorpusStyle::C4, 8, 5_000)
+        );
+    }
+}

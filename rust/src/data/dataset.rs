@@ -1,0 +1,169 @@
+//! Tokenized datasets: training batches (random windows), evaluation
+//! segments (the HuggingFace full-stride procedure: concatenate, split into
+//! non-overlapping seq-length pieces) and calibration sampling (the paper's
+//! "random segments from the first shard of C4").
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::tokenizer::Tokenizer;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub tokens: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn from_text(name: &str, tok: &Tokenizer, text: &str) -> Dataset {
+        Dataset { name: name.to_string(), tokens: tok.encode(text) }
+    }
+
+    pub fn load_tokens(name: &str, path: impl AsRef<Path>) -> Result<Dataset> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading token file {:?}", path.as_ref()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("token file length not a multiple of 4");
+        }
+        let tokens = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Dataset { name: name.to_string(), tokens })
+    }
+
+    pub fn save_tokens(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut bytes = Vec::with_capacity(self.tokens.len() * 4);
+        for t in &self.tokens {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// One training batch: `batch` random windows of `seq + 1` tokens,
+    /// flattened row-major (what `train_step_<cfg>` consumes).
+    pub fn train_batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> Result<Vec<i32>> {
+        let win = seq + 1;
+        if self.tokens.len() < win {
+            bail!("dataset {} too small for seq {}", self.name, seq);
+        }
+        let mut out = Vec::with_capacity(batch * win);
+        for _ in 0..batch {
+            let start = rng.below(self.tokens.len() - win + 1);
+            out.extend_from_slice(&self.tokens[start..start + win]);
+        }
+        Ok(out)
+    }
+
+    /// Non-overlapping evaluation segments of `seq + 1` tokens (stride =
+    /// seq, so each target token is scored exactly once), as rows.
+    pub fn eval_segments(&self, seq: usize, max_segments: usize) -> Vec<Vec<i32>> {
+        let win = seq + 1;
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start + win <= self.tokens.len() && out.len() < max_segments {
+            out.push(self.tokens[start..start + win].to_vec());
+            start += seq; // stride seq: segment k starts where k-1's targets ended
+        }
+        out
+    }
+
+    /// Calibration segments: `n` random `seq`-token windows (no targets
+    /// needed — the solver only consumes activations).
+    pub fn calibration_segments(&self, rng: &mut Rng, n: usize, seq: usize) -> Result<Vec<Vec<i32>>> {
+        if self.tokens.len() < seq {
+            bail!("dataset {} too small for calibration", self.name);
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let start = rng.below(self.tokens.len() - seq + 1);
+            out.push(self.tokens[start..start + seq].to_vec());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{gen_corpus, CorpusStyle, Lexicon};
+
+    fn dataset() -> Dataset {
+        let lex = Lexicon::new(0);
+        let text = gen_corpus(&lex, CorpusStyle::C4, 1, 40_000);
+        let tok = Tokenizer::train(&text[..20_000]);
+        Dataset::from_text("t", &tok, &text)
+    }
+
+    #[test]
+    fn train_batch_shapes_and_determinism() {
+        let ds = dataset();
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let b1 = ds.train_batch(&mut r1, 4, 128).unwrap();
+        let b2 = ds.train_batch(&mut r2, 4, 128).unwrap();
+        assert_eq!(b1.len(), 4 * 129);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn eval_segments_stride_and_coverage() {
+        let ds = dataset();
+        let segs = ds.eval_segments(128, usize::MAX);
+        assert!(!segs.is_empty());
+        for w in segs.windows(2) {
+            // consecutive segments overlap by exactly 1 token (context carry)
+            assert_eq!(w[0][128], w[1][0]);
+        }
+        // each target position scored once: total targets == seq * n_segs
+        let covered = segs.len() * 128;
+        assert!(covered <= ds.len());
+        assert!(covered + 129 + 128 > ds.len() - 1);
+    }
+
+    #[test]
+    fn calibration_segments_in_range() {
+        let ds = dataset();
+        let mut rng = Rng::new(9);
+        let segs = ds.calibration_segments(&mut rng, 16, 128).unwrap();
+        assert_eq!(segs.len(), 16);
+        for s in &segs {
+            assert_eq!(s.len(), 128);
+            assert!(s.iter().all(|&t| t >= 0 && (t as usize) < 512));
+        }
+    }
+
+    #[test]
+    fn token_file_roundtrip() {
+        let ds = dataset();
+        let dir = std::env::temp_dir().join(format!("sgpt_ds_{}", std::process::id()));
+        let path = dir.join("t.tokens");
+        ds.save_tokens(&path).unwrap();
+        let back = Dataset::load_tokens("t", &path).unwrap();
+        assert_eq!(ds.tokens, back.tokens);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn too_small_dataset_errors() {
+        let ds = Dataset { name: "x".into(), tokens: vec![1, 2, 3] };
+        let mut rng = Rng::new(0);
+        assert!(ds.train_batch(&mut rng, 1, 128).is_err());
+        assert!(ds.calibration_segments(&mut rng, 1, 128).is_err());
+    }
+}

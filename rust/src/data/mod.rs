@@ -1,0 +1,11 @@
+//! Data substrate: synthetic corpora (the offline stand-ins for C4,
+//! WikiText2 and PTB), a byte-level BPE tokenizer, and tokenized datasets
+//! with training / evaluation / calibration samplers.
+
+pub mod corpus;
+pub mod dataset;
+pub mod tokenizer;
+
+pub use corpus::{CorpusStyle, Lexicon};
+pub use dataset::Dataset;
+pub use tokenizer::Tokenizer;

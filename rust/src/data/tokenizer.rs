@@ -1,0 +1,255 @@
+//! Byte-level BPE tokenizer (vocab 512 = 256 byte tokens + 256 merges).
+//!
+//! Trained once on the calibration corpus, shared by all corpora and tasks.
+//! Words (whitespace-split chunks, with the leading space attached GPT-2
+//! style) are encoded independently with a per-word memo, which makes
+//! encoding large corpora fast enough for this substrate.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const VOCAB_SIZE: usize = 512;
+const N_MERGES: usize = VOCAB_SIZE - 256;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// merge list in rank order: (left, right) -> new token id 256 + rank
+    pub merges: Vec<(u32, u32)>,
+    rank: HashMap<(u32, u32), u32>,
+}
+
+impl Tokenizer {
+    /// Train BPE merges on `text` (standard pair-frequency greedy merging
+    /// over word chunks).
+    pub fn train(text: &str) -> Tokenizer {
+        // chunk -> count, each chunk as byte tokens
+        let mut chunks: HashMap<Vec<u32>, usize> = HashMap::new();
+        for word in split_chunks(text) {
+            *chunks.entry(word.bytes().map(|b| b as u32).collect()).or_insert(0) += 1;
+        }
+        let mut merges = Vec::with_capacity(N_MERGES);
+        let mut rank = HashMap::new();
+        for m in 0..N_MERGES {
+            let mut pair_counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (toks, &count) in &chunks {
+                for w in toks.windows(2) {
+                    *pair_counts.entry((w[0], w[1])).or_insert(0) += count;
+                }
+            }
+            // deterministic argmax: highest count, ties broken by pair value
+            let Some((&best, _)) = pair_counts
+                .iter()
+                .max_by_key(|(pair, &count)| (count, std::cmp::Reverse(**pair)))
+            else {
+                break;
+            };
+            if pair_counts[&best] < 2 {
+                break;
+            }
+            let new_id = 256 + m as u32;
+            merges.push(best);
+            rank.insert(best, new_id);
+            // apply the merge to every chunk
+            let old: Vec<(Vec<u32>, usize)> = chunks.drain().collect();
+            for (toks, count) in old {
+                let merged = apply_merge(&toks, best, new_id);
+                *chunks.entry(merged).or_insert(0) += count;
+            }
+        }
+        Tokenizer { merges, rank }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Encode text to token ids.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut memo: HashMap<&str, Vec<i32>> = HashMap::new();
+        let mut out = Vec::with_capacity(text.len() / 3);
+        for word in split_chunks(text) {
+            if let Some(toks) = memo.get(word) {
+                out.extend_from_slice(toks);
+                continue;
+            }
+            let toks = self.encode_chunk(word);
+            out.extend_from_slice(&toks);
+            memo.insert(word, toks);
+        }
+        out
+    }
+
+    fn encode_chunk(&self, chunk: &str) -> Vec<i32> {
+        let mut toks: Vec<u32> = chunk.bytes().map(|b| b as u32).collect();
+        loop {
+            // find the lowest-rank applicable merge
+            let mut best: Option<(u32, usize)> = None; // (new_id, pos)
+            for (i, w) in toks.windows(2).enumerate() {
+                if let Some(&id) = self.rank.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(b, _)| id < b) {
+                        best = Some((id, i));
+                    }
+                }
+            }
+            let Some((id, _)) = best else { break };
+            let pair = self.merges[(id - 256) as usize];
+            toks = apply_merge(&toks, pair, id);
+        }
+        toks.into_iter().map(|t| t as i32).collect()
+    }
+
+    /// Decode token ids back to text (lossless byte-level round-trip).
+    pub fn decode(&self, toks: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(toks.len() * 2);
+        for &t in toks {
+            self.push_bytes(t as u32, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn push_bytes(&self, t: u32, out: &mut Vec<u8>) {
+        if t < 256 {
+            out.push(t as u8);
+        } else {
+            let (l, r) = self.merges[(t - 256) as usize];
+            self.push_bytes(l, out);
+            self.push_bytes(r, out);
+        }
+    }
+
+    // ---- persistence -------------------------------------------------------
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "sgpt-bpe-v1 {}", self.merges.len())?;
+        for (l, r) in &self.merges {
+            writeln!(f, "{l} {r}")?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Tokenizer> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading tokenizer {:?}", path.as_ref()))?;
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or_default();
+        let mut hp = header.split_whitespace();
+        if hp.next() != Some("sgpt-bpe-v1") {
+            bail!("bad tokenizer header {header:?}");
+        }
+        let n: usize = hp.next().unwrap_or("0").parse()?;
+        let mut merges = Vec::with_capacity(n);
+        let mut rank = HashMap::new();
+        for (i, line) in lines.enumerate() {
+            let mut it = line.split_whitespace();
+            let l: u32 = it.next().context("merge line")?.parse()?;
+            let r: u32 = it.next().context("merge line")?.parse()?;
+            merges.push((l, r));
+            rank.insert((l, r), 256 + i as u32);
+        }
+        if merges.len() != n {
+            bail!("tokenizer truncated: header says {n}, found {}", merges.len());
+        }
+        Ok(Tokenizer { merges, rank })
+    }
+}
+
+fn apply_merge(toks: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0;
+    while i < toks.len() {
+        if i + 1 < toks.len() && toks[i] == pair.0 && toks[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(toks[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// GPT-2-style chunks: a word plus its leading whitespace.
+fn split_chunks(text: &str) -> impl Iterator<Item = &str> {
+    let bytes = text.as_bytes();
+    let mut pos = 0;
+    std::iter::from_fn(move || {
+        if pos >= bytes.len() {
+            return None;
+        }
+        let start = pos;
+        // leading whitespace run
+        while pos < bytes.len() && bytes[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        // word run
+        while pos < bytes.len() && !bytes[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        Some(unsafe { std::str::from_utf8_unchecked(&bytes[start..pos]) })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{gen_corpus, CorpusStyle, Lexicon};
+
+    fn sample_text() -> String {
+        let lex = Lexicon::new(0);
+        gen_corpus(&lex, CorpusStyle::C4, 0, 50_000)
+    }
+
+    #[test]
+    fn roundtrip_lossless() {
+        let text = sample_text();
+        let tok = Tokenizer::train(&text[..30_000]);
+        assert!(tok.vocab_size() > 300, "{}", tok.vocab_size());
+        let enc = tok.encode(&text[..5_000]);
+        assert_eq!(tok.decode(&enc), &text[..5_000]);
+    }
+
+    #[test]
+    fn compresses_in_domain_text() {
+        let text = sample_text();
+        let tok = Tokenizer::train(&text[..30_000]);
+        let enc = tok.encode(&text[30_000..40_000]);
+        let ratio = 10_000.0 / enc.len() as f64;
+        assert!(ratio > 2.0, "compression ratio {ratio}");
+    }
+
+    #[test]
+    fn handles_unseen_bytes() {
+        let tok = Tokenizer::train("aa bb aa bb");
+        let enc = tok.encode("zq \u{00e9}!");
+        assert_eq!(tok.decode(&enc), "zq \u{00e9}!");
+    }
+
+    #[test]
+    fn save_load_identical() {
+        let text = sample_text();
+        let tok = Tokenizer::train(&text[..20_000]);
+        let dir = std::env::temp_dir().join(format!("sgpt_tok_{}", std::process::id()));
+        let path = dir.join("tok.txt");
+        tok.save(&path).unwrap();
+        let tok2 = Tokenizer::load(&path).unwrap();
+        assert_eq!(tok.merges, tok2.merges);
+        assert_eq!(tok.encode(&text[..2000]), tok2.encode(&text[..2000]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn all_ids_in_vocab_range() {
+        let text = sample_text();
+        let tok = Tokenizer::train(&text[..20_000]);
+        for &t in &tok.encode(&text[..5000]) {
+            assert!((t as usize) < VOCAB_SIZE);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation harness: strided perplexity (the HuggingFace procedure the
+//! paper follows) and the zero-shot multiple-choice suite (the offline
+//! analogs of Lambada / PIQA / ARC-e / ARC-c / StoryCloze).
+
+pub mod generate;
+pub mod perplexity;
+pub mod report;
+pub mod zeroshot;
+
+pub use perplexity::{perplexity, Ppl};
+pub use zeroshot::{zero_shot_accuracy, ZeroShotTask};

@@ -1,0 +1,50 @@
+//! Perplexity, computed exactly as the paper describes (App. B /
+//! HuggingFace): concatenate the test set, split into non-overlapping
+//! context-length segments, sum token NLLs, exponentiate the mean.
+
+use anyhow::{Context, Result};
+
+use crate::data::Dataset;
+use crate::model::layout::FlatParams;
+use crate::runtime::{ArgValue, Runtime};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Ppl {
+    pub ppl: f64,
+    pub nll_sum: f64,
+    pub tokens: usize,
+}
+
+/// Evaluate perplexity of `params` on `ds` over at most `max_segments`
+/// non-overlapping segments (usize::MAX = the whole set).
+pub fn perplexity(
+    rt: &Runtime,
+    params: &FlatParams,
+    ds: &Dataset,
+    max_segments: usize,
+) -> Result<Ppl> {
+    let cfg = &params.cfg;
+    let segs = ds.eval_segments(cfg.seq, max_segments);
+    let artifact = format!("nll_{}", cfg.name);
+    // marshal the parameter vector once for the whole evaluation
+    let plit = rt.cache_f32(&params.data, &[cfg.n_params])?;
+    let mut nll_sum = 0.0f64;
+    let mut tokens = 0usize;
+    let row = cfg.seq + 1;
+    for group in segs.chunks(cfg.eval_batch) {
+        let mut toks = Vec::with_capacity(cfg.eval_batch * row);
+        for s in group {
+            toks.extend_from_slice(s);
+        }
+        toks.resize(cfg.eval_batch * row, 0); // pad rows are discarded below
+        let out = rt
+            .run(&artifact, &[ArgValue::Cached(&plit), ArgValue::I32(&toks)])
+            .with_context(|| format!("nll eval on {}", ds.name))?;
+        let nll = &out[0];
+        for (r, _s) in group.iter().enumerate() {
+            nll_sum += nll.row(r).iter().map(|&x| x as f64).sum::<f64>();
+            tokens += cfg.seq;
+        }
+    }
+    Ok(Ppl { ppl: (nll_sum / tokens.max(1) as f64).exp(), nll_sum, tokens })
+}

@@ -1,0 +1,138 @@
+//! Workspace conventions shared by the CLI, examples and benches: where
+//! data, tokenizer, checkpoints and reports live, and how to load them.
+//!
+//! Layout:
+//!   data/tokenizer.txt            BPE merges
+//!   data/<corpus>-<split>.tokens  tokenized corpora (i32 LE)
+//!   checkpoints/<config>.ckpt     trained models
+//!   reports/                      bench outputs (txt + csv + jsonl)
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::CalibChunks;
+use crate::data::corpus::{gen_corpus, CorpusStyle, Lexicon};
+use crate::data::{Dataset, Tokenizer};
+use crate::model::checkpoint::Checkpoint;
+use crate::model::layout::FlatParams;
+use crate::model::ModelCfg;
+use crate::runtime::Runtime;
+use crate::util::prng::Rng;
+
+pub const CALIB_SET: &str = "synth-c4-train";
+pub const EVAL_SETS: [&str; 3] = ["synth-wiki", "synth-ptb", "synth-c4-val"];
+/// paper default: 128 calibration segments
+pub const DEFAULT_CALIB_SEGMENTS: usize = 128;
+
+pub struct Workspace {
+    pub data_dir: PathBuf,
+    pub ckpt_dir: PathBuf,
+    pub report_dir: PathBuf,
+    pub rt: Runtime,
+}
+
+impl Workspace {
+    /// Open with defaults (`data/`, `checkpoints/`, `reports/`, `artifacts/`),
+    /// overridable via SPARSEGPT_{DATA,CKPT,REPORTS,ARTIFACTS}.
+    pub fn open() -> Result<Workspace> {
+        let env = |k: &str, d: &str| {
+            std::env::var_os(k).map(PathBuf::from).unwrap_or_else(|| PathBuf::from(d))
+        };
+        Ok(Workspace {
+            data_dir: env("SPARSEGPT_DATA", "data"),
+            ckpt_dir: env("SPARSEGPT_CKPT", "checkpoints"),
+            report_dir: env("SPARSEGPT_REPORTS", "reports"),
+            rt: Runtime::new()?,
+        })
+    }
+
+    pub fn tokenizer(&self) -> Result<Tokenizer> {
+        Tokenizer::load(self.data_dir.join("tokenizer.txt"))
+            .context("loading tokenizer — run `sparsegpt gen-data` first")
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<Dataset> {
+        Dataset::load_tokens(name, self.data_dir.join(format!("{name}.tokens")))
+            .with_context(|| format!("loading dataset {name} — run `sparsegpt gen-data` first"))
+    }
+
+    pub fn eval_datasets(&self) -> Result<BTreeMap<String, Dataset>> {
+        EVAL_SETS
+            .iter()
+            .map(|n| Ok((n.to_string(), self.dataset(n)?)))
+            .collect()
+    }
+
+    pub fn config(&self, name: &str) -> Result<ModelCfg> {
+        Ok(self.rt.manifest.config(name)?.clone())
+    }
+
+    pub fn load_model(&self, config: &str) -> Result<FlatParams> {
+        let cfg = self.config(config)?;
+        let path = Checkpoint::path_for(&self.ckpt_dir, config, "");
+        Checkpoint::load(&path)
+            .with_context(|| format!("run `sparsegpt train --config {config}` first"))?
+            .into_flat_params(&cfg)
+    }
+
+    /// Calibration chunks per the paper's recipe: `n` random segments from
+    /// the (training-distribution) calibration corpus.
+    pub fn calib_chunks(&self, cfg: &ModelCfg, n: usize, seed: u64) -> Result<CalibChunks> {
+        let ds = self.dataset(CALIB_SET)?;
+        let mut rng = Rng::new(seed ^ 0xca11b);
+        let segs = ds.calibration_segments(&mut rng, n, cfg.seq)?;
+        CalibChunks::new(cfg, &segs)
+    }
+}
+
+/// Generate corpora + tokenizer + tokenized datasets into `out`.
+pub fn generate_data(out: impl AsRef<Path>, seed: u64, train_mb: usize) -> Result<()> {
+    let out = out.as_ref();
+    std::fs::create_dir_all(out)?;
+    let lex = Lexicon::new(seed);
+
+    let specs: Vec<(&str, CorpusStyle, u64, usize)> = vec![
+        ("synth-c4-train", CorpusStyle::C4, seed ^ 1, train_mb * 1_000_000),
+        ("synth-c4-val", CorpusStyle::C4, seed ^ 2, 300_000),
+        ("synth-wiki", CorpusStyle::Wiki, seed ^ 3, 300_000),
+        ("synth-ptb", CorpusStyle::Ptb, seed ^ 4, 300_000),
+    ];
+    let mut texts = Vec::new();
+    for (name, style, s, bytes) in &specs {
+        let t = gen_corpus(&lex, *style, *s, (*bytes).max(100_000));
+        println!("[gen-data] {name}: {} chars", t.len());
+        texts.push((name.to_string(), t));
+    }
+
+    // train the tokenizer on a slice of the calibration corpus only
+    let train_text = &texts[0].1;
+    let tok = Tokenizer::train(&train_text[..train_text.len().min(400_000)]);
+    tok.save(out.join("tokenizer.txt"))?;
+    println!("[gen-data] tokenizer: {} merges", tok.merges.len());
+
+    for (name, text) in &texts {
+        let ds = Dataset::from_text(name, &tok, text);
+        println!("[gen-data] {name}: {} tokens", ds.len());
+        ds.save_tokens(out.join(format!("{name}.tokens")))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_data_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sgpt_ws_{}", std::process::id()));
+        generate_data(&dir, 1, 0).unwrap(); // 0 MB -> minimum-size corpora
+        assert!(dir.join("tokenizer.txt").exists());
+        for n in ["synth-c4-train", "synth-c4-val", "synth-wiki", "synth-ptb"] {
+            let ds = Dataset::load_tokens(n, dir.join(format!("{n}.tokens"))).unwrap();
+            assert!(!ds.is_empty(), "{n}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

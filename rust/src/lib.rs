@@ -1,0 +1,28 @@
+//! # sparsegpt — a reproduction of *SparseGPT: Massive Language Models Can
+//! be Accurately Pruned in One-Shot* (Frantar & Alistarh, ICML 2023)
+//!
+//! Three-layer architecture (Python never on the request path):
+//!   * **L1** Pallas kernels (Algorithm 1 column sweep, Hessian accumulation)
+//!   * **L2** JAX graphs (model fwd/bwd, layer solver, blocked linalg),
+//!     AOT-lowered to HLO-text artifacts by `make artifacts`
+//!   * **L3** this crate: the compression pipeline coordinator, every
+//!     substrate the paper's evaluation needs (synthetic corpora, BPE
+//!     tokenizer, trainer, perplexity/zero-shot eval, sparse inference
+//!     engine, baselines) and the PJRT runtime that loads + executes the
+//!     artifacts.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod harness;
+pub mod model;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,314 @@
+//! `sparsegpt` — launcher for the SparseGPT reproduction pipeline.
+//!
+//! Subcommands:
+//!   gen-data   generate synthetic corpora + train the BPE tokenizer
+//!   train      pretrain a model config (train_step artifact loop)
+//!   prune      one-shot compress a trained model (SparseGPT / baselines)
+//!   eval       perplexity on the three eval corpora
+//!   zeroshot   the five zero-shot tasks
+//!   stats      sparsity statistics of a checkpoint
+//!   e2e        train -> prune -> eval in one run (see examples/ too)
+
+use anyhow::{bail, Context, Result};
+
+use sparsegpt::cli::{parse_nm, Args};
+use sparsegpt::coordinator::{
+    PruneMethod, PruneOptions, Pruner, SkipSpec, TrainOptions, Trainer,
+};
+use sparsegpt::data::corpus::Lexicon;
+use sparsegpt::eval::perplexity;
+use sparsegpt::eval::report::{fmt_ppl, Table};
+use sparsegpt::eval::zeroshot::{gen_items, zero_shot_accuracy, ZeroShotTask};
+use sparsegpt::harness::{generate_data, Workspace, DEFAULT_CALIB_SEGMENTS};
+use sparsegpt::model::checkpoint::Checkpoint;
+use sparsegpt::model::init::init_params;
+use sparsegpt::model::stats::ModelStats;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+const USAGE: &str = "\
+sparsegpt <command> [flags]
+
+commands:
+  gen-data  --out data [--seed 0] [--train-mb 4]
+  train     --config <cfg> [--steps 400] [--out checkpoints]
+            [--seed 0] [--resume] [--lr <f>] [--log-every 20]
+  prune     --config <cfg> [--method sparsegpt|magnitude|adaprune]
+            [--sparsity 0.5 | --nm 2:4] [--quant-bits 4] [--damp 0.01]
+            [--calib 128] [--calib-seed 0] [--skip attn|fc1|fc2|front|middle|back]
+            [--prefix-frac 0.66] [--out <ckpt>] [--suffix -50]
+  eval      --config <cfg> [--ckpt <path>] [--max-segments 512]
+  zeroshot  --config <cfg> [--ckpt <path>] [--items 100] [--seed 7]
+  stats     --config <cfg> [--ckpt <path>] [--nm 2:4]
+  generate  --config <cfg> [--ckpt <path>] [--prompt <text>] [--tokens 64]
+            [--temperature 0.8] [--top-k 40] [--seed 0]
+  e2e       [--config small] [--steps 300]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["resume", "record-errors", "rt-stats"])?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "gen-data" => cmd_gen_data(&args),
+        "train" => cmd_train(&args),
+        "prune" => cmd_prune(&args),
+        "eval" => cmd_eval(&args),
+        "zeroshot" => cmd_zeroshot(&args),
+        "stats" => cmd_stats(&args),
+        "generate" => cmd_generate(&args),
+        "e2e" => cmd_e2e(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "data");
+    let seed = args.u64_or("seed", 0)?;
+    let mb = args.usize_or("train-mb", 4)?;
+    generate_data(out, seed, mb)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let ws = Workspace::open()?;
+    let name = args.required("config")?;
+    let cfg = ws.config(name)?;
+    let steps = args.usize_or("steps", 400)?;
+    let mut opts = TrainOptions::for_config(name, steps);
+    opts.seed = args.u64_or("seed", 0)?;
+    opts.log_every = args.usize_or("log-every", 20)?;
+    if let Some(lr) = args.get("lr") {
+        opts.base_lr = lr.parse()?;
+    }
+    opts.out = Some(args.get_or("out", ws.ckpt_dir.to_str().unwrap()).into());
+    opts.checkpoint_every = args.usize_or("checkpoint-every", 0)?;
+    let data = ws.dataset(sparsegpt::harness::CALIB_SET)?;
+
+    let (params, adam, start) = if args.has("resume") {
+        let ck = Checkpoint::load(Checkpoint::path_for(&ws.ckpt_dir, name, ""))?;
+        let step = ck.step;
+        let adam = ck.adam.clone();
+        (ck.into_flat_params(&cfg)?, adam, step)
+    } else {
+        (init_params(&cfg, opts.seed), None, 0)
+    };
+    println!(
+        "[train {name}] {} params, {} steps, batch {}, lr {:.1e}",
+        cfg.n_params, steps, cfg.train_batch, opts.base_lr
+    );
+    let out = Trainer::new(&ws.rt).train(params, adam, start, &data, &opts)?;
+    println!(
+        "[train {name}] done in {:.1}s, final loss {:.4}",
+        out.secs,
+        out.losses.last().map(|l| l.1).unwrap_or(f64::NAN)
+    );
+    Ok(())
+}
+
+pub fn method_from_args(args: &Args) -> Result<PruneMethod> {
+    let quant_bits = args.get("quant-bits").map(|b| b.parse()).transpose()?;
+    let pattern = match args.get("nm") {
+        Some(nm) => {
+            let (n, m) = parse_nm(nm)?;
+            Pattern::NM(n, m)
+        }
+        None => Pattern::Unstructured(args.f64_or("sparsity", 0.5)?),
+    };
+    Ok(match args.get_or("method", "sparsegpt") {
+        "sparsegpt" => PruneMethod::SparseGpt { pattern, quant_bits },
+        "magnitude" => PruneMethod::Magnitude { pattern },
+        "adaprune" => match pattern {
+            Pattern::Unstructured(p) => PruneMethod::AdaPrune { sparsity: p },
+            _ => bail!("adaprune supports unstructured sparsity only"),
+        },
+        m => bail!("unknown method {m:?}"),
+    })
+}
+
+fn skip_from_args(args: &Args) -> Result<SkipSpec> {
+    if let Some(f) = args.get("prefix-frac") {
+        return Ok(SkipSpec::PrefixFraction(f.parse()?));
+    }
+    Ok(match args.get("skip") {
+        None => SkipSpec::None,
+        Some("attn") | Some("fc1") | Some("fc2") => {
+            SkipSpec::LayerType(args.get("skip").unwrap().to_string())
+        }
+        Some("front") => SkipSpec::Third(0),
+        Some("middle") => SkipSpec::Third(1),
+        Some("back") => SkipSpec::Third(2),
+        Some(s) => bail!("unknown --skip {s:?}"),
+    })
+}
+
+fn cmd_prune(args: &Args) -> Result<()> {
+    let ws = Workspace::open()?;
+    let name = args.required("config")?;
+    let cfg = ws.config(name)?;
+    let params = match args.get("ckpt") {
+        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
+        None => ws.load_model(name)?,
+    };
+    let opts = PruneOptions {
+        method: method_from_args(args)?,
+        damp: args.f64_or("damp", 0.01)?,
+        skip: skip_from_args(args)?,
+        record_errors: args.has("record-errors"),
+        exact_rows: None,
+    };
+    let n_calib = args.usize_or("calib", DEFAULT_CALIB_SEGMENTS)?;
+    let chunks = ws.calib_chunks(&cfg, n_calib, args.u64_or("calib-seed", 0)?)?;
+    println!(
+        "[prune {name}] method {} | {} calib segments | damp {}",
+        opts.method.label(),
+        n_calib,
+        opts.damp
+    );
+    let outcome = Pruner::new(&ws.rt).prune(params, &chunks, &opts)?;
+    println!(
+        "[prune {name}] sparsity {:.3} in {:.1}s (hessian {:.1}s solver {:.1}s prop {:.1}s)",
+        outcome.overall_sparsity(),
+        outcome.total_secs,
+        outcome.hessian_secs,
+        outcome.solver_secs,
+        outcome.propagate_secs
+    );
+    if args.has("rt-stats") {
+        println!("per-artifact runtime totals (compile / run / marshal seconds):");
+        for (name, s) in ws.rt.stats() {
+            println!(
+                "  {name:<28} x{:<4} compile {:.2} run {:.2} marshal {:.2}",
+                s.runs, s.compile_secs, s.run_secs, s.marshal_secs
+            );
+        }
+    }
+    let default_suffix = format!("-{}", opts.method.label());
+    let suffix = args.get_or("suffix", &default_suffix);
+    let path = match args.get("out") {
+        Some(p) => p.into(),
+        None => Checkpoint::path_for(&ws.ckpt_dir, name, suffix),
+    };
+    Checkpoint {
+        config_name: name.to_string(),
+        step: 0,
+        params: outcome.params.data.clone(),
+        adam: None,
+    }
+    .save(&path)?;
+    println!("[prune {name}] saved -> {path:?}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let ws = Workspace::open()?;
+    let name = args.required("config")?;
+    let cfg = ws.config(name)?;
+    let params = match args.get("ckpt") {
+        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
+        None => ws.load_model(name)?,
+    };
+    let max_seg = args.usize_or("max-segments", 512)?;
+    let mut table = Table::new(&format!("perplexity: {name}"), &["dataset", "ppl", "tokens"]);
+    for (dsname, ds) in ws.eval_datasets()? {
+        let p = perplexity(&ws.rt, &params, &ds, max_seg)?;
+        table.row(vec![dsname, fmt_ppl(p.ppl), p.tokens.to_string()]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_zeroshot(args: &Args) -> Result<()> {
+    let ws = Workspace::open()?;
+    let name = args.required("config")?;
+    let cfg = ws.config(name)?;
+    let params = match args.get("ckpt") {
+        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
+        None => ws.load_model(name)?,
+    };
+    let tok = ws.tokenizer()?;
+    let lex = Lexicon::new(args.u64_or("data-seed", 0)?);
+    let n = args.usize_or("items", 100)?;
+    let seed = args.u64_or("seed", 7)?;
+    let mut table = Table::new(&format!("zero-shot: {name}"), &["task", "accuracy"]);
+    let mut sum = 0.0;
+    for task in ZeroShotTask::ALL {
+        let items = gen_items(task, &lex, seed, n);
+        let acc = zero_shot_accuracy(&ws.rt, &params, &tok, &items)?;
+        sum += acc;
+        table.row(vec![task.name().into(), format!("{:.1}%", acc * 100.0)]);
+    }
+    table.row(vec!["avg".into(), format!("{:.1}%", sum / 5.0 * 100.0)]);
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let ws = Workspace::open()?;
+    let name = args.required("config")?;
+    let cfg = ws.config(name)?;
+    let params = match args.get("ckpt") {
+        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
+        None => ws.load_model(name)?,
+    };
+    let nm = args.get("nm").map(parse_nm).transpose()?;
+    let stats = ModelStats::collect_nm(&params, nm);
+    println!(
+        "overall prunable sparsity: {:.4} ({} weights zeroed)",
+        stats.overall_sparsity(),
+        stats.pruned_weight_count()
+    );
+    if nm.is_some() {
+        println!("n:m violations: {}", stats.total_nm_violations());
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    use sparsegpt::eval::generate::{sample, SampleOptions};
+    let ws = Workspace::open()?;
+    let name = args.required("config")?;
+    let cfg = ws.config(name)?;
+    let params = match args.get("ckpt") {
+        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
+        None => ws.load_model(name)?,
+    };
+    let tok = ws.tokenizer()?;
+    let prompt_text = args.get_or("prompt", "the ");
+    let prompt = tok.encode(prompt_text);
+    let opts = SampleOptions {
+        max_tokens: args.usize_or("tokens", 64)?,
+        temperature: args.f64_or("temperature", 0.8)?,
+        top_k: args.usize_or("top-k", 40)?,
+        seed: args.u64_or("seed", 0)?,
+    };
+    let out = sample(&ws.rt, &params, &prompt, &opts)?;
+    println!("{}{}", prompt_text, tok.decode(&out));
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    // a thin wrapper — the fully instrumented driver is examples/e2e_pipeline.rs
+    let config = args.get_or("config", "small").to_string();
+    let steps = args.usize_or("steps", 300)?;
+    println!("running end-to-end for {config} ({steps} steps); see examples/e2e_pipeline.rs");
+    let s = steps.to_string();
+    let train_args: Vec<String> =
+        ["train", "--config", &config, "--steps", &s].iter().map(|x| x.to_string()).collect();
+    cmd_train(&Args::parse(&train_args, &[])?)?;
+    let prune_args: Vec<String> =
+        ["prune", "--config", &config].iter().map(|x| x.to_string()).collect();
+    cmd_prune(&Args::parse(&prune_args, &["record-errors"])?)?;
+    let eval_args: Vec<String> =
+        ["eval", "--config", &config].iter().map(|x| x.to_string()).collect();
+    cmd_eval(&Args::parse(&eval_args, &[])?).context("eval after prune")
+}

@@ -1,0 +1,187 @@
+//! Checkpoint IO: a small self-describing binary format (serde is not
+//! available offline).
+//!
+//! Layout (little-endian):
+//!   magic  b"SGPTCKPT"            8 bytes
+//!   version u32                    (currently 1)
+//!   name_len u32 + utf8 name
+//!   n_params u64
+//!   step u64                       (training step the checkpoint was taken at)
+//!   flags u32                      bit0: has Adam state
+//!   params  f32 * n_params
+//!   [m f32 * n_params, v f32 * n_params]  if bit0
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::ModelCfg;
+use crate::model::layout::FlatParams;
+
+const MAGIC: &[u8; 8] = b"SGPTCKPT";
+const VERSION: u32 = 1;
+
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub config_name: String,
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub adam: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            let name = self.config_name.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+            f.write_all(&self.step.to_le_bytes())?;
+            let flags: u32 = if self.adam.is_some() { 1 } else { 0 };
+            f.write_all(&flags.to_le_bytes())?;
+            write_f32s(&mut f, &self.params)?;
+            if let Some((m, v)) = &self.adam {
+                if m.len() != self.params.len() || v.len() != self.params.len() {
+                    bail!("adam state length mismatch");
+                }
+                write_f32s(&mut f, m)?;
+                write_f32s(&mut f, v)?;
+            }
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a SparseGPT checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let name_len = read_u32(&mut f)? as usize;
+        if name_len > 1024 {
+            bail!("implausible name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let n_params = read_u64(&mut f)? as usize;
+        let step = read_u64(&mut f)?;
+        let flags = read_u32(&mut f)?;
+        let params = read_f32s(&mut f, n_params)?;
+        let adam = if flags & 1 != 0 {
+            Some((read_f32s(&mut f, n_params)?, read_f32s(&mut f, n_params)?))
+        } else {
+            None
+        };
+        Ok(Checkpoint {
+            config_name: String::from_utf8(name)?,
+            step,
+            params,
+            adam,
+        })
+    }
+
+    pub fn into_flat_params(self, cfg: &ModelCfg) -> Result<FlatParams> {
+        if self.config_name != cfg.name {
+            bail!("checkpoint is for config {:?}, expected {:?}", self.config_name, cfg.name);
+        }
+        FlatParams::new(cfg, self.params)
+    }
+
+    /// Conventional checkpoint path: `<dir>/<config><suffix>.ckpt`.
+    pub fn path_for(dir: impl AsRef<Path>, config: &str, suffix: &str) -> std::path::PathBuf {
+        dir.as_ref().join(format!("{config}{suffix}.ckpt"))
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // bulk byte-cast (LE host assumed; asserted at runtime below)
+    assert!(cfg!(target_endian = "little"), "big-endian hosts unsupported");
+    let bytes =
+        unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut xs = vec![0f32; n];
+    let bytes =
+        unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut u8, n * 4) };
+    r.read_exact(bytes)?;
+    Ok(xs)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_adam() {
+        let dir = std::env::temp_dir().join(format!("sgpt_ckpt_test_{}", std::process::id()));
+        let path = dir.join("t.ckpt");
+        let ck = Checkpoint {
+            config_name: "nano".into(),
+            step: 42,
+            params: vec![1.0, -2.5, 3.25],
+            adam: Some((vec![0.1, 0.2, 0.3], vec![0.4, 0.5, 0.6])),
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.config_name, "nano");
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.adam, ck.adam);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_without_adam() {
+        let dir = std::env::temp_dir().join(format!("sgpt_ckpt_test2_{}", std::process::id()));
+        let path = dir.join("t.ckpt");
+        let ck = Checkpoint { config_name: "x".into(), step: 0, params: vec![7.0; 10], adam: None };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert!(back.adam.is_none());
+        assert_eq!(back.params.len(), 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join(format!("sgpt_ckpt_test3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,115 @@
+//! Model configuration, parsed from the AOT manifest so the Rust side can
+//! never drift from the Python layout definition.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub n_params: usize,
+    pub block_size: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub param_layout: Vec<LayoutEntry>,
+    pub block_layout: Vec<LayoutEntry>,
+}
+
+fn parse_layout(v: &Json) -> Result<Vec<LayoutEntry>> {
+    let mut out = Vec::new();
+    for e in v.as_arr()? {
+        let e = e.as_arr()?;
+        out.push(LayoutEntry {
+            name: e[0].as_str()?.to_string(),
+            offset: e[1].as_usize()?,
+            shape: e[2].as_arr()?.iter().map(|s| s.as_usize()).collect::<Result<_>>()?,
+        });
+    }
+    Ok(out)
+}
+
+impl ModelCfg {
+    pub fn from_json(name: &str, v: &Json) -> Result<ModelCfg> {
+        Ok(ModelCfg {
+            name: name.to_string(),
+            d: v.get("d")?.as_usize()?,
+            layers: v.get("layers")?.as_usize()?,
+            heads: v.get("heads")?.as_usize()?,
+            ffn: v.get("ffn")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            seq: v.get("seq")?.as_usize()?,
+            n_params: v.get("n_params")?.as_usize()?,
+            block_size: v.get("block_size")?.as_usize()?,
+            train_batch: v.get("train_batch")?.as_usize()?,
+            eval_batch: v.get("eval_batch")?.as_usize()?,
+            param_layout: parse_layout(v.get("param_layout")?)?,
+            block_layout: parse_layout(v.get("block_layout")?)?,
+        })
+    }
+
+    pub fn param_entry(&self, name: &str) -> Option<&LayoutEntry> {
+        self.param_layout.iter().find(|e| e.name == name)
+    }
+
+    pub fn block_entry(&self, name: &str) -> Option<&LayoutEntry> {
+        self.block_layout.iter().find(|e| e.name == name)
+    }
+
+    /// Distinct prunable (d_row, d_col) shapes: q/k/v/o, fc1, fc2.
+    pub fn prune_shapes(&self) -> Vec<(usize, usize)> {
+        vec![(self.d, self.d), (self.ffn, self.d), (self.d, self.ffn)]
+    }
+
+    /// Total prunable weights (all linear layers, excluding embeddings/head).
+    pub fn prunable_params(&self) -> usize {
+        self.layers * (4 * self.d * self.d + 2 * self.d * self.ffn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn test_cfg_json() -> Json {
+        // a hand-written manifest entry for d=4, L=1, heads=2, ffn=16, V=8, S=4
+        Json::parse(
+            r#"{
+          "d": 4, "layers": 1, "heads": 2, "ffn": 16, "vocab": 8, "seq": 4,
+          "n_params": 256, "block_size": 200, "train_batch": 2, "eval_batch": 2,
+          "param_layout": [["tok_embed", 0, [8, 4]], ["pos_embed", 32, [4, 4]]],
+          "block_layout": [["ln1_g", 0, [4]], ["wq", 8, [4, 4]]]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_config() {
+        let cfg = ModelCfg::from_json("t", &test_cfg_json()).unwrap();
+        assert_eq!(cfg.d, 4);
+        assert_eq!(cfg.param_entry("pos_embed").unwrap().offset, 32);
+        assert_eq!(cfg.block_entry("wq").unwrap().shape, vec![4, 4]);
+        assert_eq!(cfg.prune_shapes(), vec![(4, 4), (16, 4), (4, 16)]);
+        assert_eq!(cfg.prunable_params(), 4 * 16 + 2 * 64);
+    }
+}

@@ -1,0 +1,67 @@
+//! Parameter initialization (GPT-2 style): N(0, 0.02) for embeddings and
+//! linears, residual-output projections (wo, w2) scaled by 1/sqrt(2L),
+//! LayerNorm gains 1 / shifts 0.
+
+use crate::model::config::ModelCfg;
+use crate::model::layout::FlatParams;
+use crate::util::prng::Rng;
+
+pub const INIT_STD: f64 = 0.02;
+
+pub fn init_params(cfg: &ModelCfg, seed: u64) -> FlatParams {
+    let mut rng = Rng::new(seed);
+    let mut fp = FlatParams::zeros(cfg);
+    let resid_scale = 1.0 / (2.0 * cfg.layers as f64).sqrt();
+    for e in cfg.param_layout.clone() {
+        let std = match e.name.as_str() {
+            "ln1_g" | "ln2_g" | "lnf_g" => {
+                fill(&mut fp, &e.name, 1.0);
+                continue;
+            }
+            "ln1_b" | "ln2_b" | "lnf_b" => {
+                fill(&mut fp, &e.name, 0.0);
+                continue;
+            }
+            "wo" | "w2" => INIT_STD * resid_scale,
+            _ => INIT_STD,
+        };
+        let entry = fp.cfg.param_entry(&e.name).unwrap().clone();
+        for x in &mut fp.data[entry.offset..entry.offset + entry.numel()] {
+            *x = (rng.normal() * std) as f32;
+        }
+    }
+    fp
+}
+
+fn fill(fp: &mut FlatParams, name: &str, v: f32) {
+    let e = fp.cfg.param_entry(name).unwrap().clone();
+    for x in &mut fp.data[e.offset..e.offset + e.numel()] {
+        *x = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layout::tests::tiny_cfg;
+
+    #[test]
+    fn init_statistics() {
+        let cfg = tiny_cfg();
+        let fp = init_params(&cfg, 0);
+        // LN gains are 1, shifts 0
+        assert!(fp.region("ln1_g").unwrap().iter().all(|&x| x == 1.0));
+        assert!(fp.region("lnf_b").unwrap().iter().all(|&x| x == 0.0));
+        // weights are small and not all equal
+        let wq = fp.region("wq").unwrap();
+        assert!(wq.iter().any(|&x| x != 0.0));
+        assert!(wq.iter().all(|&x| x.abs() < 0.2));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = tiny_cfg();
+        assert_eq!(init_params(&cfg, 7).data, init_params(&cfg, 7).data);
+        assert_ne!(init_params(&cfg, 7).data, init_params(&cfg, 8).data);
+    }
+}

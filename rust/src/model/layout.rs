@@ -1,0 +1,337 @@
+//! Flat-parameter vector access: named slices, per-block extraction and
+//! write-back, and typed access to the prunable linear layers.
+//!
+//! Mirrors `python/compile/configs.py` exactly: parameters are stacked per
+//! kind over layers (e.g. `wq` is one (L, d, d) region), and the
+//! `block_fwd_<cfg>` artifact consumes a per-block flat slice in the order
+//! ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, w2.
+
+use anyhow::{anyhow, Result};
+
+use crate::model::config::ModelCfg;
+use crate::tensor::Tensor;
+
+/// The six prunable linears of a transformer block and which Hessian
+/// (capture) feeds each: q/k/v share `x_qkv`, `wo` uses `x_wo`, etc.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinearKind {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    Fc1,
+    Fc2,
+}
+
+pub const PRUNABLE_KINDS: [LinearKind; 6] = [
+    LinearKind::Wq,
+    LinearKind::Wk,
+    LinearKind::Wv,
+    LinearKind::Wo,
+    LinearKind::Fc1,
+    LinearKind::Fc2,
+];
+
+impl LinearKind {
+    pub fn param_name(&self) -> &'static str {
+        match self {
+            LinearKind::Wq => "wq",
+            LinearKind::Wk => "wk",
+            LinearKind::Wv => "wv",
+            LinearKind::Wo => "wo",
+            LinearKind::Fc1 => "w1",
+            LinearKind::Fc2 => "w2",
+        }
+    }
+
+    /// (d_row, d_col) of this linear.
+    pub fn shape(&self, cfg: &ModelCfg) -> (usize, usize) {
+        match self {
+            LinearKind::Fc1 => (cfg.ffn, cfg.d),
+            LinearKind::Fc2 => (cfg.d, cfg.ffn),
+            _ => (cfg.d, cfg.d),
+        }
+    }
+
+    /// Which block capture provides this linear's Hessian inputs.
+    pub fn capture(&self) -> Capture {
+        match self {
+            LinearKind::Wq | LinearKind::Wk | LinearKind::Wv => Capture::Qkv,
+            LinearKind::Wo => Capture::Wo,
+            LinearKind::Fc1 => Capture::Fc1,
+            LinearKind::Fc2 => Capture::Fc2,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LinearKind::Wq => "q",
+            LinearKind::Wk => "k",
+            LinearKind::Wv => "v",
+            LinearKind::Wo => "out",
+            LinearKind::Fc1 => "fc1",
+            LinearKind::Fc2 => "fc2",
+        }
+    }
+
+    /// Layer-type group used by the Fig-7 sensitivity experiment
+    /// ("attention", "fully-connected-1", "fully-connected-2").
+    pub fn layer_type(&self) -> &'static str {
+        match self {
+            LinearKind::Fc1 => "fc1",
+            LinearKind::Fc2 => "fc2",
+            _ => "attn",
+        }
+    }
+}
+
+/// Activation-capture slots emitted by `block_fwd` (input X of each linear).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Capture {
+    Qkv,
+    Wo,
+    Fc1,
+    Fc2,
+}
+
+impl Capture {
+    pub const ALL: [Capture; 4] = [Capture::Qkv, Capture::Wo, Capture::Fc1, Capture::Fc2];
+
+    /// Index of this capture in block_fwd's output tuple (after hidden_out).
+    pub fn output_index(&self) -> usize {
+        match self {
+            Capture::Qkv => 1,
+            Capture::Wo => 2,
+            Capture::Fc1 => 3,
+            Capture::Fc2 => 4,
+        }
+    }
+
+    pub fn dim(&self, cfg: &ModelCfg) -> usize {
+        match self {
+            Capture::Fc2 => cfg.ffn,
+            _ => cfg.d,
+        }
+    }
+}
+
+/// A model's flat parameter vector plus its layout.
+#[derive(Clone, Debug)]
+pub struct FlatParams {
+    pub cfg: ModelCfg,
+    pub data: Vec<f32>,
+}
+
+impl FlatParams {
+    pub fn zeros(cfg: &ModelCfg) -> FlatParams {
+        FlatParams { cfg: cfg.clone(), data: vec![0.0; cfg.n_params] }
+    }
+
+    pub fn new(cfg: &ModelCfg, data: Vec<f32>) -> Result<FlatParams> {
+        if data.len() != cfg.n_params {
+            return Err(anyhow!(
+                "param vector has {} elements, config {} needs {}",
+                data.len(),
+                cfg.name,
+                cfg.n_params
+            ));
+        }
+        Ok(FlatParams { cfg: cfg.clone(), data })
+    }
+
+    /// Named region of the flat vector (all layers stacked).
+    pub fn region(&self, name: &str) -> Result<&[f32]> {
+        let e = self.cfg.param_entry(name).ok_or_else(|| anyhow!("no param {name:?}"))?;
+        Ok(&self.data[e.offset..e.offset + e.numel()])
+    }
+
+    fn linear_range(&self, kind: LinearKind, layer: usize) -> Result<std::ops::Range<usize>> {
+        let e = self
+            .cfg
+            .param_entry(kind.param_name())
+            .ok_or_else(|| anyhow!("no param {:?}", kind.param_name()))?;
+        let (r, c) = kind.shape(&self.cfg);
+        let per_layer = r * c;
+        if layer >= self.cfg.layers {
+            return Err(anyhow!("layer {layer} out of range"));
+        }
+        let start = e.offset + layer * per_layer;
+        Ok(start..start + per_layer)
+    }
+
+    /// Extract one prunable weight matrix as a (d_row, d_col) tensor.
+    pub fn get_linear(&self, kind: LinearKind, layer: usize) -> Result<Tensor> {
+        let range = self.linear_range(kind, layer)?;
+        let (r, c) = kind.shape(&self.cfg);
+        Ok(Tensor::new(vec![r, c], self.data[range].to_vec()))
+    }
+
+    /// Write a weight matrix back into the flat vector.
+    pub fn set_linear(&mut self, kind: LinearKind, layer: usize, w: &Tensor) -> Result<()> {
+        let range = self.linear_range(kind, layer)?;
+        let (r, c) = kind.shape(&self.cfg);
+        if w.shape() != [r, c] {
+            return Err(anyhow!("shape mismatch: {:?} vs ({r},{c})", w.shape()));
+        }
+        self.data[range].copy_from_slice(w.data());
+        Ok(())
+    }
+
+    /// Build block `layer`'s flat slice in the block_fwd artifact order.
+    pub fn block_slice(&self, layer: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.cfg.block_size);
+        for be in &self.cfg.block_layout {
+            let pe = self
+                .cfg
+                .param_entry(&be.name)
+                .ok_or_else(|| anyhow!("block param {:?} missing", be.name))?;
+            let per_layer = be.numel();
+            let start = pe.offset + layer * per_layer;
+            out.extend_from_slice(&self.data[start..start + per_layer]);
+        }
+        debug_assert_eq!(out.len(), self.cfg.block_size);
+        Ok(out)
+    }
+
+    /// Sparsity over the prunable linears only (the paper's reported number
+    /// excludes embeddings and the head).
+    pub fn prunable_sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for l in 0..self.cfg.layers {
+            for kind in PRUNABLE_KINDS {
+                let range = self.linear_range(kind, l).unwrap();
+                let slice = &self.data[range];
+                zeros += slice.iter().filter(|&&x| x == 0.0).count();
+                total += slice.len();
+            }
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::model::config::LayoutEntry;
+
+    pub fn tiny_cfg() -> ModelCfg {
+        // d=2, L=2, ffn=4, vocab=3, seq=2 — hand-computed layout
+        let d = 2usize;
+        let l = 2usize;
+        let f = 4usize;
+        let v = 3usize;
+        let s = 2usize;
+        let entries: Vec<(&str, Vec<usize>)> = vec![
+            ("tok_embed", vec![v, d]),
+            ("pos_embed", vec![s, d]),
+            ("ln1_g", vec![l, d]),
+            ("ln1_b", vec![l, d]),
+            ("wq", vec![l, d, d]),
+            ("wk", vec![l, d, d]),
+            ("wv", vec![l, d, d]),
+            ("wo", vec![l, d, d]),
+            ("ln2_g", vec![l, d]),
+            ("ln2_b", vec![l, d]),
+            ("w1", vec![l, f, d]),
+            ("w2", vec![l, d, f]),
+            ("lnf_g", vec![d]),
+            ("lnf_b", vec![d]),
+        ];
+        let mut off = 0;
+        let param_layout: Vec<LayoutEntry> = entries
+            .iter()
+            .map(|(n, sh)| {
+                let e = LayoutEntry { name: n.to_string(), offset: off, shape: sh.clone() };
+                off += e.numel();
+                e
+            })
+            .collect();
+        let n_params = off;
+        let block_entries: Vec<(&str, Vec<usize>)> = vec![
+            ("ln1_g", vec![d]),
+            ("ln1_b", vec![d]),
+            ("wq", vec![d, d]),
+            ("wk", vec![d, d]),
+            ("wv", vec![d, d]),
+            ("wo", vec![d, d]),
+            ("ln2_g", vec![d]),
+            ("ln2_b", vec![d]),
+            ("w1", vec![f, d]),
+            ("w2", vec![d, f]),
+        ];
+        let mut boff = 0;
+        let block_layout: Vec<LayoutEntry> = block_entries
+            .iter()
+            .map(|(n, sh)| {
+                let e = LayoutEntry { name: n.to_string(), offset: boff, shape: sh.clone() };
+                boff += e.numel();
+                e
+            })
+            .collect();
+        ModelCfg {
+            name: "tiny".into(),
+            d,
+            layers: l,
+            heads: 1,
+            ffn: f,
+            vocab: v,
+            seq: s,
+            n_params,
+            block_size: boff,
+            train_batch: 1,
+            eval_batch: 1,
+            param_layout,
+            block_layout,
+        }
+    }
+
+    #[test]
+    fn linear_roundtrip() {
+        let cfg = tiny_cfg();
+        let mut fp = FlatParams::zeros(&cfg);
+        let w = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        fp.set_linear(LinearKind::Fc1, 1, &w).unwrap();
+        assert_eq!(fp.get_linear(LinearKind::Fc1, 1).unwrap(), w);
+        // layer 0 untouched
+        assert!(fp.get_linear(LinearKind::Fc1, 0).unwrap().data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn block_slice_order_and_content() {
+        let cfg = tiny_cfg();
+        let mut fp = FlatParams::zeros(&cfg);
+        // mark each region of layer 1 with a distinct value
+        for (i, kind) in PRUNABLE_KINDS.iter().enumerate() {
+            let (r, c) = kind.shape(&cfg);
+            let w = Tensor::new(vec![r, c], vec![(i + 1) as f32; r * c]);
+            fp.set_linear(*kind, 1, &w).unwrap();
+        }
+        let slice = fp.block_slice(1).unwrap();
+        assert_eq!(slice.len(), cfg.block_size);
+        // block layout: ln1_g(2) ln1_b(2) wq(4) wk(4) wv(4) wo(4) ln2_g(2) ln2_b(2) w1(8) w2(8)
+        assert_eq!(&slice[4..8], &[1.0; 4]); // wq
+        assert_eq!(&slice[16..20], &[4.0; 4]); // wo
+        assert_eq!(&slice[24..32], &[5.0; 8]); // w1
+        assert_eq!(&slice[32..40], &[6.0; 8]); // w2
+    }
+
+    #[test]
+    fn prunable_sparsity_excludes_embeddings() {
+        let cfg = tiny_cfg();
+        let mut fp = FlatParams::zeros(&cfg);
+        // all prunables zero -> sparsity 1.0 regardless of embeddings
+        for x in fp.data.iter_mut().take(10) {
+            *x = 1.0; // embeddings nonzero
+        }
+        assert_eq!(fp.prunable_sparsity(), 1.0);
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let cfg = tiny_cfg();
+        assert!(FlatParams::new(&cfg, vec![0.0; 3]).is_err());
+        let fp = FlatParams::zeros(&cfg);
+        assert!(fp.get_linear(LinearKind::Wq, 5).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! The AOT manifest: the single source of truth connecting the Python
+//! compile path to the Rust runtime (artifact files, IO shapes, model
+//! layouts, solver constants).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::config::ModelCfg;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seq: usize,
+    pub vocab: usize,
+    pub chunk_tokens: usize,
+    pub blocksize: usize,
+    pub configs: BTreeMap<String, ModelCfg>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_iospec(v: &Json) -> Result<IoSpec> {
+    let e = v.as_arr()?;
+    Ok(IoSpec {
+        dtype: DType::parse(e[0].as_str()?)?,
+        shape: e[1].as_arr()?.iter().map(|s| s.as_usize()).collect::<Result<_>>()?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let mut configs = BTreeMap::new();
+        for (name, cv) in v.get("configs")?.as_obj()? {
+            configs.insert(name.clone(), ModelCfg::from_json(name, cv)?);
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, av) in v.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(av.get("file")?.as_str()?),
+                    inputs: av.get("inputs")?.as_arr()?.iter().map(parse_iospec).collect::<Result<_>>()?,
+                    outputs: av.get("outputs")?.as_arr()?.iter().map(parse_iospec).collect::<Result<_>>()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            seq: v.get("seq")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            chunk_tokens: v.get("chunk_tokens")?.as_usize()?,
+            blocksize: v.get("blocksize")?.as_usize()?,
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelCfg> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("config {name:?} not in manifest (have {:?})", self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest — re-run `make artifacts`"))
+    }
+
+    /// Default artifacts directory: `$SPARSEGPT_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SPARSEGPT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.seq, 128);
+        assert_eq!(m.vocab, 512);
+        let nano = m.config("nano").unwrap();
+        assert_eq!(nano.d, 64);
+        // flat layout must be contiguous and cover n_params
+        let mut off = 0;
+        for e in &nano.param_layout {
+            assert_eq!(e.offset, off, "{}", e.name);
+            off += e.numel();
+        }
+        assert_eq!(off, nano.n_params);
+        let a = m.artifact("sparsegpt_64x64").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.outputs.len(), 2);
+        assert!(a.file.exists());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.config("nope").is_err());
+    }
+}

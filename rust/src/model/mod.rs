@@ -1,0 +1,14 @@
+//! Model substrate: configs (mirroring `python/compile/configs.py` via the
+//! AOT manifest), the flat-parameter layout, initialization, checkpoint IO
+//! and sparsity statistics.
+
+pub mod checkpoint;
+pub mod config;
+pub mod init;
+pub mod layout;
+pub mod manifest;
+pub mod stats;
+
+pub use config::ModelCfg;
+pub use layout::{FlatParams, LinearKind, PRUNABLE_KINDS};
+pub use manifest::Manifest;

@@ -1,0 +1,107 @@
+//! Sparsity / compression statistics over a model's prunable layers,
+//! reported per layer and per linear kind (what the paper's tables quote).
+
+use crate::model::layout::{FlatParams, LinearKind, PRUNABLE_KINDS};
+
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub layer: usize,
+    pub kind: LinearKind,
+    pub total: usize,
+    pub zeros: usize,
+    /// n:m constraint violations (groups without exactly n zeros); only
+    /// meaningful after n:m pruning.
+    pub nm_violations: Option<usize>,
+}
+
+impl LayerStats {
+    pub fn sparsity(&self) -> f64 {
+        self.zeros as f64 / self.total.max(1) as f64
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub per_layer: Vec<LayerStats>,
+}
+
+impl ModelStats {
+    pub fn collect(fp: &FlatParams) -> ModelStats {
+        Self::collect_nm(fp, None)
+    }
+
+    /// Collect stats; if `nm` is given, also count violated n:m groups.
+    pub fn collect_nm(fp: &FlatParams, nm: Option<(usize, usize)>) -> ModelStats {
+        let mut per_layer = Vec::new();
+        for l in 0..fp.cfg.layers {
+            for kind in PRUNABLE_KINDS {
+                let w = fp.get_linear(kind, l).unwrap();
+                let zeros = w.data().iter().filter(|&&x| x == 0.0).count();
+                let nm_violations = nm.map(|(n, m)| {
+                    let (rows, cols) = (w.rows(), w.cols());
+                    let mut bad = 0;
+                    let full = cols / m * m; // complete groups only
+                    for r in 0..rows {
+                        let row = w.row(r);
+                        for g in (0..full).step_by(m) {
+                            let z = row[g..g + m].iter().filter(|&&x| x == 0.0).count();
+                            if z != n {
+                                bad += 1;
+                            }
+                        }
+                    }
+                    bad
+                });
+                per_layer.push(LayerStats { layer: l, kind, total: w.len(), zeros, nm_violations });
+            }
+        }
+        ModelStats { per_layer }
+    }
+
+    pub fn overall_sparsity(&self) -> f64 {
+        let zeros: usize = self.per_layer.iter().map(|s| s.zeros).sum();
+        let total: usize = self.per_layer.iter().map(|s| s.total).sum();
+        zeros as f64 / total.max(1) as f64
+    }
+
+    pub fn total_nm_violations(&self) -> usize {
+        self.per_layer.iter().filter_map(|s| s.nm_violations).sum()
+    }
+
+    pub fn pruned_weight_count(&self) -> usize {
+        self.per_layer.iter().map(|s| s.zeros).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layout::tests::tiny_cfg;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn counts_sparsity_and_nm() {
+        let cfg = tiny_cfg();
+        let mut fp = FlatParams::zeros(&cfg);
+        // make everything dense first
+        for l in 0..cfg.layers {
+            for kind in PRUNABLE_KINDS {
+                let (r, c) = kind.shape(&cfg);
+                fp.set_linear(kind, l, &Tensor::ones(vec![r, c])).unwrap();
+            }
+        }
+        // 2:4 pattern on fc2 of layer 0 (d x ffn = 2 x 4)
+        let w = Tensor::new(vec![2, 4], vec![0., 1., 0., 2., 3., 0., 4., 0.]);
+        fp.set_linear(LinearKind::Fc2, 0, &w).unwrap();
+        let stats = ModelStats::collect_nm(&fp, Some((2, 4)));
+        let fc2 = stats
+            .per_layer
+            .iter()
+            .find(|s| s.layer == 0 && s.kind == LinearKind::Fc2)
+            .unwrap();
+        assert_eq!(fc2.zeros, 4);
+        assert_eq!(fc2.nm_violations, Some(0));
+        // every other layer violates 2:4 (fully dense)
+        assert!(stats.total_nm_violations() > 0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Artifact execution: manifest-driven marshalling, compile cache, stats.
+//!
+//! All artifacts are lowered with `return_tuple=True`, so every execution
+//! unwraps one tuple literal into the manifest-declared outputs. Shapes and
+//! dtypes are validated against the manifest on both directions — a mismatch
+//! is a build-system bug and fails loudly rather than corrupting data.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::manifest::{ArtifactSpec, DType, Manifest};
+use crate::tensor::Tensor;
+
+/// An input argument; shape is taken from the manifest (flat data only).
+pub enum ArgValue<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    Scalar(f32),
+    /// a pre-marshalled device buffer (perf path: marshal once, execute
+    /// many — e.g. the flat parameter vector during evaluation)
+    Cached(&'a CachedLiteral),
+}
+
+/// An input buffer marshalled once and reused across executions.
+///
+/// Note: inputs are marshalled to PjRt *buffers* and executed via
+/// `execute_b`, never via `execute(literals)` — the crate's C++ shim for
+/// the latter leaks every input buffer it creates (`buffer.release()`
+/// without a matching delete), which OOM-kills long training loops.
+pub struct CachedLiteral {
+    buf: xla::PjRtBuffer,
+    numel: usize,
+    dtype: DType,
+}
+
+/// An output value: f32 tensor (all artifact outputs are f32).
+pub type OutValue = Tensor;
+
+#[derive(Clone, Debug, Default)]
+#[allow(dead_code)]
+pub struct ArtifactStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub runs: usize,
+    pub run_secs: f64,
+    pub marshal_secs: f64,
+}
+
+pub type RuntimeStats = BTreeMap<String, ArtifactStats>;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifacts directory
+    /// (`$SPARSEGPT_ARTIFACTS` or `./artifacts`).
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", spec.file))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {:?}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of {name:?}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        let mut st = self.stats.borrow_mut();
+        let e = st.entry(name.to_string()).or_default();
+        e.compiles += 1;
+        e.compile_secs += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    /// Drop a compiled executable (memory control for one-shot artifacts).
+    pub fn evict(&self, name: &str) {
+        self.cache.borrow_mut().remove(name);
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+
+    /// Marshal an f32 buffer once for reuse across many `run` calls (pass
+    /// it as `ArgValue::Cached`). `shape` must match the artifact input it
+    /// will be bound to.
+    pub fn cache_f32(&self, data: &[f32], shape: &[usize]) -> Result<CachedLiteral> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("cache_f32: {} elements vs shape {shape:?}", data.len());
+        }
+        // buffer_from_host_buffer (typed) converts ElementType->PrimitiveType
+        // correctly; the raw_bytes variant passes the wrong enum to the C ABI
+        let buf = self.client.buffer_from_host_buffer(data, shape, None)?;
+        Ok(CachedLiteral { buf, numel: data.len(), dtype: DType::F32 })
+    }
+
+    /// Execute an artifact with manifest-validated inputs; returns the
+    /// manifest-declared outputs as f32 tensors.
+    pub fn run(&self, name: &str, args: &[ArgValue]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        let exe = self.executable(name)?;
+        let tm = Instant::now();
+        let owned = self
+            .marshal_inputs(&spec, args)
+            .with_context(|| format!("marshalling inputs of {name:?}"))?;
+        // assemble the argument list, borrowing cached buffers in place
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (arg, own) in args.iter().zip(&owned) {
+            match (arg, own) {
+                (ArgValue::Cached(c), _) => refs.push(&c.buf),
+                (_, Some(buf)) => refs.push(buf),
+                _ => unreachable!("marshal_inputs fills every non-cached slot"),
+            }
+        }
+        let marshal_in = tm.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .map_err(|e| anyhow!("executing {name:?}: {e:?}"))?;
+        let run_secs = t0.elapsed().as_secs_f64();
+
+        let tm2 = Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name:?}: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name:?}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name:?}: executable returned {} outputs, manifest declares {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&spec.outputs) {
+            if ospec.dtype != DType::F32 {
+                bail!("{name:?}: non-f32 outputs unsupported");
+            }
+            let mut data = vec![0f32; ospec.numel()];
+            lit.copy_raw_to(&mut data)
+                .map_err(|e| anyhow!("copying output of {name:?}: {e:?}"))?;
+            let shape = if ospec.shape.is_empty() { vec![1] } else { ospec.shape.clone() };
+            outs.push(Tensor::new(shape, data));
+        }
+        let marshal_secs = marshal_in + tm2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.borrow_mut();
+        let e = st.entry(name.to_string()).or_default();
+        e.runs += 1;
+        e.run_secs += run_secs;
+        e.marshal_secs += marshal_secs;
+        Ok(outs)
+    }
+}
+
+#[allow(dead_code)]
+fn as_bytes<T>(xs: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs)) }
+}
+
+impl Runtime {
+    fn marshal_inputs(
+        &self,
+        spec: &ArtifactSpec,
+        args: &[ArgValue],
+    ) -> Result<Vec<Option<xla::PjRtBuffer>>> {
+        if args.len() != spec.inputs.len() {
+            bail!("expected {} inputs, got {}", spec.inputs.len(), args.len());
+        }
+        let mut buffers = Vec::with_capacity(args.len());
+        for (i, (arg, ispec)) in args.iter().zip(&spec.inputs).enumerate() {
+            let buf = match (arg, ispec.dtype) {
+                (ArgValue::Cached(c), dt) => {
+                    if c.dtype != dt || c.numel != ispec.numel() {
+                        bail!(
+                            "input {i}: cached buffer has {} elements, expected {} {:?}",
+                            c.numel,
+                            ispec.numel(),
+                            ispec.shape
+                        );
+                    }
+                    buffers.push(None);
+                    continue;
+                }
+                (ArgValue::F32(xs), DType::F32) => {
+                    if xs.len() != ispec.numel() {
+                        bail!("input {i}: {} elements, expected {} {:?}", xs.len(), ispec.numel(), ispec.shape);
+                    }
+                    self.client.buffer_from_host_buffer(xs, &ispec.shape, None)?
+                }
+                (ArgValue::I32(xs), DType::I32) => {
+                    if xs.len() != ispec.numel() {
+                        bail!("input {i}: {} elements, expected {} {:?}", xs.len(), ispec.numel(), ispec.shape);
+                    }
+                    self.client.buffer_from_host_buffer(xs, &ispec.shape, None)?
+                }
+                (ArgValue::Scalar(x), DType::F32) => {
+                    if !ispec.shape.is_empty() {
+                        bail!("input {i}: scalar passed for shaped input {:?}", ispec.shape);
+                    }
+                    self.client.buffer_from_host_buffer(std::slice::from_ref(x), &[], None)?
+                }
+                _ => bail!("input {i}: dtype mismatch"),
+            };
+            buffers.push(Some(buf));
+        }
+        Ok(buffers)
+    }
+}

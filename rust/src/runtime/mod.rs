@@ -1,0 +1,7 @@
+//! The PJRT runtime: loads the AOT HLO-text artifacts, compiles them on the
+//! CPU PJRT client (once, cached) and executes them from the coordinator's
+//! hot path. This is the only module that touches the `xla` crate.
+
+mod exec;
+
+pub use exec::{ArgValue, CachedLiteral, OutValue, Runtime, RuntimeStats};

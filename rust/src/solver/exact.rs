@@ -1,0 +1,147 @@
+//! Exact layer reconstruction for a fixed mask (the "much more expensive"
+//! comparator of the Fig-11 approximation-quality experiment).
+//!
+//! For each row i with keep-set M_i, the optimal reconstruction solves the
+//! masked normal equations (Eq. 2):
+//!     w_hat[M_i] = (H_{M_i})^{-1} (H w)[M_i-restricted rhs]
+//! i.e. minimize ||(w - w_hat) X||^2 over w_hat supported on M_i, giving
+//!     H_{M_i} w_hat_{M_i} = (H w)_{M_i}.
+//! Cost is O(d_row * d_col^3) — the very scaling SparseGPT exists to avoid —
+//! so callers subsample rows on larger layers.
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::linalg::{spd_solve, Mat};
+use crate::tensor::Tensor;
+
+/// Exact per-row optimal reconstruction for `rows` (all rows if None),
+/// given the *dampened* Hessian `h` (d_col x d_col) and keep mask.
+/// Rows not in `rows` are left at mask-and-zero.
+pub fn exact_reconstruction(
+    w: &Tensor,
+    mask: &Tensor,
+    h: &Tensor,
+    rows: Option<&[usize]>,
+) -> Result<Tensor> {
+    let (d_row, d_col) = (w.rows(), w.cols());
+    if mask.shape() != w.shape() || h.shape() != [d_col, d_col] {
+        return Err(anyhow!("shape mismatch"));
+    }
+    let hf = Mat::from_f32(d_col, h.data());
+    let all_rows: Vec<usize>;
+    let rows = match rows {
+        Some(r) => r,
+        None => {
+            all_rows = (0..d_row).collect();
+            &all_rows
+        }
+    };
+    // start from mask-and-zero
+    let mut out: Vec<f32> = w.data().iter().zip(mask.data()).map(|(x, m)| x * m).collect();
+
+    for &r in rows {
+        let keep: Vec<usize> =
+            (0..d_col).filter(|&j| mask.at2(r, j) != 0.0).collect();
+        let kn = keep.len();
+        if kn == 0 {
+            continue;
+        }
+        // H_M (kn x kn) and rhs = (H w)_M
+        let mut hm = Mat::zeros(kn);
+        for (a, &ja) in keep.iter().enumerate() {
+            for (b, &jb) in keep.iter().enumerate() {
+                hm.set(a, b, hf.at(ja, jb));
+            }
+        }
+        let mut rhs = vec![0.0f64; kn];
+        for (a, &ja) in keep.iter().enumerate() {
+            let mut s = 0.0f64;
+            for j in 0..d_col {
+                s += hf.at(ja, j) * w.at2(r, j) as f64;
+            }
+            rhs[a] = s;
+        }
+        let sol = spd_solve(&hm, &rhs)
+            .ok_or_else(|| anyhow!("masked Hessian not SPD for row {r} (add dampening)"))?;
+        for (a, &ja) in keep.iter().enumerate() {
+            out[r * d_col + ja] = sol[a] as f32;
+        }
+    }
+    Ok(Tensor::new(vec![d_row, d_col], out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::hessian::{dampened_hinv_chol_f64, layer_sq_error};
+    use crate::solver::magnitude::magnitude_prune;
+    use crate::solver::sparsegpt_ref::{ref_sparsegpt, Pattern};
+    use crate::tensor::linalg::dampen;
+    use crate::util::prng::Rng;
+
+    fn problem(seed: u64, r: usize, c: usize) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect());
+        let n = 2 * c;
+        let x = Tensor::new(vec![n, c], (0..n * c).map(|_| rng.normal_f32()).collect());
+        let h = x.transpose2().matmul(&x);
+        (w, h)
+    }
+
+    fn dampened(h: &Tensor) -> Tensor {
+        let m = dampen(&Mat::from_f32(h.rows(), h.data()), 0.01);
+        Tensor::new(vec![h.rows(), h.cols()], m.to_f32())
+    }
+
+    #[test]
+    fn exact_beats_or_matches_sparsegpt() {
+        let (w, h) = problem(0, 24, 48);
+        let hd = dampened(&h);
+        let hc = dampened_hinv_chol_f64(&h, 0.01).unwrap();
+        let (ws, mask) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.5), 0, 128);
+        let we = exact_reconstruction(&w, &mask, &hd, None).unwrap();
+        let e_exact = layer_sq_error(&w, &we, &hd);
+        let e_sgpt = layer_sq_error(&w, &ws, &hd);
+        assert!(
+            e_exact <= e_sgpt * (1.0 + 1e-6),
+            "exact {e_exact} must not exceed sparsegpt {e_sgpt}"
+        );
+        // and both beat mask-and-zero
+        let wz: Vec<f32> = w.data().iter().zip(mask.data()).map(|(x, m)| x * m).collect();
+        let wz = Tensor::new(vec![24, 48], wz);
+        assert!(e_exact < layer_sq_error(&w, &wz, &hd));
+    }
+
+    #[test]
+    fn exact_satisfies_normal_equations() {
+        let (w, h) = problem(1, 6, 16);
+        let hd = dampened(&h);
+        let (_, mask) = magnitude_prune(&w, 0.5);
+        let we = exact_reconstruction(&w, &mask, &hd, None).unwrap();
+        // residual (w - we) H must vanish on the kept coordinates
+        for r in 0..6 {
+            for j in 0..16 {
+                if mask.at2(r, j) == 1.0 {
+                    let mut g = 0.0f64;
+                    for k in 0..16 {
+                        g += (w.at2(r, k) - we.at2(r, k)) as f64 * hd.at2(k, j) as f64;
+                    }
+                    assert!(g.abs() < 1e-2, "row {r} col {j}: grad {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_subsampling_leaves_other_rows_masked() {
+        let (w, h) = problem(2, 8, 12);
+        let hd = dampened(&h);
+        let (_, mask) = magnitude_prune(&w, 0.5);
+        let we = exact_reconstruction(&w, &mask, &hd, Some(&[0, 3])).unwrap();
+        for r in [1usize, 2, 4, 5, 6, 7] {
+            for j in 0..12 {
+                assert_eq!(we.at2(r, j), w.at2(r, j) * mask.at2(r, j));
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Layer Hessian bookkeeping: accumulation across calibration chunks,
+//! dampening, and the inverse-Cholesky chain (f64 reference; the production
+//! pipeline uses the `hessian_prep_<dim>` artifact for large dims).
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::linalg::{self, Mat};
+use crate::tensor::Tensor;
+
+/// Running sum of X^T X over calibration chunks for one linear layer.
+#[derive(Clone, Debug)]
+pub struct HessianAccumulator {
+    pub dim: usize,
+    pub h: Tensor,
+    pub rows_seen: usize,
+}
+
+impl HessianAccumulator {
+    pub fn new(dim: usize) -> HessianAccumulator {
+        HessianAccumulator { dim, h: Tensor::zeros(vec![dim, dim]), rows_seen: 0 }
+    }
+
+    /// Add a chunk's X^T X (as produced by the `hessian_<dim>` artifact).
+    pub fn add(&mut self, chunk_h: &Tensor, rows: usize) -> Result<()> {
+        if chunk_h.shape() != [self.dim, self.dim] {
+            return Err(anyhow!("chunk Hessian shape {:?}", chunk_h.shape()));
+        }
+        for (a, b) in self.h.data_mut().iter_mut().zip(chunk_h.data()) {
+            *a += b;
+        }
+        self.rows_seen += rows;
+        Ok(())
+    }
+}
+
+/// f64 reference for the artifact chain: upper factor U with
+/// (H + damp*mean(diag)*I)^{-1} = U^T U. Returns None if H is too
+/// degenerate even after dampening.
+pub fn dampened_hinv_chol_f64(h: &Tensor, damp: f64) -> Option<Tensor> {
+    let n = h.rows();
+    let m = Mat::from_f32(n, h.data());
+    let u = linalg::hessian_prep(&m, damp)?;
+    Some(Tensor::new(vec![n, n], u.to_f32()))
+}
+
+/// ||(W - W_hat) X||_F^2 = tr(dW H dW^T) with the raw (undamped) H.
+pub fn layer_sq_error(w_orig: &Tensor, w_hat: &Tensor, h: &Tensor) -> f64 {
+    let (r, c) = (w_orig.rows(), w_orig.cols());
+    assert_eq!(w_hat.shape(), w_orig.shape());
+    assert_eq!(h.shape(), &[c, c]);
+    let mut total = 0.0f64;
+    let mut dw = vec![0.0f64; c];
+    for i in 0..r {
+        for j in 0..c {
+            dw[j] = (w_orig.at2(i, j) - w_hat.at2(i, j)) as f64;
+        }
+        // total += dw^T H dw
+        for j in 0..c {
+            if dw[j] == 0.0 {
+                continue;
+            }
+            let hrow = h.row(j);
+            let mut s = 0.0f64;
+            for k in 0..c {
+                s += hrow[k] as f64 * dw[k];
+            }
+            total += dw[j] * s;
+        }
+    }
+    total
+}
+
+/// Power-iteration estimate of lambda_max(H) (AdaPrune's stable step size).
+pub fn lambda_max(h: &Tensor, seed: u64) -> f64 {
+    let m = Mat::from_f32(h.rows(), h.data());
+    linalg::lambda_max(&m, 50, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_x(rng: &mut Rng, n: usize, d: usize) -> Tensor {
+        Tensor::new(vec![n, d], (0..n * d).map(|_| rng.normal_f32()).collect())
+    }
+
+    #[test]
+    fn accumulator_equals_whole_product() {
+        let mut rng = Rng::new(0);
+        let d = 16;
+        let x1 = random_x(&mut rng, 32, d);
+        let x2 = random_x(&mut rng, 32, d);
+        let mut acc = HessianAccumulator::new(d);
+        acc.add(&x1.transpose2().matmul(&x1), 32).unwrap();
+        acc.add(&x2.transpose2().matmul(&x2), 32).unwrap();
+        // concatenated product
+        let mut all = x1.data().to_vec();
+        all.extend_from_slice(x2.data());
+        let xall = Tensor::new(vec![64, d], all);
+        let href = xall.transpose2().matmul(&xall);
+        for (a, b) in acc.h.data().iter().zip(href.data()) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+        }
+        assert_eq!(acc.rows_seen, 64);
+    }
+
+    #[test]
+    fn hinv_chol_factor_property() {
+        let mut rng = Rng::new(1);
+        let d = 24;
+        let x = random_x(&mut rng, 48, d);
+        let h = x.transpose2().matmul(&x);
+        let u = dampened_hinv_chol_f64(&h, 0.01).unwrap();
+        // U^T U * (H + damp mean diag I) ~ I
+        let ut = u.transpose2();
+        let hinv = ut.matmul(&u);
+        let mean_diag: f32 = (0..d).map(|i| h.at2(i, i)).sum::<f32>() / d as f32;
+        let mut hd = h.clone();
+        for i in 0..d {
+            let v = hd.at2(i, i) + 0.01 * mean_diag;
+            hd.set2(i, i, v);
+        }
+        let prod = hinv.matmul(&hd);
+        for i in 0..d {
+            for j in 0..d {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at2(i, j) - want).abs() < 1e-3, "{i},{j}: {}", prod.at2(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn layer_error_zero_for_identical() {
+        let mut rng = Rng::new(2);
+        let w = random_x(&mut rng, 8, 12);
+        let x = random_x(&mut rng, 24, 12);
+        let h = x.transpose2().matmul(&x);
+        assert_eq!(layer_sq_error(&w, &w, &h), 0.0);
+        // and positive for a perturbation
+        let mut w2 = w.clone();
+        w2.set2(0, 0, w.at2(0, 0) + 1.0);
+        assert!(layer_sq_error(&w, &w2, &h) > 0.0);
+    }
+
+    #[test]
+    fn lambda_max_positive() {
+        let mut rng = Rng::new(3);
+        let x = random_x(&mut rng, 32, 10);
+        let h = x.transpose2().matmul(&x);
+        assert!(lambda_max(&h, 0) > 0.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Magnitude pruning (Zhu & Gupta 2017), the paper's main scalable baseline
+//! — applied layer-wise: zero the smallest-|w| entries, no reconstruction.
+
+use crate::tensor::Tensor;
+
+/// Unstructured layer-wise magnitude pruning to sparsity `p`.
+/// Returns (pruned weights, keep mask); exactly round(p * numel) zeros
+/// (stable tie-break by index, matching the solver's rank semantics).
+pub fn magnitude_prune(w: &Tensor, p: f64) -> (Tensor, Tensor) {
+    let n = w.len();
+    let k = (p * n as f64).round() as usize;
+    let mut order: Vec<usize> = (0..n).collect();
+    let d = w.data();
+    order.sort_by(|&a, &b| {
+        d[a].abs().partial_cmp(&d[b].abs()).unwrap().then(a.cmp(&b))
+    });
+    let mut keep = vec![1.0f32; n];
+    for &i in order.iter().take(k) {
+        keep[i] = 0.0;
+    }
+    let pruned: Vec<f32> = d.iter().zip(&keep).map(|(x, m)| x * m).collect();
+    (
+        Tensor::new(w.shape().to_vec(), pruned),
+        Tensor::new(w.shape().to_vec(), keep),
+    )
+}
+
+/// n:m magnitude pruning: per row, per group of m consecutive columns, zero
+/// the n smallest-|w| entries.
+pub fn magnitude_prune_nm(w: &Tensor, n: usize, m: usize) -> (Tensor, Tensor) {
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut keep = vec![1.0f32; rows * cols];
+    let full = cols / m * m;
+    for r in 0..rows {
+        let row = w.row(r);
+        for g in (0..full).step_by(m) {
+            let mut idx: Vec<usize> = (g..g + m).collect();
+            idx.sort_by(|&a, &b| {
+                row[a].abs().partial_cmp(&row[b].abs()).unwrap().then(a.cmp(&b))
+            });
+            for &j in idx.iter().take(n) {
+                keep[r * cols + j] = 0.0;
+            }
+        }
+    }
+    let pruned: Vec<f32> = w.data().iter().zip(&keep).map(|(x, m)| x * m).collect();
+    (
+        Tensor::new(w.shape().to_vec(), pruned),
+        Tensor::new(w.shape().to_vec(), keep),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn exact_count_and_smallest_removed() {
+        let w = Tensor::new(vec![2, 4], vec![0.1, -3.0, 0.2, 4.0, -0.05, 2.0, 1.0, -0.3]);
+        let (pruned, mask) = magnitude_prune(&w, 0.5);
+        assert_eq!(mask.data().iter().filter(|&&m| m == 0.0).count(), 4);
+        // the four smallest |w|: 0.05, 0.1, 0.2, 0.3
+        assert_eq!(pruned.data(), &[0.0, -3.0, 0.0, 4.0, 0.0, 2.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn nm_groups_exact() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::new(vec![8, 16], (0..128).map(|_| rng.normal_f32()).collect());
+        let (pruned, mask) = magnitude_prune_nm(&w, 2, 4);
+        for r in 0..8 {
+            for g in (0..16).step_by(4) {
+                let kept: f32 = (g..g + 4).map(|j| mask.at2(r, j)).sum();
+                assert_eq!(kept, 2.0);
+                // kept entries are the 2 largest |w| in the group
+                let mut vals: Vec<f32> = (g..g + 4).map(|j| w.at2(r, j).abs()).collect();
+                vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                for j in g..g + 4 {
+                    if mask.at2(r, j) == 1.0 {
+                        assert!(w.at2(r, j).abs() >= vals[1] - 1e-6);
+                    }
+                }
+            }
+        }
+        assert!((pruned.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p_zero_and_one_edges() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::new(vec![4, 4], (0..16).map(|_| rng.normal_f32()).collect());
+        let (p0, m0) = magnitude_prune(&w, 0.0);
+        assert_eq!(p0, w);
+        assert!(m0.data().iter().all(|&m| m == 1.0));
+        let (p1, _) = magnitude_prune(&w, 1.0);
+        assert!(p1.data().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,15 @@
+//! Pruning solvers and Hessian utilities.
+//!
+//! The production path runs the AOT HLO artifacts (Pallas kernel inside);
+//! this module provides (a) the pure-Rust f64 reference implementation of
+//! Algorithm 1 used to cross-check that path end-to-end, (b) the baselines
+//! the paper compares against (magnitude pruning; AdaPrune's mask selection
+//! — its reconstruction runs as an artifact), (c) the *exact* per-row OBS
+//! reconstruction for the Fig-11 approximation-quality experiment, and
+//! (d) RTN quantization used by the Fig-6 joint-compression comparison.
+
+pub mod exact;
+pub mod hessian;
+pub mod magnitude;
+pub mod quant;
+pub mod sparsegpt_ref;

@@ -1,0 +1,119 @@
+//! RTN (round-to-nearest) quantization on per-row asymmetric min/max grids.
+//!
+//! Matches `quant_grid` in `python/compile/kernels/ref.py` (and the grid the
+//! solver artifacts compute internally): the grid always contains zero so
+//! pruned weights stay exactly representable. Used stand-alone as the RTN
+//! baseline and inside the reference solver for the joint mode (Eq. 7).
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct QuantGrid {
+    pub levels: u32,
+    /// per-row (scale, zero-point)
+    pub rows: Vec<(f32, f32)>,
+}
+
+impl QuantGrid {
+    /// Build the per-row grid from the ORIGINAL weights (as the paper /
+    /// GPTQ do — the grid is fixed before error propagation shifts values).
+    pub fn from_weights(w: &Tensor, levels: u32) -> QuantGrid {
+        assert!(levels > 0);
+        let rows = (0..w.rows())
+            .map(|r| {
+                let row = w.row(r);
+                let lo = row.iter().fold(0.0f32, |a, &b| a.min(b));
+                let hi = row.iter().fold(0.0f32, |a, &b| a.max(b));
+                let mut scale = (hi - lo) / levels as f32;
+                if scale <= 0.0 {
+                    scale = 1.0;
+                }
+                let zero = (-lo / scale).round();
+                (scale, zero)
+            })
+            .collect();
+        QuantGrid { levels, rows }
+    }
+
+    pub fn quantize_one(&self, row: usize, v: f32) -> f32 {
+        let (scale, zero) = self.rows[row];
+        let q = (v / scale + zero).round().clamp(0.0, self.levels as f32);
+        scale * (q - zero)
+    }
+
+    /// Quantize a whole matrix (the plain RTN baseline).
+    pub fn quantize(&self, w: &Tensor) -> Tensor {
+        let mut out = w.clone();
+        for r in 0..w.rows() {
+            for v in out.row_mut(r) {
+                *v = self.quantize_one(r, *v);
+            }
+        }
+        out
+    }
+}
+
+/// Effective storage bits per weight for "p-sparse + b-bit + bitmask"
+/// compression (the paper's size-equivalence argument in Fig. 6:
+/// 50% sparse + 4-bit + 1-bit mask == 3 bits/weight).
+pub fn effective_bits(sparsity: f64, bits: f64) -> f64 {
+    (1.0 - sparsity) * bits + 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn zero_always_representable() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::new(vec![8, 16], (0..128).map(|_| rng.normal_f32() + 0.5).collect());
+        let g = QuantGrid::from_weights(&w, 15);
+        for r in 0..8 {
+            assert_eq!(g.quantize_one(r, 0.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_step() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::new(vec![4, 64], (0..256).map(|_| rng.normal_f32()).collect());
+        let g = QuantGrid::from_weights(&w, 255);
+        let q = g.quantize(&w);
+        for r in 0..4 {
+            let (scale, _) = g.rows[r];
+            for (a, b) in w.row(r).iter().zip(q.row(r)) {
+                assert!((a - b).abs() <= 0.5 * scale + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::new(vec![4, 64], (0..256).map(|_| rng.normal_f32()).collect());
+        let e4 = {
+            let q = QuantGrid::from_weights(&w, 15).quantize(&w);
+            w.data().iter().zip(q.data()).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+        };
+        let e2 = {
+            let q = QuantGrid::from_weights(&w, 3).quantize(&w);
+            w.data().iter().zip(q.data()).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+        };
+        assert!(e4 < e2);
+    }
+
+    #[test]
+    fn effective_bits_equivalence() {
+        assert!((effective_bits(0.5, 4.0) - 3.0).abs() < 1e-12);
+        assert!((effective_bits(0.5, 3.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_row_handled() {
+        let w = Tensor::new(vec![1, 4], vec![0.0; 4]);
+        let g = QuantGrid::from_weights(&w, 15);
+        assert_eq!(g.quantize_one(0, 0.0), 0.0);
+    }
+}

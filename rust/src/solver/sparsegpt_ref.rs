@@ -1,0 +1,231 @@
+//! Pure-Rust f64 reference implementation of the SparseGPT layer solver
+//! (Algorithm 1) — a third, independent transcription (besides the Pallas
+//! kernel path and the NumPy oracle) used to cross-validate the HLO
+//! artifacts end-to-end from the Rust side, and as the solver for shapes
+//! that have no artifact (e.g. property tests on odd sizes).
+//!
+//! Semantics are identical to `python/compile/kernels/ref.py`:
+//! upper Cholesky factor `hc` of the dampened H^{-1}; per-Bs-block adaptive
+//! mask selection with stable-rank tie-breaks; rightward OBS updates with
+//! lazy trailing application; optional per-row RTN grid for joint
+//! sparsification + quantization (Eq. 7).
+
+use crate::solver::quant::QuantGrid;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pattern {
+    /// target sparsity in [0, 1)
+    Unstructured(f64),
+    /// n zeros per m consecutive weights, per row
+    NM(usize, usize),
+}
+
+/// Stable ranks: rank[i] = position of element i in a stable ascending sort.
+fn stable_ranks(xs: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap().then(a.cmp(&b)));
+    let mut ranks = vec![0usize; xs.len()];
+    for (r, &i) in order.iter().enumerate() {
+        ranks[i] = r;
+    }
+    ranks
+}
+
+/// Run Algorithm 1 on one layer. Returns (w_hat, keep_mask) as f32 tensors.
+/// `quant_levels = 0` disables quantization; `blocksize` is both the lazy
+/// update window B and the mask-selection blocksize Bs (the production
+/// configuration; the Fig-10 ablation uses the jnp artifacts instead).
+pub fn ref_sparsegpt(
+    w: &Tensor,
+    hc: &Tensor,
+    pattern: Pattern,
+    quant_levels: u32,
+    blocksize: usize,
+) -> (Tensor, Tensor) {
+    let (d_row, d_col) = (w.rows(), w.cols());
+    assert_eq!(hc.shape(), &[d_col, d_col]);
+    let b = blocksize.min(d_col);
+    let mut wf: Vec<f64> = w.data().iter().map(|&x| x as f64).collect();
+    let hcf: Vec<f64> = hc.data().iter().map(|&x| x as f64).collect();
+    let diag: Vec<f64> = (0..d_col).map(|j| hcf[j * d_col + j]).collect();
+    let mut keep = vec![1.0f64; d_row * d_col];
+
+    let grid = (quant_levels > 0).then(|| QuantGrid::from_weights(w, quant_levels));
+    let frozen = |v: f64, k: f64, row: usize| -> f64 {
+        match &grid {
+            Some(g) => k * g.quantize_one(row, v as f32) as f64,
+            None => k * v,
+        }
+    };
+
+    let mut i = 0;
+    while i < d_col {
+        let ib = (i + b).min(d_col);
+        let mut err = vec![0.0f64; d_row * (ib - i)];
+        for j in i..ib {
+            // ---- mask selection ----
+            match pattern {
+                Pattern::Unstructured(p) => {
+                    if (j - i) == 0 {
+                        // select for the whole window [i, ib)
+                        let bs = ib - i;
+                        let mut scores = Vec::with_capacity(d_row * bs);
+                        for r in 0..d_row {
+                            for jj in i..ib {
+                                let v = wf[r * d_col + jj];
+                                scores.push((v * v) / (diag[jj] * diag[jj]));
+                            }
+                        }
+                        let k = (p * scores.len() as f64).round() as usize;
+                        let ranks = stable_ranks(&scores);
+                        for r in 0..d_row {
+                            for (idx, jj) in (i..ib).enumerate() {
+                                keep[r * d_col + jj] =
+                                    if ranks[r * bs + idx] >= k { 1.0 } else { 0.0 };
+                            }
+                        }
+                    }
+                }
+                Pattern::NM(n, m) => {
+                    if (j - i) % m == 0 && j + m <= d_col {
+                        for r in 0..d_row {
+                            let scores: Vec<f64> = (j..j + m)
+                                .map(|jj| {
+                                    let v = wf[r * d_col + jj];
+                                    (v * v) / (diag[jj] * diag[jj])
+                                })
+                                .collect();
+                            let ranks = stable_ranks(&scores);
+                            for (idx, jj) in (j..j + m).enumerate() {
+                                keep[r * d_col + jj] = if ranks[idx] >= n { 1.0 } else { 0.0 };
+                            }
+                        }
+                    }
+                }
+            }
+            // ---- prune/freeze column j, propagate error rightward ----
+            let dj = diag[j];
+            for r in 0..d_row {
+                let v = wf[r * d_col + j];
+                let k = keep[r * d_col + j];
+                let fz = frozen(v, k, r);
+                let e = (v - fz) / dj;
+                let hrow = &hcf[j * d_col..(j + 1) * d_col];
+                let wrow = &mut wf[r * d_col..(r + 1) * d_col];
+                for jj in j + 1..ib {
+                    wrow[jj] -= e * hrow[jj];
+                }
+                wrow[j] = fz;
+                err[r * (ib - i) + (j - i)] = e;
+            }
+        }
+        // ---- lazy trailing update: W[:, ib:] -= E @ Hc[i:ib, ib:] ----
+        if ib < d_col {
+            for r in 0..d_row {
+                for (jidx, j) in (i..ib).enumerate() {
+                    let e = err[r * (ib - i) + jidx];
+                    if e == 0.0 {
+                        continue;
+                    }
+                    let hrow = &hcf[j * d_col..(j + 1) * d_col];
+                    let wrow = &mut wf[r * d_col..(r + 1) * d_col];
+                    for jj in ib..d_col {
+                        wrow[jj] -= e * hrow[jj];
+                    }
+                }
+            }
+        }
+        i = ib;
+    }
+
+    (
+        Tensor::new(vec![d_row, d_col], wf.iter().map(|&x| x as f32).collect()),
+        Tensor::new(vec![d_row, d_col], keep.iter().map(|&x| x as f32).collect()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::hessian::{dampened_hinv_chol_f64, layer_sq_error};
+    use crate::solver::magnitude::magnitude_prune;
+    use crate::util::prng::Rng;
+
+    pub(crate) fn problem(seed: u64, r: usize, c: usize) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect());
+        let n = 2 * c;
+        let x = Tensor::new(vec![n, c], (0..n * c).map(|_| rng.normal_f32()).collect());
+        let h = x.transpose2().matmul(&x);
+        let hc = dampened_hinv_chol_f64(&h, 0.01).unwrap();
+        (w, h, hc)
+    }
+
+    #[test]
+    fn exact_density_and_zeros() {
+        let (w, _h, hc) = problem(0, 32, 64);
+        for p in [0.25, 0.5, 0.75] {
+            let (wh, mask) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(p), 0, 128);
+            let kept: f32 = mask.data().iter().sum();
+            assert_eq!(kept as usize, ((1.0 - p) * (32.0 * 64.0)).round() as usize);
+            for (x, m) in wh.data().iter().zip(mask.data()) {
+                if *m == 0.0 {
+                    assert_eq!(*x, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nm_constraint_satisfied() {
+        let (w, _h, hc) = problem(1, 16, 32);
+        let (_wh, mask) = ref_sparsegpt(&w, &hc, Pattern::NM(2, 4), 0, 128);
+        for r in 0..16 {
+            for g in (0..32).step_by(4) {
+                let kept: f32 = (g..g + 4).map(|j| mask.at2(r, j)).sum();
+                assert_eq!(kept, 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn beats_magnitude_in_layer_error() {
+        let (w, h, hc) = problem(2, 48, 96);
+        let (wh, _) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.5), 0, 128);
+        let (wm, _) = magnitude_prune(&w, 0.5);
+        let e_s = layer_sq_error(&w, &wh, &h);
+        let e_m = layer_sq_error(&w, &wm, &h);
+        assert!(e_s < e_m, "sparsegpt {e_s} vs magnitude {e_m}");
+    }
+
+    #[test]
+    fn blocksize_invariance_without_selection_drift() {
+        // With the same Bs the algorithm is exact in the window split; using
+        // b = d_col vs b = 32 changes the selection granularity, so compare
+        // a fixed mask path: p = 0 with quantization (no selection at all).
+        let (w, _h, hc) = problem(3, 16, 64);
+        let (a, _) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.0), 7, 64);
+        let (b, _) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.0), 7, 16);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn joint_quant_outputs_on_grid() {
+        let (w, _h, hc) = problem(4, 16, 32);
+        let levels = 15;
+        let (wh, mask) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.5), levels, 128);
+        let grid = QuantGrid::from_weights(&w, levels);
+        for r in 0..16 {
+            for c in 0..32 {
+                if mask.at2(r, c) == 1.0 {
+                    let v = wh.at2(r, c);
+                    let q = grid.quantize_one(r, v);
+                    assert!((v - q).abs() < 1e-5, "off-grid value {v}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Dense baseline: y = x @ W^T with register-blocked inner loops — the
+//! "cuBLAS / dense DeepSparse" stand-in that the sparse kernels are
+//! measured against. Single-threaded (the testbed is one core).
+
+use crate::tensor::Tensor;
+
+/// y[t, o] = sum_k x[t, k] * w[o, k];  x: (T, K), w: (O, K) -> y: (T, O).
+///
+/// Same token-major axpy structure as the sparse kernels (one contiguous
+/// vectorizable update per weight), so Table 7/8 compare identical kernel
+/// shapes that differ only in how many weight terms they visit.
+pub fn dense_layer(x: &Tensor, w: &Tensor) -> Tensor {
+    let (t_n, k_n) = (x.rows(), x.cols());
+    let (o_n, k2) = (w.rows(), w.cols());
+    assert_eq!(k_n, k2);
+    let xt = x.transpose2();
+    let xd = xt.data();
+    let wd = w.data();
+    let mut y = vec![0.0f32; t_n * o_n];
+    const TB: usize = 256;
+    let mut acc = vec![0.0f32; TB];
+    for t0 in (0..t_n).step_by(TB) {
+        let tb = TB.min(t_n - t0);
+        for o in 0..o_n {
+            let wr = &wd[o * k_n..(o + 1) * k_n];
+            let a = &mut acc[..tb];
+            a.fill(0.0);
+            for (k, &v) in wr.iter().enumerate() {
+                let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
+                for (av, xv) in a.iter_mut().zip(xr) {
+                    *av += v * xv;
+                }
+            }
+            for (tt, &av) in a.iter().enumerate() {
+                y[(t0 + tt) * o_n + o] = av;
+            }
+        }
+    }
+    Tensor::new(vec![t_n, o_n], y)
+}
+
+/// Register-blocked row-major variant (kept for comparison).
+pub fn dense_layer_rowmajor(x: &Tensor, w: &Tensor) -> Tensor {
+    let (t_n, k_n) = (x.rows(), x.cols());
+    let (o_n, k2) = (w.rows(), w.cols());
+    assert_eq!(k_n, k2);
+    let mut y = vec![0.0f32; t_n * o_n];
+    let xd = x.data();
+    let wd = w.data();
+    // process 4 output rows at a time to reuse the x row in registers
+    let mut o = 0;
+    while o + 4 <= o_n {
+        let w0 = &wd[o * k_n..(o + 1) * k_n];
+        let w1 = &wd[(o + 1) * k_n..(o + 2) * k_n];
+        let w2 = &wd[(o + 2) * k_n..(o + 3) * k_n];
+        let w3 = &wd[(o + 3) * k_n..(o + 4) * k_n];
+        for t in 0..t_n {
+            let xr = &xd[t * k_n..(t + 1) * k_n];
+            let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+            for k in 0..k_n {
+                let xv = xr[k];
+                a0 += xv * w0[k];
+                a1 += xv * w1[k];
+                a2 += xv * w2[k];
+                a3 += xv * w3[k];
+            }
+            let yr = &mut y[t * o_n + o..t * o_n + o + 4];
+            yr[0] = a0;
+            yr[1] = a1;
+            yr[2] = a2;
+            yr[3] = a3;
+        }
+        o += 4;
+    }
+    while o < o_n {
+        let wr = &wd[o * k_n..(o + 1) * k_n];
+        for t in 0..t_n {
+            let xr = &xd[t * k_n..(t + 1) * k_n];
+            let mut acc = 0f32;
+            for k in 0..k_n {
+                acc += xr[k] * wr[k];
+            }
+            y[t * o_n + o] = acc;
+        }
+        o += 1;
+    }
+    Tensor::new(vec![t_n, o_n], y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matches_tensor_matmul() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::new(vec![9, 33], (0..9 * 33).map(|_| rng.normal_f32()).collect());
+        let w = Tensor::new(vec![14, 33], (0..14 * 33).map(|_| rng.normal_f32()).collect());
+        let y = dense_layer(&x, &w);
+        let yref = x.matmul(&w.transpose2());
+        for (a, b) in y.data().iter().zip(yref.data()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! CPU sparse inference engine — the substrate for the paper's Appendix-E
+//! acceleration study (Table 7: DeepSparse-style unstructured speedups;
+//! Table 8: CUTLASS-style 2:4 structured speedups).
+//!
+//! Computes y = x @ W^T for a layer with weights W (d_out, d_in) over a
+//! batch of token activations x (tokens, d_in), in three regimes: dense
+//! reference GEMM, CSR (unstructured sparsity), and 2:4 structured.
+
+pub mod csr;
+pub mod gemm;
+pub mod nm;
+
+pub use csr::CsrMatrix;
+pub use gemm::dense_layer;
+pub use nm::NmMatrix;

@@ -1,0 +1,242 @@
+//! 2:4 (general n:m) structured storage + kernel — the CPU analog of the
+//! Ampere sparse-tensor-core regime benchmarked in Table 8. Exactly n
+//! values survive per group of m consecutive inputs, so values pack densely
+//! and indices fit in a u8 per kept value; the inner loop is fully regular
+//! (no per-row length variation), which is what makes the format fast in
+//! hardware.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct NmMatrix {
+    pub n: usize,
+    pub m: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// (rows * cols/m * n) packed kept values
+    pub values: Vec<f32>,
+    /// within-group column offsets of each kept value
+    pub offsets: Vec<u8>,
+}
+
+impl NmMatrix {
+    /// Pack a dense matrix that satisfies the n:m constraint (exactly
+    /// m - n zeros per group — as produced by the n:m solvers).
+    pub fn from_dense(w: &Tensor, n: usize, m: usize) -> Result<NmMatrix> {
+        let (rows, cols) = (w.rows(), w.cols());
+        if cols % m != 0 {
+            bail!("cols {cols} not divisible by m {m}");
+        }
+        let groups = cols / m;
+        let mut values = Vec::with_capacity(rows * groups * n);
+        let mut offsets = Vec::with_capacity(rows * groups * n);
+        for r in 0..rows {
+            let row = w.row(r);
+            for g in 0..groups {
+                let base = g * m;
+                let mut kept = 0;
+                for j in 0..m {
+                    let v = row[base + j];
+                    if v != 0.0 {
+                        if kept == n {
+                            bail!("row {r} group {g} violates {n}:{m} (too many nonzeros)");
+                        }
+                        values.push(v);
+                        offsets.push(j as u8);
+                        kept += 1;
+                    }
+                }
+                // pad groups with fewer than n nonzeros (zeros are valid)
+                while kept < n {
+                    values.push(0.0);
+                    offsets.push(0);
+                    kept += 1;
+                }
+            }
+        }
+        Ok(NmMatrix { n, m, rows, cols, values, offsets })
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let groups = self.cols / self.m;
+        for r in 0..self.rows {
+            for g in 0..groups {
+                for i in 0..self.n {
+                    let k = (r * groups + g) * self.n + i;
+                    let v = self.values[k];
+                    if v != 0.0 {
+                        out[r * self.cols + g * self.m + self.offsets[k] as usize] = v;
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// y = x @ W^T on the token-major layout (cf. `CsrMatrix::layer`): each
+    /// kept value contributes a contiguous vectorizable axpy over the token
+    /// tile — the CPU analog of the sparse-tensor-core dataflow.
+    pub fn layer(&self, x: &Tensor) -> Tensor {
+        let (t_n, k_n) = (x.rows(), x.cols());
+        assert_eq!(k_n, self.cols);
+        let o_n = self.rows;
+        let groups = self.cols / self.m;
+        let per_row = groups * self.n;
+        let xt = x.transpose2();
+        let xd = xt.data();
+        let mut y = vec![0.0f32; t_n * o_n];
+        const TB: usize = 256;
+        let mut acc = vec![0.0f32; TB];
+        for t0 in (0..t_n).step_by(TB) {
+            let tb = TB.min(t_n - t0);
+            for o in 0..o_n {
+                let base = o * per_row;
+                let a = &mut acc[..tb];
+                a.fill(0.0);
+                for g in 0..groups {
+                    let gb = g * self.m;
+                    for i in 0..self.n {
+                        let idx = base + g * self.n + i;
+                        let v = self.values[idx];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let k = gb + self.offsets[idx] as usize;
+                        let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
+                        for (av, xv) in a.iter_mut().zip(xr) {
+                            *av += v * xv;
+                        }
+                    }
+                }
+                for (tt, &av) in a.iter().enumerate() {
+                    y[(t0 + tt) * o_n + o] = av;
+                }
+            }
+        }
+        Tensor::new(vec![t_n, o_n], y)
+    }
+
+    /// Scalar gather variant (kept for reference / tiny batches).
+    pub fn layer_gather(&self, x: &Tensor) -> Tensor {
+        let (t_n, k_n) = (x.rows(), x.cols());
+        assert_eq!(k_n, self.cols);
+        let o_n = self.rows;
+        let groups = self.cols / self.m;
+        let mut y = vec![0.0f32; t_n * o_n];
+        let xd = x.data();
+        if self.n == 2 {
+            // 4-token blocking amortizes the offset decode (cf. csr.rs)
+            for o in 0..o_n {
+                let base = o * groups * 2;
+                let vals = &self.values[base..base + groups * 2];
+                let offs = &self.offsets[base..base + groups * 2];
+                let mut t = 0;
+                while t + 4 <= t_n {
+                    let (x0, rest) = xd[t * k_n..].split_at(k_n);
+                    let (x1, rest) = rest.split_at(k_n);
+                    let (x2, rest) = rest.split_at(k_n);
+                    let x3 = &rest[..k_n];
+                    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+                    for g in 0..groups {
+                        let gb = g * self.m;
+                        let i = g * 2;
+                        let (k0, v0) = (gb + offs[i] as usize, vals[i]);
+                        let (k1, v1) = (gb + offs[i + 1] as usize, vals[i + 1]);
+                        a0 += v0 * x0[k0] + v1 * x0[k1];
+                        a1 += v0 * x1[k0] + v1 * x1[k1];
+                        a2 += v0 * x2[k0] + v1 * x2[k1];
+                        a3 += v0 * x3[k0] + v1 * x3[k1];
+                    }
+                    y[t * o_n + o] = a0;
+                    y[(t + 1) * o_n + o] = a1;
+                    y[(t + 2) * o_n + o] = a2;
+                    y[(t + 3) * o_n + o] = a3;
+                    t += 4;
+                }
+                while t < t_n {
+                    let xr = &xd[t * k_n..(t + 1) * k_n];
+                    let mut acc = 0f32;
+                    for g in 0..groups {
+                        let gb = g * self.m;
+                        let i = g * 2;
+                        acc += vals[i] * xr[gb + offs[i] as usize]
+                            + vals[i + 1] * xr[gb + offs[i + 1] as usize];
+                    }
+                    y[t * o_n + o] = acc;
+                    t += 1;
+                }
+            }
+        } else {
+            for o in 0..o_n {
+                let base = o * groups * self.n;
+                for t in 0..t_n {
+                    let xr = &xd[t * k_n..(t + 1) * k_n];
+                    let mut acc = 0f32;
+                    for g in 0..groups {
+                        let gb = g * self.m;
+                        for i in 0..self.n {
+                            let k = base + g * self.n + i;
+                            acc += self.values[k] * xr[gb + self.offsets[k] as usize];
+                        }
+                    }
+                    y[t * o_n + o] = acc;
+                }
+            }
+        }
+        Tensor::new(vec![t_n, o_n], y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::magnitude::magnitude_prune_nm;
+    use crate::sparse::gemm::dense_layer;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn pack_roundtrip_and_layer_match() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::new(vec![16, 32], (0..512).map(|_| rng.normal_f32()).collect());
+        let (w24, _) = magnitude_prune_nm(&w, 2, 4);
+        let nm = NmMatrix::from_dense(&w24, 2, 4).unwrap();
+        assert_eq!(nm.to_dense(), w24);
+        let x = Tensor::new(vec![5, 32], (0..160).map(|_| rng.normal_f32()).collect());
+        let a = nm.layer(&x);
+        let b = dense_layer(&x, &w24);
+        for (p, q) in a.data().iter().zip(b.data()) {
+            assert!((p - q).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rejects_violations() {
+        let w = Tensor::ones(vec![2, 4]); // fully dense violates 2:4
+        assert!(NmMatrix::from_dense(&w, 2, 4).is_err());
+    }
+
+    #[test]
+    fn accepts_extra_zeros() {
+        let w = Tensor::new(vec![1, 4], vec![1.0, 0.0, 0.0, 0.0]);
+        let nm = NmMatrix::from_dense(&w, 2, 4).unwrap();
+        assert_eq!(nm.to_dense(), w);
+    }
+
+    #[test]
+    fn four_eight_pattern() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::new(vec![8, 16], (0..128).map(|_| rng.normal_f32()).collect());
+        let (w48, _) = magnitude_prune_nm(&w, 4, 8);
+        let nm = NmMatrix::from_dense(&w48, 4, 8).unwrap();
+        assert_eq!(nm.to_dense(), w48);
+        let x = Tensor::new(vec![3, 16], (0..48).map(|_| rng.normal_f32()).collect());
+        let a = nm.layer(&x);
+        let b = dense_layer(&x, &w48);
+        for (p, q) in a.data().iter().zip(b.data()) {
+            assert!((p - q).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! f64 dense linear algebra for the reference solvers and verification.
+//!
+//! The production Hessian-preparation chain runs inside XLA (the
+//! `hessian_prep_<dim>` artifact, see `python/compile/linalg_jnp.py`); this
+//! module provides the same chain in f64 for cross-checking, for the exact
+//! per-row OBS reconstruction of the Fig-11 experiment, and for small
+//! utilities (power iteration for the AdaPrune step size).
+
+/// Column-major-free, simple row-major (n x n) f64 matrix helpers.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Mat {
+        Mat { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            m.a[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_f32(n: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), n * n);
+        Mat { n, a: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.a.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let n = self.n;
+        let mut t = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                t.a[j * n + i] = self.a[i * n + j];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        let n = self.n;
+        assert_eq!(n, rhs.n);
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.a[i * n + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &rhs.a[k * n..(k + 1) * n];
+                let orow = &mut out.a[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// In-place lower Cholesky: A = L L^T. Returns None if not SPD.
+pub fn cholesky_lower(a: &Mat) -> Option<Mat> {
+    let n = a.n;
+    let mut l = Mat::zeros(n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, s.sqrt());
+            } else {
+                l.set(i, j, s / l.at(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Inverse of a lower-triangular matrix by forward substitution.
+pub fn tril_inverse(l: &Mat) -> Mat {
+    let n = l.n;
+    let mut x = Mat::zeros(n);
+    for j in 0..n {
+        x.set(j, j, 1.0 / l.at(j, j));
+        for i in j + 1..n {
+            let mut s = 0.0;
+            for k in j..i {
+                s += l.at(i, k) * x.at(k, j);
+            }
+            x.set(i, j, -s / l.at(i, i));
+        }
+    }
+    x
+}
+
+/// Add `damp * mean(diag)` to the diagonal (the paper's App-A dampening).
+pub fn dampen(h: &Mat, damp: f64) -> Mat {
+    let n = h.n;
+    let mut mean = (0..n).map(|i| h.at(i, i)).sum::<f64>() / n as f64;
+    if mean <= 0.0 {
+        mean = 1.0;
+    }
+    let mut out = h.clone();
+    for i in 0..n {
+        out.a[i * n + i] += damp * mean;
+    }
+    out
+}
+
+/// The full SparseGPT Hessian chain: H -> upper factor U with
+/// (H + damp*mean(diag)*I)^{-1} = U^T U. Mirrors `hessian_prep_fn`.
+pub fn hessian_prep(h: &Mat, damp: f64) -> Option<Mat> {
+    let hd = dampen(h, damp);
+    let l = cholesky_lower(&hd)?;
+    let linv = tril_inverse(&l);
+    let hinv = linv.transpose().matmul(&linv);
+    let c = cholesky_lower(&hinv)?;
+    Some(c.transpose())
+}
+
+/// Solve A x = b for SPD A via Cholesky (used by the exact OBS solver).
+pub fn spd_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.n;
+    assert_eq!(b.len(), n);
+    let l = cholesky_lower(a)?;
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.at(i, k) * y[k];
+        }
+        y[i] = s / l.at(i, i);
+    }
+    // backward: L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l.at(k, i) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    Some(x)
+}
+
+/// Largest-eigenvalue estimate by power iteration (for the AdaPrune lr).
+pub fn lambda_max(h: &Mat, iters: usize, seed: u64) -> f64 {
+    let n = h.n;
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let mut w = vec![0.0; n];
+        for i in 0..n {
+            let row = &h.a[i * n..(i + 1) * n];
+            w[i] = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+        }
+        lam = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if lam == 0.0 {
+            return 0.0;
+        }
+        for x in &mut w {
+            *x /= lam;
+        }
+        v = w;
+    }
+    lam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let rows = 2 * n;
+        let x: Vec<f64> = (0..rows * n).map(|_| rng.normal()).collect();
+        let mut h = Mat::zeros(n);
+        for r in 0..rows {
+            for i in 0..n {
+                for j in 0..n {
+                    h.a[i * n + j] += x[r * n + i] * x[r * n + j];
+                }
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let h = random_spd(24, 1);
+        let l = cholesky_lower(&h).unwrap();
+        let llt = l.matmul(&l.transpose());
+        for i in 0..h.n * h.n {
+            assert!((llt.a[i] - h.a[i]).abs() < 1e-8 * (1.0 + h.a[i].abs()));
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut m = Mat::eye(3);
+        m.set(2, 2, -1.0);
+        assert!(cholesky_lower(&m).is_none());
+    }
+
+    #[test]
+    fn tril_inverse_identity() {
+        let h = random_spd(16, 2);
+        let l = cholesky_lower(&h).unwrap();
+        let li = tril_inverse(&l);
+        let prod = li.matmul(&l);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn hessian_prep_factor_property() {
+        // U^T U must equal (H + damp mean(diag) I)^{-1}
+        let h = random_spd(20, 3);
+        let u = hessian_prep(&h, 0.01).unwrap();
+        let hinv = u.transpose().matmul(&u);
+        let hd = dampen(&h, 0.01);
+        let prod = hinv.matmul(&hd);
+        for i in 0..20 {
+            for j in 0..20 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-7, "{} {}", i, j);
+            }
+        }
+        // upper-triangular
+        for i in 0..20 {
+            for j in 0..i {
+                assert_eq!(u.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn spd_solve_matches() {
+        let h = random_spd(12, 4);
+        let mut rng = Rng::new(5);
+        let x_true: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0; 12];
+        for i in 0..12 {
+            b[i] = (0..12).map(|j| h.at(i, j) * x_true[j]).sum();
+        }
+        let x = spd_solve(&h, &b).unwrap();
+        for i in 0..12 {
+            assert!((x[i] - x_true[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lambda_max_close_to_true() {
+        // diag matrix: lambda_max known exactly
+        let mut m = Mat::zeros(8);
+        for i in 0..8 {
+            m.set(i, i, (i + 1) as f64);
+        }
+        let lam = lambda_max(&m, 200, 0);
+        assert!((lam - 8.0).abs() < 1e-6, "{lam}");
+    }
+}

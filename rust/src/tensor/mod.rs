@@ -1,0 +1,202 @@
+//! Dense row-major f32 tensor + f64 linear algebra substrate.
+//!
+//! The heavy model math runs inside XLA; this tensor type exists for the
+//! coordinator's bookkeeping (weight slices, masks, Hessian accumulators),
+//! the pure-Rust reference solvers, and the CPU sparse inference engine.
+
+pub mod linalg;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![1.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(vec![c, r], out)
+    }
+
+    /// Dense matmul (blocked i-k-j), used by the sparse engine's baseline
+    /// and the reference solvers. Not the model hot path (that's XLA).
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (rhs.rows(), rhs.cols());
+        assert_eq!(k, k2, "matmul dim mismatch");
+        let mut out = vec![0.0f32; m * n];
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let ke = (kb + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in kb..ke {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &rhs.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Fraction of exactly-zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64 / self.data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut rng = crate::util::prng::Rng::new(1);
+        let (m, k, n) = (13, 37, 9);
+        let a = Tensor::new(vec![m, k], (0..m * k).map(|_| rng.normal_f32()).collect());
+        let b = Tensor::new(vec![k, n], (0..k * n).map(|_| rng.normal_f32()).collect());
+        let c = a.matmul(&b);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for kk in 0..k {
+                    s += a.at2(i, kk) as f64 * b.at2(kk, j) as f64;
+                }
+                assert!((c.at2(i, j) as f64 - s).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = crate::util::prng::Rng::new(2);
+        let a = Tensor::new(vec![5, 7], (0..35).map(|_| rng.normal_f32()).collect());
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let t = Tensor::new(vec![2, 2], vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(t.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(vec![2, 3]);
+        assert!(t.clone().reshape(vec![3, 2]).is_ok());
+        assert!(t.reshape(vec![4, 2]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates: PRNG, JSON, timing.
+//!
+//! The build is fully offline (only the vendored `xla` + `anyhow` crates are
+//! available), so the usual ecosystem crates (rand, serde, criterion) are
+//! replaced by the minimal implementations in this module tree.
+
+pub mod json;
+pub mod prng;
+pub mod timer;

@@ -1,0 +1,126 @@
+//! Failure-injection tests: every malformed input the pipeline can meet in
+//! the field must produce a clean error (never corruption or a panic).
+
+use sparsegpt::data::{Dataset, Tokenizer};
+use sparsegpt::model::checkpoint::Checkpoint;
+use sparsegpt::model::Manifest;
+use sparsegpt::solver::hessian::dampened_hinv_chol_f64;
+use sparsegpt::tensor::Tensor;
+use sparsegpt::util::json::Json;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("sgpt_fi_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn manifest_missing_dir_is_clean_error() {
+    let err = Manifest::load("/definitely/not/here").unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn manifest_garbage_json_is_clean_error() {
+    let d = tmpdir("manifest");
+    std::fs::write(d.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&d).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn manifest_wrong_schema_is_clean_error() {
+    let d = tmpdir("schema");
+    std::fs::write(d.join("manifest.json"), r#"{"version": 1}"#).unwrap();
+    assert!(Manifest::load(&d).is_err());
+    // artifacts present but inputs malformed
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,"seq":128,"vocab":512,"chunk_tokens":1024,"blocksize":128,
+            "configs":{},"artifacts":{"x":{"file":"x.hlo.txt","inputs":[["float99",[2]]],"outputs":[]}}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&d).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn checkpoint_truncated_is_clean_error() {
+    let d = tmpdir("ckpt");
+    let ck = Checkpoint {
+        config_name: "nano".into(),
+        step: 1,
+        params: vec![1.0; 100],
+        adam: None,
+    };
+    let p = d.join("t.ckpt");
+    ck.save(&p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &bytes[..bytes.len() - 37]).unwrap();
+    assert!(Checkpoint::load(&p).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn checkpoint_wrong_config_rejected() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        return;
+    }
+    let m = Manifest::load(dir).unwrap();
+    let nano = m.config("nano").unwrap();
+    let ck = Checkpoint {
+        config_name: "micro".into(),
+        step: 0,
+        params: vec![0.0; 10],
+        adam: None,
+    };
+    assert!(ck.into_flat_params(nano).is_err());
+}
+
+#[test]
+fn singular_hessian_fails_or_dampens() {
+    // rank-1 Hessian: undampened cholesky must fail; dampened must succeed
+    let x = Tensor::new(vec![1, 8], vec![1.0; 8]);
+    let h = x.transpose2().matmul(&x);
+    assert!(dampened_hinv_chol_f64(&h, 0.0).is_none());
+    let u = dampened_hinv_chol_f64(&h, 0.01).unwrap();
+    assert!(u.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn zero_hessian_guarded() {
+    let h = Tensor::zeros(vec![8, 8]);
+    // mean diag is 0 -> the guard substitutes 1.0, factor must be finite
+    let u = dampened_hinv_chol_f64(&h, 0.01).unwrap();
+    assert!(u.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn tokenizer_bad_file_is_clean_error() {
+    let d = tmpdir("tok");
+    let p = d.join("tok.txt");
+    std::fs::write(&p, "wrong-header 3\n1 2\n").unwrap();
+    assert!(Tokenizer::load(&p).is_err());
+    std::fs::write(&p, "sgpt-bpe-v1 5\n1 2\n").unwrap(); // truncated merges
+    assert!(Tokenizer::load(&p).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn dataset_odd_byte_length_rejected() {
+    let d = tmpdir("ds");
+    let p = d.join("x.tokens");
+    std::fs::write(&p, [0u8, 1, 2]).unwrap();
+    assert!(Dataset::load_tokens("x", &p).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn json_writer_escapes_are_reparseable() {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("k\"ey\n".to_string(), Json::Str("v\\al\tue \u{7}".into()));
+    let s = Json::Obj(obj).to_string_pretty();
+    let back = Json::parse(&s).unwrap();
+    assert_eq!(back.get("k\"ey\n").unwrap().as_str().unwrap(), "v\\al\tue \u{7}");
+}

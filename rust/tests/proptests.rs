@@ -1,0 +1,224 @@
+//! Hand-rolled property tests (proptest is unavailable offline): randomized
+//! inputs over many seeds, asserting the coordinator/solver invariants that
+//! the paper's method guarantees by construction.
+
+use sparsegpt::coordinator::SkipSpec;
+use sparsegpt::data::corpus::{gen_corpus, CorpusStyle, Lexicon};
+use sparsegpt::data::Tokenizer;
+use sparsegpt::model::layout::LinearKind;
+use sparsegpt::solver::exact::exact_reconstruction;
+use sparsegpt::solver::hessian::{dampened_hinv_chol_f64, layer_sq_error};
+use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+use sparsegpt::solver::quant::QuantGrid;
+use sparsegpt::solver::sparsegpt_ref::{ref_sparsegpt, Pattern};
+use sparsegpt::sparse::{dense_layer, CsrMatrix, NmMatrix};
+use sparsegpt::tensor::linalg::{dampen, Mat};
+use sparsegpt::tensor::Tensor;
+use sparsegpt::util::prng::Rng;
+
+const TRIALS: u64 = 12;
+
+fn problem(rng: &mut Rng, r: usize, c: usize) -> (Tensor, Tensor, Tensor) {
+    let w = Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect());
+    let n = 2 * c;
+    let x = Tensor::new(vec![n, c], (0..n * c).map(|_| rng.normal_f32()).collect());
+    let h = x.transpose2().matmul(&x);
+    let hc = dampened_hinv_chol_f64(&h, 0.01).unwrap();
+    (w, h, hc)
+}
+
+fn rand_shape(rng: &mut Rng) -> (usize, usize) {
+    let rows = [8, 16, 24, 48, 64];
+    let cols = [16, 32, 64, 96];
+    (rows[rng.below(rows.len())], cols[rng.below(cols.len())])
+}
+
+/// Property: the solver prunes exactly round(p * numel) weights (to zero).
+#[test]
+fn prop_solver_density_exact() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed);
+        let (r, c) = rand_shape(&mut rng);
+        let p = 0.1 + 0.8 * rng.f64();
+        let (w, _h, hc) = problem(&mut rng, r, c);
+        let (wh, mask) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(p), 0, 128);
+        let pruned = mask.data().iter().filter(|&&m| m == 0.0).count();
+        // selection happens per Bs-column block; sum the exact per-block counts
+        let bs = 128usize.min(c);
+        let mut expect = 0usize;
+        let mut i = 0;
+        while i < c {
+            let width = bs.min(c - i);
+            expect += (p * (r * width) as f64).round() as usize;
+            i += width;
+        }
+        assert_eq!(pruned, expect, "seed {seed} shape ({r},{c}) p {p}");
+        for (x, m) in wh.data().iter().zip(mask.data()) {
+            if *m == 0.0 {
+                assert_eq!(*x, 0.0);
+            }
+        }
+    }
+}
+
+/// Property: every n:m group has exactly n zeros, for all supported patterns.
+#[test]
+fn prop_nm_constraint() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xA0);
+        let r = 16 + 8 * rng.below(4);
+        let c = 32 + 32 * rng.below(3);
+        let (w, _h, hc) = problem(&mut rng, r, c);
+        for (n, m) in [(2usize, 4usize), (4, 8)] {
+            let (_, mask) = ref_sparsegpt(&w, &hc, Pattern::NM(n, m), 0, 128);
+            for row in 0..r {
+                for g in (0..c).step_by(m) {
+                    let kept: f32 = (g..g + m).map(|j| mask.at2(row, j)).sum();
+                    assert_eq!(kept as usize, m - n, "seed {seed} row {row} g {g}");
+                }
+            }
+        }
+    }
+}
+
+/// Property: SparseGPT's reconstruction error never exceeds mask-and-zero
+/// on its own mask, and exact reconstruction never exceeds SparseGPT.
+#[test]
+fn prop_error_ordering() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xB0);
+        let (r, c) = (16, 48);
+        let (w, h, hc) = problem(&mut rng, r, c);
+        let (wh, mask) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.5), 0, 128);
+        let hd_m = dampen(&Mat::from_f32(c, h.data()), 0.01);
+        let hd = Tensor::new(vec![c, c], hd_m.to_f32());
+        let we = exact_reconstruction(&w, &mask, &hd, None).unwrap();
+        let wz: Vec<f32> = w.data().iter().zip(mask.data()).map(|(x, m)| x * m).collect();
+        let wz = Tensor::new(vec![r, c], wz);
+        let (e_exact, e_sgpt, e_zero) = (
+            layer_sq_error(&w, &we, &hd),
+            layer_sq_error(&w, &wh, &hd),
+            layer_sq_error(&w, &wz, &hd),
+        );
+        assert!(e_exact <= e_sgpt * (1.0 + 1e-6), "seed {seed}: {e_exact} > {e_sgpt}");
+        assert!(e_sgpt <= e_zero * (1.0 + 1e-6), "seed {seed}: {e_sgpt} > {e_zero}");
+    }
+}
+
+/// Property: joint quantization keeps every surviving weight on its row grid.
+#[test]
+fn prop_joint_quant_on_grid() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xC0);
+        let (r, c) = (12, 32);
+        let (w, _h, hc) = problem(&mut rng, r, c);
+        let bits = [2u32, 3, 4][rng.below(3)];
+        let levels = (1u32 << bits) - 1;
+        let (wh, mask) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.4), levels, 128);
+        let grid = QuantGrid::from_weights(&w, levels);
+        for row in 0..r {
+            for col in 0..c {
+                if mask.at2(row, col) == 1.0 {
+                    let v = wh.at2(row, col);
+                    assert!(
+                        (v - grid.quantize_one(row, v)).abs() < 1e-5,
+                        "seed {seed} off-grid {v}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property: sparse engines agree with the dense GEMM on random masks.
+#[test]
+fn prop_sparse_engines_match_dense() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xD0);
+        let (o, k, t) = (8 + 4 * rng.below(8), 16 + 16 * rng.below(4), 1 + rng.below(9));
+        let w = Tensor::new(vec![o, k], (0..o * k).map(|_| rng.normal_f32()).collect());
+        let x = Tensor::new(vec![t, k], (0..t * k).map(|_| rng.normal_f32()).collect());
+        let p = rng.f64() * 0.9;
+        let (wp, _) = magnitude_prune(&w, p);
+        let yd = dense_layer(&x, &wp);
+        let yc = CsrMatrix::from_dense(&wp).layer(&x);
+        for (a, b) in yd.data().iter().zip(yc.data()) {
+            assert!((a - b).abs() < 1e-3, "csr mismatch seed {seed}");
+        }
+        let (w24, _) = magnitude_prune_nm(&w, 2, 4);
+        let ynm = NmMatrix::from_dense(&w24, 2, 4).unwrap().layer(&x);
+        let yd24 = dense_layer(&x, &w24);
+        for (a, b) in yd24.data().iter().zip(ynm.data()) {
+            assert!((a - b).abs() < 1e-3, "nm mismatch seed {seed}");
+        }
+    }
+}
+
+/// Property: tokenizer round-trips arbitrary byte strings.
+#[test]
+fn prop_tokenizer_roundtrip() {
+    let lex = Lexicon::new(0);
+    let text = gen_corpus(&lex, CorpusStyle::C4, 0, 30_000);
+    let tok = Tokenizer::train(&text[..20_000]);
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xE0);
+        let start = rng.below(text.len() - 200);
+        let mut s: String = text[start..].chars().take(150).collect();
+        if rng.f64() < 0.5 {
+            s.push_str("\u{00e9}\u{4e2d}!? 123");
+        }
+        assert_eq!(tok.decode(&tok.encode(&s)), s, "seed {seed}");
+    }
+}
+
+/// Property: skip policies partition the model consistently — every matrix
+/// is pruned by SkipSpec::None, each layer is skipped by exactly one Third,
+/// and PrefixFraction is monotone in the fraction.
+#[test]
+fn prop_skip_policies_consistent() {
+    for layers in [3usize, 6, 9, 12, 24] {
+        for l in 0..layers {
+            for kind in [LinearKind::Wq, LinearKind::Fc1, LinearKind::Fc2] {
+                assert!(SkipSpec::None.should_prune(l, kind, layers));
+                let skipped_by = (0..3)
+                    .filter(|&t| !SkipSpec::Third(t).should_prune(l, kind, layers))
+                    .count();
+                assert_eq!(skipped_by, 1);
+                let mut prev_pruned = true;
+                for f in [1.0, 0.75, 0.5, 0.25, 0.0] {
+                    let now = SkipSpec::PrefixFraction(f).should_prune(l, kind, layers);
+                    assert!(prev_pruned || !now, "prefix monotonicity violated");
+                    prev_pruned = now;
+                }
+            }
+        }
+    }
+}
+
+/// Property: magnitude n:m keeps exactly the top-n magnitudes per group.
+#[test]
+fn prop_magnitude_nm_optimal_per_group() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xF0);
+        let (r, c) = (8, 32);
+        let w = Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect());
+        let (wp, mask) = magnitude_prune_nm(&w, 2, 4);
+        for row in 0..r {
+            for g in (0..c).step_by(4) {
+                let mut kept: Vec<f32> = Vec::new();
+                let mut dropped: Vec<f32> = Vec::new();
+                for j in g..g + 4 {
+                    if mask.at2(row, j) == 1.0 {
+                        kept.push(w.at2(row, j).abs());
+                    } else {
+                        dropped.push(w.at2(row, j).abs());
+                    }
+                }
+                let min_kept = kept.iter().cloned().fold(f32::INFINITY, f32::min);
+                let max_drop = dropped.iter().cloned().fold(0.0, f32::max);
+                assert!(min_kept >= max_drop - 1e-6);
+            }
+        }
+        assert!((wp.sparsity() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,163 @@
+//! Integration: the Rust runtime executes real AOT artifacts and the HLO
+//! solver path agrees with the pure-Rust f64 reference solver.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (pass
+//! trivially) when the artifacts directory is absent so `cargo test` stays
+//! green on a fresh checkout.
+
+use sparsegpt::model::Manifest;
+use sparsegpt::runtime::{ArgValue, Runtime};
+use sparsegpt::solver::hessian::dampened_hinv_chol_f64;
+use sparsegpt::solver::sparsegpt_ref::{ref_sparsegpt, Pattern};
+use sparsegpt::tensor::Tensor;
+use sparsegpt::util::prng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Runtime::with_dir(dir).expect("runtime"))
+}
+
+fn random_problem(rng: &mut Rng, r: usize, c: usize) -> (Tensor, Tensor, Tensor) {
+    let w = Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect());
+    let n = 2 * c;
+    let x = Tensor::new(vec![n, c], (0..n * c).map(|_| rng.normal_f32()).collect());
+    let h = x.transpose2().matmul(&x);
+    let hc = dampened_hinv_chol_f64(&h, 0.01).expect("hinv chol");
+    (w, h, hc)
+}
+
+#[test]
+fn hessian_artifact_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(0);
+    let n = rt.manifest.chunk_tokens;
+    let dim = 64;
+    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32()).collect();
+    let out = rt.run("hessian_64", &[ArgValue::F32(&x)]).unwrap();
+    let xt = Tensor::new(vec![n, dim], x.clone());
+    let href = xt.transpose2().matmul(&xt);
+    let max_err = out[0]
+        .data()
+        .iter()
+        .zip(href.data())
+        .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "max_err {max_err}");
+}
+
+#[test]
+fn hessian_prep_artifact_matches_rust_f64() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let dim = 64;
+    let n = 2 * dim;
+    let x = Tensor::new(vec![n, dim], (0..n * dim).map(|_| rng.normal_f32()).collect());
+    let h = x.transpose2().matmul(&x);
+    let out = rt
+        .run("hessian_prep_64", &[ArgValue::F32(h.data()), ArgValue::Scalar(0.01)])
+        .unwrap();
+    let href = dampened_hinv_chol_f64(&h, 0.01).unwrap();
+    let scale = href.data().iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    let max_err = out[0]
+        .data()
+        .iter()
+        .zip(href.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err / scale < 1e-3, "max_err {max_err} scale {scale}");
+}
+
+#[test]
+fn sparsegpt_artifact_matches_reference_solver() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    let (r, c) = (64, 64);
+    let (w, _h, hc) = random_problem(&mut rng, r, c);
+    let out = rt
+        .run(
+            "sparsegpt_64x64",
+            &[
+                ArgValue::F32(w.data()),
+                ArgValue::F32(hc.data()),
+                ArgValue::Scalar(0.5),
+                ArgValue::Scalar(0.0),
+            ],
+        )
+        .unwrap();
+    let (w_ref, mask_ref) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.5), 0, 128);
+    assert_eq!(out[1].data(), mask_ref.data(), "mask mismatch");
+    let max_err = out[0]
+        .data()
+        .iter()
+        .zip(w_ref.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 5e-4, "weights mismatch {max_err}");
+    // density exact
+    let kept: f32 = out[1].data().iter().sum();
+    assert_eq!(kept as usize, r * c / 2);
+}
+
+#[test]
+fn sparsegpt24_artifact_enforces_pattern() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let (r, c) = (64, 64);
+    let (w, _h, hc) = random_problem(&mut rng, r, c);
+    let out = rt
+        .run(
+            "sparsegpt24_64x64",
+            &[
+                ArgValue::F32(w.data()),
+                ArgValue::F32(hc.data()),
+                ArgValue::Scalar(0.0),
+            ],
+        )
+        .unwrap();
+    let mask = &out[1];
+    for row in 0..r {
+        for g in (0..c).step_by(4) {
+            let kept: f32 = (g..g + 4).map(|j| mask.at2(row, j)).sum();
+            assert_eq!(kept, 2.0, "row {row} group {g}");
+        }
+    }
+    // pruned entries are exactly zero in the weights
+    for i in 0..r {
+        for j in 0..c {
+            if mask.at2(i, j) == 0.0 {
+                assert_eq!(out[0].at2(i, j), 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn nll_artifact_runs_and_is_finite() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest.config("nano").unwrap().clone();
+    let fp = sparsegpt::model::init::init_params(&cfg, 0);
+    let mut rng = Rng::new(4);
+    let toks: Vec<i32> = (0..cfg.eval_batch * (cfg.seq + 1))
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    let out = rt
+        .run("nll_nano", &[ArgValue::F32(&fp.data), ArgValue::I32(&toks)])
+        .unwrap();
+    assert_eq!(out[0].shape(), &[cfg.eval_batch, cfg.seq]);
+    let mean: f32 = out[0].data().iter().sum::<f32>() / out[0].len() as f32;
+    assert!(mean.is_finite() && mean > 0.0);
+    // roughly log(vocab) at init
+    assert!((mean - (cfg.vocab as f32).ln()).abs() < 1.5, "mean {mean}");
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    let w = vec![0f32; 10];
+    assert!(rt.run("sparsegpt_64x64", &[ArgValue::F32(&w)]).is_err());
+    assert!(rt.run("does_not_exist", &[]).is_err());
+}
