@@ -1,12 +1,10 @@
 //! End-to-end driver: proves every layer of the stack composes on a real
-//! workload. In one process it
-//!   1. generates data if missing (synthetic corpora + BPE tokenizer),
-//!   2. trains the target transformer from scratch for a few hundred steps
-//!      through the `train_step` HLO artifact, logging the loss curve,
-//!   3. one-shot prunes it with SparseGPT (50%, 2:4) and magnitude,
-//!   4. evaluates perplexity on all three held-out corpora and the
-//!      five zero-shot tasks,
-//!   5. writes the whole record to reports/e2e_<config>.{txt,csv}.
+//! workload — now four `api::Session` jobs instead of hand-wired plumbing:
+//!   1. a `GenData` job if the corpora are missing,
+//!   2. an `E2e` job (train from scratch unless a checkpoint exists, then
+//!      one-shot prune with magnitude / SparseGPT-50% / SparseGPT-2:4 over
+//!      shared calibration, then perplexity + zero-shot on each variant),
+//!   3. the whole record written to reports/e2e_<config>.{txt,csv}.
 //!
 //! Defaults to the `medium` (~25M) config; pass a config name to override —
 //! `large` (~85M, the OPT-175B stand-in) is the full-scale run recorded in
@@ -15,106 +13,57 @@
 //! Run: cargo run --release --example e2e_pipeline [-- <config> [steps]]
 
 use anyhow::Result;
-use sparsegpt::bench::{eval_all, prune_variant};
-use sparsegpt::coordinator::{PruneMethod, TrainOptions, Trainer};
-use sparsegpt::data::corpus::Lexicon;
+use sparsegpt::api::{E2eSpec, GenDataSpec, HumanSink, JobSpec, Session};
 use sparsegpt::eval::report::{fmt_ppl, Table};
-use sparsegpt::eval::zeroshot::{gen_items, zero_shot_accuracy, ZeroShotTask};
-use sparsegpt::harness::{generate_data, Workspace, CALIB_SET};
-use sparsegpt::model::checkpoint::Checkpoint;
-use sparsegpt::model::init::init_params;
-use sparsegpt::solver::sparsegpt_ref::Pattern;
 
 fn main() -> Result<()> {
     let config = std::env::args().nth(1).unwrap_or_else(|| "medium".to_string());
     let steps: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(300);
 
-    let ws = Workspace::open()?;
-    let cfg = ws.config(&config)?;
-    println!("=== e2e: {config} ({} params) ===", cfg.n_params);
+    let mut session = Session::new();
+    let mut sink = HumanSink::new();
 
-    // 1. data
-    if !ws.data_dir.join("tokenizer.txt").exists() {
-        println!("[e2e] generating data...");
-        generate_data(&ws.data_dir, 0, 4)?;
+    // 1. data (idempotent: only when the tokenizer is missing)
+    let data_dir = session.workspace()?.data_dir.clone();
+    if !data_dir.join("tokenizer.txt").exists() {
+        let gen = GenDataSpec { out: data_dir, ..Default::default() };
+        session.run(&JobSpec::GenData(gen), &mut sink)?;
     }
-    let data = ws.dataset(CALIB_SET)?;
 
-    // 2. train (resume from an existing checkpoint when present)
-    let ckpt_path = Checkpoint::path_for(&ws.ckpt_dir, &config, "");
-    let (params, losses) = if ckpt_path.exists() {
-        println!("[e2e] using existing checkpoint {ckpt_path:?}");
-        (ws.load_model(&config)?, Vec::new())
-    } else {
-        let mut opts = TrainOptions::for_config(&config, steps);
-        opts.out = Some(ws.ckpt_dir.clone());
-        opts.log_every = 10;
-        let out = Trainer::new(&ws.rt).train(init_params(&cfg, 0), None, 0, &data, &opts)?;
-        println!("[e2e] trained {} steps in {:.0}s", steps, out.secs);
-        (out.params, out.losses)
-    };
+    // 2. train (or reuse) -> prune 3 variants -> eval + zero-shot
+    let mut spec = E2eSpec::new(&config);
+    spec.steps = steps;
+    let report = session
+        .run(&JobSpec::E2e(spec), &mut sink)?
+        .into_e2e()
+        .expect("e2e job returns an e2e report");
 
-    // 3+4. prune variants and evaluate
+    // 3. record
+    if let Some(train) = &report.train {
+        println!("\nloss curve (step, loss):");
+        for (s, l) in &train.losses {
+            println!("  {s:>6}  {l:.4}");
+        }
+    }
     let mut table = Table::new(
         &format!("e2e {config}: dense vs one-shot compressed"),
         &["variant", "sparsity", "wiki", "ptb", "c4", "zeroshot-avg"],
     );
-    let tok = ws.tokenizer()?;
-    let lex = Lexicon::new(0);
-    let zs = |p: &sparsegpt::model::FlatParams| -> Result<f64> {
-        let mut sum = 0.0;
-        for task in ZeroShotTask::ALL {
-            let items = gen_items(task, &lex, 7, 50);
-            sum += zero_shot_accuracy(&ws.rt, p, &tok, &items)?;
-        }
-        Ok(sum / ZeroShotTask::ALL.len() as f64)
-    };
-
-    let dense_ppl = eval_all(&ws, &params)?;
-    let dense_zs = zs(&params)?;
-    table.row(vec![
-        "dense".into(),
-        "0.000".into(),
-        fmt_ppl(dense_ppl["synth-wiki"]),
-        fmt_ppl(dense_ppl["synth-ptb"]),
-        fmt_ppl(dense_ppl["synth-c4-val"]),
-        format!("{:.1}%", dense_zs * 100.0),
-    ]);
-
-    for method in [
-        PruneMethod::Magnitude { pattern: Pattern::Unstructured(0.5) },
-        PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: None },
-        PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: None },
-    ] {
-        let label = method.label();
-        println!("[e2e] pruning: {label}");
-        let outcome = prune_variant(&ws, &params, method)?;
-        println!(
-            "[e2e] {label}: sparsity {:.3} in {:.0}s",
-            outcome.overall_sparsity(),
-            outcome.total_secs
-        );
-        let ppl = eval_all(&ws, &outcome.params)?;
-        let z = zs(&outcome.params)?;
+    for v in report.sweep.all_rows() {
         table.row(vec![
-            label,
-            format!("{:.3}", outcome.overall_sparsity()),
-            fmt_ppl(ppl["synth-wiki"]),
-            fmt_ppl(ppl["synth-ptb"]),
-            fmt_ppl(ppl["synth-c4-val"]),
-            format!("{:.1}%", z * 100.0),
+            v.label.clone(),
+            format!("{:.3}", v.sparsity),
+            fmt_ppl(v.ppl["synth-wiki"]),
+            fmt_ppl(v.ppl["synth-ptb"]),
+            fmt_ppl(v.ppl["synth-c4-val"]),
+            v.zeroshot
+                .as_ref()
+                .map(|z| format!("{:.1}%", z.avg * 100.0))
+                .unwrap_or_else(|| "-".into()),
         ]);
     }
-
-    // 5. record
-    if !losses.is_empty() {
-        println!("\nloss curve (step, loss):");
-        for (s, l) in &losses {
-            println!("  {s:>6}  {l:.4}");
-        }
-    }
     print!("{}", table.render());
-    table.save(&ws.report_dir, &format!("e2e_{config}"))?;
+    table.save(&session.workspace()?.report_dir, &format!("e2e_{config}"))?;
     println!("(saved reports/e2e_{config}.txt)");
     Ok(())
 }

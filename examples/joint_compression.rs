@@ -2,58 +2,49 @@
 //! 50% sparse + 4-bit (3 effective bits/weight with the bitmask) against
 //! size-equivalent 3-bit GPTQ — which in this codebase is literally the same
 //! artifact with sparsity = 0, the paper's own observation that SparseGPT
-//! generalizes GPTQ.
+//! generalizes GPTQ. All variants run as one `Sweep` job over shared
+//! calibration.
 //!
 //! Run: cargo run --release --example joint_compression [-- <config>]
 
 use anyhow::Result;
-use sparsegpt::bench::{eval_one, prune_variant};
-use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::api::{HumanSink, JobSpec, PruneSpec, Session, SweepSpec};
 use sparsegpt::eval::report::{fmt_ppl, Table};
-use sparsegpt::harness::Workspace;
 use sparsegpt::solver::quant::effective_bits;
-use sparsegpt::solver::sparsegpt_ref::Pattern;
 
 fn main() -> Result<()> {
     let config = std::env::args().nth(1).unwrap_or_else(|| "small".to_string());
-    let ws = Workspace::open()?;
-    let dense = ws.load_model(&config)?;
-    let dense_ppl = eval_one(&ws, &dense, "synth-wiki")?;
-
-    let variants: Vec<(String, PruneMethod, f64)> = vec![
-        (
-            "50% + 4-bit".into(),
-            PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: Some(4) },
-            effective_bits(0.5, 4.0),
-        ),
-        (
-            "GPTQ 3-bit".into(),
-            PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.0), quant_bits: Some(3) },
-            3.0,
-        ),
-        (
-            "50% + 3-bit".into(),
-            PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: Some(3) },
-            effective_bits(0.5, 3.0),
-        ),
-        (
-            "2:4 + 4-bit".into(),
-            PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: Some(4) },
-            effective_bits(0.5, 4.0),
-        ),
+    let variants: Vec<(&str, PruneSpec, f64)> = vec![
+        ("50% + 4-bit", PruneSpec::sparsegpt(0.5).with_quant_bits(4), effective_bits(0.5, 4.0)),
+        ("GPTQ 3-bit", PruneSpec::sparsegpt(0.0).with_quant_bits(3), 3.0),
+        ("50% + 3-bit", PruneSpec::sparsegpt(0.5).with_quant_bits(3), effective_bits(0.5, 3.0)),
+        ("2:4 + 4-bit", PruneSpec::sparsegpt_nm(2, 4).with_quant_bits(4), effective_bits(0.5, 4.0)),
     ];
 
+    let spec = SweepSpec::new(&config)
+        .dense(true)
+        .dataset("synth-wiki")
+        .variants(variants.iter().map(|(_, v, _)| v.clone()).collect());
+
+    let mut session = Session::new();
+    let report = session
+        .run(&JobSpec::Sweep(spec), &mut HumanSink::new())?
+        .into_sweep()
+        .expect("sweep job returns a sweep report");
+
+    let dense_ppl = report
+        .dense
+        .as_ref()
+        .and_then(|d| d.ppl.get("synth-wiki").copied())
+        .unwrap_or(f64::NAN);
     let mut table = Table::new(
         &format!("joint compression: {config} on synth-wiki (dense {})", fmt_ppl(dense_ppl)),
         &["variant", "bits/weight", "ppl"],
     );
-    for (label, method, bits) in variants {
-        let out = prune_variant(&ws, &dense, method)?;
-        let ppl = eval_one(&ws, &out.params, "synth-wiki")?;
-        println!("{label}: ppl {}", fmt_ppl(ppl));
-        table.row(vec![label, format!("{bits:.1}"), fmt_ppl(ppl)]);
+    for ((label, _, bits), v) in variants.iter().zip(&report.variants) {
+        table.row(vec![label.to_string(), format!("{bits:.1}"), fmt_ppl(v.ppl["synth-wiki"])]);
     }
     print!("{}", table.render());
-    table.save(&ws.report_dir, &format!("joint_{config}"))?;
+    table.save(&session.workspace()?.report_dir, &format!("joint_{config}"))?;
     Ok(())
 }

@@ -1,61 +1,40 @@
 //! Quickstart: one-shot prune a trained model to 50% unstructured sparsity
 //! with SparseGPT and compare perplexity against the dense baseline and
-//! magnitude pruning — the paper's core claim in ~60 lines of API use.
+//! magnitude pruning — the paper's core claim in ~40 lines of API use.
 //!
 //! Prereqs: `make artifacts && sparsegpt gen-data && sparsegpt train --config nano`
 //! Run:     cargo run --release --example quickstart [-- <config>]
 
 use anyhow::Result;
-use sparsegpt::bench::{eval_all, prune_variant};
-use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::api::{HumanSink, JobSpec, PruneSpec, Session, SweepSpec};
 use sparsegpt::eval::report::{fmt_ppl, Table};
-use sparsegpt::harness::Workspace;
-use sparsegpt::solver::sparsegpt_ref::Pattern;
 
 fn main() -> Result<()> {
     let config = std::env::args().nth(1).unwrap_or_else(|| "nano".to_string());
-    let ws = Workspace::open()?;
-    let dense = ws.load_model(&config)?;
-    println!(
-        "loaded {config}: {} params ({} prunable)",
-        dense.cfg.n_params,
-        dense.cfg.prunable_params()
-    );
+    let spec = SweepSpec::new(&config)
+        .dense(true)
+        .variant(PruneSpec::magnitude(0.5))
+        .variant(PruneSpec::sparsegpt(0.5));
+
+    let mut session = Session::new();
+    let report = session
+        .run(&JobSpec::Sweep(spec), &mut HumanSink::new())?
+        .into_sweep()
+        .expect("sweep job returns a sweep report");
 
     let mut table = Table::new(
         &format!("quickstart: {config} @ 50% sparsity"),
         &["variant", "sparsity", "synth-wiki", "synth-ptb", "synth-c4-val"],
     );
-
-    let dense_ppl = eval_all(&ws, &dense)?;
-    table.row(vec![
-        "dense".into(),
-        "0.000".into(),
-        fmt_ppl(dense_ppl["synth-wiki"]),
-        fmt_ppl(dense_ppl["synth-ptb"]),
-        fmt_ppl(dense_ppl["synth-c4-val"]),
-    ]);
-
-    for method in [
-        PruneMethod::Magnitude { pattern: Pattern::Unstructured(0.5) },
-        PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: None },
-    ] {
-        let label = method.label();
-        let outcome = prune_variant(&ws, &dense, method)?;
-        println!(
-            "{label}: pruned in {:.1}s (solver {:.1}s)",
-            outcome.total_secs, outcome.solver_secs
-        );
-        let ppl = eval_all(&ws, &outcome.params)?;
+    for v in report.all_rows() {
         table.row(vec![
-            label,
-            format!("{:.3}", outcome.overall_sparsity()),
-            fmt_ppl(ppl["synth-wiki"]),
-            fmt_ppl(ppl["synth-ptb"]),
-            fmt_ppl(ppl["synth-c4-val"]),
+            v.label.clone(),
+            format!("{:.3}", v.sparsity),
+            fmt_ppl(v.ppl["synth-wiki"]),
+            fmt_ppl(v.ppl["synth-ptb"]),
+            fmt_ppl(v.ppl["synth-c4-val"]),
         ]);
     }
-
     print!("{}", table.render());
     Ok(())
 }

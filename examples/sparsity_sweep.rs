@@ -1,45 +1,50 @@
 //! Sparsity sweep (the Figure 1 / Figure 5 experiment): SparseGPT vs
 //! magnitude pruning at uniform per-layer sparsities 10%..80% on one model,
-//! printing the perplexity series the paper plots.
+//! printing the perplexity series the paper plots. One `Sweep` job: the
+//! calibration chunks are drawn once and shared by all 16 prune variants.
 //!
 //! Run: cargo run --release --example sparsity_sweep [-- <config> [dataset]]
 
 use anyhow::Result;
-use sparsegpt::bench::{eval_one, prune_variant};
-use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::api::{HumanSink, JobSpec, PruneSpec, Session, SweepSpec};
 use sparsegpt::eval::report::{fmt_ppl, Table};
-use sparsegpt::harness::Workspace;
-use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+const POINTS: [f64; 8] = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
 
 fn main() -> Result<()> {
     let config = std::env::args().nth(1).unwrap_or_else(|| "small".to_string());
     let dataset = std::env::args().nth(2).unwrap_or_else(|| "synth-wiki".to_string());
-    let ws = Workspace::open()?;
-    let dense = ws.load_model(&config)?;
-    let dense_ppl = eval_one(&ws, &dense, &dataset)?;
-    println!("dense {config} on {dataset}: ppl {}", fmt_ppl(dense_ppl));
 
+    let mut spec = SweepSpec::new(&config).dense(true).dataset(&dataset);
+    for &p in &POINTS {
+        spec = spec.variant(PruneSpec::sparsegpt(p)).variant(PruneSpec::magnitude(p));
+    }
+
+    let mut session = Session::new();
+    let report = session
+        .run(&JobSpec::Sweep(spec), &mut HumanSink::new())?
+        .into_sweep()
+        .expect("sweep job returns a sweep report");
+
+    let dense_ppl = report
+        .dense
+        .as_ref()
+        .and_then(|d| d.ppl.get(dataset.as_str()).copied())
+        .unwrap_or(f64::NAN);
     let mut table = Table::new(
         &format!("sparsity sweep: {config} on {dataset} (dense {})", fmt_ppl(dense_ppl)),
         &["sparsity", "sparsegpt", "magnitude"],
     );
-    for p in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8] {
-        let s = prune_variant(
-            &ws,
-            &dense,
-            PruneMethod::SparseGpt { pattern: Pattern::Unstructured(p), quant_bits: None },
-        )?;
-        let m = prune_variant(
-            &ws,
-            &dense,
-            PruneMethod::Magnitude { pattern: Pattern::Unstructured(p) },
-        )?;
-        let ps = eval_one(&ws, &s.params, &dataset)?;
-        let pm = eval_one(&ws, &m.params, &dataset)?;
-        println!("p={p:.1}: sparsegpt {} magnitude {}", fmt_ppl(ps), fmt_ppl(pm));
-        table.row(vec![format!("{:.0}%", p * 100.0), fmt_ppl(ps), fmt_ppl(pm)]);
+    for (i, &p) in POINTS.iter().enumerate() {
+        let s = &report.variants[2 * i];
+        let m = &report.variants[2 * i + 1];
+        table.row(vec![
+            format!("{:.0}%", p * 100.0),
+            fmt_ppl(s.ppl[dataset.as_str()]),
+            fmt_ppl(m.ppl[dataset.as_str()]),
+        ]);
     }
     print!("{}", table.render());
-    table.save(&ws.report_dir, &format!("sweep_{config}"))?;
+    table.save(&session.workspace()?.report_dir, &format!("sweep_{config}"))?;
     Ok(())
 }

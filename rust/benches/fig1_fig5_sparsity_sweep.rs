@@ -1,16 +1,15 @@
 //! Figures 1 and 5: perplexity vs uniform sparsity (10%..80%) for SparseGPT
 //! vs magnitude pruning, on the two largest trained configs (the OPT-175B /
-//! BLOOM-176B stand-ins).
+//! BLOOM-176B stand-ins). One `Sweep` job per config; calibration is drawn
+//! once and shared by all 16 variants.
 
 use anyhow::Result;
-use sparsegpt::bench::{env_configs, eval_one, finish, prune_variant};
-use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::api::{HumanSink, JobSpec, PruneSpec, Session, SweepSpec};
+use sparsegpt::bench::{calib_segments, env_configs, eval_segments, finish};
 use sparsegpt::eval::report::{fmt_ppl, Table};
-use sparsegpt::harness::Workspace;
-use sparsegpt::solver::sparsegpt_ref::Pattern;
 
 fn main() -> Result<()> {
-    let ws = Workspace::open()?;
+    let mut session = Session::new();
     let configs = env_configs(&["medium", "small"]);
     let points: Vec<f64> = match std::env::var("SPARSEGPT_BENCH_POINTS") {
         Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
@@ -18,36 +17,41 @@ fn main() -> Result<()> {
     };
 
     for (i, config) in configs.iter().enumerate() {
-        let dense = match ws.load_model(config) {
-            Ok(p) => p,
+        let mut spec = SweepSpec::new(config)
+            .dense(true)
+            .dataset("synth-wiki")
+            .calib(calib_segments())
+            .max_segments(eval_segments());
+        for &p in &points {
+            spec = spec.variant(PruneSpec::sparsegpt(p)).variant(PruneSpec::magnitude(p));
+        }
+        let report = match session.run(&JobSpec::Sweep(spec), &mut HumanSink::new()) {
+            Ok(r) => r.into_sweep().expect("sweep job returns a sweep report"),
             Err(e) => {
                 eprintln!("skipping {config}: {e:#}");
                 continue;
             }
         };
-        let dense_ppl = eval_one(&ws, &dense, "synth-wiki")?;
+        let dense_ppl = report
+            .dense
+            .as_ref()
+            .and_then(|d| d.ppl.get("synth-wiki").copied())
+            .unwrap_or(f64::NAN);
         let fig = if i == 0 { "Figure 1" } else { "Figure 5" };
         let mut table = Table::new(
             &format!("{fig} ({config}, synth-wiki, dense {})", fmt_ppl(dense_ppl)),
             &["sparsity", "sparsegpt", "magnitude"],
         );
-        for &p in &points {
-            let s = prune_variant(
-                &ws,
-                &dense,
-                PruneMethod::SparseGpt { pattern: Pattern::Unstructured(p), quant_bits: None },
-            )?;
-            let m = prune_variant(
-                &ws,
-                &dense,
-                PruneMethod::Magnitude { pattern: Pattern::Unstructured(p) },
-            )?;
-            let ps = eval_one(&ws, &s.params, "synth-wiki")?;
-            let pm = eval_one(&ws, &m.params, "synth-wiki")?;
-            println!("{config} p={p:.1}: sparsegpt {} magnitude {}", fmt_ppl(ps), fmt_ppl(pm));
-            table.row(vec![format!("{:.0}%", p * 100.0), fmt_ppl(ps), fmt_ppl(pm)]);
+        for (j, &p) in points.iter().enumerate() {
+            let s = &report.variants[2 * j];
+            let m = &report.variants[2 * j + 1];
+            table.row(vec![
+                format!("{:.0}%", p * 100.0),
+                fmt_ppl(s.ppl["synth-wiki"]),
+                fmt_ppl(m.ppl["synth-wiki"]),
+            ]);
         }
-        finish(&ws, &table, &format!("fig1_fig5_{config}"))?;
+        finish(session.workspace()?, &table, &format!("fig1_fig5_{config}"))?;
     }
     Ok(())
 }

@@ -1,80 +1,86 @@
 //! Figure 6 (+ App. C "50% + 3-bit"): joint sparsification + quantization
 //! vs size-equivalent pure quantization across the family. The GPTQ
 //! baseline is the same artifact with sparsity 0 — the paper's observation
-//! that both algorithms share the column-greedy framework.
+//! that both algorithms share the column-greedy framework. One `Sweep` job
+//! per config (shared calibration across all six compressed variants).
 
 use anyhow::Result;
-use sparsegpt::bench::{env_configs, eval_one, finish, prune_variant};
-use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::api::{HumanSink, JobSpec, PruneSpec, Session, SweepReport, SweepSpec};
+use sparsegpt::bench::{calib_segments, env_configs, eval_segments, finish};
 use sparsegpt::eval::report::{fmt_ppl, Table};
-use sparsegpt::harness::Workspace;
 use sparsegpt::solver::quant::effective_bits;
-use sparsegpt::solver::sparsegpt_ref::Pattern;
 
 fn main() -> Result<()> {
-    let ws = Workspace::open()?;
+    let mut session = Session::new();
     let configs = env_configs(&["small", "medium"]);
+
+    let variants: Vec<(&str, f64, PruneSpec)> = vec![
+        (
+            "sparsegpt 50%+4bit",
+            effective_bits(0.5, 4.0),
+            PruneSpec::sparsegpt(0.5).with_quant_bits(4),
+        ),
+        ("gptq 3bit", 3.0, PruneSpec::sparsegpt(0.0).with_quant_bits(3)),
+        (
+            "sparsegpt 50%+3bit",
+            effective_bits(0.5, 3.0),
+            PruneSpec::sparsegpt(0.5).with_quant_bits(3),
+        ),
+        ("gptq 2.5bit(rtn grid)", 2.5, PruneSpec::sparsegpt(0.0).with_quant_bits(2)),
+        (
+            "sparsegpt 2:4+4bit",
+            effective_bits(0.5, 4.0),
+            PruneSpec::sparsegpt_nm(2, 4).with_quant_bits(4),
+        ),
+        (
+            "sparsegpt 4:8+4bit",
+            effective_bits(0.5, 4.0),
+            PruneSpec::sparsegpt_nm(4, 8).with_quant_bits(4),
+        ),
+    ];
+
+    // one sweep per config; missing models produce "-" columns
+    let mut reports: Vec<Option<SweepReport>> = Vec::new();
+    for config in &configs {
+        let spec = SweepSpec::new(config)
+            .dense(true)
+            .dataset("synth-wiki")
+            .calib(calib_segments())
+            .max_segments(eval_segments())
+            .variants(variants.iter().map(|(_, _, v)| v.clone()).collect());
+        match session.run(&JobSpec::Sweep(spec), &mut HumanSink::new()) {
+            Ok(r) => reports.push(r.into_sweep()),
+            Err(e) => {
+                eprintln!("skipping {config}: {e:#}");
+                reports.push(None);
+            }
+        }
+    }
 
     let mut header = vec!["variant".to_string(), "bits/w".to_string()];
     header.extend(configs.iter().cloned());
     let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new("Figure 6 (synth-wiki ppl)", &hdr);
 
-    let variants: Vec<(&str, f64, Option<PruneMethod>)> = vec![
-        ("dense fp32", 32.0, None),
-        (
-            "sparsegpt 50%+4bit",
-            effective_bits(0.5, 4.0),
-            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: Some(4) }),
-        ),
-        (
-            "gptq 3bit",
-            3.0,
-            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.0), quant_bits: Some(3) }),
-        ),
-        (
-            "sparsegpt 50%+3bit",
-            effective_bits(0.5, 3.0),
-            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: Some(3) }),
-        ),
-        (
-            "gptq 2.5bit(rtn grid)",
-            2.5,
-            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.0), quant_bits: Some(2) }),
-        ),
-        (
-            "sparsegpt 2:4+4bit",
-            effective_bits(0.5, 4.0),
-            Some(PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: Some(4) }),
-        ),
-        (
-            "sparsegpt 4:8+4bit",
-            effective_bits(0.5, 4.0),
-            Some(PruneMethod::SparseGpt { pattern: Pattern::NM(4, 8), quant_bits: Some(4) }),
-        ),
-    ];
-
-    for (label, bits, method) in variants {
+    let cell = |r: &Option<SweepReport>, pick: &dyn Fn(&SweepReport) -> Option<f64>| match r {
+        Some(rep) => pick(rep).map(fmt_ppl).unwrap_or_else(|| "-".into()),
+        None => "-".into(),
+    };
+    let mut dense_row = vec!["dense fp32".to_string(), "32.0".to_string()];
+    for r in &reports {
+        dense_row.push(cell(r, &|rep| {
+            rep.dense.as_ref().and_then(|d| d.ppl.get("synth-wiki").copied())
+        }));
+    }
+    table.row(dense_row);
+    for (vi, (label, bits, _)) in variants.iter().enumerate() {
         let mut cells = vec![label.to_string(), format!("{bits:.1}")];
-        for config in &configs {
-            let dense = match ws.load_model(config) {
-                Ok(p) => p,
-                Err(_) => {
-                    cells.push("-".into());
-                    continue;
-                }
-            };
-            let ppl = match &method {
-                None => eval_one(&ws, &dense, "synth-wiki")?,
-                Some(m) => {
-                    let out = prune_variant(&ws, &dense, m.clone())?;
-                    eval_one(&ws, &out.params, "synth-wiki")?
-                }
-            };
-            println!("{label} / {config}: {}", fmt_ppl(ppl));
-            cells.push(fmt_ppl(ppl));
+        for r in &reports {
+            cells.push(cell(r, &|rep| {
+                rep.variants.get(vi).and_then(|v| v.ppl.get("synth-wiki").copied())
+            }));
         }
         table.row(cells);
     }
-    finish(&ws, &table, "fig6_joint_quant")
+    finish(session.workspace()?, &table, "fig6_joint_quant")
 }

@@ -1,23 +1,35 @@
 //! Table 2: zero-shot accuracy of the largest routinely-trained model,
 //! dense vs magnitude-50% vs SparseGPT-{50%, 4:8, 2:4}, over the five
-//! synthetic tasks (Lambada/PIQA/ARC-e/ARC-c/StoryCloze analogs).
+//! synthetic tasks (Lambada/PIQA/ARC-e/ARC-c/StoryCloze analogs). One
+//! `Sweep` job with the perplexity pass disabled — only the zero-shot
+//! suite runs on each variant.
 
 use anyhow::Result;
-use sparsegpt::bench::{env_configs, env_usize, finish, prune_variant};
-use sparsegpt::coordinator::PruneMethod;
-use sparsegpt::data::corpus::Lexicon;
+use sparsegpt::api::{HumanSink, JobSpec, PruneSpec, Session, SweepSpec};
+use sparsegpt::bench::{calib_segments, env_configs, env_usize, finish};
 use sparsegpt::eval::report::Table;
-use sparsegpt::eval::zeroshot::{gen_items, zero_shot_accuracy, ZeroShotTask};
-use sparsegpt::harness::Workspace;
-use sparsegpt::solver::sparsegpt_ref::Pattern;
+use sparsegpt::eval::zeroshot::ZeroShotTask;
 
 fn main() -> Result<()> {
-    let ws = Workspace::open()?;
+    let mut session = Session::new();
     let config = env_configs(&["medium"]).remove(0);
     let n_items = env_usize("SPARSEGPT_BENCH_ITEMS", 100);
-    let dense = ws.load_model(&config)?;
-    let tok = ws.tokenizer()?;
-    let lex = Lexicon::new(0);
+
+    let spec = SweepSpec::new(&config)
+        .dense(true)
+        .calib(calib_segments())
+        .max_segments(0) // no perplexity pass, zero-shot only
+        .zeroshot(n_items)
+        .variants(vec![
+            PruneSpec::magnitude(0.5),
+            PruneSpec::sparsegpt(0.5),
+            PruneSpec::sparsegpt_nm(4, 8),
+            PruneSpec::sparsegpt_nm(2, 4),
+        ]);
+    let report = session
+        .run(&JobSpec::Sweep(spec), &mut HumanSink::new())?
+        .into_sweep()
+        .expect("sweep job returns a sweep report");
 
     let mut header = vec!["method".to_string(), "spars.".to_string()];
     for t in ZeroShotTask::ALL {
@@ -27,46 +39,19 @@ fn main() -> Result<()> {
     let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&format!("Table 2 (zero-shot, {config})"), &hdr);
 
-    let variants: Vec<(String, Option<PruneMethod>)> = vec![
-        ("dense".into(), None),
-        (
-            "magnitude-50%".into(),
-            Some(PruneMethod::Magnitude { pattern: Pattern::Unstructured(0.5) }),
-        ),
-        (
-            "sparsegpt-50%".into(),
-            Some(PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: None }),
-        ),
-        (
-            "sparsegpt-4:8".into(),
-            Some(PruneMethod::SparseGpt { pattern: Pattern::NM(4, 8), quant_bits: None }),
-        ),
-        (
-            "sparsegpt-2:4".into(),
-            Some(PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: None }),
-        ),
-    ];
-
-    for (label, method) in variants {
-        let (params, sparsity) = match method {
-            None => (dense.clone(), 0.0),
-            Some(m) => {
-                let out = prune_variant(&ws, &dense, m)?;
-                let s = out.overall_sparsity();
-                (out.params, s)
+    for v in report.all_rows() {
+        let mut cells = vec![v.label.clone(), format!("{:.2}", v.sparsity)];
+        match &v.zeroshot {
+            Some(zs) => {
+                for (_, acc) in &zs.rows {
+                    cells.push(format!("{:.1}", acc * 100.0));
+                }
+                cells.push(format!("{:.1}", zs.avg * 100.0));
             }
-        };
-        let mut cells = vec![label.clone(), format!("{sparsity:.2}")];
-        let mut sum = 0.0;
-        for task in ZeroShotTask::ALL {
-            let items = gen_items(task, &lex, 7, n_items);
-            let acc = zero_shot_accuracy(&ws.rt, &params, &tok, &items)?;
-            sum += acc;
-            cells.push(format!("{:.1}", acc * 100.0));
+            // SPARSEGPT_BENCH_ITEMS=0 disables the zero-shot pass
+            None => cells.extend(std::iter::repeat("-".to_string()).take(6)),
         }
-        cells.push(format!("{:.1}", sum / ZeroShotTask::ALL.len() as f64 * 100.0));
-        println!("{label}: done");
         table.row(cells);
     }
-    finish(&ws, &table, "table2_zeroshot")
+    finish(session.workspace()?, &table, "table2_zeroshot")
 }

@@ -1,0 +1,348 @@
+//! The structured event stream: every job narrates its progress as typed
+//! events, and an [`EventSink`] decides how they surface — classic human
+//! log lines ([`HumanSink`]) or machine-readable JSON lines
+//! ([`JsonlSink`], one object per line with a `reason` discriminator, in
+//! the spirit of cargo's `--message-format=json`).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+use crate::eval::report::fmt_ppl;
+use crate::util::json::Json;
+
+/// One progress or result notification from a running job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// a job began executing
+    JobStarted {
+        job: String,
+        label: String,
+        config: Option<String>,
+    },
+    /// free-form narrative (what used to be a `println!`)
+    Message { text: String },
+    /// a logged training step
+    TrainStep {
+        step: u64,
+        loss: f64,
+        lr: f64,
+        secs_per_step: f64,
+    },
+    /// a checkpoint was written
+    CheckpointSaved { path: String },
+    /// one transformer block finished compressing + propagating
+    BlockCompressed {
+        layer: usize,
+        layers: usize,
+        sparsity: f64,
+        secs: f64,
+    },
+    /// one weight matrix was compressed (or skipped by policy)
+    MatrixReport {
+        layer: usize,
+        kind: String,
+        sparsity: f64,
+        skipped: bool,
+        solver_secs: f64,
+        sq_error: Option<f64>,
+    },
+    /// perplexity on one eval corpus
+    EvalResult {
+        dataset: String,
+        ppl: f64,
+        tokens: usize,
+    },
+    /// accuracy on one zero-shot task
+    ZeroShotResult { task: String, accuracy: f64 },
+    /// a sweep moved on to its next variant
+    SweepVariant {
+        index: usize,
+        total: usize,
+        label: String,
+    },
+    /// the job finished (ok or failed)
+    JobFinished { job: String, ok: bool, secs: f64 },
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn n(v: f64) -> Json {
+    Json::Num(v)
+}
+
+impl Event {
+    /// Build a `matrix-report` event from the coordinator's report.
+    pub fn matrix(r: &crate::coordinator::MatrixReport) -> Event {
+        Event::MatrixReport {
+            layer: r.layer,
+            kind: r.kind.label().to_string(),
+            sparsity: r.sparsity,
+            skipped: r.skipped,
+            solver_secs: r.solver_secs,
+            sq_error: r.sq_error,
+        }
+    }
+
+    /// The machine-readable discriminator (the `reason` field).
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Event::JobStarted { .. } => "job-started",
+            Event::Message { .. } => "message",
+            Event::TrainStep { .. } => "train-step",
+            Event::CheckpointSaved { .. } => "checkpoint-saved",
+            Event::BlockCompressed { .. } => "block-compressed",
+            Event::MatrixReport { .. } => "matrix-report",
+            Event::EvalResult { .. } => "eval-result",
+            Event::ZeroShotResult { .. } => "zeroshot-result",
+            Event::SweepVariant { .. } => "sweep-variant",
+            Event::JobFinished { .. } => "job-finished",
+        }
+    }
+
+    /// Serialize as a JSON object; every event carries `reason`.
+    pub fn to_json(&self) -> Json {
+        let reason = ("reason", s(self.reason()));
+        match self {
+            Event::JobStarted { job, label, config } => obj(vec![
+                reason,
+                ("job", s(job)),
+                ("label", s(label)),
+                (
+                    "config",
+                    config.as_ref().map(|c| s(c)).unwrap_or(Json::Null),
+                ),
+            ]),
+            Event::Message { text } => obj(vec![reason, ("text", s(text))]),
+            Event::TrainStep { step, loss, lr, secs_per_step } => obj(vec![
+                reason,
+                ("step", n(*step as f64)),
+                ("loss", n(*loss)),
+                ("lr", n(*lr)),
+                ("secs_per_step", n(*secs_per_step)),
+            ]),
+            Event::CheckpointSaved { path } => obj(vec![reason, ("path", s(path))]),
+            Event::BlockCompressed { layer, layers, sparsity, secs } => obj(vec![
+                reason,
+                ("layer", n(*layer as f64)),
+                ("layers", n(*layers as f64)),
+                ("sparsity", n(*sparsity)),
+                ("secs", n(*secs)),
+            ]),
+            Event::MatrixReport { layer, kind, sparsity, skipped, solver_secs, sq_error } => {
+                obj(vec![
+                    reason,
+                    ("layer", n(*layer as f64)),
+                    ("kind", s(kind)),
+                    ("sparsity", n(*sparsity)),
+                    ("skipped", Json::Bool(*skipped)),
+                    ("solver_secs", n(*solver_secs)),
+                    ("sq_error", sq_error.map(Json::Num).unwrap_or(Json::Null)),
+                ])
+            }
+            Event::EvalResult { dataset, ppl, tokens } => obj(vec![
+                reason,
+                ("dataset", s(dataset)),
+                ("ppl", n(*ppl)),
+                ("tokens", n(*tokens as f64)),
+            ]),
+            Event::ZeroShotResult { task, accuracy } => {
+                obj(vec![reason, ("task", s(task)), ("accuracy", n(*accuracy))])
+            }
+            Event::SweepVariant { index, total, label } => obj(vec![
+                reason,
+                ("index", n(*index as f64)),
+                ("total", n(*total as f64)),
+                ("label", s(label)),
+            ]),
+            Event::JobFinished { job, ok, secs } => obj(vec![
+                reason,
+                ("job", s(job)),
+                ("ok", Json::Bool(*ok)),
+                ("secs", n(*secs)),
+            ]),
+        }
+    }
+}
+
+/// Where a job's events go.
+pub trait EventSink {
+    fn emit(&mut self, ev: &Event);
+}
+
+/// Classic terminal log lines (what the CLI printed before the event
+/// stream existed). Progress lines are tagged by the *phase* the event
+/// belongs to ("train"/"prune"/"eval"/...), not the outer job kind, so
+/// nested jobs (e2e's train, a sweep's prunes) label like they always
+/// did. Per-matrix reports are intentionally quiet.
+#[derive(Default)]
+pub struct HumanSink {
+    config: String,
+}
+
+impl HumanSink {
+    pub fn new() -> HumanSink {
+        HumanSink::default()
+    }
+
+    /// "phase config" or just "phase" when the job has no config.
+    fn tag(&self, phase: &str) -> String {
+        if self.config.is_empty() {
+            phase.to_string()
+        } else {
+            format!("{phase} {}", self.config)
+        }
+    }
+}
+
+impl EventSink for HumanSink {
+    fn emit(&mut self, ev: &Event) {
+        match ev {
+            Event::JobStarted { config, .. } => {
+                self.config = config.clone().unwrap_or_default();
+            }
+            Event::Message { text } => println!("{text}"),
+            Event::TrainStep { step, loss, lr, secs_per_step } => println!(
+                "[{}] step {step} loss {loss:.4} lr {lr:.2e} ({secs_per_step:.2} s/step)",
+                self.tag("train")
+            ),
+            Event::CheckpointSaved { path } => {
+                println!("[{}] checkpoint -> {path}", self.tag("ckpt"))
+            }
+            Event::BlockCompressed { layer, layers, sparsity, secs } => println!(
+                "[{}] block {}/{layers} sparsity {sparsity:.3} ({secs:.1}s)",
+                self.tag("prune"),
+                *layer + 1
+            ),
+            Event::MatrixReport { .. } => {}
+            Event::EvalResult { dataset, ppl, tokens } => println!(
+                "[{}] {dataset}: ppl {} ({tokens} tokens)",
+                self.tag("eval"),
+                fmt_ppl(*ppl)
+            ),
+            Event::ZeroShotResult { task, accuracy } => {
+                println!("[{}] {task}: {:.1}%", self.tag("zeroshot"), *accuracy * 100.0)
+            }
+            Event::SweepVariant { index, total, label } => {
+                println!("[{}] variant {}/{total}: {label}", self.tag("sweep"), *index + 1)
+            }
+            Event::JobFinished { .. } => {}
+        }
+    }
+}
+
+/// Machine-readable JSON lines: one compact object per event, each with a
+/// `reason` field. Write errors are deliberately swallowed — the event
+/// stream is advisory and must never abort the job it narrates.
+pub struct JsonlSink<W: Write> {
+    out: W,
+}
+
+impl JsonlSink<std::io::Stdout> {
+    pub fn stdout() -> JsonlSink<std::io::Stdout> {
+        JsonlSink { out: std::io::stdout() }
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(out: W) -> JsonlSink<W> {
+        JsonlSink { out }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+impl<W: Write> EventSink for JsonlSink<W> {
+    fn emit(&mut self, ev: &Event) {
+        let _ = writeln!(self.out, "{}", ev.to_json().to_string_compact());
+        let _ = self.out.flush();
+    }
+}
+
+/// Collects events in memory (tests, programmatic consumers).
+#[derive(Default)]
+pub struct MemorySink {
+    pub events: Vec<Event>,
+}
+
+impl MemorySink {
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+}
+
+impl EventSink for MemorySink {
+    fn emit(&mut self, ev: &Event) {
+        self.events.push(ev.clone());
+    }
+}
+
+/// Discards everything.
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn emit(&mut self, _ev: &Event) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::JobStarted { job: "prune".into(), label: "prune/nano/sparsegpt-50%".into(), config: Some("nano".into()) },
+            Event::Message { text: "hello".into() },
+            Event::TrainStep { step: 1, loss: 5.0, lr: 0.001, secs_per_step: 0.5 },
+            Event::CheckpointSaved { path: "c.ckpt".into() },
+            Event::BlockCompressed { layer: 0, layers: 2, sparsity: 0.5, secs: 1.0 },
+            Event::MatrixReport { layer: 0, kind: "q".into(), sparsity: 0.5, skipped: false, solver_secs: 0.1, sq_error: None },
+            Event::EvalResult { dataset: "synth-wiki".into(), ppl: 12.5, tokens: 64 },
+            Event::ZeroShotResult { task: "cloze".into(), accuracy: 0.5 },
+            Event::SweepVariant { index: 0, total: 1, label: "sparsegpt-50%".into() },
+            Event::JobFinished { job: "prune".into(), ok: true, secs: 2.0 },
+        ]
+    }
+
+    #[test]
+    fn every_event_serializes_with_reason() {
+        for ev in sample_events() {
+            let v = ev.to_json();
+            assert_eq!(v.get("reason").unwrap().as_str().unwrap(), ev.reason());
+            let line = v.to_string_compact();
+            assert!(!line.contains('\n'));
+            assert_eq!(Json::parse(&line).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_line_per_event() {
+        let mut sink = JsonlSink::new(Vec::new());
+        for ev in sample_events() {
+            sink.emit(&ev);
+        }
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        assert_eq!(text.lines().count(), sample_events().len());
+        for line in text.lines() {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("reason").unwrap().as_str().is_ok());
+        }
+    }
+
+    #[test]
+    fn memory_sink_collects() {
+        let mut sink = MemorySink::new();
+        sink.emit(&Event::Message { text: "x".into() });
+        assert_eq!(sink.events.len(), 1);
+    }
+}

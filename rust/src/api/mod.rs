@@ -1,0 +1,46 @@
+//! The unified job API (Layer 4): one typed front door for everything the
+//! system can run.
+//!
+//! * [`JobSpec`] — what to run, as data: `GenData`, `Train`, `Prune`,
+//!   `Eval`, `ZeroShot`, `Stats`, `Generate`, `E2e`, `Sweep`, with builder
+//!   constructors and string round-tripping
+//!   (`PruneSpec::parse("sparsegpt-2:4+4bit")` ↔ `label()`).
+//! * [`Session`] — owns the [`crate::harness::Workspace`] (and through it
+//!   the PJRT runtime), resolves checkpoints, and executes specs.
+//! * [`EventSink`] — where progress goes: [`HumanSink`] prints the classic
+//!   log lines, [`JsonlSink`] emits machine-readable JSON lines (one
+//!   object per line, each with a `reason` field — cargo's
+//!   `--message-format=json` pattern).
+//! * [`JobReport`] — typed results, including compressed parameters.
+//!
+//! The CLI, every example and the benches all route through this module;
+//! new compression methods or workloads plug in as new specs rather than
+//! as new ad-hoc drivers.
+//!
+//! ```text
+//! use sparsegpt::api::{HumanSink, JobSpec, PruneSpec, Session, SweepSpec};
+//!
+//! let spec = SweepSpec::new("small")
+//!     .dense(true)
+//!     .variant(PruneSpec::sparsegpt(0.5))
+//!     .variant(PruneSpec::sparsegpt_nm(2, 4).with_quant_bits(4));
+//! let report = Session::new().run(&JobSpec::Sweep(spec), &mut HumanSink::new())?;
+//! ```
+
+mod events;
+mod report;
+mod session;
+mod spec;
+
+pub use events::{Event, EventSink, HumanSink, JsonlSink, MemorySink, NullSink};
+pub use report::{
+    E2eReport, EvalReport, EvalRow, GenDataReport, GenerateReport, JobReport, PruneReport,
+    StatsReport, SweepReport, TrainReport, VariantResult, ZeroShotReport,
+};
+pub use session::Session;
+pub use spec::{
+    E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, JobSpec, PruneJobSpec, PruneSpec, StatsSpec,
+    SweepSpec, TrainSpec, ZeroShotSpec,
+};
+
+pub(crate) use session::prune_params;

@@ -1,0 +1,175 @@
+//! Typed job results: what [`crate::api::Session::run`] returns.
+//!
+//! Reports carry everything a programmatic caller needs (including, for
+//! prune jobs, the compressed parameters themselves) — the event stream is
+//! for progress, the report is for results.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::coordinator::MatrixReport;
+use crate::model::layout::FlatParams;
+
+#[derive(Clone, Debug)]
+pub struct GenDataReport {
+    pub out: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub config: String,
+    pub steps: usize,
+    pub final_loss: f64,
+    pub secs: f64,
+    /// (step, loss) at the logging cadence
+    pub losses: Vec<(usize, f64)>,
+    pub ckpt: Option<PathBuf>,
+}
+
+#[derive(Clone, Debug)]
+pub struct PruneReport {
+    pub config: String,
+    pub label: String,
+    pub sparsity: f64,
+    pub total_secs: f64,
+    pub hessian_secs: f64,
+    pub solver_secs: f64,
+    pub propagate_secs: f64,
+    pub matrices: Vec<MatrixReport>,
+    pub saved_to: Option<PathBuf>,
+    /// the compressed model
+    pub params: FlatParams,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub dataset: String,
+    pub ppl: f64,
+    pub tokens: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub config: String,
+    pub rows: Vec<EvalRow>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ZeroShotReport {
+    pub config: String,
+    /// (task name, accuracy) for the five tasks
+    pub rows: Vec<(String, f64)>,
+    pub avg: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct StatsReport {
+    pub config: String,
+    pub sparsity: f64,
+    pub pruned_weights: usize,
+    pub nm_violations: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenerateReport {
+    pub config: String,
+    pub text: String,
+}
+
+/// One variant's results within a sweep (or the dense baseline).
+#[derive(Clone, Debug)]
+pub struct VariantResult {
+    pub label: String,
+    pub sparsity: f64,
+    /// prune wall time (0 for the dense baseline)
+    pub secs: f64,
+    /// dataset -> perplexity (empty when the sweep disabled the ppl pass)
+    pub ppl: BTreeMap<String, f64>,
+    pub zeroshot: Option<ZeroShotReport>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub config: String,
+    pub dense: Option<VariantResult>,
+    pub variants: Vec<VariantResult>,
+}
+
+impl SweepReport {
+    /// Dense baseline + variants, in execution order.
+    pub fn all_rows(&self) -> impl Iterator<Item = &VariantResult> {
+        self.dense.iter().chain(self.variants.iter())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct E2eReport {
+    /// `None` when an existing checkpoint was reused
+    pub train: Option<TrainReport>,
+    pub sweep: SweepReport,
+}
+
+/// The result of one executed [`crate::api::JobSpec`].
+#[derive(Clone, Debug)]
+pub enum JobReport {
+    GenData(GenDataReport),
+    Train(TrainReport),
+    Prune(PruneReport),
+    Eval(EvalReport),
+    ZeroShot(ZeroShotReport),
+    Stats(StatsReport),
+    Generate(GenerateReport),
+    E2e(E2eReport),
+    Sweep(SweepReport),
+}
+
+impl JobReport {
+    pub fn into_train(self) -> Option<TrainReport> {
+        match self {
+            JobReport::Train(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_prune(self) -> Option<PruneReport> {
+        match self {
+            JobReport::Prune(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_eval(self) -> Option<EvalReport> {
+        match self {
+            JobReport::Eval(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_zeroshot(self) -> Option<ZeroShotReport> {
+        match self {
+            JobReport::ZeroShot(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_sweep(self) -> Option<SweepReport> {
+        match self {
+            JobReport::Sweep(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_e2e(self) -> Option<E2eReport> {
+        match self {
+            JobReport::E2e(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_generate(self) -> Option<GenerateReport> {
+        match self {
+            JobReport::Generate(r) => Some(r),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,481 @@
+//! The job executor: owns the [`Workspace`] (and through it the PJRT
+//! [`crate::runtime::Runtime`]), resolves checkpoints, and runs
+//! [`JobSpec`]s to typed [`JobReport`]s while narrating progress through
+//! an [`EventSink`].
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::api::events::{Event, EventSink};
+use crate::api::report::{
+    E2eReport, EvalReport, EvalRow, GenDataReport, GenerateReport, JobReport, PruneReport,
+    StatsReport, SweepReport, TrainReport, VariantResult, ZeroShotReport,
+};
+use crate::api::spec::{
+    E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, JobSpec, PruneJobSpec, PruneSpec, StatsSpec,
+    SweepSpec, TrainSpec, ZeroShotSpec,
+};
+use crate::coordinator::{
+    CalibChunks, PipelineEvent, PruneOptions, Pruner, SkipSpec, TrainEvent, TrainOptions, Trainer,
+};
+use crate::data::corpus::Lexicon;
+use crate::data::Dataset;
+use crate::eval::generate::{sample, SampleOptions};
+use crate::eval::perplexity;
+use crate::eval::zeroshot::{gen_items, zero_shot_accuracy, ZeroShotTask};
+use crate::harness::{generate_data_with, Workspace, CALIB_SET};
+use crate::model::checkpoint::Checkpoint;
+use crate::model::init::init_params;
+use crate::model::layout::FlatParams;
+use crate::model::stats::ModelStats;
+
+/// A handle for executing jobs. The workspace (and the PJRT runtime inside
+/// it) opens lazily, so jobs that need neither — `gen-data` — run on a
+/// machine without built artifacts.
+pub struct Session {
+    ws: Option<Workspace>,
+}
+
+impl Session {
+    /// A session whose workspace opens on first use.
+    pub fn new() -> Session {
+        Session { ws: None }
+    }
+
+    /// A session with the workspace opened eagerly.
+    pub fn open() -> Result<Session> {
+        Ok(Session { ws: Some(Workspace::open()?) })
+    }
+
+    /// Wrap an already-configured workspace.
+    pub fn with_workspace(ws: Workspace) -> Session {
+        Session { ws: Some(ws) }
+    }
+
+    /// The workspace, opening it if this is the first job that needs one.
+    pub fn workspace(&mut self) -> Result<&Workspace> {
+        if self.ws.is_none() {
+            self.ws = Some(Workspace::open()?);
+        }
+        Ok(self.ws.as_ref().unwrap())
+    }
+
+    /// The workspace only if some job has already opened it (e.g. for
+    /// post-run runtime stats without forcing a runtime to exist).
+    pub fn opened_workspace(&self) -> Option<&Workspace> {
+        self.ws.as_ref()
+    }
+
+    /// Execute one job, emitting `job-started` / progress / `job-finished`
+    /// events into `sink` and returning the typed report.
+    pub fn run(&mut self, spec: &JobSpec, sink: &mut dyn EventSink) -> Result<JobReport> {
+        let t0 = Instant::now();
+        sink.emit(&Event::JobStarted {
+            job: spec.kind().to_string(),
+            label: spec.label(),
+            config: spec.config().map(|c| c.to_string()),
+        });
+        let report = self.dispatch(spec, sink);
+        sink.emit(&Event::JobFinished {
+            job: spec.kind().to_string(),
+            ok: report.is_ok(),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+        report
+    }
+
+    fn dispatch(&mut self, spec: &JobSpec, sink: &mut dyn EventSink) -> Result<JobReport> {
+        if let JobSpec::GenData(g) = spec {
+            return run_gen_data(g, sink).map(JobReport::GenData);
+        }
+        let ws = self.workspace()?;
+        match spec {
+            JobSpec::GenData(_) => unreachable!("handled above"),
+            JobSpec::Train(s) => run_train(ws, s, sink).map(JobReport::Train),
+            JobSpec::Prune(s) => run_prune(ws, s, sink).map(JobReport::Prune),
+            JobSpec::Eval(s) => run_eval(ws, s, sink).map(JobReport::Eval),
+            JobSpec::ZeroShot(s) => run_zeroshot(ws, s, sink).map(JobReport::ZeroShot),
+            JobSpec::Stats(s) => run_stats(ws, s, sink).map(JobReport::Stats),
+            JobSpec::Generate(s) => run_generate(ws, s, sink).map(JobReport::Generate),
+            JobSpec::E2e(s) => run_e2e(ws, s, sink).map(JobReport::E2e),
+            JobSpec::Sweep(s) => run_sweep(ws, s, sink).map(JobReport::Sweep),
+        }
+    }
+}
+
+impl Default for Session {
+    fn default() -> Session {
+        Session::new()
+    }
+}
+
+/// Resolve the parameters a job operates on: an explicit checkpoint path,
+/// or the config's conventionally-named trained checkpoint.
+fn load_params(ws: &Workspace, config: &str, ckpt: &Option<PathBuf>) -> Result<FlatParams> {
+    let cfg = ws.config(config)?;
+    match ckpt {
+        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg),
+        None => ws.load_model(config),
+    }
+}
+
+fn run_gen_data(spec: &GenDataSpec, sink: &mut dyn EventSink) -> Result<GenDataReport> {
+    generate_data_with(&spec.out, spec.seed, spec.train_mb, &mut |text| {
+        sink.emit(&Event::Message { text: text.to_string() })
+    })?;
+    Ok(GenDataReport { out: spec.out.clone() })
+}
+
+fn run_train(ws: &Workspace, spec: &TrainSpec, sink: &mut dyn EventSink) -> Result<TrainReport> {
+    let cfg = ws.config(&spec.config)?;
+    let mut opts = TrainOptions::for_config(&spec.config, spec.steps);
+    opts.seed = spec.seed;
+    opts.log_every = spec.log_every;
+    if let Some(lr) = spec.lr {
+        opts.base_lr = lr;
+    }
+    opts.checkpoint_every = spec.checkpoint_every;
+    let out_dir = spec.out.clone().unwrap_or_else(|| ws.ckpt_dir.clone());
+    opts.out = Some(out_dir.clone());
+    let data = ws.dataset(CALIB_SET)?;
+
+    let (params, adam, start) = if spec.resume {
+        // resume always reads the conventional checkpoint (out_dir is only
+        // where new checkpoints go — matches the original CLI behavior)
+        let ck = Checkpoint::load(Checkpoint::path_for(&ws.ckpt_dir, &spec.config, ""))?;
+        let step = ck.step;
+        let adam = ck.adam.clone();
+        (ck.into_flat_params(&cfg)?, adam, step)
+    } else {
+        (init_params(&cfg, spec.seed), None, 0)
+    };
+    sink.emit(&Event::Message {
+        text: format!(
+            "[train {}] {} params, {} steps, batch {}, lr {:.1e}",
+            spec.config, cfg.n_params, spec.steps, cfg.train_batch, opts.base_lr
+        ),
+    });
+    let mut ckpt_path = None;
+    let out = Trainer::new(&ws.rt).train_with(params, adam, start, &data, &opts, &mut |ev| {
+        match ev {
+            TrainEvent::Step { step, loss, lr, secs_per_step } => sink.emit(&Event::TrainStep {
+                step: *step,
+                loss: *loss,
+                lr: *lr,
+                secs_per_step: *secs_per_step,
+            }),
+            TrainEvent::Checkpoint { path, .. } => {
+                ckpt_path = Some(path.clone());
+                sink.emit(&Event::CheckpointSaved { path: path.display().to_string() });
+            }
+        }
+    })?;
+    let final_loss = out.losses.last().map(|l| l.1).unwrap_or(f64::NAN);
+    sink.emit(&Event::Message {
+        text: format!(
+            "[train {}] done in {:.1}s, final loss {final_loss:.4}",
+            spec.config, out.secs
+        ),
+    });
+    Ok(TrainReport {
+        config: spec.config.clone(),
+        steps: spec.steps,
+        final_loss,
+        secs: out.secs,
+        losses: out.losses,
+        ckpt: ckpt_path,
+    })
+}
+
+/// Compress `params` with shared, pre-drawn calibration chunks. This is the
+/// single prune entry every job kind (and the bench helpers) goes through.
+pub(crate) fn prune_params(
+    ws: &Workspace,
+    config: &str,
+    params: FlatParams,
+    chunks: &CalibChunks,
+    opts: &PruneOptions,
+    sink: &mut dyn EventSink,
+) -> Result<PruneReport> {
+    let label = opts.method.label();
+    sink.emit(&Event::Message {
+        text: format!(
+            "[prune {config}] method {label} | {} calib segments | damp {}",
+            chunks.n_chunks(),
+            opts.damp
+        ),
+    });
+    let outcome = Pruner::new(&ws.rt).prune_with(params, chunks, opts, &mut |ev| match ev {
+        PipelineEvent::BlockStart { .. } => {}
+        PipelineEvent::Matrix(r) => sink.emit(&Event::matrix(r)),
+        PipelineEvent::BlockDone { layer, layers, sparsity, secs } => {
+            sink.emit(&Event::BlockCompressed {
+                layer: *layer,
+                layers: *layers,
+                sparsity: *sparsity,
+                secs: *secs,
+            })
+        }
+    })?;
+    let sparsity = outcome.overall_sparsity();
+    sink.emit(&Event::Message {
+        text: format!(
+            "[prune {config}] sparsity {sparsity:.3} in {:.1}s (hessian {:.1}s solver {:.1}s prop {:.1}s)",
+            outcome.total_secs, outcome.hessian_secs, outcome.solver_secs, outcome.propagate_secs
+        ),
+    });
+    Ok(PruneReport {
+        config: config.to_string(),
+        label,
+        sparsity,
+        total_secs: outcome.total_secs,
+        hessian_secs: outcome.hessian_secs,
+        solver_secs: outcome.solver_secs,
+        propagate_secs: outcome.propagate_secs,
+        matrices: outcome.reports,
+        saved_to: None,
+        params: outcome.params,
+    })
+}
+
+fn run_prune(
+    ws: &Workspace,
+    spec: &PruneJobSpec,
+    sink: &mut dyn EventSink,
+) -> Result<PruneReport> {
+    let cfg = ws.config(&spec.config)?;
+    let params = load_params(ws, &spec.config, &spec.ckpt)?;
+    let opts = PruneOptions {
+        method: spec.prune.method.clone(),
+        damp: spec.damp,
+        skip: spec.skip.clone(),
+        record_errors: spec.record_errors,
+        exact_rows: None,
+    };
+    let chunks = ws.calib_chunks(&cfg, spec.calib, spec.calib_seed)?;
+    let mut report = prune_params(ws, &spec.config, params, &chunks, &opts, sink)?;
+    if spec.save {
+        let suffix = spec.suffix.clone().unwrap_or_else(|| format!("-{}", report.label));
+        let path = match &spec.out {
+            Some(p) => p.clone(),
+            None => Checkpoint::path_for(&ws.ckpt_dir, &spec.config, &suffix),
+        };
+        Checkpoint {
+            config_name: spec.config.clone(),
+            step: 0,
+            params: report.params.data.clone(),
+            adam: None,
+        }
+        .save(&path)?;
+        sink.emit(&Event::CheckpointSaved { path: path.display().to_string() });
+        report.saved_to = Some(path);
+    }
+    Ok(report)
+}
+
+fn run_eval(ws: &Workspace, spec: &EvalSpec, sink: &mut dyn EventSink) -> Result<EvalReport> {
+    let params = load_params(ws, &spec.config, &spec.ckpt)?;
+    let mut rows = Vec::new();
+    for (dsname, ds) in ws.eval_datasets()? {
+        let p = perplexity(&ws.rt, &params, &ds, spec.max_segments)?;
+        sink.emit(&Event::EvalResult { dataset: dsname.clone(), ppl: p.ppl, tokens: p.tokens });
+        rows.push(EvalRow { dataset: dsname, ppl: p.ppl, tokens: p.tokens });
+    }
+    Ok(EvalReport { config: spec.config.clone(), rows })
+}
+
+/// The zero-shot suite over already-loaded params (shared by the zeroshot
+/// job and the sweep's optional zero-shot pass).
+fn zeroshot_for(
+    ws: &Workspace,
+    config: &str,
+    params: &FlatParams,
+    items: usize,
+    seed: u64,
+    data_seed: u64,
+    sink: &mut dyn EventSink,
+) -> Result<ZeroShotReport> {
+    let tok = ws.tokenizer()?;
+    let lex = Lexicon::new(data_seed);
+    let mut rows = Vec::new();
+    let mut sum = 0.0;
+    for task in ZeroShotTask::ALL {
+        let batch = gen_items(task, &lex, seed, items);
+        let acc = zero_shot_accuracy(&ws.rt, params, &tok, &batch)?;
+        sum += acc;
+        sink.emit(&Event::ZeroShotResult { task: task.name().to_string(), accuracy: acc });
+        rows.push((task.name().to_string(), acc));
+    }
+    Ok(ZeroShotReport {
+        config: config.to_string(),
+        rows,
+        avg: sum / ZeroShotTask::ALL.len() as f64,
+    })
+}
+
+fn run_zeroshot(
+    ws: &Workspace,
+    spec: &ZeroShotSpec,
+    sink: &mut dyn EventSink,
+) -> Result<ZeroShotReport> {
+    let params = load_params(ws, &spec.config, &spec.ckpt)?;
+    zeroshot_for(ws, &spec.config, &params, spec.items, spec.seed, spec.data_seed, sink)
+}
+
+fn run_stats(ws: &Workspace, spec: &StatsSpec, sink: &mut dyn EventSink) -> Result<StatsReport> {
+    let params = load_params(ws, &spec.config, &spec.ckpt)?;
+    let stats = ModelStats::collect_nm(&params, spec.nm);
+    let report = StatsReport {
+        config: spec.config.clone(),
+        sparsity: stats.overall_sparsity(),
+        pruned_weights: stats.pruned_weight_count(),
+        nm_violations: spec.nm.map(|_| stats.total_nm_violations()),
+    };
+    sink.emit(&Event::Message {
+        text: format!(
+            "overall prunable sparsity: {:.4} ({} weights zeroed)",
+            report.sparsity, report.pruned_weights
+        ),
+    });
+    if let Some(v) = report.nm_violations {
+        sink.emit(&Event::Message { text: format!("n:m violations: {v}") });
+    }
+    Ok(report)
+}
+
+fn run_generate(
+    ws: &Workspace,
+    spec: &GenerateSpec,
+    sink: &mut dyn EventSink,
+) -> Result<GenerateReport> {
+    let params = load_params(ws, &spec.config, &spec.ckpt)?;
+    let tok = ws.tokenizer()?;
+    let prompt = tok.encode(&spec.prompt);
+    let opts = SampleOptions {
+        max_tokens: spec.tokens,
+        temperature: spec.temperature,
+        top_k: spec.top_k,
+        seed: spec.seed,
+    };
+    let out = sample(&ws.rt, &params, &prompt, &opts)?;
+    let text = format!("{}{}", spec.prompt, tok.decode(&out));
+    sink.emit(&Event::Message { text: text.clone() });
+    Ok(GenerateReport { config: spec.config.clone(), text })
+}
+
+fn run_sweep(ws: &Workspace, spec: &SweepSpec, sink: &mut dyn EventSink) -> Result<SweepReport> {
+    let cfg = ws.config(&spec.config)?;
+    let dense = load_params(ws, &spec.config, &spec.ckpt)?;
+    let datasets: Vec<(String, Dataset)> = if spec.max_segments == 0 {
+        Vec::new()
+    } else if spec.datasets.is_empty() {
+        ws.eval_datasets()?.into_iter().collect()
+    } else {
+        spec.datasets
+            .iter()
+            .map(|n| Ok((n.clone(), ws.dataset(n)?)))
+            .collect::<Result<_>>()?
+    };
+    // shared calibration: drawn once, reused by every variant
+    let chunks = ws.calib_chunks(&cfg, spec.calib, spec.calib_seed)?;
+
+    let eval_ppl = |params: &FlatParams,
+                    sink: &mut dyn EventSink|
+     -> Result<std::collections::BTreeMap<String, f64>> {
+        let mut out = std::collections::BTreeMap::new();
+        for (name, ds) in &datasets {
+            let p = perplexity(&ws.rt, params, ds, spec.max_segments)?;
+            sink.emit(&Event::EvalResult { dataset: name.clone(), ppl: p.ppl, tokens: p.tokens });
+            out.insert(name.clone(), p.ppl);
+        }
+        Ok(out)
+    };
+    let zs = |params: &FlatParams, sink: &mut dyn EventSink| -> Result<Option<ZeroShotReport>> {
+        if spec.zeroshot_items == 0 {
+            return Ok(None);
+        }
+        zeroshot_for(
+            ws,
+            &spec.config,
+            params,
+            spec.zeroshot_items,
+            spec.zeroshot_seed,
+            spec.data_seed,
+            sink,
+        )
+        .map(Some)
+    };
+
+    let total = spec.variants.len() + usize::from(spec.include_dense);
+    let mut index = 0;
+    let dense_result = if spec.include_dense {
+        sink.emit(&Event::SweepVariant { index, total, label: "dense".to_string() });
+        index += 1;
+        let ppl = eval_ppl(&dense, sink)?;
+        let zeroshot = zs(&dense, sink)?;
+        Some(VariantResult { label: "dense".to_string(), sparsity: 0.0, secs: 0.0, ppl, zeroshot })
+    } else {
+        None
+    };
+
+    let mut variants = Vec::new();
+    for v in &spec.variants {
+        sink.emit(&Event::SweepVariant { index, total, label: v.label() });
+        index += 1;
+        let opts = PruneOptions {
+            method: v.method.clone(),
+            damp: spec.damp,
+            skip: SkipSpec::None,
+            record_errors: false,
+            exact_rows: None,
+        };
+        let pr = prune_params(ws, &spec.config, dense.clone(), &chunks, &opts, sink)?;
+        if spec.save {
+            let path = Checkpoint::path_for(&ws.ckpt_dir, &spec.config, &format!("-{}", pr.label));
+            Checkpoint {
+                config_name: spec.config.clone(),
+                step: 0,
+                params: pr.params.data.clone(),
+                adam: None,
+            }
+            .save(&path)?;
+            sink.emit(&Event::CheckpointSaved { path: path.display().to_string() });
+        }
+        let ppl = eval_ppl(&pr.params, sink)?;
+        let zeroshot = zs(&pr.params, sink)?;
+        variants.push(VariantResult {
+            label: pr.label,
+            sparsity: pr.sparsity,
+            secs: pr.total_secs,
+            ppl,
+            zeroshot,
+        });
+    }
+    Ok(SweepReport { config: spec.config.clone(), dense: dense_result, variants })
+}
+
+fn run_e2e(ws: &Workspace, spec: &E2eSpec, sink: &mut dyn EventSink) -> Result<E2eReport> {
+    // train only when no checkpoint exists yet (repeat runs reuse it)
+    let ckpt_path = Checkpoint::path_for(&ws.ckpt_dir, &spec.config, "");
+    let train = if ckpt_path.exists() {
+        sink.emit(&Event::Message {
+            text: format!("[e2e {}] using existing checkpoint {ckpt_path:?}", spec.config),
+        });
+        None
+    } else {
+        let mut tspec = TrainSpec::new(&spec.config);
+        tspec.steps = spec.steps;
+        Some(run_train(ws, &tspec, sink)?)
+    };
+    let sweep = SweepSpec::new(&spec.config)
+        .dense(true)
+        .variant(PruneSpec::magnitude(0.5))
+        .variant(PruneSpec::sparsegpt(0.5))
+        .variant(PruneSpec::sparsegpt_nm(2, 4))
+        .zeroshot(50)
+        .save(true); // e2e has always left compressed checkpoints behind
+    let sweep = run_sweep(ws, &sweep, sink)?;
+    Ok(E2eReport { train, sweep })
+}

@@ -1,0 +1,546 @@
+//! Typed job specifications: everything a run needs, as data.
+//!
+//! `JobSpec` is the single input type of [`crate::api::Session::run`]. Every
+//! spec has builder constructors with the CLI's defaults and a canonical
+//! string form (`label()`), and the canonical forms parse back
+//! (`parse(label()) == spec`, `parse(s).label() == s` for canonical `s`):
+//!
+//! ```text
+//! prune spec grammar     sparsegpt-50% | sparsegpt-2:4+4bit | sparsegpt-50%-bs64
+//!                        magnitude-50% | magnitude-2:4 | adaprune-50%
+//! job spec grammar       <kind>[/<config>[/<prune-spec>[,<prune-spec>...]]]
+//!                        e.g. prune/nano/sparsegpt-2:4+4bit
+//!                             sweep/small/sparsegpt-50%,magnitude-50%
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{PruneMethod, SkipSpec};
+use crate::harness::DEFAULT_CALIB_SEGMENTS;
+use crate::solver::sparsegpt_ref::Pattern;
+
+/// A compression method selection, round-trippable through its label.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PruneSpec {
+    pub method: PruneMethod,
+}
+
+fn parse_percent(s: &str) -> Option<f64> {
+    let p: f64 = s.strip_suffix('%')?.parse().ok()?;
+    if (0.0..=100.0).contains(&p) {
+        Some(p / 100.0)
+    } else {
+        None
+    }
+}
+
+fn parse_pattern(s: &str) -> Option<Pattern> {
+    if let Some(p) = parse_percent(s) {
+        return Some(Pattern::Unstructured(p));
+    }
+    let (n, m) = s.split_once(':')?;
+    let (n, m): (usize, usize) = (n.parse().ok()?, m.parse().ok()?);
+    if n > 0 && m > n {
+        Some(Pattern::NM(n, m))
+    } else {
+        None
+    }
+}
+
+impl PruneSpec {
+    /// SparseGPT at unstructured sparsity `p` (0.0..1.0).
+    pub fn sparsegpt(sparsity: f64) -> PruneSpec {
+        PruneSpec {
+            method: PruneMethod::SparseGpt {
+                pattern: Pattern::Unstructured(sparsity),
+                quant_bits: None,
+            },
+        }
+    }
+
+    /// SparseGPT with an n:m semi-structured pattern (2:4, 4:8).
+    pub fn sparsegpt_nm(n: usize, m: usize) -> PruneSpec {
+        PruneSpec {
+            method: PruneMethod::SparseGpt { pattern: Pattern::NM(n, m), quant_bits: None },
+        }
+    }
+
+    /// Magnitude-pruning baseline at unstructured sparsity `p`.
+    pub fn magnitude(sparsity: f64) -> PruneSpec {
+        PruneSpec { method: PruneMethod::Magnitude { pattern: Pattern::Unstructured(sparsity) } }
+    }
+
+    /// Magnitude-pruning baseline with an n:m pattern.
+    pub fn magnitude_nm(n: usize, m: usize) -> PruneSpec {
+        PruneSpec { method: PruneMethod::Magnitude { pattern: Pattern::NM(n, m) } }
+    }
+
+    /// AdaPrune baseline (magnitude mask + GD reconstruction).
+    pub fn adaprune(sparsity: f64) -> PruneSpec {
+        PruneSpec { method: PruneMethod::AdaPrune { sparsity } }
+    }
+
+    /// Enable joint quantization (Eq. 7). Only meaningful for the SparseGPT
+    /// method; a no-op on the baselines, which have no quantized variant.
+    pub fn with_quant_bits(mut self, bits: u32) -> PruneSpec {
+        if let PruneMethod::SparseGpt { quant_bits, .. } = &mut self.method {
+            *quant_bits = Some(bits);
+        }
+        self
+    }
+
+    /// The canonical label, identical to [`PruneMethod::label`].
+    pub fn label(&self) -> String {
+        self.method.label()
+    }
+
+    /// Parse a canonical label back into a spec (inverse of [`label`]).
+    ///
+    /// [`label`]: PruneSpec::label
+    pub fn parse(s: &str) -> Result<PruneSpec> {
+        let err = || {
+            anyhow!(
+                "unrecognized prune spec {s:?} (expected e.g. sparsegpt-50%, \
+                 sparsegpt-2:4+4bit, magnitude-80%, adaprune-50%)"
+            )
+        };
+        let (method, rest) = s.split_once('-').ok_or_else(err)?;
+        match method {
+            "sparsegpt" => {
+                let (pat_str, quant_bits) = match rest.rsplit_once('+') {
+                    Some((p, q)) => {
+                        let b = q.strip_suffix("bit").ok_or_else(err)?;
+                        (p, Some(b.parse::<u32>().map_err(|_| err())?))
+                    }
+                    None => (rest, None),
+                };
+                if let Some((p, bs)) = pat_str.split_once("-bs") {
+                    // Fig-10 mask-blocksize ablation variant
+                    if quant_bits.is_some() {
+                        return Err(err());
+                    }
+                    let sparsity = parse_percent(p).ok_or_else(err)?;
+                    let mask_blocksize = bs.parse::<usize>().map_err(|_| err())?;
+                    return Ok(PruneSpec {
+                        method: PruneMethod::SparseGptBs { sparsity, mask_blocksize },
+                    });
+                }
+                let pattern = parse_pattern(pat_str).ok_or_else(err)?;
+                Ok(PruneSpec { method: PruneMethod::SparseGpt { pattern, quant_bits } })
+            }
+            "magnitude" => {
+                let pattern = parse_pattern(rest).ok_or_else(err)?;
+                Ok(PruneSpec { method: PruneMethod::Magnitude { pattern } })
+            }
+            "adaprune" => {
+                let sparsity = parse_percent(rest).ok_or_else(err)?;
+                Ok(PruneSpec { method: PruneMethod::AdaPrune { sparsity } })
+            }
+            _ => Err(err()),
+        }
+    }
+}
+
+/// `gen-data`: synthesize corpora + train the BPE tokenizer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenDataSpec {
+    pub out: PathBuf,
+    pub seed: u64,
+    pub train_mb: usize,
+}
+
+impl Default for GenDataSpec {
+    fn default() -> Self {
+        GenDataSpec { out: "data".into(), seed: 0, train_mb: 4 }
+    }
+}
+
+/// `train`: pretrain a model config through the `train_step` artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainSpec {
+    pub config: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    /// override the per-config default learning rate
+    pub lr: Option<f64>,
+    /// checkpoint directory; `None` = the workspace checkpoint dir
+    pub out: Option<PathBuf>,
+    pub checkpoint_every: usize,
+    pub resume: bool,
+}
+
+impl TrainSpec {
+    pub fn new(config: &str) -> TrainSpec {
+        TrainSpec {
+            config: config.to_string(),
+            steps: 400,
+            seed: 0,
+            log_every: 20,
+            lr: None,
+            out: None,
+            checkpoint_every: 0,
+            resume: false,
+        }
+    }
+}
+
+/// `prune`: one-shot compress a trained model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PruneJobSpec {
+    pub config: String,
+    pub prune: PruneSpec,
+    pub damp: f64,
+    pub skip: SkipSpec,
+    pub calib: usize,
+    pub calib_seed: u64,
+    /// input checkpoint; `None` = the config's trained checkpoint
+    pub ckpt: Option<PathBuf>,
+    pub record_errors: bool,
+    /// write the compressed checkpoint (CLI sets this; library callers
+    /// usually keep the params in memory instead)
+    pub save: bool,
+    /// output path when saving; `None` = `<ckpt-dir>/<config><suffix>.ckpt`
+    pub out: Option<PathBuf>,
+    /// checkpoint suffix; `None` = `-<label>`
+    pub suffix: Option<String>,
+}
+
+impl PruneJobSpec {
+    pub fn new(config: &str, prune: PruneSpec) -> PruneJobSpec {
+        PruneJobSpec {
+            config: config.to_string(),
+            prune,
+            damp: 0.01,
+            skip: SkipSpec::None,
+            calib: DEFAULT_CALIB_SEGMENTS,
+            calib_seed: 0,
+            ckpt: None,
+            record_errors: false,
+            save: false,
+            out: None,
+            suffix: None,
+        }
+    }
+}
+
+/// `eval`: perplexity on the three held-out corpora.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalSpec {
+    pub config: String,
+    pub ckpt: Option<PathBuf>,
+    pub max_segments: usize,
+}
+
+impl EvalSpec {
+    pub fn new(config: &str) -> EvalSpec {
+        EvalSpec { config: config.to_string(), ckpt: None, max_segments: 512 }
+    }
+}
+
+/// `zeroshot`: the five multiple-choice tasks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ZeroShotSpec {
+    pub config: String,
+    pub ckpt: Option<PathBuf>,
+    pub items: usize,
+    pub seed: u64,
+    pub data_seed: u64,
+}
+
+impl ZeroShotSpec {
+    pub fn new(config: &str) -> ZeroShotSpec {
+        ZeroShotSpec { config: config.to_string(), ckpt: None, items: 100, seed: 7, data_seed: 0 }
+    }
+}
+
+/// `stats`: sparsity statistics of a checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsSpec {
+    pub config: String,
+    pub ckpt: Option<PathBuf>,
+    pub nm: Option<(usize, usize)>,
+}
+
+impl StatsSpec {
+    pub fn new(config: &str) -> StatsSpec {
+        StatsSpec { config: config.to_string(), ckpt: None, nm: None }
+    }
+}
+
+/// `generate`: autoregressive sampling (qualitative check).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerateSpec {
+    pub config: String,
+    pub ckpt: Option<PathBuf>,
+    pub prompt: String,
+    pub tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl GenerateSpec {
+    pub fn new(config: &str) -> GenerateSpec {
+        GenerateSpec {
+            config: config.to_string(),
+            ckpt: None,
+            prompt: "the ".to_string(),
+            tokens: 64,
+            temperature: 0.8,
+            top_k: 40,
+            seed: 0,
+        }
+    }
+}
+
+/// `e2e`: train -> prune (3 variants) -> eval in one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct E2eSpec {
+    pub config: String,
+    pub steps: usize,
+}
+
+impl E2eSpec {
+    pub fn new(config: &str) -> E2eSpec {
+        E2eSpec { config: config.to_string(), steps: 300 }
+    }
+}
+
+/// `sweep`: run a list of prune variants against one checkpoint with
+/// *shared calibration* (the chunks are drawn once), evaluating each.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSpec {
+    pub config: String,
+    pub ckpt: Option<PathBuf>,
+    pub variants: Vec<PruneSpec>,
+    pub damp: f64,
+    pub calib: usize,
+    pub calib_seed: u64,
+    /// eval corpora; empty = all three held-out sets
+    pub datasets: Vec<String>,
+    /// eval segments per corpus; 0 disables the perplexity pass
+    pub max_segments: usize,
+    /// also evaluate the unpruned model as a baseline row
+    pub include_dense: bool,
+    /// zero-shot items per task; 0 disables the zero-shot pass
+    pub zeroshot_items: usize,
+    pub zeroshot_seed: u64,
+    pub data_seed: u64,
+    /// write each variant's compressed checkpoint (`<config>-<label>.ckpt`)
+    pub save: bool,
+}
+
+impl SweepSpec {
+    pub fn new(config: &str) -> SweepSpec {
+        SweepSpec {
+            config: config.to_string(),
+            ckpt: None,
+            variants: Vec::new(),
+            damp: 0.01,
+            calib: DEFAULT_CALIB_SEGMENTS,
+            calib_seed: 0,
+            datasets: Vec::new(),
+            max_segments: 128,
+            include_dense: false,
+            zeroshot_items: 0,
+            zeroshot_seed: 7,
+            data_seed: 0,
+            save: false,
+        }
+    }
+
+    pub fn variant(mut self, v: PruneSpec) -> SweepSpec {
+        self.variants.push(v);
+        self
+    }
+
+    pub fn variants(mut self, vs: Vec<PruneSpec>) -> SweepSpec {
+        self.variants = vs;
+        self
+    }
+
+    pub fn dense(mut self, include: bool) -> SweepSpec {
+        self.include_dense = include;
+        self
+    }
+
+    pub fn dataset(mut self, name: &str) -> SweepSpec {
+        self.datasets.push(name.to_string());
+        self
+    }
+
+    pub fn calib(mut self, segments: usize) -> SweepSpec {
+        self.calib = segments;
+        self
+    }
+
+    pub fn max_segments(mut self, segments: usize) -> SweepSpec {
+        self.max_segments = segments;
+        self
+    }
+
+    pub fn zeroshot(mut self, items: usize) -> SweepSpec {
+        self.zeroshot_items = items;
+        self
+    }
+
+    pub fn save(mut self, save: bool) -> SweepSpec {
+        self.save = save;
+        self
+    }
+
+    pub fn ckpt(mut self, path: PathBuf) -> SweepSpec {
+        self.ckpt = Some(path);
+        self
+    }
+}
+
+/// One job the [`crate::api::Session`] can execute.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobSpec {
+    GenData(GenDataSpec),
+    Train(TrainSpec),
+    Prune(PruneJobSpec),
+    Eval(EvalSpec),
+    ZeroShot(ZeroShotSpec),
+    Stats(StatsSpec),
+    Generate(GenerateSpec),
+    E2e(E2eSpec),
+    Sweep(SweepSpec),
+}
+
+impl JobSpec {
+    /// The job kind (matches the CLI subcommand).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobSpec::GenData(_) => "gen-data",
+            JobSpec::Train(_) => "train",
+            JobSpec::Prune(_) => "prune",
+            JobSpec::Eval(_) => "eval",
+            JobSpec::ZeroShot(_) => "zeroshot",
+            JobSpec::Stats(_) => "stats",
+            JobSpec::Generate(_) => "generate",
+            JobSpec::E2e(_) => "e2e",
+            JobSpec::Sweep(_) => "sweep",
+        }
+    }
+
+    /// The model config this job targets, if any.
+    pub fn config(&self) -> Option<&str> {
+        match self {
+            JobSpec::GenData(_) => None,
+            JobSpec::Train(s) => Some(s.config.as_str()),
+            JobSpec::Prune(s) => Some(s.config.as_str()),
+            JobSpec::Eval(s) => Some(s.config.as_str()),
+            JobSpec::ZeroShot(s) => Some(s.config.as_str()),
+            JobSpec::Stats(s) => Some(s.config.as_str()),
+            JobSpec::Generate(s) => Some(s.config.as_str()),
+            JobSpec::E2e(s) => Some(s.config.as_str()),
+            JobSpec::Sweep(s) => Some(s.config.as_str()),
+        }
+    }
+
+    /// Canonical string form: `<kind>[/<config>[/<prune-spec>,...]]`.
+    pub fn label(&self) -> String {
+        match self {
+            JobSpec::GenData(_) => "gen-data".to_string(),
+            JobSpec::Prune(s) => format!("prune/{}/{}", s.config, s.prune.label()),
+            JobSpec::Sweep(s) => {
+                if s.variants.is_empty() {
+                    // dense-only sweep: no trailing slash, so it parses back
+                    format!("sweep/{}", s.config)
+                } else {
+                    let vs: Vec<String> = s.variants.iter().map(|v| v.label()).collect();
+                    format!("sweep/{}/{}", s.config, vs.join(","))
+                }
+            }
+            other => format!("{}/{}", other.kind(), other.config().unwrap_or("")),
+        }
+    }
+
+    /// Parse a canonical label (inverse of [`JobSpec::label`] on canonical
+    /// strings); unspecified fields take the builder defaults.
+    pub fn parse(s: &str) -> Result<JobSpec> {
+        let mut parts = s.splitn(3, '/');
+        let kind = parts.next().unwrap_or("");
+        let config = parts.next();
+        let extra = parts.next();
+        let need_config = || {
+            config
+                .filter(|c| !c.is_empty())
+                .ok_or_else(|| anyhow!("job spec {s:?} needs a config: {kind}/<config>"))
+        };
+        let no_extra = |spec: JobSpec| {
+            if extra.is_some() {
+                Err(anyhow!("job spec {s:?} has trailing parts"))
+            } else {
+                Ok(spec)
+            }
+        };
+        match kind {
+            "gen-data" => {
+                if config.is_some() {
+                    return Err(anyhow!("gen-data takes no config in {s:?}"));
+                }
+                Ok(JobSpec::GenData(GenDataSpec::default()))
+            }
+            "train" => no_extra(JobSpec::Train(TrainSpec::new(need_config()?))),
+            "prune" => {
+                let cfg = need_config()?;
+                let pr = PruneSpec::parse(
+                    extra.ok_or_else(|| anyhow!("prune spec {s:?} needs prune/<config>/<method>"))?,
+                )?;
+                Ok(JobSpec::Prune(PruneJobSpec::new(cfg, pr)))
+            }
+            "eval" => no_extra(JobSpec::Eval(EvalSpec::new(need_config()?))),
+            "zeroshot" => no_extra(JobSpec::ZeroShot(ZeroShotSpec::new(need_config()?))),
+            "stats" => no_extra(JobSpec::Stats(StatsSpec::new(need_config()?))),
+            "generate" => no_extra(JobSpec::Generate(GenerateSpec::new(need_config()?))),
+            "e2e" => no_extra(JobSpec::E2e(E2eSpec::new(need_config()?))),
+            "sweep" => {
+                let cfg = need_config()?;
+                let variants = match extra {
+                    // bare "sweep/<config>" = dense-only sweep
+                    None => Vec::new(),
+                    Some(list) => list
+                        .split(',')
+                        .map(|v| PruneSpec::parse(v.trim()))
+                        .collect::<Result<Vec<_>>>()?,
+                };
+                Ok(JobSpec::Sweep(SweepSpec::new(cfg).variants(variants)))
+            }
+            other => Err(anyhow!("unknown job kind {other:?} in {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_produce_canonical_labels() {
+        assert_eq!(PruneSpec::sparsegpt(0.5).label(), "sparsegpt-50%");
+        assert_eq!(PruneSpec::sparsegpt_nm(2, 4).label(), "sparsegpt-2:4");
+        assert_eq!(PruneSpec::sparsegpt_nm(2, 4).with_quant_bits(4).label(), "sparsegpt-2:4+4bit");
+        assert_eq!(PruneSpec::magnitude(0.8).label(), "magnitude-80%");
+        assert_eq!(PruneSpec::magnitude_nm(4, 8).label(), "magnitude-4:8");
+        assert_eq!(PruneSpec::adaprune(0.5).label(), "adaprune-50%");
+    }
+
+    #[test]
+    fn quant_bits_ignored_on_baselines() {
+        assert_eq!(PruneSpec::magnitude(0.5).with_quant_bits(4), PruneSpec::magnitude(0.5));
+    }
+
+    #[test]
+    fn job_kind_and_config() {
+        let j = JobSpec::Prune(PruneJobSpec::new("nano", PruneSpec::sparsegpt(0.5)));
+        assert_eq!(j.kind(), "prune");
+        assert_eq!(j.config(), Some("nano"));
+        assert_eq!(JobSpec::GenData(GenDataSpec::default()).config(), None);
+    }
+}

@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::coordinator::{PruneMethod, PruneOptions, PruneOutcome, Pruner, SkipSpec};
+use crate::coordinator::{PruneMethod, PruneOptions, PruneOutcome, SkipSpec};
 use crate::eval::perplexity;
 use crate::harness::{Workspace, DEFAULT_CALIB_SEGMENTS};
 use crate::model::layout::FlatParams;
@@ -58,8 +58,24 @@ pub fn prune_variant_opts(
     n_calib: usize,
     calib_seed: u64,
 ) -> Result<PruneOutcome> {
+    // route through the api layer's single prune entry point (silently)
     let chunks = ws.calib_chunks(&dense.cfg, n_calib, calib_seed)?;
-    Pruner::new(&ws.rt).prune(dense.clone(), &chunks, &opts)
+    let r = crate::api::prune_params(
+        ws,
+        &dense.cfg.name,
+        dense.clone(),
+        &chunks,
+        &opts,
+        &mut crate::api::NullSink,
+    )?;
+    Ok(PruneOutcome {
+        params: r.params,
+        reports: r.matrices,
+        total_secs: r.total_secs,
+        hessian_secs: r.hessian_secs,
+        solver_secs: r.solver_secs,
+        propagate_secs: r.propagate_secs,
+    })
 }
 
 /// Perplexity on every eval corpus; key -> ppl.

@@ -1,9 +1,15 @@
 //! Minimal argument parser for the launcher (clap is unavailable offline).
-//! Supports `--flag value`, `--flag=value` and boolean `--flag`.
+//! Supports `--flag value`, `--flag=value` and boolean `--flag`; duplicate
+//! occurrences of a flag are rejected rather than silently last-wins.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
+
+/// Boolean flags accepted by every `sparsegpt` subcommand. `--json`
+/// switches the event stream from human log lines to JSON lines.
+pub const GLOBAL_BOOL_FLAGS: &[&str] =
+    &["resume", "record-errors", "rt-stats", "json", "no-dense", "save"];
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -20,8 +26,16 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    if bool_flags.contains(&k) {
+                        bail!("--{k} is a boolean flag and takes no value (got {v:?})");
+                    }
+                    if out.flags.insert(k.to_string(), v.to_string()).is_some() {
+                        bail!("duplicate --{k} (each flag may be given once)");
+                    }
                 } else if bool_flags.contains(&name) {
+                    if out.bools.iter().any(|b| b == name) {
+                        bail!("duplicate --{name} (each flag may be given once)");
+                    }
                     out.bools.push(name.to_string());
                 } else {
                     let v = argv
@@ -30,7 +44,9 @@ impl Args {
                     if v.starts_with("--") {
                         bail!("--{name} needs a value (got {v})");
                     }
-                    out.flags.insert(name.to_string(), v.clone());
+                    if out.flags.insert(name.to_string(), v.clone()).is_some() {
+                        bail!("duplicate --{name} (each flag may be given once)");
+                    }
                     i += 1;
                 }
             } else {
@@ -111,6 +127,34 @@ mod tests {
     fn missing_value_errors() {
         assert!(Args::parse(&v(&["--config"]), &[]).is_err());
         assert!(Args::parse(&v(&["--config", "--x"]), &[]).is_err());
+    }
+
+    #[test]
+    fn duplicate_flags_rejected() {
+        let e = Args::parse(&v(&["--config", "nano", "--config", "small"]), &[]).unwrap_err();
+        assert!(format!("{e}").contains("duplicate --config"), "{e}");
+        // =-form and space-form count as the same flag
+        assert!(Args::parse(&v(&["--damp=0.1", "--damp", "0.2"]), &[]).is_err());
+        // duplicate booleans are rejected too
+        assert!(Args::parse(&v(&["--json", "--json"]), &["json"]).is_err());
+        // distinct flags are of course fine
+        let a = Args::parse(&v(&["--config", "nano", "--damp", "0.1"]), &[]).unwrap();
+        assert_eq!(a.get("config"), Some("nano"));
+    }
+
+    #[test]
+    fn global_bool_flags_include_json() {
+        assert!(GLOBAL_BOOL_FLAGS.contains(&"json"));
+        let a = Args::parse(&v(&["prune", "--json"]), GLOBAL_BOOL_FLAGS).unwrap();
+        assert!(a.has("json"));
+    }
+
+    #[test]
+    fn bool_flag_with_value_rejected() {
+        // --json=true must not silently land in the value-flag map
+        let e = Args::parse(&v(&["--json=true"]), &["json"]).unwrap_err();
+        assert!(format!("{e}").contains("boolean flag"), "{e}");
+        assert!(Args::parse(&v(&["--json=1", "--json"]), &["json"]).is_err());
     }
 
     #[test]

@@ -15,5 +15,5 @@ pub mod trainer;
 
 pub use calibration::CalibChunks;
 pub use partial::SkipSpec;
-pub use pipeline::{PruneMethod, PruneOptions, PruneOutcome, Pruner};
-pub use trainer::{TrainOptions, Trainer};
+pub use pipeline::{MatrixReport, PipelineEvent, PruneMethod, PruneOptions, PruneOutcome, Pruner};
+pub use trainer::{TrainEvent, TrainOptions, Trainer};

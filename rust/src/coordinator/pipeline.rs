@@ -41,12 +41,26 @@ pub enum PruneMethod {
     AdaPrune { sparsity: f64 },
 }
 
+/// Render a sparsity fraction as a percent label: integral percents print
+/// bare ("50%"), anything finer keeps full precision ("62.5%") so that
+/// `api::PruneSpec::parse(label())` recovers the same sparsity whenever
+/// `p * 100` is exactly representable (all practically-specified points;
+/// adversarial fractions may differ in the last bit after the /100).
+fn pct(p: f64) -> String {
+    let v = p * 100.0;
+    if (v - v.round()).abs() < 1e-9 {
+        format!("{:.0}%", v.round())
+    } else {
+        format!("{v}%")
+    }
+}
+
 impl PruneMethod {
     pub fn label(&self) -> String {
         match self {
             PruneMethod::SparseGpt { pattern, quant_bits } => {
                 let p = match pattern {
-                    Pattern::Unstructured(p) => format!("{:.0}%", p * 100.0),
+                    Pattern::Unstructured(p) => pct(*p),
                     Pattern::NM(n, m) => format!("{n}:{m}"),
                 };
                 match quant_bits {
@@ -55,13 +69,13 @@ impl PruneMethod {
                 }
             }
             PruneMethod::SparseGptBs { sparsity, mask_blocksize } => {
-                format!("sparsegpt-{:.0}%-bs{}", sparsity * 100.0, mask_blocksize)
+                format!("sparsegpt-{}-bs{}", pct(*sparsity), mask_blocksize)
             }
             PruneMethod::Magnitude { pattern } => match pattern {
-                Pattern::Unstructured(p) => format!("magnitude-{:.0}%", p * 100.0),
+                Pattern::Unstructured(p) => format!("magnitude-{}", pct(*p)),
                 Pattern::NM(n, m) => format!("magnitude-{n}:{m}"),
             },
-            PruneMethod::AdaPrune { sparsity } => format!("adaprune-{:.0}%", sparsity * 100.0),
+            PruneMethod::AdaPrune { sparsity } => format!("adaprune-{}", pct(*sparsity)),
         }
     }
 }
@@ -107,6 +121,25 @@ pub struct MatrixReport {
     /// same-mask exact-reconstruction error on the subsampled rows, paired
     /// with the solver's error on those SAME rows (Fig-11 ratio)
     pub exact_vs_solver: Option<(f64, f64)>,
+}
+
+/// Progress notifications emitted by the pipeline as it walks the model.
+/// `api::Session` maps these onto its structured event stream; callers that
+/// do not care pass a no-op hook (see [`Pruner::prune`]).
+#[derive(Debug)]
+pub enum PipelineEvent<'a> {
+    /// calibration capture for block `layer` is starting
+    BlockStart { layer: usize, layers: usize },
+    /// one weight matrix was compressed (or skipped by policy)
+    Matrix(&'a MatrixReport),
+    /// block `layer` finished compressing + propagating; `sparsity` is the
+    /// numel-weighted sparsity over the block's six linears
+    BlockDone {
+        layer: usize,
+        layers: usize,
+        sparsity: f64,
+        secs: f64,
+    },
 }
 
 #[derive(Debug)]
@@ -181,9 +214,21 @@ impl<'rt> Pruner<'rt> {
     /// Run the one-shot pipeline. `params` is consumed and returned pruned.
     pub fn prune(
         &self,
+        params: FlatParams,
+        chunks: &CalibChunks,
+        opts: &PruneOptions,
+    ) -> Result<PruneOutcome> {
+        self.prune_with(params, chunks, opts, &mut |_| {})
+    }
+
+    /// Like [`Pruner::prune`], invoking `progress` as blocks and matrices
+    /// complete (the event-emission hook the `api` layer plugs into).
+    pub fn prune_with(
+        &self,
         mut params: FlatParams,
         chunks: &CalibChunks,
         opts: &PruneOptions,
+        progress: &mut dyn FnMut(&PipelineEvent),
     ) -> Result<PruneOutcome> {
         let cfg = params.cfg.clone();
         let t_total = Instant::now();
@@ -212,6 +257,9 @@ impl<'rt> Pruner<'rt> {
             && self.rt.manifest.artifacts.contains_key(&fused_name);
 
         for layer in 0..cfg.layers {
+            let t_layer = Instant::now();
+            let layer_report_start = reports.len();
+            progress(&PipelineEvent::BlockStart { layer, layers: cfg.layers });
             // 2. capture pass with dense block weights -> Hessians
             let t0 = Instant::now();
             let block = params.block_slice(layer)?;
@@ -274,6 +322,7 @@ impl<'rt> Pruner<'rt> {
                         sq_error: None,
                         exact_vs_solver: None,
                     });
+                    progress(&PipelineEvent::Matrix(reports.last().unwrap()));
                     continue;
                 }
                 let cap = kind.capture();
@@ -392,6 +441,7 @@ impl<'rt> Pruner<'rt> {
                     sq_error,
                     exact_vs_solver,
                 });
+                progress(&PipelineEvent::Matrix(reports.last().unwrap()));
                 params.set_linear(kind, layer, &w_new)?;
             }
 
@@ -414,6 +464,20 @@ impl<'rt> Pruner<'rt> {
                 *h = outs.into_iter().next().unwrap();
             }
             propagate_secs += t2.elapsed().as_secs_f64();
+
+            let (mut zeroed, mut numel) = (0.0f64, 0.0f64);
+            for r in &reports[layer_report_start..] {
+                let (rr, cc) = r.kind.shape(&cfg);
+                let n = (rr * cc) as f64;
+                zeroed += r.sparsity * n;
+                numel += n;
+            }
+            progress(&PipelineEvent::BlockDone {
+                layer,
+                layers: cfg.layers,
+                sparsity: if numel > 0.0 { zeroed / numel } else { 0.0 },
+                secs: t_layer.elapsed().as_secs_f64(),
+            });
         }
 
         Ok(PruneOutcome {

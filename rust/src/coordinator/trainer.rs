@@ -63,6 +63,22 @@ pub struct Trainer<'rt> {
     pub rt: &'rt Runtime,
 }
 
+/// Progress notifications emitted by the training loop; `api::Session` maps
+/// these onto its structured event stream, the plain [`Trainer::train`]
+/// entry point prints the classic log lines.
+#[derive(Debug)]
+pub enum TrainEvent {
+    /// a logged step (cadence: `opts.log_every`, plus the first and last)
+    Step {
+        step: u64,
+        loss: f64,
+        lr: f64,
+        secs_per_step: f64,
+    },
+    /// a checkpoint was written
+    Checkpoint { path: PathBuf, step: u64 },
+}
+
 #[derive(Debug)]
 pub struct TrainOutcome {
     pub params: FlatParams,
@@ -77,7 +93,8 @@ impl<'rt> Trainer<'rt> {
         Trainer { rt }
     }
 
-    /// Train (or continue training) `params` on `data`.
+    /// Train (or continue training) `params` on `data`, printing the
+    /// classic progress lines to stdout.
     pub fn train(
         &self,
         params: FlatParams,
@@ -85,6 +102,28 @@ impl<'rt> Trainer<'rt> {
         start_step: u64,
         data: &Dataset,
         opts: &TrainOptions,
+    ) -> Result<TrainOutcome> {
+        let name = params.cfg.name.clone();
+        self.train_with(params, adam, start_step, data, opts, &mut |ev| match ev {
+            TrainEvent::Step { step, loss, lr, secs_per_step } => println!(
+                "[train {name}] step {step} loss {loss:.4} lr {lr:.2e} ({secs_per_step:.2} s/step)"
+            ),
+            TrainEvent::Checkpoint { path, step } => {
+                println!("[train {name}] checkpoint -> {path:?} (step {step})")
+            }
+        })
+    }
+
+    /// Like [`Trainer::train`] but silent, invoking `progress` instead of
+    /// printing (the event-emission hook the `api` layer plugs into).
+    pub fn train_with(
+        &self,
+        params: FlatParams,
+        adam: Option<(Vec<f32>, Vec<f32>)>,
+        start_step: u64,
+        data: &Dataset,
+        opts: &TrainOptions,
+        progress: &mut dyn FnMut(&TrainEvent),
     ) -> Result<TrainOutcome> {
         let cfg = params.cfg.clone();
         let artifact = format!("train_step_{}", cfg.name);
@@ -118,24 +157,27 @@ impl<'rt> Trainer<'rt> {
             m = it.next().unwrap().into_data();
             v = it.next().unwrap().into_data();
             let loss = it.next().unwrap().data()[0] as f64;
-            if s % opts.log_every == 0 || s == 1 || s == opts.steps {
+            if s % opts.log_every.max(1) == 0 || s == 1 || s == opts.steps {
                 let dt = t0.elapsed().as_secs_f64();
-                println!(
-                    "[train {}] step {step} loss {loss:.4} lr {lr:.2e} ({:.2} s/step)",
-                    cfg.name,
-                    dt / s as f64
-                );
+                progress(&TrainEvent::Step {
+                    step,
+                    loss,
+                    lr: lr as f64,
+                    secs_per_step: dt / s as f64,
+                });
                 losses.push((step as usize, loss));
             }
             if opts.checkpoint_every > 0 && s % opts.checkpoint_every == 0 {
                 if let Some(dir) = &opts.out {
-                    self.save(dir, &cfg.name, step, &p, &m, &v)?;
+                    let path = self.save(dir, &cfg.name, step, &p, &m, &v)?;
+                    progress(&TrainEvent::Checkpoint { path, step });
                 }
             }
         }
         let final_step = start_step + opts.steps as u64;
         if let Some(dir) = &opts.out {
-            self.save(dir, &cfg.name, final_step, &p, &m, &v)?;
+            let path = self.save(dir, &cfg.name, final_step, &p, &m, &v)?;
+            progress(&TrainEvent::Checkpoint { path, step: final_step });
         }
         Ok(TrainOutcome {
             params: FlatParams::new(&cfg, p)?,
@@ -154,7 +196,7 @@ impl<'rt> Trainer<'rt> {
         p: &[f32],
         m: &[f32],
         v: &[f32],
-    ) -> Result<()> {
+    ) -> Result<PathBuf> {
         let ck = Checkpoint {
             config_name: name.to_string(),
             step,
@@ -163,8 +205,7 @@ impl<'rt> Trainer<'rt> {
         };
         let path = Checkpoint::path_for(dir, name, "");
         ck.save(&path)?;
-        println!("[train {name}] checkpoint -> {path:?} (step {step})");
-        Ok(())
+        Ok(path)
     }
 }
 

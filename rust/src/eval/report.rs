@@ -98,7 +98,7 @@ pub fn append_jsonl(path: impl AsRef<Path>, fields: &[(&str, Json)]) -> Result<(
     for (k, v) in fields {
         obj.insert(k.to_string(), v.clone());
     }
-    let mut line = Json::Obj(obj).to_string_pretty().replace('\n', " ");
+    let mut line = Json::Obj(obj).to_string_compact();
     line.push('\n');
     let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
     f.write_all(line.as_bytes())?;

@@ -87,8 +87,20 @@ impl Workspace {
     }
 }
 
-/// Generate corpora + tokenizer + tokenized datasets into `out`.
+/// Generate corpora + tokenizer + tokenized datasets into `out`, logging
+/// progress to stdout.
 pub fn generate_data(out: impl AsRef<Path>, seed: u64, train_mb: usize) -> Result<()> {
+    generate_data_with(out, seed, train_mb, &mut |t| println!("{t}"))
+}
+
+/// Like [`generate_data`] but routing progress lines through `log` (the
+/// `api` layer turns them into structured events).
+pub fn generate_data_with(
+    out: impl AsRef<Path>,
+    seed: u64,
+    train_mb: usize,
+    log: &mut dyn FnMut(&str),
+) -> Result<()> {
     let out = out.as_ref();
     std::fs::create_dir_all(out)?;
     let lex = Lexicon::new(seed);
@@ -102,7 +114,7 @@ pub fn generate_data(out: impl AsRef<Path>, seed: u64, train_mb: usize) -> Resul
     let mut texts = Vec::new();
     for (name, style, s, bytes) in &specs {
         let t = gen_corpus(&lex, *style, *s, (*bytes).max(100_000));
-        println!("[gen-data] {name}: {} chars", t.len());
+        log(&format!("[gen-data] {name}: {} chars", t.len()));
         texts.push((name.to_string(), t));
     }
 
@@ -110,11 +122,11 @@ pub fn generate_data(out: impl AsRef<Path>, seed: u64, train_mb: usize) -> Resul
     let train_text = &texts[0].1;
     let tok = Tokenizer::train(&train_text[..train_text.len().min(400_000)]);
     tok.save(out.join("tokenizer.txt"))?;
-    println!("[gen-data] tokenizer: {} merges", tok.merges.len());
+    log(&format!("[gen-data] tokenizer: {} merges", tok.merges.len()));
 
     for (name, text) in &texts {
         let ds = Dataset::from_text(name, &tok, text);
-        println!("[gen-data] {name}: {} tokens", ds.len());
+        log(&format!("[gen-data] {name}: {} tokens", ds.len()));
         ds.save_tokens(out.join(format!("{name}.tokens")))?;
     }
     Ok(())

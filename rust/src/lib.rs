@@ -1,19 +1,23 @@
 //! # sparsegpt — a reproduction of *SparseGPT: Massive Language Models Can
 //! be Accurately Pruned in One-Shot* (Frantar & Alistarh, ICML 2023)
 //!
-//! Three-layer architecture (Python never on the request path):
+//! Four-layer architecture (Python never on the request path):
 //!   * **L1** Pallas kernels (Algorithm 1 column sweep, Hessian accumulation)
 //!   * **L2** JAX graphs (model fwd/bwd, layer solver, blocked linalg),
 //!     AOT-lowered to HLO-text artifacts by `make artifacts`
-//!   * **L3** this crate: the compression pipeline coordinator, every
-//!     substrate the paper's evaluation needs (synthetic corpora, BPE
+//!   * **L3** this crate's substrate: the compression pipeline coordinator,
+//!     everything the paper's evaluation needs (synthetic corpora, BPE
 //!     tokenizer, trainer, perplexity/zero-shot eval, sparse inference
 //!     engine, baselines) and the PJRT runtime that loads + executes the
 //!     artifacts.
+//!   * **L4** the [`api`] job layer: typed `JobSpec`s executed by a
+//!     `Session` with a structured (human or JSON-lines) event stream —
+//!     the single front door the CLI, examples and benches go through.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

@@ -1,38 +1,33 @@
 //! `sparsegpt` — launcher for the SparseGPT reproduction pipeline.
 //!
-//! Subcommands:
-//!   gen-data   generate synthetic corpora + train the BPE tokenizer
-//!   train      pretrain a model config (train_step artifact loop)
-//!   prune      one-shot compress a trained model (SparseGPT / baselines)
-//!   eval       perplexity on the three eval corpora
-//!   zeroshot   the five zero-shot tasks
-//!   stats      sparsity statistics of a checkpoint
-//!   e2e        train -> prune -> eval in one run (see examples/ too)
+//! Every subcommand parses into a typed `api::JobSpec` and executes
+//! through `api::Session`; progress is narrated as structured events.
+//! With the global `--json` flag the event stream is machine-readable
+//! JSON lines (one object per line, each with a `reason` field); without
+//! it the classic human log lines plus result tables are printed.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
 
-use sparsegpt::cli::{parse_nm, Args};
-use sparsegpt::coordinator::{
-    PruneMethod, PruneOptions, Pruner, SkipSpec, TrainOptions, Trainer,
+use sparsegpt::api::{
+    E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, HumanSink, JobReport, JobSpec, JsonlSink,
+    PruneJobSpec, PruneSpec, Session, StatsSpec, SweepSpec, TrainSpec, ZeroShotSpec,
 };
-use sparsegpt::data::corpus::Lexicon;
-use sparsegpt::eval::perplexity;
+use sparsegpt::cli::{parse_nm, Args, GLOBAL_BOOL_FLAGS};
+use sparsegpt::coordinator::{PruneMethod, SkipSpec};
 use sparsegpt::eval::report::{fmt_ppl, Table};
-use sparsegpt::eval::zeroshot::{gen_items, zero_shot_accuracy, ZeroShotTask};
-use sparsegpt::harness::{generate_data, Workspace, DEFAULT_CALIB_SEGMENTS};
-use sparsegpt::model::checkpoint::Checkpoint;
-use sparsegpt::model::init::init_params;
-use sparsegpt::model::stats::ModelStats;
+use sparsegpt::eval::zeroshot::ZeroShotTask;
 use sparsegpt::solver::sparsegpt_ref::Pattern;
 
 const USAGE: &str = "\
-sparsegpt <command> [flags]
+sparsegpt <command> [flags] [--json]
 
 commands:
   gen-data  --out data [--seed 0] [--train-mb 4]
   train     --config <cfg> [--steps 400] [--out checkpoints]
             [--seed 0] [--resume] [--lr <f>] [--log-every 20]
-  prune     --config <cfg> [--method sparsegpt|magnitude|adaprune]
+  prune     --config <cfg> [--spec sparsegpt-2:4+4bit]
+            [--method sparsegpt|magnitude|adaprune]
             [--sparsity 0.5 | --nm 2:4] [--quant-bits 4] [--damp 0.01]
             [--calib 128] [--calib-seed 0] [--skip attn|fc1|fc2|front|middle|back]
             [--prefix-frac 0.66] [--out <ckpt>] [--suffix -50]
@@ -41,7 +36,14 @@ commands:
   stats     --config <cfg> [--ckpt <path>] [--nm 2:4]
   generate  --config <cfg> [--ckpt <path>] [--prompt <text>] [--tokens 64]
             [--temperature 0.8] [--top-k 40] [--seed 0]
+  sweep     --config <cfg> [--specs sparsegpt-50%,magnitude-50%,sparsegpt-2:4]
+            [--dataset <name>[,<name>...]] [--calib 128] [--max-segments 128]
+            [--zeroshot-items 0] [--no-dense] [--save] [--ckpt <path>]
   e2e       [--config small] [--steps 300]
+
+global flags:
+  --json    emit machine-readable JSON-lines events on stdout
+            (one object per line; every object has a \"reason\" field)
 ";
 
 fn main() {
@@ -57,65 +59,156 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["resume", "record-errors", "rt-stats"])?;
+    let args = Args::parse(argv, GLOBAL_BOOL_FLAGS)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
-    match cmd {
-        "gen-data" => cmd_gen_data(&args),
-        "train" => cmd_train(&args),
-        "prune" => cmd_prune(&args),
-        "eval" => cmd_eval(&args),
-        "zeroshot" => cmd_zeroshot(&args),
-        "stats" => cmd_stats(&args),
-        "generate" => cmd_generate(&args),
-        "e2e" => cmd_e2e(&args),
-        other => bail!("unknown command {other:?}\n{USAGE}"),
-    }
-}
+    let spec = spec_from_args(cmd, &args)?;
+    let json = args.has("json");
 
-fn cmd_gen_data(args: &Args) -> Result<()> {
-    let out = args.get_or("out", "data");
-    let seed = args.u64_or("seed", 0)?;
-    let mb = args.usize_or("train-mb", 4)?;
-    generate_data(out, seed, mb)
-}
-
-fn cmd_train(args: &Args) -> Result<()> {
-    let ws = Workspace::open()?;
-    let name = args.required("config")?;
-    let cfg = ws.config(name)?;
-    let steps = args.usize_or("steps", 400)?;
-    let mut opts = TrainOptions::for_config(name, steps);
-    opts.seed = args.u64_or("seed", 0)?;
-    opts.log_every = args.usize_or("log-every", 20)?;
-    if let Some(lr) = args.get("lr") {
-        opts.base_lr = lr.parse()?;
-    }
-    opts.out = Some(args.get_or("out", ws.ckpt_dir.to_str().unwrap()).into());
-    opts.checkpoint_every = args.usize_or("checkpoint-every", 0)?;
-    let data = ws.dataset(sparsegpt::harness::CALIB_SET)?;
-
-    let (params, adam, start) = if args.has("resume") {
-        let ck = Checkpoint::load(Checkpoint::path_for(&ws.ckpt_dir, name, ""))?;
-        let step = ck.step;
-        let adam = ck.adam.clone();
-        (ck.into_flat_params(&cfg)?, adam, step)
+    let mut session = Session::new();
+    let report = if json {
+        session.run(&spec, &mut JsonlSink::stdout())?
     } else {
-        (init_params(&cfg, opts.seed), None, 0)
+        session.run(&spec, &mut HumanSink::new())?
     };
-    println!(
-        "[train {name}] {} params, {} steps, batch {}, lr {:.1e}",
-        cfg.n_params, steps, cfg.train_batch, opts.base_lr
-    );
-    let out = Trainer::new(&ws.rt).train(params, adam, start, &data, &opts)?;
-    println!(
-        "[train {name}] done in {:.1}s, final loss {:.4}",
-        out.secs,
-        out.losses.last().map(|l| l.1).unwrap_or(f64::NAN)
-    );
+    if !json {
+        print_tables(&report);
+    }
+    if args.has("rt-stats") {
+        // stderr in --json mode: stdout stays one-JSON-object-per-line;
+        // only report when the job actually opened a runtime (gen-data
+        // does not, and must not fail here after succeeding)
+        let mut emit = |line: String| {
+            if json {
+                eprintln!("{line}");
+            } else {
+                println!("{line}");
+            }
+        };
+        match session.opened_workspace() {
+            Some(ws) => {
+                emit("per-artifact runtime totals (compile / run / marshal seconds):".to_string());
+                for (name, s) in ws.rt.stats() {
+                    emit(format!(
+                        "  {name:<28} x{:<4} compile {:.2} run {:.2} marshal {:.2}",
+                        s.runs, s.compile_secs, s.run_secs, s.marshal_secs
+                    ));
+                }
+            }
+            None => emit("no runtime stats: this job did not use the runtime".to_string()),
+        }
+    }
     Ok(())
 }
 
-pub fn method_from_args(args: &Args) -> Result<PruneMethod> {
+/// Map a subcommand + flags onto its typed job spec. Defaults live in one
+/// place — the spec builders — and are read back as the CLI fallbacks.
+fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
+    Ok(match cmd {
+        "gen-data" => {
+            let mut s = GenDataSpec::default();
+            if let Some(out) = args.get("out") {
+                s.out = out.into();
+            }
+            s.seed = args.u64_or("seed", s.seed)?;
+            s.train_mb = args.usize_or("train-mb", s.train_mb)?;
+            JobSpec::GenData(s)
+        }
+        "train" => {
+            let mut s = TrainSpec::new(args.required("config")?);
+            s.steps = args.usize_or("steps", s.steps)?;
+            s.seed = args.u64_or("seed", s.seed)?;
+            s.log_every = args.usize_or("log-every", s.log_every)?;
+            s.lr = args.get("lr").map(|v| v.parse()).transpose()?;
+            s.out = args.get("out").map(PathBuf::from);
+            s.checkpoint_every = args.usize_or("checkpoint-every", s.checkpoint_every)?;
+            s.resume = args.has("resume");
+            JobSpec::Train(s)
+        }
+        "prune" => {
+            let mut s = PruneJobSpec::new(args.required("config")?, prune_spec_from_args(args)?);
+            s.damp = args.f64_or("damp", s.damp)?;
+            s.skip = skip_from_args(args)?;
+            s.calib = args.usize_or("calib", s.calib)?;
+            s.calib_seed = args.u64_or("calib-seed", s.calib_seed)?;
+            s.ckpt = args.get("ckpt").map(PathBuf::from);
+            s.record_errors = args.has("record-errors");
+            s.save = true;
+            s.out = args.get("out").map(PathBuf::from);
+            s.suffix = args.get("suffix").map(String::from);
+            JobSpec::Prune(s)
+        }
+        "eval" => {
+            let mut s = EvalSpec::new(args.required("config")?);
+            s.ckpt = args.get("ckpt").map(PathBuf::from);
+            s.max_segments = args.usize_or("max-segments", s.max_segments)?;
+            JobSpec::Eval(s)
+        }
+        "zeroshot" => {
+            let mut s = ZeroShotSpec::new(args.required("config")?);
+            s.ckpt = args.get("ckpt").map(PathBuf::from);
+            s.items = args.usize_or("items", s.items)?;
+            s.seed = args.u64_or("seed", s.seed)?;
+            s.data_seed = args.u64_or("data-seed", s.data_seed)?;
+            JobSpec::ZeroShot(s)
+        }
+        "stats" => {
+            let mut s = StatsSpec::new(args.required("config")?);
+            s.ckpt = args.get("ckpt").map(PathBuf::from);
+            s.nm = args.get("nm").map(parse_nm).transpose()?;
+            JobSpec::Stats(s)
+        }
+        "generate" => {
+            let mut s = GenerateSpec::new(args.required("config")?);
+            s.ckpt = args.get("ckpt").map(PathBuf::from);
+            if let Some(p) = args.get("prompt") {
+                s.prompt = p.to_string();
+            }
+            s.tokens = args.usize_or("tokens", s.tokens)?;
+            s.temperature = args.f64_or("temperature", s.temperature)?;
+            s.top_k = args.usize_or("top-k", s.top_k)?;
+            s.seed = args.u64_or("seed", s.seed)?;
+            JobSpec::Generate(s)
+        }
+        "sweep" => {
+            let mut s = SweepSpec::new(args.required("config")?);
+            let list = args.get_or("specs", "sparsegpt-50%,magnitude-50%,sparsegpt-2:4");
+            s.variants = list
+                .split(',')
+                .map(|v| PruneSpec::parse(v.trim()))
+                .collect::<Result<Vec<_>>>()?;
+            if let Some(ds) = args.get("dataset") {
+                // comma list, e.g. --dataset synth-wiki,synth-ptb
+                s.datasets = ds.split(',').map(|d| d.trim().to_string()).collect();
+            }
+            s.include_dense = !args.has("no-dense");
+            s.save = args.has("save");
+            s.damp = args.f64_or("damp", s.damp)?;
+            s.calib = args.usize_or("calib", s.calib)?;
+            s.calib_seed = args.u64_or("calib-seed", s.calib_seed)?;
+            s.max_segments = args.usize_or("max-segments", s.max_segments)?;
+            s.zeroshot_items = args.usize_or("zeroshot-items", s.zeroshot_items)?;
+            s.ckpt = args.get("ckpt").map(PathBuf::from);
+            JobSpec::Sweep(s)
+        }
+        "e2e" => {
+            let mut s = E2eSpec::new(args.get_or("config", "small"));
+            s.steps = args.usize_or("steps", s.steps)?;
+            JobSpec::E2e(s)
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    })
+}
+
+/// Build the prune method from `--spec <label>` or the granular flags.
+fn prune_spec_from_args(args: &Args) -> Result<PruneSpec> {
+    if let Some(label) = args.get("spec") {
+        for granular in ["method", "sparsity", "nm", "quant-bits"] {
+            if args.get(granular).is_some() {
+                bail!("--spec conflicts with --{granular}; give one or the other");
+            }
+        }
+        return PruneSpec::parse(label);
+    }
     let quant_bits = args.get("quant-bits").map(|b| b.parse()).transpose()?;
     let pattern = match args.get("nm") {
         Some(nm) => {
@@ -125,10 +218,10 @@ pub fn method_from_args(args: &Args) -> Result<PruneMethod> {
         None => Pattern::Unstructured(args.f64_or("sparsity", 0.5)?),
     };
     Ok(match args.get_or("method", "sparsegpt") {
-        "sparsegpt" => PruneMethod::SparseGpt { pattern, quant_bits },
-        "magnitude" => PruneMethod::Magnitude { pattern },
+        "sparsegpt" => PruneSpec { method: PruneMethod::SparseGpt { pattern, quant_bits } },
+        "magnitude" => PruneSpec { method: PruneMethod::Magnitude { pattern } },
         "adaprune" => match pattern {
-            Pattern::Unstructured(p) => PruneMethod::AdaPrune { sparsity: p },
+            Pattern::Unstructured(p) => PruneSpec { method: PruneMethod::AdaPrune { sparsity: p } },
             _ => bail!("adaprune supports unstructured sparsity only"),
         },
         m => bail!("unknown method {m:?}"),
@@ -151,164 +244,86 @@ fn skip_from_args(args: &Args) -> Result<SkipSpec> {
     })
 }
 
-fn cmd_prune(args: &Args) -> Result<()> {
-    let ws = Workspace::open()?;
-    let name = args.required("config")?;
-    let cfg = ws.config(name)?;
-    let params = match args.get("ckpt") {
-        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
-        None => ws.load_model(name)?,
-    };
-    let opts = PruneOptions {
-        method: method_from_args(args)?,
-        damp: args.f64_or("damp", 0.01)?,
-        skip: skip_from_args(args)?,
-        record_errors: args.has("record-errors"),
-        exact_rows: None,
-    };
-    let n_calib = args.usize_or("calib", DEFAULT_CALIB_SEGMENTS)?;
-    let chunks = ws.calib_chunks(&cfg, n_calib, args.u64_or("calib-seed", 0)?)?;
-    println!(
-        "[prune {name}] method {} | {} calib segments | damp {}",
-        opts.method.label(),
-        n_calib,
-        opts.damp
-    );
-    let outcome = Pruner::new(&ws.rt).prune(params, &chunks, &opts)?;
-    println!(
-        "[prune {name}] sparsity {:.3} in {:.1}s (hessian {:.1}s solver {:.1}s prop {:.1}s)",
-        outcome.overall_sparsity(),
-        outcome.total_secs,
-        outcome.hessian_secs,
-        outcome.solver_secs,
-        outcome.propagate_secs
-    );
-    if args.has("rt-stats") {
-        println!("per-artifact runtime totals (compile / run / marshal seconds):");
-        for (name, s) in ws.rt.stats() {
-            println!(
-                "  {name:<28} x{:<4} compile {:.2} run {:.2} marshal {:.2}",
-                s.runs, s.compile_secs, s.run_secs, s.marshal_secs
-            );
+/// Human-mode result tables (the event stream carries the same data as
+/// `eval-result` / `matrix-report` / `zeroshot-result` events in --json).
+fn print_tables(report: &JobReport) {
+    match report {
+        JobReport::Eval(r) => {
+            let mut table =
+                Table::new(&format!("perplexity: {}", r.config), &["dataset", "ppl", "tokens"]);
+            for row in &r.rows {
+                table.row(vec![row.dataset.clone(), fmt_ppl(row.ppl), row.tokens.to_string()]);
+            }
+            print!("{}", table.render());
         }
+        JobReport::ZeroShot(r) => {
+            print!("{}", zeroshot_table(r).render());
+        }
+        JobReport::Sweep(r) => {
+            print!("{}", sweep_table(r).render());
+        }
+        JobReport::E2e(r) => {
+            if let Some(t) = &r.train {
+                if !t.losses.is_empty() {
+                    println!("\nloss curve (step, loss):");
+                    for (s, l) in &t.losses {
+                        println!("  {s:>6}  {l:.4}");
+                    }
+                }
+            }
+            print!("{}", sweep_table(&r.sweep).render());
+        }
+        _ => {}
     }
-    let default_suffix = format!("-{}", opts.method.label());
-    let suffix = args.get_or("suffix", &default_suffix);
-    let path = match args.get("out") {
-        Some(p) => p.into(),
-        None => Checkpoint::path_for(&ws.ckpt_dir, name, suffix),
-    };
-    Checkpoint {
-        config_name: name.to_string(),
-        step: 0,
-        params: outcome.params.data.clone(),
-        adam: None,
-    }
-    .save(&path)?;
-    println!("[prune {name}] saved -> {path:?}");
-    Ok(())
 }
 
-fn cmd_eval(args: &Args) -> Result<()> {
-    let ws = Workspace::open()?;
-    let name = args.required("config")?;
-    let cfg = ws.config(name)?;
-    let params = match args.get("ckpt") {
-        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
-        None => ws.load_model(name)?,
-    };
-    let max_seg = args.usize_or("max-segments", 512)?;
-    let mut table = Table::new(&format!("perplexity: {name}"), &["dataset", "ppl", "tokens"]);
-    for (dsname, ds) in ws.eval_datasets()? {
-        let p = perplexity(&ws.rt, &params, &ds, max_seg)?;
-        table.row(vec![dsname, fmt_ppl(p.ppl), p.tokens.to_string()]);
+fn zeroshot_table(r: &sparsegpt::api::ZeroShotReport) -> Table {
+    let mut table = Table::new(&format!("zero-shot: {}", r.config), &["task", "accuracy"]);
+    for (task, acc) in &r.rows {
+        table.row(vec![task.clone(), format!("{:.1}%", acc * 100.0)]);
     }
-    print!("{}", table.render());
-    Ok(())
+    table.row(vec!["avg".into(), format!("{:.1}%", r.avg * 100.0)]);
+    table
 }
 
-fn cmd_zeroshot(args: &Args) -> Result<()> {
-    let ws = Workspace::open()?;
-    let name = args.required("config")?;
-    let cfg = ws.config(name)?;
-    let params = match args.get("ckpt") {
-        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
-        None => ws.load_model(name)?,
-    };
-    let tok = ws.tokenizer()?;
-    let lex = Lexicon::new(args.u64_or("data-seed", 0)?);
-    let n = args.usize_or("items", 100)?;
-    let seed = args.u64_or("seed", 7)?;
-    let mut table = Table::new(&format!("zero-shot: {name}"), &["task", "accuracy"]);
-    let mut sum = 0.0;
-    for task in ZeroShotTask::ALL {
-        let items = gen_items(task, &lex, seed, n);
-        let acc = zero_shot_accuracy(&ws.rt, &params, &tok, &items)?;
-        sum += acc;
-        table.row(vec![task.name().into(), format!("{:.1}%", acc * 100.0)]);
+fn sweep_table(r: &sparsegpt::api::SweepReport) -> Table {
+    let mut header: Vec<String> = vec!["variant".into(), "sparsity".into()];
+    let datasets: Vec<String> = r
+        .all_rows()
+        .next()
+        .map(|v| v.ppl.keys().cloned().collect())
+        .unwrap_or_default();
+    header.extend(datasets.iter().cloned());
+    let has_zs = r.all_rows().any(|v| v.zeroshot.is_some());
+    if has_zs {
+        for task in ZeroShotTask::ALL {
+            header.push(task.name().to_string());
+        }
+        header.push("zs-avg".into());
     }
-    table.row(vec!["avg".into(), format!("{:.1}%", sum / 5.0 * 100.0)]);
-    print!("{}", table.render());
-    Ok(())
-}
-
-fn cmd_stats(args: &Args) -> Result<()> {
-    let ws = Workspace::open()?;
-    let name = args.required("config")?;
-    let cfg = ws.config(name)?;
-    let params = match args.get("ckpt") {
-        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
-        None => ws.load_model(name)?,
-    };
-    let nm = args.get("nm").map(parse_nm).transpose()?;
-    let stats = ModelStats::collect_nm(&params, nm);
-    println!(
-        "overall prunable sparsity: {:.4} ({} weights zeroed)",
-        stats.overall_sparsity(),
-        stats.pruned_weight_count()
-    );
-    if nm.is_some() {
-        println!("n:m violations: {}", stats.total_nm_violations());
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&format!("sweep: {}", r.config), &hdr);
+    for v in r.all_rows() {
+        let mut cells = vec![v.label.clone(), format!("{:.3}", v.sparsity)];
+        for ds in &datasets {
+            cells.push(v.ppl.get(ds).map(|p| fmt_ppl(*p)).unwrap_or_else(|| "-".into()));
+        }
+        if has_zs {
+            match &v.zeroshot {
+                Some(zs) => {
+                    for (_, acc) in &zs.rows {
+                        cells.push(format!("{:.1}%", acc * 100.0));
+                    }
+                    cells.push(format!("{:.1}%", zs.avg * 100.0));
+                }
+                None => {
+                    for _ in 0..=ZeroShotTask::ALL.len() {
+                        cells.push("-".into());
+                    }
+                }
+            }
+        }
+        table.row(cells);
     }
-    Ok(())
-}
-
-fn cmd_generate(args: &Args) -> Result<()> {
-    use sparsegpt::eval::generate::{sample, SampleOptions};
-    let ws = Workspace::open()?;
-    let name = args.required("config")?;
-    let cfg = ws.config(name)?;
-    let params = match args.get("ckpt") {
-        Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg)?,
-        None => ws.load_model(name)?,
-    };
-    let tok = ws.tokenizer()?;
-    let prompt_text = args.get_or("prompt", "the ");
-    let prompt = tok.encode(prompt_text);
-    let opts = SampleOptions {
-        max_tokens: args.usize_or("tokens", 64)?,
-        temperature: args.f64_or("temperature", 0.8)?,
-        top_k: args.usize_or("top-k", 40)?,
-        seed: args.u64_or("seed", 0)?,
-    };
-    let out = sample(&ws.rt, &params, &prompt, &opts)?;
-    println!("{}{}", prompt_text, tok.decode(&out));
-    Ok(())
-}
-
-fn cmd_e2e(args: &Args) -> Result<()> {
-    // a thin wrapper — the fully instrumented driver is examples/e2e_pipeline.rs
-    let config = args.get_or("config", "small").to_string();
-    let steps = args.usize_or("steps", 300)?;
-    println!("running end-to-end for {config} ({steps} steps); see examples/e2e_pipeline.rs");
-    let s = steps.to_string();
-    let train_args: Vec<String> =
-        ["train", "--config", &config, "--steps", &s].iter().map(|x| x.to_string()).collect();
-    cmd_train(&Args::parse(&train_args, &[])?)?;
-    let prune_args: Vec<String> =
-        ["prune", "--config", &config].iter().map(|x| x.to_string()).collect();
-    cmd_prune(&Args::parse(&prune_args, &["record-errors"])?)?;
-    let eval_args: Vec<String> =
-        ["eval", "--config", &config].iter().map(|x| x.to_string()).collect();
-    cmd_eval(&Args::parse(&eval_args, &[])?).context("eval after prune")
+    table
 }

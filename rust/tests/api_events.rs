@@ -1,0 +1,119 @@
+//! The JSON event stream contract: a nano `Prune` job's event sequence
+//! serializes to exactly the golden JSON-lines schema (one parseable
+//! object per line, every object carrying a `reason` field), and stays
+//! byte-stable — downstream consumers parse these lines.
+
+use sparsegpt::api::{Event, EventSink, JsonlSink, MemorySink};
+use sparsegpt::util::json::Json;
+
+/// The canonical event sequence of a nano `Prune` job (fixed values; the
+/// live pipeline emits the same shapes with measured numbers).
+fn nano_prune_events() -> Vec<Event> {
+    vec![
+        Event::JobStarted {
+            job: "prune".into(),
+            label: "prune/nano/sparsegpt-50%".into(),
+            config: Some("nano".into()),
+        },
+        Event::Message {
+            text: "[prune nano] method sparsegpt-50% | 8 calib segments | damp 0.01".into(),
+        },
+        Event::MatrixReport {
+            layer: 0,
+            kind: "q".into(),
+            sparsity: 0.5,
+            skipped: false,
+            solver_secs: 0.25,
+            sq_error: None,
+        },
+        Event::MatrixReport {
+            layer: 0,
+            kind: "fc1".into(),
+            sparsity: 0.5,
+            skipped: false,
+            solver_secs: 0.5,
+            sq_error: Some(0.125),
+        },
+        Event::MatrixReport {
+            layer: 1,
+            kind: "fc2".into(),
+            sparsity: 0.0,
+            skipped: true,
+            solver_secs: 0.0,
+            sq_error: None,
+        },
+        Event::BlockCompressed { layer: 0, layers: 2, sparsity: 0.5, secs: 1.5 },
+        Event::EvalResult { dataset: "synth-wiki".into(), ppl: 42.5, tokens: 1024 },
+        Event::CheckpointSaved { path: "checkpoints/nano-sparsegpt-50%.ckpt".into() },
+        Event::JobFinished { job: "prune".into(), ok: true, secs: 3.5 },
+    ]
+}
+
+#[test]
+fn nano_prune_event_stream_matches_golden() {
+    let mut sink = JsonlSink::new(Vec::new());
+    for ev in nano_prune_events() {
+        sink.emit(&ev);
+    }
+    let got = String::from_utf8(sink.into_inner()).unwrap();
+    let want = include_str!("golden/prune_events.jsonl");
+    assert_eq!(
+        got, want,
+        "JSON event schema drifted — update rust/tests/golden/prune_events.jsonl deliberately \
+         (downstream consumers parse these lines)"
+    );
+}
+
+#[test]
+fn every_line_parses_with_reason_field() {
+    let mut sink = JsonlSink::new(Vec::new());
+    for ev in nano_prune_events() {
+        sink.emit(&ev);
+    }
+    let got = String::from_utf8(sink.into_inner()).unwrap();
+    let mut reasons = Vec::new();
+    for line in got.lines() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("unparseable line {line:?}: {e:#}"));
+        reasons.push(v.get("reason").unwrap().as_str().unwrap().to_string());
+    }
+    assert_eq!(
+        reasons,
+        vec![
+            "job-started",
+            "message",
+            "matrix-report",
+            "matrix-report",
+            "matrix-report",
+            "block-compressed",
+            "eval-result",
+            "checkpoint-saved",
+            "job-finished",
+        ]
+    );
+}
+
+#[test]
+fn json_and_memory_sinks_agree_on_event_count() {
+    let mut mem = MemorySink::new();
+    let mut jsonl = JsonlSink::new(Vec::new());
+    for ev in nano_prune_events() {
+        mem.emit(&ev);
+        jsonl.emit(&ev);
+    }
+    let text = String::from_utf8(jsonl.into_inner()).unwrap();
+    assert_eq!(mem.events.len(), text.lines().count());
+    // reasons agree pairwise
+    for (ev, line) in mem.events.iter().zip(text.lines()) {
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(), ev.reason());
+    }
+}
+
+/// Non-finite values (a diverged perplexity) must stay valid JSON.
+#[test]
+fn non_finite_values_serialize_as_null() {
+    let ev = Event::EvalResult { dataset: "synth-wiki".into(), ppl: f64::INFINITY, tokens: 0 };
+    let line = ev.to_json().to_string_compact();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("ppl").unwrap(), &Json::Null);
+}

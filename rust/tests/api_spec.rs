@@ -1,0 +1,150 @@
+//! Round-trip tests for the typed job API: every canonical label parses
+//! back to the spec that produced it, and parse errors are clean.
+
+use sparsegpt::api::{JobSpec, PruneSpec};
+use sparsegpt::coordinator::PruneMethod;
+use sparsegpt::solver::sparsegpt_ref::Pattern;
+
+#[test]
+fn prune_spec_label_round_trip() {
+    for label in [
+        "sparsegpt-50%",
+        "sparsegpt-80%",
+        "sparsegpt-0%",
+        "sparsegpt-2:4",
+        "sparsegpt-4:8",
+        "sparsegpt-2:4+4bit",
+        "sparsegpt-4:8+4bit",
+        "sparsegpt-50%+3bit",
+        "sparsegpt-0%+3bit",
+        "sparsegpt-50%-bs64",
+        "magnitude-50%",
+        "magnitude-80%",
+        "magnitude-2:4",
+        "magnitude-4:8",
+        "adaprune-50%",
+    ] {
+        let spec = PruneSpec::parse(label).unwrap_or_else(|e| panic!("{label}: {e:#}"));
+        assert_eq!(spec.label(), label, "label round trip for {label}");
+        assert_eq!(PruneSpec::parse(&spec.label()).unwrap(), spec, "parse round trip");
+    }
+}
+
+#[test]
+fn prune_spec_builders_round_trip_through_labels() {
+    let specs = [
+        PruneSpec::sparsegpt(0.5),
+        PruneSpec::sparsegpt(0.25),
+        PruneSpec::sparsegpt(0.625), // non-integer percent: "62.5%"
+        PruneSpec::sparsegpt_nm(2, 4),
+        PruneSpec::sparsegpt_nm(2, 4).with_quant_bits(4),
+        PruneSpec::sparsegpt(0.5).with_quant_bits(3),
+        PruneSpec::magnitude(0.8),
+        PruneSpec::magnitude_nm(4, 8),
+        PruneSpec::adaprune(0.5),
+    ];
+    for spec in specs {
+        assert_eq!(PruneSpec::parse(&spec.label()).unwrap(), spec, "{}", spec.label());
+    }
+}
+
+#[test]
+fn prune_spec_parse_maps_to_methods() {
+    assert_eq!(
+        PruneSpec::parse("sparsegpt-50%").unwrap().method,
+        PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: None }
+    );
+    assert_eq!(
+        PruneSpec::parse("sparsegpt-2:4+4bit").unwrap().method,
+        PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: Some(4) }
+    );
+    assert_eq!(
+        PruneSpec::parse("sparsegpt-50%-bs64").unwrap().method,
+        PruneMethod::SparseGptBs { sparsity: 0.5, mask_blocksize: 64 }
+    );
+    assert_eq!(
+        PruneSpec::parse("magnitude-2:4").unwrap().method,
+        PruneMethod::Magnitude { pattern: Pattern::NM(2, 4) }
+    );
+    assert_eq!(
+        PruneSpec::parse("adaprune-50%").unwrap().method,
+        PruneMethod::AdaPrune { sparsity: 0.5 }
+    );
+}
+
+#[test]
+fn prune_spec_rejects_malformed() {
+    for bad in [
+        "",
+        "sparsegpt",
+        "sparsegpt-",
+        "bogus-50%",
+        "sparsegpt-4:2",
+        "sparsegpt-0:4",
+        "sparsegpt-50",
+        "sparsegpt-150%",
+        "sparsegpt-50%+bit",
+        "sparsegpt-50%+xbit",
+        "sparsegpt-2:4-bs64",
+        "adaprune-2:4",
+        "magnitude",
+    ] {
+        assert!(PruneSpec::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+#[test]
+fn job_spec_label_round_trip() {
+    for label in [
+        "gen-data",
+        "train/nano",
+        "prune/nano/sparsegpt-2:4+4bit",
+        "prune/small/adaprune-50%",
+        "eval/small",
+        "zeroshot/medium",
+        "stats/nano",
+        "generate/nano",
+        "e2e/small",
+        "sweep/small/sparsegpt-50%,magnitude-2:4,adaprune-50%",
+        "sweep/small", // dense-only sweep
+    ] {
+        let spec = JobSpec::parse(label).unwrap_or_else(|e| panic!("{label}: {e:#}"));
+        assert_eq!(spec.label(), label, "label round trip for {label}");
+        assert_eq!(JobSpec::parse(&spec.label()).unwrap(), spec, "parse round trip");
+    }
+}
+
+#[test]
+fn job_spec_defaults_match_cli() {
+    let JobSpec::Prune(p) = JobSpec::parse("prune/nano/sparsegpt-50%").unwrap() else {
+        panic!("wrong kind");
+    };
+    assert_eq!(p.config, "nano");
+    assert_eq!(p.damp, 0.01);
+    assert_eq!(p.calib, 128);
+    assert!(!p.save);
+    let JobSpec::Sweep(s) = JobSpec::parse("sweep/small/sparsegpt-50%,magnitude-50%").unwrap()
+    else {
+        panic!("wrong kind");
+    };
+    assert_eq!(s.variants.len(), 2);
+    assert!(!s.include_dense);
+    assert_eq!(s.zeroshot_items, 0);
+}
+
+#[test]
+fn job_spec_rejects_malformed() {
+    for bad in [
+        "",
+        "wat/nano",
+        "train",
+        "train/",
+        "train/nano/extra",
+        "prune/nano",
+        "prune/nano/bogus-50%",
+        "sweep/nano/sparsegpt-50%,bogus",
+        "gen-data/nano",
+    ] {
+        assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}

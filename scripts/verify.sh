@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 verification: what CI runs and what every PR must keep green.
+#   scripts/verify.sh          build + tests + formatting
+#   scripts/verify.sh --fast   skip the release build (tests only)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FAST=0
+[ "${1:-}" = "--fast" ] && FAST=1
+
+if [ "$FAST" -eq 0 ]; then
+    echo "==> cargo build --release"
+    cargo build --release
+fi
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo fmt --check"
+if ! cargo fmt --version >/dev/null 2>&1; then
+    echo "    (rustfmt unavailable; skipping format check)"
+else
+    cargo fmt --check
+fi
+
+echo "verify: OK"
