@@ -38,7 +38,7 @@ fn main() -> Result<()> {
 
         // HLO solver (compile excluded — it is a one-time cost per shape)
         let name = format!("sparsegpt_{d}x{d}");
-        ws.rt.executable(&name)?;
+        ws.rt.prepare(&name)?;
         let t = Timer::start();
         let _ = ws.rt.run(
             &name,
@@ -59,8 +59,8 @@ fn main() -> Result<()> {
 
         // AdaPrune artifact (256 GD steps)
         let aname = format!("adaprune_{d}x{d}");
-        let t_ada = if ws.rt.manifest.artifacts.contains_key(&aname) {
-            ws.rt.executable(&aname)?;
+        let t_ada = if ws.rt.has_artifact(&aname) {
+            ws.rt.prepare(&aname)?;
             let (_, mask) = magnitude_prune(&w, 0.5);
             let t = Timer::start();
             let _ = ws.rt.run(

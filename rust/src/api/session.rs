@@ -1,7 +1,7 @@
-//! The job executor: owns the [`Workspace`] (and through it the PJRT
-//! [`crate::runtime::Runtime`]), resolves checkpoints, and runs
-//! [`JobSpec`]s to typed [`JobReport`]s while narrating progress through
-//! an [`EventSink`].
+//! The job executor: owns the [`Workspace`] (and through it the execution
+//! [`crate::runtime::Backend`] — PJRT or the pure-Rust reference
+//! interpreter), resolves checkpoints, and runs [`JobSpec`]s to typed
+//! [`JobReport`]s while narrating progress through an [`EventSink`].
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -25,39 +25,48 @@ use crate::data::Dataset;
 use crate::eval::generate::{sample, SampleOptions};
 use crate::eval::perplexity;
 use crate::eval::zeroshot::{gen_items, zero_shot_accuracy, ZeroShotTask};
-use crate::harness::{generate_data_with, Workspace, CALIB_SET};
+use crate::harness::{generate_data_with, Workspace, CALIB_SET, EVAL_SETS};
 use crate::model::checkpoint::Checkpoint;
 use crate::model::init::init_params;
 use crate::model::layout::FlatParams;
 use crate::model::stats::ModelStats;
+use crate::runtime::BackendKind;
 
-/// A handle for executing jobs. The workspace (and the PJRT runtime inside
-/// it) opens lazily, so jobs that need neither — `gen-data` — run on a
-/// machine without built artifacts.
+/// A handle for executing jobs. The workspace (and the execution backend
+/// inside it) opens lazily, so jobs that need neither — `gen-data` — run on
+/// a machine without built artifacts.
 pub struct Session {
     ws: Option<Workspace>,
+    backend: Option<BackendKind>,
 }
 
 impl Session {
-    /// A session whose workspace opens on first use.
+    /// A session whose workspace opens on first use, with the backend
+    /// resolved from `SPARSEGPT_BACKEND` (default: pjrt).
     pub fn new() -> Session {
-        Session { ws: None }
+        Session { ws: None, backend: None }
+    }
+
+    /// A session pinned to an explicit execution backend (the CLI
+    /// `--backend` path; wins over the env override).
+    pub fn with_backend(kind: BackendKind) -> Session {
+        Session { ws: None, backend: Some(kind) }
     }
 
     /// A session with the workspace opened eagerly.
     pub fn open() -> Result<Session> {
-        Ok(Session { ws: Some(Workspace::open()?) })
+        Ok(Session { ws: Some(Workspace::open()?), backend: None })
     }
 
     /// Wrap an already-configured workspace.
     pub fn with_workspace(ws: Workspace) -> Session {
-        Session { ws: Some(ws) }
+        Session { ws: Some(ws), backend: None }
     }
 
     /// The workspace, opening it if this is the first job that needs one.
     pub fn workspace(&mut self) -> Result<&Workspace> {
         if self.ws.is_none() {
-            self.ws = Some(Workspace::open()?);
+            self.ws = Some(Workspace::open_with(BackendKind::resolve(self.backend)?)?);
         }
         Ok(self.ws.as_ref().unwrap())
     }
@@ -111,14 +120,71 @@ impl Default for Session {
     }
 }
 
-/// Resolve the parameters a job operates on: an explicit checkpoint path,
-/// or the config's conventionally-named trained checkpoint.
+/// Resolve the parameters a job operates on: an explicit checkpoint path
+/// or the config's conventionally-named trained checkpoint. Missing
+/// checkpoints are a hard error — measurement jobs (eval, zeroshot, stats,
+/// generate) must never silently score random weights.
 fn load_params(ws: &Workspace, config: &str, ckpt: &Option<PathBuf>) -> Result<FlatParams> {
     let cfg = ws.config(config)?;
     match ckpt {
         Some(p) => Checkpoint::load(p)?.into_flat_params(&cfg),
         None => ws.load_model(config),
     }
+}
+
+/// Like [`load_params`], but for the compression jobs (prune, sweep): when
+/// nothing has been trained yet, fall back to a seed-0 random
+/// initialization, announced on the event stream, so zero-setup runs
+/// (fresh checkout, `--backend reference`) still complete end-to-end. The
+/// second element reports whether the fallback was taken (a *trained*
+/// model must never be silently calibrated on substitute data — see
+/// [`calib_for`]).
+fn load_params_or_init(
+    ws: &Workspace,
+    config: &str,
+    ckpt: &Option<PathBuf>,
+    sink: &mut dyn EventSink,
+) -> Result<(FlatParams, bool)> {
+    let cfg = ws.config(config)?;
+    if ckpt.is_none() && !Checkpoint::path_for(&ws.ckpt_dir, config, "").exists() {
+        sink.emit(&Event::Message {
+            text: format!(
+                "[{config}] no trained checkpoint found; using fresh seed-0 parameters \
+                 (run `sparsegpt train --config {config}` for meaningful numbers)"
+            ),
+        });
+        return Ok((init_params(&cfg, 0), true));
+    }
+    Ok((load_params(ws, config, ckpt)?, false))
+}
+
+/// Draw calibration chunks. Only a zero-setup run (`params_initialized`:
+/// nothing trained, nothing generated) may substitute the in-memory
+/// synthetic corpus — and announces it; with a real checkpoint a missing
+/// corpus stays a hard "run gen-data first" error, because calibrating a
+/// trained model on differently-tokenized text silently corrupts the prune.
+fn calib_for(
+    ws: &Workspace,
+    cfg: &crate::model::ModelCfg,
+    calib: usize,
+    calib_seed: u64,
+    params_initialized: bool,
+    sink: &mut dyn EventSink,
+) -> Result<CalibChunks> {
+    if !params_initialized {
+        return ws.calib_chunks(cfg, calib, calib_seed);
+    }
+    let (chunks, substituted) = ws.calib_chunks_or_synthetic(cfg, calib, calib_seed)?;
+    if substituted {
+        sink.emit(&Event::Message {
+            text: format!(
+                "[calib] dataset {CALIB_SET:?} not found under {:?}; synthesizing an \
+                 in-memory calibration corpus (run `sparsegpt gen-data` to persist corpora)",
+                ws.data_dir
+            ),
+        });
+    }
+    Ok(chunks)
 }
 
 fn run_gen_data(spec: &GenDataSpec, sink: &mut dyn EventSink) -> Result<GenDataReport> {
@@ -246,7 +312,7 @@ fn run_prune(
     sink: &mut dyn EventSink,
 ) -> Result<PruneReport> {
     let cfg = ws.config(&spec.config)?;
-    let params = load_params(ws, &spec.config, &spec.ckpt)?;
+    let (params, initialized) = load_params_or_init(ws, &spec.config, &spec.ckpt, sink)?;
     let opts = PruneOptions {
         method: spec.prune.method.clone(),
         damp: spec.damp,
@@ -254,7 +320,7 @@ fn run_prune(
         record_errors: spec.record_errors,
         exact_rows: None,
     };
-    let chunks = ws.calib_chunks(&cfg, spec.calib, spec.calib_seed)?;
+    let chunks = calib_for(ws, &cfg, spec.calib, spec.calib_seed, initialized, sink)?;
     let mut report = prune_params(ws, &spec.config, params, &chunks, &opts, sink)?;
     if spec.save {
         let suffix = spec.suffix.clone().unwrap_or_else(|| format!("-{}", report.label));
@@ -367,11 +433,23 @@ fn run_generate(
 
 fn run_sweep(ws: &Workspace, spec: &SweepSpec, sink: &mut dyn EventSink) -> Result<SweepReport> {
     let cfg = ws.config(&spec.config)?;
-    let dense = load_params(ws, &spec.config, &spec.ckpt)?;
+    let (dense, initialized) = load_params_or_init(ws, &spec.config, &spec.ckpt, sink)?;
     let datasets: Vec<(String, Dataset)> = if spec.max_segments == 0 {
         Vec::new()
     } else if spec.datasets.is_empty() {
-        ws.eval_datasets()?.into_iter().collect()
+        // zero-setup runs (nothing trained, nothing generated) degrade the
+        // *default* perplexity pass gracefully instead of dying after the
+        // fallbacks already engaged; an explicit --dataset stays strict
+        if initialized && !EVAL_SETS.iter().any(|n| ws.has_dataset(n)) {
+            sink.emit(&Event::Message {
+                text: "[sweep] eval corpora not generated yet; skipping the perplexity \
+                       pass (run `sparsegpt gen-data` to enable it)"
+                    .to_string(),
+            });
+            Vec::new()
+        } else {
+            ws.eval_datasets()?.into_iter().collect()
+        }
     } else {
         spec.datasets
             .iter()
@@ -379,7 +457,7 @@ fn run_sweep(ws: &Workspace, spec: &SweepSpec, sink: &mut dyn EventSink) -> Resu
             .collect::<Result<_>>()?
     };
     // shared calibration: drawn once, reused by every variant
-    let chunks = ws.calib_chunks(&cfg, spec.calib, spec.calib_seed)?;
+    let chunks = calib_for(ws, &cfg, spec.calib, spec.calib_seed, initialized, sink)?;
 
     let eval_ppl = |params: &FlatParams,
                     sink: &mut dyn EventSink|

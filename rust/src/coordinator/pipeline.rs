@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::calibration::CalibChunks;
 use crate::coordinator::partial::SkipSpec;
 use crate::model::layout::{Capture, FlatParams, LinearKind, PRUNABLE_KINDS};
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::{ArgValue, Backend};
 use crate::solver::hessian::{lambda_max, layer_sq_error, HessianAccumulator};
 use crate::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
 use crate::solver::sparsegpt_ref::Pattern;
@@ -203,11 +203,11 @@ fn exact_vs_solver_error(
 }
 
 pub struct Pruner<'rt> {
-    pub rt: &'rt Runtime,
+    pub rt: &'rt dyn Backend,
 }
 
 impl<'rt> Pruner<'rt> {
-    pub fn new(rt: &'rt Runtime) -> Pruner<'rt> {
+    pub fn new(rt: &'rt dyn Backend) -> Pruner<'rt> {
         Pruner { rt }
     }
 
@@ -254,7 +254,7 @@ impl<'rt> Pruner<'rt> {
         // SPARSEGPT_UNFUSED_HESSIANS=1 selects the original path (perf A/B)
         let fused_name = format!("block_hess_{}", cfg.name);
         let use_fused = std::env::var_os("SPARSEGPT_UNFUSED_HESSIANS").is_none()
-            && self.rt.manifest.artifacts.contains_key(&fused_name);
+            && self.rt.has_artifact(&fused_name);
 
         for layer in 0..cfg.layers {
             let t_layer = Instant::now();
@@ -449,7 +449,7 @@ impl<'rt> Pruner<'rt> {
             // the lean hidden-only artifact avoids copying dead captures)
             let t2 = Instant::now();
             let prop_name = format!("block_prop_{}", cfg.name);
-            let prop_name = if self.rt.manifest.artifacts.contains_key(&prop_name) {
+            let prop_name = if self.rt.has_artifact(&prop_name) {
                 prop_name
             } else {
                 format!("block_fwd_{}", cfg.name)
@@ -495,13 +495,16 @@ impl<'rt> Pruner<'rt> {
     /// production Bs=128 solver).
     fn bs_artifact(&self, bs: usize, r: usize, c: usize) -> String {
         let exact = format!("sparsegpt_bs{bs}_{r}x{c}");
-        if self.rt.manifest.artifacts.contains_key(&exact) {
+        if self.rt.has_artifact(&exact) {
             return exact;
         }
+        // exact variant not lowered: search the backend's (finite) artifact
+        // list for the best substitute. Open-vocabulary backends always hit
+        // the exact path above.
         let mut best: Option<usize> = None;
         let prefix = "sparsegpt_bs";
         let suffix = format!("_{r}x{c}");
-        for name in self.rt.manifest.artifacts.keys() {
+        for name in self.rt.artifact_names() {
             if let Some(rest) = name.strip_prefix(prefix) {
                 if let Some(v) = rest.strip_suffix(&suffix) {
                     if let Ok(v) = v.parse::<usize>() {

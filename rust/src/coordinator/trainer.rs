@@ -11,7 +11,7 @@ use anyhow::{Context, Result};
 use crate::data::Dataset;
 use crate::model::checkpoint::Checkpoint;
 use crate::model::layout::FlatParams;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::{ArgValue, Backend};
 use crate::util::prng::Rng;
 
 #[derive(Clone, Debug)]
@@ -60,7 +60,7 @@ impl TrainOptions {
 }
 
 pub struct Trainer<'rt> {
-    pub rt: &'rt Runtime,
+    pub rt: &'rt dyn Backend,
 }
 
 /// Progress notifications emitted by the training loop; `api::Session` maps
@@ -89,7 +89,7 @@ pub struct TrainOutcome {
 }
 
 impl<'rt> Trainer<'rt> {
-    pub fn new(rt: &'rt Runtime) -> Trainer<'rt> {
+    pub fn new(rt: &'rt dyn Backend) -> Trainer<'rt> {
         Trainer { rt }
     }
 

@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use crate::model::layout::FlatParams;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::{ArgValue, Backend};
 use crate::util::prng::Rng;
 
 #[derive(Clone, Debug)]
@@ -28,7 +28,7 @@ impl Default for SampleOptions {
 /// window slides over the last `seq` tokens. Returns only the newly
 /// generated ids.
 pub fn sample(
-    rt: &Runtime,
+    rt: &dyn Backend,
     params: &FlatParams,
     prompt: &[i32],
     opts: &SampleOptions,

@@ -6,7 +6,7 @@ use anyhow::{Context, Result};
 
 use crate::data::Dataset;
 use crate::model::layout::FlatParams;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::{ArgValue, Backend};
 
 #[derive(Clone, Copy, Debug)]
 pub struct Ppl {
@@ -18,7 +18,7 @@ pub struct Ppl {
 /// Evaluate perplexity of `params` on `ds` over at most `max_segments`
 /// non-overlapping segments (usize::MAX = the whole set).
 pub fn perplexity(
-    rt: &Runtime,
+    rt: &dyn Backend,
     params: &FlatParams,
     ds: &Dataset,
     max_segments: usize,

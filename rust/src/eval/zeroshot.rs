@@ -9,7 +9,7 @@ use anyhow::{bail, Result};
 use crate::data::corpus::{gen_sentence, CorpusStyle, Lexicon, N_TOPICS};
 use crate::data::Tokenizer;
 use crate::model::layout::FlatParams;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::{ArgValue, Backend};
 use crate::util::prng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -140,7 +140,7 @@ pub fn gen_items(task: ZeroShotTask, lex: &Lexicon, seed: u64, n: usize) -> Vec<
 /// Score one task: accuracy of picking the correct candidate by
 /// length-normalized log-likelihood.
 pub fn zero_shot_accuracy(
-    rt: &Runtime,
+    rt: &dyn Backend,
     params: &FlatParams,
     tok: &Tokenizer,
     items: &[McItem],

@@ -18,7 +18,7 @@ use crate::data::{Dataset, Tokenizer};
 use crate::model::checkpoint::Checkpoint;
 use crate::model::layout::FlatParams;
 use crate::model::ModelCfg;
-use crate::runtime::Runtime;
+use crate::runtime::{Backend, BackendKind};
 use crate::util::prng::Rng;
 
 pub const CALIB_SET: &str = "synth-c4-train";
@@ -30,13 +30,22 @@ pub struct Workspace {
     pub data_dir: PathBuf,
     pub ckpt_dir: PathBuf,
     pub report_dir: PathBuf,
-    pub rt: Runtime,
+    /// The execution backend (PJRT runtime or the pure-Rust reference
+    /// interpreter); everything downstream takes `&dyn Backend`.
+    pub rt: Box<dyn Backend>,
 }
 
 impl Workspace {
     /// Open with defaults (`data/`, `checkpoints/`, `reports/`, `artifacts/`),
-    /// overridable via SPARSEGPT_{DATA,CKPT,REPORTS,ARTIFACTS}.
+    /// overridable via SPARSEGPT_{DATA,CKPT,REPORTS,ARTIFACTS}; the backend
+    /// comes from `SPARSEGPT_BACKEND` (default: pjrt).
     pub fn open() -> Result<Workspace> {
+        Self::open_with(BackendKind::resolve(None)?)
+    }
+
+    /// Open with an explicit execution backend (the CLI `--backend` path —
+    /// explicit choice wins over the `SPARSEGPT_BACKEND` env override).
+    pub fn open_with(kind: BackendKind) -> Result<Workspace> {
         let env = |k: &str, d: &str| {
             std::env::var_os(k).map(PathBuf::from).unwrap_or_else(|| PathBuf::from(d))
         };
@@ -44,7 +53,7 @@ impl Workspace {
             data_dir: env("SPARSEGPT_DATA", "data"),
             ckpt_dir: env("SPARSEGPT_CKPT", "checkpoints"),
             report_dir: env("SPARSEGPT_REPORTS", "reports"),
-            rt: Runtime::new()?,
+            rt: kind.open()?,
         })
     }
 
@@ -54,7 +63,7 @@ impl Workspace {
     }
 
     pub fn dataset(&self, name: &str) -> Result<Dataset> {
-        Dataset::load_tokens(name, self.data_dir.join(format!("{name}.tokens")))
+        Dataset::load_tokens(name, self.dataset_path(name))
             .with_context(|| format!("loading dataset {name} — run `sparsegpt gen-data` first"))
     }
 
@@ -66,7 +75,15 @@ impl Workspace {
     }
 
     pub fn config(&self, name: &str) -> Result<ModelCfg> {
-        Ok(self.rt.manifest.config(name)?.clone())
+        self.rt.config(name)
+    }
+
+    pub fn dataset_path(&self, name: &str) -> PathBuf {
+        self.data_dir.join(format!("{name}.tokens"))
+    }
+
+    pub fn has_dataset(&self, name: &str) -> bool {
+        self.dataset_path(name).exists()
     }
 
     pub fn load_model(&self, config: &str) -> Result<FlatParams> {
@@ -78,13 +95,48 @@ impl Workspace {
     }
 
     /// Calibration chunks per the paper's recipe: `n` random segments from
-    /// the (training-distribution) calibration corpus.
+    /// the (training-distribution) calibration corpus. Errors when
+    /// `gen-data` has not run — a model trained on real data must never be
+    /// silently calibrated on something else (see
+    /// [`Workspace::calib_chunks_or_synthetic`] for the explicit zero-setup
+    /// path).
     pub fn calib_chunks(&self, cfg: &ModelCfg, n: usize, seed: u64) -> Result<CalibChunks> {
-        let ds = self.dataset(CALIB_SET)?;
+        self.chunks_from(self.dataset(CALIB_SET)?, cfg, n, seed)
+    }
+
+    /// Like [`Workspace::calib_chunks`], but when the calibration corpus is
+    /// missing, substitutes a deterministic in-memory synthetic corpus so a
+    /// fresh checkout can prune with zero setup. Returns whether the
+    /// substitution happened so the caller can announce it.
+    pub fn calib_chunks_or_synthetic(
+        &self,
+        cfg: &ModelCfg,
+        n: usize,
+        seed: u64,
+    ) -> Result<(CalibChunks, bool)> {
+        if self.has_dataset(CALIB_SET) {
+            Ok((self.calib_chunks(cfg, n, seed)?, false))
+        } else {
+            let ds = synthetic_calibration_corpus();
+            Ok((self.chunks_from(ds, cfg, n, seed)?, true))
+        }
+    }
+
+    fn chunks_from(&self, ds: Dataset, cfg: &ModelCfg, n: usize, seed: u64) -> Result<CalibChunks> {
         let mut rng = Rng::new(seed ^ 0xca11b);
         let segs = ds.calibration_segments(&mut rng, n, cfg.seq)?;
         CalibChunks::new(cfg, &segs)
     }
+}
+
+/// Deterministic in-memory stand-in for the calibration corpus (same
+/// generator family as `gen-data`, fixed seed): used when the data
+/// directory has not been populated yet.
+pub fn synthetic_calibration_corpus() -> Dataset {
+    let lex = Lexicon::new(0);
+    let text = gen_corpus(&lex, CorpusStyle::C4, 5, 400_000);
+    let tok = Tokenizer::train(&text[..100_000.min(text.len())]);
+    Dataset::from_text("synthetic-calib", &tok, &text)
 }
 
 /// Generate corpora + tokenizer + tokenized datasets into `out`, logging

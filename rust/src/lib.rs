@@ -8,8 +8,10 @@
 //!   * **L3** this crate's substrate: the compression pipeline coordinator,
 //!     everything the paper's evaluation needs (synthetic corpora, BPE
 //!     tokenizer, trainer, perplexity/zero-shot eval, sparse inference
-//!     engine, baselines) and the PJRT runtime that loads + executes the
-//!     artifacts.
+//!     engine, baselines) and the pluggable execution [`runtime`]: the
+//!     PJRT `Runtime` that loads + executes compiled artifacts, or the
+//!     pure-Rust `ReferenceBackend` interpreting the same vocabulary with
+//!     zero build dependencies (`--backend reference`).
 //!   * **L4** the [`api`] job layer: typed `JobSpec`s executed by a
 //!     `Session` with a structured (human or JSON-lines) event stream —
 //!     the single front door the CLI, examples and benches go through.

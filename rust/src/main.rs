@@ -15,6 +15,7 @@ use sparsegpt::api::{
 };
 use sparsegpt::cli::{parse_nm, Args, GLOBAL_BOOL_FLAGS};
 use sparsegpt::coordinator::{PruneMethod, SkipSpec};
+use sparsegpt::runtime::BackendKind;
 use sparsegpt::eval::report::{fmt_ppl, Table};
 use sparsegpt::eval::zeroshot::ZeroShotTask;
 use sparsegpt::solver::sparsegpt_ref::Pattern;
@@ -44,6 +45,11 @@ commands:
 global flags:
   --json    emit machine-readable JSON-lines events on stdout
             (one object per line; every object has a \"reason\" field)
+  --backend pjrt|reference
+            execution backend: compiled PJRT artifacts (default) or the
+            pure-Rust reference interpreter, which needs no artifacts and
+            runs the full pipeline on a fresh checkout. Also settable via
+            SPARSEGPT_BACKEND; the flag wins over the env var.
 ";
 
 fn main() {
@@ -64,7 +70,10 @@ fn run(argv: &[String]) -> Result<()> {
     let spec = spec_from_args(cmd, &args)?;
     let json = args.has("json");
 
-    let mut session = Session::new();
+    let mut session = match args.get("backend").map(BackendKind::parse).transpose()? {
+        Some(kind) => Session::with_backend(kind),
+        None => Session::new(),
+    };
     let report = if json {
         session.run(&spec, &mut JsonlSink::stdout())?
     } else {

@@ -1,9 +1,18 @@
-//! Model configuration, parsed from the AOT manifest so the Rust side can
-//! never drift from the Python layout definition.
+//! Model configuration: parsed from the AOT manifest (so the Rust side can
+//! never drift from the Python layout definition), or constructed directly
+//! from dimensions ([`ModelCfg::from_dims`] / [`ModelCfg::builtin`]) for
+//! backends that derive shapes without a compiled manifest — both mirror
+//! `python/compile/configs.py` entry-for-entry.
 
 use anyhow::Result;
 
 use crate::util::json::Json;
+
+/// Family-wide constants, identical to `python/compile/configs.py`.
+pub const BUILTIN_VOCAB: usize = 512;
+pub const BUILTIN_SEQ: usize = 128;
+/// Lazy-update / mask-selection blocksize of the production solver.
+pub const BUILTIN_BLOCKSIZE: usize = 128;
 
 #[derive(Clone, Debug)]
 pub struct LayoutEntry {
@@ -67,6 +76,113 @@ impl ModelCfg {
         })
     }
 
+    /// Build a config purely from dimensions, mirroring the flat layout of
+    /// `python/compile/configs.py` entry-for-entry (same names, same order,
+    /// same shapes) — the manifest-free path used by the reference backend
+    /// and by tests that need custom-sized models.
+    pub fn from_dims(
+        name: &str,
+        d: usize,
+        layers: usize,
+        heads: usize,
+        train_batch: usize,
+        eval_batch: usize,
+        vocab: usize,
+        seq: usize,
+    ) -> ModelCfg {
+        assert!(heads > 0 && d % heads == 0, "heads must divide d");
+        let ffn = 4 * d;
+        let entries: Vec<(&str, Vec<usize>)> = vec![
+            ("tok_embed", vec![vocab, d]),
+            ("pos_embed", vec![seq, d]),
+            ("ln1_g", vec![layers, d]),
+            ("ln1_b", vec![layers, d]),
+            ("wq", vec![layers, d, d]),
+            ("wk", vec![layers, d, d]),
+            ("wv", vec![layers, d, d]),
+            ("wo", vec![layers, d, d]),
+            ("ln2_g", vec![layers, d]),
+            ("ln2_b", vec![layers, d]),
+            ("w1", vec![layers, ffn, d]),
+            ("w2", vec![layers, d, ffn]),
+            ("lnf_g", vec![d]),
+            ("lnf_b", vec![d]),
+        ];
+        let mut off = 0;
+        let param_layout: Vec<LayoutEntry> = entries
+            .iter()
+            .map(|(n, sh)| {
+                let e = LayoutEntry { name: n.to_string(), offset: off, shape: sh.clone() };
+                off += e.numel();
+                e
+            })
+            .collect();
+        let n_params = off;
+        let block_entries: Vec<(&str, Vec<usize>)> = vec![
+            ("ln1_g", vec![d]),
+            ("ln1_b", vec![d]),
+            ("wq", vec![d, d]),
+            ("wk", vec![d, d]),
+            ("wv", vec![d, d]),
+            ("wo", vec![d, d]),
+            ("ln2_g", vec![d]),
+            ("ln2_b", vec![d]),
+            ("w1", vec![ffn, d]),
+            ("w2", vec![d, ffn]),
+        ];
+        let mut boff = 0;
+        let block_layout: Vec<LayoutEntry> = block_entries
+            .iter()
+            .map(|(n, sh)| {
+                let e = LayoutEntry { name: n.to_string(), offset: boff, shape: sh.clone() };
+                boff += e.numel();
+                e
+            })
+            .collect();
+        ModelCfg {
+            name: name.to_string(),
+            d,
+            layers,
+            heads,
+            ffn,
+            vocab,
+            seq,
+            n_params,
+            block_size: boff,
+            train_batch,
+            eval_batch,
+            param_layout,
+            block_layout,
+        }
+    }
+
+    /// The built-in model family (the `CONFIGS` table of
+    /// `python/compile/configs.py`): nano/micro/small/medium/large.
+    pub fn builtin(name: &str) -> Option<ModelCfg> {
+        let (d, layers, heads, train_batch) = match name {
+            "nano" => (64, 2, 2, 32),
+            "micro" => (128, 4, 4, 16),
+            "small" => (256, 6, 8, 8),
+            "medium" => (512, 8, 8, 4),
+            "large" => (768, 12, 12, 2),
+            _ => return None,
+        };
+        Some(ModelCfg::from_dims(
+            name,
+            d,
+            layers,
+            heads,
+            train_batch,
+            8,
+            BUILTIN_VOCAB,
+            BUILTIN_SEQ,
+        ))
+    }
+
+    pub fn builtin_names() -> [&'static str; 5] {
+        ["nano", "micro", "small", "medium", "large"]
+    }
+
     pub fn param_entry(&self, name: &str) -> Option<&LayoutEntry> {
         self.param_layout.iter().find(|e| e.name == name)
     }
@@ -101,6 +217,70 @@ mod tests {
         }"#,
         )
         .unwrap()
+    }
+
+    #[test]
+    fn builtin_layouts_are_contiguous_and_complete() {
+        for name in ModelCfg::builtin_names() {
+            let cfg = ModelCfg::builtin(name).unwrap();
+            assert_eq!(cfg.name, name);
+            assert_eq!(cfg.ffn, 4 * cfg.d);
+            assert_eq!(cfg.d % cfg.heads, 0);
+            let mut off = 0;
+            for e in &cfg.param_layout {
+                assert_eq!(e.offset, off, "{name}/{}", e.name);
+                off += e.numel();
+            }
+            assert_eq!(off, cfg.n_params, "{name}");
+            let mut boff = 0;
+            for e in &cfg.block_layout {
+                assert_eq!(e.offset, boff, "{name}/{}", e.name);
+                boff += e.numel();
+            }
+            assert_eq!(boff, cfg.block_size, "{name}");
+            assert_eq!(cfg.vocab, BUILTIN_VOCAB);
+            assert_eq!(cfg.seq, BUILTIN_SEQ);
+        }
+        assert!(ModelCfg::builtin("giant").is_none());
+    }
+
+    #[test]
+    fn builtin_nano_matches_hand_computed_sizes() {
+        // independently summed from the configs.py layout: any drift here
+        // breaks checkpoint compatibility between the two backends
+        let nano = ModelCfg::builtin("nano").unwrap();
+        assert_eq!(nano.d, 64);
+        assert_eq!(nano.layers, 2);
+        assert_eq!(nano.heads, 2);
+        assert_eq!(nano.n_params, 139_904);
+        assert_eq!(nano.block_size, 49_408);
+        assert_eq!(nano.prunable_params(), 98_304);
+        assert_eq!(nano.param_entry("pos_embed").unwrap().offset, 512 * 64);
+        assert_eq!(nano.block_entry("w1").unwrap().shape, vec![256, 64]);
+    }
+
+    #[test]
+    fn builtin_matches_manifest_when_artifacts_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return;
+        }
+        let m = crate::model::manifest::Manifest::load(dir).unwrap();
+        for (name, mc) in &m.configs {
+            let bc = ModelCfg::builtin(name).expect("manifest config not in builtin family");
+            assert_eq!(bc.n_params, mc.n_params, "{name}");
+            assert_eq!(bc.block_size, mc.block_size, "{name}");
+            // heads/batches don't shape the flat layout but do shape the
+            // reference backend's attention and batching — pin them too
+            assert_eq!(bc.heads, mc.heads, "{name}");
+            assert_eq!(bc.train_batch, mc.train_batch, "{name}");
+            assert_eq!(bc.eval_batch, mc.eval_batch, "{name}");
+            for (a, b) in bc.param_layout.iter().zip(&mc.param_layout) {
+                assert_eq!(a.name, b.name, "{name}");
+                assert_eq!(a.offset, b.offset, "{name}/{}", a.name);
+                assert_eq!(a.shape, b.shape, "{name}/{}", a.name);
+            }
+        }
     }
 
     #[test]

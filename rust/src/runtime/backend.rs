@@ -1,0 +1,176 @@
+//! The execution-backend abstraction: one trait, two implementations.
+//!
+//! Every tensor program the coordinator/eval layers dispatch is named by an
+//! *artifact* (`embed_<cfg>`, `block_hess_<cfg>`, `sparsegpt_<r>x<c>`, ...).
+//! A [`Backend`] executes artifacts by name:
+//!
+//! * [`crate::runtime::Runtime`] — the production path: AOT-compiled HLO
+//!   text executed on the PJRT CPU client (shapes validated against the
+//!   compiled manifest).
+//! * [`crate::runtime::ReferenceBackend`] — a pure-Rust interpreter of the
+//!   same vocabulary on `tensor`/`solver` math, deriving shapes from
+//!   [`ModelCfg`] instead of a compiled manifest. Slower, dependency-free,
+//!   and available on a fresh checkout — the executable oracle the
+//!   integration suite runs against.
+//!
+//! Backend selection ([`BackendKind::resolve`]) is CLI `--backend` >
+//! `SPARSEGPT_BACKEND` env var > default (`pjrt`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::config::ModelCfg;
+use crate::model::manifest::DType;
+use crate::tensor::Tensor;
+
+/// An input argument; shapes come from the backend (manifest or config).
+pub enum ArgValue<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    Scalar(f32),
+    /// a pre-marshalled buffer (perf path: marshal once, execute many —
+    /// e.g. the flat parameter vector during evaluation)
+    Cached(&'a CachedLiteral),
+}
+
+/// An input buffer marshalled once and reused across executions. Each
+/// backend produces (and accepts only) its own variant.
+pub enum CachedLiteral {
+    /// a PJRT device buffer (see `exec.rs` for why buffers, not literals)
+    Device {
+        buf: xla::PjRtBuffer,
+        numel: usize,
+        dtype: DType,
+    },
+    /// a host-resident copy for the reference interpreter
+    Host { data: Vec<f32>, shape: Vec<usize> },
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub runs: usize,
+    pub run_secs: f64,
+    pub marshal_secs: f64,
+}
+
+pub type RuntimeStats = BTreeMap<String, ArtifactStats>;
+
+/// An artifact executor. Object-safe: the whole stack holds `&dyn Backend`
+/// (or `Box<dyn Backend>` in the `Workspace`), so GPU/sharded backends can
+/// slot in behind the same vocabulary.
+pub trait Backend {
+    /// Stable identifier ("pjrt", "reference").
+    fn name(&self) -> &'static str;
+
+    /// The model configuration `name` as this backend knows it (manifest
+    /// entry for PJRT, built-in family table for the reference backend).
+    fn config(&self, name: &str) -> Result<ModelCfg>;
+
+    /// Whether `name` is executable on this backend (used for fast-path
+    /// selection, e.g. the fused `block_hess` capture).
+    fn has_artifact(&self, name: &str) -> bool;
+
+    /// Enumerable artifact names. Backends with an *open* vocabulary (the
+    /// reference interpreter accepts any well-formed name) return an empty
+    /// list; callers must treat this as "nothing to enumerate", not
+    /// "nothing executable", and rely on [`Backend::has_artifact`].
+    fn artifact_names(&self) -> Vec<String>;
+
+    /// Execute an artifact; returns its outputs as f32 tensors.
+    fn run(&self, name: &str, args: &[ArgValue]) -> Result<Vec<Tensor>>;
+
+    /// Marshal an f32 buffer once for reuse across many `run` calls.
+    fn cache_f32(&self, data: &[f32], shape: &[usize]) -> Result<CachedLiteral>;
+
+    /// Pay any one-time setup cost for `name` now (PJRT: compile + cache);
+    /// benchmarks call this so timed runs exclude compilation.
+    fn prepare(&self, name: &str) -> Result<()>;
+
+    /// Drop per-artifact cached state (memory control for one-shot
+    /// artifacts); a no-op on backends that cache nothing.
+    fn evict(&self, name: &str);
+
+    fn stats(&self) -> RuntimeStats;
+
+    fn reset_stats(&self);
+}
+
+/// Which backend to construct. Selection order: explicit (CLI `--backend`)
+/// > `SPARSEGPT_BACKEND` env var > default (`Pjrt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// compiled HLO artifacts on the PJRT CPU client (default)
+    Pjrt,
+    /// pure-Rust reference interpreter (no artifacts required)
+    Reference,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            _ => Err(anyhow!(
+                "unknown backend {s:?} (expected \"pjrt\" or \"reference\")"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Reference => "reference",
+        }
+    }
+
+    /// Resolve the effective kind: `explicit` (the CLI flag) wins, then the
+    /// `SPARSEGPT_BACKEND` env var, then the PJRT default.
+    pub fn resolve(explicit: Option<BackendKind>) -> Result<BackendKind> {
+        if let Some(kind) = explicit {
+            return Ok(kind);
+        }
+        match std::env::var("SPARSEGPT_BACKEND") {
+            Ok(v) if !v.is_empty() => {
+                Self::parse(&v).map_err(|e| anyhow!("SPARSEGPT_BACKEND: {e:#}"))
+            }
+            _ => Ok(BackendKind::Pjrt),
+        }
+    }
+
+    /// Construct the backend this kind names.
+    pub fn open(&self) -> Result<Box<dyn Backend>> {
+        Ok(match self {
+            BackendKind::Pjrt => Box::new(crate::runtime::Runtime::new()?),
+            BackendKind::Reference => Box::new(crate::runtime::ReferenceBackend::new()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("reference").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse("ref").unwrap(), BackendKind::Reference);
+        assert!(BackendKind::parse("tpu").is_err());
+        for k in [BackendKind::Pjrt, BackendKind::Reference] {
+            assert_eq!(BackendKind::parse(k.label()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn explicit_selection_wins() {
+        // the explicit kind must win regardless of the environment
+        assert_eq!(
+            BackendKind::resolve(Some(BackendKind::Reference)).unwrap(),
+            BackendKind::Reference
+        );
+        assert_eq!(BackendKind::resolve(Some(BackendKind::Pjrt)).unwrap(), BackendKind::Pjrt);
+    }
+}

@@ -12,45 +12,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::model::config::ModelCfg;
 use crate::model::manifest::{ArtifactSpec, DType, Manifest};
+use crate::runtime::backend::{ArgValue, Backend, CachedLiteral, RuntimeStats};
 use crate::tensor::Tensor;
-
-/// An input argument; shape is taken from the manifest (flat data only).
-pub enum ArgValue<'a> {
-    F32(&'a [f32]),
-    I32(&'a [i32]),
-    Scalar(f32),
-    /// a pre-marshalled device buffer (perf path: marshal once, execute
-    /// many — e.g. the flat parameter vector during evaluation)
-    Cached(&'a CachedLiteral),
-}
-
-/// An input buffer marshalled once and reused across executions.
-///
-/// Note: inputs are marshalled to PjRt *buffers* and executed via
-/// `execute_b`, never via `execute(literals)` — the crate's C++ shim for
-/// the latter leaks every input buffer it creates (`buffer.release()`
-/// without a matching delete), which OOM-kills long training loops.
-pub struct CachedLiteral {
-    buf: xla::PjRtBuffer,
-    numel: usize,
-    dtype: DType,
-}
 
 /// An output value: f32 tensor (all artifact outputs are f32).
 pub type OutValue = Tensor;
-
-#[derive(Clone, Debug, Default)]
-#[allow(dead_code)]
-pub struct ArtifactStats {
-    pub compiles: usize,
-    pub compile_secs: f64,
-    pub runs: usize,
-    pub run_secs: f64,
-    pub marshal_secs: f64,
-}
-
-pub type RuntimeStats = BTreeMap<String, ArtifactStats>;
 
 pub struct Runtime {
     client: xla::PjRtClient,
@@ -120,6 +88,11 @@ impl Runtime {
     /// Marshal an f32 buffer once for reuse across many `run` calls (pass
     /// it as `ArgValue::Cached`). `shape` must match the artifact input it
     /// will be bound to.
+    ///
+    /// Note: inputs are marshalled to PjRt *buffers* and executed via
+    /// `execute_b`, never via `execute(literals)` — the crate's C++ shim for
+    /// the latter leaks every input buffer it creates (`buffer.release()`
+    /// without a matching delete), which OOM-kills long training loops.
     pub fn cache_f32(&self, data: &[f32], shape: &[usize]) -> Result<CachedLiteral> {
         if shape.iter().product::<usize>() != data.len() {
             bail!("cache_f32: {} elements vs shape {shape:?}", data.len());
@@ -127,7 +100,7 @@ impl Runtime {
         // buffer_from_host_buffer (typed) converts ElementType->PrimitiveType
         // correctly; the raw_bytes variant passes the wrong enum to the C ABI
         let buf = self.client.buffer_from_host_buffer(data, shape, None)?;
-        Ok(CachedLiteral { buf, numel: data.len(), dtype: DType::F32 })
+        Ok(CachedLiteral::Device { buf, numel: data.len(), dtype: DType::F32 })
     }
 
     /// Execute an artifact with manifest-validated inputs; returns the
@@ -143,7 +116,7 @@ impl Runtime {
         let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
         for (arg, own) in args.iter().zip(&owned) {
             match (arg, own) {
-                (ArgValue::Cached(c), _) => refs.push(&c.buf),
+                (ArgValue::Cached(CachedLiteral::Device { buf, .. }), _) => refs.push(buf),
                 (_, Some(buf)) => refs.push(buf),
                 _ => unreachable!("marshal_inputs fills every non-cached slot"),
             }
@@ -209,17 +182,19 @@ impl Runtime {
         let mut buffers = Vec::with_capacity(args.len());
         for (i, (arg, ispec)) in args.iter().zip(&spec.inputs).enumerate() {
             let buf = match (arg, ispec.dtype) {
-                (ArgValue::Cached(c), dt) => {
-                    if c.dtype != dt || c.numel != ispec.numel() {
+                (ArgValue::Cached(CachedLiteral::Device { numel, dtype, .. }), dt) => {
+                    if *dtype != dt || *numel != ispec.numel() {
                         bail!(
-                            "input {i}: cached buffer has {} elements, expected {} {:?}",
-                            c.numel,
+                            "input {i}: cached buffer has {numel} elements, expected {} {:?}",
                             ispec.numel(),
                             ispec.shape
                         );
                     }
                     buffers.push(None);
                     continue;
+                }
+                (ArgValue::Cached(CachedLiteral::Host { .. }), _) => {
+                    bail!("input {i}: host-cached literal passed to the PJRT backend");
                 }
                 (ArgValue::F32(xs), DType::F32) => {
                     if xs.len() != ispec.numel() {
@@ -244,5 +219,47 @@ impl Runtime {
             buffers.push(Some(buf));
         }
         Ok(buffers)
+    }
+}
+
+impl Backend for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn config(&self, name: &str) -> Result<ModelCfg> {
+        Ok(self.manifest.config(name)?.clone())
+    }
+
+    fn has_artifact(&self, name: &str) -> bool {
+        self.manifest.artifacts.contains_key(name)
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+
+    fn run(&self, name: &str, args: &[ArgValue]) -> Result<Vec<Tensor>> {
+        Runtime::run(self, name, args)
+    }
+
+    fn cache_f32(&self, data: &[f32], shape: &[usize]) -> Result<CachedLiteral> {
+        Runtime::cache_f32(self, data, shape)
+    }
+
+    fn prepare(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    fn evict(&self, name: &str) {
+        Runtime::evict(self, name)
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        Runtime::stats(self)
+    }
+
+    fn reset_stats(&self) {
+        Runtime::reset_stats(self)
     }
 }

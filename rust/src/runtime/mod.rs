@@ -1,7 +1,29 @@
-//! The PJRT runtime: loads the AOT HLO-text artifacts, compiles them on the
-//! CPU PJRT client (once, cached) and executes them from the coordinator's
-//! hot path. This is the only module that touches the `xla` crate.
+//! Artifact execution backends.
+//!
+//! The [`Backend`] trait abstracts *how* the artifact vocabulary executes;
+//! the rest of the stack (coordinator, trainer, eval, api) holds
+//! `&dyn Backend` and never knows which implementation it is driving:
+//!
+//! * [`Runtime`] — the production PJRT path: loads the AOT HLO-text
+//!   artifacts, compiles them on the CPU PJRT client (once, cached) and
+//!   executes them from the coordinator's hot path. The `runtime` module
+//!   is the only place in the crate that touches the `xla` crate (the
+//!   execution logic in `exec.rs`, plus the device-buffer variant of
+//!   [`CachedLiteral`]).
+//! * [`ReferenceBackend`] — a pure-Rust interpreter of the same vocabulary
+//!   on `tensor`/`solver` math (shapes derived from `ModelCfg`, no
+//!   compiled manifest): the executable oracle for tests and the
+//!   zero-setup `--backend reference` path.
+//!
+//! Selection order ([`BackendKind::resolve`]): CLI `--backend` >
+//! `SPARSEGPT_BACKEND` env var > default (`pjrt`).
 
+mod backend;
 mod exec;
+mod ref_ops;
+mod reference;
 
-pub use exec::{ArgValue, CachedLiteral, OutValue, Runtime, RuntimeStats};
+pub use backend::{ArgValue, ArtifactStats, Backend, BackendKind, CachedLiteral, RuntimeStats};
+pub use exec::{OutValue, Runtime};
+pub use ref_ops::ADAPRUNE_STEPS;
+pub use reference::ReferenceBackend;

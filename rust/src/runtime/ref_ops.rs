@@ -1,0 +1,1142 @@
+//! Pure-Rust implementations of the model-side artifact vocabulary, used by
+//! [`crate::runtime::ReferenceBackend`]: embedding, transformer block
+//! forward (with activation captures and fused Hessian accumulation), NLL
+//! evaluation, next-token logits, AdaPrune reconstruction, and a full
+//! forward + backward + Adam training step.
+//!
+//! Semantics mirror `python/compile/model.py` / `train.py` exactly (OPT
+//! block structure, tanh GELU, causal softmax attention, tied LM head,
+//! App-A constants); math runs in f64 internally and converts to f32 at the
+//! artifact boundary, so the interpreter is a *numerically stronger* oracle
+//! than the f32 HLO path it stands in for.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::config::ModelCfg;
+use crate::tensor::Tensor;
+
+const LN_EPS: f64 = 1e-5;
+/// sqrt(2/pi) of the tanh GELU approximation (model.py `gelu_tanh`).
+const GELU_C: f64 = 0.797_884_560_802_865_4;
+/// GD steps of the AdaPrune reconstruction artifact (adaprune.py).
+pub const ADAPRUNE_STEPS: usize = 256;
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.95;
+const ADAM_EPS: f64 = 1e-8;
+const GRAD_CLIP: f64 = 1.0;
+
+fn f64v(xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| x as f64).collect()
+}
+
+fn f32v(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+// --------------------------------------------------------------------------
+// parameter views
+// --------------------------------------------------------------------------
+
+/// Named access into a full flat parameter vector.
+struct ParamView<'a> {
+    cfg: &'a ModelCfg,
+    flat: &'a [f32],
+}
+
+impl<'a> ParamView<'a> {
+    fn new(cfg: &'a ModelCfg, flat: &'a [f32]) -> Result<ParamView<'a>> {
+        if flat.len() != cfg.n_params {
+            bail!(
+                "parameter vector has {} elements, config {} needs {}",
+                flat.len(),
+                cfg.name,
+                cfg.n_params
+            );
+        }
+        Ok(ParamView { cfg, flat })
+    }
+
+    fn region(&self, name: &str) -> Result<&'a [f32]> {
+        let e = self.cfg.param_entry(name).ok_or_else(|| anyhow!("no param {name:?}"))?;
+        Ok(&self.flat[e.offset..e.offset + e.numel()])
+    }
+
+    /// Per-layer slice of a stacked (L, ...) region.
+    fn layer(&self, name: &str, l: usize) -> Result<&'a [f32]> {
+        let e = self.cfg.param_entry(name).ok_or_else(|| anyhow!("no param {name:?}"))?;
+        let per = e.numel() / self.cfg.layers;
+        let start = e.offset + l * per;
+        Ok(&self.flat[start..start + per])
+    }
+}
+
+/// One block's parameters as f64 (converted once, reused fwd + bwd).
+struct BlockParams {
+    ln1_g: Vec<f64>,
+    ln1_b: Vec<f64>,
+    wq: Vec<f64>,
+    wk: Vec<f64>,
+    wv: Vec<f64>,
+    wo: Vec<f64>,
+    ln2_g: Vec<f64>,
+    ln2_b: Vec<f64>,
+    w1: Vec<f64>,
+    w2: Vec<f64>,
+}
+
+impl BlockParams {
+    /// From a flat per-block slice (the `block_fwd` artifact input).
+    fn from_slice(cfg: &ModelCfg, slice: &[f32]) -> Result<BlockParams> {
+        if slice.len() != cfg.block_size {
+            bail!(
+                "block slice has {} elements, config {} needs {}",
+                slice.len(),
+                cfg.name,
+                cfg.block_size
+            );
+        }
+        let get = |name: &str| -> Result<Vec<f64>> {
+            let e = cfg
+                .block_entry(name)
+                .ok_or_else(|| anyhow!("no block param {name:?}"))?;
+            Ok(f64v(&slice[e.offset..e.offset + e.numel()]))
+        };
+        Ok(BlockParams {
+            ln1_g: get("ln1_g")?,
+            ln1_b: get("ln1_b")?,
+            wq: get("wq")?,
+            wk: get("wk")?,
+            wv: get("wv")?,
+            wo: get("wo")?,
+            ln2_g: get("ln2_g")?,
+            ln2_b: get("ln2_b")?,
+            w1: get("w1")?,
+            w2: get("w2")?,
+        })
+    }
+
+    /// Layer `l`'s parameters out of the full stacked vector.
+    fn from_params(view: &ParamView, l: usize) -> Result<BlockParams> {
+        let get = |name: &str| -> Result<Vec<f64>> { Ok(f64v(view.layer(name, l)?)) };
+        Ok(BlockParams {
+            ln1_g: get("ln1_g")?,
+            ln1_b: get("ln1_b")?,
+            wq: get("wq")?,
+            wk: get("wk")?,
+            wv: get("wv")?,
+            wo: get("wo")?,
+            ln2_g: get("ln2_g")?,
+            ln2_b: get("ln2_b")?,
+            w1: get("w1")?,
+            w2: get("w2")?,
+        })
+    }
+}
+
+// --------------------------------------------------------------------------
+// primitives
+// --------------------------------------------------------------------------
+
+/// y = x @ w^T; x (rows, k), w (n, k) -> (rows, n).
+fn matmul_wt(x: &[f64], rows: usize, k: usize, w: &[f64], n: usize) -> Vec<f64> {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), n * k);
+    let mut y = vec![0.0; rows * n];
+    for r in 0..rows {
+        let xr = &x[r * k..(r + 1) * k];
+        let yr = &mut y[r * n..(r + 1) * n];
+        for (o, yv) in yr.iter_mut().enumerate() {
+            let wr = &w[o * k..(o + 1) * k];
+            let mut s = 0.0;
+            for i in 0..k {
+                s += xr[i] * wr[i];
+            }
+            *yv = s;
+        }
+    }
+    y
+}
+
+/// y = x @ w; x (rows, k), w (k, n) row-major -> (rows, n).
+fn matmul(x: &[f64], rows: usize, k: usize, w: &[f64], n: usize) -> Vec<f64> {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut y = vec![0.0; rows * n];
+    for r in 0..rows {
+        let xr = &x[r * k..(r + 1) * k];
+        let yr = &mut y[r * n..(r + 1) * n];
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[i * n..(i + 1) * n];
+            for o in 0..n {
+                yr[o] += xv * wr[o];
+            }
+        }
+    }
+    y
+}
+
+/// x^T @ y; x (rows, cx), y (rows, cy) -> (cx, cy).
+fn matmul_tn(x: &[f64], rows: usize, cx: usize, y: &[f64], cy: usize) -> Vec<f64> {
+    debug_assert_eq!(x.len(), rows * cx);
+    debug_assert_eq!(y.len(), rows * cy);
+    let mut out = vec![0.0; cx * cy];
+    for r in 0..rows {
+        let xr = &x[r * cx..(r + 1) * cx];
+        let yr = &y[r * cy..(r + 1) * cy];
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * cy..(i + 1) * cy];
+            for o in 0..cy {
+                orow[o] += xv * yr[o];
+            }
+        }
+    }
+    out
+}
+
+/// Row-wise LayerNorm; returns (y, per-row (mu, rstd)).
+fn layer_norm(x: &[f64], d: usize, g: &[f64], b: &[f64]) -> (Vec<f64>, Vec<(f64, f64)>) {
+    let rows = x.len() / d;
+    let mut y = vec![0.0; x.len()];
+    let mut stats = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f64>() / d as f64;
+        let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / d as f64;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        let yr = &mut y[r * d..(r + 1) * d];
+        for i in 0..d {
+            yr[i] = (xr[i] - mu) * rstd * g[i] + b[i];
+        }
+        stats.push((mu, rstd));
+    }
+    (y, stats)
+}
+
+/// LayerNorm backward; accumulates gain/shift grads, returns dx.
+fn layer_norm_bwd(
+    x: &[f64],
+    stats: &[(f64, f64)],
+    d: usize,
+    g: &[f64],
+    dy: &[f64],
+    dg: &mut [f64],
+    db: &mut [f64],
+) -> Vec<f64> {
+    let rows = x.len() / d;
+    let mut dx = vec![0.0; x.len()];
+    for r in 0..rows {
+        let (mu, rstd) = stats[r];
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        for i in 0..d {
+            let xhat = (xr[i] - mu) * rstd;
+            let dxh = dyr[i] * g[i];
+            m1 += dxh;
+            m2 += dxh * xhat;
+            dg[i] += dyr[i] * xhat;
+            db[i] += dyr[i];
+        }
+        m1 /= d as f64;
+        m2 /= d as f64;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for i in 0..d {
+            let xhat = (xr[i] - mu) * rstd;
+            dxr[i] = rstd * (dyr[i] * g[i] - m1 - xhat * m2);
+        }
+    }
+    dx
+}
+
+fn gelu(z: f64) -> f64 {
+    0.5 * z * (1.0 + (GELU_C * (z + 0.044715 * z * z * z)).tanh())
+}
+
+fn gelu_grad(z: f64) -> f64 {
+    let t = (GELU_C * (z + 0.044715 * z * z * z)).tanh();
+    0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * 0.044715 * z * z)
+}
+
+/// Causal multi-head attention. q/k/v: (batch*seq, d) with heads occupying
+/// contiguous column stripes. Returns (concatenated head outputs, softmax
+/// probabilities (batch, heads, seq, seq) — zero above the diagonal).
+fn attention_fwd(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    batch: usize,
+    seq: usize,
+    d: usize,
+    heads: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut out = vec![0.0; batch * seq * d];
+    let mut probs = vec![0.0; batch * heads * seq * seq];
+    let mut scores = vec![0.0; seq];
+    for b in 0..batch {
+        for h in 0..heads {
+            let hoff = h * hd;
+            for t in 0..seq {
+                let qoff = (b * seq + t) * d + hoff;
+                let qrow = &q[qoff..qoff + hd];
+                let mut maxv = f64::NEG_INFINITY;
+                for (s, sc) in scores.iter_mut().enumerate().take(t + 1) {
+                    let koff = (b * seq + s) * d + hoff;
+                    let krow = &k[koff..koff + hd];
+                    let mut dot = 0.0;
+                    for j in 0..hd {
+                        dot += qrow[j] * krow[j];
+                    }
+                    *sc = dot * scale;
+                    maxv = maxv.max(*sc);
+                }
+                let mut denom = 0.0;
+                for sc in scores.iter_mut().take(t + 1) {
+                    *sc = (*sc - maxv).exp();
+                    denom += *sc;
+                }
+                let poff = ((b * heads + h) * seq + t) * seq;
+                let orow_off = (b * seq + t) * d + hoff;
+                for s in 0..=t {
+                    let p = scores[s] / denom;
+                    probs[poff + s] = p;
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let voff = (b * seq + s) * d + hoff;
+                    let vrow = &v[voff..voff + hd];
+                    for j in 0..hd {
+                        out[orow_off + j] += p * vrow[j];
+                    }
+                }
+            }
+        }
+    }
+    (out, probs)
+}
+
+/// Attention backward: (dq, dk, dv) from the saved probabilities.
+fn attention_bwd(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    probs: &[f64],
+    dout: &[f64],
+    batch: usize,
+    seq: usize,
+    d: usize,
+    heads: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut dq = vec![0.0; q.len()];
+    let mut dk = vec![0.0; k.len()];
+    let mut dv = vec![0.0; v.len()];
+    let mut dprobs = vec![0.0; seq];
+    for b in 0..batch {
+        for h in 0..heads {
+            let hoff = h * hd;
+            for t in 0..seq {
+                let poff = ((b * heads + h) * seq + t) * seq;
+                let prow = &probs[poff..poff + seq];
+                let dooff = (b * seq + t) * d + hoff;
+                let dorow = &dout[dooff..dooff + hd];
+                for s in 0..=t {
+                    let voff = (b * seq + s) * d + hoff;
+                    let vrow = &v[voff..voff + hd];
+                    let mut acc = 0.0;
+                    for j in 0..hd {
+                        acc += dorow[j] * vrow[j];
+                    }
+                    dprobs[s] = acc;
+                    let p = prow[s];
+                    if p != 0.0 {
+                        let dvrow = &mut dv[voff..voff + hd];
+                        for j in 0..hd {
+                            dvrow[j] += p * dorow[j];
+                        }
+                    }
+                }
+                let mut row_dot = 0.0;
+                for s in 0..=t {
+                    row_dot += dprobs[s] * prow[s];
+                }
+                let qoff = (b * seq + t) * d + hoff;
+                for s in 0..=t {
+                    let ds = prow[s] * (dprobs[s] - row_dot) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let koff = (b * seq + s) * d + hoff;
+                    for j in 0..hd {
+                        dq[qoff + j] += ds * k[koff + j];
+                        dk[koff + j] += ds * q[qoff + j];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+// --------------------------------------------------------------------------
+// block forward / backward
+// --------------------------------------------------------------------------
+
+/// All intermediates of one block forward (kept for the backward pass; the
+/// `a`/`attn`/`u`/`g` members are also the four activation captures).
+struct BlockCache {
+    x_in: Vec<f64>,
+    ln1: Vec<(f64, f64)>,
+    a: Vec<f64>,
+    q: Vec<f64>,
+    k: Vec<f64>,
+    v: Vec<f64>,
+    probs: Vec<f64>,
+    attn: Vec<f64>,
+    x_mid: Vec<f64>,
+    ln2: Vec<(f64, f64)>,
+    u: Vec<f64>,
+    z: Vec<f64>,
+    g: Vec<f64>,
+    x_out: Vec<f64>,
+}
+
+fn block_fwd_cached(cfg: &ModelCfg, bp: &BlockParams, x: Vec<f64>, batch: usize) -> BlockCache {
+    let d = cfg.d;
+    let rows = batch * cfg.seq;
+    let (a, ln1) = layer_norm(&x, d, &bp.ln1_g, &bp.ln1_b);
+    let q = matmul_wt(&a, rows, d, &bp.wq, d);
+    let k = matmul_wt(&a, rows, d, &bp.wk, d);
+    let v = matmul_wt(&a, rows, d, &bp.wv, d);
+    let (attn, probs) = attention_fwd(&q, &k, &v, batch, cfg.seq, d, cfg.heads);
+    let wo_out = matmul_wt(&attn, rows, d, &bp.wo, d);
+    let mut x_mid = x.clone();
+    for (xm, o) in x_mid.iter_mut().zip(&wo_out) {
+        *xm += o;
+    }
+    let (u, ln2) = layer_norm(&x_mid, d, &bp.ln2_g, &bp.ln2_b);
+    let z = matmul_wt(&u, rows, d, &bp.w1, cfg.ffn);
+    let g: Vec<f64> = z.iter().map(|&zz| gelu(zz)).collect();
+    let w2_out = matmul_wt(&g, rows, cfg.ffn, &bp.w2, d);
+    let mut x_out = x_mid.clone();
+    for (xo, o) in x_out.iter_mut().zip(&w2_out) {
+        *xo += o;
+    }
+    BlockCache { x_in: x, ln1, a, q, k, v, probs, attn, x_mid, ln2, u, z, g, x_out }
+}
+
+struct BlockGrads {
+    dln1_g: Vec<f64>,
+    dln1_b: Vec<f64>,
+    dwq: Vec<f64>,
+    dwk: Vec<f64>,
+    dwv: Vec<f64>,
+    dwo: Vec<f64>,
+    dln2_g: Vec<f64>,
+    dln2_b: Vec<f64>,
+    dw1: Vec<f64>,
+    dw2: Vec<f64>,
+}
+
+fn block_bwd(
+    cfg: &ModelCfg,
+    bp: &BlockParams,
+    cache: &BlockCache,
+    dx_out: &[f64],
+    batch: usize,
+) -> (Vec<f64>, BlockGrads) {
+    let d = cfg.d;
+    let f = cfg.ffn;
+    let rows = batch * cfg.seq;
+
+    // x_out = x_mid + g @ W2^T
+    let mut dz = matmul(dx_out, rows, d, &bp.w2, f); // = dg, then chain rule
+    let dw2 = matmul_tn(dx_out, rows, d, &cache.g, f);
+    for (dzv, &zv) in dz.iter_mut().zip(&cache.z) {
+        *dzv *= gelu_grad(zv);
+    }
+    let dw1 = matmul_tn(&dz, rows, f, &cache.u, d);
+    let du = matmul(&dz, rows, f, &bp.w1, d);
+    let mut dln2_g = vec![0.0; d];
+    let mut dln2_b = vec![0.0; d];
+    let d_from_ln2 =
+        layer_norm_bwd(&cache.x_mid, &cache.ln2, d, &bp.ln2_g, &du, &mut dln2_g, &mut dln2_b);
+    let mut dx_mid = dx_out.to_vec();
+    for (a, b) in dx_mid.iter_mut().zip(&d_from_ln2) {
+        *a += b;
+    }
+
+    // x_mid = x_in + attn @ Wo^T
+    let dattn = matmul(&dx_mid, rows, d, &bp.wo, d);
+    let dwo = matmul_tn(&dx_mid, rows, d, &cache.attn, d);
+    let (dq, dk, dv) = attention_bwd(
+        &cache.q,
+        &cache.k,
+        &cache.v,
+        &cache.probs,
+        &dattn,
+        batch,
+        cfg.seq,
+        d,
+        cfg.heads,
+    );
+    let dwq = matmul_tn(&dq, rows, d, &cache.a, d);
+    let dwk = matmul_tn(&dk, rows, d, &cache.a, d);
+    let dwv = matmul_tn(&dv, rows, d, &cache.a, d);
+    let mut da = matmul(&dq, rows, d, &bp.wq, d);
+    let da_k = matmul(&dk, rows, d, &bp.wk, d);
+    let da_v = matmul(&dv, rows, d, &bp.wv, d);
+    for i in 0..da.len() {
+        da[i] += da_k[i] + da_v[i];
+    }
+    let mut dln1_g = vec![0.0; d];
+    let mut dln1_b = vec![0.0; d];
+    let d_from_ln1 =
+        layer_norm_bwd(&cache.x_in, &cache.ln1, d, &bp.ln1_g, &da, &mut dln1_g, &mut dln1_b);
+    let mut dx_in = dx_mid;
+    for (a, b) in dx_in.iter_mut().zip(&d_from_ln1) {
+        *a += b;
+    }
+    (
+        dx_in,
+        BlockGrads { dln1_g, dln1_b, dwq, dwk, dwv, dwo, dln2_g, dln2_b, dw1, dw2 },
+    )
+}
+
+// --------------------------------------------------------------------------
+// artifact entry points
+// --------------------------------------------------------------------------
+
+fn embed_rows(cfg: &ModelCfg, view: &ParamView, tokens: &[i32]) -> Result<Vec<f64>> {
+    let tok = view.region("tok_embed")?;
+    let pos = view.region("pos_embed")?;
+    let d = cfg.d;
+    let seq = cfg.seq;
+    let mut x = vec![0.0f64; tokens.len() * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        if t < 0 || t as usize >= cfg.vocab {
+            bail!("token id {t} out of range (vocab {})", cfg.vocab);
+        }
+        let te = &tok[t as usize * d..(t as usize + 1) * d];
+        let pe = &pos[(r % seq) * d..(r % seq + 1) * d];
+        let xr = &mut x[r * d..(r + 1) * d];
+        for i in 0..d {
+            xr[i] = te[i] as f64 + pe[i] as f64;
+        }
+    }
+    Ok(x)
+}
+
+/// `embed_<cfg>`: (flat params, tokens (B, S)) -> hidden (B, S, d).
+pub fn embed(cfg: &ModelCfg, flat: &[f32], tokens: &[i32]) -> Result<Tensor> {
+    let view = ParamView::new(cfg, flat)?;
+    if tokens.is_empty() || tokens.len() % cfg.seq != 0 {
+        bail!(
+            "embed_{}: {} tokens is not a whole number of seq={} rows",
+            cfg.name,
+            tokens.len(),
+            cfg.seq
+        );
+    }
+    let batch = tokens.len() / cfg.seq;
+    let x = embed_rows(cfg, &view, tokens)?;
+    Ok(Tensor::new(vec![batch, cfg.seq, cfg.d], f32v(&x)))
+}
+
+fn hidden_batch(cfg: &ModelCfg, hidden: &[f32]) -> Result<usize> {
+    let per = cfg.seq * cfg.d;
+    if hidden.is_empty() || hidden.len() % per != 0 {
+        bail!(
+            "hidden buffer of {} elements is not a whole number of (seq={}, d={}) chunks",
+            hidden.len(),
+            cfg.seq,
+            cfg.d
+        );
+    }
+    Ok(hidden.len() / per)
+}
+
+/// `block_fwd_<cfg>`: (block slice, hidden) ->
+/// (hidden', x_qkv, x_wo, x_fc1, x_fc2).
+pub fn block_fwd(cfg: &ModelCfg, block: &[f32], hidden: &[f32]) -> Result<Vec<Tensor>> {
+    let batch = hidden_batch(cfg, hidden)?;
+    let bp = BlockParams::from_slice(cfg, block)?;
+    let cache = block_fwd_cached(cfg, &bp, f64v(hidden), batch);
+    let rows = batch * cfg.seq;
+    Ok(vec![
+        Tensor::new(vec![batch, cfg.seq, cfg.d], f32v(&cache.x_out)),
+        Tensor::new(vec![rows, cfg.d], f32v(&cache.a)),
+        Tensor::new(vec![rows, cfg.d], f32v(&cache.attn)),
+        Tensor::new(vec![rows, cfg.d], f32v(&cache.u)),
+        Tensor::new(vec![rows, cfg.ffn], f32v(&cache.g)),
+    ])
+}
+
+/// `block_prop_<cfg>`: (block slice, hidden) -> hidden' only.
+pub fn block_prop(cfg: &ModelCfg, block: &[f32], hidden: &[f32]) -> Result<Tensor> {
+    let batch = hidden_batch(cfg, hidden)?;
+    let bp = BlockParams::from_slice(cfg, block)?;
+    let cache = block_fwd_cached(cfg, &bp, f64v(hidden), batch);
+    Ok(Tensor::new(vec![batch, cfg.seq, cfg.d], f32v(&cache.x_out)))
+}
+
+fn masked_hessian(x: &[f64], rows: usize, dim: usize, valid: usize) -> Tensor {
+    let mut h = vec![0.0f64; dim * dim];
+    for r in 0..valid.min(rows) {
+        let xr = &x[r * dim..(r + 1) * dim];
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let hrow = &mut h[i * dim..(i + 1) * dim];
+            for j in 0..dim {
+                hrow[j] += xi * xr[j];
+            }
+        }
+    }
+    Tensor::new(vec![dim, dim], f32v(&h))
+}
+
+/// `block_hess_<cfg>`: fused capture + per-chunk Hessians
+/// (block slice, hidden, valid_rows) -> (hidden', H_qkv, H_wo, H_fc1, H_fc2).
+pub fn block_hess(
+    cfg: &ModelCfg,
+    block: &[f32],
+    hidden: &[f32],
+    valid_rows: f32,
+) -> Result<Vec<Tensor>> {
+    let batch = hidden_batch(cfg, hidden)?;
+    let bp = BlockParams::from_slice(cfg, block)?;
+    let cache = block_fwd_cached(cfg, &bp, f64v(hidden), batch);
+    let rows = batch * cfg.seq;
+    let valid = (valid_rows.max(0.0) as usize).min(rows);
+    Ok(vec![
+        Tensor::new(vec![batch, cfg.seq, cfg.d], f32v(&cache.x_out)),
+        masked_hessian(&cache.a, rows, cfg.d, valid),
+        masked_hessian(&cache.attn, rows, cfg.d, valid),
+        masked_hessian(&cache.u, rows, cfg.d, valid),
+        masked_hessian(&cache.g, rows, cfg.ffn, valid),
+    ])
+}
+
+/// `hessian_<dim>`: X (rows, dim) -> X^T X.
+pub fn hessian_chunk(x: &[f32], dim: usize) -> Result<Tensor> {
+    if dim == 0 || x.len() % dim != 0 {
+        bail!("hessian_{dim}: buffer of {} elements is not (rows, {dim})", x.len());
+    }
+    let rows = x.len() / dim;
+    Ok(masked_hessian(&f64v(x), rows, dim, rows))
+}
+
+fn forward_hidden(cfg: &ModelCfg, view: &ParamView, inp: &[i32], batch: usize) -> Result<Vec<f64>> {
+    let mut x = embed_rows(cfg, view, inp)?;
+    for l in 0..cfg.layers {
+        let bp = BlockParams::from_params(view, l)?;
+        let cache = block_fwd_cached(cfg, &bp, x, batch);
+        x = cache.x_out;
+    }
+    let gf = f64v(view.region("lnf_g")?);
+    let bf = f64v(view.region("lnf_b")?);
+    let (h, _) = layer_norm(&x, cfg.d, &gf, &bf);
+    Ok(h)
+}
+
+/// `nll_<cfg>`: (flat params, tokens (B, S+1)) -> per-position NLL (B, S).
+pub fn nll(cfg: &ModelCfg, flat: &[f32], tokens: &[i32]) -> Result<Tensor> {
+    let view = ParamView::new(cfg, flat)?;
+    let row = cfg.seq + 1;
+    if tokens.is_empty() || tokens.len() % row != 0 {
+        bail!(
+            "nll_{}: {} tokens is not a whole number of seq+1={row} rows",
+            cfg.name,
+            tokens.len()
+        );
+    }
+    let batch = tokens.len() / row;
+    let mut inp = Vec::with_capacity(batch * cfg.seq);
+    let mut tgt = Vec::with_capacity(batch * cfg.seq);
+    for b in 0..batch {
+        let r = &tokens[b * row..(b + 1) * row];
+        inp.extend_from_slice(&r[..cfg.seq]);
+        tgt.extend_from_slice(&r[1..]);
+    }
+    let h = forward_hidden(cfg, &view, &inp, batch)?;
+    let tok = view.region("tok_embed")?;
+    let (d, vocab) = (cfg.d, cfg.vocab);
+    let mut out = vec![0.0f32; batch * cfg.seq];
+    let mut logits = vec![0.0f64; vocab];
+    for (r, &t) in tgt.iter().enumerate() {
+        if t < 0 || (t as usize) >= vocab {
+            bail!("target token {t} out of range (vocab {vocab})");
+        }
+        let hr = &h[r * d..(r + 1) * d];
+        let mut maxv = f64::NEG_INFINITY;
+        for (vtok, lg) in logits.iter_mut().enumerate() {
+            let er = &tok[vtok * d..(vtok + 1) * d];
+            let mut s = 0.0;
+            for i in 0..d {
+                s += hr[i] * er[i] as f64;
+            }
+            *lg = s;
+            maxv = maxv.max(s);
+        }
+        let denom: f64 = logits.iter().map(|&x| (x - maxv).exp()).sum();
+        out[r] = ((maxv + denom.ln()) - logits[t as usize]) as f32;
+    }
+    Ok(Tensor::new(vec![batch, cfg.seq], out))
+}
+
+/// `next_logits_<cfg>`: (flat params, tokens (1, S)) -> logits (vocab,).
+pub fn next_logits(cfg: &ModelCfg, flat: &[f32], tokens: &[i32]) -> Result<Tensor> {
+    let view = ParamView::new(cfg, flat)?;
+    if tokens.len() != cfg.seq {
+        bail!(
+            "next_logits_{}: window of {} tokens, expected {}",
+            cfg.name,
+            tokens.len(),
+            cfg.seq
+        );
+    }
+    let h = forward_hidden(cfg, &view, tokens, 1)?;
+    let tok = view.region("tok_embed")?;
+    let hr = &h[(cfg.seq - 1) * cfg.d..cfg.seq * cfg.d];
+    let mut logits = vec![0.0f32; cfg.vocab];
+    for (vtok, lg) in logits.iter_mut().enumerate() {
+        let er = &tok[vtok * cfg.d..(vtok + 1) * cfg.d];
+        let mut s = 0.0f64;
+        for i in 0..cfg.d {
+            s += hr[i] * er[i] as f64;
+        }
+        *lg = s as f32;
+    }
+    Ok(Tensor::new(vec![cfg.vocab], logits))
+}
+
+/// `adaprune_<r>x<c>`: (W, keep mask, H, lr) -> reconstructed W_hat — 256
+/// masked GD steps on f(W) = 1/2 tr((W - W0) H (W - W0)^T).
+pub fn adaprune(w: &[f32], mask: &[f32], h: &[f32], lr: f32, r: usize, c: usize) -> Result<Tensor> {
+    if w.len() != r * c || mask.len() != r * c {
+        bail!("adaprune_{r}x{c}: W has {} and mask {} elements", w.len(), mask.len());
+    }
+    if h.len() != c * c {
+        bail!("adaprune_{r}x{c}: H has {} elements, expected {}", h.len(), c * c);
+    }
+    let wf = f64v(w);
+    let mf = f64v(mask);
+    let hf = f64v(h);
+    let lr = lr as f64;
+    let mut wh: Vec<f64> = wf.iter().zip(&mf).map(|(a, m)| a * m).collect();
+    let mut diff = vec![0.0f64; c];
+    let mut grow = vec![0.0f64; c];
+    for _ in 0..ADAPRUNE_STEPS {
+        for row in 0..r {
+            let base = row * c;
+            for j in 0..c {
+                diff[j] = wh[base + j] - wf[base + j];
+            }
+            grow.iter_mut().for_each(|x| *x = 0.0);
+            for (jcol, &dv) in diff.iter().enumerate() {
+                if dv == 0.0 {
+                    continue;
+                }
+                let hrow = &hf[jcol * c..(jcol + 1) * c];
+                for j in 0..c {
+                    grow[j] += dv * hrow[j];
+                }
+            }
+            for j in 0..c {
+                wh[base + j] -= lr * grow[j] * mf[base + j];
+            }
+        }
+    }
+    Ok(Tensor::new(vec![r, c], f32v(&wh)))
+}
+
+// --------------------------------------------------------------------------
+// training step
+// --------------------------------------------------------------------------
+
+fn acc(grad: &mut [f64], off: usize, src: &[f64]) {
+    for (g, s) in grad[off..off + src.len()].iter_mut().zip(src) {
+        *g += s;
+    }
+}
+
+/// Mean NLL over a (B, S+1) token batch and its gradient wrt the flat
+/// parameter vector (full backprop through the tied-head transformer).
+pub(crate) fn loss_and_grad(
+    cfg: &ModelCfg,
+    flat: &[f32],
+    tokens: &[i32],
+) -> Result<(f64, Vec<f64>)> {
+    let view = ParamView::new(cfg, flat)?;
+    let row = cfg.seq + 1;
+    if tokens.is_empty() || tokens.len() % row != 0 {
+        bail!(
+            "train_step_{}: {} tokens is not a whole number of seq+1={row} rows",
+            cfg.name,
+            tokens.len()
+        );
+    }
+    let batch = tokens.len() / row;
+    let (seq, d, vocab) = (cfg.seq, cfg.d, cfg.vocab);
+    let rows = batch * seq;
+    let mut inp = Vec::with_capacity(rows);
+    let mut tgt = Vec::with_capacity(rows);
+    for b in 0..batch {
+        let r = &tokens[b * row..(b + 1) * row];
+        inp.extend_from_slice(&r[..seq]);
+        tgt.extend_from_slice(&r[1..]);
+    }
+
+    // ---- forward, caching every intermediate ----
+    let mut x = embed_rows(cfg, &view, &inp)?;
+    let mut bps = Vec::with_capacity(cfg.layers);
+    let mut caches: Vec<BlockCache> = Vec::with_capacity(cfg.layers);
+    for l in 0..cfg.layers {
+        let bp = BlockParams::from_params(&view, l)?;
+        let cache = block_fwd_cached(cfg, &bp, x, batch);
+        x = cache.x_out.clone();
+        caches.push(cache);
+        bps.push(bp);
+    }
+    let x_last = x;
+    let gf = f64v(view.region("lnf_g")?);
+    let bf = f64v(view.region("lnf_b")?);
+    let (hfin, lnf_stats) = layer_norm(&x_last, d, &gf, &bf);
+
+    // ---- loss + head backward (tied embeddings) ----
+    let tokemb = view.region("tok_embed")?;
+    let te_off = cfg.param_entry("tok_embed").unwrap().offset;
+    let mut grad = vec![0.0f64; cfg.n_params];
+    let mut dh = vec![0.0f64; rows * d];
+    let inv_n = 1.0 / rows as f64;
+    let mut loss = 0.0f64;
+    let mut logits = vec![0.0f64; vocab];
+    for (r, &t) in tgt.iter().enumerate() {
+        if t < 0 || (t as usize) >= vocab {
+            bail!("target token {t} out of range (vocab {vocab})");
+        }
+        let hr = &hfin[r * d..(r + 1) * d];
+        let mut maxv = f64::NEG_INFINITY;
+        for (vtok, lg) in logits.iter_mut().enumerate() {
+            let er = &tokemb[vtok * d..(vtok + 1) * d];
+            let mut s = 0.0;
+            for i in 0..d {
+                s += hr[i] * er[i] as f64;
+            }
+            *lg = s;
+            maxv = maxv.max(s);
+        }
+        let logit_t = logits[t as usize];
+        let mut denom = 0.0;
+        for lg in logits.iter_mut() {
+            *lg = (*lg - maxv).exp();
+            denom += *lg;
+        }
+        loss += (maxv + denom.ln() - logit_t) * inv_n;
+        let dhr = &mut dh[r * d..(r + 1) * d];
+        for (vtok, &e) in logits.iter().enumerate() {
+            let mut dl = e / denom * inv_n; // softmax prob / N
+            if vtok == t as usize {
+                dl -= inv_n;
+            }
+            if dl == 0.0 {
+                continue;
+            }
+            let er = &tokemb[vtok * d..(vtok + 1) * d];
+            let ge = &mut grad[te_off + vtok * d..te_off + (vtok + 1) * d];
+            for i in 0..d {
+                dhr[i] += dl * er[i] as f64;
+                ge[i] += dl * hr[i];
+            }
+        }
+    }
+
+    // ---- final layer norm backward ----
+    let mut dgf = vec![0.0f64; d];
+    let mut dbf = vec![0.0f64; d];
+    let mut dx = layer_norm_bwd(&x_last, &lnf_stats, d, &gf, &dh, &mut dgf, &mut dbf);
+    acc(&mut grad, cfg.param_entry("lnf_g").unwrap().offset, &dgf);
+    acc(&mut grad, cfg.param_entry("lnf_b").unwrap().offset, &dbf);
+
+    // ---- blocks in reverse ----
+    for l in (0..cfg.layers).rev() {
+        let (dx_in, bg) = block_bwd(cfg, &bps[l], &caches[l], &dx, batch);
+        dx = dx_in;
+        let parts: [(&str, &Vec<f64>); 10] = [
+            ("ln1_g", &bg.dln1_g),
+            ("ln1_b", &bg.dln1_b),
+            ("wq", &bg.dwq),
+            ("wk", &bg.dwk),
+            ("wv", &bg.dwv),
+            ("wo", &bg.dwo),
+            ("ln2_g", &bg.dln2_g),
+            ("ln2_b", &bg.dln2_b),
+            ("w1", &bg.dw1),
+            ("w2", &bg.dw2),
+        ];
+        for (name, g) in parts {
+            let e = cfg.param_entry(name).unwrap();
+            let per = e.numel() / cfg.layers;
+            acc(&mut grad, e.offset + l * per, g);
+        }
+    }
+
+    // ---- embedding backward ----
+    let pe_off = cfg.param_entry("pos_embed").unwrap().offset;
+    for (r, &t) in inp.iter().enumerate() {
+        let dxr = &dx[r * d..(r + 1) * d];
+        let toff = te_off + (t as usize) * d;
+        let poff = pe_off + (r % seq) * d;
+        for i in 0..d {
+            grad[toff + i] += dxr[i];
+            grad[poff + i] += dxr[i];
+        }
+    }
+    Ok((loss, grad))
+}
+
+/// `train_step_<cfg>`: (params, adam m, adam v, step, lr, tokens (B, S+1))
+/// -> (params', m', v', loss). Global-norm clip at 1.0; Adam with the App-A
+/// constants and bias correction, matching `python/compile/train.py`.
+pub fn train_step(
+    cfg: &ModelCfg,
+    p: &[f32],
+    m: &[f32],
+    v: &[f32],
+    step: f32,
+    lr: f32,
+    tokens: &[i32],
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+    let n = cfg.n_params;
+    if m.len() != n || v.len() != n {
+        bail!("train_step_{}: adam state length mismatch", cfg.name);
+    }
+    let (loss, mut g) = loss_and_grad(cfg, p, tokens)?;
+    let gnorm = (g.iter().map(|x| x * x).sum::<f64>() + 1e-12).sqrt();
+    let scale = (GRAD_CLIP / gnorm).min(1.0);
+    if scale < 1.0 {
+        for x in g.iter_mut() {
+            *x *= scale;
+        }
+    }
+    let step = step as f64;
+    let bc1 = 1.0 - ADAM_B1.powf(step);
+    let bc2 = 1.0 - ADAM_B2.powf(step);
+    let lr = lr as f64;
+    let mut p2 = vec![0.0f32; n];
+    let mut m2 = vec![0.0f32; n];
+    let mut v2 = vec![0.0f32; n];
+    for i in 0..n {
+        let gi = g[i];
+        let mi = ADAM_B1 * m[i] as f64 + (1.0 - ADAM_B1) * gi;
+        let vi = ADAM_B2 * v[i] as f64 + (1.0 - ADAM_B2) * gi * gi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        p2[i] = (p[i] as f64 - lr * mhat / (vhat.sqrt() + ADAM_EPS)) as f32;
+        m2[i] = mi as f32;
+        v2[i] = vi as f32;
+    }
+    Ok((p2, m2, v2, loss as f32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::util::prng::Rng;
+
+    fn test_cfg() -> ModelCfg {
+        ModelCfg::from_dims("reftest", 8, 2, 2, 2, 2, 13, 6)
+    }
+
+    fn random_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+        (0..n).map(|_| rng.below(vocab) as i32).collect()
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let cfg = test_cfg();
+        let fp = init_params(&cfg, 3);
+        let mut rng = Rng::new(7);
+        let tokens = random_tokens(&mut rng, 2 * (cfg.seq + 1), cfg.vocab);
+        let (loss, grad) = loss_and_grad(&cfg, &fp.data, &tokens).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        let eps = 1e-3f32;
+        for _ in 0..60 {
+            let i = rng.below(cfg.n_params);
+            let mut plus = fp.data.clone();
+            plus[i] += eps;
+            let mut minus = fp.data.clone();
+            minus[i] -= eps;
+            let (lp, _) = loss_and_grad(&cfg, &plus, &tokens).unwrap();
+            let (lm, _) = loss_and_grad(&cfg, &minus, &tokens).unwrap();
+            let num = (lp - lm) / (2.0 * eps as f64);
+            let ana = grad[i];
+            assert!(
+                (ana - num).abs() <= 5e-4 + 5e-2 * num.abs(),
+                "param {i}: analytic {ana} vs numeric {num}"
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_differences() {
+        for z in [-3.0, -1.0, -0.1, 0.0, 0.2, 1.5, 4.0] {
+            let eps = 1e-6;
+            let num = (gelu(z + eps) - gelu(z - eps)) / (2.0 * eps);
+            assert!((gelu_grad(z) - num).abs() < 1e-6, "z={z}");
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_fixed_pattern() {
+        let cfg = test_cfg();
+        let mut p = init_params(&cfg, 0).data;
+        let n = cfg.n_params;
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        // a deterministic cyclic sequence the model can memorize
+        let mut toks = Vec::new();
+        for b in 0..2usize {
+            for i in 0..=cfg.seq {
+                toks.push(((b + 2 * i) % cfg.vocab) as i32);
+            }
+        }
+        let mut losses = Vec::new();
+        for s in 1..=80 {
+            let (p2, m2, v2, loss) = train_step(&cfg, &p, &m, &v, s as f32, 1e-2, &toks).unwrap();
+            p = p2;
+            m = m2;
+            v = v2;
+            losses.push(loss);
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(
+            losses[losses.len() - 1] < losses[0] * 0.8,
+            "loss {} -> {}",
+            losses[0],
+            losses[losses.len() - 1]
+        );
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn nll_mean_matches_training_loss() {
+        let cfg = test_cfg();
+        let fp = init_params(&cfg, 5);
+        let mut rng = Rng::new(11);
+        let tokens = random_tokens(&mut rng, 2 * (cfg.seq + 1), cfg.vocab);
+        let (loss, _) = loss_and_grad(&cfg, &fp.data, &tokens).unwrap();
+        let nll_t = nll(&cfg, &fp.data, &tokens).unwrap();
+        let mean =
+            nll_t.data().iter().map(|&x| x as f64).sum::<f64>() / nll_t.len() as f64;
+        assert!((mean - loss).abs() < 1e-4, "nll mean {mean} vs loss {loss}");
+        // ballpark: random init predicts roughly uniformly
+        assert!((mean - (cfg.vocab as f64).ln()).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn model_is_causal() {
+        // editing a later input token must not change earlier NLL positions
+        let cfg = test_cfg();
+        let fp = init_params(&cfg, 9);
+        let mut rng = Rng::new(13);
+        let mut tokens = random_tokens(&mut rng, cfg.seq + 1, cfg.vocab);
+        let a = nll(&cfg, &fp.data, &tokens).unwrap();
+        let edit = cfg.seq - 1; // input position seq-1 affects targets >= seq-1 only
+        tokens[edit] = (tokens[edit] + 1) % cfg.vocab as i32;
+        let b = nll(&cfg, &fp.data, &tokens).unwrap();
+        for pos in 0..edit - 1 {
+            assert_eq!(a.data()[pos], b.data()[pos], "position {pos} changed");
+        }
+        assert_ne!(a.data()[edit - 1], b.data()[edit - 1], "edited target did not change");
+    }
+
+    #[test]
+    fn block_artifacts_shapes_and_consistency() {
+        let cfg = test_cfg();
+        let fp = init_params(&cfg, 1);
+        let view = ParamView::new(&cfg, &fp.data).unwrap();
+        let mut block = Vec::new();
+        for e in &cfg.block_layout {
+            block.extend_from_slice(view.layer(&e.name, 0).unwrap());
+        }
+        let mut rng = Rng::new(2);
+        let hidden: Vec<f32> =
+            (0..2 * cfg.seq * cfg.d).map(|_| rng.normal_f32() * 0.1).collect();
+        let outs = block_fwd(&cfg, &block, &hidden).unwrap();
+        assert_eq!(outs.len(), 5);
+        assert_eq!(outs[0].shape(), &[2, cfg.seq, cfg.d]);
+        assert_eq!(outs[1].shape(), &[2 * cfg.seq, cfg.d]);
+        assert_eq!(outs[4].shape(), &[2 * cfg.seq, cfg.ffn]);
+        // block_prop returns exactly the propagation output
+        let prop = block_prop(&cfg, &block, &hidden).unwrap();
+        assert_eq!(prop, outs[0]);
+        // fused Hessians equal X^T X of the captures, honoring valid_rows
+        let rows = 2 * cfg.seq;
+        let fused = block_hess(&cfg, &block, &hidden, rows as f32).unwrap();
+        assert_eq!(fused[0], outs[0]);
+        for (cap, hx) in [(1usize, 1usize), (2, 2), (3, 3), (4, 4)] {
+            let dim = outs[cap].cols();
+            let href = hessian_chunk(outs[cap].data(), dim).unwrap();
+            for (a, b) in fused[hx].data().iter().zip(href.data()) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+        // masking away the second chunk = computing on the first chunk only
+        let half = cfg.seq;
+        let masked = block_hess(&cfg, &block, &hidden, half as f32).unwrap();
+        let first_rows = &outs[1].data()[..half * cfg.d];
+        let href = hessian_chunk(first_rows, cfg.d).unwrap();
+        for (a, b) in masked[1].data().iter().zip(href.data()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn adaprune_improves_on_magnitude_mask() {
+        use crate::solver::hessian::{lambda_max, layer_sq_error};
+        use crate::solver::magnitude::magnitude_prune;
+        let mut rng = Rng::new(4);
+        let (r, c) = (12, 24);
+        let w = Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect());
+        let x = Tensor::new(vec![2 * c, c], (0..2 * c * c).map(|_| rng.normal_f32()).collect());
+        let h = x.transpose2().matmul(&x);
+        let (wz, mask) = magnitude_prune(&w, 0.5);
+        let lam = lambda_max(&h, 0);
+        let lr = (1.0 / lam) as f32;
+        let wa = adaprune(w.data(), mask.data(), h.data(), lr, r, c).unwrap();
+        // pruned entries stay exactly zero
+        for (a, m) in wa.data().iter().zip(mask.data()) {
+            if *m == 0.0 {
+                assert_eq!(*a, 0.0);
+            }
+        }
+        let e_ada = layer_sq_error(&w, &wa, &h);
+        let e_zero = layer_sq_error(&w, &wz, &h);
+        assert!(e_ada < e_zero, "adaprune {e_ada} vs masked-only {e_zero}");
+    }
+
+    #[test]
+    fn bad_inputs_are_clean_errors() {
+        let cfg = test_cfg();
+        let fp = init_params(&cfg, 0);
+        assert!(nll(&cfg, &fp.data, &[0; 5]).is_err()); // not a multiple of S+1
+        assert!(nll(&cfg, &fp.data[1..], &[0; 7]).is_err()); // short params
+        assert!(embed(&cfg, &fp.data, &[999; 6]).is_err()); // token out of range
+        assert!(next_logits(&cfg, &fp.data, &[0; 3]).is_err()); // wrong window
+        assert!(hessian_chunk(&[0.0; 7], 2).is_err());
+        assert!(adaprune(&[0.0; 4], &[0.0; 4], &[0.0; 3], 0.1, 2, 2).is_err());
+    }
+}

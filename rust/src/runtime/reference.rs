@@ -1,0 +1,462 @@
+//! The pure-Rust reference backend: interprets the artifact vocabulary
+//! directly on `tensor`/`solver` math, deriving every shape from
+//! [`ModelCfg`] instead of a compiled manifest.
+//!
+//! No PJRT, no artifacts directory, no Python: the full prune → eval
+//! pipeline runs on a fresh checkout (`--backend reference` or
+//! `SPARSEGPT_BACKEND=reference`). The vocabulary is *open* along its
+//! parameter axes — `sparsegpt_<r>x<c>` for arbitrary shapes,
+//! `sparsegpt_bs<Bs>_...` for any blocksize, `sparsegpt<n><m>_...` for any
+//! single-digit n < m pair — so solver variants and tests are not limited
+//! to the combinations the AOT build lowered.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::config::{ModelCfg, BUILTIN_BLOCKSIZE};
+use crate::runtime::backend::{ArgValue, Backend, CachedLiteral, RuntimeStats};
+use crate::runtime::ref_ops;
+use crate::solver::hessian::dampened_hinv_chol_f64;
+use crate::solver::sparsegpt_ref::{ref_sparsegpt, Pattern};
+use crate::tensor::Tensor;
+
+pub struct ReferenceBackend {
+    configs: BTreeMap<String, ModelCfg>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl ReferenceBackend {
+    /// A backend over the built-in model family (nano..large).
+    pub fn new() -> ReferenceBackend {
+        let configs = ModelCfg::builtin_names()
+            .iter()
+            .map(|n| (n.to_string(), ModelCfg::builtin(n).unwrap()))
+            .collect();
+        ReferenceBackend { configs, stats: RefCell::new(BTreeMap::new()) }
+    }
+
+    /// A backend over explicit configs (tests with custom-sized models).
+    pub fn with_configs(configs: impl IntoIterator<Item = ModelCfg>) -> ReferenceBackend {
+        ReferenceBackend {
+            configs: configs.into_iter().map(|c| (c.name.clone(), c)).collect(),
+            stats: RefCell::new(BTreeMap::new()),
+        }
+    }
+
+    fn cfg(&self, name: &str) -> Result<&ModelCfg> {
+        self.configs.get(name).ok_or_else(|| {
+            anyhow!(
+                "config {name:?} unknown to the reference backend (have {:?})",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    fn dispatch(&self, name: &str, args: &[ArgValue]) -> Result<Vec<Tensor>> {
+        let parsed = parse_artifact(name).ok_or_else(|| {
+            anyhow!("artifact {name:?} is not in the reference backend's vocabulary")
+        })?;
+        match parsed {
+            Parsed::TrainStep(c) => {
+                let cfg = self.cfg(c)?;
+                expect_args(name, args, 6)?;
+                let (p2, m2, v2, loss) = ref_ops::train_step(
+                    cfg,
+                    f32_arg(name, args, 0)?,
+                    f32_arg(name, args, 1)?,
+                    f32_arg(name, args, 2)?,
+                    scalar_arg(name, args, 3)?,
+                    scalar_arg(name, args, 4)?,
+                    i32_arg(name, args, 5)?,
+                )?;
+                let n = cfg.n_params;
+                Ok(vec![
+                    Tensor::new(vec![n], p2),
+                    Tensor::new(vec![n], m2),
+                    Tensor::new(vec![n], v2),
+                    Tensor::new(vec![1], vec![loss]),
+                ])
+            }
+            Parsed::Embed(c) => {
+                let cfg = self.cfg(c)?;
+                expect_args(name, args, 2)?;
+                let out = ref_ops::embed(cfg, f32_arg(name, args, 0)?, i32_arg(name, args, 1)?)?;
+                Ok(vec![out])
+            }
+            Parsed::BlockFwd(c) => {
+                let cfg = self.cfg(c)?;
+                expect_args(name, args, 2)?;
+                ref_ops::block_fwd(cfg, f32_arg(name, args, 0)?, f32_arg(name, args, 1)?)
+            }
+            Parsed::BlockProp(c) => {
+                let cfg = self.cfg(c)?;
+                expect_args(name, args, 2)?;
+                let out =
+                    ref_ops::block_prop(cfg, f32_arg(name, args, 0)?, f32_arg(name, args, 1)?)?;
+                Ok(vec![out])
+            }
+            Parsed::BlockHess(c) => {
+                let cfg = self.cfg(c)?;
+                expect_args(name, args, 3)?;
+                ref_ops::block_hess(
+                    cfg,
+                    f32_arg(name, args, 0)?,
+                    f32_arg(name, args, 1)?,
+                    scalar_arg(name, args, 2)?,
+                )
+            }
+            Parsed::Nll(c) => {
+                let cfg = self.cfg(c)?;
+                expect_args(name, args, 2)?;
+                let out = ref_ops::nll(cfg, f32_arg(name, args, 0)?, i32_arg(name, args, 1)?)?;
+                Ok(vec![out])
+            }
+            Parsed::NextLogits(c) => {
+                let cfg = self.cfg(c)?;
+                expect_args(name, args, 2)?;
+                let out =
+                    ref_ops::next_logits(cfg, f32_arg(name, args, 0)?, i32_arg(name, args, 1)?)?;
+                Ok(vec![out])
+            }
+            Parsed::HessianPrep(dim) => {
+                expect_args(name, args, 2)?;
+                let h = f32_tensor(name, args, 0, dim, dim)?;
+                let damp = scalar_arg(name, args, 1)? as f64;
+                let u = dampened_hinv_chol_f64(&h, damp).ok_or_else(|| {
+                    anyhow!("{name}: Hessian not SPD even after dampening; increase --damp")
+                })?;
+                Ok(vec![u])
+            }
+            Parsed::Hessian(dim) => {
+                expect_args(name, args, 1)?;
+                Ok(vec![ref_ops::hessian_chunk(f32_arg(name, args, 0)?, dim)?])
+            }
+            Parsed::Adaprune(r, c) => {
+                expect_args(name, args, 4)?;
+                Ok(vec![ref_ops::adaprune(
+                    f32_arg(name, args, 0)?,
+                    f32_arg(name, args, 1)?,
+                    f32_arg(name, args, 2)?,
+                    scalar_arg(name, args, 3)?,
+                    r,
+                    c,
+                )?])
+            }
+            Parsed::SolveNm { n, m, r, c } => {
+                expect_args(name, args, 3)?;
+                let qlevels = scalar_arg(name, args, 2)?;
+                self.solve(name, args, r, c, Pattern::NM(n, m), qlevels, BUILTIN_BLOCKSIZE)
+            }
+            Parsed::SolveUnstructured { blocksize, r, c } => {
+                expect_args(name, args, 4)?;
+                let p = scalar_arg(name, args, 2)? as f64;
+                let qlevels = scalar_arg(name, args, 3)?;
+                self.solve(name, args, r, c, Pattern::Unstructured(p), qlevels, blocksize)
+            }
+        }
+    }
+
+    /// Shared SparseGPT solver entry: args[0] = W (r, c), args[1] = inverse
+    /// Cholesky factor (c, c); returns (W_hat, keep mask).
+    fn solve(
+        &self,
+        name: &str,
+        args: &[ArgValue],
+        r: usize,
+        c: usize,
+        pattern: Pattern,
+        qlevels: f32,
+        blocksize: usize,
+    ) -> Result<Vec<Tensor>> {
+        let w = f32_tensor(name, args, 0, r, c)?;
+        let hc = f32_tensor(name, args, 1, c, c)?;
+        let qlevels = qlevels.max(0.0).round() as u32;
+        let (w_hat, mask) = ref_sparsegpt(&w, &hc, pattern, qlevels, blocksize);
+        Ok(vec![w_hat, mask])
+    }
+
+    /// Whether `name` parses as an executable artifact for this backend —
+    /// the same grammar `dispatch` executes ([`parse_artifact`] is the
+    /// single definition of both), plus a config-table check for the
+    /// model-typed artifacts.
+    fn recognizes(&self, name: &str) -> bool {
+        match parse_artifact(name) {
+            Some(
+                Parsed::TrainStep(c)
+                | Parsed::Embed(c)
+                | Parsed::BlockFwd(c)
+                | Parsed::BlockProp(c)
+                | Parsed::BlockHess(c)
+                | Parsed::Nll(c)
+                | Parsed::NextLogits(c),
+            ) => self.configs.contains_key(c),
+            Some(_) => true,
+            None => false,
+        }
+    }
+}
+
+/// A parsed artifact name: the single grammar shared by `dispatch` (what
+/// executes) and `recognizes` (what `has_artifact` reports) — they cannot
+/// drift apart.
+enum Parsed<'a> {
+    TrainStep(&'a str),
+    Embed(&'a str),
+    BlockFwd(&'a str),
+    BlockProp(&'a str),
+    BlockHess(&'a str),
+    Nll(&'a str),
+    NextLogits(&'a str),
+    HessianPrep(usize),
+    Hessian(usize),
+    Adaprune(usize, usize),
+    /// `sparsegpt<n><m>_<r>x<c>` — any single-digit 0 < n < m pair (the
+    /// AOT build lowers 24 and 48; the interpreter accepts the family)
+    SolveNm { n: usize, m: usize, r: usize, c: usize },
+    /// `sparsegpt_<r>x<c>` (production Bs) or `sparsegpt_bs<Bs>_<r>x<c>`
+    SolveUnstructured { blocksize: usize, r: usize, c: usize },
+}
+
+fn parse_artifact(name: &str) -> Option<Parsed> {
+    if let Some(c) = name.strip_prefix("train_step_") {
+        return Some(Parsed::TrainStep(c));
+    }
+    if let Some(c) = name.strip_prefix("embed_") {
+        return Some(Parsed::Embed(c));
+    }
+    if let Some(c) = name.strip_prefix("block_fwd_") {
+        return Some(Parsed::BlockFwd(c));
+    }
+    if let Some(c) = name.strip_prefix("block_prop_") {
+        return Some(Parsed::BlockProp(c));
+    }
+    if let Some(c) = name.strip_prefix("block_hess_") {
+        return Some(Parsed::BlockHess(c));
+    }
+    if let Some(c) = name.strip_prefix("nll_") {
+        return Some(Parsed::Nll(c));
+    }
+    if let Some(c) = name.strip_prefix("next_logits_") {
+        return Some(Parsed::NextLogits(c));
+    }
+    if let Some(d) = name.strip_prefix("hessian_prep_") {
+        return Some(Parsed::HessianPrep(d.parse().ok()?));
+    }
+    if let Some(d) = name.strip_prefix("hessian_") {
+        return Some(Parsed::Hessian(d.parse().ok()?));
+    }
+    if let Some(s) = name.strip_prefix("adaprune_") {
+        let (r, c) = shape_of(s)?;
+        return Some(Parsed::Adaprune(r, c));
+    }
+    if let Some(rest) = name.strip_prefix("sparsegpt_bs") {
+        let (bs, s) = rest.split_once('_')?;
+        let blocksize = bs.parse::<usize>().ok().filter(|&b| b > 0)?;
+        let (r, c) = shape_of(s)?;
+        return Some(Parsed::SolveUnstructured { blocksize, r, c });
+    }
+    if let Some(s) = name.strip_prefix("sparsegpt_") {
+        let (r, c) = shape_of(s)?;
+        return Some(Parsed::SolveUnstructured { blocksize: BUILTIN_BLOCKSIZE, r, c });
+    }
+    if let Some(rest) = name.strip_prefix("sparsegpt") {
+        // digit-pair n:m variants: "sparsegpt24_64x64", "sparsegpt48_..."
+        let (nm, s) = rest.split_once('_')?;
+        let digits: Vec<u32> = nm.chars().map(|ch| ch.to_digit(10)).collect::<Option<_>>()?;
+        if let [n, m] = digits[..] {
+            let (n, m) = (n as usize, m as usize);
+            if n > 0 && n < m {
+                let (r, c) = shape_of(s)?;
+                return Some(Parsed::SolveNm { n, m, r, c });
+            }
+        }
+        return None;
+    }
+    None
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> ReferenceBackend {
+        ReferenceBackend::new()
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn config(&self, name: &str) -> Result<ModelCfg> {
+        self.cfg(name).cloned()
+    }
+
+    fn has_artifact(&self, name: &str) -> bool {
+        self.recognizes(name)
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        Vec::new() // open vocabulary: nothing to enumerate
+    }
+
+    fn run(&self, name: &str, args: &[ArgValue]) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
+        let out = self.dispatch(name, args)?;
+        let mut st = self.stats.borrow_mut();
+        let e = st.entry(name.to_string()).or_default();
+        e.runs += 1;
+        e.run_secs += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn cache_f32(&self, data: &[f32], shape: &[usize]) -> Result<CachedLiteral> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("cache_f32: {} elements vs shape {shape:?}", data.len());
+        }
+        Ok(CachedLiteral::Host { data: data.to_vec(), shape: shape.to_vec() })
+    }
+
+    fn prepare(&self, name: &str) -> Result<()> {
+        if self.recognizes(name) {
+            Ok(())
+        } else {
+            Err(anyhow!("artifact {name:?} is not in the reference backend's vocabulary"))
+        }
+    }
+
+    fn evict(&self, _name: &str) {}
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+}
+
+// --------------------------------------------------------------------------
+// argument helpers
+// --------------------------------------------------------------------------
+
+fn expect_args(name: &str, args: &[ArgValue], n: usize) -> Result<()> {
+    if args.len() != n {
+        bail!("{name}: expected {n} inputs, got {}", args.len());
+    }
+    Ok(())
+}
+
+fn f32_arg<'a>(name: &str, args: &'a [ArgValue<'a>], i: usize) -> Result<&'a [f32]> {
+    match args.get(i) {
+        Some(ArgValue::F32(x)) => Ok(*x),
+        Some(ArgValue::Cached(CachedLiteral::Host { data, .. })) => Ok(data.as_slice()),
+        Some(ArgValue::Cached(CachedLiteral::Device { .. })) => {
+            bail!("{name}: input {i} is a device literal (passed to the reference backend)")
+        }
+        Some(_) => bail!("{name}: input {i} must be an f32 buffer"),
+        None => bail!("{name}: missing input {i}"),
+    }
+}
+
+fn i32_arg<'a>(name: &str, args: &'a [ArgValue<'a>], i: usize) -> Result<&'a [i32]> {
+    match args.get(i) {
+        Some(ArgValue::I32(x)) => Ok(*x),
+        Some(_) => bail!("{name}: input {i} must be an i32 buffer"),
+        None => bail!("{name}: missing input {i}"),
+    }
+}
+
+fn scalar_arg(name: &str, args: &[ArgValue], i: usize) -> Result<f32> {
+    match args.get(i) {
+        Some(ArgValue::Scalar(x)) => Ok(*x),
+        Some(_) => bail!("{name}: input {i} must be a scalar"),
+        None => bail!("{name}: missing input {i}"),
+    }
+}
+
+/// Fetch args[i] as an (r, c) f32 tensor with an exact length check.
+fn f32_tensor(name: &str, args: &[ArgValue], i: usize, r: usize, c: usize) -> Result<Tensor> {
+    let data = f32_arg(name, args, i)?;
+    if data.len() != r * c {
+        bail!("{name}: input {i} has {} elements, expected {r}x{c}", data.len());
+    }
+    Ok(Tensor::new(vec![r, c], data.to_vec()))
+}
+
+fn shape_of(s: &str) -> Option<(usize, usize)> {
+    let (r, c) = s.split_once('x')?;
+    let (r, c) = (r.parse::<usize>().ok()?, c.parse::<usize>().ok()?);
+    if r == 0 || c == 0 {
+        None
+    } else {
+        Some((r, c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn vocabulary_recognition() {
+        let be = ReferenceBackend::new();
+        for good in [
+            "embed_nano",
+            "block_fwd_micro",
+            "block_hess_nano",
+            "block_prop_small",
+            "nll_nano",
+            "next_logits_large",
+            "train_step_nano",
+            "hessian_64",
+            "hessian_prep_256",
+            "sparsegpt_64x64",
+            "sparsegpt_bs32_16x64",
+            "sparsegpt24_256x64",
+            "sparsegpt48_64x256",
+            "sparsegpt12_16x32", // any single-digit n<m pair, not just 2:4/4:8
+            "adaprune_64x64",
+        ] {
+            assert!(be.has_artifact(good), "{good}");
+            assert!(be.prepare(good).is_ok(), "{good}");
+        }
+        for bad in [
+            "embed_giant",
+            "sparsegpt_64",
+            "sparsegpt_ax64",
+            "sparsegpt_bs_64x64",
+            "sparsegpt_bs0_64x64", // a zero blocksize is malformed, not Bs=1
+            "sparsegpt42_16x32",   // n >= m is not a valid pattern
+            "hessian_x",
+            "unknown",
+        ] {
+            assert!(!be.has_artifact(bad), "{bad}");
+            assert!(be.prepare(bad).is_err(), "{bad}");
+        }
+        assert!(be.artifact_names().is_empty());
+        assert!(be.config("nano").is_ok());
+        assert!(be.config("giant").is_err());
+    }
+
+    #[test]
+    fn stats_and_cache_roundtrip() {
+        let be = ReferenceBackend::new();
+        let mut rng = Rng::new(0);
+        let x: Vec<f32> = (0..32 * 8).map(|_| rng.normal_f32()).collect();
+        let lit = be.cache_f32(&x, &[32, 8]).unwrap();
+        assert!(be.cache_f32(&x, &[3, 3]).is_err());
+        let out = be.run("hessian_8", &[ArgValue::Cached(&lit)]).unwrap();
+        assert_eq!(out[0].shape(), &[8, 8]);
+        let st = be.stats();
+        assert_eq!(st.get("hessian_8").unwrap().runs, 1);
+        be.reset_stats();
+        assert!(be.stats().is_empty());
+        // evict is a harmless no-op
+        be.evict("hessian_8");
+        // unknown artifacts error cleanly
+        assert!(be.run("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Backend parity: the reference interpreter's solver artifacts must match
+//! the pure-Rust f64 reference solver (`solver/sparsegpt_ref.rs`)
+//! elementwise on random Hessians — unstructured, 2:4 and 4:8 masks, joint
+//! quantization and the Bs ablation — and its linalg artifacts must match
+//! the f64 chain. Also covers backend selection order and the cached-
+//! literal path.
+
+use sparsegpt::model::config::BUILTIN_BLOCKSIZE;
+use sparsegpt::runtime::{ArgValue, Backend, BackendKind, ReferenceBackend};
+use sparsegpt::solver::hessian::dampened_hinv_chol_f64;
+use sparsegpt::solver::sparsegpt_ref::{ref_sparsegpt, Pattern};
+use sparsegpt::tensor::Tensor;
+use sparsegpt::util::prng::Rng;
+
+const TOL: f32 = 1e-5;
+
+fn problem(seed: u64, r: usize, c: usize) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let w = Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect());
+    let n = 2 * c;
+    let x = Tensor::new(vec![n, c], (0..n * c).map(|_| rng.normal_f32()).collect());
+    let h = x.transpose2().matmul(&x);
+    let hc = dampened_hinv_chol_f64(&h, 0.01).expect("hinv chol");
+    (w, h, hc)
+}
+
+fn assert_close(got: &Tensor, want: &Tensor, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape");
+    for (i, (a, b)) in got.data().iter().zip(want.data()).enumerate() {
+        assert!((a - b).abs() <= TOL, "{what}: element {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn unstructured_solver_matches_reference_solver() {
+    let be = ReferenceBackend::new();
+    for (seed, (r, c)) in [(0u64, (32usize, 64usize)), (1, (64, 64)), (2, (48, 96))] {
+        let (w, _h, hc) = problem(seed, r, c);
+        for p in [0.25f32, 0.5, 0.75] {
+            let out = be
+                .run(
+                    &format!("sparsegpt_{r}x{c}"),
+                    &[
+                        ArgValue::F32(w.data()),
+                        ArgValue::F32(hc.data()),
+                        ArgValue::Scalar(p),
+                        ArgValue::Scalar(0.0),
+                    ],
+                )
+                .unwrap();
+            let (w_ref, mask_ref) =
+                ref_sparsegpt(&w, &hc, Pattern::Unstructured(p as f64), 0, BUILTIN_BLOCKSIZE);
+            assert_eq!(out[1].data(), mask_ref.data(), "mask p={p} ({r}x{c})");
+            assert_close(&out[0], &w_ref, &format!("weights p={p} ({r}x{c})"));
+        }
+    }
+}
+
+#[test]
+fn nm_solvers_match_reference_solver_and_patterns() {
+    let be = ReferenceBackend::new();
+    let (r, c) = (32, 64);
+    let (w, _h, hc) = problem(3, r, c);
+    for (artifact, n, m) in [("sparsegpt24", 2usize, 4usize), ("sparsegpt48", 4, 8)] {
+        let out = be
+            .run(
+                &format!("{artifact}_{r}x{c}"),
+                &[
+                    ArgValue::F32(w.data()),
+                    ArgValue::F32(hc.data()),
+                    ArgValue::Scalar(0.0),
+                ],
+            )
+            .unwrap();
+        let (w_ref, mask_ref) =
+            ref_sparsegpt(&w, &hc, Pattern::NM(n, m), 0, BUILTIN_BLOCKSIZE);
+        assert_eq!(out[1].data(), mask_ref.data(), "{artifact} mask");
+        assert_close(&out[0], &w_ref, artifact);
+        // the n:m constraint holds group-by-group
+        for row in 0..r {
+            for g in (0..c).step_by(m) {
+                let kept: f32 = (g..g + m).map(|j| out[1].at2(row, j)).sum();
+                assert_eq!(kept as usize, m - n, "{artifact} row {row} group {g}");
+            }
+        }
+    }
+}
+
+#[test]
+fn joint_quantization_matches_reference_solver() {
+    let be = ReferenceBackend::new();
+    let (r, c) = (16, 32);
+    let (w, _h, hc) = problem(4, r, c);
+    let levels = 15.0f32; // 4-bit
+    let out = be
+        .run(
+            &format!("sparsegpt_{r}x{c}"),
+            &[
+                ArgValue::F32(w.data()),
+                ArgValue::F32(hc.data()),
+                ArgValue::Scalar(0.5),
+                ArgValue::Scalar(levels),
+            ],
+        )
+        .unwrap();
+    let (w_ref, mask_ref) =
+        ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.5), 15, BUILTIN_BLOCKSIZE);
+    assert_eq!(out[1].data(), mask_ref.data());
+    assert_close(&out[0], &w_ref, "joint quant");
+}
+
+#[test]
+fn bs_ablation_variant_uses_requested_blocksize() {
+    let be = ReferenceBackend::new();
+    let (r, c) = (16, 64);
+    let (w, _h, hc) = problem(5, r, c);
+    let out = be
+        .run(
+            &format!("sparsegpt_bs16_{r}x{c}"),
+            &[
+                ArgValue::F32(w.data()),
+                ArgValue::F32(hc.data()),
+                ArgValue::Scalar(0.5),
+                ArgValue::Scalar(0.0),
+            ],
+        )
+        .unwrap();
+    let (w_16, mask_16) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.5), 0, 16);
+    assert_eq!(out[1].data(), mask_16.data());
+    assert_close(&out[0], &w_16, "bs16");
+    // and it genuinely differs from the production Bs=128 selection
+    let (_, mask_128) = ref_sparsegpt(&w, &hc, Pattern::Unstructured(0.5), 0, 128);
+    assert_ne!(mask_16.data(), mask_128.data(), "Bs must change mask selection");
+}
+
+#[test]
+fn hessian_artifacts_match_f64_chain() {
+    let be = ReferenceBackend::new();
+    let mut rng = Rng::new(6);
+    let dim = 64;
+    let n = 2 * dim;
+    let x = Tensor::new(vec![n, dim], (0..n * dim).map(|_| rng.normal_f32()).collect());
+    let out = be.run(&format!("hessian_{dim}"), &[ArgValue::F32(x.data())]).unwrap();
+    let href = x.transpose2().matmul(&x);
+    for (a, b) in out[0].data().iter().zip(href.data()) {
+        assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+    let prep = be
+        .run(
+            &format!("hessian_prep_{dim}"),
+            &[ArgValue::F32(href.data()), ArgValue::Scalar(0.01)],
+        )
+        .unwrap();
+    let uref = dampened_hinv_chol_f64(&href, 0.01).unwrap();
+    assert_close(&prep[0], &uref, "hessian_prep");
+}
+
+#[test]
+fn cached_literals_match_direct_buffers() {
+    let be = ReferenceBackend::new();
+    let cfg = be.config("nano").unwrap();
+    let params = sparsegpt::model::init::init_params(&cfg, 0);
+    let mut rng = Rng::new(7);
+    let toks: Vec<i32> =
+        (0..cfg.eval_batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let lit = be.cache_f32(&params.data, &[cfg.n_params]).unwrap();
+    let a = be
+        .run("embed_nano", &[ArgValue::Cached(&lit), ArgValue::I32(&toks)])
+        .unwrap();
+    let b = be
+        .run("embed_nano", &[ArgValue::F32(&params.data), ArgValue::I32(&toks)])
+        .unwrap();
+    assert_eq!(a[0], b[0]);
+    assert_eq!(a[0].shape(), &[cfg.eval_batch, cfg.seq, cfg.d]);
+    assert_eq!(be.stats().get("embed_nano").unwrap().runs, 2);
+}
+
+#[test]
+fn selection_order_cli_beats_env_beats_default() {
+    // NOTE: this must remain the ONLY test in this binary that reads or
+    // writes SPARSEGPT_BACKEND — the env var is process-global and tests
+    // run on parallel threads.
+    let orig = std::env::var("SPARSEGPT_BACKEND").ok();
+    // explicit always wins, even against a conflicting env var
+    std::env::set_var("SPARSEGPT_BACKEND", "reference");
+    assert_eq!(BackendKind::resolve(Some(BackendKind::Pjrt)).unwrap(), BackendKind::Pjrt);
+    // env wins over the default
+    assert_eq!(BackendKind::resolve(None).unwrap(), BackendKind::Reference);
+    // a bad env value is a clean error, not a silent default
+    std::env::set_var("SPARSEGPT_BACKEND", "quantum");
+    assert!(BackendKind::resolve(None).is_err());
+    // without either, the compiled-artifact path is the default
+    std::env::remove_var("SPARSEGPT_BACKEND");
+    assert_eq!(BackendKind::resolve(None).unwrap(), BackendKind::Pjrt);
+    if let Some(v) = orig {
+        std::env::set_var("SPARSEGPT_BACKEND", v);
+    }
+}
+
+#[test]
+fn malformed_artifacts_and_inputs_error_cleanly() {
+    let be = ReferenceBackend::new();
+    assert!(be.run("does_not_exist", &[]).is_err());
+    assert!(be.run("sparsegpt_64x64", &[ArgValue::F32(&[0.0; 10])]).is_err());
+    let (w, _h, hc) = problem(8, 16, 32);
+    // wrong factor size
+    assert!(be
+        .run(
+            "sparsegpt_16x32",
+            &[
+                ArgValue::F32(w.data()),
+                ArgValue::F32(&hc.data()[..10]),
+                ArgValue::Scalar(0.5),
+                ArgValue::Scalar(0.0),
+            ],
+        )
+        .is_err());
+}

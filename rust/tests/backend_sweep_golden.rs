@@ -1,0 +1,91 @@
+//! Golden test for the sweep job's JSONL event contract on the reference
+//! backend: a real 2-variant sweep runs end-to-end (no PJRT, no artifacts)
+//! and its `sweep-variant` / `job-finished` lines must serialize exactly as
+//! pinned in `golden/sweep_events.jsonl` (wall-clock seconds normalized to
+//! 0 — everything else is deterministic). Downstream consumers key on
+//! these lines to track sweep progress.
+
+use sparsegpt::api::{JobSpec, JsonlSink, PruneSpec, Session, SweepSpec};
+use sparsegpt::harness::{generate_data, Workspace};
+use sparsegpt::model::checkpoint::Checkpoint;
+use sparsegpt::model::init::init_params;
+use sparsegpt::runtime::ReferenceBackend;
+use sparsegpt::util::json::Json;
+
+fn run_sweep_jsonl() -> String {
+    let dir = std::env::temp_dir().join(format!("sgpt_sweep_golden_{}", std::process::id()));
+    let data_dir = dir.join("data");
+    let ckpt_dir = dir.join("checkpoints");
+    generate_data(&data_dir, 1, 0).unwrap(); // minimum-size corpora
+    let ws = Workspace {
+        data_dir,
+        ckpt_dir: ckpt_dir.clone(),
+        report_dir: dir.join("reports"),
+        rt: Box::new(ReferenceBackend::new()),
+    };
+    let cfg = ws.config("nano").unwrap();
+    Checkpoint {
+        config_name: "nano".into(),
+        step: 0,
+        params: init_params(&cfg, 0).data,
+        adam: None,
+    }
+    .save(Checkpoint::path_for(&ckpt_dir, "nano", ""))
+    .unwrap();
+
+    let spec = SweepSpec::new("nano")
+        .variant(PruneSpec::sparsegpt(0.5))
+        .variant(PruneSpec::magnitude(0.5))
+        .dataset("synth-wiki")
+        .calib(8)
+        .max_segments(2);
+    let mut sink = JsonlSink::new(Vec::new());
+    let mut session = Session::with_workspace(ws);
+    session.run(&JobSpec::Sweep(spec), &mut sink).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    String::from_utf8(sink.into_inner()).unwrap()
+}
+
+#[test]
+fn sweep_variant_and_finish_events_match_golden() {
+    let text = run_sweep_jsonl();
+    let mut pinned = String::new();
+    for line in text.lines() {
+        let mut v = Json::parse(line)
+            .unwrap_or_else(|e| panic!("unparseable event line {line:?}: {e:#}"));
+        let reason = v.get("reason").unwrap().as_str().unwrap().to_string();
+        if reason == "sweep-variant" || reason == "job-finished" {
+            // wall-clock is the one nondeterministic field; pin it
+            if let Json::Obj(m) = &mut v {
+                if m.contains_key("secs") {
+                    m.insert("secs".to_string(), Json::Num(0.0));
+                }
+            }
+            pinned.push_str(&v.to_string_compact());
+            pinned.push('\n');
+        }
+    }
+    let want = include_str!("golden/sweep_events.jsonl");
+    assert_eq!(
+        pinned, want,
+        "sweep JSONL event schema drifted — update rust/tests/golden/sweep_events.jsonl \
+         deliberately (downstream consumers parse these lines)"
+    );
+    // the full stream is well-formed: every line has a reason, the job
+    // finished ok, and both variants produced eval results
+    let mut evals = 0;
+    let mut finished_ok = false;
+    for line in text.lines() {
+        let v = Json::parse(line).unwrap();
+        let reason = v.get("reason").unwrap().as_str().unwrap().to_string();
+        if reason == "eval-result" {
+            assert_eq!(v.get("dataset").unwrap().as_str().unwrap(), "synth-wiki");
+            evals += 1;
+        }
+        if reason == "job-finished" {
+            finished_ok = matches!(v.get("ok").unwrap(), Json::Bool(true));
+        }
+    }
+    assert_eq!(evals, 2, "one perplexity row per variant");
+    assert!(finished_ok);
+}

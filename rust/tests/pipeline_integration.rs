@@ -1,205 +1,246 @@
 //! Integration tests over the full coordinator pipeline on the `nano`
-//! config: real artifacts, real calibration data, end-to-end invariants.
-//! Skipped (trivially pass) when artifacts or data have not been built.
+//! config: real calibration data, end-to-end invariants.
+//!
+//! Every test runs on the pure-Rust reference backend (always available —
+//! these are the paper's e2e claims, executed in CI on every push), and
+//! additionally on the PJRT backend when compiled artifacts are present.
 
-use sparsegpt::coordinator::{
-    CalibChunks, PruneMethod, PruneOptions, Pruner, SkipSpec,
-};
-use sparsegpt::data::corpus::{gen_corpus, CorpusStyle, Lexicon};
-use sparsegpt::data::{Dataset, Tokenizer};
+use sparsegpt::coordinator::{CalibChunks, PruneMethod, PruneOptions, Pruner, SkipSpec};
+use sparsegpt::data::Dataset;
 use sparsegpt::eval::perplexity;
 use sparsegpt::model::init::init_params;
 use sparsegpt::model::layout::{FlatParams, LinearKind, PRUNABLE_KINDS};
 use sparsegpt::model::stats::ModelStats;
 use sparsegpt::model::ModelCfg;
-use sparsegpt::runtime::Runtime;
+use sparsegpt::runtime::{Backend, ReferenceBackend, Runtime};
 use sparsegpt::solver::sparsegpt_ref::Pattern;
 use sparsegpt::util::prng::Rng;
 
-// The PJRT client is not Sync (Rc internals), so each test builds its own
-// Runtime; nano artifacts compile in well under a second each.
-fn runtime() -> Option<Runtime> {
+/// The backends to exercise: the reference interpreter always; the PJRT
+/// runtime when `make artifacts` has run. (The PJRT client is not Sync, so
+/// each test builds its own instances.)
+fn backends() -> Vec<Box<dyn Backend>> {
+    let mut v: Vec<Box<dyn Backend>> = vec![Box::new(ReferenceBackend::new())];
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(dir).join("manifest.json").exists() {
-        eprintln!("artifacts not built; skipping");
-        return None;
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        v.push(Box::new(Runtime::with_dir(dir).expect("runtime")));
     }
-    Some(Runtime::with_dir(dir).expect("runtime"))
+    v
 }
 
-/// A small self-contained workload: fresh nano params + synthetic calib.
-fn setup(rt: &Runtime) -> (ModelCfg, FlatParams, CalibChunks, Dataset) {
-    let cfg = rt.manifest.config("nano").unwrap().clone();
+/// The shared corpus fixture — the exact corpus the CLI's zero-setup
+/// fallback uses (seed-fixed, backend-independent), generated once per test
+/// binary instead of once per test per backend.
+fn calib_corpus() -> &'static Dataset {
+    static CORPUS: std::sync::OnceLock<Dataset> = std::sync::OnceLock::new();
+    CORPUS.get_or_init(sparsegpt::harness::synthetic_calibration_corpus)
+}
+
+/// A small self-contained workload: fresh nano params + synthetic calib
+/// (8 segments = one chunk — enough signal, CI-friendly on the interpreter).
+fn setup(rt: &dyn Backend) -> (ModelCfg, FlatParams, CalibChunks, &'static Dataset) {
+    let cfg = rt.config("nano").unwrap();
     let params = init_params(&cfg, 42);
-    let lex = Lexicon::new(0);
-    let text = gen_corpus(&lex, CorpusStyle::C4, 5, 400_000);
-    let tok = Tokenizer::train(&text[..100_000]);
-    let ds = Dataset::from_text("calib", &tok, &text);
+    let ds = calib_corpus();
     let mut rng = Rng::new(0);
-    let segs = ds.calibration_segments(&mut rng, 16, cfg.seq).unwrap();
+    let segs = ds.calibration_segments(&mut rng, 8, cfg.seq).unwrap();
     let chunks = CalibChunks::new(&cfg, &segs).unwrap();
     (cfg, params, chunks, ds)
 }
 
 #[test]
 fn pipeline_prunes_to_exact_density_and_runs() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
-    let (_cfg, params, chunks, ds) = setup(rt);
-    let opts = PruneOptions {
-        method: PruneMethod::SparseGpt { pattern: Pattern::Unstructured(0.5), quant_bits: None },
-        ..Default::default()
-    };
-    let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
-    let s = out.overall_sparsity();
-    assert!((s - 0.5).abs() < 0.01, "sparsity {s}");
-    // every matrix individually close to 50%
-    for r in &out.reports {
-        assert!(!r.skipped);
-        assert!((r.sparsity - 0.5).abs() < 0.02, "{:?} {}", r.kind, r.sparsity);
+    for be in backends() {
+        let rt = be.as_ref();
+        let (_cfg, params, chunks, ds) = setup(rt);
+        let opts = PruneOptions {
+            method: PruneMethod::SparseGpt {
+                pattern: Pattern::Unstructured(0.5),
+                quant_bits: None,
+            },
+            ..Default::default()
+        };
+        let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
+        let s = out.overall_sparsity();
+        assert!((s - 0.5).abs() < 0.01, "[{}] sparsity {s}", rt.name());
+        // every matrix individually close to 50%
+        for r in &out.reports {
+            assert!(!r.skipped);
+            assert!((r.sparsity - 0.5).abs() < 0.02, "[{}] {:?} {}", rt.name(), r.kind, r.sparsity);
+        }
+        // embeddings untouched
+        assert_eq!(
+            out.params.region("tok_embed").unwrap(),
+            params.region("tok_embed").unwrap()
+        );
+        // the pruned model still produces finite perplexity
+        let ppl = perplexity(rt, &out.params, ds, 4).unwrap();
+        assert!(ppl.ppl.is_finite() && ppl.ppl > 1.0, "[{}] ppl {}", rt.name(), ppl.ppl);
     }
-    // embeddings untouched
-    assert_eq!(out.params.region("tok_embed").unwrap(), params.region("tok_embed").unwrap());
-    // the pruned model still produces finite perplexity
-    let ppl = perplexity(rt, &out.params, &ds, 8).unwrap();
-    assert!(ppl.ppl.is_finite() && ppl.ppl > 1.0);
 }
 
 #[test]
 fn pipeline_nm_patterns_validate() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
-    let (_cfg, params, chunks, _ds) = setup(rt);
-    for (n, m) in [(2usize, 4usize), (4, 8)] {
-        let opts = PruneOptions {
-            method: PruneMethod::SparseGpt { pattern: Pattern::NM(n, m), quant_bits: None },
-            ..Default::default()
-        };
-        let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
-        let stats = ModelStats::collect_nm(&out.params, Some((n, m)));
-        assert_eq!(stats.total_nm_violations(), 0, "{n}:{m}");
-        assert!((stats.overall_sparsity() - 0.5).abs() < 1e-6);
+    for be in backends() {
+        let rt = be.as_ref();
+        let (_cfg, params, chunks, _ds) = setup(rt);
+        for (n, m) in [(2usize, 4usize), (4, 8)] {
+            let opts = PruneOptions {
+                method: PruneMethod::SparseGpt { pattern: Pattern::NM(n, m), quant_bits: None },
+                ..Default::default()
+            };
+            let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
+            let stats = ModelStats::collect_nm(&out.params, Some((n, m)));
+            assert_eq!(stats.total_nm_violations(), 0, "[{}] {n}:{m}", rt.name());
+            assert!((stats.overall_sparsity() - 0.5).abs() < 1e-6);
+        }
     }
 }
 
 #[test]
 fn pipeline_skip_policy_leaves_layers_dense() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
-    let (cfg, params, chunks, _ds) = setup(rt);
-    let opts = PruneOptions {
-        method: PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: None },
-        skip: SkipSpec::LayerType("fc2".into()),
-        ..Default::default()
-    };
-    let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
-    for l in 0..cfg.layers {
-        let fc2_new = out.params.get_linear(LinearKind::Fc2, l).unwrap();
-        let fc2_old = params.get_linear(LinearKind::Fc2, l).unwrap();
-        assert_eq!(fc2_new, fc2_old, "fc2 must be untouched");
-        let q = out.params.get_linear(LinearKind::Wq, l).unwrap();
-        assert!(q.sparsity() > 0.4, "wq must be pruned");
+    for be in backends() {
+        let rt = be.as_ref();
+        let (cfg, params, chunks, _ds) = setup(rt);
+        let opts = PruneOptions {
+            method: PruneMethod::SparseGpt { pattern: Pattern::NM(2, 4), quant_bits: None },
+            skip: SkipSpec::LayerType("fc2".into()),
+            ..Default::default()
+        };
+        let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
+        for l in 0..cfg.layers {
+            let fc2_new = out.params.get_linear(LinearKind::Fc2, l).unwrap();
+            let fc2_old = params.get_linear(LinearKind::Fc2, l).unwrap();
+            assert_eq!(fc2_new, fc2_old, "[{}] fc2 must be untouched", rt.name());
+            let q = out.params.get_linear(LinearKind::Wq, l).unwrap();
+            assert!(q.sparsity() > 0.4, "[{}] wq must be pruned", rt.name());
+        }
     }
 }
 
 #[test]
 fn pipeline_sparsegpt_beats_magnitude_on_calibration_metric() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
-    let (_cfg, params, chunks, _ds) = setup(rt);
-    // record layer errors for both methods; SparseGPT must win on (almost)
-    // every matrix — this is the reconstruction guarantee
-    let run = |method: PruneMethod| {
-        let opts = PruneOptions { method, record_errors: true, ..Default::default() };
-        Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap()
-    };
-    let sgpt = run(PruneMethod::SparseGpt {
-        pattern: Pattern::Unstructured(0.5),
-        quant_bits: None,
-    });
-    let mag = run(PruneMethod::Magnitude { pattern: Pattern::Unstructured(0.5) });
-    let mut wins = 0;
-    let mut total = 0;
-    for (a, b) in sgpt.reports.iter().zip(&mag.reports) {
-        // the magnitude run's Hessians differ slightly after the first
-        // pruned block (activations diverge); layer 0 comparisons are exact
-        if let (Some(ea), Some(eb)) = (a.sq_error, b.sq_error) {
-            total += 1;
-            if ea <= eb {
-                wins += 1;
+    for be in backends() {
+        let rt = be.as_ref();
+        let (_cfg, params, chunks, _ds) = setup(rt);
+        // record layer errors for both methods; SparseGPT must win on
+        // (almost) every matrix — this is the reconstruction guarantee
+        let run = |method: PruneMethod| {
+            let opts = PruneOptions { method, record_errors: true, ..Default::default() };
+            Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap()
+        };
+        let sgpt = run(PruneMethod::SparseGpt {
+            pattern: Pattern::Unstructured(0.5),
+            quant_bits: None,
+        });
+        let mag = run(PruneMethod::Magnitude { pattern: Pattern::Unstructured(0.5) });
+        let mut wins = 0;
+        let mut total = 0;
+        for (a, b) in sgpt.reports.iter().zip(&mag.reports) {
+            // the magnitude run's Hessians differ slightly after the first
+            // pruned block (activations diverge); layer-0 comparisons are
+            // exact
+            if let (Some(ea), Some(eb)) = (a.sq_error, b.sq_error) {
+                total += 1;
+                if ea <= eb {
+                    wins += 1;
+                }
             }
         }
+        assert!(total >= 12, "[{}] only {total} comparisons", rt.name());
+        assert!(wins * 10 >= total * 9, "[{}] sparsegpt won only {wins}/{total}", rt.name());
     }
-    assert!(total >= 12);
-    assert!(wins * 10 >= total * 9, "sparsegpt won only {wins}/{total}");
 }
 
 #[test]
 fn pipeline_quantization_grid_respected() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
-    let (cfg, params, chunks, _ds) = setup(rt);
-    let opts = PruneOptions {
-        method: PruneMethod::SparseGpt {
-            pattern: Pattern::Unstructured(0.5),
-            quant_bits: Some(4),
-        },
-        ..Default::default()
-    };
-    let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
-    // kept weights take at most 2^4 distinct values per row
-    for kind in PRUNABLE_KINDS {
-        let w = out.params.get_linear(kind, 0).unwrap();
-        for r in 0..w.rows().min(8) {
-            let mut vals: Vec<f32> =
-                w.row(r).iter().cloned().filter(|&v| v != 0.0).collect();
-            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            vals.dedup_by(|a, b| (*a - *b).abs() < 1e-7);
-            assert!(vals.len() <= 16, "{kind:?} row {r}: {} levels", vals.len());
+    for be in backends() {
+        let rt = be.as_ref();
+        let (_cfg, params, chunks, _ds) = setup(rt);
+        let opts = PruneOptions {
+            method: PruneMethod::SparseGpt {
+                pattern: Pattern::Unstructured(0.5),
+                quant_bits: Some(4),
+            },
+            ..Default::default()
+        };
+        let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
+        // kept weights take at most 2^4 distinct values per row
+        for kind in PRUNABLE_KINDS {
+            let w = out.params.get_linear(kind, 0).unwrap();
+            for r in 0..w.rows().min(8) {
+                let mut vals: Vec<f32> =
+                    w.row(r).iter().cloned().filter(|&v| v != 0.0).collect();
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                vals.dedup_by(|a, b| (*a - *b).abs() < 1e-7);
+                assert!(
+                    vals.len() <= 16,
+                    "[{}] {kind:?} row {r}: {} levels",
+                    rt.name(),
+                    vals.len()
+                );
+            }
         }
     }
-    let _ = cfg;
 }
 
 #[test]
 fn pipeline_adaprune_runs_and_prunes() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
-    let (_cfg, params, chunks, _ds) = setup(rt);
-    let opts = PruneOptions {
-        method: PruneMethod::AdaPrune { sparsity: 0.5 },
-        record_errors: true,
-        ..Default::default()
-    };
-    let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
-    assert!((out.overall_sparsity() - 0.5).abs() < 0.01);
-    // AdaPrune must also beat plain magnitude on layer error (it
-    // reconstructs on the same magnitude mask)
-    let mag = Pruner::new(rt)
-        .prune(
-            params.clone(),
-            &chunks,
-            &PruneOptions {
-                method: PruneMethod::Magnitude { pattern: Pattern::Unstructured(0.5) },
-                record_errors: true,
-                ..Default::default()
-            },
-        )
-        .unwrap();
-    let (a0, m0) = (
-        out.reports[0].sq_error.unwrap(),
-        mag.reports[0].sq_error.unwrap(),
-    );
-    assert!(a0 <= m0 * 1.001, "adaprune {a0} vs magnitude {m0}");
+    for be in backends() {
+        let rt = be.as_ref();
+        let (_cfg, params, chunks, _ds) = setup(rt);
+        let opts = PruneOptions {
+            method: PruneMethod::AdaPrune { sparsity: 0.5 },
+            record_errors: true,
+            ..Default::default()
+        };
+        let out = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
+        assert!((out.overall_sparsity() - 0.5).abs() < 0.01, "[{}]", rt.name());
+        // AdaPrune must also beat plain magnitude on layer error (it
+        // reconstructs on the same magnitude mask)
+        let mag = Pruner::new(rt)
+            .prune(
+                params.clone(),
+                &chunks,
+                &PruneOptions {
+                    method: PruneMethod::Magnitude { pattern: Pattern::Unstructured(0.5) },
+                    record_errors: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let (a0, m0) = (
+            out.reports[0].sq_error.unwrap(),
+            mag.reports[0].sq_error.unwrap(),
+        );
+        assert!(a0 <= m0 * 1.001, "[{}] adaprune {a0} vs magnitude {m0}", rt.name());
+    }
 }
 
 #[test]
 fn pipeline_deterministic_given_seed() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
+    for be in backends() {
+        let rt = be.as_ref();
+        let (_cfg, params, chunks, _ds) = setup(rt);
+        let opts = PruneOptions::default();
+        let a = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
+        let b = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
+        assert_eq!(a.params.data, b.params.data, "[{}]", rt.name());
+    }
+}
+
+/// The reference backend also executes the Fig-10 mask-blocksize ablation
+/// variants (open vocabulary — any Bs), which PJRT only lowers for `small`.
+#[test]
+fn pipeline_bs_ablation_runs_on_reference() {
+    let be = ReferenceBackend::new();
+    let rt: &dyn Backend = &be;
     let (_cfg, params, chunks, _ds) = setup(rt);
-    let opts = PruneOptions::default();
-    let a = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
-    let b = Pruner::new(rt).prune(params.clone(), &chunks, &opts).unwrap();
-    assert_eq!(a.params.data, b.params.data);
+    let opts = PruneOptions {
+        method: PruneMethod::SparseGptBs { sparsity: 0.5, mask_blocksize: 16 },
+        ..Default::default()
+    };
+    let out = Pruner::new(rt).prune(params, &chunks, &opts).unwrap();
+    let s = out.overall_sparsity();
+    assert!((s - 0.5).abs() < 0.01, "sparsity {s}");
 }

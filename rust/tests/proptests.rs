@@ -154,6 +154,58 @@ fn prop_sparse_engines_match_dense() {
     }
 }
 
+/// Property: the CSR and n:m sparse kernels (both the vectorized and the
+/// gather variants) agree with the dense GEMM and the blocked `matmul` on
+/// ARBITRARY masks — random Bernoulli patterns of every density and
+/// randomly-chosen n:m survivors, not just magnitude-selected ones.
+#[test]
+fn prop_sparse_kernels_match_dense_on_arbitrary_masks() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x1A0);
+        let o = 4 + 4 * rng.below(10);
+        let k = 8 * (1 + rng.below(6)); // divisible by 4 and 8 for n:m
+        let t = 1 + rng.below(10);
+        let density = rng.f64();
+        let mut w = Tensor::new(vec![o, k], (0..o * k).map(|_| rng.normal_f32()).collect());
+        for x in w.data_mut() {
+            if rng.f64() >= density {
+                *x = 0.0; // arbitrary unstructured mask (incl. empty rows)
+            }
+        }
+        let x = Tensor::new(vec![t, k], (0..t * k).map(|_| rng.normal_f32()).collect());
+        let yd = dense_layer(&x, &w);
+        let ymm = x.matmul(&w.transpose2());
+        let csr = CsrMatrix::from_dense(&w);
+        for (label, y) in [("csr", csr.layer(&x)), ("csr-gather", csr.layer_gather(&x))] {
+            for ((a, b), c) in y.data().iter().zip(yd.data()).zip(ymm.data()) {
+                assert!((a - b).abs() < 1e-3, "{label} vs dense, seed {seed}");
+                assert!((a - c).abs() < 1e-3, "{label} vs matmul, seed {seed}");
+            }
+        }
+        // n:m with randomly chosen survivors per group (not magnitude)
+        for (n, m) in [(2usize, 4usize), (4, 8)] {
+            let mut wnm = w.clone();
+            for r in 0..o {
+                let row = wnm.row_mut(r);
+                for g in (0..k).step_by(m) {
+                    let mut idx: Vec<usize> = (0..m).collect();
+                    rng.shuffle(&mut idx);
+                    for &j in &idx[n..] {
+                        row[g + j] = 0.0; // keep exactly n random slots
+                    }
+                }
+            }
+            let ydn = dense_layer(&x, &wnm);
+            let nm = NmMatrix::from_dense(&wnm, n, m).unwrap();
+            for (label, y) in [("nm", nm.layer(&x)), ("nm-gather", nm.layer_gather(&x))] {
+                for (a, b) in y.data().iter().zip(ydn.data()) {
+                    assert!((a - b).abs() < 1e-3, "{label} {n}:{m}, seed {seed}");
+                }
+            }
+        }
+    }
+}
+
 /// Property: tokenizer round-trips arbitrary byte strings.
 #[test]
 fn prop_tokenizer_roundtrip() {
