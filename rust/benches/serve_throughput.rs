@@ -1,0 +1,153 @@
+//! Serve throughput: end-to-end tokens/sec of the continuous-batching
+//! decode engine — dense vs CSR (50% / 60% unstructured) vs 2:4 packed —
+//! the serving-side counterpart of Table 7/8's kernel-level speedups.
+//! Runtime depends only on shape + sparsity pattern, so the workload runs
+//! on seed-0 random weights and needs no artifacts, data or checkpoints.
+//!
+//! Writes `BENCH_serve.json` (repo root + a copy under `reports/`) so the
+//! bench trajectory is machine-readable:
+//!   { "bench": "serve_throughput", "config": ..., "rows": [
+//!       { "variant": "csr-60%", "density": ..., "tokens": ...,
+//!         "decode_secs": ..., "tokens_per_sec": ..., "speedup": ... }, ...] }
+//!
+//! Env knobs: SPARSEGPT_BENCH_CONFIGS (default "small"),
+//! SPARSEGPT_BENCH_SERVE_REQUESTS (8), SPARSEGPT_BENCH_SERVE_TOKENS (8).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+use sparsegpt::bench::{env_configs, env_usize};
+use sparsegpt::eval::report::Table;
+use sparsegpt::model::init::init_params;
+use sparsegpt::model::layout::{FlatParams, PRUNABLE_KINDS};
+use sparsegpt::model::ModelCfg;
+use sparsegpt::serve::{
+    EngineOptions, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel,
+};
+use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+use sparsegpt::sparse::{PackFormat, PackPolicy};
+use sparsegpt::tensor::Tensor;
+use sparsegpt::util::json::Json;
+use sparsegpt::util::prng::Rng;
+
+fn prune_all(dense: &FlatParams, f: impl Fn(&Tensor) -> Tensor) -> FlatParams {
+    let mut fp = dense.clone();
+    for layer in 0..fp.cfg.layers {
+        for kind in PRUNABLE_KINDS {
+            let w = fp.get_linear(kind, layer).unwrap();
+            fp.set_linear(kind, layer, &f(&w)).unwrap();
+        }
+    }
+    fp
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn main() -> Result<()> {
+    let config = env_configs(&["small"]).remove(0);
+    let cfg = ModelCfg::builtin(&config)
+        .ok_or_else(|| anyhow!("unknown config {config:?} (expected nano..large)"))?;
+    let requests = env_usize("SPARSEGPT_BENCH_SERVE_REQUESTS", 8);
+    let tokens = env_usize("SPARSEGPT_BENCH_SERVE_TOKENS", 8);
+    let dense = init_params(&cfg, 0);
+
+    // one shared synthetic workload: full batch from step 0, greedy
+    // sampling, so every variant decodes an identical schedule
+    let workload = || -> Vec<(usize, ServeRequest)> {
+        let mut rng = Rng::new(7);
+        (0..requests)
+            .map(|i| {
+                let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
+                (0, ServeRequest { id: i as u64, prompt, max_new_tokens: tokens, seed: i as u64 })
+            })
+            .collect()
+    };
+    let batch = requests.max(1);
+    let opts = EngineOptions {
+        policy: SchedulerPolicy { max_batch: batch, max_wait: 0, queue_cap: batch },
+        temperature: 0.0,
+        top_k: 0,
+    };
+
+    let variants: Vec<(&str, FlatParams, PackFormat)> = vec![
+        ("dense", dense.clone(), PackFormat::Dense),
+        ("csr-50%", prune_all(&dense, |w| magnitude_prune(w, 0.5).0), PackFormat::Csr),
+        ("csr-60%", prune_all(&dense, |w| magnitude_prune(w, 0.6).0), PackFormat::Csr),
+        ("nm-2:4", prune_all(&dense, |w| magnitude_prune_nm(w, 2, 4).0), PackFormat::Nm(2, 4)),
+    ];
+
+    println!(
+        "serve_throughput: {config}, {requests} requests x {tokens} tokens, batch {requests}"
+    );
+    let mut table = Table::new(
+        &format!("serve throughput ({config}, {requests} req x {tokens} tok)"),
+        &["variant", "density", "tokens", "decode s", "tok/s", "speedup"],
+    );
+    let mut rows = Vec::new();
+    let mut dense_tps = 0.0f64;
+    for (label, params, fmt) in &variants {
+        let model = SparseModel::from_params(params, &PackPolicy::with_format(*fmt))?;
+        // warmup step keeps first-touch allocation out of the timing
+        let _ = ServeEngine::new(&model, opts).run(
+            {
+                let mut w = workload();
+                w.truncate(1);
+                for (_, r) in w.iter_mut() {
+                    r.max_new_tokens = 1;
+                }
+                w
+            },
+            &mut |_| {},
+        )?;
+        let out = ServeEngine::new(&model, opts).run(workload(), &mut |_| {})?;
+        let tps = out.tokens_per_sec();
+        if *label == "dense" {
+            dense_tps = tps;
+        }
+        let speedup = if dense_tps > 0.0 { tps / dense_tps } else { 1.0 };
+        println!(
+            "  {label:<8} density {:.3}  {} tok in {:.3}s -> {tps:.1} tok/s ({speedup:.2}x)",
+            model.density(),
+            out.tokens,
+            out.decode_secs
+        );
+        table.row(vec![
+            label.to_string(),
+            format!("{:.3}", model.density()),
+            out.tokens.to_string(),
+            format!("{:.3}", out.decode_secs),
+            format!("{tps:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(obj(vec![
+            ("variant", Json::Str(label.to_string())),
+            ("density", Json::Num(model.density())),
+            ("tokens", Json::Num(out.tokens as f64)),
+            ("decode_secs", Json::Num(out.decode_secs)),
+            ("tokens_per_sec", Json::Num(tps)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    let report_dir = std::env::var_os("SPARSEGPT_REPORTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| "reports".into());
+    std::fs::create_dir_all(&report_dir)?;
+    print!("{}", table.render());
+    table.save(&report_dir, "serve_throughput")?;
+    let doc = obj(vec![
+        ("bench", Json::Str("serve_throughput".into())),
+        ("config", Json::Str(config.clone())),
+        ("requests", Json::Num(requests as f64)),
+        ("max_new_tokens", Json::Num(tokens as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let text = doc.to_string_pretty();
+    std::fs::write("BENCH_serve.json", &text)?;
+    std::fs::write(report_dir.join("BENCH_serve.json"), &text)?;
+    println!("(saved BENCH_serve.json + reports/serve_throughput.txt/.csv)");
+    Ok(())
+}

@@ -60,6 +60,40 @@ pub enum Event {
         total: usize,
         label: String,
     },
+    /// a packed sparse checkpoint (`.spkt`) was written
+    CheckpointPacked {
+        path: String,
+        bytes: u64,
+        density: f64,
+        /// "csr:10 dense:2"-style per-format matrix counts
+        formats: String,
+    },
+    /// a serve request entered the bounded queue
+    RequestEnqueued {
+        id: u64,
+        step: usize,
+        prompt_tokens: usize,
+        max_new_tokens: usize,
+    },
+    /// queued requests joined the decode batch
+    BatchFormed {
+        step: usize,
+        joined: usize,
+        batch: usize,
+    },
+    /// a serve request finished (token budget reached) and retired
+    RequestFinished {
+        id: u64,
+        step: usize,
+        tokens: usize,
+    },
+    /// the serve engine drained its workload
+    EngineDrained {
+        steps: usize,
+        requests: usize,
+        tokens: usize,
+        tokens_per_sec: f64,
+    },
     /// the job finished (ok or failed)
     JobFinished { job: String, ok: bool, secs: f64 },
 }
@@ -105,6 +139,11 @@ impl Event {
             Event::EvalResult { .. } => "eval-result",
             Event::ZeroShotResult { .. } => "zeroshot-result",
             Event::SweepVariant { .. } => "sweep-variant",
+            Event::CheckpointPacked { .. } => "checkpoint-packed",
+            Event::RequestEnqueued { .. } => "request-enqueued",
+            Event::BatchFormed { .. } => "batch-formed",
+            Event::RequestFinished { .. } => "request-finished",
+            Event::EngineDrained { .. } => "engine-drained",
             Event::JobFinished { .. } => "job-finished",
         }
     }
@@ -163,6 +202,39 @@ impl Event {
                 ("index", n(*index as f64)),
                 ("total", n(*total as f64)),
                 ("label", s(label)),
+            ]),
+            Event::CheckpointPacked { path, bytes, density, formats } => obj(vec![
+                reason,
+                ("path", s(path)),
+                ("bytes", n(*bytes as f64)),
+                ("density", n(*density)),
+                ("formats", s(formats)),
+            ]),
+            Event::RequestEnqueued { id, step, prompt_tokens, max_new_tokens } => obj(vec![
+                reason,
+                ("id", n(*id as f64)),
+                ("step", n(*step as f64)),
+                ("prompt_tokens", n(*prompt_tokens as f64)),
+                ("max_new_tokens", n(*max_new_tokens as f64)),
+            ]),
+            Event::BatchFormed { step, joined, batch } => obj(vec![
+                reason,
+                ("step", n(*step as f64)),
+                ("joined", n(*joined as f64)),
+                ("batch", n(*batch as f64)),
+            ]),
+            Event::RequestFinished { id, step, tokens } => obj(vec![
+                reason,
+                ("id", n(*id as f64)),
+                ("step", n(*step as f64)),
+                ("tokens", n(*tokens as f64)),
+            ]),
+            Event::EngineDrained { steps, requests, tokens, tokens_per_sec } => obj(vec![
+                reason,
+                ("steps", n(*steps as f64)),
+                ("requests", n(*requests as f64)),
+                ("tokens", n(*tokens as f64)),
+                ("tokens_per_sec", n(*tokens_per_sec)),
             ]),
             Event::JobFinished { job, ok, secs } => obj(vec![
                 reason,
@@ -235,6 +307,28 @@ impl EventSink for HumanSink {
             Event::SweepVariant { index, total, label } => {
                 println!("[{}] variant {}/{total}: {label}", self.tag("sweep"), *index + 1)
             }
+            Event::CheckpointPacked { path, bytes, density, formats } => println!(
+                "[{}] packed -> {path} ({bytes} bytes, density {density:.3}, {formats})",
+                self.tag("pack")
+            ),
+            Event::RequestEnqueued { id, step, prompt_tokens, max_new_tokens } => println!(
+                "[{}] step {step}: request {id} enqueued ({prompt_tokens} prompt, \
+                 {max_new_tokens} max tokens)",
+                self.tag("serve")
+            ),
+            Event::BatchFormed { step, joined, batch } => println!(
+                "[{}] step {step}: +{joined} joined, batch {batch}",
+                self.tag("serve")
+            ),
+            Event::RequestFinished { id, step, tokens } => println!(
+                "[{}] step {step}: request {id} finished ({tokens} tokens)",
+                self.tag("serve")
+            ),
+            Event::EngineDrained { steps, requests, tokens, tokens_per_sec } => println!(
+                "[{}] drained: {requests} requests, {tokens} tokens in {steps} steps \
+                 ({tokens_per_sec:.1} tok/s)",
+                self.tag("serve")
+            ),
             Event::JobFinished { .. } => {}
         }
     }
@@ -310,6 +404,16 @@ mod tests {
             Event::EvalResult { dataset: "synth-wiki".into(), ppl: 12.5, tokens: 64 },
             Event::ZeroShotResult { task: "cloze".into(), accuracy: 0.5 },
             Event::SweepVariant { index: 0, total: 1, label: "sparsegpt-50%".into() },
+            Event::CheckpointPacked {
+                path: "c.spkt".into(),
+                bytes: 1024,
+                density: 0.5,
+                formats: "csr:12".into(),
+            },
+            Event::RequestEnqueued { id: 0, step: 0, prompt_tokens: 8, max_new_tokens: 16 },
+            Event::BatchFormed { step: 1, joined: 2, batch: 2 },
+            Event::RequestFinished { id: 0, step: 17, tokens: 16 },
+            Event::EngineDrained { steps: 20, requests: 2, tokens: 32, tokens_per_sec: 64.0 },
             Event::JobFinished { job: "prune".into(), ok: true, secs: 2.0 },
         ]
     }

@@ -2,8 +2,8 @@
 //! system can run.
 //!
 //! * [`JobSpec`] — what to run, as data: `GenData`, `Train`, `Prune`,
-//!   `Eval`, `ZeroShot`, `Stats`, `Generate`, `E2e`, `Sweep`, with builder
-//!   constructors and string round-tripping
+//!   `Eval`, `ZeroShot`, `Stats`, `Generate`, `E2e`, `Sweep`, `Serve`,
+//!   with builder constructors and string round-tripping
 //!   (`PruneSpec::parse("sparsegpt-2:4+4bit")` ↔ `label()`).
 //! * [`Session`] — owns the [`crate::harness::Workspace`] (and through it
 //!   the PJRT runtime), resolves checkpoints, and executes specs.
@@ -35,12 +35,13 @@ mod spec;
 pub use events::{Event, EventSink, HumanSink, JsonlSink, MemorySink, NullSink};
 pub use report::{
     E2eReport, EvalReport, EvalRow, GenDataReport, GenerateReport, JobReport, PruneReport,
-    StatsReport, SweepReport, TrainReport, VariantResult, ZeroShotReport,
+    ServeReport, ServeRequestRow, StatsReport, SweepReport, TrainReport, VariantResult,
+    ZeroShotReport,
 };
 pub use session::Session;
 pub use spec::{
-    E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, JobSpec, PruneJobSpec, PruneSpec, StatsSpec,
-    SweepSpec, TrainSpec, ZeroShotSpec,
+    E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, JobSpec, PruneJobSpec, PruneSpec, ServeSpec,
+    StatsSpec, SweepSpec, TrainSpec, ZeroShotSpec,
 };
 
 pub(crate) use session::prune_params;

@@ -37,6 +37,8 @@ pub struct PruneReport {
     pub propagate_secs: f64,
     pub matrices: Vec<MatrixReport>,
     pub saved_to: Option<PathBuf>,
+    /// where the packed sparse checkpoint (`.spkt`) went, with `--pack`
+    pub packed_to: Option<PathBuf>,
     /// the compressed model
     pub params: FlatParams,
 }
@@ -109,6 +111,36 @@ pub struct E2eReport {
     pub sweep: SweepReport,
 }
 
+/// One retired request of a serve run.
+#[derive(Clone, Debug)]
+pub struct ServeRequestRow {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    /// generated token ids
+    pub tokens: Vec<i32>,
+    pub joined_step: usize,
+    pub finished_step: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub config: String,
+    /// compression the served weights came from (prune-spec label)
+    pub label: String,
+    /// "csr:10 dense:2"-style pack summary
+    pub formats: String,
+    /// density over the packed prunable weights
+    pub density: f64,
+    pub steps: usize,
+    pub tokens: usize,
+    /// wall time inside batched decode steps
+    pub decode_secs: f64,
+    pub tokens_per_sec: f64,
+    pub requests: Vec<ServeRequestRow>,
+    /// where the packed checkpoint was written, when requested
+    pub packed_to: Option<PathBuf>,
+}
+
 /// The result of one executed [`crate::api::JobSpec`].
 #[derive(Clone, Debug)]
 pub enum JobReport {
@@ -121,6 +153,7 @@ pub enum JobReport {
     Generate(GenerateReport),
     E2e(E2eReport),
     Sweep(SweepReport),
+    Serve(ServeReport),
 }
 
 impl JobReport {
@@ -169,6 +202,13 @@ impl JobReport {
     pub fn into_generate(self) -> Option<GenerateReport> {
         match self {
             JobReport::Generate(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_serve(self) -> Option<ServeReport> {
+        match self {
+            JobReport::Serve(r) => Some(r),
             _ => None,
         }
     }

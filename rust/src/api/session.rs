@@ -11,11 +11,12 @@ use anyhow::Result;
 use crate::api::events::{Event, EventSink};
 use crate::api::report::{
     E2eReport, EvalReport, EvalRow, GenDataReport, GenerateReport, JobReport, PruneReport,
-    StatsReport, SweepReport, TrainReport, VariantResult, ZeroShotReport,
+    ServeReport, ServeRequestRow, StatsReport, SweepReport, TrainReport, VariantResult,
+    ZeroShotReport,
 };
 use crate::api::spec::{
-    E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, JobSpec, PruneJobSpec, PruneSpec, StatsSpec,
-    SweepSpec, TrainSpec, ZeroShotSpec,
+    E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, JobSpec, PruneJobSpec, PruneSpec, ServeSpec,
+    StatsSpec, SweepSpec, TrainSpec, ZeroShotSpec,
 };
 use crate::coordinator::{
     CalibChunks, PipelineEvent, PruneOptions, Pruner, SkipSpec, TrainEvent, TrainOptions, Trainer,
@@ -29,8 +30,14 @@ use crate::harness::{generate_data_with, Workspace, CALIB_SET, EVAL_SETS};
 use crate::model::checkpoint::Checkpoint;
 use crate::model::init::init_params;
 use crate::model::layout::FlatParams;
+use crate::model::sparse_store::SparseStore;
 use crate::model::stats::ModelStats;
 use crate::runtime::BackendKind;
+use crate::serve::{
+    EngineOptions, SchedulerPolicy, ServeEngine, ServeEvent, ServeRequest, SparseModel,
+};
+use crate::sparse::PackPolicy;
+use crate::util::prng::Rng;
 
 /// A handle for executing jobs. The workspace (and the execution backend
 /// inside it) opens lazily, so jobs that need neither — `gen-data` — run on
@@ -110,6 +117,7 @@ impl Session {
             JobSpec::Generate(s) => run_generate(ws, s, sink).map(JobReport::Generate),
             JobSpec::E2e(s) => run_e2e(ws, s, sink).map(JobReport::E2e),
             JobSpec::Sweep(s) => run_sweep(ws, s, sink).map(JobReport::Sweep),
+            JobSpec::Serve(s) => run_serve(ws, s, sink).map(JobReport::Serve),
         }
     }
 }
@@ -302,6 +310,7 @@ pub(crate) fn prune_params(
         propagate_secs: outcome.propagate_secs,
         matrices: outcome.reports,
         saved_to: None,
+        packed_to: None,
         params: outcome.params,
     })
 }
@@ -338,7 +347,36 @@ fn run_prune(
         sink.emit(&Event::CheckpointSaved { path: path.display().to_string() });
         report.saved_to = Some(path);
     }
+    if spec.pack {
+        let path = match &spec.pack_out {
+            Some(p) => p.clone(),
+            None => {
+                SparseStore::path_for(&ws.ckpt_dir, &spec.config, &format!("-{}", report.label))
+            }
+        };
+        pack_to(&report.params, &report.label, &PackPolicy::default(), &path, sink)?;
+        report.packed_to = Some(path);
+    }
     Ok(report)
+}
+
+/// Pack + persist a `.spkt` checkpoint, announcing it on the event stream.
+fn pack_to(
+    params: &FlatParams,
+    label: &str,
+    policy: &PackPolicy,
+    path: &std::path::Path,
+    sink: &mut dyn EventSink,
+) -> Result<SparseStore> {
+    let store = SparseStore::pack(params, policy, label)?;
+    let bytes = store.save(path)?;
+    sink.emit(&Event::CheckpointPacked {
+        path: path.display().to_string(),
+        bytes,
+        density: store.density(),
+        formats: store.format_summary(),
+    });
+    Ok(store)
 }
 
 fn run_eval(ws: &Workspace, spec: &EvalSpec, sink: &mut dyn EventSink) -> Result<EvalReport> {
@@ -556,4 +594,139 @@ fn run_e2e(ws: &Workspace, spec: &E2eSpec, sink: &mut dyn EventSink) -> Result<E
         .save(true); // e2e has always left compressed checkpoints behind
     let sweep = run_sweep(ws, &sweep, sink)?;
     Ok(E2eReport { train, sweep })
+}
+
+/// `serve`: obtain a packed sparse model (pre-packed `.spkt`, or
+/// prune → pack — with the zero-setup fallbacks of the prune job), then
+/// drain a synthetic continuous-batching decode workload through the
+/// sparse kernels, narrating the request lifecycle on the event stream.
+fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Result<ServeReport> {
+    let cfg = ws.config(&spec.config)?;
+    let policy = PackPolicy::with_format(spec.format);
+    let (store, label, packed_to) = match &spec.store {
+        Some(path) => {
+            let store = SparseStore::load(path)?;
+            sink.emit(&Event::Message {
+                text: format!(
+                    "[serve {}] packed checkpoint {path:?}: {} (density {:.3}, from {})",
+                    spec.config,
+                    store.format_summary(),
+                    store.density(),
+                    store.source_label
+                ),
+            });
+            let label = store.source_label.clone();
+            (store, label, None)
+        }
+        None => {
+            let (params, initialized) = load_params_or_init(ws, &spec.config, &spec.ckpt, sink)?;
+            let opts = PruneOptions {
+                method: spec.prune.method.clone(),
+                damp: spec.damp,
+                skip: SkipSpec::None,
+                record_errors: false,
+                exact_rows: None,
+            };
+            let chunks = calib_for(ws, &cfg, spec.calib, spec.calib_seed, initialized, sink)?;
+            let pr = prune_params(ws, &spec.config, params, &chunks, &opts, sink)?;
+            match &spec.save_store {
+                Some(path) => {
+                    let store = pack_to(&pr.params, &pr.label, &policy, path, sink)?;
+                    (store, pr.label, Some(path.clone()))
+                }
+                None => {
+                    let store = SparseStore::pack(&pr.params, &policy, &pr.label)?;
+                    sink.emit(&Event::Message {
+                        text: format!(
+                            "[serve {}] packed in-memory: {} (density {:.3})",
+                            spec.config,
+                            store.format_summary(),
+                            store.density()
+                        ),
+                    });
+                    (store, pr.label, None)
+                }
+            }
+        }
+    };
+    let model = SparseModel::from_store(&store, &cfg)?;
+
+    // synthetic workload: seeded prompts, staggered arrivals
+    let mut rng = Rng::new(spec.seed ^ 0x5e21e5);
+    let mut incoming = Vec::with_capacity(spec.requests);
+    for i in 0..spec.requests {
+        let prompt: Vec<i32> =
+            (0..spec.prompt_len.max(1)).map(|_| rng.below(cfg.vocab) as i32).collect();
+        incoming.push((
+            i * spec.arrival_every,
+            ServeRequest {
+                id: i as u64,
+                prompt,
+                max_new_tokens: spec.max_new_tokens.max(1),
+                seed: spec.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            },
+        ));
+    }
+    let opts = EngineOptions {
+        policy: SchedulerPolicy {
+            max_batch: spec.max_batch.max(1),
+            max_wait: spec.max_wait,
+            queue_cap: spec.queue_cap.max(1),
+        },
+        temperature: spec.temperature,
+        top_k: spec.top_k,
+    };
+    let outcome = ServeEngine::new(&model, opts).run(incoming, &mut |ev| {
+        sink.emit(&match ev {
+            ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens } => {
+                Event::RequestEnqueued {
+                    id: *id,
+                    step: *step,
+                    prompt_tokens: *prompt_tokens,
+                    max_new_tokens: *max_new_tokens,
+                }
+            }
+            ServeEvent::BatchFormed { step, joined, batch } => {
+                Event::BatchFormed { step: *step, joined: *joined, batch: *batch }
+            }
+            ServeEvent::Finished { id, step, tokens } => {
+                Event::RequestFinished { id: *id, step: *step, tokens: *tokens }
+            }
+            ServeEvent::Drained { steps, requests, tokens, decode_secs } => Event::EngineDrained {
+                steps: *steps,
+                requests: *requests,
+                tokens: *tokens,
+                tokens_per_sec: if *decode_secs > 0.0 {
+                    *tokens as f64 / *decode_secs
+                } else {
+                    0.0
+                },
+            },
+        });
+    })?;
+
+    let mut requests: Vec<ServeRequestRow> = outcome
+        .finished
+        .iter()
+        .map(|f| ServeRequestRow {
+            id: f.id,
+            prompt_tokens: f.prompt_tokens,
+            tokens: f.tokens.clone(),
+            joined_step: f.joined_step,
+            finished_step: f.finished_step,
+        })
+        .collect();
+    requests.sort_by_key(|r| r.id);
+    Ok(ServeReport {
+        config: spec.config.clone(),
+        label,
+        formats: model.format_summary().to_string(),
+        density: model.density(),
+        steps: outcome.steps,
+        tokens: outcome.tokens,
+        decode_secs: outcome.decode_secs,
+        tokens_per_sec: outcome.tokens_per_sec(),
+        requests,
+        packed_to,
+    })
 }

@@ -20,6 +20,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::{PruneMethod, SkipSpec};
 use crate::harness::DEFAULT_CALIB_SEGMENTS;
 use crate::solver::sparsegpt_ref::Pattern;
+use crate::sparse::PackFormat;
 
 /// A compression method selection, round-trippable through its label.
 #[derive(Clone, Debug, PartialEq)]
@@ -206,6 +207,10 @@ pub struct PruneJobSpec {
     pub out: Option<PathBuf>,
     /// checkpoint suffix; `None` = `-<label>`
     pub suffix: Option<String>,
+    /// also write a packed sparse checkpoint (`.spkt`) for serving
+    pub pack: bool,
+    /// packed-checkpoint path; `None` = `<ckpt-dir>/<config>-<label>.spkt`
+    pub pack_out: Option<PathBuf>,
 }
 
 impl PruneJobSpec {
@@ -222,6 +227,8 @@ impl PruneJobSpec {
             save: false,
             out: None,
             suffix: None,
+            pack: false,
+            pack_out: None,
         }
     }
 }
@@ -398,6 +405,85 @@ impl SweepSpec {
     }
 }
 
+/// `serve`: prune (or load a packed checkpoint) and run a synthetic
+/// continuous-batching decode workload through the sparse kernels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSpec {
+    pub config: String,
+    /// compression applied before packing (ignored with [`ServeSpec::store`])
+    pub prune: PruneSpec,
+    /// packed-checkpoint format policy (auto | dense | csr | n:m)
+    pub format: PackFormat,
+    /// synthetic request count
+    pub requests: usize,
+    /// tokens generated per request
+    pub max_new_tokens: usize,
+    /// synthetic prompt length (token ids)
+    pub prompt_len: usize,
+    /// steps between successive synthetic arrivals (0 = all at once)
+    pub arrival_every: usize,
+    /// decode-batch capacity
+    pub max_batch: usize,
+    /// idle steps to wait for a full batch before a partial launch
+    pub max_wait: usize,
+    /// bounded admission-queue capacity
+    pub queue_cap: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub seed: u64,
+    pub damp: f64,
+    pub calib: usize,
+    pub calib_seed: u64,
+    /// dense checkpoint to prune; `None` = the config's trained checkpoint
+    /// (falling back to seed-0 init on a zero-setup run)
+    pub ckpt: Option<PathBuf>,
+    /// serve an existing packed checkpoint instead of pruning
+    pub store: Option<PathBuf>,
+    /// write the packed checkpoint here after pruning
+    pub save_store: Option<PathBuf>,
+}
+
+impl ServeSpec {
+    pub fn new(config: &str) -> ServeSpec {
+        ServeSpec {
+            config: config.to_string(),
+            prune: PruneSpec::sparsegpt(0.5),
+            format: PackFormat::Auto,
+            requests: 8,
+            max_new_tokens: 16,
+            prompt_len: 8,
+            arrival_every: 1,
+            max_batch: 8,
+            max_wait: 2,
+            queue_cap: 64,
+            temperature: 0.8,
+            top_k: 40,
+            seed: 0,
+            damp: 0.01,
+            calib: 32,
+            calib_seed: 0,
+            ckpt: None,
+            store: None,
+            save_store: None,
+        }
+    }
+
+    pub fn prune(mut self, p: PruneSpec) -> ServeSpec {
+        self.prune = p;
+        self
+    }
+
+    pub fn requests(mut self, n: usize) -> ServeSpec {
+        self.requests = n;
+        self
+    }
+
+    pub fn tokens(mut self, n: usize) -> ServeSpec {
+        self.max_new_tokens = n;
+        self
+    }
+}
+
 /// One job the [`crate::api::Session`] can execute.
 #[derive(Clone, Debug, PartialEq)]
 pub enum JobSpec {
@@ -410,6 +496,7 @@ pub enum JobSpec {
     Generate(GenerateSpec),
     E2e(E2eSpec),
     Sweep(SweepSpec),
+    Serve(ServeSpec),
 }
 
 impl JobSpec {
@@ -425,6 +512,7 @@ impl JobSpec {
             JobSpec::Generate(_) => "generate",
             JobSpec::E2e(_) => "e2e",
             JobSpec::Sweep(_) => "sweep",
+            JobSpec::Serve(_) => "serve",
         }
     }
 
@@ -440,6 +528,7 @@ impl JobSpec {
             JobSpec::Generate(s) => Some(s.config.as_str()),
             JobSpec::E2e(s) => Some(s.config.as_str()),
             JobSpec::Sweep(s) => Some(s.config.as_str()),
+            JobSpec::Serve(s) => Some(s.config.as_str()),
         }
     }
 
@@ -448,6 +537,7 @@ impl JobSpec {
         match self {
             JobSpec::GenData(_) => "gen-data".to_string(),
             JobSpec::Prune(s) => format!("prune/{}/{}", s.config, s.prune.label()),
+            JobSpec::Serve(s) => format!("serve/{}/{}", s.config, s.prune.label()),
             JobSpec::Sweep(s) => {
                 if s.variants.is_empty() {
                     // dense-only sweep: no trailing slash, so it parses back
@@ -500,6 +590,15 @@ impl JobSpec {
             "stats" => no_extra(JobSpec::Stats(StatsSpec::new(need_config()?))),
             "generate" => no_extra(JobSpec::Generate(GenerateSpec::new(need_config()?))),
             "e2e" => no_extra(JobSpec::E2e(E2eSpec::new(need_config()?))),
+            "serve" => {
+                let cfg = need_config()?;
+                let mut s = ServeSpec::new(cfg);
+                if let Some(p) = extra {
+                    // "serve/<config>" keeps the default compression
+                    s.prune = PruneSpec::parse(p)?;
+                }
+                Ok(JobSpec::Serve(s))
+            }
             "sweep" => {
                 let cfg = need_config()?;
                 let variants = match extra {
@@ -542,5 +641,25 @@ mod tests {
         assert_eq!(j.kind(), "prune");
         assert_eq!(j.config(), Some("nano"));
         assert_eq!(JobSpec::GenData(GenDataSpec::default()).config(), None);
+        let s = JobSpec::Serve(ServeSpec::new("nano"));
+        assert_eq!(s.kind(), "serve");
+        assert_eq!(s.config(), Some("nano"));
+        assert_eq!(s.label(), "serve/nano/sparsegpt-50%");
+    }
+
+    #[test]
+    fn serve_spec_round_trips_and_defaults() {
+        let spec = ServeSpec::new("small").prune(PruneSpec::sparsegpt_nm(2, 4));
+        let j = JobSpec::Serve(spec.clone());
+        assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
+        // bare "serve/<cfg>" takes the default compression
+        let JobSpec::Serve(parsed) = JobSpec::parse("serve/small").unwrap() else {
+            panic!("wrong kind");
+        };
+        assert_eq!(parsed.prune, PruneSpec::sparsegpt(0.5));
+        assert_eq!(parsed.requests, 8);
+        assert_eq!(parsed.max_batch, 8);
+        assert!(JobSpec::parse("serve/").is_err());
+        assert!(JobSpec::parse("serve/nano/bogus-50%").is_err());
     }
 }

@@ -9,7 +9,7 @@ use anyhow::{anyhow, bail, Result};
 /// Boolean flags accepted by every `sparsegpt` subcommand. `--json`
 /// switches the event stream from human log lines to JSON lines.
 pub const GLOBAL_BOOL_FLAGS: &[&str] =
-    &["resume", "record-errors", "rt-stats", "json", "no-dense", "save"];
+    &["resume", "record-errors", "rt-stats", "json", "no-dense", "save", "pack"];
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {

@@ -60,18 +60,25 @@ pub fn sample(
 }
 
 fn pick(logits: &[f32], opts: &SampleOptions, rng: &mut Rng) -> i32 {
-    if opts.temperature <= 0.0 {
+    pick_token(logits, opts.temperature, opts.top_k, rng)
+}
+
+/// Sample one token id from `logits`: greedy argmax at temperature <= 0,
+/// otherwise top-k filtered softmax sampling (k = 0 disables the filter).
+/// Shared by [`sample`] and the serving engine's per-request samplers.
+pub fn pick_token(logits: &[f32], temperature: f64, top_k: usize, rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 {
         return argmax(logits) as i32;
     }
     // top-k filter then softmax at temperature
     let mut idx: Vec<usize> = (0..logits.len()).collect();
     idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-    let k = if opts.top_k == 0 { logits.len() } else { opts.top_k.min(logits.len()) };
+    let k = if top_k == 0 { logits.len() } else { top_k.min(logits.len()) };
     let kept = &idx[..k];
     let maxv = logits[kept[0]] as f64;
     let weights: Vec<f64> = kept
         .iter()
-        .map(|&i| ((logits[i] as f64 - maxv) / opts.temperature).exp())
+        .map(|&i| ((logits[i] as f64 - maxv) / temperature).exp())
         .collect();
     kept[rng.weighted(&weights)] as i32
 }

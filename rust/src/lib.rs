@@ -28,6 +28,7 @@ pub mod eval;
 pub mod harness;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod sparse;
 pub mod tensor;

@@ -11,11 +11,12 @@ use std::path::PathBuf;
 
 use sparsegpt::api::{
     E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, HumanSink, JobReport, JobSpec, JsonlSink,
-    PruneJobSpec, PruneSpec, Session, StatsSpec, SweepSpec, TrainSpec, ZeroShotSpec,
+    PruneJobSpec, PruneSpec, ServeSpec, Session, StatsSpec, SweepSpec, TrainSpec, ZeroShotSpec,
 };
 use sparsegpt::cli::{parse_nm, Args, GLOBAL_BOOL_FLAGS};
 use sparsegpt::coordinator::{PruneMethod, SkipSpec};
 use sparsegpt::runtime::BackendKind;
+use sparsegpt::sparse::PackFormat;
 use sparsegpt::eval::report::{fmt_ppl, Table};
 use sparsegpt::eval::zeroshot::ZeroShotTask;
 use sparsegpt::solver::sparsegpt_ref::Pattern;
@@ -32,6 +33,7 @@ commands:
             [--sparsity 0.5 | --nm 2:4] [--quant-bits 4] [--damp 0.01]
             [--calib 128] [--calib-seed 0] [--skip attn|fc1|fc2|front|middle|back]
             [--prefix-frac 0.66] [--out <ckpt>] [--suffix -50]
+            [--pack] [--pack-out <path.spkt>]
   eval      --config <cfg> [--ckpt <path>] [--max-segments 512]
   zeroshot  --config <cfg> [--ckpt <path>] [--items 100] [--seed 7]
   stats     --config <cfg> [--ckpt <path>] [--nm 2:4]
@@ -41,6 +43,12 @@ commands:
             [--dataset <name>[,<name>...]] [--calib 128] [--max-segments 128]
             [--zeroshot-items 0] [--no-dense] [--save] [--ckpt <path>]
   e2e       [--config small] [--steps 300]
+  serve     [--config nano] [--spec sparsegpt-50%] [--format auto|dense|csr|2:4]
+            [--requests 8] [--tokens 16] [--prompt-len 8] [--arrival-every 1]
+            [--max-batch 8] [--max-wait 2] [--queue-cap 64]
+            [--temperature 0.8] [--top-k 40] [--seed 0]
+            [--damp 0.01] [--calib 32] [--calib-seed 0] [--ckpt <path>]
+            [--store <path.spkt>] [--save-store <path.spkt>]
 
 global flags:
   --json    emit machine-readable JSON-lines events on stdout
@@ -144,6 +152,8 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
             s.save = true;
             s.out = args.get("out").map(PathBuf::from);
             s.suffix = args.get("suffix").map(String::from);
+            s.pack = args.has("pack");
+            s.pack_out = args.get("pack-out").map(PathBuf::from);
             JobSpec::Prune(s)
         }
         "eval" => {
@@ -203,6 +213,30 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
             let mut s = E2eSpec::new(args.get_or("config", "small"));
             s.steps = args.usize_or("steps", s.steps)?;
             JobSpec::E2e(s)
+        }
+        "serve" => {
+            let mut s = ServeSpec::new(args.get_or("config", "nano"));
+            if let Some(label) = args.get("spec") {
+                s.prune = PruneSpec::parse(label)?;
+            }
+            s.format = PackFormat::parse(args.get_or("format", "auto"))?;
+            s.requests = args.usize_or("requests", s.requests)?;
+            s.max_new_tokens = args.usize_or("tokens", s.max_new_tokens)?;
+            s.prompt_len = args.usize_or("prompt-len", s.prompt_len)?;
+            s.arrival_every = args.usize_or("arrival-every", s.arrival_every)?;
+            s.max_batch = args.usize_or("max-batch", s.max_batch)?;
+            s.max_wait = args.usize_or("max-wait", s.max_wait)?;
+            s.queue_cap = args.usize_or("queue-cap", s.queue_cap)?;
+            s.temperature = args.f64_or("temperature", s.temperature)?;
+            s.top_k = args.usize_or("top-k", s.top_k)?;
+            s.seed = args.u64_or("seed", s.seed)?;
+            s.damp = args.f64_or("damp", s.damp)?;
+            s.calib = args.usize_or("calib", s.calib)?;
+            s.calib_seed = args.u64_or("calib-seed", s.calib_seed)?;
+            s.ckpt = args.get("ckpt").map(PathBuf::from);
+            s.store = args.get("store").map(PathBuf::from);
+            s.save_store = args.get("save-store").map(PathBuf::from);
+            JobSpec::Serve(s)
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
     })
@@ -270,6 +304,29 @@ fn print_tables(report: &JobReport) {
         }
         JobReport::Sweep(r) => {
             print!("{}", sweep_table(r).render());
+        }
+        JobReport::Serve(r) => {
+            let mut table = Table::new(
+                &format!(
+                    "serve: {} [{}] density {:.3} ({})",
+                    r.config, r.label, r.density, r.formats
+                ),
+                &["request", "prompt", "tokens", "joined", "finished"],
+            );
+            for req in &r.requests {
+                table.row(vec![
+                    req.id.to_string(),
+                    req.prompt_tokens.to_string(),
+                    req.tokens.len().to_string(),
+                    req.joined_step.to_string(),
+                    req.finished_step.to_string(),
+                ]);
+            }
+            print!("{}", table.render());
+            println!(
+                "{} tokens in {} steps, {:.2}s decode -> {:.1} tok/s",
+                r.tokens, r.steps, r.decode_secs, r.tokens_per_sec
+            );
         }
         JobReport::E2e(r) => {
             if let Some(t) = &r.train {

@@ -7,8 +7,10 @@ pub mod config;
 pub mod init;
 pub mod layout;
 pub mod manifest;
+pub mod sparse_store;
 pub mod stats;
 
 pub use config::ModelCfg;
 pub use layout::{FlatParams, LinearKind, PRUNABLE_KINDS};
 pub use manifest::Manifest;
+pub use sparse_store::{SparseStore, StoreEntry};

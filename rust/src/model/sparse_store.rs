@@ -1,0 +1,465 @@
+//! Packed sparse checkpoint IO (`.spkt`): a pruned model serialized in the
+//! formats the serving engine executes — each prunable linear as CSR,
+//! bitmask-packed n:m or dense (see [`crate::sparse::pack`]), plus the
+//! non-prunable remainder (embeddings, layer norms) stored raw.
+//!
+//! Layout (little-endian, mmap-friendly: fixed header, then a table of
+//! contents with absolute byte offsets into 8-byte-aligned sections, so a
+//! reader can map the file and slice sections without a parse pass):
+//!
+//! ```text
+//! magic    b"SGPTSPKT"                    8 bytes
+//! version  u32                            (currently 1)
+//! flags    u32                            (reserved, 0)
+//! name_len u32 + utf8 config name
+//! src_len  u32 + utf8 source label        (the prune spec that produced it)
+//! n_params u64, layers u32, entries u32   (entries = layers * 6)
+//! rest_off u64, rest_len u64              (f32 count of the dense remainder)
+//! toc      entries * { layer u32, kind u8, format u8, pad u16,
+//!                      offset u64, byte_len u64,
+//!                      rows u32, cols u32, nnz u64 }
+//! rest     f32 * rest_len                 (non-prunable regions, layout order)
+//! sections one PackedMatrix byte-encoding per entry, 8-byte aligned
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::config::ModelCfg;
+use crate::model::layout::{FlatParams, LinearKind, PRUNABLE_KINDS};
+use crate::sparse::{PackPolicy, PackedMatrix};
+
+const MAGIC: &[u8; 8] = b"SGPTSPKT";
+const VERSION: u32 = 1;
+/// serialized [`LinearKind`] order (stable across versions)
+const KIND_TAGS: [LinearKind; 6] = PRUNABLE_KINDS;
+
+fn kind_tag(kind: LinearKind) -> u8 {
+    KIND_TAGS.iter().position(|k| *k == kind).unwrap() as u8
+}
+
+fn kind_from_tag(tag: u8) -> Result<LinearKind> {
+    KIND_TAGS
+        .get(tag as usize)
+        .copied()
+        .ok_or_else(|| anyhow!("unknown linear-kind tag {tag}"))
+}
+
+/// Is this named region one of the packed prunable linears?
+fn is_prunable_region(name: &str) -> bool {
+    PRUNABLE_KINDS.iter().any(|k| k.param_name() == name)
+}
+
+/// One packed prunable linear.
+#[derive(Clone, Debug)]
+pub struct StoreEntry {
+    pub layer: usize,
+    pub kind: LinearKind,
+    pub matrix: PackedMatrix,
+}
+
+/// A packed sparse checkpoint: what `.spkt` files hold in memory.
+#[derive(Clone, Debug)]
+pub struct SparseStore {
+    pub config_name: String,
+    /// prune-spec label of the job that produced the params
+    pub source_label: String,
+    pub n_params: usize,
+    pub layers: usize,
+    /// non-prunable regions (embeddings, norms) concatenated in
+    /// `param_layout` order
+    pub rest: Vec<f32>,
+    /// layer-major, [`PRUNABLE_KINDS`]-ordered packed linears
+    pub entries: Vec<StoreEntry>,
+}
+
+impl SparseStore {
+    /// Conventional path: `<dir>/<config><suffix>.spkt`.
+    pub fn path_for(dir: impl AsRef<Path>, config: &str, suffix: &str) -> std::path::PathBuf {
+        dir.as_ref().join(format!("{config}{suffix}.spkt"))
+    }
+
+    /// Pack pruned parameters: every prunable linear through `policy`, the
+    /// remainder raw.
+    pub fn pack(
+        params: &FlatParams,
+        policy: &PackPolicy,
+        source_label: &str,
+    ) -> Result<SparseStore> {
+        let cfg = &params.cfg;
+        let mut rest = Vec::new();
+        for e in &cfg.param_layout {
+            if !is_prunable_region(&e.name) {
+                rest.extend_from_slice(params.region(&e.name)?);
+            }
+        }
+        let mut entries = Vec::with_capacity(cfg.layers * PRUNABLE_KINDS.len());
+        for layer in 0..cfg.layers {
+            for kind in PRUNABLE_KINDS {
+                let w = params.get_linear(kind, layer)?;
+                let matrix = PackedMatrix::pack(&w, policy).with_context(|| {
+                    format!("packing layer {layer} {}", kind.label())
+                })?;
+                entries.push(StoreEntry { layer, kind, matrix });
+            }
+        }
+        Ok(SparseStore {
+            config_name: cfg.name.clone(),
+            source_label: source_label.to_string(),
+            n_params: cfg.n_params,
+            layers: cfg.layers,
+            rest,
+            entries,
+        })
+    }
+
+    /// Rebuild the flat parameter vector (bit-exact inverse of [`pack`]
+    /// over the kernels' value grid).
+    ///
+    /// [`pack`]: SparseStore::pack
+    pub fn unpack(&self, cfg: &ModelCfg) -> Result<FlatParams> {
+        if cfg.name != self.config_name {
+            bail!(
+                "packed checkpoint is for config {:?}, expected {:?}",
+                self.config_name,
+                cfg.name
+            );
+        }
+        if cfg.n_params != self.n_params || cfg.layers != self.layers {
+            bail!(
+                "packed checkpoint shape mismatch: {} params / {} layers vs config {} / {}",
+                self.n_params,
+                self.layers,
+                cfg.n_params,
+                cfg.layers
+            );
+        }
+        let mut fp = FlatParams::zeros(cfg);
+        let mut off = 0usize;
+        for e in &cfg.param_layout {
+            if is_prunable_region(&e.name) {
+                continue;
+            }
+            let n = e.numel();
+            if off + n > self.rest.len() {
+                bail!("packed checkpoint remainder too short for region {:?}", e.name);
+            }
+            fp.data[e.offset..e.offset + n].copy_from_slice(&self.rest[off..off + n]);
+            off += n;
+        }
+        if off != self.rest.len() {
+            bail!("packed checkpoint remainder has {} trailing f32s", self.rest.len() - off);
+        }
+        for entry in &self.entries {
+            fp.set_linear(entry.kind, entry.layer, &entry.matrix.to_dense())?;
+        }
+        Ok(fp)
+    }
+
+    /// Density over the packed (prunable) weights.
+    pub fn density(&self) -> f64 {
+        let mut nnz = 0usize;
+        let mut total = 0usize;
+        for e in &self.entries {
+            nnz += e.matrix.nnz();
+            total += e.matrix.rows() * e.matrix.cols();
+        }
+        nnz as f64 / total.max(1) as f64
+    }
+
+    /// format label -> matrix count, e.g. {"csr": 10, "dense": 2}.
+    pub fn format_counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut out = BTreeMap::new();
+        for e in &self.entries {
+            *out.entry(e.matrix.format_label()).or_insert(0) += 1;
+        }
+        out
+    }
+
+    /// Compact "csr:10 dense:2" summary for logs/events.
+    pub fn format_summary(&self) -> String {
+        self.format_counts()
+            .iter()
+            .map(|(k, v)| format!("{k}:{v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Serialize to `path`; returns the byte size written.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<u64> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        // encode sections first so the TOC can carry absolute offsets
+        let name = self.config_name.as_bytes();
+        let src = self.source_label.as_bytes();
+        let toc_entry_len = 4 + 1 + 1 + 2 + 8 + 8 + 4 + 4 + 8;
+        let header_len = 8 + 4 + 4 + (4 + name.len()) + (4 + src.len()) + 8 + 4 + 4 + 8 + 8;
+        let toc_off = align8(header_len);
+        let rest_off = align8(toc_off + self.entries.len() * toc_entry_len);
+        let mut sections: Vec<Vec<u8>> = Vec::with_capacity(self.entries.len());
+        let mut offsets: Vec<(u64, u64)> = Vec::with_capacity(self.entries.len());
+        let mut cursor = align8(rest_off + self.rest.len() * 4);
+        for e in &self.entries {
+            let mut buf = Vec::new();
+            e.matrix.write_bytes(&mut buf);
+            offsets.push((cursor as u64, buf.len() as u64));
+            cursor = align8(cursor + buf.len());
+            sections.push(buf);
+        }
+        let _total_bytes = cursor; // final cursor = aligned end of file
+
+        fn put(f: &mut impl Write, w: &mut usize, b: &[u8]) -> Result<()> {
+            f.write_all(b)?;
+            *w += b.len();
+            Ok(())
+        }
+        fn pad_to(f: &mut impl Write, w: &mut usize, target: usize) -> Result<()> {
+            while *w < target {
+                f.write_all(&[0u8])?;
+                *w += 1;
+            }
+            Ok(())
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            let mut written = 0usize;
+            put(&mut f, &mut written, MAGIC)?;
+            put(&mut f, &mut written, &VERSION.to_le_bytes())?;
+            put(&mut f, &mut written, &0u32.to_le_bytes())?;
+            put(&mut f, &mut written, &(name.len() as u32).to_le_bytes())?;
+            put(&mut f, &mut written, name)?;
+            put(&mut f, &mut written, &(src.len() as u32).to_le_bytes())?;
+            put(&mut f, &mut written, src)?;
+            put(&mut f, &mut written, &(self.n_params as u64).to_le_bytes())?;
+            put(&mut f, &mut written, &(self.layers as u32).to_le_bytes())?;
+            put(&mut f, &mut written, &(self.entries.len() as u32).to_le_bytes())?;
+            put(&mut f, &mut written, &(rest_off as u64).to_le_bytes())?;
+            put(&mut f, &mut written, &(self.rest.len() as u64).to_le_bytes())?;
+            debug_assert_eq!(written, header_len);
+            pad_to(&mut f, &mut written, toc_off)?;
+            for (e, (off, len)) in self.entries.iter().zip(&offsets) {
+                put(&mut f, &mut written, &(e.layer as u32).to_le_bytes())?;
+                put(&mut f, &mut written, &[kind_tag(e.kind)])?;
+                let fmt = match e.matrix {
+                    PackedMatrix::Dense(_) => 0u8,
+                    PackedMatrix::Csr(_) => 1u8,
+                    PackedMatrix::Nm(_) => 2u8,
+                };
+                put(&mut f, &mut written, &[fmt])?;
+                put(&mut f, &mut written, &0u16.to_le_bytes())?;
+                put(&mut f, &mut written, &off.to_le_bytes())?;
+                put(&mut f, &mut written, &len.to_le_bytes())?;
+                put(&mut f, &mut written, &(e.matrix.rows() as u32).to_le_bytes())?;
+                put(&mut f, &mut written, &(e.matrix.cols() as u32).to_le_bytes())?;
+                put(&mut f, &mut written, &(e.matrix.nnz() as u64).to_le_bytes())?;
+            }
+            pad_to(&mut f, &mut written, rest_off)?;
+            for v in &self.rest {
+                put(&mut f, &mut written, &v.to_le_bytes())?;
+            }
+            for (buf, (off, _)) in sections.iter().zip(&offsets) {
+                pad_to(&mut f, &mut written, *off as usize)?;
+                put(&mut f, &mut written, buf)?;
+            }
+            f.flush()?;
+        }
+        let bytes = std::fs::metadata(&tmp)?.len();
+        std::fs::rename(&tmp, path)?;
+        Ok(bytes)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<SparseStore> {
+        fn take<'a>(buf: &'a [u8], i: &mut usize, n: usize) -> Result<&'a [u8]> {
+            if *i + n > buf.len() {
+                bail!("packed checkpoint truncated at byte {i}");
+            }
+            let out = &buf[*i..*i + n];
+            *i += n;
+            Ok(out)
+        }
+        fn u32_at(buf: &[u8], i: &mut usize) -> Result<u32> {
+            Ok(u32::from_le_bytes(take(buf, i, 4)?.try_into().unwrap()))
+        }
+        fn u64_at(buf: &[u8], i: &mut usize) -> Result<u64> {
+            Ok(u64::from_le_bytes(take(buf, i, 8)?.try_into().unwrap()))
+        }
+        let path = path.as_ref();
+        let buf = std::fs::read(path)
+            .with_context(|| format!("opening packed checkpoint {path:?}"))?;
+        let buf = buf.as_slice();
+        let mut i = 0usize;
+        if take(buf, &mut i, 8)? != MAGIC {
+            bail!("{path:?} is not a packed sparse checkpoint (bad magic)");
+        }
+        let version = u32_at(buf, &mut i)?;
+        if version != VERSION {
+            bail!("unsupported packed checkpoint version {version}");
+        }
+        let _flags = u32_at(buf, &mut i)?;
+        let name_len = u32_at(buf, &mut i)? as usize;
+        if name_len > 1024 {
+            bail!("implausible config-name length {name_len}");
+        }
+        let config_name = String::from_utf8(take(buf, &mut i, name_len)?.to_vec())?;
+        let src_len = u32_at(buf, &mut i)? as usize;
+        if src_len > 1024 {
+            bail!("implausible source-label length {src_len}");
+        }
+        let source_label = String::from_utf8(take(buf, &mut i, src_len)?.to_vec())?;
+        let n_params = u64_at(buf, &mut i)? as usize;
+        let layers = u32_at(buf, &mut i)? as usize;
+        let n_entries = u32_at(buf, &mut i)? as usize;
+        let rest_off = u64_at(buf, &mut i)? as usize;
+        let rest_len = u64_at(buf, &mut i)? as usize;
+        if n_entries > 6 * layers.max(1) || n_entries % PRUNABLE_KINDS.len() != 0 {
+            bail!("implausible entry count {n_entries} for {layers} layers");
+        }
+        let toc_off = align8(i);
+
+        // remainder section
+        if rest_off < i || rest_off + rest_len * 4 > buf.len() {
+            bail!("{path:?}: remainder section out of bounds");
+        }
+        let rest: Vec<f32> = buf[rest_off..rest_off + rest_len * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        // TOC + sections
+        let mut entries = Vec::with_capacity(n_entries);
+        let mut t = toc_off;
+        for _ in 0..n_entries {
+            let layer = u32_at(buf, &mut t)? as usize;
+            let ktag = take(buf, &mut t, 1)?[0];
+            let _fmt = take(buf, &mut t, 1)?[0];
+            let _pad = take(buf, &mut t, 2)?;
+            let off = u64_at(buf, &mut t)? as usize;
+            let len = u64_at(buf, &mut t)? as usize;
+            let rows = u32_at(buf, &mut t)? as usize;
+            let cols = u32_at(buf, &mut t)? as usize;
+            let nnz = u64_at(buf, &mut t)? as usize;
+            let kind = kind_from_tag(ktag)?;
+            if layer >= layers {
+                bail!("TOC entry layer {layer} out of range");
+            }
+            if off + len > buf.len() {
+                bail!("TOC entry section out of bounds");
+            }
+            let (matrix, used) = PackedMatrix::read_bytes(&buf[off..off + len])
+                .with_context(|| format!("decoding layer {layer} {}", kind.label()))?;
+            if used != len {
+                bail!("section for layer {layer} {} has trailing bytes", kind.label());
+            }
+            if matrix.rows() != rows || matrix.cols() != cols || matrix.nnz() != nnz {
+                bail!("TOC/section mismatch for layer {layer} {}", kind.label());
+            }
+            entries.push(StoreEntry { layer, kind, matrix });
+        }
+        Ok(SparseStore { config_name, source_label, n_params, layers, rest, entries })
+    }
+}
+
+fn align8(n: usize) -> usize {
+    (n + 7) & !7
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+    use crate::sparse::PackFormat;
+
+    fn test_cfg() -> ModelCfg {
+        ModelCfg::from_dims("spkt-test", 8, 2, 2, 1, 1, 13, 6)
+    }
+
+    fn pruned_params(cfg: &ModelCfg, p: f64) -> FlatParams {
+        let mut fp = init_params(cfg, 3);
+        for layer in 0..cfg.layers {
+            for kind in PRUNABLE_KINDS {
+                let mut w = magnitude_prune(&fp.get_linear(kind, layer).unwrap(), p).0;
+                // keep one dense 8-wide run so Auto can never pick n:m
+                for j in 0..8.min(w.cols()) {
+                    w.set2(0, j, 1.0 + j as f32);
+                }
+                fp.set_linear(kind, layer, &w).unwrap();
+            }
+        }
+        fp
+    }
+
+    #[test]
+    fn pack_save_load_unpack_roundtrip() {
+        let cfg = test_cfg();
+        // 80% sparse: deep enough that the packed file beats raw f32
+        // (CSR costs 8 bytes per surviving weight, so break-even is ~50%)
+        let fp = pruned_params(&cfg, 0.8);
+        let store = SparseStore::pack(&fp, &PackPolicy::default(), "magnitude-80%").unwrap();
+        assert!((store.density() - 0.25).abs() < 0.1, "{}", store.density());
+        assert_eq!(store.format_counts().get("csr"), Some(&12));
+
+        let dir = std::env::temp_dir().join(format!("sgpt_spkt_{}", std::process::id()));
+        let path = dir.join("t.spkt");
+        let bytes = store.save(&path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        let back = SparseStore::load(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+
+        assert_eq!(back.config_name, "spkt-test");
+        assert_eq!(back.source_label, "magnitude-80%");
+        assert_eq!(back.unpack(&cfg).unwrap().data, fp.data);
+        // the packed file skips pruned weights: smaller than raw f32 params
+        assert!((bytes as usize) < cfg.n_params * 4, "{bytes} vs {}", cfg.n_params * 4);
+    }
+
+    #[test]
+    fn nm_packed_store_roundtrips() {
+        let cfg = test_cfg();
+        let mut fp = init_params(&cfg, 5);
+        for layer in 0..cfg.layers {
+            for kind in PRUNABLE_KINDS {
+                let w = fp.get_linear(kind, layer).unwrap();
+                fp.set_linear(kind, layer, &magnitude_prune_nm(&w, 2, 4).0).unwrap();
+            }
+        }
+        let store = SparseStore::pack(&fp, &PackPolicy::default(), "magnitude-2:4").unwrap();
+        assert_eq!(store.format_counts().get("nm"), Some(&12));
+        assert_eq!(store.unpack(&cfg).unwrap().data, fp.data);
+    }
+
+    #[test]
+    fn forced_dense_format_keeps_everything() {
+        let cfg = test_cfg();
+        let fp = init_params(&cfg, 1);
+        let store =
+            SparseStore::pack(&fp, &PackPolicy::with_format(PackFormat::Dense), "dense").unwrap();
+        assert_eq!(store.format_counts().get("dense"), Some(&12));
+        assert_eq!(store.unpack(&cfg).unwrap().data, fp.data);
+    }
+
+    #[test]
+    fn unpack_rejects_wrong_config() {
+        let cfg = test_cfg();
+        let fp = pruned_params(&cfg, 0.5);
+        let store = SparseStore::pack(&fp, &PackPolicy::default(), "x").unwrap();
+        let other = ModelCfg::from_dims("other", 8, 2, 2, 1, 1, 13, 6);
+        assert!(store.unpack(&other).is_err());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("sgpt_spkt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.spkt");
+        std::fs::write(&path, b"definitely not a packed checkpoint").unwrap();
+        assert!(SparseStore::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

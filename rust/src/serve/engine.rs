@@ -1,0 +1,330 @@
+//! The continuous-batching decode loop: joins queued requests into the
+//! running batch each step, decodes one token for every in-flight request
+//! through the sparse model, retires finished requests, and narrates the
+//! lifecycle (`Enqueued` → `BatchFormed` → `Finished` → `Drained`) through
+//! a hook the api layer maps onto the structured event stream.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::eval::generate::pick_token;
+use crate::serve::model::SparseModel;
+use crate::serve::scheduler::{Scheduler, SchedulerPolicy, ServeRequest};
+use crate::util::prng::Rng;
+
+/// Sampling + batching knobs shared by every request of a run.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOptions {
+    pub policy: SchedulerPolicy,
+    pub temperature: f64,
+    pub top_k: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> EngineOptions {
+        EngineOptions { policy: SchedulerPolicy::default(), temperature: 0.8, top_k: 40 }
+    }
+}
+
+/// Lifecycle notifications (the api layer turns these into
+/// `request-enqueued` / `batch-formed` / `request-finished` /
+/// `engine-drained` JSONL events).
+#[derive(Clone, Debug)]
+pub enum ServeEvent {
+    Enqueued { id: u64, step: usize, prompt_tokens: usize, max_new_tokens: usize },
+    BatchFormed { step: usize, joined: usize, batch: usize },
+    Finished { id: u64, step: usize, tokens: usize },
+    Drained { steps: usize, requests: usize, tokens: usize, decode_secs: f64 },
+}
+
+/// One retired request with its generated tokens.
+#[derive(Clone, Debug)]
+pub struct FinishedRequest {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub tokens: Vec<i32>,
+    pub joined_step: usize,
+    pub finished_step: usize,
+}
+
+/// What a drained engine run produced.
+#[derive(Clone, Debug)]
+pub struct EngineOutcome {
+    pub finished: Vec<FinishedRequest>,
+    pub steps: usize,
+    pub tokens: usize,
+    /// wall time inside `decode_step` only (scheduling excluded)
+    pub decode_secs: f64,
+}
+
+impl EngineOutcome {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.decode_secs > 0.0 {
+            self.tokens as f64 / self.decode_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A request currently in the decode batch.
+struct Active {
+    req: ServeRequest,
+    /// full sliding context (left-filled prompt + generated tokens)
+    ctx: Vec<i32>,
+    generated: Vec<i32>,
+    rng: Rng,
+    joined_step: usize,
+}
+
+/// Left-fill a prompt to a full `seq` window by repeating it (the model has
+/// no pad token — same convention as `eval::generate::sample`).
+pub fn left_fill_window(prompt: &[i32], seq: usize) -> Vec<i32> {
+    let mut ctx: Vec<i32> = prompt.to_vec();
+    while ctx.len() < seq {
+        let take = (seq - ctx.len()).min(prompt.len().max(1));
+        ctx.splice(0..0, prompt.iter().cloned().take(take));
+        if prompt.is_empty() {
+            ctx.splice(0..0, [0]);
+        }
+    }
+    ctx
+}
+
+/// The serving engine: owns the scheduler, borrows the model.
+pub struct ServeEngine<'a> {
+    model: &'a SparseModel,
+    opts: EngineOptions,
+}
+
+impl<'a> ServeEngine<'a> {
+    pub fn new(model: &'a SparseModel, opts: EngineOptions) -> ServeEngine<'a> {
+        ServeEngine { model, opts }
+    }
+
+    /// Run the workload to drain: `incoming` is (arrival step, request)
+    /// pairs — requests become visible to the scheduler at their arrival
+    /// step, which is how a synthetic run exercises join/retire churn.
+    pub fn run(
+        &self,
+        mut incoming: Vec<(usize, ServeRequest)>,
+        on_event: &mut dyn FnMut(&ServeEvent),
+    ) -> Result<EngineOutcome> {
+        incoming.sort_by_key(|(step, _)| *step); // stable: FIFO within a step
+        let seq = self.model.cfg.seq;
+        let vocab = self.model.cfg.vocab;
+        let mut sched = Scheduler::new(self.opts.policy);
+        let mut active: Vec<Active> = Vec::new();
+        let mut finished: Vec<FinishedRequest> = Vec::new();
+        let mut next_arrival = 0usize;
+        let mut step = 0usize;
+        let mut tokens = 0usize;
+        let mut decode_secs = 0.0f64;
+
+        loop {
+            // arrivals visible at this step enter the bounded queue; when it
+            // is full, the engine holds its own arrivals back (backpressure)
+            // and retries them on later steps once decode drains the queue
+            while next_arrival < incoming.len() && incoming[next_arrival].0 <= step {
+                if !sched.has_capacity() {
+                    break;
+                }
+                let req = incoming[next_arrival].1.clone();
+                let (id, prompt_tokens, max_new_tokens) =
+                    (req.id, req.prompt.len(), req.max_new_tokens);
+                sched.submit(req)?;
+                on_event(&ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens });
+                next_arrival += 1;
+            }
+            // batch formation: joiners ride this very step
+            let joined = sched.admit(active.len());
+            if !joined.is_empty() {
+                let n = joined.len();
+                for req in joined {
+                    active.push(Active {
+                        ctx: left_fill_window(&req.prompt, seq),
+                        generated: Vec::with_capacity(req.max_new_tokens),
+                        rng: Rng::new(req.seed ^ 0x5e21e),
+                        joined_step: step,
+                        req,
+                    });
+                }
+                on_event(&ServeEvent::BatchFormed { step, joined: n, batch: active.len() });
+            }
+            if active.is_empty() {
+                if next_arrival >= incoming.len() && sched.is_empty() {
+                    break; // drained
+                }
+                step += 1; // idle tick: waiting on arrivals or the batch window
+                continue;
+            }
+
+            // one batched next-token step for every in-flight request
+            let mut windows = Vec::with_capacity(active.len() * seq);
+            for a in &active {
+                windows.extend_from_slice(&a.ctx[a.ctx.len() - seq..]);
+            }
+            let t0 = Instant::now();
+            let logits = self.model.decode_step(&windows, active.len())?;
+            decode_secs += t0.elapsed().as_secs_f64();
+            for (i, a) in active.iter_mut().enumerate() {
+                let row = &logits.data()[i * vocab..(i + 1) * vocab];
+                let t = pick_token(row, self.opts.temperature, self.opts.top_k, &mut a.rng);
+                a.ctx.push(t);
+                a.generated.push(t);
+                tokens += 1;
+            }
+            // retire satisfied requests (batch order preserved for the rest)
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].generated.len() >= active[i].req.max_new_tokens {
+                    let a = active.remove(i);
+                    on_event(&ServeEvent::Finished {
+                        id: a.req.id,
+                        step,
+                        tokens: a.generated.len(),
+                    });
+                    finished.push(FinishedRequest {
+                        id: a.req.id,
+                        prompt_tokens: a.req.prompt.len(),
+                        tokens: a.generated,
+                        joined_step: a.joined_step,
+                        finished_step: step,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+            step += 1;
+        }
+        let outcome = EngineOutcome { finished, steps: step, tokens, decode_secs };
+        on_event(&ServeEvent::Drained {
+            steps: outcome.steps,
+            requests: outcome.finished.len(),
+            tokens: outcome.tokens,
+            decode_secs: outcome.decode_secs,
+        });
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelCfg;
+    use crate::model::init::init_params;
+    use crate::sparse::PackPolicy;
+    use crate::util::prng::Rng as TestRng;
+
+    fn model() -> SparseModel {
+        let cfg = ModelCfg::from_dims("engine-test", 8, 1, 2, 1, 1, 11, 4);
+        SparseModel::from_params(&init_params(&cfg, 0), &PackPolicy::default()).unwrap()
+    }
+
+    fn requests(n: usize, tokens: usize, vocab: usize) -> Vec<(usize, ServeRequest)> {
+        let mut rng = TestRng::new(0);
+        (0..n)
+            .map(|i| {
+                let prompt: Vec<i32> = (0..3).map(|_| rng.below(vocab) as i32).collect();
+                (i, ServeRequest { id: i as u64, prompt, max_new_tokens: tokens, seed: i as u64 })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn drains_all_requests_and_counts_tokens() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: SchedulerPolicy { max_batch: 2, max_wait: 1, queue_cap: 16 },
+            temperature: 0.0,
+            top_k: 0,
+        };
+        let mut events = Vec::new();
+        let out = ServeEngine::new(&m, opts)
+            .run(requests(5, 3, 11), &mut |e| events.push(e.clone()))
+            .unwrap();
+        assert_eq!(out.finished.len(), 5);
+        assert_eq!(out.tokens, 15);
+        assert!(out.finished.iter().all(|f| f.tokens.len() == 3));
+        // ids all retire exactly once
+        let mut ids: Vec<u64> = out.finished.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        // lifecycle shape: 5 enqueues, >=1 batch, 5 finishes, 1 drain
+        let count = |f: fn(&ServeEvent) -> bool| events.iter().filter(|e| f(e)).count();
+        assert_eq!(count(|e| matches!(e, ServeEvent::Enqueued { .. })), 5);
+        assert!(count(|e| matches!(e, ServeEvent::BatchFormed { .. })) >= 2);
+        assert_eq!(count(|e| matches!(e, ServeEvent::Finished { .. })), 5);
+        assert_eq!(count(|e| matches!(e, ServeEvent::Drained { .. })), 1);
+    }
+
+    #[test]
+    fn staggered_arrivals_join_mid_flight() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: SchedulerPolicy { max_batch: 4, max_wait: 0, queue_cap: 16 },
+            temperature: 0.0,
+            top_k: 0,
+        };
+        // request 1 arrives while request 0 is mid-decode
+        let mut reqs = requests(2, 4, 11);
+        reqs[1].0 = 2;
+        let mut joins = Vec::new();
+        let out = ServeEngine::new(&m, opts)
+            .run(reqs, &mut |e| {
+                if let ServeEvent::BatchFormed { batch, .. } = e {
+                    joins.push(*batch);
+                }
+            })
+            .unwrap();
+        assert_eq!(out.finished.len(), 2);
+        assert_eq!(joins, vec![1, 2], "second request joined the running batch");
+    }
+
+    #[test]
+    fn full_queue_defers_arrivals_instead_of_failing() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: SchedulerPolicy { max_batch: 2, max_wait: 0, queue_cap: 2 },
+            temperature: 0.0,
+            top_k: 0,
+        };
+        // 6 requests bunched at step 0 against 2 queue slots: the engine
+        // must hold arrivals back and still drain everything
+        let mut reqs = requests(6, 2, 11);
+        for r in reqs.iter_mut() {
+            r.0 = 0;
+        }
+        let out = ServeEngine::new(&m, opts).run(reqs, &mut |_| {}).unwrap();
+        assert_eq!(out.finished.len(), 6);
+        assert_eq!(out.tokens, 12);
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: SchedulerPolicy { max_batch: 2, max_wait: 1, queue_cap: 16 },
+            temperature: 0.8,
+            top_k: 5,
+        };
+        let run = || {
+            ServeEngine::new(&m, opts)
+                .run(requests(3, 4, 11), &mut |_| {})
+                .unwrap()
+                .finished
+                .iter()
+                .map(|f| (f.id, f.tokens.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn left_fill_repeats_prompt() {
+        assert_eq!(left_fill_window(&[7, 8], 5), vec![7, 7, 8, 7, 8]);
+        assert_eq!(left_fill_window(&[1, 2, 3, 4, 5, 6], 4), vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(left_fill_window(&[], 3), vec![0, 0, 0]);
+    }
+}

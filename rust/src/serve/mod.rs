@@ -1,0 +1,23 @@
+//! The serving subsystem: packed sparse checkpoints executed through the
+//! Table-7/8 CPU sparse kernels behind a continuous-batching scheduler —
+//! the paper's "more than 100 billion weights can be ignored at inference
+//! time" made operational.
+//!
+//! * [`SparseModel`] (`model.rs`) — the sparse decode path: every prunable
+//!   linear runs in its packed format (CSR / n:m / dense fallback), one
+//!   shared forward so packed decode is element-identical to dense decode.
+//! * [`Scheduler`] (`scheduler.rs`) — bounded request queue + batch
+//!   formation (join running batches immediately, wait bounded time for a
+//!   full batch from idle).
+//! * [`ServeEngine`] (`engine.rs`) — the decode loop: admit, batch-decode
+//!   one token per request per step, retire, narrate lifecycle events.
+
+pub mod engine;
+pub mod model;
+pub mod scheduler;
+
+pub use engine::{
+    left_fill_window, EngineOptions, EngineOutcome, FinishedRequest, ServeEngine, ServeEvent,
+};
+pub use model::SparseModel;
+pub use scheduler::{Scheduler, SchedulerPolicy, ServeRequest};

@@ -1,0 +1,383 @@
+//! The sparse decode path: a transformer whose prunable linears execute in
+//! their packed serving formats (CSR / n:m / dense — see
+//! [`crate::sparse::pack`]) instead of dense GEMM.
+//!
+//! The forward mirrors `runtime/ref_ops.rs` structurally (OPT block, tanh
+//! GELU, causal softmax attention, tied LM head) but runs in f32 on the
+//! Table-7/8 CPU kernels, which is the whole point: next-token cost scales
+//! with surviving weights. All formats share one code path that differs
+//! only in the [`PackedMatrix`] dispatch, and the kernels visit surviving
+//! weights in the same order — so packed decode is *element-identical* to
+//! dense decode of the same pruned parameters (pinned by proptests).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::config::ModelCfg;
+use crate::model::layout::{FlatParams, LinearKind, PRUNABLE_KINDS};
+use crate::model::sparse_store::SparseStore;
+use crate::sparse::{dense_layer, PackPolicy, PackedMatrix};
+use crate::tensor::Tensor;
+
+const LN_EPS: f32 = 1e-5;
+/// sqrt(2/pi) of the tanh GELU approximation (f32 twin of ref_ops).
+const GELU_C: f32 = 0.797_884_6;
+
+/// One block's serving-format weights.
+struct ServeBlock {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wq: PackedMatrix,
+    wk: PackedMatrix,
+    wv: PackedMatrix,
+    wo: PackedMatrix,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    fc1: PackedMatrix,
+    fc2: PackedMatrix,
+}
+
+/// A model ready to decode through the sparse kernels.
+pub struct SparseModel {
+    pub cfg: ModelCfg,
+    tok_embed: Vec<f32>,
+    pos_embed: Vec<f32>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    blocks: Vec<ServeBlock>,
+    /// tied LM head: tok_embed as a (vocab, d) matrix, built once
+    head: Tensor,
+    density: f64,
+    format_summary: String,
+}
+
+impl SparseModel {
+    /// Build from a packed checkpoint without materializing dense linears.
+    pub fn from_store(store: &SparseStore, cfg: &ModelCfg) -> Result<SparseModel> {
+        if cfg.name != store.config_name {
+            bail!(
+                "packed checkpoint is for config {:?}, expected {:?}",
+                store.config_name,
+                cfg.name
+            );
+        }
+        // slice the dense remainder back into named regions (layout order)
+        let mut rest: BTreeMap<&str, &[f32]> = BTreeMap::new();
+        let mut off = 0usize;
+        for e in &cfg.param_layout {
+            if PRUNABLE_KINDS.iter().any(|k| k.param_name() == e.name) {
+                continue;
+            }
+            let n = e.numel();
+            if off + n > store.rest.len() {
+                bail!("packed checkpoint remainder too short for region {:?}", e.name);
+            }
+            rest.insert(e.name.as_str(), &store.rest[off..off + n]);
+            off += n;
+        }
+        fn region<'a>(rest: &BTreeMap<&str, &'a [f32]>, name: &str) -> Result<&'a [f32]> {
+            rest.get(name).copied().ok_or_else(|| anyhow!("missing region {name:?}"))
+        }
+        fn layer_slice(
+            rest: &BTreeMap<&str, &[f32]>,
+            layers: usize,
+            name: &str,
+            l: usize,
+        ) -> Result<Vec<f32>> {
+            let r = region(rest, name)?;
+            let per = r.len() / layers;
+            Ok(r[l * per..(l + 1) * per].to_vec())
+        }
+        let mut matrices: BTreeMap<(usize, &'static str), PackedMatrix> = BTreeMap::new();
+        for e in &store.entries {
+            let (rows, cols) = e.kind.shape(cfg);
+            if e.matrix.rows() != rows || e.matrix.cols() != cols {
+                bail!(
+                    "layer {} {} is {}x{}, config {} needs {rows}x{cols}",
+                    e.layer,
+                    e.kind.label(),
+                    e.matrix.rows(),
+                    e.matrix.cols(),
+                    cfg.name
+                );
+            }
+            matrices.insert((e.layer, e.kind.param_name()), e.matrix.clone());
+        }
+        let mut take = |l: usize, kind: LinearKind| -> Result<PackedMatrix> {
+            matrices
+                .remove(&(l, kind.param_name()))
+                .ok_or_else(|| anyhow!("packed checkpoint missing layer {l} {}", kind.label()))
+        };
+        let mut blocks = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            blocks.push(ServeBlock {
+                ln1_g: layer_slice(&rest, cfg.layers, "ln1_g", l)?,
+                ln1_b: layer_slice(&rest, cfg.layers, "ln1_b", l)?,
+                wq: take(l, LinearKind::Wq)?,
+                wk: take(l, LinearKind::Wk)?,
+                wv: take(l, LinearKind::Wv)?,
+                wo: take(l, LinearKind::Wo)?,
+                ln2_g: layer_slice(&rest, cfg.layers, "ln2_g", l)?,
+                ln2_b: layer_slice(&rest, cfg.layers, "ln2_b", l)?,
+                fc1: take(l, LinearKind::Fc1)?,
+                fc2: take(l, LinearKind::Fc2)?,
+            });
+        }
+        let tok_embed = region(&rest, "tok_embed")?.to_vec();
+        if tok_embed.len() != cfg.vocab * cfg.d {
+            bail!("tok_embed region has {} elements, expected vocab*d", tok_embed.len());
+        }
+        let head = Tensor::new(vec![cfg.vocab, cfg.d], tok_embed.clone());
+        Ok(SparseModel {
+            cfg: cfg.clone(),
+            tok_embed,
+            pos_embed: region(&rest, "pos_embed")?.to_vec(),
+            lnf_g: region(&rest, "lnf_g")?.to_vec(),
+            lnf_b: region(&rest, "lnf_b")?.to_vec(),
+            blocks,
+            head,
+            density: store.density(),
+            format_summary: store.format_summary(),
+        })
+    }
+
+    /// Pack parameters on the fly and build the serving model.
+    pub fn from_params(params: &FlatParams, policy: &PackPolicy) -> Result<SparseModel> {
+        let store = SparseStore::pack(params, policy, "in-memory")?;
+        SparseModel::from_store(&store, &params.cfg)
+    }
+
+    /// Density over the packed prunable weights.
+    pub fn density(&self) -> f64 {
+        self.density
+    }
+
+    /// "csr:10 dense:2"-style pack summary.
+    pub fn format_summary(&self) -> &str {
+        &self.format_summary
+    }
+
+    /// One batched next-token step: `windows` is `batch` concatenated
+    /// context windows of exactly `cfg.seq` token ids; returns logits
+    /// (batch, vocab) for the last position of each window.
+    pub fn decode_step(&self, windows: &[i32], batch: usize) -> Result<Tensor> {
+        let cfg = &self.cfg;
+        let (seq, d) = (cfg.seq, cfg.d);
+        if batch == 0 || windows.len() != batch * seq {
+            bail!(
+                "decode_step: {} tokens is not {batch} windows of seq={seq}",
+                windows.len()
+            );
+        }
+        let rows = batch * seq;
+        // ---- embed ----
+        let mut x = vec![0.0f32; rows * d];
+        for (r, &t) in windows.iter().enumerate() {
+            if t < 0 || t as usize >= cfg.vocab {
+                bail!("token id {t} out of range (vocab {})", cfg.vocab);
+            }
+            let te = &self.tok_embed[t as usize * d..(t as usize + 1) * d];
+            let pe = &self.pos_embed[(r % seq) * d..(r % seq + 1) * d];
+            let xr = &mut x[r * d..(r + 1) * d];
+            for i in 0..d {
+                xr[i] = te[i] + pe[i];
+            }
+        }
+        // ---- blocks ----
+        for blk in &self.blocks {
+            let a = layer_norm(&x, d, &blk.ln1_g, &blk.ln1_b);
+            let a = Tensor::new(vec![rows, d], a);
+            let q = blk.wq.layer(&a);
+            let k = blk.wk.layer(&a);
+            let v = blk.wv.layer(&a);
+            let attn = attention(q.data(), k.data(), v.data(), batch, seq, d, cfg.heads);
+            let wo_out = blk.wo.layer(&Tensor::new(vec![rows, d], attn));
+            for (xi, oi) in x.iter_mut().zip(wo_out.data()) {
+                *xi += oi;
+            }
+            let u = layer_norm(&x, d, &blk.ln2_g, &blk.ln2_b);
+            let z = blk.fc1.layer(&Tensor::new(vec![rows, d], u));
+            let g: Vec<f32> = z.data().iter().map(|&zz| gelu(zz)).collect();
+            let w2_out = blk.fc2.layer(&Tensor::new(vec![rows, cfg.ffn], g));
+            for (xi, oi) in x.iter_mut().zip(w2_out.data()) {
+                *xi += oi;
+            }
+        }
+        // ---- final norm + tied head on each window's last position ----
+        let h = layer_norm(&x, d, &self.lnf_g, &self.lnf_b);
+        let mut last = vec![0.0f32; batch * d];
+        for b in 0..batch {
+            let r = b * seq + (seq - 1);
+            last[b * d..(b + 1) * d].copy_from_slice(&h[r * d..(r + 1) * d]);
+        }
+        Ok(dense_layer(&Tensor::new(vec![batch, d], last), &self.head))
+    }
+}
+
+/// Row-wise LayerNorm (f32; cf. the f64 twin in ref_ops).
+fn layer_norm(x: &[f32], d: usize, g: &[f32], b: &[f32]) -> Vec<f32> {
+    let rows = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        let yr = &mut y[r * d..(r + 1) * d];
+        for i in 0..d {
+            yr[i] = (xr[i] - mu) * rstd * g[i] + b[i];
+        }
+    }
+    y
+}
+
+fn gelu(z: f32) -> f32 {
+    0.5 * z * (1.0 + (GELU_C * (z + 0.044715 * z * z * z)).tanh())
+}
+
+/// Causal multi-head attention (f32; heads in contiguous column stripes).
+fn attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    batch: usize,
+    seq: usize,
+    d: usize,
+    heads: usize,
+) -> Vec<f32> {
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; batch * seq * d];
+    let mut scores = vec![0.0f32; seq];
+    for b in 0..batch {
+        for h in 0..heads {
+            let hoff = h * hd;
+            for t in 0..seq {
+                let qoff = (b * seq + t) * d + hoff;
+                let qrow = &q[qoff..qoff + hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for (s, sc) in scores.iter_mut().enumerate().take(t + 1) {
+                    let koff = (b * seq + s) * d + hoff;
+                    let krow = &k[koff..koff + hd];
+                    let mut dot = 0.0f32;
+                    for j in 0..hd {
+                        dot += qrow[j] * krow[j];
+                    }
+                    *sc = dot * scale;
+                    maxv = maxv.max(*sc);
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut().take(t + 1) {
+                    *sc = (*sc - maxv).exp();
+                    denom += *sc;
+                }
+                let orow_off = (b * seq + t) * d + hoff;
+                for s in 0..=t {
+                    let p = scores[s] / denom;
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let voff = (b * seq + s) * d + hoff;
+                    let vrow = &v[voff..voff + hd];
+                    for j in 0..hd {
+                        out[orow_off + j] += p * vrow[j];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::solver::magnitude::magnitude_prune;
+    use crate::sparse::PackFormat;
+    use crate::util::prng::Rng;
+
+    fn test_cfg() -> ModelCfg {
+        ModelCfg::from_dims("serve-test", 8, 2, 2, 1, 1, 13, 6)
+    }
+
+    fn pruned(cfg: &ModelCfg, p: f64, seed: u64) -> FlatParams {
+        let mut fp = init_params(cfg, seed);
+        for layer in 0..cfg.layers {
+            for kind in PRUNABLE_KINDS {
+                let mut w = magnitude_prune(&fp.get_linear(kind, layer).unwrap(), p).0;
+                // keep one dense 8-wide run so Auto can never pick n:m
+                for j in 0..8.min(w.cols()) {
+                    w.set2(0, j, 1.0 + j as f32);
+                }
+                fp.set_linear(kind, layer, &w).unwrap();
+            }
+        }
+        fp
+    }
+
+    fn windows(cfg: &ModelCfg, batch: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect()
+    }
+
+    #[test]
+    fn packed_decode_is_element_identical_to_dense_decode() {
+        let cfg = test_cfg();
+        let fp = pruned(&cfg, 0.6, 7);
+        let dense = SparseModel::from_params(&fp, &PackPolicy::with_format(PackFormat::Dense))
+            .unwrap();
+        let csr =
+            SparseModel::from_params(&fp, &PackPolicy::with_format(PackFormat::Csr)).unwrap();
+        let w = windows(&cfg, 3, 1);
+        let a = dense.decode_step(&w, 3).unwrap();
+        let b = csr.decode_step(&w, 3).unwrap();
+        assert_eq!(a.shape(), &[3, cfg.vocab]);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn from_store_matches_from_params() {
+        let cfg = test_cfg();
+        let fp = pruned(&cfg, 0.5, 3);
+        let store = SparseStore::pack(&fp, &PackPolicy::default(), "magnitude-50%").unwrap();
+        let m1 = SparseModel::from_store(&store, &cfg).unwrap();
+        let m2 = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
+        let w = windows(&cfg, 2, 9);
+        assert_eq!(m1.decode_step(&w, 2).unwrap(), m2.decode_step(&w, 2).unwrap());
+        assert_eq!(m1.format_summary(), "csr:12");
+        assert!((m1.density() - 0.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn decode_step_validates_inputs() {
+        let cfg = test_cfg();
+        let fp = init_params(&cfg, 0);
+        let m = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
+        assert!(m.decode_step(&[0; 5], 1).is_err()); // wrong window length
+        assert!(m.decode_step(&[], 0).is_err());
+        let mut w = windows(&cfg, 1, 0);
+        w[0] = 999; // out-of-vocab token
+        assert!(m.decode_step(&w, 1).is_err());
+    }
+
+    #[test]
+    fn decode_depends_on_last_tokens_causally() {
+        // editing the final window token must change logits; editing only
+        // the first token of a window also may — but a *different* batch
+        // row must never affect another row
+        let cfg = test_cfg();
+        let fp = pruned(&cfg, 0.5, 5);
+        let m = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
+        let w = windows(&cfg, 2, 11);
+        let base = m.decode_step(&w, 2).unwrap();
+        let mut w2 = w.clone();
+        w2[cfg.seq] = (w2[cfg.seq] + 1) % cfg.vocab as i32; // row 1's first token
+        let edited = m.decode_step(&w2, 2).unwrap();
+        // row 0 untouched
+        assert_eq!(&base.data()[..cfg.vocab], &edited.data()[..cfg.vocab]);
+        // row 1 changed
+        assert_ne!(&base.data()[cfg.vocab..], &edited.data()[cfg.vocab..]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Continuous-batching request admission: a bounded FIFO queue plus the
+//! batch-formation policy that decides, each decode step, which queued
+//! requests join the running batch.
+//!
+//! Policy (the classic continuous-batching shape):
+//! * while requests are in flight, free batch slots are filled *immediately*
+//!   from the queue — joiners ride the next decode step;
+//! * from idle, the engine waits up to `max_wait` steps for the queue to
+//!   fill a whole batch before launching a partial one, trading first-token
+//!   latency for step efficiency.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+/// One inference request (token ids in, token budget out).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// per-request sampling stream seed
+    pub seed: u64,
+}
+
+/// Batch-formation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerPolicy {
+    /// decode-batch capacity (concurrent requests per step)
+    pub max_batch: usize,
+    /// idle steps to wait for a full batch before launching a partial one
+    pub max_wait: usize,
+    /// bounded admission queue capacity
+    pub queue_cap: usize,
+}
+
+impl Default for SchedulerPolicy {
+    fn default() -> SchedulerPolicy {
+        SchedulerPolicy { max_batch: 8, max_wait: 2, queue_cap: 64 }
+    }
+}
+
+/// The bounded queue + admission state.
+pub struct Scheduler {
+    policy: SchedulerPolicy,
+    queue: VecDeque<ServeRequest>,
+    /// idle steps spent waiting for a full batch
+    waited: usize,
+}
+
+impl Scheduler {
+    pub fn new(policy: SchedulerPolicy) -> Scheduler {
+        assert!(policy.max_batch > 0, "max_batch must be positive");
+        Scheduler { policy, queue: VecDeque::new(), waited: 0 }
+    }
+
+    pub fn policy(&self) -> &SchedulerPolicy {
+        &self.policy
+    }
+
+    /// Enqueue a request; errors when the bounded queue is full
+    /// (backpressure — the caller decides whether to retry or shed).
+    pub fn submit(&mut self, req: ServeRequest) -> Result<()> {
+        if self.queue.len() >= self.policy.queue_cap {
+            bail!(
+                "request queue full ({} of {}); rejecting request {}",
+                self.queue.len(),
+                self.policy.queue_cap,
+                req.id
+            );
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether the bounded queue can accept another request right now.
+    pub fn has_capacity(&self) -> bool {
+        self.queue.len() < self.policy.queue_cap
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Batch formation for one step given `active` in-flight requests.
+    /// Returns the requests that join this step (possibly empty).
+    pub fn admit(&mut self, active: usize) -> Vec<ServeRequest> {
+        let free = self.policy.max_batch.saturating_sub(active);
+        if free == 0 || self.queue.is_empty() {
+            return Vec::new();
+        }
+        let partial = self.queue.len() < self.policy.max_batch;
+        if active == 0 && partial && self.waited < self.policy.max_wait {
+            // idle engine, partial batch: hold for up to max_wait steps
+            self.waited += 1;
+            return Vec::new();
+        }
+        self.waited = 0;
+        let n = free.min(self.queue.len());
+        self.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> ServeRequest {
+        ServeRequest { id, prompt: vec![1, 2], max_new_tokens: 4, seed: id }
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow() {
+        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 2, max_wait: 0, queue_cap: 2 });
+        s.submit(req(0)).unwrap();
+        s.submit(req(1)).unwrap();
+        assert!(s.submit(req(2)).is_err());
+        assert_eq!(s.queue_len(), 2);
+    }
+
+    #[test]
+    fn idle_engine_waits_for_full_batch_then_launches_partial() {
+        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 4, max_wait: 2, queue_cap: 16 });
+        s.submit(req(0)).unwrap();
+        s.submit(req(1)).unwrap();
+        assert!(s.admit(0).is_empty(), "first idle step waits");
+        assert!(s.admit(0).is_empty(), "second idle step waits");
+        let batch = s.admit(0);
+        assert_eq!(batch.len(), 2, "max_wait exhausted -> partial batch");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn full_batch_launches_immediately() {
+        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 2, max_wait: 5, queue_cap: 16 });
+        s.submit(req(0)).unwrap();
+        s.submit(req(1)).unwrap();
+        s.submit(req(2)).unwrap();
+        let batch = s.admit(0);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(s.queue_len(), 1, "overflow stays queued");
+    }
+
+    #[test]
+    fn running_batch_joins_immediately_up_to_capacity() {
+        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 4, max_wait: 9, queue_cap: 16 });
+        s.submit(req(0)).unwrap();
+        // 3 slots busy, 1 free: the queued request joins with no wait
+        assert_eq!(s.admit(3).len(), 1);
+        // full batch: nothing joins even though requests are queued
+        s.submit(req(1)).unwrap();
+        assert!(s.admit(4).is_empty());
+        assert_eq!(s.queue_len(), 1);
+    }
+
+    #[test]
+    fn wait_counter_resets_after_launch() {
+        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 2, max_wait: 1, queue_cap: 16 });
+        s.submit(req(0)).unwrap();
+        assert!(s.admit(0).is_empty());
+        assert_eq!(s.admit(0).len(), 1);
+        // next idle arrival waits again (counter was reset)
+        s.submit(req(1)).unwrap();
+        assert!(s.admit(0).is_empty());
+        assert_eq!(s.admit(0).len(), 1);
+    }
+}

@@ -3,6 +3,7 @@
 //! runtime scales with density; at 50% sparsity the ideal speedup is 2x
 //! minus index-overhead.
 
+use crate::sparse::threads::{for_each_token_tile, TOKEN_TILE};
 use crate::tensor::Tensor;
 
 #[derive(Clone, Debug)]
@@ -56,7 +57,8 @@ impl CsrMatrix {
     /// `v * xT[k, :]` — a contiguous, auto-vectorizable axpy. This is the
     /// layout trick real CPU sparse engines (DeepSparse) use: sparsity in
     /// the weights, SIMD across the batch. The one-time transpose of x is
-    /// O(T·K) against the O(nnz·T) kernel.
+    /// O(T·K) against the O(nnz·T) kernel. Token tiles fan out over
+    /// `SPARSEGPT_THREADS` workers (default 1).
     pub fn layer(&self, x: &Tensor) -> Tensor {
         let (t_n, k_n) = (x.rows(), x.cols());
         assert_eq!(k_n, self.cols);
@@ -64,10 +66,9 @@ impl CsrMatrix {
         let xt = x.transpose2(); // (k_n, t_n): token dim contiguous
         let xd = xt.data();
         let mut y = vec![0.0f32; t_n * o_n];
-        const TB: usize = 256; // token tile kept L1/L2-resident
-        let mut acc = vec![0.0f32; TB];
-        for t0 in (0..t_n).step_by(TB) {
-            let tb = TB.min(t_n - t0);
+        for_each_token_tile(t_n, o_n, &mut y, |t0, yrows| {
+            let tb = yrows.len() / o_n;
+            let mut acc = [0.0f32; TOKEN_TILE];
             for o in 0..o_n {
                 let lo = self.row_ptr[o] as usize;
                 let hi = self.row_ptr[o + 1] as usize;
@@ -82,10 +83,10 @@ impl CsrMatrix {
                     }
                 }
                 for (tt, &av) in a.iter().enumerate() {
-                    y[(t0 + tt) * o_n + o] = av;
+                    yrows[tt * o_n + o] = av;
                 }
             }
-        }
+        });
         Tensor::new(vec![t_n, o_n], y)
     }
 

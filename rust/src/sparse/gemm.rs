@@ -1,7 +1,9 @@
 //! Dense baseline: y = x @ W^T with register-blocked inner loops — the
 //! "cuBLAS / dense DeepSparse" stand-in that the sparse kernels are
-//! measured against. Single-threaded (the testbed is one core).
+//! measured against. Single-threaded by default; `SPARSEGPT_THREADS`
+//! fans token tiles out over scoped threads (see [`crate::sparse::threads`]).
 
+use crate::sparse::threads::{for_each_token_tile, TOKEN_TILE};
 use crate::tensor::Tensor;
 
 /// y[t, o] = sum_k x[t, k] * w[o, k];  x: (T, K), w: (O, K) -> y: (T, O).
@@ -17,10 +19,9 @@ pub fn dense_layer(x: &Tensor, w: &Tensor) -> Tensor {
     let xd = xt.data();
     let wd = w.data();
     let mut y = vec![0.0f32; t_n * o_n];
-    const TB: usize = 256;
-    let mut acc = vec![0.0f32; TB];
-    for t0 in (0..t_n).step_by(TB) {
-        let tb = TB.min(t_n - t0);
+    for_each_token_tile(t_n, o_n, &mut y, |t0, yrows| {
+        let tb = yrows.len() / o_n;
+        let mut acc = [0.0f32; TOKEN_TILE];
         for o in 0..o_n {
             let wr = &wd[o * k_n..(o + 1) * k_n];
             let a = &mut acc[..tb];
@@ -32,10 +33,10 @@ pub fn dense_layer(x: &Tensor, w: &Tensor) -> Tensor {
                 }
             }
             for (tt, &av) in a.iter().enumerate() {
-                y[(t0 + tt) * o_n + o] = av;
+                yrows[tt * o_n + o] = av;
             }
         }
-    }
+    });
     Tensor::new(vec![t_n, o_n], y)
 }
 

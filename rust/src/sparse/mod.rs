@@ -9,7 +9,10 @@
 pub mod csr;
 pub mod gemm;
 pub mod nm;
+pub mod pack;
+pub mod threads;
 
 pub use csr::CsrMatrix;
 pub use gemm::dense_layer;
 pub use nm::NmMatrix;
+pub use pack::{PackFormat, PackPolicy, PackedMatrix};

@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::sparse::threads::{for_each_token_tile, TOKEN_TILE};
 use crate::tensor::Tensor;
 
 #[derive(Clone, Debug)]
@@ -78,7 +79,8 @@ impl NmMatrix {
 
     /// y = x @ W^T on the token-major layout (cf. `CsrMatrix::layer`): each
     /// kept value contributes a contiguous vectorizable axpy over the token
-    /// tile — the CPU analog of the sparse-tensor-core dataflow.
+    /// tile — the CPU analog of the sparse-tensor-core dataflow. Token
+    /// tiles fan out over `SPARSEGPT_THREADS` workers (default 1).
     pub fn layer(&self, x: &Tensor) -> Tensor {
         let (t_n, k_n) = (x.rows(), x.cols());
         assert_eq!(k_n, self.cols);
@@ -88,10 +90,9 @@ impl NmMatrix {
         let xt = x.transpose2();
         let xd = xt.data();
         let mut y = vec![0.0f32; t_n * o_n];
-        const TB: usize = 256;
-        let mut acc = vec![0.0f32; TB];
-        for t0 in (0..t_n).step_by(TB) {
-            let tb = TB.min(t_n - t0);
+        for_each_token_tile(t_n, o_n, &mut y, |t0, yrows| {
+            let tb = yrows.len() / o_n;
+            let mut acc = [0.0f32; TOKEN_TILE];
             for o in 0..o_n {
                 let base = o * per_row;
                 let a = &mut acc[..tb];
@@ -112,10 +113,10 @@ impl NmMatrix {
                     }
                 }
                 for (tt, &av) in a.iter().enumerate() {
-                    y[(t0 + tt) * o_n + o] = av;
+                    yrows[tt * o_n + o] = av;
                 }
             }
-        }
+        });
         Tensor::new(vec![t_n, o_n], y)
     }
 

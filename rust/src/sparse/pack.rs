@@ -1,0 +1,515 @@
+//! Packed weight matrices for the serving path: one pruned linear layer in
+//! the storage/compute format the sparse engine will execute it in —
+//! CSR for unstructured sparsity, bitmask-packed n:m for the structured
+//! regime, or plain dense for layers the pruner left (nearly) dense.
+//!
+//! Packing is *lossless over the value grid the kernels see*: `to_dense`
+//! of a packed matrix equals the pruned dense matrix elementwise, and the
+//! packed `layer` kernels visit surviving weights in the same order as
+//! `dense_layer`, so packed decode is element-identical to dense decode
+//! (pinned by the proptests).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::sparse::{dense_layer, CsrMatrix, NmMatrix};
+use crate::tensor::Tensor;
+
+/// Which storage format to pack a matrix into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackFormat {
+    /// per-matrix choice: n:m when the pattern holds, CSR when sparse
+    /// enough, dense otherwise
+    Auto,
+    Dense,
+    Csr,
+    Nm(usize, usize),
+}
+
+impl PackFormat {
+    pub fn parse(s: &str) -> Result<PackFormat> {
+        match s {
+            "auto" => Ok(PackFormat::Auto),
+            "dense" => Ok(PackFormat::Dense),
+            "csr" => Ok(PackFormat::Csr),
+            other => {
+                let (n, m) = other.split_once(':').ok_or_else(|| {
+                    anyhow!("unknown pack format {other:?} (expected auto|dense|csr|n:m)")
+                })?;
+                let (n, m): (usize, usize) = (n.parse()?, m.parse()?);
+                if n == 0 || m <= n || m > 8 {
+                    bail!("invalid n:m pack format {other:?} (need 0 < n < m <= 8)");
+                }
+                Ok(PackFormat::Nm(n, m))
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PackFormat::Auto => "auto".to_string(),
+            PackFormat::Dense => "dense".to_string(),
+            PackFormat::Csr => "csr".to_string(),
+            PackFormat::Nm(n, m) => format!("{n}:{m}"),
+        }
+    }
+}
+
+/// How the packer chooses formats under [`PackFormat::Auto`].
+#[derive(Clone, Copy, Debug)]
+pub struct PackPolicy {
+    pub format: PackFormat,
+    /// `Auto` only: matrices denser than this stay dense (the "fall back
+    /// to `dense_layer` for unpruned layers" rule).
+    pub dense_cutoff: f64,
+}
+
+impl Default for PackPolicy {
+    fn default() -> PackPolicy {
+        PackPolicy { format: PackFormat::Auto, dense_cutoff: 0.95 }
+    }
+}
+
+impl PackPolicy {
+    pub fn with_format(format: PackFormat) -> PackPolicy {
+        PackPolicy { format, ..Default::default() }
+    }
+}
+
+/// One weight matrix in its serving format.
+#[derive(Clone, Debug)]
+pub enum PackedMatrix {
+    Dense(Tensor),
+    Csr(CsrMatrix),
+    Nm(NmMatrix),
+}
+
+/// Does `w` satisfy the n:m constraint (at most n nonzeros per group)?
+fn satisfies_nm(w: &Tensor, n: usize, m: usize) -> bool {
+    if w.cols() % m != 0 {
+        return false;
+    }
+    for r in 0..w.rows() {
+        let row = w.row(r);
+        for g in (0..w.cols()).step_by(m) {
+            if row[g..g + m].iter().filter(|&&v| v != 0.0).count() > n {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+impl PackedMatrix {
+    /// Pack a (pruned) dense matrix per `policy`.
+    pub fn pack(w: &Tensor, policy: &PackPolicy) -> Result<PackedMatrix> {
+        match policy.format {
+            PackFormat::Dense => Ok(PackedMatrix::Dense(w.clone())),
+            PackFormat::Csr => Ok(PackedMatrix::Csr(CsrMatrix::from_dense(w))),
+            PackFormat::Nm(n, m) => Ok(PackedMatrix::Nm(NmMatrix::from_dense(w, n, m)?)),
+            PackFormat::Auto => {
+                let density = 1.0 - w.sparsity();
+                if density > policy.dense_cutoff {
+                    return Ok(PackedMatrix::Dense(w.clone()));
+                }
+                for (n, m) in [(2usize, 4usize), (4, 8)] {
+                    // prefer the structured format only when the pattern is
+                    // genuinely n:m (not merely implied by deep sparsity)
+                    if density > (n as f64 / m as f64) * 0.5 && satisfies_nm(w, n, m) {
+                        return Ok(PackedMatrix::Nm(NmMatrix::from_dense(w, n, m)?));
+                    }
+                }
+                Ok(PackedMatrix::Csr(CsrMatrix::from_dense(w)))
+            }
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            PackedMatrix::Dense(t) => t.rows(),
+            PackedMatrix::Csr(c) => c.rows,
+            PackedMatrix::Nm(n) => n.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            PackedMatrix::Dense(t) => t.cols(),
+            PackedMatrix::Csr(c) => c.cols,
+            PackedMatrix::Nm(n) => n.cols,
+        }
+    }
+
+    /// Surviving (nonzero-representable) weights.
+    pub fn nnz(&self) -> usize {
+        match self {
+            PackedMatrix::Dense(t) => t.data().iter().filter(|&&v| v != 0.0).count(),
+            PackedMatrix::Csr(c) => c.nnz(),
+            PackedMatrix::Nm(n) => n.values.iter().filter(|&&v| v != 0.0).count(),
+        }
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows() * self.cols()).max(1) as f64
+    }
+
+    pub fn format_label(&self) -> &'static str {
+        match self {
+            PackedMatrix::Dense(_) => "dense",
+            PackedMatrix::Csr(_) => "csr",
+            PackedMatrix::Nm(_) => "nm",
+        }
+    }
+
+    /// y = x @ W^T through the matching kernel. All three kernels share the
+    /// token-major tile skeleton and visit surviving weights in the same
+    /// order, so switching formats never perturbs f32 results.
+    pub fn layer(&self, x: &Tensor) -> Tensor {
+        match self {
+            PackedMatrix::Dense(t) => dense_layer(x, t),
+            PackedMatrix::Csr(c) => c.layer(x),
+            PackedMatrix::Nm(n) => n.layer(x),
+        }
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        match self {
+            PackedMatrix::Dense(t) => t.clone(),
+            PackedMatrix::Csr(c) => c.to_dense(),
+            PackedMatrix::Nm(n) => n.to_dense(),
+        }
+    }
+
+    // ---- byte serialization (little-endian; the sparse_store sections) ----
+
+    const TAG_DENSE: u8 = 0;
+    const TAG_CSR: u8 = 1;
+    const TAG_NM: u8 = 2;
+
+    /// Append this matrix's byte encoding to `out`.
+    ///
+    /// ```text
+    /// dense: tag=0 u8, pad[3], rows u32, cols u32, f32 * rows*cols
+    /// csr:   tag=1 u8, pad[3], rows u32, cols u32, nnz u64,
+    ///        row_ptr u32 * (rows+1), col_idx u32 * nnz, values f32 * nnz
+    /// nm:    tag=2 u8, n u8, m u8, pad[1], rows u32, cols u32, kept u64,
+    ///        group bitmasks u8 * (rows*cols/m)  (bit j = column g*m+j kept),
+    ///        pad to 4, values f32 * kept        (set bits, ascending)
+    /// ```
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        match self {
+            PackedMatrix::Dense(t) => {
+                out.push(Self::TAG_DENSE);
+                out.extend_from_slice(&[0u8; 3]);
+                out.extend_from_slice(&(t.rows() as u32).to_le_bytes());
+                out.extend_from_slice(&(t.cols() as u32).to_le_bytes());
+                for v in t.data() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            PackedMatrix::Csr(c) => {
+                out.push(Self::TAG_CSR);
+                out.extend_from_slice(&[0u8; 3]);
+                out.extend_from_slice(&(c.rows as u32).to_le_bytes());
+                out.extend_from_slice(&(c.cols as u32).to_le_bytes());
+                out.extend_from_slice(&(c.nnz() as u64).to_le_bytes());
+                for v in &c.row_ptr {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                for v in &c.col_idx {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                for v in &c.values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            PackedMatrix::Nm(nm) => {
+                debug_assert!(nm.m <= 8, "n:m bitmask packing needs m <= 8");
+                out.push(Self::TAG_NM);
+                out.push(nm.n as u8);
+                out.push(nm.m as u8);
+                out.push(0u8);
+                out.extend_from_slice(&(nm.rows as u32).to_le_bytes());
+                out.extend_from_slice(&(nm.cols as u32).to_le_bytes());
+                let groups = nm.rows * nm.cols / nm.m;
+                // group bitmasks + surviving values in ascending-bit order
+                let mut masks = vec![0u8; groups];
+                let mut kept = Vec::new();
+                for g in 0..groups {
+                    // slots are stored in ascending within-group offset
+                    // order by `NmMatrix::from_dense`, zero-padded at the end
+                    for i in 0..nm.n {
+                        let k = g * nm.n + i;
+                        if nm.values[k] != 0.0 {
+                            masks[g] |= 1u8 << nm.offsets[k];
+                            kept.push(nm.values[k]);
+                        }
+                    }
+                }
+                out.extend_from_slice(&(kept.len() as u64).to_le_bytes());
+                out.extend_from_slice(&masks);
+                while out.len() % 4 != 0 {
+                    out.push(0u8);
+                }
+                for v in &kept {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Decode one matrix from `buf`; returns it plus the bytes consumed.
+    pub fn read_bytes(buf: &[u8]) -> Result<(PackedMatrix, usize)> {
+        let mut r = Reader { buf, i: 0 };
+        let tag = r.u8()?;
+        match tag {
+            Self::TAG_DENSE => {
+                r.skip(3)?;
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                let data = r.f32s(rows * cols)?;
+                Ok((PackedMatrix::Dense(Tensor::new(vec![rows, cols], data)), r.i))
+            }
+            Self::TAG_CSR => {
+                r.skip(3)?;
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                let nnz = r.u64()? as usize;
+                if nnz > rows * cols {
+                    bail!("csr nnz {nnz} exceeds {rows}x{cols}");
+                }
+                let row_ptr = r.u32s(rows + 1)?;
+                if row_ptr.last().copied().unwrap_or(0) as usize != nnz {
+                    bail!("csr row_ptr does not end at nnz");
+                }
+                if row_ptr.first().copied().unwrap_or(0) != 0
+                    || row_ptr.windows(2).any(|w| w[0] > w[1])
+                {
+                    // non-monotonic pointers would make the kernels slice
+                    // values[lo..hi] with lo > hi and panic mid-decode
+                    bail!("csr row_ptr is not monotonically non-decreasing from 0");
+                }
+                let col_idx = r.u32s(nnz)?;
+                if col_idx.iter().any(|&c| c as usize >= cols) {
+                    bail!("csr column index out of range");
+                }
+                let values = r.f32s(nnz)?;
+                Ok((PackedMatrix::Csr(CsrMatrix { rows, cols, row_ptr, col_idx, values }), r.i))
+            }
+            Self::TAG_NM => {
+                let n = r.u8()? as usize;
+                let m = r.u8()? as usize;
+                r.skip(1)?;
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                if n == 0 || m <= n || m > 8 || cols % m != 0 {
+                    bail!("nm header invalid: {n}:{m} over {rows}x{cols}");
+                }
+                let kept_n = r.u64()? as usize;
+                let groups = rows * cols / m;
+                let masks = r.bytes(groups)?.to_vec();
+                r.align4()?;
+                let kept = r.f32s(kept_n)?;
+                // rebuild the zero-padded (values, offsets) slot arrays
+                let mut values = Vec::with_capacity(groups * n);
+                let mut offsets = Vec::with_capacity(groups * n);
+                let mut ki = 0usize;
+                for &mask in &masks {
+                    let mut cnt = 0usize;
+                    for j in 0..m {
+                        if mask & (1u8 << j) != 0 {
+                            if cnt == n || ki >= kept.len() {
+                                bail!("nm group overflows {n}:{m} on decode");
+                            }
+                            values.push(kept[ki]);
+                            offsets.push(j as u8);
+                            ki += 1;
+                            cnt += 1;
+                        }
+                    }
+                    while cnt < n {
+                        values.push(0.0);
+                        offsets.push(0);
+                        cnt += 1;
+                    }
+                }
+                if ki != kept.len() {
+                    bail!("nm kept-value count mismatch");
+                }
+                Ok((PackedMatrix::Nm(NmMatrix { n, m, rows, cols, values, offsets }), r.i))
+            }
+            other => bail!("unknown packed-matrix tag {other}"),
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.buf.len() {
+            bail!("packed matrix truncated at byte {}", self.i);
+        }
+        let out = &self.buf[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+
+    fn skip(&mut self, n: usize) -> Result<()> {
+        self.bytes(n).map(|_| ())
+    }
+
+    fn align4(&mut self) -> Result<()> {
+        while self.i % 4 != 0 {
+            self.skip(1)?;
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let b = self.bytes(n * 4)?;
+        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.bytes(n * 4)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+    use crate::util::prng::Rng;
+
+    fn random(seed: u64, r: usize, c: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect())
+    }
+
+    /// Make row 0's first 8 columns dense so no n:m pattern (m <= 8) holds
+    /// — keeps "unstructured but n:m-by-luck" out of deterministic tests.
+    fn break_nm(mut w: Tensor) -> Tensor {
+        for j in 0..8.min(w.cols()) {
+            w.set2(0, j, 1.0 + j as f32);
+        }
+        w
+    }
+
+    #[test]
+    fn auto_picks_by_structure() {
+        let policy = PackPolicy::default();
+        let dense = random(0, 8, 16);
+        assert_eq!(PackedMatrix::pack(&dense, &policy).unwrap().format_label(), "dense");
+        let w50 = break_nm(magnitude_prune(&random(1, 8, 16), 0.5).0);
+        assert_eq!(PackedMatrix::pack(&w50, &policy).unwrap().format_label(), "csr");
+        let (w24, _) = magnitude_prune_nm(&random(2, 8, 16), 2, 4);
+        assert_eq!(PackedMatrix::pack(&w24, &policy).unwrap().format_label(), "nm");
+    }
+
+    #[test]
+    fn forced_formats_respected() {
+        let w = break_nm(magnitude_prune(&random(3, 6, 12), 0.5).0);
+        for (fmt, label) in [
+            (PackFormat::Dense, "dense"),
+            (PackFormat::Csr, "csr"),
+            (PackFormat::Auto, "csr"),
+        ] {
+            let p = PackedMatrix::pack(&w, &PackPolicy::with_format(fmt)).unwrap();
+            assert_eq!(p.format_label(), label);
+            assert_eq!(p.to_dense(), w);
+        }
+        // forcing n:m on a non-conforming matrix is a clean error
+        let nm24 = PackPolicy::with_format(PackFormat::Nm(2, 4));
+        assert!(PackedMatrix::pack(&random(3, 6, 12), &nm24).is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip_all_formats() {
+        let (w50, _) = magnitude_prune(&random(4, 9, 24), 0.6);
+        let (w24, _) = magnitude_prune_nm(&random(5, 8, 24), 2, 4);
+        let pol = PackPolicy::with_format;
+        let cases = [
+            PackedMatrix::pack(&random(6, 5, 7), &pol(PackFormat::Dense)).unwrap(),
+            PackedMatrix::pack(&w50, &pol(PackFormat::Csr)).unwrap(),
+            PackedMatrix::pack(&w24, &pol(PackFormat::Nm(2, 4))).unwrap(),
+        ];
+        for p in cases {
+            let mut buf = Vec::new();
+            p.write_bytes(&mut buf);
+            let (q, used) = PackedMatrix::read_bytes(&buf).unwrap();
+            assert_eq!(used, buf.len());
+            assert_eq!(q.format_label(), p.format_label());
+            assert_eq!(q.to_dense(), p.to_dense());
+            assert_eq!(q.nnz(), p.nnz());
+        }
+    }
+
+    #[test]
+    fn layer_dispatch_matches_dense_kernel() {
+        let (w, _) = magnitude_prune(&random(7, 16, 32), 0.5);
+        let x = random(8, 5, 32);
+        let want = dense_layer(&x, &w);
+        for fmt in [PackFormat::Dense, PackFormat::Csr] {
+            let p = PackedMatrix::pack(&w, &PackPolicy::with_format(fmt)).unwrap();
+            assert_eq!(p.layer(&x).data(), want.data(), "{}", p.format_label());
+        }
+        let (w24, _) = magnitude_prune_nm(&random(9, 16, 32), 2, 4);
+        let want = dense_layer(&x, &w24);
+        let p = PackedMatrix::pack(&w24, &PackPolicy::with_format(PackFormat::Nm(2, 4))).unwrap();
+        assert_eq!(p.layer(&x).data(), want.data());
+    }
+
+    #[test]
+    fn truncated_bytes_rejected() {
+        let (w, _) = magnitude_prune(&random(10, 4, 8), 0.5);
+        let p = PackedMatrix::pack(&w, &PackPolicy::with_format(PackFormat::Csr)).unwrap();
+        let mut buf = Vec::new();
+        p.write_bytes(&mut buf);
+        for cut in [0, 1, 5, buf.len() - 1] {
+            assert!(PackedMatrix::read_bytes(&buf[..cut]).is_err(), "cut {cut}");
+        }
+        assert!(PackedMatrix::read_bytes(&[9, 0, 0, 0]).is_err()); // bad tag
+    }
+
+    #[test]
+    fn csr_non_monotonic_row_ptr_rejected() {
+        // passes the nnz/col-range checks but would slice values[3..2] in
+        // the kernels — must be a clean decode error, not a later panic
+        let bad = CsrMatrix {
+            rows: 2,
+            cols: 4,
+            row_ptr: vec![0, 3, 2],
+            col_idx: vec![0, 1],
+            values: vec![1.0, 2.0],
+        };
+        let mut buf = Vec::new();
+        PackedMatrix::Csr(bad).write_bytes(&mut buf);
+        assert!(PackedMatrix::read_bytes(&buf).is_err());
+    }
+
+    #[test]
+    fn format_parse_label_round_trip() {
+        for s in ["auto", "dense", "csr", "2:4", "4:8"] {
+            assert_eq!(PackFormat::parse(s).unwrap().label(), s);
+        }
+        for bad in ["", "nm", "4:2", "0:4", "2:16"] {
+            assert!(PackFormat::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+}

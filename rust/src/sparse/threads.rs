@@ -1,0 +1,132 @@
+//! Row-parallel driver for the sparse/dense layer kernels.
+//!
+//! All three kernels (`dense_layer`, `CsrMatrix::layer`, `NmMatrix::layer`)
+//! share the same loop skeleton: the output y (tokens, d_out) is produced
+//! one token *tile* at a time, and tiles are independent. This module owns
+//! that skeleton and fans tiles out over `std::thread::scope` workers when
+//! `SPARSEGPT_THREADS` asks for more than one (default 1, so single-core
+//! bench numbers stay comparable with earlier PRs).
+//!
+//! Every output element is computed by exactly one worker with the same
+//! accumulation order as the serial loop, so results are bit-identical for
+//! any thread count — the parity proptests hold regardless of the setting.
+
+/// Token tile kept L1/L2-resident by every kernel in this module's family.
+pub const TOKEN_TILE: usize = 256;
+
+/// Outputs smaller than this stay serial even with workers configured —
+/// thread spawn/join would rival the kernel work itself.
+const MIN_PARALLEL_OUT: usize = 8192;
+
+/// Worker count from `SPARSEGPT_THREADS` (default 1; 0 is treated as 1).
+/// Read once per process — the kernels sit in the decode hot loop and must
+/// not take the env lock per call.
+pub fn num_threads() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("SPARSEGPT_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|n| n.max(1))
+            .unwrap_or(1)
+    })
+}
+
+/// Run `tile(t0, y_rows)` for every token tile `[t0, t0 + tb)` of an output
+/// buffer `y` with `t_n` rows of `o_n` columns, where `y_rows` is exactly
+/// that tile's contiguous row span of `y`. Tiles are distributed over
+/// [`num_threads`] scoped threads (contiguous spans of whole tiles per
+/// worker), or run serially when one thread is configured.
+pub fn for_each_token_tile<F>(t_n: usize, o_n: usize, y: &mut [f32], tile: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    // tiny outputs stay serial: spawn/join would rival the kernel work
+    let threads = if y.len() < MIN_PARALLEL_OUT { 1 } else { num_threads() };
+    for_each_token_tile_with(threads, t_n, o_n, y, tile)
+}
+
+fn for_each_token_tile_with<F>(threads: usize, t_n: usize, o_n: usize, y: &mut [f32], tile: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(y.len(), t_n * o_n);
+    if t_n == 0 || o_n == 0 {
+        return;
+    }
+    let n_tiles = t_n.div_ceil(TOKEN_TILE);
+    let threads = threads.min(n_tiles);
+    if threads <= 1 {
+        for t0 in (0..t_n).step_by(TOKEN_TILE) {
+            let tb = TOKEN_TILE.min(t_n - t0);
+            tile(t0, &mut y[t0 * o_n..(t0 + tb) * o_n]);
+        }
+        return;
+    }
+    // contiguous spans of whole tiles per worker, so each worker's output
+    // rows form one contiguous &mut slice of y
+    let rows_per = n_tiles.div_ceil(threads) * TOKEN_TILE;
+    std::thread::scope(|scope| {
+        let mut rest = &mut y[..];
+        let mut t0 = 0usize;
+        while t0 < t_n {
+            let span = rows_per.min(t_n - t0);
+            // move `rest` out so the split inherits its full lifetime
+            let taken = std::mem::take(&mut rest);
+            let (mine, tail) = taken.split_at_mut(span * o_n);
+            rest = tail;
+            let start = t0;
+            let tile = &tile;
+            scope.spawn(move || {
+                let mut off = 0usize;
+                while off < span {
+                    let tb = TOKEN_TILE.min(span - off);
+                    tile(start + off, &mut mine[off * o_n..(off + tb) * o_n]);
+                    off += tb;
+                }
+            });
+            t0 += span;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(threads: usize, t_n: usize, o_n: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; t_n * o_n];
+        for_each_token_tile_with(threads, t_n, o_n, &mut y, |t0, rows| {
+            for (i, v) in rows.iter_mut().enumerate() {
+                *v = (t0 * o_n + i) as f32;
+            }
+        });
+        y
+    }
+
+    #[test]
+    fn covers_every_element_exactly_once() {
+        for threads in [1, 2, 3, 8] {
+            for (t_n, o_n) in [(1, 3), (255, 4), (256, 4), (257, 4), (1000, 7)] {
+                let y = fill(threads, t_n, o_n);
+                for (i, v) in y.iter().enumerate() {
+                    assert_eq!(*v, i as f32, "threads={threads} t_n={t_n} o_n={o_n} idx {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversubscribed_thread_count_is_clamped() {
+        // more workers than tiles must not panic or drop tiles
+        let y = fill(64, 300, 2);
+        assert_eq!(y.last().copied(), Some((300 * 2 - 1) as f32));
+    }
+
+    #[test]
+    fn env_default_is_single_thread() {
+        if std::env::var_os("SPARSEGPT_THREADS").is_none() {
+            assert_eq!(num_threads(), 1);
+        }
+    }
+}

@@ -107,6 +107,9 @@ fn job_spec_label_round_trip() {
         "e2e/small",
         "sweep/small/sparsegpt-50%,magnitude-2:4,adaprune-50%",
         "sweep/small", // dense-only sweep
+        "serve/nano/sparsegpt-50%",
+        "serve/small/magnitude-2:4",
+        "serve/medium/sparsegpt-2:4+4bit",
     ] {
         let spec = JobSpec::parse(label).unwrap_or_else(|e| panic!("{label}: {e:#}"));
         assert_eq!(spec.label(), label, "label round trip for {label}");
@@ -143,6 +146,8 @@ fn job_spec_rejects_malformed() {
         "prune/nano",
         "prune/nano/bogus-50%",
         "sweep/nano/sparsegpt-50%,bogus",
+        "serve/",
+        "serve/nano/bogus-50%",
         "gen-data/nano",
     ] {
         assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");

@@ -5,13 +5,16 @@
 use sparsegpt::coordinator::SkipSpec;
 use sparsegpt::data::corpus::{gen_corpus, CorpusStyle, Lexicon};
 use sparsegpt::data::Tokenizer;
-use sparsegpt::model::layout::LinearKind;
+use sparsegpt::model::init::init_params;
+use sparsegpt::model::layout::{LinearKind, PRUNABLE_KINDS};
+use sparsegpt::model::{ModelCfg, SparseStore};
+use sparsegpt::serve::SparseModel;
 use sparsegpt::solver::exact::exact_reconstruction;
 use sparsegpt::solver::hessian::{dampened_hinv_chol_f64, layer_sq_error};
 use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
 use sparsegpt::solver::quant::QuantGrid;
 use sparsegpt::solver::sparsegpt_ref::{ref_sparsegpt, Pattern};
-use sparsegpt::sparse::{dense_layer, CsrMatrix, NmMatrix};
+use sparsegpt::sparse::{dense_layer, CsrMatrix, NmMatrix, PackFormat, PackPolicy, PackedMatrix};
 use sparsegpt::tensor::linalg::{dampen, Mat};
 use sparsegpt::tensor::Tensor;
 use sparsegpt::util::prng::Rng;
@@ -203,6 +206,131 @@ fn prop_sparse_kernels_match_dense_on_arbitrary_masks() {
                 }
             }
         }
+    }
+}
+
+/// Build an arbitrary Bernoulli-masked matrix (any density, empty rows ok).
+fn bernoulli_masked(rng: &mut Rng, o: usize, k: usize, density: f64) -> Tensor {
+    let mut w = Tensor::new(vec![o, k], (0..o * k).map(|_| rng.normal_f32()).collect());
+    for x in w.data_mut() {
+        if rng.f64() >= density {
+            *x = 0.0;
+        }
+    }
+    w
+}
+
+/// Build an arbitrary n:m-masked matrix (random survivors, not magnitude).
+fn random_nm_masked(rng: &mut Rng, o: usize, k: usize, n: usize, m: usize) -> Tensor {
+    let mut w = Tensor::new(vec![o, k], (0..o * k).map(|_| rng.normal_f32()).collect());
+    for r in 0..o {
+        let row = w.row_mut(r);
+        for g in (0..k).step_by(m) {
+            let mut idx: Vec<usize> = (0..m).collect();
+            rng.shuffle(&mut idx);
+            for &j in &idx[n..] {
+                row[g + j] = 0.0;
+            }
+        }
+    }
+    w
+}
+
+/// Property: pack -> bytes -> unpack is bit-exact for CSR and n:m packed
+/// matrices on arbitrary Bernoulli / random-survivor n:m masks.
+#[test]
+fn prop_pack_bytes_roundtrip_bit_exact() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x2A0);
+        let o = 4 + 4 * rng.below(10);
+        let k = 8 * (1 + rng.below(6));
+        let w = bernoulli_masked(&mut rng, o, k, rng.f64());
+        let p = PackedMatrix::pack(&w, &PackPolicy::with_format(PackFormat::Csr)).unwrap();
+        let mut buf = Vec::new();
+        p.write_bytes(&mut buf);
+        let (q, used) = PackedMatrix::read_bytes(&buf).unwrap();
+        assert_eq!(used, buf.len(), "seed {seed}");
+        assert_eq!(q.to_dense().data(), w.data(), "csr roundtrip seed {seed}");
+        for (n, m) in [(2usize, 4usize), (4, 8)] {
+            let wnm = random_nm_masked(&mut rng, o, k, n, m);
+            let p = PackedMatrix::pack(&wnm, &PackPolicy::with_format(PackFormat::Nm(n, m)))
+                .unwrap();
+            let mut buf = Vec::new();
+            p.write_bytes(&mut buf);
+            let (q, used) = PackedMatrix::read_bytes(&buf).unwrap();
+            assert_eq!(used, buf.len(), "seed {seed}");
+            assert_eq!(q.to_dense().data(), wnm.data(), "{n}:{m} roundtrip seed {seed}");
+        }
+    }
+}
+
+fn prop_cfg(name: &str) -> ModelCfg {
+    ModelCfg::from_dims(name, 8, 2, 2, 1, 1, 13, 6)
+}
+
+/// Mask every prunable linear of a fresh model with an arbitrary pattern.
+fn masked_params(
+    rng: &mut Rng,
+    cfg: &ModelCfg,
+    mask: impl Fn(&mut Rng, usize, usize) -> Tensor,
+) -> sparsegpt::model::FlatParams {
+    let mut fp = init_params(cfg, rng.next_u64());
+    for layer in 0..cfg.layers {
+        for kind in PRUNABLE_KINDS {
+            let (r, c) = kind.shape(cfg);
+            fp.set_linear(kind, layer, &mask(rng, r, c)).unwrap();
+        }
+    }
+    fp
+}
+
+/// Property: a packed checkpoint written to disk and read back unpacks to
+/// the exact flat parameter vector it was packed from.
+#[test]
+fn prop_sparse_store_file_roundtrip_bit_exact() {
+    let cfg = prop_cfg("prop-store");
+    let dir = std::env::temp_dir().join(format!("sgpt_prop_store_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x3A0);
+        let density = rng.f64();
+        let fp = if seed % 2 == 0 {
+            masked_params(&mut rng, &cfg, |rng, r, c| bernoulli_masked(rng, r, c, density))
+        } else {
+            masked_params(&mut rng, &cfg, |rng, r, c| random_nm_masked(rng, r, c, 2, 4))
+        };
+        let store = SparseStore::pack(&fp, &PackPolicy::default(), "prop").unwrap();
+        let path = dir.join(format!("s{seed}.spkt"));
+        store.save(&path).unwrap();
+        let back = SparseStore::load(&path).unwrap();
+        assert_eq!(back.unpack(&cfg).unwrap().data, fp.data, "seed {seed}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: packed decode (CSR / n:m kernels) is element-identical to
+/// dense decode of the same pruned parameters — the serving engine's
+/// correctness contract.
+#[test]
+fn prop_packed_decode_element_identical_to_dense() {
+    let cfg = prop_cfg("prop-serve");
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x4A0);
+        let density = rng.f64();
+        let fp = if seed % 2 == 0 {
+            masked_params(&mut rng, &cfg, |rng, r, c| bernoulli_masked(rng, r, c, density))
+        } else {
+            masked_params(&mut rng, &cfg, |rng, r, c| random_nm_masked(rng, r, c, 2, 4))
+        };
+        let dense =
+            SparseModel::from_params(&fp, &PackPolicy::with_format(PackFormat::Dense)).unwrap();
+        let packed = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
+        let batch = 1 + rng.below(3);
+        let windows: Vec<i32> =
+            (0..batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let a = dense.decode_step(&windows, batch).unwrap();
+        let b = packed.decode_step(&windows, batch).unwrap();
+        assert_eq!(a.data(), b.data(), "seed {seed} ({})", packed.format_summary());
     }
 }
 

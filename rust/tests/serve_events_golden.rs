@@ -1,0 +1,106 @@
+//! Golden test for the serve job's JSONL event contract on the reference
+//! backend: a real zero-artifact run (no data, no checkpoints, no PJRT —
+//! seed-0 init + synthetic calibration fallbacks engage) proceeds through
+//! prune → pack → continuous-batching decode, and its lifecycle lines
+//! (`job-started`, `request-enqueued`, `batch-formed`, `request-finished`,
+//! `engine-drained`, `job-finished`) must serialize exactly as pinned in
+//! `golden/serve_events.jsonl`. Wall-clock fields (`secs`,
+//! `tokens_per_sec`) are normalized to 0; everything else — arrival order,
+//! batch formation, join/retire steps — is schedule-determined and exact.
+//!
+//! The workload (5 requests arriving one per step into a batch of 2 with
+//! max_wait 1, 3 tokens each) is chosen to exercise every scheduler
+//! behavior: the idle wait, a full-batch launch, mid-run relaunch, and a
+//! trailing partial batch.
+
+use sparsegpt::api::{JobSpec, JsonlSink, ServeSpec, Session};
+use sparsegpt::harness::Workspace;
+use sparsegpt::runtime::ReferenceBackend;
+use sparsegpt::util::json::Json;
+
+const PINNED: [&str; 6] = [
+    "job-started",
+    "request-enqueued",
+    "batch-formed",
+    "request-finished",
+    "engine-drained",
+    "job-finished",
+];
+
+fn run_serve_jsonl() -> String {
+    let dir = std::env::temp_dir().join(format!("sgpt_serve_golden_{}", std::process::id()));
+    let ws = Workspace {
+        data_dir: dir.join("data"), // absent: the synthetic-calibration fallback engages
+        ckpt_dir: dir.join("checkpoints"), // absent: the seed-0 init fallback engages
+        report_dir: dir.join("reports"),
+        rt: Box::new(ReferenceBackend::new()),
+    };
+    let mut spec = ServeSpec::new("nano");
+    spec.requests = 5;
+    spec.max_new_tokens = 3;
+    spec.prompt_len = 4;
+    spec.arrival_every = 1;
+    spec.max_batch = 2;
+    spec.max_wait = 1;
+    spec.temperature = 0.0; // greedy: the schedule alone determines events
+    spec.calib = 4;
+    let mut sink = JsonlSink::new(Vec::new());
+    let mut session = Session::with_workspace(ws);
+    session.run(&JobSpec::Serve(spec), &mut sink).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    String::from_utf8(sink.into_inner()).unwrap()
+}
+
+#[test]
+fn serve_lifecycle_events_match_golden() {
+    let text = run_serve_jsonl();
+    let mut pinned = String::new();
+    for line in text.lines() {
+        let mut v = Json::parse(line)
+            .unwrap_or_else(|e| panic!("unparseable event line {line:?}: {e:#}"));
+        let reason = v.get("reason").unwrap().as_str().unwrap().to_string();
+        if PINNED.contains(&reason.as_str()) {
+            // wall-clock fields are the only nondeterminism; pin them
+            if let Json::Obj(m) = &mut v {
+                for key in ["secs", "tokens_per_sec"] {
+                    if m.contains_key(key) {
+                        m.insert(key.to_string(), Json::Num(0.0));
+                    }
+                }
+            }
+            pinned.push_str(&v.to_string_compact());
+            pinned.push('\n');
+        }
+    }
+    let want = include_str!("golden/serve_events.jsonl");
+    assert_eq!(
+        pinned, want,
+        "serve JSONL event schema drifted — update \
+         rust/tests/golden/serve_events.jsonl deliberately (downstream \
+         consumers parse these lines)"
+    );
+
+    // the full stream is well-formed and the lifecycle is complete
+    let mut enqueued = 0;
+    let mut finished = 0;
+    let mut drained = 0;
+    let mut ok = false;
+    for line in text.lines() {
+        let v = Json::parse(line).unwrap();
+        match v.get("reason").unwrap().as_str().unwrap() {
+            "request-enqueued" => enqueued += 1,
+            "request-finished" => finished += 1,
+            "engine-drained" => {
+                drained += 1;
+                assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 5);
+                assert_eq!(v.get("tokens").unwrap().as_usize().unwrap(), 15);
+            }
+            "job-finished" => ok = matches!(v.get("ok").unwrap(), Json::Bool(true)),
+            _ => {}
+        }
+    }
+    assert_eq!(enqueued, 5, "every synthetic request is enqueued once");
+    assert_eq!(finished, 5, "every request retires exactly once");
+    assert_eq!(drained, 1);
+    assert!(ok, "serve job must finish ok");
+}
