@@ -81,6 +81,19 @@ pub enum Event {
         joined: usize,
         batch: usize,
     },
+    /// a joiner's chunked prefill began populating its KV cache
+    PrefillStarted {
+        id: u64,
+        step: usize,
+        prompt_tokens: usize,
+        chunks: usize,
+    },
+    /// a request's KV ring buffer evicted positions this step
+    CacheEvicted {
+        id: u64,
+        step: usize,
+        evicted: usize,
+    },
     /// a serve request finished (token budget reached) and retired
     RequestFinished {
         id: u64,
@@ -142,6 +155,8 @@ impl Event {
             Event::CheckpointPacked { .. } => "checkpoint-packed",
             Event::RequestEnqueued { .. } => "request-enqueued",
             Event::BatchFormed { .. } => "batch-formed",
+            Event::PrefillStarted { .. } => "prefill-started",
+            Event::CacheEvicted { .. } => "cache-evicted",
             Event::RequestFinished { .. } => "request-finished",
             Event::EngineDrained { .. } => "engine-drained",
             Event::JobFinished { .. } => "job-finished",
@@ -222,6 +237,19 @@ impl Event {
                 ("step", n(*step as f64)),
                 ("joined", n(*joined as f64)),
                 ("batch", n(*batch as f64)),
+            ]),
+            Event::PrefillStarted { id, step, prompt_tokens, chunks } => obj(vec![
+                reason,
+                ("id", n(*id as f64)),
+                ("step", n(*step as f64)),
+                ("prompt_tokens", n(*prompt_tokens as f64)),
+                ("chunks", n(*chunks as f64)),
+            ]),
+            Event::CacheEvicted { id, step, evicted } => obj(vec![
+                reason,
+                ("id", n(*id as f64)),
+                ("step", n(*step as f64)),
+                ("evicted", n(*evicted as f64)),
             ]),
             Event::RequestFinished { id, step, tokens } => obj(vec![
                 reason,
@@ -320,6 +348,15 @@ impl EventSink for HumanSink {
                 "[{}] step {step}: +{joined} joined, batch {batch}",
                 self.tag("serve")
             ),
+            Event::PrefillStarted { id, step, prompt_tokens, chunks } => println!(
+                "[{}] step {step}: request {id} prefilling {prompt_tokens} tokens \
+                 in {chunks} chunks",
+                self.tag("serve")
+            ),
+            Event::CacheEvicted { id, step, evicted } => println!(
+                "[{}] step {step}: request {id} evicted {evicted} cached positions",
+                self.tag("serve")
+            ),
             Event::RequestFinished { id, step, tokens } => println!(
                 "[{}] step {step}: request {id} finished ({tokens} tokens)",
                 self.tag("serve")
@@ -412,6 +449,8 @@ mod tests {
             },
             Event::RequestEnqueued { id: 0, step: 0, prompt_tokens: 8, max_new_tokens: 16 },
             Event::BatchFormed { step: 1, joined: 2, batch: 2 },
+            Event::PrefillStarted { id: 0, step: 1, prompt_tokens: 8, chunks: 1 },
+            Event::CacheEvicted { id: 0, step: 5, evicted: 1 },
             Event::RequestFinished { id: 0, step: 17, tokens: 16 },
             Event::EngineDrained { steps: 20, requests: 2, tokens: 32, tokens_per_sec: 64.0 },
             Event::JobFinished { job: "prune".into(), ok: true, secs: 2.0 },

@@ -41,7 +41,7 @@ pub use report::{
 pub use session::Session;
 pub use spec::{
     E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, JobSpec, PruneJobSpec, PruneSpec, ServeSpec,
-    StatsSpec, SweepSpec, TrainSpec, ZeroShotSpec,
+    StatsSpec, SweepSpec, TrainSpec, ZeroShotSpec, DEFAULT_PREFILL_CHUNK,
 };
 
 pub(crate) use session::prune_params;

@@ -131,11 +131,21 @@ pub struct ServeReport {
     pub formats: String,
     /// density over the packed prunable weights
     pub density: f64,
+    /// decoded through the incremental KV-cached path (vs full re-forward)
+    pub kv_cache: bool,
     pub steps: usize,
     pub tokens: usize,
-    /// wall time inside batched decode steps
+    /// wall time inside batched decode steps (prefill excluded)
     pub decode_secs: f64,
     pub tokens_per_sec: f64,
+    /// wall time inside chunked prefill passes (KV-cached mode)
+    pub prefill_secs: f64,
+    /// prompt tokens streamed through prefill (KV-cached mode)
+    pub prefill_tokens: usize,
+    /// KV ring-buffer evictions across all requests
+    pub cache_evictions: usize,
+    /// high-water mark of reserved cache memory
+    pub peak_cache_bytes: u64,
     pub requests: Vec<ServeRequestRow>,
     /// where the packed checkpoint was written, when requested
     pub packed_to: Option<PathBuf>,

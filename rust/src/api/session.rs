@@ -672,9 +672,13 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
             max_batch: spec.max_batch.max(1),
             max_wait: spec.max_wait,
             queue_cap: spec.queue_cap.max(1),
+            max_prefill_tokens: spec.max_prefill_tokens,
         },
         temperature: spec.temperature,
         top_k: spec.top_k,
+        kv_cache: spec.kv_cache,
+        prefill_chunk: spec.prefill_chunk,
+        cache_budget_bytes: spec.cache_budget_mb as u64 * 1024 * 1024,
     };
     let outcome = ServeEngine::new(&model, opts).run(incoming, &mut |ev| {
         sink.emit(&match ev {
@@ -688,6 +692,17 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
             }
             ServeEvent::BatchFormed { step, joined, batch } => {
                 Event::BatchFormed { step: *step, joined: *joined, batch: *batch }
+            }
+            ServeEvent::PrefillStarted { id, step, prompt_tokens, chunks } => {
+                Event::PrefillStarted {
+                    id: *id,
+                    step: *step,
+                    prompt_tokens: *prompt_tokens,
+                    chunks: *chunks,
+                }
+            }
+            ServeEvent::CacheEvicted { id, step, evicted } => {
+                Event::CacheEvicted { id: *id, step: *step, evicted: *evicted }
             }
             ServeEvent::Finished { id, step, tokens } => {
                 Event::RequestFinished { id: *id, step: *step, tokens: *tokens }
@@ -722,10 +737,15 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
         label,
         formats: model.format_summary().to_string(),
         density: model.density(),
+        kv_cache: spec.kv_cache,
         steps: outcome.steps,
         tokens: outcome.tokens,
         decode_secs: outcome.decode_secs,
         tokens_per_sec: outcome.tokens_per_sec(),
+        prefill_secs: outcome.prefill_secs,
+        prefill_tokens: outcome.prefill_tokens,
+        cache_evictions: outcome.cache_evictions,
+        peak_cache_bytes: outcome.peak_cache_bytes,
         requests,
         packed_to,
     })

@@ -405,8 +405,14 @@ impl SweepSpec {
     }
 }
 
+pub use crate::serve::engine::DEFAULT_PREFILL_CHUNK;
+
 /// `serve`: prune (or load a packed checkpoint) and run a synthetic
 /// continuous-batching decode workload through the sparse kernels.
+///
+/// The cache knobs round-trip through the job label as a comma list after
+/// the prune spec (only non-default values appear):
+/// `serve/<config>/<prune-spec>[,kv=off][,chunk=<n>][,cache-mb=<n>][,prefill=<n>]`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeSpec {
     pub config: String,
@@ -414,6 +420,16 @@ pub struct ServeSpec {
     pub prune: PruneSpec,
     /// packed-checkpoint format policy (auto | dense | csr | n:m)
     pub format: PackFormat,
+    /// incremental KV-cached decode (the serving path); `false` selects the
+    /// full re-forward reference path
+    pub kv_cache: bool,
+    /// prefill chunk rows (0 = the whole prompt in one chunk)
+    pub prefill_chunk: usize,
+    /// cache-memory budget in MiB (0 = unlimited); admission defers joins
+    /// that would exceed it until retirements free caches
+    pub cache_budget_mb: usize,
+    /// prompt tokens admission may hand to prefill per step (0 = unlimited)
+    pub max_prefill_tokens: usize,
     /// synthetic request count
     pub requests: usize,
     /// tokens generated per request
@@ -449,6 +465,10 @@ impl ServeSpec {
             config: config.to_string(),
             prune: PruneSpec::sparsegpt(0.5),
             format: PackFormat::Auto,
+            kv_cache: true,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            cache_budget_mb: 0,
+            max_prefill_tokens: 0,
             requests: 8,
             max_new_tokens: 16,
             prompt_len: 8,
@@ -481,6 +501,65 @@ impl ServeSpec {
     pub fn tokens(mut self, n: usize) -> ServeSpec {
         self.max_new_tokens = n;
         self
+    }
+
+    pub fn kv_cache(mut self, on: bool) -> ServeSpec {
+        self.kv_cache = on;
+        self
+    }
+
+    pub fn cache_budget_mb(mut self, mb: usize) -> ServeSpec {
+        self.cache_budget_mb = mb;
+        self
+    }
+
+    /// The canonical label tail: prune spec + non-default cache knobs.
+    fn extra_label(&self) -> String {
+        let mut parts = vec![self.prune.label()];
+        if !self.kv_cache {
+            parts.push("kv=off".to_string());
+        }
+        if self.prefill_chunk != DEFAULT_PREFILL_CHUNK {
+            parts.push(format!("chunk={}", self.prefill_chunk));
+        }
+        if self.cache_budget_mb != 0 {
+            parts.push(format!("cache-mb={}", self.cache_budget_mb));
+        }
+        if self.max_prefill_tokens != 0 {
+            parts.push(format!("prefill={}", self.max_prefill_tokens));
+        }
+        parts.join(",")
+    }
+
+    /// Parse the label tail produced by [`extra_label`].
+    ///
+    /// [`extra_label`]: ServeSpec::extra_label
+    fn apply_extra(&mut self, extra: &str) -> Result<()> {
+        let mut parts = extra.split(',');
+        self.prune = PruneSpec::parse(parts.next().unwrap_or(""))?;
+        for part in parts {
+            let err = || {
+                anyhow!(
+                    "unrecognized serve knob {part:?} (expected kv=on|off, chunk=<n>, \
+                     cache-mb=<n> or prefill=<n>)"
+                )
+            };
+            let (key, value) = part.split_once('=').ok_or_else(err)?;
+            match key {
+                "kv" => {
+                    self.kv_cache = match value {
+                        "on" => true,
+                        "off" => false,
+                        _ => return Err(err()),
+                    }
+                }
+                "chunk" => self.prefill_chunk = value.parse().map_err(|_| err())?,
+                "cache-mb" => self.cache_budget_mb = value.parse().map_err(|_| err())?,
+                "prefill" => self.max_prefill_tokens = value.parse().map_err(|_| err())?,
+                _ => return Err(err()),
+            }
+        }
+        Ok(())
     }
 }
 
@@ -537,7 +616,7 @@ impl JobSpec {
         match self {
             JobSpec::GenData(_) => "gen-data".to_string(),
             JobSpec::Prune(s) => format!("prune/{}/{}", s.config, s.prune.label()),
-            JobSpec::Serve(s) => format!("serve/{}/{}", s.config, s.prune.label()),
+            JobSpec::Serve(s) => format!("serve/{}/{}", s.config, s.extra_label()),
             JobSpec::Sweep(s) => {
                 if s.variants.is_empty() {
                     // dense-only sweep: no trailing slash, so it parses back
@@ -594,8 +673,9 @@ impl JobSpec {
                 let cfg = need_config()?;
                 let mut s = ServeSpec::new(cfg);
                 if let Some(p) = extra {
-                    // "serve/<config>" keeps the default compression
-                    s.prune = PruneSpec::parse(p)?;
+                    // "serve/<config>" keeps the default compression; the
+                    // tail is "<prune-spec>[,kv=off][,chunk=N][,cache-mb=N][,prefill=N]"
+                    s.apply_extra(p)?;
                 }
                 Ok(JobSpec::Serve(s))
             }
@@ -652,14 +732,40 @@ mod tests {
         let spec = ServeSpec::new("small").prune(PruneSpec::sparsegpt_nm(2, 4));
         let j = JobSpec::Serve(spec.clone());
         assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
-        // bare "serve/<cfg>" takes the default compression
+        // bare "serve/<cfg>" takes the default compression + cache knobs
         let JobSpec::Serve(parsed) = JobSpec::parse("serve/small").unwrap() else {
             panic!("wrong kind");
         };
         assert_eq!(parsed.prune, PruneSpec::sparsegpt(0.5));
         assert_eq!(parsed.requests, 8);
         assert_eq!(parsed.max_batch, 8);
+        assert!(parsed.kv_cache);
+        assert_eq!(parsed.prefill_chunk, DEFAULT_PREFILL_CHUNK);
+        assert_eq!(parsed.cache_budget_mb, 0);
         assert!(JobSpec::parse("serve/").is_err());
         assert!(JobSpec::parse("serve/nano/bogus-50%").is_err());
+    }
+
+    #[test]
+    fn serve_cache_knobs_round_trip_through_labels() {
+        let mut spec = ServeSpec::new("nano").kv_cache(false).cache_budget_mb(16);
+        spec.prefill_chunk = 8;
+        spec.max_prefill_tokens = 64;
+        let j = JobSpec::Serve(spec);
+        assert_eq!(
+            j.label(),
+            "serve/nano/sparsegpt-50%,kv=off,chunk=8,cache-mb=16,prefill=64"
+        );
+        assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
+        // defaults stay out of the label entirely
+        assert_eq!(JobSpec::Serve(ServeSpec::new("nano")).label(), "serve/nano/sparsegpt-50%");
+        for bad in [
+            "serve/nano/sparsegpt-50%,kv=maybe",
+            "serve/nano/sparsegpt-50%,chunk=x",
+            "serve/nano/sparsegpt-50%,wat=1",
+            "serve/nano/sparsegpt-50%,kv",
+        ] {
+            assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
+        }
     }
 }

@@ -44,11 +44,16 @@ commands:
             [--zeroshot-items 0] [--no-dense] [--save] [--ckpt <path>]
   e2e       [--config small] [--steps 300]
   serve     [--config nano] [--spec sparsegpt-50%] [--format auto|dense|csr|2:4]
+            [--kv-cache on|off] [--prefill-chunk 32] [--cache-mb 0]
+            [--max-prefill-tokens 0]
             [--requests 8] [--tokens 16] [--prompt-len 8] [--arrival-every 1]
             [--max-batch 8] [--max-wait 2] [--queue-cap 64]
             [--temperature 0.8] [--top-k 40] [--seed 0]
             [--damp 0.01] [--calib 32] [--calib-seed 0] [--ckpt <path>]
             [--store <path.spkt>] [--save-store <path.spkt>]
+            (kv-cache on = incremental decode through per-request KV ring
+            buffers with chunked prefill; off = the full re-forward
+            reference path — token-for-token identical, O(ctx) slower)
 
 global flags:
   --json    emit machine-readable JSON-lines events on stdout
@@ -220,6 +225,14 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
                 s.prune = PruneSpec::parse(label)?;
             }
             s.format = PackFormat::parse(args.get_or("format", "auto"))?;
+            s.kv_cache = match args.get_or("kv-cache", "on") {
+                "on" => true,
+                "off" => false,
+                other => bail!("--kv-cache takes on|off (got {other:?})"),
+            };
+            s.prefill_chunk = args.usize_or("prefill-chunk", s.prefill_chunk)?;
+            s.cache_budget_mb = args.usize_or("cache-mb", s.cache_budget_mb)?;
+            s.max_prefill_tokens = args.usize_or("max-prefill-tokens", s.max_prefill_tokens)?;
             s.requests = args.usize_or("requests", s.requests)?;
             s.max_new_tokens = args.usize_or("tokens", s.max_new_tokens)?;
             s.prompt_len = args.usize_or("prompt-len", s.prompt_len)?;
@@ -308,8 +321,12 @@ fn print_tables(report: &JobReport) {
         JobReport::Serve(r) => {
             let mut table = Table::new(
                 &format!(
-                    "serve: {} [{}] density {:.3} ({})",
-                    r.config, r.label, r.density, r.formats
+                    "serve: {} [{}] density {:.3} ({}) kv-cache {}",
+                    r.config,
+                    r.label,
+                    r.density,
+                    r.formats,
+                    if r.kv_cache { "on" } else { "off" }
                 ),
                 &["request", "prompt", "tokens", "joined", "finished"],
             );
@@ -327,6 +344,15 @@ fn print_tables(report: &JobReport) {
                 "{} tokens in {} steps, {:.2}s decode -> {:.1} tok/s",
                 r.tokens, r.steps, r.decode_secs, r.tokens_per_sec
             );
+            if r.kv_cache {
+                println!(
+                    "prefill: {} tokens in {:.2}s | {} cache evictions | peak cache {} KiB",
+                    r.prefill_tokens,
+                    r.prefill_secs,
+                    r.cache_evictions,
+                    r.peak_cache_bytes / 1024
+                );
+            }
         }
         JobReport::E2e(r) => {
             if let Some(t) = &r.train {

@@ -1,39 +1,83 @@
 //! The continuous-batching decode loop: joins queued requests into the
 //! running batch each step, decodes one token for every in-flight request
 //! through the sparse model, retires finished requests, and narrates the
-//! lifecycle (`Enqueued` → `BatchFormed` → `Finished` → `Drained`) through
-//! a hook the api layer maps onto the structured event stream.
+//! lifecycle (`Enqueued` → `BatchFormed` → `PrefillStarted` →
+//! `CacheEvicted` → `Finished` → `Drained`) through a hook the api layer
+//! maps onto the structured event stream.
+//!
+//! Two decode modes share one loop and produce token-for-token identical
+//! streams (pinned by `tests/serve_kv_parity.rs`):
+//!
+//! * **KV-cached** (default): a joiner runs a *chunked prefill* over its
+//!   prompt into a per-request [`KvCache`] and samples its first token from
+//!   the prefill logits; every later step runs just its newest token
+//!   through the packed linears ([`SparseModel::decode_cached`]) —
+//!   O(layers) per token. Retiring a request frees its cache, returning
+//!   its bytes to the [`CacheBudget`] the scheduler applies backpressure
+//!   against.
+//! * **Uncached**: every step re-forwards each request's whole context
+//!   with banded attention ([`SparseModel::forward_logits`]) —
+//!   O(ctx · layers) per token. The reference the cached path must match.
+//!
+//! Batch ordering is decided once, at admission: joiners append to the
+//! tail of the active batch and retirement compacts in place, so decode
+//! order is join order — the hot loop never re-sorts (pinned by the
+//! order-stability test below).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::eval::generate::pick_token;
+use crate::serve::kv::{CacheBudget, KvCache};
 use crate::serve::model::SparseModel;
-use crate::serve::scheduler::{Scheduler, SchedulerPolicy, ServeRequest};
+use crate::serve::scheduler::{Scheduler, SchedulerPolicy, ServeRequest, StepLimits};
 use crate::util::prng::Rng;
 
-/// Sampling + batching knobs shared by every request of a run.
+/// Default prefill chunk rows — the single source of truth; `ServeSpec`
+/// re-exports it so the API/CLI default can never drift from the engine's.
+pub const DEFAULT_PREFILL_CHUNK: usize = 32;
+
+/// Sampling + batching + cache knobs shared by every request of a run.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineOptions {
     pub policy: SchedulerPolicy,
     pub temperature: f64,
     pub top_k: usize,
+    /// incremental KV-cached decode (true, the serving path) or the full
+    /// re-forward reference path (false)
+    pub kv_cache: bool,
+    /// prefill chunk rows (0 = the whole prompt in one chunk)
+    pub prefill_chunk: usize,
+    /// cache-memory budget in bytes (0 = unlimited); admission defers
+    /// joins that would exceed it until retirements free caches
+    pub cache_budget_bytes: u64,
 }
 
 impl Default for EngineOptions {
     fn default() -> EngineOptions {
-        EngineOptions { policy: SchedulerPolicy::default(), temperature: 0.8, top_k: 40 }
+        EngineOptions {
+            policy: SchedulerPolicy::default(),
+            temperature: 0.8,
+            top_k: 40,
+            kv_cache: true,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            cache_budget_bytes: 0,
+        }
     }
 }
 
 /// Lifecycle notifications (the api layer turns these into
-/// `request-enqueued` / `batch-formed` / `request-finished` /
-/// `engine-drained` JSONL events).
+/// `request-enqueued` / `batch-formed` / `prefill-started` /
+/// `cache-evicted` / `request-finished` / `engine-drained` JSONL events).
 #[derive(Clone, Debug)]
 pub enum ServeEvent {
     Enqueued { id: u64, step: usize, prompt_tokens: usize, max_new_tokens: usize },
     BatchFormed { step: usize, joined: usize, batch: usize },
+    /// a joiner's chunked prefill pass began populating its KV cache
+    PrefillStarted { id: u64, step: usize, prompt_tokens: usize, chunks: usize },
+    /// a request's ring buffer evicted `evicted` positions this step
+    CacheEvicted { id: u64, step: usize, evicted: usize },
     Finished { id: u64, step: usize, tokens: usize },
     Drained { steps: usize, requests: usize, tokens: usize, decode_secs: f64 },
 }
@@ -54,8 +98,20 @@ pub struct EngineOutcome {
     pub finished: Vec<FinishedRequest>,
     pub steps: usize,
     pub tokens: usize,
-    /// wall time inside `decode_step` only (scheduling excluded)
+    /// wall time inside batched decode steps only (prefill + scheduling
+    /// excluded)
     pub decode_secs: f64,
+    /// wall time inside prefill passes (KV-cached mode only)
+    pub prefill_secs: f64,
+    /// prompt tokens streamed through prefill (KV-cached mode only)
+    pub prefill_tokens: usize,
+    /// ring-buffer evictions across all requests (prefill + decode)
+    pub cache_evictions: usize,
+    /// high-water mark of reserved cache memory
+    pub peak_cache_bytes: u64,
+    /// cache memory still reserved after the drain — always 0: retiring a
+    /// request returns its bytes to the budget
+    pub cache_bytes_in_use: u64,
 }
 
 impl EngineOutcome {
@@ -71,25 +127,31 @@ impl EngineOutcome {
 /// A request currently in the decode batch.
 struct Active {
     req: ServeRequest,
-    /// full sliding context (left-filled prompt + generated tokens)
+    /// effective prompt (empty prompts serve a single `0`) + generated
     ctx: Vec<i32>,
     generated: Vec<i32>,
     rng: Rng,
     joined_step: usize,
+    /// per-request KV cache (KV-cached mode)
+    cache: Option<KvCache>,
+    /// next-token logits awaiting sampling (from prefill or the last
+    /// batched decode)
+    pending: Option<Vec<f32>>,
 }
 
-/// Left-fill a prompt to a full `seq` window by repeating it (the model has
-/// no pad token — same convention as `eval::generate::sample`).
-pub fn left_fill_window(prompt: &[i32], seq: usize) -> Vec<i32> {
-    let mut ctx: Vec<i32> = prompt.to_vec();
-    while ctx.len() < seq {
-        let take = (seq - ctx.len()).min(prompt.len().max(1));
-        ctx.splice(0..0, prompt.iter().cloned().take(take));
-        if prompt.is_empty() {
-            ctx.splice(0..0, [0]);
+impl Active {
+    fn new(req: ServeRequest, joined_step: usize) -> Active {
+        let ctx = if req.prompt.is_empty() { vec![0] } else { req.prompt.clone() };
+        Active {
+            ctx,
+            generated: Vec::with_capacity(req.max_new_tokens),
+            rng: Rng::new(req.seed ^ 0x5e21e),
+            joined_step,
+            cache: None,
+            pending: None,
+            req,
         }
     }
-    ctx
 }
 
 /// The serving engine: owns the scheduler, borrows the model.
@@ -111,16 +173,24 @@ impl<'a> ServeEngine<'a> {
         mut incoming: Vec<(usize, ServeRequest)>,
         on_event: &mut dyn FnMut(&ServeEvent),
     ) -> Result<EngineOutcome> {
-        incoming.sort_by_key(|(step, _)| *step); // stable: FIFO within a step
-        let seq = self.model.cfg.seq;
+        // ordering is decided here, once: arrivals sort stably (FIFO within
+        // a step), joiners append, retirement compacts — the decode loop
+        // below never re-sorts the batch
+        incoming.sort_by_key(|(step, _)| *step);
         let vocab = self.model.cfg.vocab;
+        let unit = self.model.cache_bytes();
         let mut sched = Scheduler::new(self.opts.policy);
+        let mut budget = CacheBudget::new(self.opts.cache_budget_bytes);
         let mut active: Vec<Active> = Vec::new();
         let mut finished: Vec<FinishedRequest> = Vec::new();
         let mut next_arrival = 0usize;
         let mut step = 0usize;
         let mut tokens = 0usize;
         let mut decode_secs = 0.0f64;
+        let mut prefill_secs = 0.0f64;
+        let mut prefill_tokens = 0usize;
+        let mut cache_evictions = 0usize;
+        let mut peak_cache_bytes = 0u64;
 
         loop {
             // arrivals visible at this step enter the bounded queue; when it
@@ -137,20 +207,63 @@ impl<'a> ServeEngine<'a> {
                 on_event(&ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens });
                 next_arrival += 1;
             }
-            // batch formation: joiners ride this very step
-            let joined = sched.admit(active.len());
-            if !joined.is_empty() {
-                let n = joined.len();
-                for req in joined {
-                    active.push(Active {
-                        ctx: left_fill_window(&req.prompt, seq),
-                        generated: Vec::with_capacity(req.max_new_tokens),
-                        rng: Rng::new(req.seed ^ 0x5e21e),
-                        joined_step: step,
-                        req,
-                    });
+            // batch formation: joiners ride this very step, capped by the
+            // per-step prompt-token budget (both modes pay prompt cost) and
+            // by the cache-memory headroom in KV-cached mode
+            let prefill_budget = match self.opts.policy.max_prefill_tokens {
+                0 => None,
+                n => Some(n),
+            };
+            let cache_slots = if self.opts.kv_cache {
+                let mut slots = budget.free_slots(unit);
+                if slots == Some(0) && active.is_empty() {
+                    // floor: a budget below one cache must still make
+                    // progress — serve one request at a time
+                    slots = Some(1);
                 }
-                on_event(&ServeEvent::BatchFormed { step, joined: n, batch: active.len() });
+                slots
+            } else {
+                None
+            };
+            let limits = StepLimits { prefill_tokens: prefill_budget, cache_slots };
+            let joined = sched.admit(active.len(), &limits);
+            if !joined.is_empty() {
+                on_event(&ServeEvent::BatchFormed {
+                    step,
+                    joined: joined.len(),
+                    batch: active.len() + joined.len(),
+                });
+                for req in joined {
+                    let mut a = Active::new(req, step);
+                    if self.opts.kv_cache {
+                        let mut cache = self.model.new_cache();
+                        budget.reserve(unit);
+                        peak_cache_bytes = peak_cache_bytes.max(budget.in_use());
+                        let chunk = if self.opts.prefill_chunk == 0 {
+                            a.ctx.len()
+                        } else {
+                            self.opts.prefill_chunk
+                        };
+                        on_event(&ServeEvent::PrefillStarted {
+                            id: a.req.id,
+                            step,
+                            prompt_tokens: a.ctx.len(),
+                            chunks: (a.ctx.len() + chunk - 1) / chunk,
+                        });
+                        let t0 = Instant::now();
+                        let (logits, evicted) =
+                            self.model.prefill(&a.ctx, &mut cache, self.opts.prefill_chunk)?;
+                        prefill_secs += t0.elapsed().as_secs_f64();
+                        prefill_tokens += a.ctx.len();
+                        if evicted > 0 {
+                            cache_evictions += evicted;
+                            on_event(&ServeEvent::CacheEvicted { id: a.req.id, step, evicted });
+                        }
+                        a.cache = Some(cache);
+                        a.pending = Some(logits);
+                    }
+                    active.push(a);
+                }
             }
             if active.is_empty() {
                 if next_arrival >= incoming.len() && sched.is_empty() {
@@ -160,26 +273,67 @@ impl<'a> ServeEngine<'a> {
                 continue;
             }
 
-            // one batched next-token step for every in-flight request
-            let mut windows = Vec::with_capacity(active.len() * seq);
-            for a in &active {
-                windows.extend_from_slice(&a.ctx[a.ctx.len() - seq..]);
+            // one next-token step for every in-flight request
+            if self.opts.kv_cache {
+                // fresh joiners already hold their prefill logits; everyone
+                // else advances by one incremental token
+                let mut decode_idx = Vec::new();
+                let mut toks = Vec::new();
+                for (i, a) in active.iter().enumerate() {
+                    if a.pending.is_none() {
+                        decode_idx.push(i);
+                        toks.push(*a.ctx.last().expect("context never empty"));
+                    }
+                }
+                if !decode_idx.is_empty() {
+                    let t0 = Instant::now();
+                    let (logits, evictions) = {
+                        let mut caches: Vec<&mut KvCache> = active
+                            .iter_mut()
+                            .filter(|a| a.pending.is_none())
+                            .map(|a| a.cache.as_mut().expect("cached mode"))
+                            .collect();
+                        self.model.decode_cached(&toks, &mut caches)?
+                    };
+                    decode_secs += t0.elapsed().as_secs_f64();
+                    for (row, &i) in decode_idx.iter().enumerate() {
+                        active[i].pending =
+                            Some(logits.data()[row * vocab..(row + 1) * vocab].to_vec());
+                        if evictions[row] > 0 {
+                            cache_evictions += evictions[row];
+                            on_event(&ServeEvent::CacheEvicted {
+                                id: active[i].req.id,
+                                step,
+                                evicted: evictions[row],
+                            });
+                        }
+                    }
+                }
+            } else {
+                let seqs: Vec<&[i32]> = active.iter().map(|a| a.ctx.as_slice()).collect();
+                let t0 = Instant::now();
+                let logits = self.model.forward_logits(&seqs)?;
+                decode_secs += t0.elapsed().as_secs_f64();
+                for (i, a) in active.iter_mut().enumerate() {
+                    a.pending = Some(logits.data()[i * vocab..(i + 1) * vocab].to_vec());
+                }
             }
-            let t0 = Instant::now();
-            let logits = self.model.decode_step(&windows, active.len())?;
-            decode_secs += t0.elapsed().as_secs_f64();
-            for (i, a) in active.iter_mut().enumerate() {
-                let row = &logits.data()[i * vocab..(i + 1) * vocab];
-                let t = pick_token(row, self.opts.temperature, self.opts.top_k, &mut a.rng);
+            for a in active.iter_mut() {
+                let logits = a.pending.take().expect("every in-flight request has logits");
+                let t = pick_token(&logits, self.opts.temperature, self.opts.top_k, &mut a.rng);
                 a.ctx.push(t);
                 a.generated.push(t);
                 tokens += 1;
             }
-            // retire satisfied requests (batch order preserved for the rest)
+            // retire satisfied requests (batch order preserved for the rest);
+            // dropping the cache returns its bytes to the budget
             let mut i = 0;
             while i < active.len() {
                 if active[i].generated.len() >= active[i].req.max_new_tokens {
-                    let a = active.remove(i);
+                    let mut a = active.remove(i);
+                    if a.cache.take().is_some() {
+                        budget.release(unit);
+                    }
                     on_event(&ServeEvent::Finished {
                         id: a.req.id,
                         step,
@@ -198,7 +352,18 @@ impl<'a> ServeEngine<'a> {
             }
             step += 1;
         }
-        let outcome = EngineOutcome { finished, steps: step, tokens, decode_secs };
+        debug_assert_eq!(budget.in_use(), 0, "retire must return every cache to the budget");
+        let outcome = EngineOutcome {
+            finished,
+            steps: step,
+            tokens,
+            decode_secs,
+            prefill_secs,
+            prefill_tokens,
+            cache_evictions,
+            peak_cache_bytes,
+            cache_bytes_in_use: budget.in_use(),
+        };
         on_event(&ServeEvent::Drained {
             steps: outcome.steps,
             requests: outcome.finished.len(),
@@ -222,6 +387,10 @@ mod tests {
         SparseModel::from_params(&init_params(&cfg, 0), &PackPolicy::default()).unwrap()
     }
 
+    fn policy(max_batch: usize, max_wait: usize, queue_cap: usize) -> SchedulerPolicy {
+        SchedulerPolicy { max_batch, max_wait, queue_cap, ..SchedulerPolicy::default() }
+    }
+
     fn requests(n: usize, tokens: usize, vocab: usize) -> Vec<(usize, ServeRequest)> {
         let mut rng = TestRng::new(0);
         (0..n)
@@ -236,9 +405,10 @@ mod tests {
     fn drains_all_requests_and_counts_tokens() {
         let m = model();
         let opts = EngineOptions {
-            policy: SchedulerPolicy { max_batch: 2, max_wait: 1, queue_cap: 16 },
+            policy: policy(2, 1, 16),
             temperature: 0.0,
             top_k: 0,
+            ..EngineOptions::default()
         };
         let mut events = Vec::new();
         let out = ServeEngine::new(&m, opts)
@@ -247,14 +417,17 @@ mod tests {
         assert_eq!(out.finished.len(), 5);
         assert_eq!(out.tokens, 15);
         assert!(out.finished.iter().all(|f| f.tokens.len() == 3));
+        assert_eq!(out.prefill_tokens, 15, "5 prompts of 3 tokens prefilled");
+        assert_eq!(out.cache_bytes_in_use, 0, "retire returned every cache");
         // ids all retire exactly once
         let mut ids: Vec<u64> = out.finished.iter().map(|f| f.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
-        // lifecycle shape: 5 enqueues, >=1 batch, 5 finishes, 1 drain
+        // lifecycle shape: 5 enqueues, >=1 batch, 5 prefills, 5 finishes, 1 drain
         let count = |f: fn(&ServeEvent) -> bool| events.iter().filter(|e| f(e)).count();
         assert_eq!(count(|e| matches!(e, ServeEvent::Enqueued { .. })), 5);
         assert!(count(|e| matches!(e, ServeEvent::BatchFormed { .. })) >= 2);
+        assert_eq!(count(|e| matches!(e, ServeEvent::PrefillStarted { .. })), 5);
         assert_eq!(count(|e| matches!(e, ServeEvent::Finished { .. })), 5);
         assert_eq!(count(|e| matches!(e, ServeEvent::Drained { .. })), 1);
     }
@@ -263,9 +436,10 @@ mod tests {
     fn staggered_arrivals_join_mid_flight() {
         let m = model();
         let opts = EngineOptions {
-            policy: SchedulerPolicy { max_batch: 4, max_wait: 0, queue_cap: 16 },
+            policy: policy(4, 0, 16),
             temperature: 0.0,
             top_k: 0,
+            ..EngineOptions::default()
         };
         // request 1 arrives while request 0 is mid-decode
         let mut reqs = requests(2, 4, 11);
@@ -286,9 +460,10 @@ mod tests {
     fn full_queue_defers_arrivals_instead_of_failing() {
         let m = model();
         let opts = EngineOptions {
-            policy: SchedulerPolicy { max_batch: 2, max_wait: 0, queue_cap: 2 },
+            policy: policy(2, 0, 2),
             temperature: 0.0,
             top_k: 0,
+            ..EngineOptions::default()
         };
         // 6 requests bunched at step 0 against 2 queue slots: the engine
         // must hold arrivals back and still drain everything
@@ -305,9 +480,10 @@ mod tests {
     fn deterministic_given_seeds() {
         let m = model();
         let opts = EngineOptions {
-            policy: SchedulerPolicy { max_batch: 2, max_wait: 1, queue_cap: 16 },
+            policy: policy(2, 1, 16),
             temperature: 0.8,
             top_k: 5,
+            ..EngineOptions::default()
         };
         let run = || {
             ServeEngine::new(&m, opts)
@@ -322,9 +498,135 @@ mod tests {
     }
 
     #[test]
-    fn left_fill_repeats_prompt() {
-        assert_eq!(left_fill_window(&[7, 8], 5), vec![7, 7, 8, 7, 8]);
-        assert_eq!(left_fill_window(&[1, 2, 3, 4, 5, 6], 4), vec![1, 2, 3, 4, 5, 6]);
-        assert_eq!(left_fill_window(&[], 3), vec![0, 0, 0]);
+    fn cached_and_uncached_modes_agree_token_for_token() {
+        // engine-level spot check of the tentpole invariant (the broad
+        // differential sweep lives in tests/serve_kv_parity.rs): seq is 4
+        // here, so 6 generated tokens push every request past eviction
+        let m = model();
+        let mut streams = Vec::new();
+        for kv_cache in [true, false] {
+            let opts = EngineOptions {
+                policy: policy(2, 1, 16),
+                temperature: 0.7,
+                top_k: 4,
+                kv_cache,
+                prefill_chunk: 2,
+                ..EngineOptions::default()
+            };
+            let mut out = ServeEngine::new(&m, opts)
+                .run(requests(4, 6, 11), &mut |_| {})
+                .unwrap()
+                .finished
+                .iter()
+                .map(|f| (f.id, f.tokens.clone()))
+                .collect::<Vec<_>>();
+            out.sort_by_key(|(id, _)| *id);
+            streams.push(out);
+        }
+        assert_eq!(streams[0], streams[1]);
+    }
+
+    #[test]
+    fn batch_order_is_join_order_never_resorted() {
+        // ids join in the order 5, 2, then 1 (id order != join order); all
+        // three retire on the same step, and the retire scan walks the
+        // batch in order — so the Finished events of that step must come
+        // out 5, 2, 1. A decode loop that re-sorted the batch (by id,
+        // arrival, or remaining budget) would reorder them.
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(3, 0, 16),
+            temperature: 0.0,
+            top_k: 0,
+            ..EngineOptions::default()
+        };
+        let reqs = vec![
+            (0, ServeRequest { id: 5, prompt: vec![1, 2], max_new_tokens: 6, seed: 5 }),
+            (0, ServeRequest { id: 2, prompt: vec![3], max_new_tokens: 6, seed: 2 }),
+            (2, ServeRequest { id: 1, prompt: vec![4, 5], max_new_tokens: 4, seed: 1 }),
+        ];
+        let mut finish_order = Vec::new();
+        let out = ServeEngine::new(&m, opts)
+            .run(reqs, &mut |e| {
+                if let ServeEvent::Finished { id, step, .. } = e {
+                    finish_order.push((*id, *step));
+                }
+            })
+            .unwrap();
+        assert_eq!(out.finished.len(), 3);
+        assert_eq!(
+            finish_order,
+            vec![(5, 5), (2, 5), (1, 5)],
+            "same-step retirements surface in join order"
+        );
+    }
+
+    #[test]
+    fn cache_budget_applies_backpressure_and_drains() {
+        let m = model();
+        let unit = m.cache_bytes();
+        let opts = EngineOptions {
+            policy: policy(4, 0, 16),
+            temperature: 0.0,
+            top_k: 0,
+            cache_budget_bytes: 2 * unit, // room for 2 of the 4 requests
+            ..EngineOptions::default()
+        };
+        let mut reqs = requests(4, 3, 11);
+        for r in reqs.iter_mut() {
+            r.0 = 0;
+        }
+        let mut max_batch_seen = 0;
+        let out = ServeEngine::new(&m, opts)
+            .run(reqs, &mut |e| {
+                if let ServeEvent::BatchFormed { batch, .. } = e {
+                    max_batch_seen = max_batch_seen.max(*batch);
+                }
+            })
+            .unwrap();
+        assert_eq!(out.finished.len(), 4, "deferred joins still drain");
+        assert_eq!(max_batch_seen, 2, "memory budget caps concurrency below max_batch");
+        assert_eq!(out.peak_cache_bytes, 2 * unit);
+        assert_eq!(out.cache_bytes_in_use, 0);
+    }
+
+    #[test]
+    fn starved_budget_still_serves_one_at_a_time() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(4, 0, 16),
+            temperature: 0.0,
+            top_k: 0,
+            cache_budget_bytes: 1, // below a single cache
+            ..EngineOptions::default()
+        };
+        let out = ServeEngine::new(&m, opts).run(requests(3, 2, 11), &mut |_| {}).unwrap();
+        assert_eq!(out.finished.len(), 3);
+        assert_eq!(out.peak_cache_bytes, m.cache_bytes(), "never more than one cache live");
+    }
+
+    #[test]
+    fn evictions_surface_once_contexts_outgrow_the_window() {
+        // seq = 4 and prompts are 3 tokens: the second generated token
+        // already overwrites ring slots
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(2, 0, 16),
+            temperature: 0.0,
+            top_k: 0,
+            ..EngineOptions::default()
+        };
+        let mut evicted = 0usize;
+        let out = ServeEngine::new(&m, opts)
+            .run(requests(2, 4, 11), &mut |e| {
+                if let ServeEvent::CacheEvicted { evicted: n, .. } = e {
+                    evicted += n;
+                }
+            })
+            .unwrap();
+        assert_eq!(out.cache_evictions, evicted, "outcome mirrors the event stream");
+        // prefill fills positions 0..=2; decode appends 3, 4, 5 (the final
+        // sampled token retires unprocessed) — positions 4 and 5 evict
+        assert_eq!(evicted, 4);
     }
 }

@@ -1,0 +1,227 @@
+//! Per-request KV cache for incremental decode: one ring buffer of key and
+//! value rows per transformer layer, capacity-bounded to the model's
+//! attention window (`cfg.seq`) so sliding-window eviction is just slot
+//! reuse.
+//!
+//! Position discipline: the token at absolute position `p` always lives in
+//! slot `p % capacity`, and (because the capacity equals the positional
+//! embedding table length) also always carries `pos_embed[p % seq]` — so a
+//! cached key/value row stays valid forever and eviction exactly drops the
+//! positions that leave the attention window. Writes happen per layer while
+//! a token (or prefill chunk row) is being processed; [`KvCache::commit`]
+//! then advances the logical clock once per token batch and reports how
+//! many live entries were overwritten (the `cache-evicted` event feed).
+
+/// Ring-buffered K/V rows for every layer of one request.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    layers: usize,
+    d: usize,
+    cap: usize,
+    /// resident entries (<= cap)
+    len: usize,
+    /// absolute position of the next token to be written
+    next_pos: usize,
+    /// layers * cap * d, layer-major, slot = pos % cap
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, d: usize, cap: usize) -> KvCache {
+        assert!(layers > 0 && d > 0 && cap > 0, "KvCache dims must be positive");
+        KvCache {
+            layers,
+            d,
+            cap,
+            len: 0,
+            next_pos: 0,
+            k: vec![0.0; layers * cap * d],
+            v: vec![0.0; layers * cap * d],
+        }
+    }
+
+    /// Heap bytes a cache of these dimensions pins (the scheduler's
+    /// cache-memory budget unit): K + V, f32, all layers.
+    pub fn bytes_for(layers: usize, d: usize, cap: usize) -> u64 {
+        (layers * cap * d * 2 * std::mem::size_of::<f32>()) as u64
+    }
+
+    pub fn bytes(&self) -> u64 {
+        KvCache::bytes_for(self.layers, self.d, self.cap)
+    }
+
+    /// Resident entries (min(tokens committed, capacity)).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Absolute position the next appended token will occupy (= tokens
+    /// committed so far).
+    pub fn next_pos(&self) -> usize {
+        self.next_pos
+    }
+
+    /// Oldest resident absolute position.
+    pub fn first_pos(&self) -> usize {
+        self.next_pos - self.len
+    }
+
+    /// Attention window for a query at absolute position `p`: positions
+    /// `start..=p`, exactly the band the uncached re-forward uses.
+    pub fn window_start(&self, p: usize) -> usize {
+        p.saturating_sub(self.cap - 1)
+    }
+
+    fn idx(&self, layer: usize, pos: usize) -> usize {
+        debug_assert!(layer < self.layers);
+        (layer * self.cap + pos % self.cap) * self.d
+    }
+
+    /// Store the key/value rows of the token at absolute position `pos` for
+    /// one layer. Callers write every layer of a token before [`commit`]ing
+    /// it; interleaving writes with reads of *earlier* positions is safe
+    /// because a write only reuses the slot of the position that just left
+    /// the attention window.
+    ///
+    /// [`commit`]: KvCache::commit
+    pub fn write(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        let i = self.idx(layer, pos);
+        self.k[i..i + self.d].copy_from_slice(k_row);
+        self.v[i..i + self.d].copy_from_slice(v_row);
+    }
+
+    pub fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        let i = self.idx(layer, pos);
+        &self.k[i..i + self.d]
+    }
+
+    pub fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        let i = self.idx(layer, pos);
+        &self.v[i..i + self.d]
+    }
+
+    /// Advance the logical clock by `n` freshly written tokens; returns how
+    /// many previously resident entries their slots evicted.
+    pub fn commit(&mut self, n: usize) -> usize {
+        let grown = (self.cap - self.len).min(n);
+        self.len += grown;
+        self.next_pos += n;
+        n - grown
+    }
+}
+
+/// Shared cache-memory accounting: the engine reserves a request's cache
+/// bytes at admission and releases them at retirement, and the scheduler
+/// reads the headroom to apply backpressure. `total == 0` means unlimited.
+#[derive(Clone, Debug, Default)]
+pub struct CacheBudget {
+    total: u64,
+    in_use: u64,
+}
+
+impl CacheBudget {
+    pub fn new(total_bytes: u64) -> CacheBudget {
+        CacheBudget { total: total_bytes, in_use: 0 }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn in_use(&self) -> u64 {
+        self.in_use
+    }
+
+    /// How many `unit`-byte caches still fit; `None` when unlimited.
+    pub fn free_slots(&self, unit: u64) -> Option<usize> {
+        if self.total == 0 || unit == 0 {
+            return None;
+        }
+        Some((self.total.saturating_sub(self.in_use) / unit) as usize)
+    }
+
+    pub fn reserve(&mut self, bytes: u64) {
+        self.in_use += bytes;
+    }
+
+    pub fn release(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.in_use, "releasing more cache bytes than reserved");
+        self.in_use = self.in_use.saturating_sub(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_slots_and_clock() {
+        let mut c = KvCache::new(2, 3, 4);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.next_pos(), 0);
+        for pos in 0..6usize {
+            let row: Vec<f32> = (0..3).map(|j| (pos * 10 + j) as f32).collect();
+            for layer in 0..2 {
+                c.write(layer, pos, &row, &row);
+            }
+            let evicted = c.commit(1);
+            assert_eq!(evicted, usize::from(pos >= 4), "pos {pos}");
+        }
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.next_pos(), 6);
+        assert_eq!(c.first_pos(), 2);
+        // surviving positions 2..=5 read back exactly, on every layer
+        for pos in 2..6 {
+            for layer in 0..2 {
+                assert_eq!(c.k_row(layer, pos)[0], (pos * 10) as f32);
+                assert_eq!(c.v_row(layer, pos)[2], (pos * 10 + 2) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn window_matches_band() {
+        let c = KvCache::new(1, 1, 4);
+        assert_eq!(c.window_start(0), 0);
+        assert_eq!(c.window_start(3), 0);
+        assert_eq!(c.window_start(4), 1);
+        assert_eq!(c.window_start(9), 6);
+    }
+
+    #[test]
+    fn commit_counts_multi_token_evictions() {
+        let mut c = KvCache::new(1, 1, 4);
+        assert_eq!(c.commit(3), 0); // 0..3 resident
+        assert_eq!(c.commit(3), 2); // 3..6: positions 0,1 evicted
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.commit(7), 7); // cache already full: all reuse
+        assert_eq!(c.next_pos(), 13);
+    }
+
+    #[test]
+    fn bytes_and_budget() {
+        assert_eq!(KvCache::bytes_for(2, 3, 4), (2 * 3 * 4 * 2 * 4) as u64);
+        let mut b = CacheBudget::new(100);
+        assert_eq!(b.free_slots(40), Some(2));
+        b.reserve(40);
+        assert_eq!(b.in_use(), 40);
+        assert_eq!(b.free_slots(40), Some(1));
+        b.reserve(40);
+        assert_eq!(b.free_slots(40), Some(0));
+        b.release(40);
+        b.release(40);
+        assert_eq!(b.in_use(), 0);
+        assert_eq!(CacheBudget::new(0).free_slots(40), None, "0 = unlimited");
+    }
+}

@@ -6,18 +6,30 @@
 //! * [`SparseModel`] (`model.rs`) — the sparse decode path: every prunable
 //!   linear runs in its packed format (CSR / n:m / dense fallback), one
 //!   shared forward so packed decode is element-identical to dense decode.
-//! * [`Scheduler`] (`scheduler.rs`) — bounded request queue + batch
-//!   formation (join running batches immediately, wait bounded time for a
-//!   full batch from idle).
-//! * [`ServeEngine`] (`engine.rs`) — the decode loop: admit, batch-decode
-//!   one token per request per step, retire, narrate lifecycle events.
+//!   Two executions of the same banded-attention definition: the uncached
+//!   full re-forward ([`SparseModel::forward_logits`]) and the incremental
+//!   KV-cached path ([`SparseModel::prefill`] +
+//!   [`SparseModel::decode_cached`]) — token-for-token identical.
+//! * [`KvCache`] (`kv.rs`) — per-request ring-buffered key/value rows
+//!   (capacity `cfg.seq`, eviction = slot reuse) plus the [`CacheBudget`]
+//!   memory accounting the scheduler applies backpressure against.
+//! * [`Scheduler`] (`scheduler.rs`) — bounded request queue + cost-aware
+//!   batch formation (join running batches immediately, wait bounded time
+//!   for a full batch from idle, spread prefill bursts, respect the
+//!   cache-memory budget).
+//! * [`ServeEngine`] (`engine.rs`) — the decode loop: admit, chunked
+//!   prefill on join, one incremental token per request per step, retire
+//!   (freeing the cache), narrate lifecycle events.
 
 pub mod engine;
+pub mod kv;
 pub mod model;
 pub mod scheduler;
 
 pub use engine::{
-    left_fill_window, EngineOptions, EngineOutcome, FinishedRequest, ServeEngine, ServeEvent,
+    EngineOptions, EngineOutcome, FinishedRequest, ServeEngine, ServeEvent,
+    DEFAULT_PREFILL_CHUNK,
 };
+pub use kv::{CacheBudget, KvCache};
 pub use model::SparseModel;
-pub use scheduler::{Scheduler, SchedulerPolicy, ServeRequest};
+pub use scheduler::{Scheduler, SchedulerPolicy, ServeRequest, StepLimits};

@@ -3,12 +3,31 @@
 //! [`crate::sparse::pack`]) instead of dense GEMM.
 //!
 //! The forward mirrors `runtime/ref_ops.rs` structurally (OPT block, tanh
-//! GELU, causal softmax attention, tied LM head) but runs in f32 on the
+//! GELU, softmax attention, tied LM head) but runs in f32 on the
 //! Table-7/8 CPU kernels, which is the whole point: next-token cost scales
 //! with surviving weights. All formats share one code path that differs
 //! only in the [`PackedMatrix`] dispatch, and the kernels visit surviving
 //! weights in the same order — so packed decode is *element-identical* to
 //! dense decode of the same pruned parameters (pinned by proptests).
+//!
+//! Serving semantics (shared by both decode paths): a request's context is
+//! its prompt plus everything generated, at absolute positions 0, 1, 2, …;
+//! the token at position `p` carries `pos_embed[p % seq]` and attends over
+//! the sliding window `max(0, p-seq+1) ..= p` (banded causal attention).
+//! Two executions of that definition exist:
+//!
+//! * [`SparseModel::forward_logits`] — the **uncached reference path**: a
+//!   full re-forward of each context, O(ctx · layers) per token;
+//! * [`SparseModel::prefill`] + [`SparseModel::decode_cached`] — the
+//!   **incremental path**: key/value rows live in a per-request
+//!   [`KvCache`] ring buffer, so a decode step runs each new token through
+//!   the packed linears once, O(layers) per token.
+//!
+//! Both paths perform identical f32 operations in identical order per row
+//! (same kernels, same banded window iterated oldest → newest), so cached
+//! decode is *token-for-token identical* to the uncached re-forward —
+//! including after ring eviction, because eviction drops exactly the
+//! positions that leave the band (pinned by `tests/serve_kv_parity.rs`).
 
 use std::collections::BTreeMap;
 
@@ -17,6 +36,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::model::config::ModelCfg;
 use crate::model::layout::{FlatParams, LinearKind, PRUNABLE_KINDS};
 use crate::model::sparse_store::SparseStore;
+use crate::serve::kv::KvCache;
 use crate::sparse::{dense_layer, PackPolicy, PackedMatrix};
 use crate::tensor::Tensor;
 
@@ -158,31 +178,90 @@ impl SparseModel {
         &self.format_summary
     }
 
-    /// One batched next-token step: `windows` is `batch` concatenated
-    /// context windows of exactly `cfg.seq` token ids; returns logits
-    /// (batch, vocab) for the last position of each window.
-    pub fn decode_step(&self, windows: &[i32], batch: usize) -> Result<Tensor> {
-        let cfg = &self.cfg;
-        let (seq, d) = (cfg.seq, cfg.d);
-        if batch == 0 || windows.len() != batch * seq {
+    /// A fresh per-request KV cache sized for this model (one ring of
+    /// `cfg.seq` K/V rows per layer).
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.cfg.layers, self.cfg.d, self.cfg.seq)
+    }
+
+    /// Heap bytes one request's KV cache pins (the cache-budget unit).
+    pub fn cache_bytes(&self) -> u64 {
+        KvCache::bytes_for(self.cfg.layers, self.cfg.d, self.cfg.seq)
+    }
+
+    fn check_token(&self, t: i32) -> Result<usize> {
+        if t < 0 || t as usize >= self.cfg.vocab {
+            bail!("token id {t} out of range (vocab {})", self.cfg.vocab);
+        }
+        Ok(t as usize)
+    }
+
+    fn check_cache(&self, cache: &KvCache) -> Result<()> {
+        if cache.capacity() != self.cfg.seq || cache.bytes() != self.cache_bytes() {
             bail!(
-                "decode_step: {} tokens is not {batch} windows of seq={seq}",
-                windows.len()
+                "KV cache was sized for a different model (capacity {}, expected {})",
+                cache.capacity(),
+                self.cfg.seq
             );
         }
-        let rows = batch * seq;
-        // ---- embed ----
+        Ok(())
+    }
+
+    /// Embed `tokens` starting at absolute position `first_pos` into a
+    /// `rows x d` activation buffer appended to `x`.
+    fn embed_rows(&self, tokens: &[i32], first_pos: usize, x: &mut [f32]) -> Result<()> {
+        let d = self.cfg.d;
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = self.check_token(t)?;
+            let pos = (first_pos + i) % self.cfg.seq;
+            let te = &self.tok_embed[t * d..(t + 1) * d];
+            let pe = &self.pos_embed[pos * d..(pos + 1) * d];
+            let xr = &mut x[i * d..(i + 1) * d];
+            for j in 0..d {
+                xr[j] = te[j] + pe[j];
+            }
+        }
+        Ok(())
+    }
+
+    /// The row-local second half of a block (everything after attention):
+    /// Wo + residual, LN2, FC1, GELU, FC2 + residual.
+    fn block_tail(&self, blk: &ServeBlock, rows: usize, attn: Vec<f32>, x: &mut [f32]) {
+        let d = self.cfg.d;
+        let wo_out = blk.wo.layer(&Tensor::new(vec![rows, d], attn));
+        for (xi, oi) in x.iter_mut().zip(wo_out.data()) {
+            *xi += oi;
+        }
+        let u = layer_norm(x, d, &blk.ln2_g, &blk.ln2_b);
+        let z = blk.fc1.layer(&Tensor::new(vec![rows, d], u));
+        let g: Vec<f32> = z.data().iter().map(|&zz| gelu(zz)).collect();
+        let w2_out = blk.fc2.layer(&Tensor::new(vec![rows, self.cfg.ffn], g));
+        for (xi, oi) in x.iter_mut().zip(w2_out.data()) {
+            *xi += oi;
+        }
+    }
+
+    /// **Uncached reference path**: run each request's full context through
+    /// the model with banded causal attention (window `cfg.seq`) and return
+    /// next-token logits `(batch, vocab)` for the last position of each.
+    /// O(ctx · layers) per call — [`prefill`]/[`decode_cached`] compute the
+    /// exact same logits incrementally.
+    ///
+    /// [`prefill`]: SparseModel::prefill
+    /// [`decode_cached`]: SparseModel::decode_cached
+    pub fn forward_logits(&self, seqs: &[&[i32]]) -> Result<Tensor> {
+        let cfg = &self.cfg;
+        let (cap, d) = (cfg.seq, cfg.d);
+        if seqs.is_empty() || seqs.iter().any(|s| s.is_empty()) {
+            bail!("forward_logits needs at least one non-empty token sequence");
+        }
+        let rows: usize = seqs.iter().map(|s| s.len()).sum();
+        // ---- embed (positions are absolute within each sequence) ----
         let mut x = vec![0.0f32; rows * d];
-        for (r, &t) in windows.iter().enumerate() {
-            if t < 0 || t as usize >= cfg.vocab {
-                bail!("token id {t} out of range (vocab {})", cfg.vocab);
-            }
-            let te = &self.tok_embed[t as usize * d..(t as usize + 1) * d];
-            let pe = &self.pos_embed[(r % seq) * d..(r % seq + 1) * d];
-            let xr = &mut x[r * d..(r + 1) * d];
-            for i in 0..d {
-                xr[i] = te[i] + pe[i];
-            }
+        let mut off = 0;
+        for s in seqs {
+            self.embed_rows(s, 0, &mut x[off * d..(off + s.len()) * d])?;
+            off += s.len();
         }
         // ---- blocks ----
         for blk in &self.blocks {
@@ -191,27 +270,153 @@ impl SparseModel {
             let q = blk.wq.layer(&a);
             let k = blk.wk.layer(&a);
             let v = blk.wv.layer(&a);
-            let attn = attention(q.data(), k.data(), v.data(), batch, seq, d, cfg.heads);
-            let wo_out = blk.wo.layer(&Tensor::new(vec![rows, d], attn));
-            for (xi, oi) in x.iter_mut().zip(wo_out.data()) {
-                *xi += oi;
+            let mut attn = vec![0.0f32; rows * d];
+            let mut off = 0;
+            for s in seqs {
+                let n = s.len();
+                let (lo, hi) = (off * d, (off + n) * d);
+                attention_banded(
+                    &q.data()[lo..hi],
+                    &k.data()[lo..hi],
+                    &v.data()[lo..hi],
+                    n,
+                    d,
+                    cfg.heads,
+                    cap,
+                    &mut attn[lo..hi],
+                );
+                off += n;
             }
-            let u = layer_norm(&x, d, &blk.ln2_g, &blk.ln2_b);
-            let z = blk.fc1.layer(&Tensor::new(vec![rows, d], u));
-            let g: Vec<f32> = z.data().iter().map(|&zz| gelu(zz)).collect();
-            let w2_out = blk.fc2.layer(&Tensor::new(vec![rows, cfg.ffn], g));
-            for (xi, oi) in x.iter_mut().zip(w2_out.data()) {
-                *xi += oi;
-            }
+            self.block_tail(blk, rows, attn, &mut x);
         }
-        // ---- final norm + tied head on each window's last position ----
+        // ---- final norm + tied head on each sequence's last position ----
         let h = layer_norm(&x, d, &self.lnf_g, &self.lnf_b);
-        let mut last = vec![0.0f32; batch * d];
-        for b in 0..batch {
-            let r = b * seq + (seq - 1);
+        let mut last = vec![0.0f32; seqs.len() * d];
+        let mut off = 0;
+        for (b, s) in seqs.iter().enumerate() {
+            let r = off + s.len() - 1;
             last[b * d..(b + 1) * d].copy_from_slice(&h[r * d..(r + 1) * d]);
+            off += s.len();
         }
-        Ok(dense_layer(&Tensor::new(vec![batch, d], last), &self.head))
+        Ok(dense_layer(&Tensor::new(vec![seqs.len(), d], last), &self.head))
+    }
+
+    /// **Chunked prefill**: stream `tokens` (absolute positions continuing
+    /// from `cache.next_pos()`) through the model in chunks of at most
+    /// `chunk` rows (0 = one chunk), populating the cache, and return the
+    /// logits at the last position plus the number of ring entries evicted.
+    /// The chunking is numerically invisible: any chunk size produces the
+    /// same cache contents and logits.
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        chunk: usize,
+    ) -> Result<(Vec<f32>, usize)> {
+        if tokens.is_empty() {
+            bail!("prefill needs at least one token");
+        }
+        self.check_cache(cache)?;
+        let chunk = if chunk == 0 { tokens.len() } else { chunk };
+        let mut evicted = 0usize;
+        let mut last = Vec::new();
+        for c in tokens.chunks(chunk) {
+            let (logits, ev) = self.run_chunk_cached(c, cache)?;
+            evicted += ev;
+            last = logits;
+        }
+        Ok((last, evicted))
+    }
+
+    /// One chunk of consecutive tokens through all blocks, appending every
+    /// row's K/V to the cache. Writes interleave with attention row by row
+    /// so a row never reads a slot that a *later* row of the same chunk
+    /// will reuse; [`KvCache::commit`] advances the clock once at the end.
+    fn run_chunk_cached(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+    ) -> Result<(Vec<f32>, usize)> {
+        let cfg = &self.cfg;
+        let (n, d) = (tokens.len(), cfg.d);
+        let p0 = cache.next_pos();
+        let mut x = vec![0.0f32; n * d];
+        self.embed_rows(tokens, p0, &mut x)?;
+        let mut scores = vec![0.0f32; cfg.seq];
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let a = layer_norm(&x, d, &blk.ln1_g, &blk.ln1_b);
+            let a = Tensor::new(vec![n, d], a);
+            let q = blk.wq.layer(&a);
+            let k = blk.wk.layer(&a);
+            let v = blk.wv.layer(&a);
+            let mut attn = vec![0.0f32; n * d];
+            for i in 0..n {
+                cache.write(l, p0 + i, k.row(i), v.row(i));
+                attention_cached(
+                    q.row(i),
+                    cache,
+                    l,
+                    p0 + i,
+                    cfg.heads,
+                    &mut scores,
+                    &mut attn[i * d..(i + 1) * d],
+                );
+            }
+            self.block_tail(blk, n, attn, &mut x);
+        }
+        let evicted = cache.commit(n);
+        let h = layer_norm(&x[(n - 1) * d..], d, &self.lnf_g, &self.lnf_b);
+        let logits = dense_layer(&Tensor::new(vec![1, d], h), &self.head);
+        Ok((logits.into_data(), evicted))
+    }
+
+    /// **Incremental decode**: one batched next-token step — `tokens[i]` is
+    /// request `i`'s newest token, appended to `caches[i]` and attended
+    /// against its cached keys/values. Returns logits `(batch, vocab)` and
+    /// the per-request eviction counts. O(layers) per token: the packed
+    /// linears see one row per request instead of a full context.
+    pub fn decode_cached(
+        &self,
+        tokens: &[i32],
+        caches: &mut [&mut KvCache],
+    ) -> Result<(Tensor, Vec<usize>)> {
+        let cfg = &self.cfg;
+        let (b, d) = (tokens.len(), cfg.d);
+        if b == 0 || caches.len() != b {
+            bail!("decode_cached: {} tokens for {} caches", tokens.len(), caches.len());
+        }
+        let mut x = vec![0.0f32; b * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            self.check_cache(caches[i])?;
+            self.embed_rows(&[t], caches[i].next_pos(), &mut x[i * d..(i + 1) * d])?;
+        }
+        let mut scores = vec![0.0f32; cfg.seq];
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let a = layer_norm(&x, d, &blk.ln1_g, &blk.ln1_b);
+            let a = Tensor::new(vec![b, d], a);
+            let q = blk.wq.layer(&a);
+            let k = blk.wk.layer(&a);
+            let v = blk.wv.layer(&a);
+            let mut attn = vec![0.0f32; b * d];
+            for i in 0..b {
+                let pos = caches[i].next_pos();
+                caches[i].write(l, pos, k.row(i), v.row(i));
+                attention_cached(
+                    q.row(i),
+                    &*caches[i],
+                    l,
+                    pos,
+                    cfg.heads,
+                    &mut scores,
+                    &mut attn[i * d..(i + 1) * d],
+                );
+            }
+            self.block_tail(blk, b, attn, &mut x);
+        }
+        let evictions: Vec<usize> = caches.iter_mut().map(|c| c.commit(1)).collect();
+        let h = layer_norm(&x, d, &self.lnf_g, &self.lnf_b);
+        let logits = dense_layer(&Tensor::new(vec![b, d], h), &self.head);
+        Ok((logits, evictions))
     }
 }
 
@@ -236,58 +441,110 @@ fn gelu(z: f32) -> f32 {
     0.5 * z * (1.0 + (GELU_C * (z + 0.044715 * z * z * z)).tanh())
 }
 
-/// Causal multi-head attention (f32; heads in contiguous column stripes).
-fn attention(
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for j in 0..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Banded causal multi-head attention over one contiguous segment of `n`
+/// rows: row `t` attends positions `max(0, t-cap+1) ..= t`, oldest first.
+/// The cached twin ([`attention_cached`]) performs these exact operations
+/// in this exact order against ring-buffered K/V — keep them in lockstep.
+#[allow(clippy::too_many_arguments)]
+fn attention_banded(
     q: &[f32],
     k: &[f32],
     v: &[f32],
-    batch: usize,
-    seq: usize,
+    n: usize,
     d: usize,
     heads: usize,
-) -> Vec<f32> {
+    cap: usize,
+    out: &mut [f32],
+) {
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = vec![0.0f32; batch * seq * d];
-    let mut scores = vec![0.0f32; seq];
-    for b in 0..batch {
-        for h in 0..heads {
-            let hoff = h * hd;
-            for t in 0..seq {
-                let qoff = (b * seq + t) * d + hoff;
-                let qrow = &q[qoff..qoff + hd];
-                let mut maxv = f32::NEG_INFINITY;
-                for (s, sc) in scores.iter_mut().enumerate().take(t + 1) {
-                    let koff = (b * seq + s) * d + hoff;
-                    let krow = &k[koff..koff + hd];
-                    let mut dot = 0.0f32;
-                    for j in 0..hd {
-                        dot += qrow[j] * krow[j];
-                    }
-                    *sc = dot * scale;
-                    maxv = maxv.max(*sc);
+    let mut scores = vec![0.0f32; cap.min(n)];
+    for h in 0..heads {
+        let hoff = h * hd;
+        for t in 0..n {
+            let start = t.saturating_sub(cap - 1);
+            let w = t + 1 - start;
+            let qrow = &q[t * d + hoff..t * d + hoff + hd];
+            let mut maxv = f32::NEG_INFINITY;
+            for (j, s) in (start..=t).enumerate() {
+                let krow = &k[s * d + hoff..s * d + hoff + hd];
+                let sc = dot(qrow, krow) * scale;
+                scores[j] = sc;
+                maxv = maxv.max(sc);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(w) {
+                *sc = (*sc - maxv).exp();
+                denom += *sc;
+            }
+            let orow = &mut out[t * d + hoff..t * d + hoff + hd];
+            for (j, s) in (start..=t).enumerate() {
+                let p = scores[j] / denom;
+                if p == 0.0 {
+                    continue;
                 }
-                let mut denom = 0.0f32;
-                for sc in scores.iter_mut().take(t + 1) {
-                    *sc = (*sc - maxv).exp();
-                    denom += *sc;
-                }
-                let orow_off = (b * seq + t) * d + hoff;
-                for s in 0..=t {
-                    let p = scores[s] / denom;
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let voff = (b * seq + s) * d + hoff;
-                    let vrow = &v[voff..voff + hd];
-                    for j in 0..hd {
-                        out[orow_off + j] += p * vrow[j];
-                    }
+                let vrow = &v[s * d + hoff..s * d + hoff + hd];
+                for jj in 0..hd {
+                    orow[jj] += p * vrow[jj];
                 }
             }
         }
     }
-    out
+}
+
+/// Cache-backed attention for one query row at absolute position `pos`:
+/// the incremental twin of [`attention_banded`] — identical window,
+/// identical operation order, K/V read from the ring buffer.
+fn attention_cached(
+    q_row: &[f32],
+    cache: &KvCache,
+    layer: usize,
+    pos: usize,
+    heads: usize,
+    scores: &mut [f32],
+    out_row: &mut [f32],
+) {
+    let d = q_row.len();
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let start = cache.window_start(pos);
+    let w = pos + 1 - start;
+    for h in 0..heads {
+        let hoff = h * hd;
+        let qrow = &q_row[hoff..hoff + hd];
+        let mut maxv = f32::NEG_INFINITY;
+        for (j, s) in (start..=pos).enumerate() {
+            let krow = &cache.k_row(layer, s)[hoff..hoff + hd];
+            let sc = dot(qrow, krow) * scale;
+            scores[j] = sc;
+            maxv = maxv.max(sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut().take(w) {
+            *sc = (*sc - maxv).exp();
+            denom += *sc;
+        }
+        let orow = &mut out_row[hoff..hoff + hd];
+        for (j, s) in (start..=pos).enumerate() {
+            let p = scores[j] / denom;
+            if p == 0.0 {
+                continue;
+            }
+            let vrow = &cache.v_row(layer, s)[hoff..hoff + hd];
+            for jj in 0..hd {
+                orow[jj] += p * vrow[jj];
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -317,9 +574,23 @@ mod tests {
         fp
     }
 
-    fn windows(cfg: &ModelCfg, batch: usize, seed: u64) -> Vec<i32> {
+    fn tokens(cfg: &ModelCfg, n: usize, seed: u64) -> Vec<i32> {
         let mut rng = Rng::new(seed);
-        (0..batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect()
+        (0..n).map(|_| rng.below(cfg.vocab) as i32).collect()
+    }
+
+    /// Drive the incremental path over a whole context: prefill everything
+    /// but the last token, then decode it — returns the final logits.
+    fn incremental_logits(m: &SparseModel, ctx: &[i32], chunk: usize) -> Vec<f32> {
+        let mut cache = m.new_cache();
+        if ctx.len() == 1 {
+            return m.prefill(ctx, &mut cache, chunk).unwrap().0;
+        }
+        m.prefill(&ctx[..ctx.len() - 1], &mut cache, chunk).unwrap();
+        let (logits, _) = m
+            .decode_cached(&[ctx[ctx.len() - 1]], &mut [&mut cache])
+            .unwrap();
+        logits.into_data()
     }
 
     #[test]
@@ -330,9 +601,11 @@ mod tests {
             .unwrap();
         let csr =
             SparseModel::from_params(&fp, &PackPolicy::with_format(PackFormat::Csr)).unwrap();
-        let w = windows(&cfg, 3, 1);
-        let a = dense.decode_step(&w, 3).unwrap();
-        let b = csr.decode_step(&w, 3).unwrap();
+        // mixed context lengths, including one past the attention window
+        let (s0, s1, s2) = (tokens(&cfg, 3, 1), tokens(&cfg, cfg.seq, 2), tokens(&cfg, 9, 3));
+        let seqs: Vec<&[i32]> = vec![&s0, &s1, &s2];
+        let a = dense.forward_logits(&seqs).unwrap();
+        let b = csr.forward_logits(&seqs).unwrap();
         assert_eq!(a.shape(), &[3, cfg.vocab]);
         assert_eq!(a.data(), b.data());
     }
@@ -344,40 +617,108 @@ mod tests {
         let store = SparseStore::pack(&fp, &PackPolicy::default(), "magnitude-50%").unwrap();
         let m1 = SparseModel::from_store(&store, &cfg).unwrap();
         let m2 = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
-        let w = windows(&cfg, 2, 9);
-        assert_eq!(m1.decode_step(&w, 2).unwrap(), m2.decode_step(&w, 2).unwrap());
+        let (s0, s1) = (tokens(&cfg, 5, 9), tokens(&cfg, 7, 10));
+        let seqs: Vec<&[i32]> = vec![&s0, &s1];
+        assert_eq!(m1.forward_logits(&seqs).unwrap(), m2.forward_logits(&seqs).unwrap());
         assert_eq!(m1.format_summary(), "csr:12");
         assert!((m1.density() - 0.5).abs() < 0.1);
     }
 
     #[test]
-    fn decode_step_validates_inputs() {
+    fn cached_decode_matches_uncached_reforward() {
+        // the tentpole invariant at model level: prefill + incremental
+        // decode equals the banded full re-forward bit-for-bit, for every
+        // chunk size and far past the eviction horizon (seq = 6 here)
         let cfg = test_cfg();
-        let fp = init_params(&cfg, 0);
+        let fp = pruned(&cfg, 0.5, 21);
         let m = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
-        assert!(m.decode_step(&[0; 5], 1).is_err()); // wrong window length
-        assert!(m.decode_step(&[], 0).is_err());
-        let mut w = windows(&cfg, 1, 0);
-        w[0] = 999; // out-of-vocab token
-        assert!(m.decode_step(&w, 1).is_err());
+        let ctx = tokens(&cfg, 4 * cfg.seq + 1, 5);
+        for len in [1, 2, cfg.seq, cfg.seq + 1, 2 * cfg.seq + 3, ctx.len()] {
+            let want = m.forward_logits(&[&ctx[..len]]).unwrap();
+            for chunk in [1, 2, 4, 0] {
+                let got = incremental_logits(&m, &ctx[..len], chunk);
+                assert_eq!(want.data(), &got[..], "len {len} chunk {chunk}");
+            }
+        }
     }
 
     #[test]
-    fn decode_depends_on_last_tokens_causally() {
-        // editing the final window token must change logits; editing only
-        // the first token of a window also may — but a *different* batch
-        // row must never affect another row
+    fn prefill_reports_evictions_and_chunking_is_invisible() {
+        let cfg = test_cfg();
+        let m = SparseModel::from_params(&init_params(&cfg, 0), &PackPolicy::default()).unwrap();
+        let ctx = tokens(&cfg, cfg.seq + 4, 11);
+        let mut c1 = m.new_cache();
+        let (l1, ev1) = m.prefill(&ctx, &mut c1, 0).unwrap();
+        let mut c2 = m.new_cache();
+        let (l2, ev2) = m.prefill(&ctx, &mut c2, 3).unwrap();
+        assert_eq!(ev1, 4, "seq+4 tokens into a seq ring evict 4");
+        assert_eq!(ev1, ev2);
+        assert_eq!(l1, l2);
+        assert_eq!(c1.len(), cfg.seq);
+        assert_eq!(c1.next_pos(), cfg.seq + 4);
+    }
+
+    #[test]
+    fn decode_cached_is_batch_order_independent() {
+        // a request's logits depend only on its own cache, not on which
+        // other requests share the batched step
+        let cfg = test_cfg();
+        let fp = pruned(&cfg, 0.5, 13);
+        let m = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
+        let (a, b) = (tokens(&cfg, 5, 1), tokens(&cfg, 8, 2));
+        let mk = |ctx: &[i32]| {
+            let mut c = m.new_cache();
+            m.prefill(ctx, &mut c, 2).unwrap();
+            c
+        };
+        let (mut ca, mut cb) = (mk(&a), mk(&b));
+        let (batched, _) = m.decode_cached(&[3, 4], &mut [&mut ca, &mut cb]).unwrap();
+        let (mut ca2, mut cb2) = (mk(&a), mk(&b));
+        let (solo_a, _) = m.decode_cached(&[3], &mut [&mut ca2]).unwrap();
+        let (solo_b, _) = m.decode_cached(&[4], &mut [&mut cb2]).unwrap();
+        assert_eq!(&batched.data()[..cfg.vocab], solo_a.data());
+        assert_eq!(&batched.data()[cfg.vocab..], solo_b.data());
+    }
+
+    #[test]
+    fn inputs_are_validated() {
+        let cfg = test_cfg();
+        let m = SparseModel::from_params(&init_params(&cfg, 0), &PackPolicy::default()).unwrap();
+        assert!(m.forward_logits(&[]).is_err());
+        assert!(m.forward_logits(&[&[][..]]).is_err());
+        assert!(m.forward_logits(&[&[999][..]]).is_err()); // out-of-vocab
+        let mut cache = m.new_cache();
+        assert!(m.prefill(&[], &mut cache, 0).is_err());
+        assert!(m.prefill(&[999], &mut cache, 0).is_err());
+        assert!(m.decode_cached(&[], &mut []).is_err());
+        let mut wrong = KvCache::new(cfg.layers, cfg.d, cfg.seq + 1);
+        assert!(m.prefill(&[0], &mut wrong, 0).is_err(), "mis-sized cache rejected");
+    }
+
+    #[test]
+    fn batch_rows_are_independent_and_causal() {
+        // editing one sequence must not perturb another's logits row
         let cfg = test_cfg();
         let fp = pruned(&cfg, 0.5, 5);
         let m = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
-        let w = windows(&cfg, 2, 11);
-        let base = m.decode_step(&w, 2).unwrap();
-        let mut w2 = w.clone();
-        w2[cfg.seq] = (w2[cfg.seq] + 1) % cfg.vocab as i32; // row 1's first token
-        let edited = m.decode_step(&w2, 2).unwrap();
-        // row 0 untouched
+        let (s0, mut s1) = (tokens(&cfg, 6, 11), tokens(&cfg, 6, 12));
+        let base = m.forward_logits(&[&s0, &s1]).unwrap();
+        s1[0] = (s1[0] + 1) % cfg.vocab as i32;
+        let edited = m.forward_logits(&[&s0, &s1]).unwrap();
         assert_eq!(&base.data()[..cfg.vocab], &edited.data()[..cfg.vocab]);
-        // row 1 changed
         assert_ne!(&base.data()[cfg.vocab..], &edited.data()[cfg.vocab..]);
+    }
+
+    #[test]
+    fn eviction_forgets_tokens_outside_the_window() {
+        // once a token leaves the band, it cannot influence the next logits
+        let cfg = test_cfg();
+        let fp = pruned(&cfg, 0.5, 17);
+        let m = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
+        let mut ctx = tokens(&cfg, 3 * cfg.seq, 19);
+        let base = m.forward_logits(&[&ctx[..]]).unwrap();
+        ctx[0] = (ctx[0] + 1) % cfg.vocab as i32; // far outside the window
+        let edited = m.forward_logits(&[&ctx[..]]).unwrap();
+        assert_eq!(base.data(), edited.data());
     }
 }

@@ -7,7 +7,12 @@
 //!   from the queue — joiners ride the next decode step;
 //! * from idle, the engine waits up to `max_wait` steps for the queue to
 //!   fill a whole batch before launching a partial one, trading first-token
-//!   latency for step efficiency.
+//!   latency for step efficiency;
+//! * admission is cost-aware: each step the engine hands the scheduler a
+//!   [`StepLimits`] — how many prompt tokens this step's chunked prefill
+//!   budget still covers and how many per-request KV caches the cache-memory
+//!   budget can still hold — and joiners that do not fit stay queued
+//!   (backpressure) instead of being dropped.
 
 use std::collections::VecDeque;
 
@@ -23,6 +28,14 @@ pub struct ServeRequest {
     pub seed: u64,
 }
 
+impl ServeRequest {
+    /// Prompt tokens the prefill pass must process (at least one — an empty
+    /// prompt is served as a single bos-like `0` token).
+    pub fn prefill_cost(&self) -> usize {
+        self.prompt.len().max(1)
+    }
+}
+
 /// Batch-formation knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerPolicy {
@@ -32,11 +45,39 @@ pub struct SchedulerPolicy {
     pub max_wait: usize,
     /// bounded admission queue capacity
     pub queue_cap: usize,
+    /// prompt tokens admission may hand to prompt processing per step
+    /// (0 = unlimited); a burst of long prompts then spreads across steps
+    /// instead of stalling the running batch behind one huge prefill pass.
+    /// The engine translates this into [`StepLimits::prefill_tokens`] each
+    /// step (in both decode modes — the uncached path pays prompt rows in
+    /// every re-forward, so the throttle applies there too).
+    pub max_prefill_tokens: usize,
 }
 
 impl Default for SchedulerPolicy {
     fn default() -> SchedulerPolicy {
-        SchedulerPolicy { max_batch: 8, max_wait: 2, queue_cap: 64 }
+        SchedulerPolicy { max_batch: 8, max_wait: 2, queue_cap: 64, max_prefill_tokens: 0 }
+    }
+}
+
+/// What this step's budgets still allow admission to take on. `None`
+/// means unconstrained — the scheduler applies exactly what it is
+/// handed. The engine derives these each step from the policy's
+/// `max_prefill_tokens`, the model's per-request cache size, and the
+/// live [`CacheBudget`].
+///
+/// [`CacheBudget`]: crate::serve::kv::CacheBudget
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepLimits {
+    /// prompt tokens admission may hand to prompt processing this step
+    pub prefill_tokens: Option<usize>,
+    /// additional per-request KV caches the memory budget can hold
+    pub cache_slots: Option<usize>,
+}
+
+impl StepLimits {
+    pub fn unlimited() -> StepLimits {
+        StepLimits::default()
     }
 }
 
@@ -86,10 +127,16 @@ impl Scheduler {
         self.queue.is_empty()
     }
 
-    /// Batch formation for one step given `active` in-flight requests.
-    /// Returns the requests that join this step (possibly empty).
-    pub fn admit(&mut self, active: usize) -> Vec<ServeRequest> {
-        let free = self.policy.max_batch.saturating_sub(active);
+    /// Batch formation for one step given `active` in-flight requests and
+    /// this step's budget headroom. Returns the requests that join (FIFO
+    /// order, possibly empty). The per-step prefill budget never starves a
+    /// request whose prompt alone exceeds it: the first joiner of a step is
+    /// always admitted (its prefill is still internally chunked).
+    pub fn admit(&mut self, active: usize, limits: &StepLimits) -> Vec<ServeRequest> {
+        let mut free = self.policy.max_batch.saturating_sub(active);
+        if let Some(slots) = limits.cache_slots {
+            free = free.min(slots);
+        }
         if free == 0 || self.queue.is_empty() {
             return Vec::new();
         }
@@ -100,8 +147,19 @@ impl Scheduler {
             return Vec::new();
         }
         self.waited = 0;
-        let n = free.min(self.queue.len());
-        self.queue.drain(..n).collect()
+        let budget = limits.prefill_tokens.unwrap_or(usize::MAX);
+        let mut used = 0usize;
+        let mut joined = Vec::new();
+        while joined.len() < free {
+            let Some(front) = self.queue.front() else { break };
+            let cost = front.prefill_cost();
+            if !joined.is_empty() && used.saturating_add(cost) > budget {
+                break; // the rest of the burst prefills on later steps
+            }
+            used += cost;
+            joined.push(self.queue.pop_front().unwrap());
+        }
+        joined
     }
 }
 
@@ -113,9 +171,17 @@ mod tests {
         ServeRequest { id, prompt: vec![1, 2], max_new_tokens: 4, seed: id }
     }
 
+    fn req_prompt(id: u64, prompt_len: usize) -> ServeRequest {
+        ServeRequest { id, prompt: vec![1; prompt_len], max_new_tokens: 4, seed: id }
+    }
+
+    fn policy(max_batch: usize, max_wait: usize, queue_cap: usize) -> SchedulerPolicy {
+        SchedulerPolicy { max_batch, max_wait, queue_cap, ..SchedulerPolicy::default() }
+    }
+
     #[test]
     fn bounded_queue_rejects_overflow() {
-        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 2, max_wait: 0, queue_cap: 2 });
+        let mut s = Scheduler::new(policy(2, 0, 2));
         s.submit(req(0)).unwrap();
         s.submit(req(1)).unwrap();
         assert!(s.submit(req(2)).is_err());
@@ -124,48 +190,100 @@ mod tests {
 
     #[test]
     fn idle_engine_waits_for_full_batch_then_launches_partial() {
-        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 4, max_wait: 2, queue_cap: 16 });
+        let mut s = Scheduler::new(policy(4, 2, 16));
         s.submit(req(0)).unwrap();
         s.submit(req(1)).unwrap();
-        assert!(s.admit(0).is_empty(), "first idle step waits");
-        assert!(s.admit(0).is_empty(), "second idle step waits");
-        let batch = s.admit(0);
+        let lim = StepLimits::unlimited();
+        assert!(s.admit(0, &lim).is_empty(), "first idle step waits");
+        assert!(s.admit(0, &lim).is_empty(), "second idle step waits");
+        let batch = s.admit(0, &lim);
         assert_eq!(batch.len(), 2, "max_wait exhausted -> partial batch");
         assert!(s.is_empty());
     }
 
     #[test]
     fn full_batch_launches_immediately() {
-        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 2, max_wait: 5, queue_cap: 16 });
+        let mut s = Scheduler::new(policy(2, 5, 16));
         s.submit(req(0)).unwrap();
         s.submit(req(1)).unwrap();
         s.submit(req(2)).unwrap();
-        let batch = s.admit(0);
+        let batch = s.admit(0, &StepLimits::unlimited());
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(s.queue_len(), 1, "overflow stays queued");
     }
 
     #[test]
     fn running_batch_joins_immediately_up_to_capacity() {
-        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 4, max_wait: 9, queue_cap: 16 });
+        let mut s = Scheduler::new(policy(4, 9, 16));
+        let lim = StepLimits::unlimited();
         s.submit(req(0)).unwrap();
         // 3 slots busy, 1 free: the queued request joins with no wait
-        assert_eq!(s.admit(3).len(), 1);
+        assert_eq!(s.admit(3, &lim).len(), 1);
         // full batch: nothing joins even though requests are queued
         s.submit(req(1)).unwrap();
-        assert!(s.admit(4).is_empty());
+        assert!(s.admit(4, &lim).is_empty());
         assert_eq!(s.queue_len(), 1);
     }
 
     #[test]
     fn wait_counter_resets_after_launch() {
-        let mut s = Scheduler::new(SchedulerPolicy { max_batch: 2, max_wait: 1, queue_cap: 16 });
+        let mut s = Scheduler::new(policy(2, 1, 16));
+        let lim = StepLimits::unlimited();
         s.submit(req(0)).unwrap();
-        assert!(s.admit(0).is_empty());
-        assert_eq!(s.admit(0).len(), 1);
+        assert!(s.admit(0, &lim).is_empty());
+        assert_eq!(s.admit(0, &lim).len(), 1);
         // next idle arrival waits again (counter was reset)
         s.submit(req(1)).unwrap();
-        assert!(s.admit(0).is_empty());
-        assert_eq!(s.admit(0).len(), 1);
+        assert!(s.admit(0, &lim).is_empty());
+        assert_eq!(s.admit(0, &lim).len(), 1);
+    }
+
+    #[test]
+    fn prefill_budget_spreads_a_burst_across_steps() {
+        let mut s = Scheduler::new(policy(4, 0, 16));
+        for id in 0..3 {
+            s.submit(req_prompt(id, 6)).unwrap();
+        }
+        // 6 + 6 > 10: only the first fits beside another this step — and
+        // the first is always admitted, so exactly one joins per step
+        let lim = StepLimits { prefill_tokens: Some(10), cache_slots: None };
+        let a = s.admit(0, &lim);
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        let b = s.admit(1, &lim);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(s.queue_len(), 1);
+    }
+
+    #[test]
+    fn oversized_prompt_is_never_starved() {
+        let mut s = Scheduler::new(policy(2, 0, 16));
+        s.submit(req_prompt(0, 100)).unwrap();
+        let lim = StepLimits { prefill_tokens: Some(4), cache_slots: None };
+        assert_eq!(s.admit(0, &lim).len(), 1, "first joiner ignores the budget");
+    }
+
+    #[test]
+    fn prefill_budget_counts_prompt_tokens_exactly() {
+        let mut s = Scheduler::new(policy(4, 0, 16));
+        for id in 0..3 {
+            s.submit(req_prompt(id, 5)).unwrap();
+        }
+        let lim = StepLimits { prefill_tokens: Some(10), cache_slots: None };
+        assert_eq!(s.admit(0, &lim).len(), 2, "5 + 5 fills the 10-token limit");
+        // and None really is unconstrained: the rest joins at once
+        assert_eq!(s.admit(2, &StepLimits::unlimited()).len(), 1);
+    }
+
+    #[test]
+    fn cache_slots_cap_joins_with_backpressure() {
+        let mut s = Scheduler::new(policy(4, 0, 16));
+        for id in 0..4 {
+            s.submit(req(id)).unwrap();
+        }
+        let lim = StepLimits { prefill_tokens: None, cache_slots: Some(2) };
+        assert_eq!(s.admit(0, &lim).len(), 2, "memory budget admits two");
+        assert_eq!(s.queue_len(), 2, "the rest stay queued, not shed");
+        let none = StepLimits { prefill_tokens: None, cache_slots: Some(0) };
+        assert!(s.admit(2, &none).is_empty(), "no headroom, no joins");
     }
 }

@@ -110,6 +110,10 @@ fn job_spec_label_round_trip() {
         "serve/nano/sparsegpt-50%",
         "serve/small/magnitude-2:4",
         "serve/medium/sparsegpt-2:4+4bit",
+        "serve/nano/sparsegpt-50%,kv=off",
+        "serve/small/sparsegpt-2:4,chunk=8",
+        "serve/small/sparsegpt-50%,cache-mb=16",
+        "serve/medium/sparsegpt-50%,kv=off,chunk=1,cache-mb=4,prefill=256",
     ] {
         let spec = JobSpec::parse(label).unwrap_or_else(|e| panic!("{label}: {e:#}"));
         assert_eq!(spec.label(), label, "label round trip for {label}");
@@ -148,8 +152,30 @@ fn job_spec_rejects_malformed() {
         "sweep/nano/sparsegpt-50%,bogus",
         "serve/",
         "serve/nano/bogus-50%",
+        "serve/nano/sparsegpt-50%,kv=sometimes",
+        "serve/nano/sparsegpt-50%,chunk=",
+        "serve/nano/sparsegpt-50%,budget=4",
         "gen-data/nano",
     ] {
         assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
     }
+}
+
+#[test]
+fn serve_cache_knob_labels_map_to_fields() {
+    let JobSpec::Serve(s) =
+        JobSpec::parse("serve/nano/sparsegpt-50%,kv=off,chunk=4,cache-mb=8,prefill=64").unwrap()
+    else {
+        panic!("wrong kind");
+    };
+    assert!(!s.kv_cache);
+    assert_eq!(s.prefill_chunk, 4);
+    assert_eq!(s.cache_budget_mb, 8);
+    assert_eq!(s.max_prefill_tokens, 64);
+    // defaults: the canonical label of a default spec carries no knob tail
+    let JobSpec::Serve(d) = JobSpec::parse("serve/nano/sparsegpt-50%").unwrap() else {
+        panic!("wrong kind");
+    };
+    assert!(d.kv_cache);
+    assert_eq!(JobSpec::Serve(d).label(), "serve/nano/sparsegpt-50%");
 }

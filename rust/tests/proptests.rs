@@ -8,7 +8,9 @@ use sparsegpt::data::Tokenizer;
 use sparsegpt::model::init::init_params;
 use sparsegpt::model::layout::{LinearKind, PRUNABLE_KINDS};
 use sparsegpt::model::{ModelCfg, SparseStore};
-use sparsegpt::serve::SparseModel;
+use sparsegpt::serve::{
+    EngineOptions, KvCache, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel,
+};
 use sparsegpt::solver::exact::exact_reconstruction;
 use sparsegpt::solver::hessian::{dampened_hinv_chol_f64, layer_sq_error};
 use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
@@ -310,7 +312,7 @@ fn prop_sparse_store_file_roundtrip_bit_exact() {
 
 /// Property: packed decode (CSR / n:m kernels) is element-identical to
 /// dense decode of the same pruned parameters — the serving engine's
-/// correctness contract.
+/// correctness contract, on the banded re-forward path.
 #[test]
 fn prop_packed_decode_element_identical_to_dense() {
     let cfg = prop_cfg("prop-serve");
@@ -326,11 +328,109 @@ fn prop_packed_decode_element_identical_to_dense() {
             SparseModel::from_params(&fp, &PackPolicy::with_format(PackFormat::Dense)).unwrap();
         let packed = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
         let batch = 1 + rng.below(3);
-        let windows: Vec<i32> =
-            (0..batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
-        let a = dense.decode_step(&windows, batch).unwrap();
-        let b = packed.decode_step(&windows, batch).unwrap();
+        let seqs: Vec<Vec<i32>> = (0..batch)
+            .map(|_| {
+                let len = 1 + rng.below(2 * cfg.seq);
+                (0..len).map(|_| rng.below(cfg.vocab) as i32).collect()
+            })
+            .collect();
+        let seqs: Vec<&[i32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let a = dense.forward_logits(&seqs).unwrap();
+        let b = packed.forward_logits(&seqs).unwrap();
         assert_eq!(a.data(), b.data(), "seed {seed} ({})", packed.format_summary());
+    }
+}
+
+/// Property: the KV ring buffer is exact — random append/commit schedules
+/// never reorder or corrupt surviving positions, the resident set is
+/// always the trailing `min(total, capacity)` positions, and the eviction
+/// counts account for every overwritten entry.
+#[test]
+fn prop_kv_cache_ring_exact() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x5A0);
+        let layers = 1 + rng.below(3);
+        let d = 1 + rng.below(6);
+        let cap = 1 + rng.below(8);
+        let mut cache = KvCache::new(layers, d, cap);
+        // mirror: every row ever written, by absolute position
+        let mut mirror: Vec<Vec<f32>> = Vec::new();
+        let mut evicted_total = 0usize;
+        while mirror.len() < 4 * cap {
+            let n = 1 + rng.below(2 * cap); // commits larger than cap too
+            for _ in 0..n {
+                let pos = mirror.len();
+                let row: Vec<f32> = (0..d).map(|j| (pos * 31 + j) as f32).collect();
+                for l in 0..layers {
+                    cache.write(l, pos, &row, &row);
+                }
+                mirror.push(row);
+            }
+            evicted_total += cache.commit(n);
+            let total = mirror.len();
+            assert_eq!(cache.next_pos(), total, "seed {seed}");
+            assert_eq!(cache.len(), total.min(cap), "seed {seed}");
+            assert_eq!(evicted_total, total - cache.len(), "seed {seed}");
+            // surviving positions are exactly the trailing window, in order
+            for pos in cache.first_pos()..cache.next_pos() {
+                for l in 0..layers {
+                    assert_eq!(cache.k_row(l, pos), &mirror[pos][..], "seed {seed} pos {pos}");
+                    assert_eq!(cache.v_row(l, pos), &mirror[pos][..], "seed {seed} pos {pos}");
+                }
+            }
+        }
+    }
+}
+
+/// Property: whatever the workload, policy, and cache budget, a drained
+/// engine has returned every reserved cache byte — retire frees the cache,
+/// and the budget ends at zero with the peak never above the limit's
+/// one-request floor.
+#[test]
+fn prop_retire_returns_cache_budget_to_zero() {
+    let cfg = prop_cfg("prop-budget");
+    let fp = init_params(&cfg, 0);
+    let model = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
+    let unit = model.cache_bytes();
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x6A0);
+        let n = 1 + rng.below(6);
+        let reqs: Vec<(usize, ServeRequest)> = (0..n)
+            .map(|i| {
+                let plen = 1 + rng.below(2 * cfg.seq);
+                (
+                    rng.below(3),
+                    ServeRequest {
+                        id: i as u64,
+                        prompt: (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect(),
+                        max_new_tokens: 1 + rng.below(8),
+                        seed: rng.next_u64(),
+                    },
+                )
+            })
+            .collect();
+        let slots = 1 + rng.below(3) as u64;
+        let opts = EngineOptions {
+            policy: SchedulerPolicy {
+                max_batch: 1 + rng.below(4),
+                max_wait: rng.below(2),
+                queue_cap: 8,
+                max_prefill_tokens: [0, cfg.seq][rng.below(2)],
+            },
+            temperature: 0.0,
+            top_k: 0,
+            cache_budget_bytes: slots * unit,
+            ..EngineOptions::default()
+        };
+        let out = ServeEngine::new(&model, opts).run(reqs, &mut |_| {}).unwrap();
+        assert_eq!(out.finished.len(), n, "seed {seed}: backpressure must still drain");
+        assert_eq!(out.cache_bytes_in_use, 0, "seed {seed}: budget not returned");
+        assert!(
+            out.peak_cache_bytes <= slots.max(1) * unit,
+            "seed {seed}: peak {} exceeds budget {}",
+            out.peak_cache_bytes,
+            slots * unit
+        );
     }
 }
 

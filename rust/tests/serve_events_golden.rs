@@ -1,27 +1,41 @@
 //! Golden test for the serve job's JSONL event contract on the reference
 //! backend: a real zero-artifact run (no data, no checkpoints, no PJRT —
 //! seed-0 init + synthetic calibration fallbacks engage) proceeds through
-//! prune → pack → continuous-batching decode, and its lifecycle lines
-//! (`job-started`, `request-enqueued`, `batch-formed`, `request-finished`,
+//! prune → pack → KV-cached continuous-batching decode, and its lifecycle
+//! lines (`job-started`, `request-enqueued`, `batch-formed`,
+//! `prefill-started`, `cache-evicted`, `request-finished`,
 //! `engine-drained`, `job-finished`) must serialize exactly as pinned in
 //! `golden/serve_events.jsonl`. Wall-clock fields (`secs`,
 //! `tokens_per_sec`) are normalized to 0; everything else — arrival order,
-//! batch formation, join/retire steps — is schedule-determined and exact.
+//! batch formation, prefill chunking, eviction counts, join/retire steps —
+//! is schedule-determined and exact.
 //!
-//! The workload (5 requests arriving one per step into a batch of 2 with
-//! max_wait 1, 3 tokens each) is chosen to exercise every scheduler
-//! behavior: the idle wait, a full-batch launch, mid-run relaunch, and a
-//! trailing partial batch.
+//! The workload (3 requests with 130-token prompts arriving one per step
+//! into a batch of 2 with max_wait 1, 2 tokens each) is chosen to exercise
+//! every scheduler + cache behavior on nano's 128-token window: the idle
+//! wait, a full-batch launch, a trailing partial batch, a 5-chunk prefill
+//! whose overlong prompt evicts 2 ring entries (130 into 128), and one
+//! further eviction per decode step once the ring is full.
+//!
+//! Hand-verified schedule: id0 arrives at step 0 and waits (partial batch,
+//! max_wait 1); id1 arrives at step 1 forming the full batch — both
+//! prefill at step 1 (evicting 2 each) and sample their first token from
+//! the prefill logits; their single incremental decode at step 2 evicts 1
+//! each and retires both. id2 arrives at step 2, waits out step 3, joins
+//! alone at step 4, decodes and retires at step 5; the engine drains
+//! after 6 steps with 6 generated tokens.
 
 use sparsegpt::api::{JobSpec, JsonlSink, ServeSpec, Session};
 use sparsegpt::harness::Workspace;
 use sparsegpt::runtime::ReferenceBackend;
 use sparsegpt::util::json::Json;
 
-const PINNED: [&str; 6] = [
+const PINNED: [&str; 8] = [
     "job-started",
     "request-enqueued",
     "batch-formed",
+    "prefill-started",
+    "cache-evicted",
     "request-finished",
     "engine-drained",
     "job-finished",
@@ -36,9 +50,9 @@ fn run_serve_jsonl() -> String {
         rt: Box::new(ReferenceBackend::new()),
     };
     let mut spec = ServeSpec::new("nano");
-    spec.requests = 5;
-    spec.max_new_tokens = 3;
-    spec.prompt_len = 4;
+    spec.requests = 3;
+    spec.max_new_tokens = 2;
+    spec.prompt_len = 130; // 2 past nano's 128-token window: prefill evicts
     spec.arrival_every = 1;
     spec.max_batch = 2;
     spec.max_wait = 1;
@@ -82,6 +96,8 @@ fn serve_lifecycle_events_match_golden() {
 
     // the full stream is well-formed and the lifecycle is complete
     let mut enqueued = 0;
+    let mut prefilled = 0;
+    let mut evicted = 0;
     let mut finished = 0;
     let mut drained = 0;
     let mut ok = false;
@@ -89,18 +105,26 @@ fn serve_lifecycle_events_match_golden() {
         let v = Json::parse(line).unwrap();
         match v.get("reason").unwrap().as_str().unwrap() {
             "request-enqueued" => enqueued += 1,
+            "prefill-started" => {
+                prefilled += 1;
+                assert_eq!(v.get("prompt_tokens").unwrap().as_usize().unwrap(), 130);
+                assert_eq!(v.get("chunks").unwrap().as_usize().unwrap(), 5);
+            }
+            "cache-evicted" => evicted += v.get("evicted").unwrap().as_usize().unwrap(),
             "request-finished" => finished += 1,
             "engine-drained" => {
                 drained += 1;
-                assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 5);
-                assert_eq!(v.get("tokens").unwrap().as_usize().unwrap(), 15);
+                assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 3);
+                assert_eq!(v.get("tokens").unwrap().as_usize().unwrap(), 6);
             }
             "job-finished" => ok = matches!(v.get("ok").unwrap(), Json::Bool(true)),
             _ => {}
         }
     }
-    assert_eq!(enqueued, 5, "every synthetic request is enqueued once");
-    assert_eq!(finished, 5, "every request retires exactly once");
+    assert_eq!(enqueued, 3, "every synthetic request is enqueued once");
+    assert_eq!(prefilled, 3, "every request prefills exactly once");
+    assert_eq!(evicted, 9, "2 prefill evictions + 1 decode eviction per request");
+    assert_eq!(finished, 3, "every request retires exactly once");
     assert_eq!(drained, 1);
     assert!(ok, "serve job must finish ok");
 }

@@ -1,0 +1,186 @@
+//! Differential test for the tentpole serving invariant: **KV-cached
+//! incremental decode is token-for-token identical to the full re-forward
+//! path** — for arbitrary prompt lengths (including prompts longer than
+//! the attention window, so prefill itself evicts), arbitrary batch
+//! shapes/arrival patterns, every packed format (CSR / 2:4 / dense), every
+//! prefill chunk size, and with a cache-memory budget constraining
+//! admission. The window is 6 tokens here, so every scenario runs far past
+//! sliding-window eviction.
+
+use sparsegpt::model::init::init_params;
+use sparsegpt::model::layout::{FlatParams, PRUNABLE_KINDS};
+use sparsegpt::model::ModelCfg;
+use sparsegpt::serve::{EngineOptions, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel};
+use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+use sparsegpt::sparse::{PackFormat, PackPolicy};
+use sparsegpt::util::prng::Rng;
+
+const TRIALS: u64 = 8;
+
+fn cfg() -> ModelCfg {
+    ModelCfg::from_dims("kv-parity", 8, 2, 2, 1, 1, 13, 6)
+}
+
+/// Prune every prunable linear of a fresh model with `f`.
+fn pruned_params(
+    cfg: &ModelCfg,
+    seed: u64,
+    f: impl Fn(&sparsegpt::tensor::Tensor) -> sparsegpt::tensor::Tensor,
+) -> FlatParams {
+    let mut fp = init_params(cfg, seed);
+    for layer in 0..cfg.layers {
+        for kind in PRUNABLE_KINDS {
+            let w = f(&fp.get_linear(kind, layer).unwrap());
+            fp.set_linear(kind, layer, &w).unwrap();
+        }
+    }
+    fp
+}
+
+/// One model per packed format, all over magnitude-pruned weights.
+fn models() -> Vec<(&'static str, SparseModel)> {
+    let cfg = cfg();
+    let unstructured = pruned_params(&cfg, 3, |w| magnitude_prune(w, 0.5).0);
+    let nm = pruned_params(&cfg, 4, |w| magnitude_prune_nm(w, 2, 4).0);
+    vec![
+        (
+            "dense",
+            SparseModel::from_params(&unstructured, &PackPolicy::with_format(PackFormat::Dense))
+                .unwrap(),
+        ),
+        (
+            "csr",
+            SparseModel::from_params(&unstructured, &PackPolicy::with_format(PackFormat::Csr))
+                .unwrap(),
+        ),
+        (
+            "nm-2:4",
+            SparseModel::from_params(&nm, &PackPolicy::with_format(PackFormat::Nm(2, 4)))
+                .unwrap(),
+        ),
+    ]
+}
+
+/// Random workload: mixed prompt lengths (1 .. 3*seq, so some prompts
+/// alone overflow the ring), staggered arrivals, mixed token budgets.
+fn workload(rng: &mut Rng, vocab: usize, seq: usize) -> Vec<(usize, ServeRequest)> {
+    let n = 1 + rng.below(5);
+    (0..n)
+        .map(|i| {
+            let plen = 1 + rng.below(3 * seq);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            (
+                rng.below(4),
+                ServeRequest {
+                    id: i as u64,
+                    prompt,
+                    max_new_tokens: 1 + rng.below(2 * seq),
+                    seed: rng.next_u64(),
+                },
+            )
+        })
+        .collect()
+}
+
+fn token_streams(
+    model: &SparseModel,
+    opts: EngineOptions,
+    reqs: Vec<(usize, ServeRequest)>,
+) -> Vec<(u64, Vec<i32>)> {
+    let mut out: Vec<(u64, Vec<i32>)> = ServeEngine::new(model, opts)
+        .run(reqs, &mut |_| {})
+        .unwrap()
+        .finished
+        .iter()
+        .map(|f| (f.id, f.tokens.clone()))
+        .collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+#[test]
+fn cached_decode_matches_reforward_on_all_packed_formats() {
+    for (label, model) in models() {
+        let (vocab, seq) = (model.cfg.vocab, model.cfg.seq);
+        for seed in 0..TRIALS {
+            let mut rng = Rng::new(seed ^ 0x5EED);
+            let reqs = workload(&mut rng, vocab, seq);
+            let policy = SchedulerPolicy {
+                max_batch: 1 + rng.below(4),
+                max_wait: rng.below(3),
+                queue_cap: 16,
+                max_prefill_tokens: [0, seq][rng.below(2)],
+            };
+            let temperature = [0.0, 0.9][rng.below(2)];
+            let chunk = [0, 1, 2, 5][rng.below(4)];
+            // a tight cache budget reshuffles the admission schedule but
+            // must never change what any request decodes
+            let cache_budget_bytes = [0, model.cache_bytes()][rng.below(2)];
+            let base = EngineOptions {
+                policy,
+                temperature,
+                top_k: 4,
+                prefill_chunk: chunk,
+                cache_budget_bytes,
+                kv_cache: true,
+            };
+            let cached = token_streams(&model, base, reqs.clone());
+            let uncached =
+                token_streams(&model, EngineOptions { kv_cache: false, ..base }, reqs);
+            assert_eq!(
+                cached, uncached,
+                "{label} seed {seed}: cached decode diverged from the re-forward path"
+            );
+            assert!(
+                cached.iter().any(|(_, t)| !t.is_empty()),
+                "{label} seed {seed}: workload produced no tokens"
+            );
+        }
+    }
+}
+
+#[test]
+fn model_level_logits_are_bitwise_identical_per_format() {
+    // below the engine: prefill + one incremental step equals the banded
+    // full re-forward bit-for-bit at every context length around and past
+    // the eviction horizon, for every packed format
+    for (label, model) in models() {
+        let (vocab, seq) = (model.cfg.vocab, model.cfg.seq);
+        let mut rng = Rng::new(0xBEEF);
+        let ctx: Vec<i32> = (0..3 * seq + 2).map(|_| rng.below(vocab) as i32).collect();
+        for len in 1..=ctx.len() {
+            let want = model.forward_logits(&[&ctx[..len]]).unwrap();
+            let mut cache = model.new_cache();
+            let logits = if len == 1 {
+                model.prefill(&ctx[..1], &mut cache, 2).unwrap().0
+            } else {
+                model.prefill(&ctx[..len - 1], &mut cache, 2).unwrap();
+                model
+                    .decode_cached(&[ctx[len - 1]], &mut [&mut cache])
+                    .unwrap()
+                    .0
+                    .into_data()
+            };
+            assert_eq!(want.data(), &logits[..], "{label} len {len}");
+        }
+    }
+}
+
+#[test]
+fn packed_formats_agree_with_each_other_on_the_cached_path() {
+    // the PR 3 invariant (packed == dense), re-pinned on the new path: the
+    // dense and CSR packings of the same pruned weights decode identical
+    // token streams through the KV cache
+    let cfg = cfg();
+    let fp = pruned_params(&cfg, 9, |w| magnitude_prune(w, 0.6).0);
+    let dense =
+        SparseModel::from_params(&fp, &PackPolicy::with_format(PackFormat::Dense)).unwrap();
+    let csr = SparseModel::from_params(&fp, &PackPolicy::with_format(PackFormat::Csr)).unwrap();
+    let mut rng = Rng::new(77);
+    let reqs = workload(&mut rng, cfg.vocab, cfg.seq);
+    let opts = EngineOptions { temperature: 0.0, top_k: 0, ..EngineOptions::default() };
+    assert_eq!(
+        token_streams(&dense, opts, reqs.clone()),
+        token_streams(&csr, opts, reqs)
+    );
+}
