@@ -28,9 +28,12 @@ def ref_hessian(x):
 
 def quant_grid(w, levels):
     """Per-row asymmetric min/max grid over the original weights.
-    Returns (scale, zero) with shapes (d_row, 1)."""
-    lo = np.minimum(w.min(axis=1, keepdims=True), 0.0)
-    hi = np.maximum(w.max(axis=1, keepdims=True), 0.0)
+    Returns (scale, zero) with shapes (d_row, 1). lo/hi are the row's true
+    min/max (no zero fold): an all-positive row keeps its tight range, and
+    zero stays representable whenever the row spans it (pruned weights are
+    masked to exact zero before quantization, so they never need the grid)."""
+    lo = w.min(axis=1, keepdims=True)
+    hi = w.max(axis=1, keepdims=True)
     scale = (hi - lo) / max(float(levels), 1.0)
     scale = np.where(scale <= 0.0, 1.0, scale)
     zero = np.round(-lo / scale)

@@ -27,10 +27,12 @@ from .configs import BLOCKSIZE
 
 
 def _quant_params(w, qlevels):
-    """Per-row asymmetric RTN grid from the ORIGINAL weights. The grid always
-    contains 0 so pruned weights stay exactly representable."""
-    lo = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
-    hi = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    """Per-row asymmetric RTN grid from the ORIGINAL weights. lo/hi are the
+    row's true min/max (no zero fold — matches ``quant_grid`` in
+    kernels/ref.py and ``QuantGrid`` on the Rust side): pruned weights are
+    frozen at exact zero by the keep-mask, never through the grid."""
+    lo = jnp.min(w, axis=1, keepdims=True)
+    hi = jnp.max(w, axis=1, keepdims=True)
     scale = (hi - lo) / jnp.maximum(qlevels, 1.0)
     scale = jnp.where(scale <= 0.0, 1.0, scale)
     zero = jnp.round(-lo / scale)

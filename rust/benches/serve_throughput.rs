@@ -1,12 +1,14 @@
 //! Serve throughput: end-to-end tokens/sec of the continuous-batching
 //! decode engine — dense vs CSR (50% / 60% unstructured) vs 2:4 packed,
-//! each in both decode modes: **KV-cached incremental decode** (per-token
-//! cost O(layers)) vs the **uncached full re-forward** reference path
+//! f32 vs quantized (q8/q4 codes dequantized inside the kernels), each in
+//! both decode modes: **KV-cached incremental decode** (per-token cost
+//! O(layers)) vs the **uncached full re-forward** reference path
 //! (per-token cost O(ctx · layers)). The serving-side counterpart of
-//! Table 7/8's kernel-level speedups, plus the payoff of the KV cache
-//! itself. Runtime depends only on shape + sparsity pattern, so the
-//! workload runs on seed-0 random weights and needs no artifacts, data or
-//! checkpoints.
+//! Table 7/8's kernel-level speedups plus the Fig.-6 size trade-off made
+//! measurable on the serving path: every row reports `effective_bits` /
+//! `bytes_per_weight` (50% sparse + 4-bit + bitmask = 3.0 bits). Runtime
+//! depends only on shape + sparsity pattern, so the workload runs on
+//! seed-0 random weights and needs no artifacts, data or checkpoints.
 //!
 //! The default prompt length is 256 — past the 128-token attention window,
 //! so the cached rows also pay ring eviction — and the cached/uncached
@@ -21,6 +23,7 @@
 //! bench trajectory is machine-readable:
 //!   { "bench": "serve_throughput", "config": ..., "rows": [
 //!       { "variant": "csr-60%", "kv": "cached", "density": ...,
+//!         "effective_bits": ..., "bytes_per_weight": ...,
 //!         "tokens": ..., "decode_secs": ..., "prefill_secs": ...,
 //!         "tokens_per_sec": ..., "speedup_vs_dense": ...,
 //!         "speedup_vs_uncached": ... }, ...] }
@@ -97,11 +100,20 @@ fn main() -> Result<()> {
         ..EngineOptions::default()
     };
 
+    let w50 = prune_all(&dense, |w| magnitude_prune(w, 0.5).0);
+    let w60 = prune_all(&dense, |w| magnitude_prune(w, 0.6).0);
+    let wnm = prune_all(&dense, |w| magnitude_prune_nm(w, 2, 4).0);
     let variants: Vec<(&str, FlatParams, PackFormat)> = vec![
         ("dense", dense.clone(), PackFormat::Dense),
-        ("csr-50%", prune_all(&dense, |w| magnitude_prune(w, 0.5).0), PackFormat::Csr),
-        ("csr-60%", prune_all(&dense, |w| magnitude_prune(w, 0.6).0), PackFormat::Csr),
-        ("nm-2:4", prune_all(&dense, |w| magnitude_prune_nm(w, 2, 4).0), PackFormat::Nm(2, 4)),
+        ("csr-50%", w50.clone(), PackFormat::Csr),
+        ("csr-60%", w60, PackFormat::Csr),
+        ("nm-2:4", wnm.clone(), PackFormat::Nm(2, 4)),
+        // quantized legs: f32 vs q8 vs q4 at 50% / 2:4 sparsity — the
+        // Fig.-6 size/speed trade-off on the serving path
+        ("q8-50%", w50.clone(), PackFormat::QCsr { bits: 8, group: 0 }),
+        ("q4-50%", w50, PackFormat::QCsr { bits: 4, group: 0 }),
+        ("q8-2:4", wnm.clone(), PackFormat::QNm { bits: 8, group: 0 }),
+        ("q4-2:4", wnm, PackFormat::QNm { bits: 4, group: 0 }),
     ];
 
     println!(
@@ -112,7 +124,17 @@ fn main() -> Result<()> {
         &format!(
             "serve throughput ({config}, {requests} req x {tokens} tok, prompt {prompt_len})"
         ),
-        &["variant", "kv", "density", "tokens", "total s", "tok/s", "vs dense", "vs uncached"],
+        &[
+            "variant",
+            "kv",
+            "density",
+            "bits/w",
+            "tokens",
+            "total s",
+            "tok/s",
+            "vs dense",
+            "vs uncached",
+        ],
     );
     let mut rows = Vec::new();
     // dense baseline tokens/sec per mode, for the per-mode "vs dense" column
@@ -147,6 +169,7 @@ fn main() -> Result<()> {
                 label.to_string(),
                 kv.to_string(),
                 format!("{:.3}", model.density()),
+                format!("{:.2}", model.effective_bits()),
                 out.tokens.to_string(),
                 format!("{:.3}", total_secs),
                 format!("{tps:.1}"),
@@ -157,6 +180,8 @@ fn main() -> Result<()> {
                 ("variant", Json::Str(label.to_string())),
                 ("kv", Json::Str(kv.to_string())),
                 ("density", Json::Num(model.density())),
+                ("effective_bits", Json::Num(model.effective_bits())),
+                ("bytes_per_weight", Json::Num(model.effective_bits() / 8.0)),
                 ("tokens", Json::Num(out.tokens as f64)),
                 ("decode_secs", Json::Num(out.decode_secs)),
                 ("prefill_secs", Json::Num(out.prefill_secs)),

@@ -67,6 +67,8 @@ pub enum Event {
         density: f64,
         /// "csr:10 dense:2"-style per-format matrix counts
         formats: String,
+        /// storage bits per packed weight (Fig.-6 accounting; 32.0 = f32)
+        effective_bits: f64,
     },
     /// a serve request entered the bounded queue
     RequestEnqueued {
@@ -218,13 +220,16 @@ impl Event {
                 ("total", n(*total as f64)),
                 ("label", s(label)),
             ]),
-            Event::CheckpointPacked { path, bytes, density, formats } => obj(vec![
-                reason,
-                ("path", s(path)),
-                ("bytes", n(*bytes as f64)),
-                ("density", n(*density)),
-                ("formats", s(formats)),
-            ]),
+            Event::CheckpointPacked { path, bytes, density, formats, effective_bits } => {
+                obj(vec![
+                    reason,
+                    ("path", s(path)),
+                    ("bytes", n(*bytes as f64)),
+                    ("density", n(*density)),
+                    ("formats", s(formats)),
+                    ("effective_bits", n(*effective_bits)),
+                ])
+            }
             Event::RequestEnqueued { id, step, prompt_tokens, max_new_tokens } => obj(vec![
                 reason,
                 ("id", n(*id as f64)),
@@ -335,10 +340,13 @@ impl EventSink for HumanSink {
             Event::SweepVariant { index, total, label } => {
                 println!("[{}] variant {}/{total}: {label}", self.tag("sweep"), *index + 1)
             }
-            Event::CheckpointPacked { path, bytes, density, formats } => println!(
-                "[{}] packed -> {path} ({bytes} bytes, density {density:.3}, {formats})",
-                self.tag("pack")
-            ),
+            Event::CheckpointPacked { path, bytes, density, formats, effective_bits } => {
+                println!(
+                    "[{}] packed -> {path} ({bytes} bytes, density {density:.3}, {formats}, \
+                     {effective_bits:.2} bits/weight)",
+                    self.tag("pack")
+                )
+            }
             Event::RequestEnqueued { id, step, prompt_tokens, max_new_tokens } => println!(
                 "[{}] step {step}: request {id} enqueued ({prompt_tokens} prompt, \
                  {max_new_tokens} max tokens)",
@@ -445,7 +453,8 @@ mod tests {
                 path: "c.spkt".into(),
                 bytes: 1024,
                 density: 0.5,
-                formats: "csr:12".into(),
+                formats: "qcsr:12".into(),
+                effective_bits: 3.0,
             },
             Event::RequestEnqueued { id: 0, step: 0, prompt_tokens: 8, max_new_tokens: 16 },
             Event::BatchFormed { step: 1, joined: 2, batch: 2 },

@@ -131,6 +131,8 @@ pub struct ServeReport {
     pub formats: String,
     /// density over the packed prunable weights
     pub density: f64,
+    /// storage bits per packed weight (Fig.-6 accounting; 32.0 = f32)
+    pub effective_bits: f64,
     /// decoded through the incremental KV-cached path (vs full re-forward)
     pub kv_cache: bool,
     pub steps: usize,

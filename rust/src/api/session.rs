@@ -354,7 +354,8 @@ fn run_prune(
                 SparseStore::path_for(&ws.ckpt_dir, &spec.config, &format!("-{}", report.label))
             }
         };
-        pack_to(&report.params, &report.label, &PackPolicy::default(), &path, sink)?;
+        let policy = PackPolicy::with_format(spec.pack_format);
+        pack_to(&report.params, &report.label, &policy, &path, sink)?;
         report.packed_to = Some(path);
     }
     Ok(report)
@@ -375,6 +376,7 @@ fn pack_to(
         bytes,
         density: store.density(),
         formats: store.format_summary(),
+        effective_bits: store.effective_bits(),
     });
     Ok(store)
 }
@@ -638,10 +640,11 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
                     let store = SparseStore::pack(&pr.params, &policy, &pr.label)?;
                     sink.emit(&Event::Message {
                         text: format!(
-                            "[serve {}] packed in-memory: {} (density {:.3})",
+                            "[serve {}] packed in-memory: {} (density {:.3}, {:.2} bits/weight)",
                             spec.config,
                             store.format_summary(),
-                            store.density()
+                            store.density(),
+                            store.effective_bits()
                         ),
                     });
                     (store, pr.label, None)
@@ -737,6 +740,7 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
         label,
         formats: model.format_summary().to_string(),
         density: model.density(),
+        effective_bits: model.effective_bits(),
         kv_cache: spec.kv_cache,
         steps: outcome.steps,
         tokens: outcome.tokens,

@@ -211,6 +211,9 @@ pub struct PruneJobSpec {
     pub pack: bool,
     /// packed-checkpoint path; `None` = `<ckpt-dir>/<config>-<label>.spkt`
     pub pack_out: Option<PathBuf>,
+    /// packed-checkpoint format policy (auto | dense | csr | n:m |
+    /// q{dense,csr,nm}:<bits>[,g=<cols>])
+    pub pack_format: PackFormat,
 }
 
 impl PruneJobSpec {
@@ -229,6 +232,7 @@ impl PruneJobSpec {
             suffix: None,
             pack: false,
             pack_out: None,
+            pack_format: PackFormat::Auto,
         }
     }
 }
@@ -410,9 +414,12 @@ pub use crate::serve::engine::DEFAULT_PREFILL_CHUNK;
 /// `serve`: prune (or load a packed checkpoint) and run a synthetic
 /// continuous-batching decode workload through the sparse kernels.
 ///
-/// The cache knobs round-trip through the job label as a comma list after
-/// the prune spec (only non-default values appear):
-/// `serve/<config>/<prune-spec>[,kv=off][,chunk=<n>][,cache-mb=<n>][,prefill=<n>]`.
+/// The cache and pack knobs round-trip through the job label as a comma
+/// list after the prune spec (only non-default values appear):
+/// `serve/<config>/<prune-spec>[,kv=off][,chunk=<n>][,cache-mb=<n>]`
+/// `[,prefill=<n>][,fmt=<pack-format>][,g=<cols>]` — `fmt` carries the
+/// base pack-format label (e.g. `qcsr:4`) and `g` the quantization group,
+/// kept separate so the comma-separated knob list stays flat.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeSpec {
     pub config: String,
@@ -513,7 +520,7 @@ impl ServeSpec {
         self
     }
 
-    /// The canonical label tail: prune spec + non-default cache knobs.
+    /// The canonical label tail: prune spec + non-default cache/pack knobs.
     fn extra_label(&self) -> String {
         let mut parts = vec![self.prune.label()];
         if !self.kv_cache {
@@ -528,6 +535,16 @@ impl ServeSpec {
         if self.max_prefill_tokens != 0 {
             parts.push(format!("prefill={}", self.max_prefill_tokens));
         }
+        if self.format != PackFormat::Auto {
+            // the group rides as its own knob so fmt's value has no comma
+            match self.format.label().split_once(',') {
+                Some((base, group)) => {
+                    parts.push(format!("fmt={base}"));
+                    parts.push(group.to_string());
+                }
+                None => parts.push(format!("fmt={}", self.format.label())),
+            }
+        }
         parts.join(",")
     }
 
@@ -541,7 +558,7 @@ impl ServeSpec {
             let err = || {
                 anyhow!(
                     "unrecognized serve knob {part:?} (expected kv=on|off, chunk=<n>, \
-                     cache-mb=<n> or prefill=<n>)"
+                     cache-mb=<n>, prefill=<n>, fmt=<pack-format> or g=<cols>)"
                 )
             };
             let (key, value) = part.split_once('=').ok_or_else(err)?;
@@ -556,6 +573,11 @@ impl ServeSpec {
                 "chunk" => self.prefill_chunk = value.parse().map_err(|_| err())?,
                 "cache-mb" => self.cache_budget_mb = value.parse().map_err(|_| err())?,
                 "prefill" => self.max_prefill_tokens = value.parse().map_err(|_| err())?,
+                "fmt" => self.format = PackFormat::parse(value)?,
+                "g" => {
+                    let g: usize = value.parse().map_err(|_| err())?;
+                    self.format = self.format.with_group(g)?;
+                }
                 _ => return Err(err()),
             }
         }
@@ -744,6 +766,30 @@ mod tests {
         assert_eq!(parsed.cache_budget_mb, 0);
         assert!(JobSpec::parse("serve/").is_err());
         assert!(JobSpec::parse("serve/nano/bogus-50%").is_err());
+    }
+
+    #[test]
+    fn serve_pack_format_knobs_round_trip_through_labels() {
+        let mut spec = ServeSpec::new("nano");
+        spec.format = PackFormat::QCsr { bits: 4, group: 128 };
+        let j = JobSpec::Serve(spec);
+        assert_eq!(j.label(), "serve/nano/sparsegpt-50%,fmt=qcsr:4,g=128");
+        assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
+        let mut spec = ServeSpec::new("nano").kv_cache(false);
+        spec.format = PackFormat::Csr;
+        let j = JobSpec::Serve(spec);
+        assert_eq!(j.label(), "serve/nano/sparsegpt-50%,kv=off,fmt=csr");
+        assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
+        // Auto (the default) stays out of the label
+        assert_eq!(JobSpec::Serve(ServeSpec::new("nano")).label(), "serve/nano/sparsegpt-50%");
+        for bad in [
+            "serve/nano/sparsegpt-50%,fmt=bogus",
+            "serve/nano/sparsegpt-50%,fmt=qcsr:9",
+            "serve/nano/sparsegpt-50%,g=4",      // group without a quantized fmt
+            "serve/nano/sparsegpt-50%,fmt=csr,g=4",
+        ] {
+            assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
+        }
     }
 
     #[test]

@@ -34,6 +34,10 @@ commands:
             [--calib 128] [--calib-seed 0] [--skip attn|fc1|fc2|front|middle|back]
             [--prefix-frac 0.66] [--out <ckpt>] [--suffix -50]
             [--pack] [--pack-out <path.spkt>]
+            [--pack-format auto|dense|csr|n:m|q{dense,csr,nm}:<bits>[,g=<cols>]]
+            (quantized formats store 3/4/8-bit codes behind the sparse
+            index/bitmask streams, e.g. qcsr:4,g=128 for GPTQ-style
+            128-column groups; 50% sparse + qcsr:4 ~= 3 bits/weight)
   eval      --config <cfg> [--ckpt <path>] [--max-segments 512]
   zeroshot  --config <cfg> [--ckpt <path>] [--items 100] [--seed 7]
   stats     --config <cfg> [--ckpt <path>] [--nm 2:4]
@@ -43,7 +47,8 @@ commands:
             [--dataset <name>[,<name>...]] [--calib 128] [--max-segments 128]
             [--zeroshot-items 0] [--no-dense] [--save] [--ckpt <path>]
   e2e       [--config small] [--steps 300]
-  serve     [--config nano] [--spec sparsegpt-50%] [--format auto|dense|csr|2:4]
+  serve     [--config nano] [--spec sparsegpt-50%]
+            [--format auto|dense|csr|2:4|qdense:4|qcsr:4[,g=128]|qnm:4]
             [--kv-cache on|off] [--prefill-chunk 32] [--cache-mb 0]
             [--max-prefill-tokens 0]
             [--requests 8] [--tokens 16] [--prompt-len 8] [--arrival-every 1]
@@ -159,6 +164,7 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
             s.suffix = args.get("suffix").map(String::from);
             s.pack = args.has("pack");
             s.pack_out = args.get("pack-out").map(PathBuf::from);
+            s.pack_format = PackFormat::parse(args.get_or("pack-format", "auto"))?;
             JobSpec::Prune(s)
         }
         "eval" => {
@@ -321,11 +327,12 @@ fn print_tables(report: &JobReport) {
         JobReport::Serve(r) => {
             let mut table = Table::new(
                 &format!(
-                    "serve: {} [{}] density {:.3} ({}) kv-cache {}",
+                    "serve: {} [{}] density {:.3} ({}) {:.2} bits/w kv-cache {}",
                     r.config,
                     r.label,
                     r.density,
                     r.formats,
+                    r.effective_bits,
                     if r.kv_cache { "on" } else { "off" }
                 ),
                 &["request", "prompt", "tokens", "joined", "finished"],

@@ -1,7 +1,9 @@
 //! Packed sparse checkpoint IO (`.spkt`): a pruned model serialized in the
 //! formats the serving engine executes — each prunable linear as CSR,
-//! bitmask-packed n:m or dense (see [`crate::sparse::pack`]), plus the
-//! non-prunable remainder (embeddings, layer norms) stored raw.
+//! bitmask-packed n:m, dense, or a quantized variant (`qcsr` / `qnm` /
+//! `qdense`, u8-coded values behind the same streams — see
+//! [`crate::sparse::pack`]), plus the non-prunable remainder (embeddings,
+//! layer norms) stored raw.
 //!
 //! Layout (little-endian, mmap-friendly: fixed header, then a table of
 //! contents with absolute byte offsets into 8-byte-aligned sections, so a
@@ -9,7 +11,7 @@
 //!
 //! ```text
 //! magic    b"SGPTSPKT"                    8 bytes
-//! version  u32                            (currently 1)
+//! version  u32                            (2; v1 files still load)
 //! flags    u32                            (reserved, 0)
 //! name_len u32 + utf8 config name
 //! src_len  u32 + utf8 source label        (the prune spec that produced it)
@@ -17,10 +19,19 @@
 //! rest_off u64, rest_len u64              (f32 count of the dense remainder)
 //! toc      entries * { layer u32, kind u8, format u8, pad u16,
 //!                      offset u64, byte_len u64,
-//!                      rows u32, cols u32, nnz u64 }
+//!                      rows u32, cols u32, nnz u64,
+//!                      bits u8, pad u8, group u16,     -- v2 only
+//!                      effective_bits f32 }            -- v2 only
 //! rest     f32 * rest_len                 (non-prunable regions, layout order)
 //! sections one PackedMatrix byte-encoding per entry, 8-byte aligned
 //! ```
+//!
+//! The v2 TOC appends 8 bytes of quantization metadata per entry (entries
+//! are 48 bytes, still 8-aligned): the code width (`bits`, 0 for f32
+//! formats), the grid group size (`group`, 0 = per-row), and the matrix's
+//! effective storage bits/weight under the paper's Fig.-6 accounting —
+//! readable without touching the sections. v1 files (40-byte entries, f32
+//! formats only) load unchanged; the writer always emits v2.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -33,9 +44,25 @@ use crate::model::layout::{FlatParams, LinearKind, PRUNABLE_KINDS};
 use crate::sparse::{PackPolicy, PackedMatrix};
 
 const MAGIC: &[u8; 8] = b"SGPTSPKT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+const VERSION_V1: u32 = 1;
+/// TOC entry bytes: v1, and v2's appended quant metadata.
+const TOC_ENTRY_V1: usize = 4 + 1 + 1 + 2 + 8 + 8 + 4 + 4 + 8;
+const TOC_ENTRY_V2: usize = TOC_ENTRY_V1 + 1 + 1 + 2 + 4;
 /// serialized [`LinearKind`] order (stable across versions)
 const KIND_TAGS: [LinearKind; 6] = PRUNABLE_KINDS;
+
+/// The TOC format byte (mirrors the section tag of the same matrix).
+fn format_tag(m: &PackedMatrix) -> u8 {
+    match m {
+        PackedMatrix::Dense(_) => 0,
+        PackedMatrix::Csr(_) => 1,
+        PackedMatrix::Nm(_) => 2,
+        PackedMatrix::QDense(_) => 3,
+        PackedMatrix::QCsr(_) => 4,
+        PackedMatrix::QNm(_) => 5,
+    }
+}
 
 fn kind_tag(kind: LinearKind) -> u8 {
     KIND_TAGS.iter().position(|k| *k == kind).unwrap() as u8
@@ -117,7 +144,9 @@ impl SparseStore {
     }
 
     /// Rebuild the flat parameter vector (bit-exact inverse of [`pack`]
-    /// over the kernels' value grid).
+    /// over the kernels' value grid: f32 formats reproduce the pruned
+    /// weights exactly; quantized formats reproduce the dequantized
+    /// weights the kernels execute).
     ///
     /// [`pack`]: SparseStore::pack
     pub fn unpack(&self, cfg: &ModelCfg) -> Result<FlatParams> {
@@ -188,6 +217,23 @@ impl SparseStore {
             .join(" ")
     }
 
+    /// Size-weighted average storage bits per packed weight (the paper's
+    /// Fig.-6 accounting — see [`PackedMatrix::effective_bits`]).
+    pub fn effective_bits(&self) -> f64 {
+        let mut bits = 0.0f64;
+        let mut total = 0.0f64;
+        for e in &self.entries {
+            let numel = (e.matrix.rows() * e.matrix.cols()) as f64;
+            bits += e.matrix.effective_bits() * numel;
+            total += numel;
+        }
+        if total > 0.0 {
+            bits / total
+        } else {
+            32.0
+        }
+    }
+
     /// Serialize to `path`; returns the byte size written.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<u64> {
         let path = path.as_ref();
@@ -197,10 +243,9 @@ impl SparseStore {
         // encode sections first so the TOC can carry absolute offsets
         let name = self.config_name.as_bytes();
         let src = self.source_label.as_bytes();
-        let toc_entry_len = 4 + 1 + 1 + 2 + 8 + 8 + 4 + 4 + 8;
         let header_len = 8 + 4 + 4 + (4 + name.len()) + (4 + src.len()) + 8 + 4 + 4 + 8 + 8;
         let toc_off = align8(header_len);
-        let rest_off = align8(toc_off + self.entries.len() * toc_entry_len);
+        let rest_off = align8(toc_off + self.entries.len() * TOC_ENTRY_V2);
         let mut sections: Vec<Vec<u8>> = Vec::with_capacity(self.entries.len());
         let mut offsets: Vec<(u64, u64)> = Vec::with_capacity(self.entries.len());
         let mut cursor = align8(rest_off + self.rest.len() * 4);
@@ -246,18 +291,19 @@ impl SparseStore {
             for (e, (off, len)) in self.entries.iter().zip(&offsets) {
                 put(&mut f, &mut written, &(e.layer as u32).to_le_bytes())?;
                 put(&mut f, &mut written, &[kind_tag(e.kind)])?;
-                let fmt = match e.matrix {
-                    PackedMatrix::Dense(_) => 0u8,
-                    PackedMatrix::Csr(_) => 1u8,
-                    PackedMatrix::Nm(_) => 2u8,
-                };
-                put(&mut f, &mut written, &[fmt])?;
+                put(&mut f, &mut written, &[format_tag(&e.matrix)])?;
                 put(&mut f, &mut written, &0u16.to_le_bytes())?;
                 put(&mut f, &mut written, &off.to_le_bytes())?;
                 put(&mut f, &mut written, &len.to_le_bytes())?;
                 put(&mut f, &mut written, &(e.matrix.rows() as u32).to_le_bytes())?;
                 put(&mut f, &mut written, &(e.matrix.cols() as u32).to_le_bytes())?;
                 put(&mut f, &mut written, &(e.matrix.nnz() as u64).to_le_bytes())?;
+                // v2: quant metadata + effective bits, readable from the
+                // TOC alone (section-aligned like every other field)
+                let (bits, group) = e.matrix.quant_meta().unwrap_or((0, 0));
+                put(&mut f, &mut written, &[bits, 0u8])?;
+                put(&mut f, &mut written, &group.to_le_bytes())?;
+                put(&mut f, &mut written, &(e.matrix.effective_bits() as f32).to_le_bytes())?;
             }
             pad_to(&mut f, &mut written, rest_off)?;
             for v in &self.rest {
@@ -298,7 +344,7 @@ impl SparseStore {
             bail!("{path:?} is not a packed sparse checkpoint (bad magic)");
         }
         let version = u32_at(buf, &mut i)?;
-        if version != VERSION {
+        if version != VERSION && version != VERSION_V1 {
             bail!("unsupported packed checkpoint version {version}");
         }
         let _flags = u32_at(buf, &mut i)?;
@@ -337,13 +383,23 @@ impl SparseStore {
         for _ in 0..n_entries {
             let layer = u32_at(buf, &mut t)? as usize;
             let ktag = take(buf, &mut t, 1)?[0];
-            let _fmt = take(buf, &mut t, 1)?[0];
+            let fmt = take(buf, &mut t, 1)?[0];
             let _pad = take(buf, &mut t, 2)?;
             let off = u64_at(buf, &mut t)? as usize;
             let len = u64_at(buf, &mut t)? as usize;
             let rows = u32_at(buf, &mut t)? as usize;
             let cols = u32_at(buf, &mut t)? as usize;
             let nnz = u64_at(buf, &mut t)? as usize;
+            // v2 quant metadata (v1 entries stop at nnz)
+            let quant = if version >= VERSION {
+                let bits = take(buf, &mut t, 1)?[0];
+                let _pad = take(buf, &mut t, 1)?;
+                let group = u16::from_le_bytes(take(buf, &mut t, 2)?.try_into().unwrap());
+                let ebits = f32::from_le_bytes(take(buf, &mut t, 4)?.try_into().unwrap());
+                Some((bits, group, ebits))
+            } else {
+                None
+            };
             let kind = kind_from_tag(ktag)?;
             if layer >= layers {
                 bail!("TOC entry layer {layer} out of range");
@@ -358,6 +414,16 @@ impl SparseStore {
             }
             if matrix.rows() != rows || matrix.cols() != cols || matrix.nnz() != nnz {
                 bail!("TOC/section mismatch for layer {layer} {}", kind.label());
+            }
+            if let Some((bits, group, ebits)) = quant {
+                // the v2 TOC metadata must agree with the decoded section
+                let meta = matrix.quant_meta().unwrap_or((0, 0));
+                if fmt != format_tag(&matrix) || (bits, group) != meta {
+                    bail!("TOC quant metadata mismatch for layer {layer} {}", kind.label());
+                }
+                if (ebits as f64 - matrix.effective_bits()).abs() > 1e-3 {
+                    bail!("TOC effective_bits drifted for layer {layer} {}", kind.label());
+                }
             }
             entries.push(StoreEntry { layer, kind, matrix });
         }
@@ -442,6 +508,40 @@ mod tests {
             SparseStore::pack(&fp, &PackPolicy::with_format(PackFormat::Dense), "dense").unwrap();
         assert_eq!(store.format_counts().get("dense"), Some(&12));
         assert_eq!(store.unpack(&cfg).unwrap().data, fp.data);
+    }
+
+    #[test]
+    fn quantized_store_roundtrips_with_metadata() {
+        let cfg = test_cfg();
+        let fp = pruned_params(&cfg, 0.5);
+        let fmt = PackFormat::QCsr { bits: 4, group: 4 };
+        let store = SparseStore::pack(&fp, &PackPolicy::with_format(fmt), "sparsegpt-50%+q4")
+            .unwrap();
+        assert_eq!(store.format_counts().get("qcsr"), Some(&12));
+        assert!(store.effective_bits() < 32.0);
+
+        let dir = std::env::temp_dir().join(format!("sgpt_spkt_q_{}", std::process::id()));
+        let path = dir.join("q.spkt");
+        store.save(&path).unwrap();
+        let back = SparseStore::load(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+
+        // the dequantized weights round-trip bit-exactly, and the v2 TOC
+        // metadata survives
+        assert_eq!(back.unpack(&cfg).unwrap().data, store.unpack(&cfg).unwrap().data);
+        assert_eq!(back.effective_bits(), store.effective_bits());
+        for (a, b) in store.entries.iter().zip(&back.entries) {
+            assert_eq!(a.matrix.quant_meta(), b.matrix.quant_meta());
+            assert_eq!(a.matrix.quant_meta(), Some((4, 4)));
+        }
+        // quantization is lossy against the original params, but zeros
+        // (pruned weights) survive exactly
+        let unpacked = back.unpack(&cfg).unwrap();
+        for (orig, got) in fp.data.iter().zip(&unpacked.data) {
+            if *orig == 0.0 {
+                assert_eq!(*got, 0.0);
+            }
+        }
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! The sparse decode path: a transformer whose prunable linears execute in
-//! their packed serving formats (CSR / n:m / dense — see
-//! [`crate::sparse::pack`]) instead of dense GEMM.
+//! their packed serving formats (CSR / n:m / dense, f32 or quantized —
+//! see [`crate::sparse::pack`]) instead of dense GEMM. Quantized linears
+//! run through the dequant-fused kernels of [`crate::sparse::quant`]: no
+//! f32 weight matrix is materialized, and decode is element-identical to
+//! quantize-then-dense-decode (pinned by `tests/quant_parity.rs`).
 //!
 //! The forward mirrors `runtime/ref_ops.rs` structurally (OPT block, tanh
 //! GELU, softmax attention, tied LM head) but runs in f32 on the
@@ -70,6 +73,7 @@ pub struct SparseModel {
     head: Tensor,
     density: f64,
     format_summary: String,
+    effective_bits: f64,
 }
 
 impl SparseModel {
@@ -159,6 +163,7 @@ impl SparseModel {
             head,
             density: store.density(),
             format_summary: store.format_summary(),
+            effective_bits: store.effective_bits(),
         })
     }
 
@@ -176,6 +181,12 @@ impl SparseModel {
     /// "csr:10 dense:2"-style pack summary.
     pub fn format_summary(&self) -> &str {
         &self.format_summary
+    }
+
+    /// Size-weighted storage bits per packed weight (Fig.-6 accounting):
+    /// 3.0 for the 50%-sparse 4-bit configuration the paper highlights.
+    pub fn effective_bits(&self) -> f64 {
+        self.effective_bits
     }
 
     /// A fresh per-request KV cache sized for this model (one ring of
@@ -608,6 +619,38 @@ mod tests {
         let b = csr.forward_logits(&seqs).unwrap();
         assert_eq!(a.shape(), &[3, cfg.vocab]);
         assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn quantized_decode_matches_quantize_then_dense_decode() {
+        // module-level spot check of the quant contract (the broad
+        // differential sweep lives in tests/quant_parity.rs): a q4 CSR
+        // model decodes element-identically to the model built from the
+        // same weights quantized on the same grid and packed dense
+        use crate::solver::quant::QuantGrid;
+        let cfg = test_cfg();
+        let fp = pruned(&cfg, 0.6, 23);
+        let q = SparseModel::from_params(
+            &fp,
+            &PackPolicy::with_format(PackFormat::QCsr { bits: 4, group: 0 }),
+        )
+        .unwrap();
+        let mut reference = fp.clone();
+        for layer in 0..cfg.layers {
+            for kind in PRUNABLE_KINDS {
+                let w = fp.get_linear(kind, layer).unwrap();
+                let grid = QuantGrid::from_weights_grouped(&w, 15, 0);
+                reference.set_linear(kind, layer, &grid.quantize_surviving(&w)).unwrap();
+            }
+        }
+        let d = SparseModel::from_params(&reference, &PackPolicy::with_format(PackFormat::Dense))
+            .unwrap();
+        let (s0, s1) = (tokens(&cfg, 5, 31), tokens(&cfg, cfg.seq + 2, 32));
+        let seqs: Vec<&[i32]> = vec![&s0, &s1];
+        let (want, got) = (d.forward_logits(&seqs).unwrap(), q.forward_logits(&seqs).unwrap());
+        assert_eq!(want.data(), got.data());
+        assert_eq!(q.format_summary(), "qcsr:12");
+        assert!((q.effective_bits() - (q.density() * 4.0 + 1.0)).abs() < 1e-9);
     }
 
     #[test]

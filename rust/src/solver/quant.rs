@@ -1,16 +1,30 @@
-//! RTN (round-to-nearest) quantization on per-row asymmetric min/max grids.
+//! RTN (round-to-nearest) quantization on asymmetric min/max grids —
+//! per-row (the solver's joint mode, Eq. 7) or GPTQ-style grouped: one
+//! (scale, zero) pair per `group_cols` consecutive columns of each row.
 //!
-//! Matches `quant_grid` in `python/compile/kernels/ref.py` (and the grid the
-//! solver artifacts compute internally): the grid always contains zero so
-//! pruned weights stay exactly representable. Used stand-alone as the RTN
-//! baseline and inside the reference solver for the joint mode (Eq. 7).
+//! Matches `quant_grid` in `python/compile/kernels/ref.py`. `lo`/`hi` fold
+//! from the group's actual minimum/maximum (NOT from 0.0): an all-positive
+//! group gets its true minimum as `lo` instead of wasting grid range on
+//! `[0, min)`, and symmetrically for all-negative groups. Zero stays
+//! exactly representable whenever the group spans zero — which every group
+//! containing a pruned weight does, so packed sparse matrices never lose
+//! their zeros (the packed formats additionally store zeros structurally,
+//! outside the grid).
+//!
+//! Used stand-alone as the RTN baseline, inside the reference solver for
+//! the joint mode, and by the quantized packed formats
+//! (`crate::sparse::quant`), whose u8 code streams round-trip through
+//! [`QuantGrid::encode`] / [`QuantGrid::decode`].
 
 use crate::tensor::Tensor;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QuantGrid {
     pub levels: u32,
-    /// per-row (scale, zero-point)
+    /// columns covered by one (scale, zero) pair; `cols` for per-row grids
+    pub group_cols: usize,
+    pub cols: usize,
+    /// (scale, zero) per (row, column-group), row-major
     pub rows: Vec<(f32, f32)>,
 }
 
@@ -18,35 +32,102 @@ impl QuantGrid {
     /// Build the per-row grid from the ORIGINAL weights (as the paper /
     /// GPTQ do — the grid is fixed before error propagation shifts values).
     pub fn from_weights(w: &Tensor, levels: u32) -> QuantGrid {
+        QuantGrid::from_weights_grouped(w, levels, 0)
+    }
+
+    /// Grouped grids: one (scale, zero) pair per `group_cols` consecutive
+    /// columns of each row; `0` (or >= cols) collapses to one pair per row.
+    pub fn from_weights_grouped(w: &Tensor, levels: u32, group_cols: usize) -> QuantGrid {
         assert!(levels > 0);
-        let rows = (0..w.rows())
-            .map(|r| {
-                let row = w.row(r);
-                let lo = row.iter().fold(0.0f32, |a, &b| a.min(b));
-                let hi = row.iter().fold(0.0f32, |a, &b| a.max(b));
+        let cols = w.cols();
+        let group_cols = if group_cols == 0 || group_cols > cols { cols } else { group_cols };
+        let groups = cols.div_ceil(group_cols);
+        let mut rows = Vec::with_capacity(w.rows() * groups);
+        for r in 0..w.rows() {
+            let row = w.row(r);
+            for g in 0..groups {
+                let seg = &row[g * group_cols..cols.min((g + 1) * group_cols)];
+                // fold from the first element, not from 0.0: all-positive
+                // (or all-negative) groups get their true lo/hi
+                let lo = seg.iter().copied().fold(seg[0], f32::min);
+                let hi = seg.iter().copied().fold(seg[0], f32::max);
                 let mut scale = (hi - lo) / levels as f32;
                 if scale <= 0.0 {
                     scale = 1.0;
                 }
                 let zero = (-lo / scale).round();
-                (scale, zero)
-            })
-            .collect();
-        QuantGrid { levels, rows }
+                rows.push((scale, zero));
+            }
+        }
+        QuantGrid { levels, group_cols, cols, rows }
     }
 
-    pub fn quantize_one(&self, row: usize, v: f32) -> f32 {
-        let (scale, zero) = self.rows[row];
+    fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group_cols)
+    }
+
+    /// The (scale, zero) pair governing column `col` of row `row`.
+    #[inline]
+    pub fn scale_zero(&self, row: usize, col: usize) -> (f32, f32) {
+        self.rows[row * self.groups_per_row() + col / self.group_cols]
+    }
+
+    /// The integer code of `v` on its (row, col) grid. u8-storable —
+    /// requires `levels <= 255` (the packed formats' 2..=8-bit regime).
+    #[inline]
+    pub fn encode(&self, row: usize, col: usize, v: f32) -> u8 {
+        debug_assert!(self.levels <= u8::MAX as u32);
+        let (scale, zero) = self.scale_zero(row, col);
+        (v / scale + zero).round().clamp(0.0, self.levels as f32) as u8
+    }
+
+    /// Dequantize a stored code: `scale * (code - zero)` — the exact f32
+    /// operation the dequant-fused kernels perform, bit-identical to
+    /// [`quantize_at`] of the value the code came from (the testability
+    /// invariant `tests/quant_parity.rs` pins).
+    ///
+    /// [`quantize_at`]: QuantGrid::quantize_at
+    #[inline]
+    pub fn decode(&self, row: usize, col: usize, code: u8) -> f32 {
+        let (scale, zero) = self.scale_zero(row, col);
+        scale * (code as f32 - zero)
+    }
+
+    /// Round `v` to its nearest (row, col) grid point.
+    #[inline]
+    pub fn quantize_at(&self, row: usize, col: usize, v: f32) -> f32 {
+        let (scale, zero) = self.scale_zero(row, col);
         let q = (v / scale + zero).round().clamp(0.0, self.levels as f32);
         scale * (q - zero)
+    }
+
+    /// Per-row grids (the solver's joint mode): round on row `row`'s grid.
+    pub fn quantize_one(&self, row: usize, v: f32) -> f32 {
+        self.quantize_at(row, 0, v)
     }
 
     /// Quantize a whole matrix (the plain RTN baseline).
     pub fn quantize(&self, w: &Tensor) -> Tensor {
         let mut out = w.clone();
         for r in 0..w.rows() {
-            for v in out.row_mut(r) {
-                *v = self.quantize_one(r, *v);
+            for (c, v) in out.row_mut(r).iter_mut().enumerate() {
+                *v = self.quantize_at(r, c, *v);
+            }
+        }
+        out
+    }
+
+    /// Quantize only surviving (nonzero) weights, preserving pruned zeros
+    /// exactly — the reference semantics of the quantized packed formats,
+    /// which store zeros structurally (mask/index streams) rather than as
+    /// grid codes.
+    pub fn quantize_surviving(&self, w: &Tensor) -> Tensor {
+        let mut out = w.clone();
+        for r in 0..w.rows() {
+            for (c, v) in out.row_mut(r).iter_mut().enumerate() {
+                if *v != 0.0 {
+                    *v = self.quantize_at(r, c, *v);
+                }
             }
         }
         out
@@ -66,13 +147,96 @@ mod tests {
     use crate::util::prng::Rng;
 
     #[test]
-    fn zero_always_representable() {
+    fn zero_representable_when_rows_span_zero() {
+        // every group holding a pruned weight spans zero, so 0.0 is on its
+        // grid — pin that with rows forced to carry both signs
         let mut rng = Rng::new(0);
-        let w = Tensor::new(vec![8, 16], (0..128).map(|_| rng.normal_f32() + 0.5).collect());
+        let mut w = Tensor::new(vec![8, 16], (0..128).map(|_| rng.normal_f32() + 0.5).collect());
+        for r in 0..8 {
+            w.set2(r, 0, -1.0);
+            w.set2(r, 1, 1.0);
+        }
         let g = QuantGrid::from_weights(&w, 15);
         for r in 0..8 {
             assert_eq!(g.quantize_one(r, 0.0), 0.0);
         }
+    }
+
+    #[test]
+    fn all_positive_and_all_negative_rows_use_tight_grids() {
+        // regression: lo/hi used to fold from 0.0, so an all-positive row
+        // got lo = 0.0 and wasted half its range on [0, min) (and an
+        // all-negative row the mirror image). The fixed grid puts all 16
+        // of these evenly-spaced values exactly on grid points.
+        let pos: Vec<f32> = (0..16).map(|j| 1.0 + 0.1 * j as f32).collect();
+        let neg: Vec<f32> = pos.iter().map(|v| -v).collect();
+        let w = Tensor::new(vec![2, 16], pos.iter().chain(&neg).copied().collect());
+        let g = QuantGrid::from_weights(&w, 15);
+        let (s0, _) = g.rows[0];
+        let (s1, _) = g.rows[1];
+        assert!((s0 - 0.1).abs() < 1e-6, "all-positive row scale {s0} != (hi-lo)/levels");
+        assert!((s1 - 0.1).abs() < 1e-6, "all-negative row scale {s1}");
+        for (r, row) in [&pos, &neg].into_iter().enumerate() {
+            for &v in row {
+                assert!((g.quantize_one(r, v) - v).abs() < 1e-6, "row {r}: {v} off-grid");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_grid_indexes_pairs_per_column_group() {
+        // two rows, groups of 4: one tight grid per group, 4 pairs total
+        // per row; values land exactly on their own group's grid
+        let row0: Vec<f32> = vec![1.0, 1.5, 2.0, 2.5, -30.0, -20.0, -10.0, 0.0];
+        let row1: Vec<f32> = row0.iter().map(|v| v * 2.0).collect();
+        let w = Tensor::new(vec![2, 8], row0.iter().chain(&row1).copied().collect());
+        let g = QuantGrid::from_weights_grouped(&w, 15, 4);
+        assert_eq!(g.rows.len(), 4);
+        assert_eq!(g.group_cols, 4);
+        assert_eq!(g.scale_zero(0, 5), g.rows[1]);
+        assert_eq!(g.scale_zero(1, 0), g.rows[2]);
+        let (s, _) = g.scale_zero(0, 0);
+        assert!((s - 1.5 / 15.0).abs() < 1e-6, "group 0 scale {s}");
+        for r in 0..2 {
+            for c in 0..8 {
+                let v = w.at2(r, c);
+                assert!((g.quantize_at(r, c, v) - v).abs() < 1e-4, "({r},{c}) {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip_is_bitwise_quantize_at() {
+        // the dequant-fused kernels replay decode(encode(v)); that must be
+        // bit-identical to the f32 quantize_at reference path
+        let mut rng = Rng::new(3);
+        let w = Tensor::new(vec![4, 32], (0..128).map(|_| rng.normal_f32()).collect());
+        for levels in [3u32, 7, 15, 255] {
+            for group in [0usize, 8] {
+                let g = QuantGrid::from_weights_grouped(&w, levels, group);
+                for r in 0..4 {
+                    for c in 0..32 {
+                        let v = w.at2(r, c);
+                        let direct = g.quantize_at(r, c, v);
+                        let coded = g.decode(r, c, g.encode(r, c, v));
+                        assert_eq!(direct.to_bits(), coded.to_bits(), "({r},{c}) {v}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_surviving_preserves_exact_zeros() {
+        // pruned (zero) weights never touch the grid: quantize_surviving
+        // rounds survivors only, whatever the grid looks like
+        let w = Tensor::new(vec![1, 4], vec![1.0, 0.0, 2.0, 0.0]);
+        let g = QuantGrid::from_weights(&w, 15);
+        let q = g.quantize_surviving(&w);
+        assert_eq!(q.at2(0, 1), 0.0);
+        assert_eq!(q.at2(0, 3), 0.0);
+        assert!((q.at2(0, 0) - 1.0).abs() < 1e-6);
+        assert!((q.at2(0, 2) - 2.0).abs() < 1e-6);
     }
 
     #[test]
@@ -102,6 +266,23 @@ mod tests {
             w.data().iter().zip(q.data()).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
         };
         assert!(e4 < e2);
+    }
+
+    #[test]
+    fn grouped_error_bounded_by_the_groups_own_half_step() {
+        // each group's scale fits its local range, so the error bound
+        // tightens from half the row step to half the group step
+        let mut rng = Rng::new(4);
+        let w = Tensor::new(vec![4, 64], (0..256).map(|_| 3.0 * rng.normal_f32()).collect());
+        let g = QuantGrid::from_weights_grouped(&w, 15, 16);
+        let q = g.quantize(&w);
+        for r in 0..4 {
+            for c in 0..64 {
+                let (scale, _) = g.scale_zero(r, c);
+                let err = (w.at2(r, c) - q.at2(r, c)).abs();
+                assert!(err <= 0.5 * scale + 1e-6, "({r},{c}): {err} vs scale {scale}");
+            }
+        }
     }
 
     #[test]

@@ -4,15 +4,19 @@
 //!
 //! Computes y = x @ W^T for a layer with weights W (d_out, d_in) over a
 //! batch of token activations x (tokens, d_in), in three regimes: dense
-//! reference GEMM, CSR (unstructured sparsity), and 2:4 structured.
+//! reference GEMM, CSR (unstructured sparsity), and 2:4 structured — each
+//! in f32 or with bit-packed quantized codes dequantized inside the inner
+//! loop (`quant.rs`).
 
 pub mod csr;
 pub mod gemm;
 pub mod nm;
 pub mod pack;
+pub mod quant;
 pub mod threads;
 
 pub use csr::CsrMatrix;
 pub use gemm::dense_layer;
 pub use nm::NmMatrix;
 pub use pack::{PackFormat, PackPolicy, PackedMatrix};
+pub use quant::{QCsrMatrix, QDenseMatrix, QNmMatrix};

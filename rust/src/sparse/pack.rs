@@ -1,16 +1,24 @@
 //! Packed weight matrices for the serving path: one pruned linear layer in
 //! the storage/compute format the sparse engine will execute it in —
 //! CSR for unstructured sparsity, bitmask-packed n:m for the structured
-//! regime, or plain dense for layers the pruner left (nearly) dense.
+//! regime, plain dense for layers the pruner left (nearly) dense, or their
+//! quantized twins (`qcsr` / `qnm` / `qdense`: u8-coded values at 2..=8
+//! bits behind the same index/bitmask streams — see
+//! [`crate::sparse::quant`]).
 //!
-//! Packing is *lossless over the value grid the kernels see*: `to_dense`
-//! of a packed matrix equals the pruned dense matrix elementwise, and the
-//! packed `layer` kernels visit surviving weights in the same order as
-//! `dense_layer`, so packed decode is element-identical to dense decode
-//! (pinned by the proptests).
+//! f32 packing is *lossless over the value grid the kernels see*:
+//! `to_dense` of a packed matrix equals the pruned dense matrix
+//! elementwise, and the packed `layer` kernels visit surviving weights in
+//! the same order as `dense_layer`, so packed decode is element-identical
+//! to dense decode (pinned by the proptests). Quantized packing rounds
+//! surviving values onto a [`QuantGrid`] once at pack time; decode is then
+//! element-identical to quantize-then-dense-decode (pinned by
+//! `tests/quant_parity.rs`).
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::solver::quant::QuantGrid;
+use crate::sparse::quant::{code_stream_len, QCsrMatrix, QDenseMatrix, QNmMatrix};
 use crate::sparse::{dense_layer, CsrMatrix, NmMatrix};
 use crate::tensor::Tensor;
 
@@ -18,24 +26,64 @@ use crate::tensor::Tensor;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PackFormat {
     /// per-matrix choice: n:m when the pattern holds, CSR when sparse
-    /// enough, dense otherwise
+    /// enough, dense otherwise. Never picks a quantized format —
+    /// quantization is lossy and always an explicit request.
     Auto,
     Dense,
     Csr,
     Nm(usize, usize),
+    /// quantized dense fallback: survivor bitmask + `bits`-bit codes;
+    /// `group` = columns per (scale, zero) pair, 0 = per-row
+    QDense { bits: u8, group: usize },
+    /// quantized CSR: index stream + `bits`-bit codes
+    QCsr { bits: u8, group: usize },
+    /// quantized n:m: group bitmasks + `bits`-bit codes; the n:m pattern
+    /// is detected per matrix (2:4 preferred, then 4:8)
+    QNm { bits: u8, group: usize },
 }
 
 impl PackFormat {
     pub fn parse(s: &str) -> Result<PackFormat> {
-        match s {
+        let err = || {
+            anyhow!(
+                "unknown pack format {s:?} (expected auto|dense|csr|n:m or \
+                 q{{dense,csr,nm}}:<bits>[,g=<cols>], e.g. qcsr:4,g=128)"
+            )
+        };
+        // quantized labels: q<fmt>:<bits>[,g=<cols>]
+        let (base, group) = match s.split_once(",g=") {
+            Some((b, g)) => {
+                let g: usize = g.parse().map_err(|_| err())?;
+                (b, Some(g))
+            }
+            None => (s, None),
+        };
+        if let Some((name, bits)) = base.split_once(':') {
+            if matches!(name, "qdense" | "qcsr" | "qnm") {
+                let bits: u8 = bits.parse().map_err(|_| err())?;
+                if !(2..=8).contains(&bits) {
+                    bail!("quantized pack format {s:?} needs 2..=8 bits per code");
+                }
+                let group = group.unwrap_or(0);
+                return Ok(match name {
+                    "qdense" => PackFormat::QDense { bits, group },
+                    "qcsr" => PackFormat::QCsr { bits, group },
+                    _ => PackFormat::QNm { bits, group },
+                });
+            }
+        }
+        if group.is_some() {
+            // g= modifies quantized grids only
+            return Err(err());
+        }
+        match base {
             "auto" => Ok(PackFormat::Auto),
             "dense" => Ok(PackFormat::Dense),
             "csr" => Ok(PackFormat::Csr),
             other => {
-                let (n, m) = other.split_once(':').ok_or_else(|| {
-                    anyhow!("unknown pack format {other:?} (expected auto|dense|csr|n:m)")
-                })?;
-                let (n, m): (usize, usize) = (n.parse()?, m.parse()?);
+                let (n, m) = other.split_once(':').ok_or_else(err)?;
+                let (n, m): (usize, usize) =
+                    (n.parse().map_err(|_| err())?, m.parse().map_err(|_| err())?);
                 if n == 0 || m <= n || m > 8 {
                     bail!("invalid n:m pack format {other:?} (need 0 < n < m <= 8)");
                 }
@@ -45,11 +93,42 @@ impl PackFormat {
     }
 
     pub fn label(&self) -> String {
+        fn q(name: &str, bits: u8, group: usize) -> String {
+            if group == 0 {
+                format!("{name}:{bits}")
+            } else {
+                format!("{name}:{bits},g={group}")
+            }
+        }
         match self {
             PackFormat::Auto => "auto".to_string(),
             PackFormat::Dense => "dense".to_string(),
             PackFormat::Csr => "csr".to_string(),
             PackFormat::Nm(n, m) => format!("{n}:{m}"),
+            PackFormat::QDense { bits, group } => q("qdense", *bits, *group),
+            PackFormat::QCsr { bits, group } => q("qcsr", *bits, *group),
+            PackFormat::QNm { bits, group } => q("qnm", *bits, *group),
+        }
+    }
+
+    /// Replace the quantization group size; errors on f32 formats (the
+    /// serve label's standalone `g=<cols>` knob).
+    pub fn with_group(self, g: usize) -> Result<PackFormat> {
+        Ok(match self {
+            PackFormat::QDense { bits, .. } => PackFormat::QDense { bits, group: g },
+            PackFormat::QCsr { bits, .. } => PackFormat::QCsr { bits, group: g },
+            PackFormat::QNm { bits, .. } => PackFormat::QNm { bits, group: g },
+            other => bail!("g={g} only applies to quantized pack formats (got {})", other.label()),
+        })
+    }
+
+    /// The quantization group size (0 for f32 formats / per-row grids).
+    pub fn group(&self) -> usize {
+        match self {
+            PackFormat::QDense { group, .. }
+            | PackFormat::QCsr { group, .. }
+            | PackFormat::QNm { group, .. } => *group,
+            _ => 0,
         }
     }
 }
@@ -81,6 +160,9 @@ pub enum PackedMatrix {
     Dense(Tensor),
     Csr(CsrMatrix),
     Nm(NmMatrix),
+    QDense(QDenseMatrix),
+    QCsr(QCsrMatrix),
+    QNm(QNmMatrix),
 }
 
 /// Does `w` satisfy the n:m constraint (at most n nonzeros per group)?
@@ -106,6 +188,23 @@ impl PackedMatrix {
             PackFormat::Dense => Ok(PackedMatrix::Dense(w.clone())),
             PackFormat::Csr => Ok(PackedMatrix::Csr(CsrMatrix::from_dense(w))),
             PackFormat::Nm(n, m) => Ok(PackedMatrix::Nm(NmMatrix::from_dense(w, n, m)?)),
+            PackFormat::QDense { bits, group } => {
+                Ok(PackedMatrix::QDense(QDenseMatrix::from_dense(w, bits, group)?))
+            }
+            PackFormat::QCsr { bits, group } => {
+                Ok(PackedMatrix::QCsr(QCsrMatrix::from_dense(w, bits, group)?))
+            }
+            PackFormat::QNm { bits, group } => {
+                // the n:m pattern is per-matrix: prefer 2:4, else 4:8
+                for (n, m) in [(2usize, 4usize), (4, 8)] {
+                    if satisfies_nm(w, n, m) {
+                        return Ok(PackedMatrix::QNm(QNmMatrix::from_dense(
+                            w, n, m, bits, group,
+                        )?));
+                    }
+                }
+                bail!("matrix satisfies neither 2:4 nor 4:8 — qnm needs an n:m-pruned matrix");
+            }
             PackFormat::Auto => {
                 let density = 1.0 - w.sparsity();
                 if density > policy.dense_cutoff {
@@ -128,6 +227,9 @@ impl PackedMatrix {
             PackedMatrix::Dense(t) => t.rows(),
             PackedMatrix::Csr(c) => c.rows,
             PackedMatrix::Nm(n) => n.rows,
+            PackedMatrix::QDense(q) => q.rows,
+            PackedMatrix::QCsr(q) => q.rows,
+            PackedMatrix::QNm(q) => q.rows,
         }
     }
 
@@ -136,15 +238,22 @@ impl PackedMatrix {
             PackedMatrix::Dense(t) => t.cols(),
             PackedMatrix::Csr(c) => c.cols,
             PackedMatrix::Nm(n) => n.cols,
+            PackedMatrix::QDense(q) => q.cols,
+            PackedMatrix::QCsr(q) => q.cols,
+            PackedMatrix::QNm(q) => q.cols,
         }
     }
 
-    /// Surviving (nonzero-representable) weights.
+    /// Surviving weights: nonzero-representable for the f32 formats,
+    /// structurally stored (code-bearing) for the quantized ones.
     pub fn nnz(&self) -> usize {
         match self {
             PackedMatrix::Dense(t) => t.data().iter().filter(|&&v| v != 0.0).count(),
             PackedMatrix::Csr(c) => c.nnz(),
             PackedMatrix::Nm(n) => n.values.iter().filter(|&&v| v != 0.0).count(),
+            PackedMatrix::QDense(q) => q.nnz(),
+            PackedMatrix::QCsr(q) => q.nnz(),
+            PackedMatrix::QNm(q) => q.nnz(),
         }
     }
 
@@ -157,17 +266,53 @@ impl PackedMatrix {
             PackedMatrix::Dense(_) => "dense",
             PackedMatrix::Csr(_) => "csr",
             PackedMatrix::Nm(_) => "nm",
+            PackedMatrix::QDense(_) => "qdense",
+            PackedMatrix::QCsr(_) => "qcsr",
+            PackedMatrix::QNm(_) => "qnm",
         }
     }
 
-    /// y = x @ W^T through the matching kernel. All three kernels share the
+    /// (code bits, TOC group-size) for quantized matrices — the group is 0
+    /// when the grid is per-row. `None` for the f32 formats.
+    pub fn quant_meta(&self) -> Option<(u8, u16)> {
+        let (bits, grid, cols) = match self {
+            PackedMatrix::QDense(q) => (q.bits, &q.grid, q.cols),
+            PackedMatrix::QCsr(q) => (q.bits, &q.grid, q.cols),
+            PackedMatrix::QNm(q) => (q.bits, &q.grid, q.cols),
+            _ => return None,
+        };
+        let group = if grid.group_cols >= cols { 0 } else { grid.group_cols as u16 };
+        Some((bits, group))
+    }
+
+    /// Storage bits per weight under the paper's Fig.-6 accounting:
+    /// value bits on survivors plus a 1-bit mask (f32 formats count 32
+    /// value bits; plain dense has no mask). Scale/zero metadata is
+    /// excluded — it amortizes as O(1/group) bits.
+    pub fn effective_bits(&self) -> f64 {
+        let value_bits = match self {
+            PackedMatrix::Dense(_) => return 32.0,
+            PackedMatrix::Csr(_) | PackedMatrix::Nm(_) => 32.0,
+            PackedMatrix::QDense(q) => q.bits as f64,
+            PackedMatrix::QCsr(q) => q.bits as f64,
+            PackedMatrix::QNm(q) => q.bits as f64,
+        };
+        self.density() * value_bits + 1.0
+    }
+
+    /// y = x @ W^T through the matching kernel. All kernels share the
     /// token-major tile skeleton and visit surviving weights in the same
-    /// order, so switching formats never perturbs f32 results.
+    /// order, so switching formats never perturbs f32 results (the
+    /// quantized kernels additionally dequantize in-loop with the exact
+    /// [`QuantGrid::decode`] operations).
     pub fn layer(&self, x: &Tensor) -> Tensor {
         match self {
             PackedMatrix::Dense(t) => dense_layer(x, t),
             PackedMatrix::Csr(c) => c.layer(x),
             PackedMatrix::Nm(n) => n.layer(x),
+            PackedMatrix::QDense(q) => q.layer(x),
+            PackedMatrix::QCsr(q) => q.layer(x),
+            PackedMatrix::QNm(q) => q.layer(x),
         }
     }
 
@@ -176,6 +321,9 @@ impl PackedMatrix {
             PackedMatrix::Dense(t) => t.clone(),
             PackedMatrix::Csr(c) => c.to_dense(),
             PackedMatrix::Nm(n) => n.to_dense(),
+            PackedMatrix::QDense(q) => q.to_dense(),
+            PackedMatrix::QCsr(q) => q.to_dense(),
+            PackedMatrix::QNm(q) => q.to_dense(),
         }
     }
 
@@ -184,16 +332,30 @@ impl PackedMatrix {
     const TAG_DENSE: u8 = 0;
     const TAG_CSR: u8 = 1;
     const TAG_NM: u8 = 2;
+    const TAG_QDENSE: u8 = 3;
+    const TAG_QCSR: u8 = 4;
+    const TAG_QNM: u8 = 5;
 
     /// Append this matrix's byte encoding to `out`.
     ///
     /// ```text
-    /// dense: tag=0 u8, pad[3], rows u32, cols u32, f32 * rows*cols
-    /// csr:   tag=1 u8, pad[3], rows u32, cols u32, nnz u64,
-    ///        row_ptr u32 * (rows+1), col_idx u32 * nnz, values f32 * nnz
-    /// nm:    tag=2 u8, n u8, m u8, pad[1], rows u32, cols u32, kept u64,
-    ///        group bitmasks u8 * (rows*cols/m)  (bit j = column g*m+j kept),
-    ///        pad to 4, values f32 * kept        (set bits, ascending)
+    /// dense:  tag=0 u8, pad[3], rows u32, cols u32, f32 * rows*cols
+    /// csr:    tag=1 u8, pad[3], rows u32, cols u32, nnz u64,
+    ///         row_ptr u32 * (rows+1), col_idx u32 * nnz, values f32 * nnz
+    /// nm:     tag=2 u8, n u8, m u8, pad[1], rows u32, cols u32, kept u64,
+    ///         group bitmasks u8 * (rows*cols/m)  (bit j = column g*m+j kept),
+    ///         pad to 4, values f32 * kept        (set bits, ascending)
+    /// grid:   levels u32, group_cols u32, cols u32, pairs u32,
+    ///         (scale f32, zero f32) * pairs      (row-major groups)
+    /// qdense: tag=3 u8, bits u8, pad[2], rows u32, cols u32, kept u64,
+    ///         grid, survivor bitmask u8 * ceil(rows*cols/8),
+    ///         codes u8 * ceil(kept*bits/8)
+    /// qcsr:   tag=4 u8, bits u8, pad[2], rows u32, cols u32, nnz u64,
+    ///         grid, row_ptr u32 * (rows+1), col_idx u32 * nnz,
+    ///         codes u8 * ceil(nnz*bits/8)
+    /// qnm:    tag=5 u8, n u8, m u8, bits u8, rows u32, cols u32, kept u64,
+    ///         grid, group bitmasks u8 * (rows*cols/m),
+    ///         codes u8 * ceil(kept*bits/8)
     /// ```
     pub fn write_bytes(&self, out: &mut Vec<u8>) {
         match self {
@@ -253,6 +415,45 @@ impl PackedMatrix {
                 for v in &kept {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
+            }
+            PackedMatrix::QDense(q) => {
+                out.push(Self::TAG_QDENSE);
+                out.push(q.bits);
+                out.extend_from_slice(&[0u8; 2]);
+                out.extend_from_slice(&(q.rows as u32).to_le_bytes());
+                out.extend_from_slice(&(q.cols as u32).to_le_bytes());
+                out.extend_from_slice(&(q.kept as u64).to_le_bytes());
+                write_grid(&q.grid, out);
+                out.extend_from_slice(&q.mask);
+                out.extend_from_slice(&q.codes);
+            }
+            PackedMatrix::QCsr(q) => {
+                out.push(Self::TAG_QCSR);
+                out.push(q.bits);
+                out.extend_from_slice(&[0u8; 2]);
+                out.extend_from_slice(&(q.rows as u32).to_le_bytes());
+                out.extend_from_slice(&(q.cols as u32).to_le_bytes());
+                out.extend_from_slice(&(q.nnz() as u64).to_le_bytes());
+                write_grid(&q.grid, out);
+                for v in &q.row_ptr {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                for v in &q.col_idx {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.extend_from_slice(&q.codes);
+            }
+            PackedMatrix::QNm(q) => {
+                out.push(Self::TAG_QNM);
+                out.push(q.n as u8);
+                out.push(q.m as u8);
+                out.push(q.bits);
+                out.extend_from_slice(&(q.rows as u32).to_le_bytes());
+                out.extend_from_slice(&(q.cols as u32).to_le_bytes());
+                out.extend_from_slice(&(q.kept as u64).to_le_bytes());
+                write_grid(&q.grid, out);
+                out.extend_from_slice(&q.masks);
+                out.extend_from_slice(&q.codes);
             }
         }
     }
@@ -337,9 +538,132 @@ impl PackedMatrix {
                 }
                 Ok((PackedMatrix::Nm(NmMatrix { n, m, rows, cols, values, offsets }), r.i))
             }
+            Self::TAG_QDENSE => {
+                let bits = r.u8()?;
+                r.skip(2)?;
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                let kept = r.u64()? as usize;
+                if !(2..=8).contains(&bits) || kept > rows * cols {
+                    bail!("qdense header invalid: {bits} bits, {kept} kept in {rows}x{cols}");
+                }
+                let grid = read_grid(&mut r, rows, cols, bits)?;
+                let mask = r.bytes((rows * cols).div_ceil(8))?.to_vec();
+                let stored = mask
+                    .iter()
+                    .enumerate()
+                    .map(|(byte, &b)| {
+                        // count only bits inside the rows*cols range
+                        let valid = (rows * cols).saturating_sub(byte * 8).min(8);
+                        (b & mask_low_bits(valid)).count_ones() as usize
+                    })
+                    .sum::<usize>();
+                if stored != kept {
+                    bail!("qdense bitmask has {stored} survivors, header says {kept}");
+                }
+                let codes = r.bytes(code_stream_len(kept, bits))?.to_vec();
+                let q = QDenseMatrix { rows, cols, bits, mask, codes, kept, grid };
+                Ok((PackedMatrix::QDense(q), r.i))
+            }
+            Self::TAG_QCSR => {
+                let bits = r.u8()?;
+                r.skip(2)?;
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                let nnz = r.u64()? as usize;
+                if !(2..=8).contains(&bits) || nnz > rows * cols {
+                    bail!("qcsr header invalid: {bits} bits, {nnz} nnz in {rows}x{cols}");
+                }
+                let grid = read_grid(&mut r, rows, cols, bits)?;
+                let row_ptr = r.u32s(rows + 1)?;
+                if row_ptr.last().copied().unwrap_or(0) as usize != nnz
+                    || row_ptr.first().copied().unwrap_or(0) != 0
+                    || row_ptr.windows(2).any(|w| w[0] > w[1])
+                {
+                    bail!("qcsr row_ptr is not monotonically non-decreasing from 0 to nnz");
+                }
+                let col_idx = r.u32s(nnz)?;
+                if col_idx.iter().any(|&c| c as usize >= cols) {
+                    bail!("qcsr column index out of range");
+                }
+                let codes = r.bytes(code_stream_len(nnz, bits))?.to_vec();
+                let q = QCsrMatrix { rows, cols, bits, row_ptr, col_idx, codes, grid };
+                Ok((PackedMatrix::QCsr(q), r.i))
+            }
+            Self::TAG_QNM => {
+                let n = r.u8()? as usize;
+                let m = r.u8()? as usize;
+                let bits = r.u8()?;
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                if n == 0 || m <= n || m > 8 || cols % m != 0 || !(2..=8).contains(&bits) {
+                    bail!("qnm header invalid: {n}:{m} at {bits} bits over {rows}x{cols}");
+                }
+                let kept = r.u64()? as usize;
+                let grid = read_grid(&mut r, rows, cols, bits)?;
+                let groups = rows * cols / m;
+                let masks = r.bytes(groups)?.to_vec();
+                let mut stored = 0usize;
+                for &mask in &masks {
+                    let c = (mask & mask_low_bits(m)).count_ones() as usize;
+                    if mask & !mask_low_bits(m) != 0 || c > n {
+                        bail!("qnm group mask violates {n}:{m} on decode");
+                    }
+                    stored += c;
+                }
+                if stored != kept {
+                    bail!("qnm masks store {stored} entries, header says {kept}");
+                }
+                let codes = r.bytes(code_stream_len(kept, bits))?.to_vec();
+                let q = QNmMatrix { n, m, rows, cols, bits, masks, codes, kept, grid };
+                Ok((PackedMatrix::QNm(q), r.i))
+            }
             other => bail!("unknown packed-matrix tag {other}"),
         }
     }
+}
+
+/// A byte with the low `n` bits set (n <= 8).
+fn mask_low_bits(n: usize) -> u8 {
+    if n >= 8 {
+        0xFF
+    } else {
+        (1u8 << n) - 1
+    }
+}
+
+fn write_grid(grid: &QuantGrid, out: &mut Vec<u8>) {
+    out.extend_from_slice(&grid.levels.to_le_bytes());
+    out.extend_from_slice(&(grid.group_cols as u32).to_le_bytes());
+    out.extend_from_slice(&(grid.cols as u32).to_le_bytes());
+    out.extend_from_slice(&(grid.rows.len() as u32).to_le_bytes());
+    for (s, z) in &grid.rows {
+        out.extend_from_slice(&s.to_le_bytes());
+        out.extend_from_slice(&z.to_le_bytes());
+    }
+}
+
+fn read_grid(r: &mut Reader, rows: usize, cols: usize, bits: u8) -> Result<QuantGrid> {
+    let levels = r.u32()?;
+    let group_cols = r.u32()? as usize;
+    let gcols = r.u32()? as usize;
+    let pairs = r.u32()? as usize;
+    if levels != (1u32 << bits) - 1 {
+        bail!("grid levels {levels} do not match {bits}-bit codes");
+    }
+    if gcols != cols || group_cols == 0 || group_cols > cols {
+        bail!("grid group {group_cols} invalid for {cols} columns (grid says {gcols})");
+    }
+    if pairs != rows * cols.div_ceil(group_cols) {
+        bail!("grid has {pairs} (scale, zero) pairs, expected rows*groups");
+    }
+    let mut grows = Vec::with_capacity(pairs);
+    for _ in 0..pairs {
+        let s = r.f32()?;
+        let z = r.f32()?;
+        grows.push((s, z));
+    }
+    Ok(QuantGrid { levels, group_cols, cols, rows: grows })
 }
 
 struct Reader<'a> {
@@ -378,6 +702,10 @@ impl<'a> Reader<'a> {
 
     fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
     }
 
     fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
@@ -505,11 +833,105 @@ mod tests {
 
     #[test]
     fn format_parse_label_round_trip() {
-        for s in ["auto", "dense", "csr", "2:4", "4:8"] {
+        for s in [
+            "auto",
+            "dense",
+            "csr",
+            "2:4",
+            "4:8",
+            "qdense:4",
+            "qcsr:3",
+            "qcsr:4,g=128",
+            "qnm:8",
+            "qnm:4,g=64",
+        ] {
             assert_eq!(PackFormat::parse(s).unwrap().label(), s);
         }
-        for bad in ["", "nm", "4:2", "0:4", "2:16"] {
+        for bad in [
+            "",
+            "nm",
+            "4:2",
+            "0:4",
+            "2:16",
+            "qcsr",
+            "qcsr:",
+            "qcsr:1",
+            "qcsr:9",
+            "qcsr:x",
+            "qcsr:4,g=",
+            "qcsr:4,g=x",
+            "dense,g=4",
+            "2:4,g=8",
+        ] {
             assert!(PackFormat::parse(bad).is_err(), "{bad:?}");
         }
+        // g=0 is the per-row default, so it canonicalizes away
+        assert_eq!(PackFormat::parse("qcsr:4,g=0").unwrap().label(), "qcsr:4");
+    }
+
+    #[test]
+    fn with_group_only_touches_quantized_formats() {
+        let q = PackFormat::parse("qcsr:4").unwrap().with_group(32).unwrap();
+        assert_eq!(q.label(), "qcsr:4,g=32");
+        assert_eq!(q.group(), 32);
+        assert!(PackFormat::Csr.with_group(32).is_err());
+        assert_eq!(PackFormat::Csr.group(), 0);
+    }
+
+    #[test]
+    fn quantized_bytes_roundtrip_all_formats() {
+        let (w50, _) = magnitude_prune(&random(11, 9, 24), 0.6);
+        let (w24, _) = magnitude_prune_nm(&random(12, 8, 24), 2, 4);
+        let pol = PackPolicy::with_format;
+        let cases = [
+            PackedMatrix::pack(&random(13, 5, 8), &pol(PackFormat::QDense { bits: 4, group: 0 }))
+                .unwrap(),
+            PackedMatrix::pack(&w50, &pol(PackFormat::QCsr { bits: 3, group: 8 })).unwrap(),
+            PackedMatrix::pack(&w50, &pol(PackFormat::QCsr { bits: 8, group: 0 })).unwrap(),
+            PackedMatrix::pack(&w24, &pol(PackFormat::QNm { bits: 4, group: 12 })).unwrap(),
+        ];
+        for p in cases {
+            let mut buf = Vec::new();
+            p.write_bytes(&mut buf);
+            let (q, used) = PackedMatrix::read_bytes(&buf).unwrap();
+            assert_eq!(used, buf.len(), "{}", p.format_label());
+            assert_eq!(q.format_label(), p.format_label());
+            assert_eq!(q.to_dense().data(), p.to_dense().data(), "{}", p.format_label());
+            assert_eq!(q.nnz(), p.nnz());
+            assert_eq!(q.quant_meta(), p.quant_meta());
+            assert_eq!(q.effective_bits(), p.effective_bits());
+            // truncations stay clean decode errors
+            for cut in [0, 1, 9, buf.len() - 1] {
+                assert!(PackedMatrix::read_bytes(&buf[..cut]).is_err(), "cut {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn qnm_pack_detects_the_pattern_and_rejects_unstructured() {
+        let fmt = PackFormat::QNm { bits: 4, group: 0 };
+        let (w24, _) = magnitude_prune_nm(&random(14, 8, 24), 2, 4);
+        let p = PackedMatrix::pack(&w24, &PackPolicy::with_format(fmt)).unwrap();
+        match &p {
+            PackedMatrix::QNm(q) => assert_eq!((q.n, q.m), (2, 4)),
+            other => panic!("expected qnm, got {}", other.format_label()),
+        }
+        let unstructured = break_nm(magnitude_prune(&random(15, 8, 24), 0.5).0);
+        assert!(PackedMatrix::pack(&unstructured, &PackPolicy::with_format(fmt)).is_err());
+    }
+
+    #[test]
+    fn effective_bits_follow_the_fig6_accounting() {
+        // exactly half the weights survive -> density 0.5 exactly
+        let (w, _) = magnitude_prune(&random(16, 8, 32), 0.5);
+        let pol = PackPolicy::with_format;
+        let f32csr = PackedMatrix::pack(&w, &pol(PackFormat::Csr)).unwrap();
+        assert!((f32csr.effective_bits() - 17.0).abs() < 1e-9, "0.5*32 + 1");
+        let q4 = PackedMatrix::pack(&w, &pol(PackFormat::QCsr { bits: 4, group: 0 })).unwrap();
+        assert!((q4.effective_bits() - 3.0).abs() < 1e-9, "0.5*4 + 1 (the Fig. 6 point)");
+        let q8 = PackedMatrix::pack(&w, &pol(PackFormat::QDense { bits: 8, group: 0 })).unwrap();
+        assert!((q8.effective_bits() - 5.0).abs() < 1e-9, "0.5*8 + 1");
+        let dense = PackedMatrix::pack(&random(17, 4, 8), &pol(PackFormat::Dense)).unwrap();
+        assert_eq!(dense.effective_bits(), 32.0);
     }
 }

@@ -1,0 +1,521 @@
+//! Quantized packed matrices: the three serving formats of
+//! [`crate::sparse::pack`] with u8-coded values at 2..=8 bits instead of
+//! f32 — bit-packed code streams alongside the existing index/bitmask
+//! streams, with per-row or per-group (scale, zero) pairs from
+//! [`QuantGrid`]. This is what makes the paper's Fig.-6 size argument
+//! (50% sparse + 4-bit + bitmask ≈ 3 bits/weight) real on the serving
+//! path: the `.spkt` store persists codes, and the kernels dequantize
+//! *inside* the inner loop — no f32 weight matrix is ever materialized.
+//!
+//! Kernel contract (the testability invariant `tests/quant_parity.rs`
+//! pins): each kernel visits stored entries in ascending column order per
+//! output row and computes `scale * (code - zero)` per entry — exactly the
+//! f32 operation [`QuantGrid::decode`] performs, which is bit-identical to
+//! [`QuantGrid::quantize_at`] of the value the code came from. Therefore
+//! quantized packed decode is *element-identical* to quantizing the pruned
+//! dense matrix with the same grid and running the existing dense kernel.
+//!
+//! Structural zeros (pruned weights) are never grid-encoded: they live in
+//! the index/bitmask streams, so they stay exact even on grids that do not
+//! contain zero (all-positive groups).
+
+use anyhow::{bail, Result};
+
+use crate::solver::quant::QuantGrid;
+use crate::sparse::threads::{for_each_token_tile, TOKEN_TILE};
+use crate::tensor::Tensor;
+
+/// Validate a code width and return its level count (`2^bits - 1`).
+pub fn levels_for_bits(bits: u8) -> Result<u32> {
+    if !(2..=8).contains(&bits) {
+        bail!("quantized pack formats need 2..=8 bits per code (got {bits})");
+    }
+    Ok((1u32 << bits) - 1)
+}
+
+/// Pack `bits`-wide codes into an LSB-first bitstream.
+pub fn pack_codes(codes: &[u8], bits: u8) -> Vec<u8> {
+    let bits = bits as usize;
+    let mut out = vec![0u8; (codes.len() * bits).div_ceil(8)];
+    for (i, &c) in codes.iter().enumerate() {
+        let bit = i * bits;
+        let (byte, sh) = (bit / 8, bit % 8);
+        let v = (c as u16) << sh;
+        out[byte] |= v as u8;
+        if sh + bits > 8 {
+            out[byte + 1] |= (v >> 8) as u8;
+        }
+    }
+    out
+}
+
+/// Read code `idx` back out of a [`pack_codes`] stream.
+#[inline]
+pub fn code_at(stream: &[u8], idx: usize, bits: u8) -> u8 {
+    let bits = bits as usize;
+    let bit = idx * bits;
+    let (byte, sh) = (bit / 8, bit % 8);
+    let lo = stream[byte] as u16;
+    let hi = if sh + bits > 8 { stream[byte + 1] as u16 } else { 0 };
+    (((lo | (hi << 8)) >> sh) & ((1u16 << bits) - 1)) as u8
+}
+
+/// Expected stream length for `n` codes of `bits` bits.
+pub fn code_stream_len(n: usize, bits: u8) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+/// Build a pack-time grid: validates the code width and that a *grouped*
+/// grid fits the `.spkt` v2 TOC's u16 group field (per-row grids store 0
+/// there, so any column count is fine).
+fn pack_grid(w: &Tensor, bits: u8, group_cols: usize) -> Result<QuantGrid> {
+    let levels = levels_for_bits(bits)?;
+    let grid = QuantGrid::from_weights_grouped(w, levels, group_cols);
+    if grid.group_cols < grid.cols && grid.group_cols > u16::MAX as usize {
+        bail!(
+            "quantization group {} exceeds the .spkt TOC's u16 group field",
+            grid.group_cols
+        );
+    }
+    Ok(grid)
+}
+
+/// CSR with a bit-packed code stream instead of f32 values: the quantized
+/// twin of [`crate::sparse::CsrMatrix`].
+#[derive(Clone, Debug)]
+pub struct QCsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u8,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    /// bit-packed codes, one per stored entry (same order as `col_idx`)
+    pub codes: Vec<u8>,
+    pub grid: QuantGrid,
+}
+
+impl QCsrMatrix {
+    /// Quantize + pack a (pruned) dense matrix. The grid is computed from
+    /// the matrix as given (zeros included in the min/max fold), exactly
+    /// like the `quantize with QuantGrid -> dense` reference path.
+    pub fn from_dense(w: &Tensor, bits: u8, group_cols: usize) -> Result<QCsrMatrix> {
+        let grid = pack_grid(w, bits, group_cols)?;
+        let (rows, cols) = (w.rows(), w.cols());
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut raw = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for (c, &v) in w.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    raw.push(grid.encode(r, c, v));
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        let codes = pack_codes(&raw, bits);
+        Ok(QCsrMatrix { rows, cols, bits, row_ptr, col_idx, codes, grid })
+    }
+
+    /// Stored (structural-survivor) entries.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                let c = self.col_idx[i] as usize;
+                out[r * self.cols + c] = self.grid.decode(r, c, code_at(&self.codes, i, self.bits));
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// y = x @ W^T with dequantization fused into the axpy (cf.
+    /// [`crate::sparse::CsrMatrix::layer`] for the layout trick).
+    pub fn layer(&self, x: &Tensor) -> Tensor {
+        let (t_n, k_n) = (x.rows(), x.cols());
+        assert_eq!(k_n, self.cols);
+        let o_n = self.rows;
+        let xt = x.transpose2();
+        let xd = xt.data();
+        let mut y = vec![0.0f32; t_n * o_n];
+        for_each_token_tile(t_n, o_n, &mut y, |t0, yrows| {
+            let tb = yrows.len() / o_n;
+            let mut acc = [0.0f32; TOKEN_TILE];
+            for o in 0..o_n {
+                let lo = self.row_ptr[o] as usize;
+                let hi = self.row_ptr[o + 1] as usize;
+                let a = &mut acc[..tb];
+                a.fill(0.0);
+                for i in lo..hi {
+                    let k = self.col_idx[i] as usize;
+                    // dequant fused into the inner loop: exact decode() ops
+                    let v = self.grid.decode(o, k, code_at(&self.codes, i, self.bits));
+                    let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
+                    for (av, xv) in a.iter_mut().zip(xr) {
+                        *av += v * xv;
+                    }
+                }
+                for (tt, &av) in a.iter().enumerate() {
+                    yrows[tt * o_n + o] = av;
+                }
+            }
+        });
+        Tensor::new(vec![t_n, o_n], y)
+    }
+}
+
+/// Bitmask-packed n:m with a bit-packed code stream: the quantized twin of
+/// [`crate::sparse::NmMatrix`]. Stored entries are the group bitmask's set
+/// bits, in ascending bit order per group.
+#[derive(Clone, Debug)]
+pub struct QNmMatrix {
+    pub n: usize,
+    pub m: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u8,
+    /// one mask byte per group (bit j = column g*m + j stored)
+    pub masks: Vec<u8>,
+    /// bit-packed codes of stored entries, row-major, ascending bits
+    pub codes: Vec<u8>,
+    /// stored-entry count (set bits across all masks)
+    pub kept: usize,
+    pub grid: QuantGrid,
+}
+
+impl QNmMatrix {
+    pub fn from_dense(
+        w: &Tensor,
+        n: usize,
+        m: usize,
+        bits: u8,
+        group_cols: usize,
+    ) -> Result<QNmMatrix> {
+        if n == 0 || m <= n || m > 8 {
+            bail!("invalid n:m pattern {n}:{m} (need 0 < n < m <= 8)");
+        }
+        let (rows, cols) = (w.rows(), w.cols());
+        if cols % m != 0 {
+            bail!("cols {cols} not divisible by m {m}");
+        }
+        let grid = pack_grid(w, bits, group_cols)?;
+        let groups = cols / m;
+        let mut masks = vec![0u8; rows * groups];
+        let mut raw = Vec::new();
+        for r in 0..rows {
+            let row = w.row(r);
+            for g in 0..groups {
+                let base = g * m;
+                let mut stored = 0usize;
+                for j in 0..m {
+                    let v = row[base + j];
+                    if v != 0.0 {
+                        if stored == n {
+                            bail!("row {r} group {g} violates {n}:{m} (too many nonzeros)");
+                        }
+                        masks[r * groups + g] |= 1u8 << j;
+                        raw.push(grid.encode(r, base + j, v));
+                        stored += 1;
+                    }
+                }
+            }
+        }
+        let kept = raw.len();
+        let codes = pack_codes(&raw, bits);
+        Ok(QNmMatrix { n, m, rows, cols, bits, masks, codes, kept, grid })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.kept
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let groups = self.cols / self.m;
+        let mut ci = 0usize;
+        for r in 0..self.rows {
+            for g in 0..groups {
+                let mask = self.masks[r * groups + g];
+                for j in 0..self.m {
+                    if mask & (1u8 << j) != 0 {
+                        let c = g * self.m + j;
+                        out[r * self.cols + c] =
+                            self.grid.decode(r, c, code_at(&self.codes, ci, self.bits));
+                        ci += 1;
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// y = x @ W^T, dequant fused (cf. [`crate::sparse::NmMatrix::layer`]).
+    /// Each token tile walks the whole code stream with a running cursor —
+    /// stored entries are row-major, so rows stay independent.
+    pub fn layer(&self, x: &Tensor) -> Tensor {
+        let (t_n, k_n) = (x.rows(), x.cols());
+        assert_eq!(k_n, self.cols);
+        let o_n = self.rows;
+        let groups = self.cols / self.m;
+        let xt = x.transpose2();
+        let xd = xt.data();
+        let mut y = vec![0.0f32; t_n * o_n];
+        for_each_token_tile(t_n, o_n, &mut y, |t0, yrows| {
+            let tb = yrows.len() / o_n;
+            let mut acc = [0.0f32; TOKEN_TILE];
+            let mut ci = 0usize;
+            for o in 0..o_n {
+                let a = &mut acc[..tb];
+                a.fill(0.0);
+                for g in 0..groups {
+                    let mask = self.masks[o * groups + g];
+                    if mask == 0 {
+                        continue;
+                    }
+                    let gb = g * self.m;
+                    for j in 0..self.m {
+                        if mask & (1u8 << j) == 0 {
+                            continue;
+                        }
+                        let k = gb + j;
+                        let v = self.grid.decode(o, k, code_at(&self.codes, ci, self.bits));
+                        ci += 1;
+                        let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
+                        for (av, xv) in a.iter_mut().zip(xr) {
+                            *av += v * xv;
+                        }
+                    }
+                }
+                for (tt, &av) in a.iter().enumerate() {
+                    yrows[tt * o_n + o] = av;
+                }
+            }
+        });
+        Tensor::new(vec![t_n, o_n], y)
+    }
+}
+
+/// Dense-shaped quantized storage: a survivor bitmask (1 bit per element —
+/// the paper's Fig.-6 accounting unit) plus bit-packed codes for the
+/// survivors. The quantized fallback for matrices too dense for CSR/n:m.
+#[derive(Clone, Debug)]
+pub struct QDenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u8,
+    /// survivor bitmask over rows*cols elements, row-major, LSB-first
+    pub mask: Vec<u8>,
+    /// bit-packed codes of survivors, row-major
+    pub codes: Vec<u8>,
+    /// survivor count (set bits in `mask`)
+    pub kept: usize,
+    pub grid: QuantGrid,
+}
+
+impl QDenseMatrix {
+    pub fn from_dense(w: &Tensor, bits: u8, group_cols: usize) -> Result<QDenseMatrix> {
+        let grid = pack_grid(w, bits, group_cols)?;
+        let (rows, cols) = (w.rows(), w.cols());
+        let mut mask = vec![0u8; (rows * cols).div_ceil(8)];
+        let mut raw = Vec::new();
+        for r in 0..rows {
+            for (c, &v) in w.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    let idx = r * cols + c;
+                    mask[idx / 8] |= 1u8 << (idx % 8);
+                    raw.push(grid.encode(r, c, v));
+                }
+            }
+        }
+        let kept = raw.len();
+        let codes = pack_codes(&raw, bits);
+        Ok(QDenseMatrix { rows, cols, bits, mask, codes, kept, grid })
+    }
+
+    #[inline]
+    fn stored(&self, idx: usize) -> bool {
+        self.mask[idx / 8] & (1u8 << (idx % 8)) != 0
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.kept
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let mut ci = 0usize;
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.stored(r * self.cols + c) {
+                    out[r * self.cols + c] =
+                        self.grid.decode(r, c, code_at(&self.codes, ci, self.bits));
+                    ci += 1;
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// y = x @ W^T, dequant fused; scans the bitmask in ascending column
+    /// order per row with a running code cursor.
+    pub fn layer(&self, x: &Tensor) -> Tensor {
+        let (t_n, k_n) = (x.rows(), x.cols());
+        assert_eq!(k_n, self.cols);
+        let o_n = self.rows;
+        let xt = x.transpose2();
+        let xd = xt.data();
+        let mut y = vec![0.0f32; t_n * o_n];
+        for_each_token_tile(t_n, o_n, &mut y, |t0, yrows| {
+            let tb = yrows.len() / o_n;
+            let mut acc = [0.0f32; TOKEN_TILE];
+            let mut ci = 0usize;
+            for o in 0..o_n {
+                let a = &mut acc[..tb];
+                a.fill(0.0);
+                for k in 0..self.cols {
+                    if !self.stored(o * self.cols + k) {
+                        continue;
+                    }
+                    let v = self.grid.decode(o, k, code_at(&self.codes, ci, self.bits));
+                    ci += 1;
+                    let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
+                    for (av, xv) in a.iter_mut().zip(xr) {
+                        *av += v * xv;
+                    }
+                }
+                for (tt, &av) in a.iter().enumerate() {
+                    yrows[tt * o_n + o] = av;
+                }
+            }
+        });
+        Tensor::new(vec![t_n, o_n], y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+    use crate::sparse::dense_layer;
+    use crate::util::prng::Rng;
+
+    fn random(seed: u64, r: usize, c: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect())
+    }
+
+    #[test]
+    fn code_stream_round_trips_every_width() {
+        let mut rng = Rng::new(0);
+        for bits in 2u8..=8 {
+            let maxc = (1u16 << bits) - 1;
+            let codes: Vec<u8> = (0..97).map(|_| (rng.below(maxc as usize + 1)) as u8).collect();
+            let stream = pack_codes(&codes, bits);
+            assert_eq!(stream.len(), code_stream_len(codes.len(), bits));
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(code_at(&stream, i, bits), c, "bits {bits} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn qcsr_matches_quantize_then_dense_kernel() {
+        // the module contract: dequant-fused decode == quantize the pruned
+        // matrix on the same grid, then run the dense kernel
+        let (w, _) = magnitude_prune(&random(1, 16, 32), 0.5);
+        let x = random(2, 5, 32);
+        for (bits, group) in [(3u8, 0usize), (4, 8), (8, 16)] {
+            let q = QCsrMatrix::from_dense(&w, bits, group).unwrap();
+            let reference = q.grid.quantize_surviving(&w);
+            assert_eq!(q.to_dense().data(), reference.data(), "bits {bits} g {group}");
+            assert_eq!(
+                q.layer(&x).data(),
+                dense_layer(&x, &reference).data(),
+                "bits {bits} g {group}"
+            );
+        }
+    }
+
+    #[test]
+    fn qnm_matches_quantize_then_dense_kernel() {
+        let (w, _) = magnitude_prune_nm(&random(3, 16, 32), 2, 4);
+        let x = random(4, 5, 32);
+        for (bits, group) in [(4u8, 0usize), (8, 8)] {
+            let q = QNmMatrix::from_dense(&w, 2, 4, bits, group).unwrap();
+            let reference = q.grid.quantize_surviving(&w);
+            assert_eq!(q.to_dense().data(), reference.data(), "bits {bits} g {group}");
+            assert_eq!(
+                q.layer(&x).data(),
+                dense_layer(&x, &reference).data(),
+                "bits {bits} g {group}"
+            );
+        }
+        // too many nonzeros per group is a clean error
+        assert!(QNmMatrix::from_dense(&Tensor::ones(vec![2, 4]), 2, 4, 4, 0).is_err());
+    }
+
+    #[test]
+    fn qdense_matches_quantize_then_dense_kernel() {
+        // mixed case: some zeros (the bitmask path) on an otherwise dense
+        // matrix, plus a fully dense one
+        let mut w = random(5, 12, 24);
+        for j in 0..12 {
+            w.set2(j % 12, (j * 7) % 24, 0.0);
+        }
+        let x = random(6, 4, 24);
+        for wcase in [w, random(7, 12, 24)] {
+            for (bits, group) in [(4u8, 0usize), (8, 6)] {
+                let q = QDenseMatrix::from_dense(&wcase, bits, group).unwrap();
+                let reference = q.grid.quantize_surviving(&wcase);
+                assert_eq!(q.to_dense().data(), reference.data(), "bits {bits} g {group}");
+                assert_eq!(
+                    q.layer(&x).data(),
+                    dense_layer(&x, &reference).data(),
+                    "bits {bits} g {group}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn structural_zeros_never_pass_through_the_grid() {
+        // pruned entries come back as exact zeros via the index/bitmask
+        // streams — they are never grid-encoded, so no rounding can touch
+        // them regardless of what the grid looks like
+        let w = Tensor::new(vec![1, 8], vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 0.0]);
+        let q = QCsrMatrix::from_dense(&w, 4, 0).unwrap();
+        let d = q.to_dense();
+        for c in [1usize, 3, 5, 7] {
+            assert_eq!(d.at2(0, c), 0.0, "col {c}");
+        }
+        assert_eq!(q.nnz(), 4);
+        let qd = QDenseMatrix::from_dense(&w, 4, 0).unwrap();
+        assert_eq!(qd.nnz(), 4);
+        assert_eq!(qd.to_dense().data(), d.data());
+    }
+
+    #[test]
+    fn bits_out_of_range_rejected() {
+        let w = random(8, 4, 8);
+        for bits in [0u8, 1, 9] {
+            assert!(QCsrMatrix::from_dense(&w, bits, 0).is_err(), "bits {bits}");
+            assert!(QDenseMatrix::from_dense(&w, bits, 0).is_err(), "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn oversized_grid_group_rejected() {
+        // the .spkt v2 TOC stores the group in a u16: a grouped grid that
+        // cannot fit must fail at pack time instead of truncating silently
+        let w = Tensor::new(vec![1, 70_000], vec![1.0; 70_000]);
+        assert!(QCsrMatrix::from_dense(&w, 4, 66_000).is_err());
+        // per-row grids (group 0 or >= cols) store 0 in the TOC: always ok
+        assert!(QCsrMatrix::from_dense(&w, 4, 0).is_ok());
+        assert!(QCsrMatrix::from_dense(&w, 4, 100_000).is_ok());
+    }
+}

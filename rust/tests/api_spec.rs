@@ -114,6 +114,13 @@ fn job_spec_label_round_trip() {
         "serve/small/sparsegpt-2:4,chunk=8",
         "serve/small/sparsegpt-50%,cache-mb=16",
         "serve/medium/sparsegpt-50%,kv=off,chunk=1,cache-mb=4,prefill=256",
+        "serve/nano/sparsegpt-50%,fmt=qcsr:4",
+        "serve/nano/sparsegpt-50%,fmt=qcsr:4,g=128",
+        "serve/small/sparsegpt-2:4,fmt=qnm:8",
+        "serve/small/sparsegpt-2:4+4bit,fmt=qnm:4,g=64",
+        "serve/nano/sparsegpt-50%,fmt=qdense:3",
+        "serve/medium/sparsegpt-50%,kv=off,chunk=1,cache-mb=4,prefill=256,fmt=qcsr:4,g=32",
+        "serve/nano/sparsegpt-50%,fmt=csr",
     ] {
         let spec = JobSpec::parse(label).unwrap_or_else(|e| panic!("{label}: {e:#}"));
         assert_eq!(spec.label(), label, "label round trip for {label}");
@@ -155,10 +162,35 @@ fn job_spec_rejects_malformed() {
         "serve/nano/sparsegpt-50%,kv=sometimes",
         "serve/nano/sparsegpt-50%,chunk=",
         "serve/nano/sparsegpt-50%,budget=4",
+        "serve/nano/sparsegpt-50%,fmt=bogus",
+        "serve/nano/sparsegpt-50%,fmt=qcsr:1",
+        "serve/nano/sparsegpt-50%,fmt=qcsr:9",
+        "serve/nano/sparsegpt-50%,g=128",
+        "serve/nano/sparsegpt-50%,fmt=dense,g=8",
         "gen-data/nano",
     ] {
         assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
     }
+}
+
+#[test]
+fn serve_quant_format_labels_map_to_fields() {
+    use sparsegpt::sparse::PackFormat;
+    let JobSpec::Serve(s) =
+        JobSpec::parse("serve/nano/sparsegpt-50%,fmt=qcsr:4,g=128").unwrap()
+    else {
+        panic!("wrong kind");
+    };
+    assert_eq!(s.format, PackFormat::QCsr { bits: 4, group: 128 });
+    let JobSpec::Serve(s) = JobSpec::parse("serve/small/sparsegpt-2:4,fmt=qnm:8").unwrap() else {
+        panic!("wrong kind");
+    };
+    assert_eq!(s.format, PackFormat::QNm { bits: 8, group: 0 });
+    // defaults: no fmt knob means Auto (f32, never quantized)
+    let JobSpec::Serve(d) = JobSpec::parse("serve/nano/sparsegpt-50%").unwrap() else {
+        panic!("wrong kind");
+    };
+    assert_eq!(d.format, PackFormat::Auto);
 }
 
 #[test]

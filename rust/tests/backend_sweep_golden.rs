@@ -1,9 +1,10 @@
 //! Golden test for the sweep job's JSONL event contract on the reference
-//! backend: a real 2-variant sweep runs end-to-end (no PJRT, no artifacts)
-//! and its `sweep-variant` / `job-finished` lines must serialize exactly as
-//! pinned in `golden/sweep_events.jsonl` (wall-clock seconds normalized to
-//! 0 — everything else is deterministic). Downstream consumers key on
-//! these lines to track sweep progress.
+//! backend: a real 3-variant sweep — including the joint sparse+quant
+//! mode (Eq. 7, `sparsegpt-50%+4bit`) — runs end-to-end (no PJRT, no
+//! artifacts) and its `sweep-variant` / `job-finished` lines must
+//! serialize exactly as pinned in `golden/sweep_events.jsonl` (wall-clock
+//! seconds normalized to 0 — everything else is deterministic).
+//! Downstream consumers key on these lines to track sweep progress.
 
 use sparsegpt::api::{JobSpec, JsonlSink, PruneSpec, Session, SweepSpec};
 use sparsegpt::harness::{generate_data, Workspace};
@@ -36,6 +37,7 @@ fn run_sweep_jsonl() -> String {
     let spec = SweepSpec::new("nano")
         .variant(PruneSpec::sparsegpt(0.5))
         .variant(PruneSpec::magnitude(0.5))
+        .variant(PruneSpec::sparsegpt(0.5).with_quant_bits(4))
         .dataset("synth-wiki")
         .calib(8)
         .max_segments(2);
@@ -86,6 +88,6 @@ fn sweep_variant_and_finish_events_match_golden() {
             finished_ok = matches!(v.get("ok").unwrap(), Json::Bool(true));
         }
     }
-    assert_eq!(evals, 2, "one perplexity row per variant");
+    assert_eq!(evals, 3, "one perplexity row per variant");
     assert!(finished_ok);
 }

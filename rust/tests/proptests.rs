@@ -266,6 +266,49 @@ fn prop_pack_bytes_roundtrip_bit_exact() {
     }
 }
 
+/// Property: quantized pack -> bytes -> unpack is bit-exact (codes, grid
+/// and dequantized values) for arbitrary Bernoulli / random-survivor n:m
+/// masks across bit widths and grid groupings.
+#[test]
+fn prop_quantized_pack_bytes_roundtrip_bit_exact() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x7A0);
+        let o = 4 + 4 * rng.below(8);
+        let k = 8 * (1 + rng.below(5));
+        let bits = [2u8, 3, 4, 5, 8][rng.below(5)];
+        let group = [0usize, 4, 8][rng.below(3)];
+        let w = bernoulli_masked(&mut rng, o, k, rng.f64());
+        let wnm = random_nm_masked(&mut rng, o, k, 2, 4);
+        let cases = [
+            (PackFormat::QDense { bits, group }, &w),
+            (PackFormat::QCsr { bits, group }, &w),
+            (PackFormat::QNm { bits, group }, &wnm),
+        ];
+        for (fmt, src) in cases {
+            let p = PackedMatrix::pack(src, &PackPolicy::with_format(fmt)).unwrap();
+            let mut buf = Vec::new();
+            p.write_bytes(&mut buf);
+            let (q, used) = PackedMatrix::read_bytes(&buf).unwrap();
+            assert_eq!(used, buf.len(), "{} seed {seed}", fmt.label());
+            assert_eq!(q.format_label(), p.format_label());
+            assert_eq!(q.nnz(), p.nnz(), "{} seed {seed}", fmt.label());
+            assert_eq!(q.quant_meta(), p.quant_meta(), "{} seed {seed}", fmt.label());
+            assert_eq!(
+                q.to_dense().data(),
+                p.to_dense().data(),
+                "{} seed {seed}",
+                fmt.label()
+            );
+            // structural zeros survive even when the grid lacks a zero point
+            for (orig, got) in src.data().iter().zip(q.to_dense().data()) {
+                if *orig == 0.0 {
+                    assert_eq!(*got, 0.0, "{} seed {seed}", fmt.label());
+                }
+            }
+        }
+    }
+}
+
 fn prop_cfg(name: &str) -> ModelCfg {
     ModelCfg::from_dims(name, 8, 2, 2, 1, 1, 13, 6)
 }
@@ -306,6 +349,49 @@ fn prop_sparse_store_file_roundtrip_bit_exact() {
         store.save(&path).unwrap();
         let back = SparseStore::load(&path).unwrap();
         assert_eq!(back.unpack(&cfg).unwrap().data, fp.data, "seed {seed}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: a quantized `.spkt` v2 file round-trips bit-exactly — the
+/// dequantized weights, per-entry quant metadata (bits/group), and
+/// effective-bits accounting all survive save/load on arbitrary masks.
+#[test]
+fn prop_spkt_v2_file_roundtrip_preserves_quant_metadata() {
+    let cfg = prop_cfg("prop-qstore");
+    let dir = std::env::temp_dir().join(format!("sgpt_prop_qstore_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x8A0);
+        let density = rng.f64();
+        let fp = if seed % 2 == 0 {
+            masked_params(&mut rng, &cfg, |rng, r, c| bernoulli_masked(rng, r, c, density))
+        } else {
+            masked_params(&mut rng, &cfg, |rng, r, c| random_nm_masked(rng, r, c, 2, 4))
+        };
+        let bits = [3u8, 4, 8][rng.below(3)];
+        let group = [0usize, 4][rng.below(2)];
+        let fmt = if seed % 2 == 0 {
+            PackFormat::QCsr { bits, group }
+        } else {
+            PackFormat::QNm { bits, group }
+        };
+        let store = SparseStore::pack(&fp, &PackPolicy::with_format(fmt), "prop-q").unwrap();
+        let path = dir.join(format!("q{seed}.spkt"));
+        store.save(&path).unwrap();
+        let back = SparseStore::load(&path).unwrap();
+        let (a, b) = (back.unpack(&cfg).unwrap(), store.unpack(&cfg).unwrap());
+        assert_eq!(a.data, b.data, "seed {seed}");
+        assert_eq!(back.effective_bits(), store.effective_bits(), "seed {seed}");
+        for (a, b) in store.entries.iter().zip(&back.entries) {
+            assert_eq!(a.matrix.format_label(), b.matrix.format_label(), "seed {seed}");
+            assert_eq!(a.matrix.quant_meta(), b.matrix.quant_meta(), "seed {seed}");
+            assert_eq!(
+                a.matrix.quant_meta(),
+                Some((bits, if group == 0 { 0u16 } else { group as u16 })),
+                "seed {seed}"
+            );
+        }
     }
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,14 +1,18 @@
 //! Golden test for the serve job's JSONL event contract on the reference
 //! backend: a real zero-artifact run (no data, no checkpoints, no PJRT —
 //! seed-0 init + synthetic calibration fallbacks engage) proceeds through
-//! prune → pack → KV-cached continuous-batching decode, and its lifecycle
-//! lines (`job-started`, `request-enqueued`, `batch-formed`,
+//! prune → quantized pack (`qcsr:4`, written to disk) → KV-cached
+//! continuous-batching decode, and its lifecycle lines (`job-started`,
+//! `checkpoint-packed`, `request-enqueued`, `batch-formed`,
 //! `prefill-started`, `cache-evicted`, `request-finished`,
 //! `engine-drained`, `job-finished`) must serialize exactly as pinned in
 //! `golden/serve_events.jsonl`. Wall-clock fields (`secs`,
-//! `tokens_per_sec`) are normalized to 0; everything else — arrival order,
-//! batch formation, prefill chunking, eviction counts, join/retire steps —
-//! is schedule-determined and exact.
+//! `tokens_per_sec`) and filesystem fields (`path`, `bytes`) are
+//! normalized; everything else — arrival order, batch formation, prefill
+//! chunking, eviction counts, join/retire steps, and the quantized pack's
+//! `density` 0.5 / `effective_bits` 3 (the solver zeroes exactly
+//! round(p·numel) per selection window, so nano at 50% is exact) — is
+//! schedule-determined and pinned.
 //!
 //! The workload (3 requests with 130-token prompts arriving one per step
 //! into a batch of 2 with max_wait 1, 2 tokens each) is chosen to exercise
@@ -28,10 +32,12 @@
 use sparsegpt::api::{JobSpec, JsonlSink, ServeSpec, Session};
 use sparsegpt::harness::Workspace;
 use sparsegpt::runtime::ReferenceBackend;
+use sparsegpt::sparse::PackFormat;
 use sparsegpt::util::json::Json;
 
-const PINNED: [&str; 8] = [
+const PINNED: [&str; 9] = [
     "job-started",
+    "checkpoint-packed",
     "request-enqueued",
     "batch-formed",
     "prefill-started",
@@ -58,6 +64,10 @@ fn run_serve_jsonl() -> String {
     spec.max_wait = 1;
     spec.temperature = 0.0; // greedy: the schedule alone determines events
     spec.calib = 4;
+    // quantized leg: pack q4 CSR to disk so checkpoint-packed is emitted
+    // with the effective-bits payload (0.5 * 4 + 1 = 3 bits/weight)
+    spec.format = PackFormat::QCsr { bits: 4, group: 0 };
+    spec.save_store = Some(dir.join("nano-golden.spkt"));
     let mut sink = JsonlSink::new(Vec::new());
     let mut session = Session::with_workspace(ws);
     session.run(&JobSpec::Serve(spec), &mut sink).unwrap();
@@ -74,12 +84,15 @@ fn serve_lifecycle_events_match_golden() {
             .unwrap_or_else(|e| panic!("unparseable event line {line:?}: {e:#}"));
         let reason = v.get("reason").unwrap().as_str().unwrap().to_string();
         if PINNED.contains(&reason.as_str()) {
-            // wall-clock fields are the only nondeterminism; pin them
+            // wall-clock and filesystem fields are the only nondeterminism
             if let Json::Obj(m) = &mut v {
-                for key in ["secs", "tokens_per_sec"] {
+                for key in ["secs", "tokens_per_sec", "bytes"] {
                     if m.contains_key(key) {
                         m.insert(key.to_string(), Json::Num(0.0));
                     }
+                }
+                if reason == "checkpoint-packed" {
+                    m.insert("path".to_string(), Json::Str("<path>".to_string()));
                 }
             }
             pinned.push_str(&v.to_string_compact());
@@ -100,10 +113,19 @@ fn serve_lifecycle_events_match_golden() {
     let mut evicted = 0;
     let mut finished = 0;
     let mut drained = 0;
+    let mut packed = 0;
     let mut ok = false;
     for line in text.lines() {
         let v = Json::parse(line).unwrap();
         match v.get("reason").unwrap().as_str().unwrap() {
+            "checkpoint-packed" => {
+                packed += 1;
+                // the Fig.-6 point, live: 50% sparse + 4-bit + mask = 3.0
+                let bits = v.get("effective_bits").unwrap().as_f64().unwrap();
+                assert!((bits - 3.0).abs() < 1e-9, "effective_bits {bits}");
+                assert!(bits <= 3.1, "acceptance ceiling");
+                assert_eq!(v.get("formats").unwrap().as_str().unwrap(), "qcsr:12");
+            }
             "request-enqueued" => enqueued += 1,
             "prefill-started" => {
                 prefilled += 1;
@@ -121,6 +143,7 @@ fn serve_lifecycle_events_match_golden() {
             _ => {}
         }
     }
+    assert_eq!(packed, 1, "the quantized .spkt is packed exactly once");
     assert_eq!(enqueued, 3, "every synthetic request is enqueued once");
     assert_eq!(prefilled, 3, "every request prefills exactly once");
     assert_eq!(evicted, 9, "2 prefill evictions + 1 decode eviction per request");

@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden/v1.spkt — a version-1 packed sparse
+checkpoint, byte-for-byte what `SparseStore::save` wrote before the v2 TOC
+(40-byte entries, no quant metadata, dense f32 sections).
+
+The parameter vector is the deterministic fill
+    val(i) = float32(((i * 31 + 7) % 256) - 128)
+over the flat layout of ModelCfg::from_dims("v1-golden", 8, 2, 2, 1, 1, 13, 6),
+so the pinned Rust test (tests/spkt_v1_golden.rs) can rebuild the expected
+params without sharing any code with this script.
+"""
+import struct
+from pathlib import Path
+
+D, LAYERS, FFN, VOCAB, SEQ = 8, 2, 32, 13, 6
+NAME, SRC = b"v1-golden", b"v1-golden-fixture"
+
+# ModelCfg::from_dims param_layout, entry-for-entry
+LAYOUT = [
+    ("tok_embed", VOCAB * D),
+    ("pos_embed", SEQ * D),
+    ("ln1_g", LAYERS * D),
+    ("ln1_b", LAYERS * D),
+    ("wq", LAYERS * D * D),
+    ("wk", LAYERS * D * D),
+    ("wv", LAYERS * D * D),
+    ("wo", LAYERS * D * D),
+    ("ln2_g", LAYERS * D),
+    ("ln2_b", LAYERS * D),
+    ("w1", LAYERS * FFN * D),
+    ("w2", LAYERS * D * FFN),
+    ("lnf_g", D),
+    ("lnf_b", D),
+]
+# PRUNABLE_KINDS order with (rows, cols); kind tag = position
+KINDS = [("wq", D, D), ("wk", D, D), ("wv", D, D), ("wo", D, D), ("w1", FFN, D), ("w2", D, FFN)]
+PRUNABLE = {k for k, _, _ in KINDS}
+
+offsets, off = {}, 0
+for name, numel in LAYOUT:
+    offsets[name] = off
+    off += numel
+N_PARAMS = off
+
+
+def val(i):
+    return float(((i * 31 + 7) % 256) - 128)
+
+
+def align8(n):
+    return (n + 7) & ~7
+
+
+def linear_slice(kind, layer, rows, cols):
+    start = offsets[kind] + layer * rows * cols
+    return [val(start + j) for j in range(rows * cols)]
+
+
+def dense_section(rows, cols, values):
+    out = struct.pack("<B3xII", 0, rows, cols)
+    out += b"".join(struct.pack("<f", v) for v in values)
+    return out
+
+
+rest = []
+for name, numel in LAYOUT:
+    if name not in PRUNABLE:
+        start = offsets[name]
+        rest.extend(val(start + j) for j in range(numel))
+
+entries = []  # (layer, ktag, rows, cols, nnz, section_bytes)
+for layer in range(LAYERS):
+    for ktag, (kind, rows, cols) in enumerate(KINDS):
+        values = linear_slice(kind, layer, rows, cols)
+        nnz = sum(1 for v in values if v != 0.0)
+        entries.append((layer, ktag, rows, cols, nnz, dense_section(rows, cols, values)))
+
+header_len = 8 + 4 + 4 + (4 + len(NAME)) + (4 + len(SRC)) + 8 + 4 + 4 + 8 + 8
+toc_off = align8(header_len)
+TOC_ENTRY = 40  # v1: layer u32, kind u8, fmt u8, pad u16, off u64, len u64, rows u32, cols u32, nnz u64
+rest_off = align8(toc_off + len(entries) * TOC_ENTRY)
+cursor = align8(rest_off + len(rest) * 4)
+placed = []
+for e in entries:
+    placed.append((cursor, len(e[5])))
+    cursor = align8(cursor + len(e[5]))
+
+buf = bytearray()
+buf += b"SGPTSPKT"
+buf += struct.pack("<II", 1, 0)  # version 1, flags 0
+buf += struct.pack("<I", len(NAME)) + NAME
+buf += struct.pack("<I", len(SRC)) + SRC
+buf += struct.pack("<QII", N_PARAMS, LAYERS, len(entries))
+buf += struct.pack("<QQ", rest_off, len(rest))
+assert len(buf) == header_len
+buf += b"\0" * (toc_off - len(buf))
+for (layer, ktag, rows, cols, nnz, _), (soff, slen) in zip(entries, placed):
+    buf += struct.pack("<IBBHQQIIQ", layer, ktag, 0, 0, soff, slen, rows, cols, nnz)
+buf += b"\0" * (rest_off - len(buf))
+buf += b"".join(struct.pack("<f", v) for v in rest)
+for (_, _, _, _, _, section), (soff, _) in zip(entries, placed):
+    buf += b"\0" * (soff - len(buf))
+    buf += section
+
+out = Path(__file__).resolve().parent.parent / "rust" / "tests" / "golden" / "v1.spkt"
+out.write_bytes(bytes(buf))
+print(f"wrote {out} ({len(buf)} bytes, {N_PARAMS} params, {len(entries)} entries)")
