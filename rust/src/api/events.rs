@@ -102,12 +102,34 @@ pub enum Event {
         step: usize,
         tokens: usize,
     },
+    /// a serve request's client went away (disconnect or cancel frame);
+    /// the request retired early with `tokens` already generated
+    RequestCancelled {
+        id: u64,
+        step: usize,
+        tokens: usize,
+    },
+    /// a serve submission was shed because the bounded queue was full
+    /// (429 semantics — never blocks the decode loop)
+    RequestRejected {
+        id: u64,
+        step: usize,
+        queue: usize,
+        cap: usize,
+    },
+    /// the serve TCP front door is accepting connections on `addr`
+    ServeListening { addr: String },
     /// the serve engine drained its workload
     EngineDrained {
         steps: usize,
         requests: usize,
         tokens: usize,
         tokens_per_sec: f64,
+        cancelled: usize,
+        /// cache bytes still reserved after the drain — pinned at 0 so a
+        /// leaked reservation (e.g. a disconnect that skipped its
+        /// release) is visible in the event stream and greppable in CI
+        cache_bytes_in_use: u64,
     },
     /// the job finished (ok or failed)
     JobFinished { job: String, ok: bool, secs: f64 },
@@ -160,6 +182,9 @@ impl Event {
             Event::PrefillStarted { .. } => "prefill-started",
             Event::CacheEvicted { .. } => "cache-evicted",
             Event::RequestFinished { .. } => "request-finished",
+            Event::RequestCancelled { .. } => "request-cancelled",
+            Event::RequestRejected { .. } => "request-rejected",
+            Event::ServeListening { .. } => "serve-listening",
             Event::EngineDrained { .. } => "engine-drained",
             Event::JobFinished { .. } => "job-finished",
         }
@@ -262,12 +287,35 @@ impl Event {
                 ("step", n(*step as f64)),
                 ("tokens", n(*tokens as f64)),
             ]),
-            Event::EngineDrained { steps, requests, tokens, tokens_per_sec } => obj(vec![
+            Event::RequestCancelled { id, step, tokens } => obj(vec![
+                reason,
+                ("id", n(*id as f64)),
+                ("step", n(*step as f64)),
+                ("tokens", n(*tokens as f64)),
+            ]),
+            Event::RequestRejected { id, step, queue, cap } => obj(vec![
+                reason,
+                ("id", n(*id as f64)),
+                ("step", n(*step as f64)),
+                ("queue", n(*queue as f64)),
+                ("cap", n(*cap as f64)),
+            ]),
+            Event::ServeListening { addr } => obj(vec![reason, ("addr", s(addr))]),
+            Event::EngineDrained {
+                steps,
+                requests,
+                tokens,
+                tokens_per_sec,
+                cancelled,
+                cache_bytes_in_use,
+            } => obj(vec![
                 reason,
                 ("steps", n(*steps as f64)),
                 ("requests", n(*requests as f64)),
                 ("tokens", n(*tokens as f64)),
                 ("tokens_per_sec", n(*tokens_per_sec)),
+                ("cancelled", n(*cancelled as f64)),
+                ("cache_bytes_in_use", n(*cache_bytes_in_use as f64)),
             ]),
             Event::JobFinished { job, ok, secs } => obj(vec![
                 reason,
@@ -369,9 +417,29 @@ impl EventSink for HumanSink {
                 "[{}] step {step}: request {id} finished ({tokens} tokens)",
                 self.tag("serve")
             ),
-            Event::EngineDrained { steps, requests, tokens, tokens_per_sec } => println!(
-                "[{}] drained: {requests} requests, {tokens} tokens in {steps} steps \
-                 ({tokens_per_sec:.1} tok/s)",
+            Event::RequestCancelled { id, step, tokens } => println!(
+                "[{}] step {step}: request {id} cancelled by its client \
+                 ({tokens} tokens streamed)",
+                self.tag("serve")
+            ),
+            Event::RequestRejected { id, step, queue, cap } => println!(
+                "[{}] step {step}: request {id} rejected (queue full, {queue} of {cap})",
+                self.tag("serve")
+            ),
+            Event::ServeListening { addr } => {
+                println!("[{}] listening on {addr}", self.tag("serve"))
+            }
+            Event::EngineDrained {
+                steps,
+                requests,
+                tokens,
+                tokens_per_sec,
+                cancelled,
+                cache_bytes_in_use,
+            } => println!(
+                "[{}] drained: {requests} requests (+{cancelled} cancelled), {tokens} tokens \
+                 in {steps} steps ({tokens_per_sec:.1} tok/s, {cache_bytes_in_use} cache bytes \
+                 still reserved)",
                 self.tag("serve")
             ),
             Event::JobFinished { .. } => {}
@@ -461,7 +529,17 @@ mod tests {
             Event::PrefillStarted { id: 0, step: 1, prompt_tokens: 8, chunks: 1 },
             Event::CacheEvicted { id: 0, step: 5, evicted: 1 },
             Event::RequestFinished { id: 0, step: 17, tokens: 16 },
-            Event::EngineDrained { steps: 20, requests: 2, tokens: 32, tokens_per_sec: 64.0 },
+            Event::RequestCancelled { id: 1, step: 9, tokens: 4 },
+            Event::RequestRejected { id: 2, step: 9, queue: 64, cap: 64 },
+            Event::ServeListening { addr: "127.0.0.1:7070".into() },
+            Event::EngineDrained {
+                steps: 20,
+                requests: 2,
+                tokens: 32,
+                tokens_per_sec: 64.0,
+                cancelled: 1,
+                cache_bytes_in_use: 0,
+            },
             Event::JobFinished { job: "prune".into(), ok: true, secs: 2.0 },
         ]
     }

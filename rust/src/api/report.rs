@@ -120,6 +120,12 @@ pub struct ServeRequestRow {
     pub tokens: Vec<i32>,
     pub joined_step: usize,
     pub finished_step: usize,
+    /// enqueue -> first streamed token
+    pub ttft_secs: f64,
+    /// median inter-token gap
+    pub gap_p50_secs: f64,
+    /// p95 inter-token gap
+    pub gap_p95_secs: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -148,6 +154,16 @@ pub struct ServeReport {
     pub cache_evictions: usize,
     /// high-water mark of reserved cache memory
     pub peak_cache_bytes: u64,
+    /// requests retired as cancelled (client disconnect or scripted)
+    pub cancelled: usize,
+    /// over-capacity submissions answered with `rejected` frames
+    pub rejected: usize,
+    /// median time-to-first-token across finished requests
+    pub ttft_p50_secs: f64,
+    /// p95 time-to-first-token across finished requests
+    pub ttft_p95_secs: f64,
+    /// the bound listen address, when serving over TCP
+    pub listen: Option<String>,
     pub requests: Vec<ServeRequestRow>,
     /// where the packed checkpoint was written, when requested
     pub packed_to: Option<PathBuf>,

@@ -6,7 +6,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::api::events::{Event, EventSink};
 use crate::api::report::{
@@ -33,8 +33,10 @@ use crate::model::layout::FlatParams;
 use crate::model::sparse_store::SparseStore;
 use crate::model::stats::ModelStats;
 use crate::runtime::BackendKind;
+use crate::serve::net::{NetServer, NetServerOptions};
 use crate::serve::{
-    EngineOptions, SchedulerPolicy, ServeEngine, ServeEvent, ServeRequest, SparseModel,
+    percentile_sorted, EngineOptions, SchedulerPolicy, ServeEngine, ServeEvent, ServeRequest,
+    SparseModel, SyntheticSource,
 };
 use crate::sparse::PackPolicy;
 use crate::util::prng::Rng;
@@ -654,22 +656,6 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
     };
     let model = SparseModel::from_store(&store, &cfg)?;
 
-    // synthetic workload: seeded prompts, staggered arrivals
-    let mut rng = Rng::new(spec.seed ^ 0x5e21e5);
-    let mut incoming = Vec::with_capacity(spec.requests);
-    for i in 0..spec.requests {
-        let prompt: Vec<i32> =
-            (0..spec.prompt_len.max(1)).map(|_| rng.below(cfg.vocab) as i32).collect();
-        incoming.push((
-            i * spec.arrival_every,
-            ServeRequest {
-                id: i as u64,
-                prompt,
-                max_new_tokens: spec.max_new_tokens.max(1),
-                seed: spec.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
-            },
-        ));
-    }
     let opts = EngineOptions {
         policy: SchedulerPolicy {
             max_batch: spec.max_batch.max(1),
@@ -683,45 +669,45 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
         prefill_chunk: spec.prefill_chunk,
         cache_budget_bytes: spec.cache_budget_mb as u64 * 1024 * 1024,
     };
-    let outcome = ServeEngine::new(&model, opts).run(incoming, &mut |ev| {
-        sink.emit(&match ev {
-            ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens } => {
-                Event::RequestEnqueued {
-                    id: *id,
-                    step: *step,
-                    prompt_tokens: *prompt_tokens,
-                    max_new_tokens: *max_new_tokens,
-                }
+    let mut listen_addr = None;
+    let outcome = match &spec.listen {
+        Some(addr) => {
+            // network front door: requests come in over TCP; the run drains
+            // when a client sends a `shutdown` frame
+            let srv = NetServer::bind(addr, NetServerOptions::new(spec.config.clone(), cfg.vocab))?;
+            let bound = srv.local_addr().to_string();
+            sink.emit(&Event::ServeListening { addr: bound.clone() });
+            if let Some(path) = &spec.addr_file {
+                std::fs::write(path, format!("{bound}\n"))
+                    .with_context(|| format!("writing listen address to {path:?}"))?;
             }
-            ServeEvent::BatchFormed { step, joined, batch } => {
-                Event::BatchFormed { step: *step, joined: *joined, batch: *batch }
+            listen_addr = Some(bound);
+            srv.serve(&model, opts, &mut |ev| sink.emit(&serve_event_to_event(ev)))?
+        }
+        None => {
+            // synthetic workload: seeded prompts, staggered arrivals, plus
+            // the spec's scripted cancels ((id, step) -> source's (step, id))
+            let mut rng = Rng::new(spec.seed ^ 0x5e21e5);
+            let mut incoming = Vec::with_capacity(spec.requests);
+            for i in 0..spec.requests {
+                let prompt: Vec<i32> =
+                    (0..spec.prompt_len.max(1)).map(|_| rng.below(cfg.vocab) as i32).collect();
+                incoming.push((
+                    i * spec.arrival_every,
+                    ServeRequest {
+                        id: i as u64,
+                        prompt,
+                        max_new_tokens: spec.max_new_tokens.max(1),
+                        seed: spec.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    },
+                ));
             }
-            ServeEvent::PrefillStarted { id, step, prompt_tokens, chunks } => {
-                Event::PrefillStarted {
-                    id: *id,
-                    step: *step,
-                    prompt_tokens: *prompt_tokens,
-                    chunks: *chunks,
-                }
-            }
-            ServeEvent::CacheEvicted { id, step, evicted } => {
-                Event::CacheEvicted { id: *id, step: *step, evicted: *evicted }
-            }
-            ServeEvent::Finished { id, step, tokens } => {
-                Event::RequestFinished { id: *id, step: *step, tokens: *tokens }
-            }
-            ServeEvent::Drained { steps, requests, tokens, decode_secs } => Event::EngineDrained {
-                steps: *steps,
-                requests: *requests,
-                tokens: *tokens,
-                tokens_per_sec: if *decode_secs > 0.0 {
-                    *tokens as f64 / *decode_secs
-                } else {
-                    0.0
-                },
-            },
-        });
-    })?;
+            let cancels = spec.cancel.iter().map(|&(id, step)| (step, id)).collect();
+            let mut source = SyntheticSource::new(incoming, cancels);
+            ServeEngine::new(&model, opts)
+                .run_source(&mut source, &mut |ev| sink.emit(&serve_event_to_event(ev)))?
+        }
+    };
 
     let mut requests: Vec<ServeRequestRow> = outcome
         .finished
@@ -732,9 +718,14 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
             tokens: f.tokens.clone(),
             joined_step: f.joined_step,
             finished_step: f.finished_step,
+            ttft_secs: f.ttft_secs,
+            gap_p50_secs: f.gap_p50_secs,
+            gap_p95_secs: f.gap_p95_secs,
         })
         .collect();
     requests.sort_by_key(|r| r.id);
+    let mut ttfts: Vec<f64> = requests.iter().map(|r| r.ttft_secs).collect();
+    ttfts.sort_by(|a, b| a.total_cmp(b));
     Ok(ServeReport {
         config: spec.config.clone(),
         label,
@@ -750,7 +741,57 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
         prefill_tokens: outcome.prefill_tokens,
         cache_evictions: outcome.cache_evictions,
         peak_cache_bytes: outcome.peak_cache_bytes,
+        cancelled: outcome.cancelled,
+        rejected: outcome.rejected,
+        ttft_p50_secs: percentile_sorted(&ttfts, 0.5),
+        ttft_p95_secs: percentile_sorted(&ttfts, 0.95),
+        listen: listen_addr,
         requests,
         packed_to,
     })
+}
+
+/// Map the engine's serve-side events onto the session event stream.
+fn serve_event_to_event(ev: &ServeEvent) -> Event {
+    match ev {
+        ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens } => {
+            Event::RequestEnqueued {
+                id: *id,
+                step: *step,
+                prompt_tokens: *prompt_tokens,
+                max_new_tokens: *max_new_tokens,
+            }
+        }
+        ServeEvent::BatchFormed { step, joined, batch } => {
+            Event::BatchFormed { step: *step, joined: *joined, batch: *batch }
+        }
+        ServeEvent::PrefillStarted { id, step, prompt_tokens, chunks } => Event::PrefillStarted {
+            id: *id,
+            step: *step,
+            prompt_tokens: *prompt_tokens,
+            chunks: *chunks,
+        },
+        ServeEvent::CacheEvicted { id, step, evicted } => {
+            Event::CacheEvicted { id: *id, step: *step, evicted: *evicted }
+        }
+        ServeEvent::Finished { id, step, tokens } => {
+            Event::RequestFinished { id: *id, step: *step, tokens: *tokens }
+        }
+        ServeEvent::Cancelled { id, step, tokens } => {
+            Event::RequestCancelled { id: *id, step: *step, tokens: *tokens }
+        }
+        ServeEvent::Rejected { id, step, queue, cap } => {
+            Event::RequestRejected { id: *id, step: *step, queue: *queue, cap: *cap }
+        }
+        ServeEvent::Drained { steps, requests, tokens, decode_secs, cancelled, cache_bytes_in_use } => {
+            Event::EngineDrained {
+                steps: *steps,
+                requests: *requests,
+                tokens: *tokens,
+                tokens_per_sec: if *decode_secs > 0.0 { *tokens as f64 / *decode_secs } else { 0.0 },
+                cancelled: *cancelled,
+                cache_bytes_in_use: *cache_bytes_in_use,
+            }
+        }
+    }
 }

@@ -417,9 +417,12 @@ pub use crate::serve::engine::DEFAULT_PREFILL_CHUNK;
 /// The cache and pack knobs round-trip through the job label as a comma
 /// list after the prune spec (only non-default values appear):
 /// `serve/<config>/<prune-spec>[,kv=off][,chunk=<n>][,cache-mb=<n>]`
-/// `[,prefill=<n>][,fmt=<pack-format>][,g=<cols>]` — `fmt` carries the
-/// base pack-format label (e.g. `qcsr:4`) and `g` the quantization group,
-/// kept separate so the comma-separated knob list stays flat.
+/// `[,prefill=<n>][,fmt=<pack-format>][,g=<cols>][,net=<addr>]`
+/// `[,cancel=<id>@<step>[+...]]` — `fmt` carries the base pack-format
+/// label (e.g. `qcsr:4`) and `g` the quantization group, kept separate so
+/// the comma-separated knob list stays flat; `net` switches from the
+/// synthetic workload to the TCP front door, and `cancel` scripts
+/// synthetic-workload cancellations.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeSpec {
     pub config: String,
@@ -464,6 +467,16 @@ pub struct ServeSpec {
     pub store: Option<PathBuf>,
     /// write the packed checkpoint here after pruning
     pub save_store: Option<PathBuf>,
+    /// listen for network clients on this address instead of running the
+    /// synthetic workload (`net=<addr>` knob; `127.0.0.1:0` picks a port)
+    pub listen: Option<String>,
+    /// write the bound listen address to this file once the socket is up
+    /// (CLI/script plumbing for `net=...:0`; not part of the label)
+    pub addr_file: Option<PathBuf>,
+    /// scripted synthetic-workload cancellations as (request id, step)
+    /// pairs (`cancel=<id>@<step>[+<id>@<step>...]` knob); ignored with
+    /// [`ServeSpec::listen`], where cancellation comes from disconnects
+    pub cancel: Vec<(u64, usize)>,
 }
 
 impl ServeSpec {
@@ -492,6 +505,9 @@ impl ServeSpec {
             ckpt: None,
             store: None,
             save_store: None,
+            listen: None,
+            addr_file: None,
+            cancel: Vec::new(),
         }
     }
 
@@ -545,6 +561,14 @@ impl ServeSpec {
                 None => parts.push(format!("fmt={}", self.format.label())),
             }
         }
+        if let Some(addr) = &self.listen {
+            parts.push(format!("net={addr}"));
+        }
+        if !self.cancel.is_empty() {
+            let cs: Vec<String> =
+                self.cancel.iter().map(|(id, step)| format!("{id}@{step}")).collect();
+            parts.push(format!("cancel={}", cs.join("+")));
+        }
         parts.join(",")
     }
 
@@ -558,7 +582,8 @@ impl ServeSpec {
             let err = || {
                 anyhow!(
                     "unrecognized serve knob {part:?} (expected kv=on|off, chunk=<n>, \
-                     cache-mb=<n>, prefill=<n>, fmt=<pack-format> or g=<cols>)"
+                     cache-mb=<n>, prefill=<n>, fmt=<pack-format>, g=<cols>, \
+                     net=<addr> or cancel=<id>@<step>[+...])"
                 )
             };
             let (key, value) = part.split_once('=').ok_or_else(err)?;
@@ -577,6 +602,23 @@ impl ServeSpec {
                 "g" => {
                     let g: usize = value.parse().map_err(|_| err())?;
                     self.format = self.format.with_group(g)?;
+                }
+                "net" => {
+                    if value.is_empty() {
+                        return Err(err());
+                    }
+                    self.listen = Some(value.to_string());
+                }
+                "cancel" => {
+                    let mut cs = Vec::new();
+                    for c in value.split('+') {
+                        let (id, step) = c.split_once('@').ok_or_else(err)?;
+                        cs.push((
+                            id.parse::<u64>().map_err(|_| err())?,
+                            step.parse::<usize>().map_err(|_| err())?,
+                        ));
+                    }
+                    self.cancel = cs;
                 }
                 _ => return Err(err()),
             }
@@ -787,6 +829,33 @@ mod tests {
             "serve/nano/sparsegpt-50%,fmt=qcsr:9",
             "serve/nano/sparsegpt-50%,g=4",      // group without a quantized fmt
             "serve/nano/sparsegpt-50%,fmt=csr,g=4",
+        ] {
+            assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn serve_net_and_cancel_knobs_round_trip_through_labels() {
+        let mut spec = ServeSpec::new("nano");
+        spec.listen = Some("127.0.0.1:7070".to_string());
+        let j = JobSpec::Serve(spec);
+        assert_eq!(j.label(), "serve/nano/sparsegpt-50%,net=127.0.0.1:7070");
+        assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
+        let mut spec = ServeSpec::new("nano");
+        spec.cancel = vec![(0, 2), (3, 7)];
+        let j = JobSpec::Serve(spec);
+        assert_eq!(j.label(), "serve/nano/sparsegpt-50%,cancel=0@2+3@7");
+        assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
+        // addr_file is CLI plumbing, deliberately not in the label
+        let mut spec = ServeSpec::new("nano");
+        spec.addr_file = Some("addr.txt".into());
+        assert_eq!(JobSpec::Serve(spec).label(), "serve/nano/sparsegpt-50%");
+        for bad in [
+            "serve/nano/sparsegpt-50%,net=",
+            "serve/nano/sparsegpt-50%,cancel=0",
+            "serve/nano/sparsegpt-50%,cancel=x@2",
+            "serve/nano/sparsegpt-50%,cancel=0@y",
+            "serve/nano/sparsegpt-50%,cancel=0@1+",
         ] {
             assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
         }

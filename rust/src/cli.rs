@@ -8,8 +8,17 @@ use anyhow::{anyhow, bail, Result};
 
 /// Boolean flags accepted by every `sparsegpt` subcommand. `--json`
 /// switches the event stream from human log lines to JSON lines.
-pub const GLOBAL_BOOL_FLAGS: &[&str] =
-    &["resume", "record-errors", "rt-stats", "json", "no-dense", "save", "pack"];
+pub const GLOBAL_BOOL_FLAGS: &[&str] = &[
+    "resume",
+    "record-errors",
+    "rt-stats",
+    "json",
+    "no-dense",
+    "save",
+    "pack",
+    "shutdown",
+    "shutdown-only",
+];
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {

@@ -6,14 +6,16 @@
 //! JSON lines (one object per line, each with a `reason` field); without
 //! it the classic human log lines plus result tables are printed.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
+use std::time::Duration;
 
 use sparsegpt::api::{
     E2eSpec, EvalSpec, GenDataSpec, GenerateSpec, HumanSink, JobReport, JobSpec, JsonlSink,
     PruneJobSpec, PruneSpec, ServeSpec, Session, StatsSpec, SweepSpec, TrainSpec, ZeroShotSpec,
 };
 use sparsegpt::cli::{parse_nm, Args, GLOBAL_BOOL_FLAGS};
+use sparsegpt::serve::net::{run_client, send_shutdown, ClientOptions, ClientRequest};
 use sparsegpt::coordinator::{PruneMethod, SkipSpec};
 use sparsegpt::runtime::BackendKind;
 use sparsegpt::sparse::PackFormat;
@@ -56,9 +58,25 @@ commands:
             [--temperature 0.8] [--top-k 40] [--seed 0]
             [--damp 0.01] [--calib 32] [--calib-seed 0] [--ckpt <path>]
             [--store <path.spkt>] [--save-store <path.spkt>]
+            [--listen <host:port>] [--addr-file <path>]
+            [--cancel <id>@<step>[+<id>@<step>...]]
             (kv-cache on = incremental decode through per-request KV ring
             buffers with chunked prefill; off = the full re-forward
             reference path — token-for-token identical, O(ctx) slower)
+            (--listen serves network clients over framed JSON-lines TCP
+            instead of the synthetic workload; port 0 picks a free port
+            and --addr-file writes the bound address for scripts;
+            --cancel scripts synthetic-workload disconnects)
+  client    --addr <host:port> | --addr-file <path>
+            [--prompt 1,2,3] [--requests 1] [--tokens 16] [--seed 0]
+            [--tag cli] [--disconnect-after <n>] [--timeout-secs 60]
+            [--shutdown] [--shutdown-only]
+            (loopback client for a `serve --listen` server: submits
+            requests and prints the streamed tokens; with --json every
+            raw server frame passes through to stdout. --shutdown drains
+            the server once resolved; --shutdown-only only sends the
+            drain frame; --disconnect-after drops the socket cold after
+            n token frames, exercising disconnect-as-cancellation)
 
 global flags:
   --json    emit machine-readable JSON-lines events on stdout
@@ -83,8 +101,15 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
+    // fail fast on a typo'd SPARSEGPT_THREADS: a bad value must error here,
+    // not panic mid-decode (and never silently run single-threaded)
+    sparsegpt::sparse::threads::worker_count().map_err(|e| anyhow!(e))?;
     let args = Args::parse(argv, GLOBAL_BOOL_FLAGS)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    if cmd == "client" {
+        // pure network client: no workspace, no backend, no job spec
+        return run_net_client(&args);
+    }
     let spec = spec_from_args(cmd, &args)?;
     let json = args.has("json");
 
@@ -255,10 +280,101 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
             s.ckpt = args.get("ckpt").map(PathBuf::from);
             s.store = args.get("store").map(PathBuf::from);
             s.save_store = args.get("save-store").map(PathBuf::from);
+            s.listen = args.get("listen").map(String::from);
+            s.addr_file = args.get("addr-file").map(PathBuf::from);
+            if let Some(list) = args.get("cancel") {
+                s.cancel = parse_cancels(list)?;
+            }
             JobSpec::Serve(s)
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
     })
+}
+
+/// Parse `--cancel <id>@<step>[+<id>@<step>...]`.
+fn parse_cancels(list: &str) -> Result<Vec<(u64, usize)>> {
+    let mut out = Vec::new();
+    for part in list.split('+') {
+        let (id, step) = part
+            .split_once('@')
+            .ok_or_else(|| anyhow!("--cancel takes <id>@<step>[+...] (got {part:?})"))?;
+        out.push((
+            id.parse().map_err(|e| anyhow!("--cancel id in {part:?}: {e}"))?,
+            step.parse().map_err(|e| anyhow!("--cancel step in {part:?}: {e}"))?,
+        ));
+    }
+    Ok(out)
+}
+
+/// The `client` subcommand: drive a `serve --listen` server over TCP.
+/// Deliberately spec-less — no workspace or backend opens, so it runs on
+/// a bare checkout against any reachable server.
+fn run_net_client(args: &Args) -> Result<()> {
+    let json = args.has("json");
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => {
+            let path = args
+                .get("addr-file")
+                .ok_or_else(|| anyhow!("client needs --addr <host:port> or --addr-file <path>"))?;
+            std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("reading --addr-file {path:?}: {e}"))?
+                .trim()
+                .to_string()
+        }
+    };
+    let timeout = Duration::from_secs(args.u64_or("timeout-secs", 60)?);
+    if args.has("shutdown-only") {
+        send_shutdown(&addr, timeout)?;
+        if !json {
+            println!("sent shutdown to {addr}");
+        }
+        return Ok(());
+    }
+    let prompt: Vec<i32> = match args.get("prompt") {
+        Some(p) => p
+            .split(',')
+            .map(|t| t.trim().parse::<i32>().map_err(|e| anyhow!("--prompt: {e}")))
+            .collect::<Result<_>>()?,
+        None => vec![1, 2, 3, 4],
+    };
+    let n = args.usize_or("requests", 1)?.max(1);
+    let seed = args.u64_or("seed", 0)?;
+    let tokens = args.usize_or("tokens", 16)?.max(1);
+    let tag = args.get_or("tag", "cli");
+    let requests: Vec<ClientRequest> = (0..n)
+        .map(|i| ClientRequest {
+            tag: Some(format!("{tag}-{i}")),
+            prompt: prompt.clone(),
+            max_new_tokens: tokens,
+            seed: seed.wrapping_add(i as u64),
+        })
+        .collect();
+    let disconnect_after = args
+        .get("disconnect-after")
+        .map(|v| v.parse::<usize>().map_err(|e| anyhow!("--disconnect-after: {e}")))
+        .transpose()?;
+    let opts = ClientOptions { disconnect_after, shutdown: args.has("shutdown"), timeout };
+    let out = run_client(&addr, &requests, &opts, &mut |line| {
+        if json {
+            println!("{line}");
+        }
+    })?;
+    if !json {
+        println!("connected to {addr} (config {}, vocab {})", out.config, out.vocab);
+        for (id, stream) in &out.streams {
+            let toks: Vec<String> = stream.iter().map(|t| t.to_string()).collect();
+            println!("request {id}: [{}]", toks.join(" "));
+        }
+        println!(
+            "finished {} | cancelled {} | rejected {}{}",
+            out.finished.len(),
+            out.cancelled.len(),
+            out.rejected,
+            if out.disconnected { " | disconnected mid-stream" } else { "" }
+        );
+    }
+    Ok(())
 }
 
 /// Build the prune method from `--spec <label>` or the granular flags.
@@ -335,7 +451,10 @@ fn print_tables(report: &JobReport) {
                     r.effective_bits,
                     if r.kv_cache { "on" } else { "off" }
                 ),
-                &["request", "prompt", "tokens", "joined", "finished"],
+                &[
+                    "request", "prompt", "tokens", "joined", "finished", "ttft-ms", "gap-p50-ms",
+                    "gap-p95-ms",
+                ],
             );
             for req in &r.requests {
                 table.row(vec![
@@ -344,12 +463,25 @@ fn print_tables(report: &JobReport) {
                     req.tokens.len().to_string(),
                     req.joined_step.to_string(),
                     req.finished_step.to_string(),
+                    format!("{:.1}", req.ttft_secs * 1e3),
+                    format!("{:.2}", req.gap_p50_secs * 1e3),
+                    format!("{:.2}", req.gap_p95_secs * 1e3),
                 ]);
             }
             print!("{}", table.render());
+            if let Some(addr) = &r.listen {
+                println!("served over TCP on {addr}");
+            }
             println!(
                 "{} tokens in {} steps, {:.2}s decode -> {:.1} tok/s",
                 r.tokens, r.steps, r.decode_secs, r.tokens_per_sec
+            );
+            println!(
+                "ttft p50 {:.1} ms / p95 {:.1} ms | {} cancelled, {} rejected",
+                r.ttft_p50_secs * 1e3,
+                r.ttft_p95_secs * 1e3,
+                r.cancelled,
+                r.rejected
             );
             if r.kv_cache {
                 println!(

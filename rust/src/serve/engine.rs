@@ -1,9 +1,20 @@
-//! The continuous-batching decode loop: joins queued requests into the
-//! running batch each step, decodes one token for every in-flight request
-//! through the sparse model, retires finished requests, and narrates the
-//! lifecycle (`Enqueued` → `BatchFormed` → `PrefillStarted` →
-//! `CacheEvicted` → `Finished` → `Drained`) through a hook the api layer
-//! maps onto the structured event stream.
+//! The continuous-batching decode loop: pulls newly arrived requests from a
+//! [`RequestSource`] between batch steps, joins them into the running batch,
+//! decodes one token for every in-flight request through the sparse model,
+//! retires finished requests, and narrates the lifecycle (`Enqueued` →
+//! `BatchFormed` → `PrefillStarted` → `CacheEvicted` → `Finished` /
+//! `Cancelled` → `Drained`) through a hook the api layer maps onto the
+//! structured event stream.
+//!
+//! Intake is *live*: the loop is not handed a frozen workload up front but
+//! polls its source at every step, so requests arriving over the network
+//! while a batch is mid-decode join the very next step. Client disconnects
+//! propagate as cancellation — the request retires immediately and its
+//! [`CacheBudget`] reservation is released — and submissions that land on a
+//! full bounded queue are rejected (429 semantics) instead of blocking the
+//! decode loop. The preloaded synthetic workload of earlier PRs is now just
+//! one source ([`SyntheticSource`], via [`ServeEngine::run`]); the TCP front
+//! door (`serve::net`) is another.
 //!
 //! Two decode modes share one loop and produce token-for-token identical
 //! streams (pinned by `tests/serve_kv_parity.rs`):
@@ -22,8 +33,13 @@
 //! Batch ordering is decided once, at admission: joiners append to the
 //! tail of the active batch and retirement compacts in place, so decode
 //! order is join order — the hot loop never re-sorts (pinned by the
-//! order-stability test below).
+//! order-stability test below). Per-request token streams depend only on
+//! the request's own prompt and seed (row-independent kernels, per-request
+//! attention and sampling rng), never on batch composition — which is what
+//! makes the network path's nondeterministic arrival timing compatible
+//! with the byte-exact net-parity test.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -69,7 +85,8 @@ impl Default for EngineOptions {
 
 /// Lifecycle notifications (the api layer turns these into
 /// `request-enqueued` / `batch-formed` / `prefill-started` /
-/// `cache-evicted` / `request-finished` / `engine-drained` JSONL events).
+/// `cache-evicted` / `request-finished` / `request-cancelled` /
+/// `request-rejected` / `engine-drained` JSONL events).
 #[derive(Clone, Debug)]
 pub enum ServeEvent {
     Enqueued { id: u64, step: usize, prompt_tokens: usize, max_new_tokens: usize },
@@ -79,10 +96,26 @@ pub enum ServeEvent {
     /// a request's ring buffer evicted `evicted` positions this step
     CacheEvicted { id: u64, step: usize, evicted: usize },
     Finished { id: u64, step: usize, tokens: usize },
-    Drained { steps: usize, requests: usize, tokens: usize, decode_secs: f64 },
+    /// the client went away (disconnect or explicit cancel frame): the
+    /// request retired early with `tokens` already generated and its cache
+    /// reservation returned to the budget
+    Cancelled { id: u64, step: usize, tokens: usize },
+    /// a submission landed on a full bounded queue and was shed with
+    /// 429 semantics instead of blocking the decode loop
+    Rejected { id: u64, step: usize, queue: usize, cap: usize },
+    Drained {
+        steps: usize,
+        requests: usize,
+        tokens: usize,
+        decode_secs: f64,
+        cancelled: usize,
+        /// cache memory still reserved — always 0 after a clean drain,
+        /// including runs with mid-stream disconnects
+        cache_bytes_in_use: u64,
+    },
 }
 
-/// One retired request with its generated tokens.
+/// One retired request with its generated tokens and latency profile.
 #[derive(Clone, Debug)]
 pub struct FinishedRequest {
     pub id: u64,
@@ -90,6 +123,12 @@ pub struct FinishedRequest {
     pub tokens: Vec<i32>,
     pub joined_step: usize,
     pub finished_step: usize,
+    /// enqueue → first generated token wall time
+    pub ttft_secs: f64,
+    /// median inter-token gap (0.0 with fewer than two tokens)
+    pub gap_p50_secs: f64,
+    /// p95 inter-token gap (0.0 with fewer than two tokens)
+    pub gap_p95_secs: f64,
 }
 
 /// What a drained engine run produced.
@@ -98,6 +137,10 @@ pub struct EngineOutcome {
     pub finished: Vec<FinishedRequest>,
     pub steps: usize,
     pub tokens: usize,
+    /// requests retired early because their client went away
+    pub cancelled: usize,
+    /// submissions shed because the bounded queue was full
+    pub rejected: usize,
     /// wall time inside batched decode steps only (prefill + scheduling
     /// excluded)
     pub decode_secs: f64,
@@ -110,7 +153,7 @@ pub struct EngineOutcome {
     /// high-water mark of reserved cache memory
     pub peak_cache_bytes: u64,
     /// cache memory still reserved after the drain — always 0: retiring a
-    /// request returns its bytes to the budget
+    /// request (finished *or* cancelled) returns its bytes to the budget
     pub cache_bytes_in_use: u64,
 }
 
@@ -121,6 +164,109 @@ impl EngineOutcome {
         } else {
             0.0
         }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (0.0 when empty).
+/// Shared by the engine's per-request gap stats and the report's
+/// cross-request aggregates.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Where the decode loop gets its work and where per-token results go.
+///
+/// The engine calls `poll`/`take_cancelled` at the top of every step and
+/// streams results back through `token`/`finished`/`cancelled`, so a source
+/// backed by live connections sees tokens as they are sampled, not after
+/// the drain. All result hooks default to no-ops — a synthetic workload
+/// only has to describe arrivals.
+pub trait RequestSource {
+    /// Requests newly visible at `step`. `queue_free` is the bounded
+    /// queue's remaining capacity: a source that respects it (the synthetic
+    /// workload) gets backpressure by deferral, while a source that cannot
+    /// hold submissions back (the network) may return more — the engine
+    /// sheds the overflow through [`RequestSource::rejected`].
+    fn poll(&mut self, step: usize, queue_free: usize) -> Vec<ServeRequest>;
+    /// Request ids whose clients cancelled or disconnected since the last
+    /// step. Ids that are unknown or already retired are ignored.
+    fn take_cancelled(&mut self, step: usize) -> Vec<u64>;
+    /// No further requests will ever arrive — the drain condition. A
+    /// network source reports closed only once a shutdown was requested
+    /// and its intake is empty.
+    fn closed(&self) -> bool;
+    /// `req` entered the bounded queue (paired with the `Enqueued` event).
+    fn accepted(&mut self, _req: &ServeRequest) {}
+    /// `req` was shed because the queue held `queue` of `cap` entries.
+    fn rejected(&mut self, _req: &ServeRequest, _queue: usize, _cap: usize) {}
+    /// One generated token, streamed as it is sampled. Returning false
+    /// marks the client unreachable — the engine retires the request as
+    /// cancelled in the same step's retire scan.
+    fn token(&mut self, _id: u64, _index: usize, _token: i32) -> bool {
+        true
+    }
+    /// The request retired with its full token budget.
+    fn finished(&mut self, _fin: &FinishedRequest) {}
+    /// The request retired early with `tokens` generated.
+    fn cancelled(&mut self, _id: u64, _tokens: usize) {}
+    /// An idle tick: nothing in flight and nothing admitted this step. A
+    /// network source blocks here briefly instead of busy-spinning.
+    fn idle(&mut self) {}
+}
+
+/// The preloaded workload of earlier PRs as a [`RequestSource`]: requests
+/// become visible at their scripted arrival step (FIFO within a step),
+/// held back while the bounded queue is full (backpressure by deferral,
+/// never rejection), plus an optional scripted cancel schedule — `(step,
+/// id)` pairs that model a client disconnecting at that step, which is how
+/// a deterministic run (and the pinned event golden) exercises the
+/// disconnect path without sockets.
+pub struct SyntheticSource {
+    incoming: Vec<(usize, ServeRequest)>,
+    next: usize,
+    cancels: Vec<(usize, u64)>,
+    next_cancel: usize,
+}
+
+impl SyntheticSource {
+    pub fn new(mut incoming: Vec<(usize, ServeRequest)>, mut cancels: Vec<(usize, u64)>) -> Self {
+        // ordering is decided here, once: arrivals sort stably (FIFO within
+        // a step), joiners append, retirement compacts — the decode loop
+        // never re-sorts the batch
+        incoming.sort_by_key(|(step, _)| *step);
+        cancels.sort_by_key(|(step, _)| *step);
+        SyntheticSource { incoming, next: 0, cancels, next_cancel: 0 }
+    }
+}
+
+impl RequestSource for SyntheticSource {
+    fn poll(&mut self, step: usize, queue_free: usize) -> Vec<ServeRequest> {
+        let mut out = Vec::new();
+        while self.next < self.incoming.len()
+            && self.incoming[self.next].0 <= step
+            && out.len() < queue_free
+        {
+            out.push(self.incoming[self.next].1.clone());
+            self.next += 1;
+        }
+        out
+    }
+
+    fn take_cancelled(&mut self, step: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        while self.next_cancel < self.cancels.len() && self.cancels[self.next_cancel].0 <= step {
+            out.push(self.cancels[self.next_cancel].1);
+            self.next_cancel += 1;
+        }
+        out
+    }
+
+    fn closed(&self) -> bool {
+        self.next >= self.incoming.len()
     }
 }
 
@@ -137,10 +283,16 @@ struct Active {
     /// next-token logits awaiting sampling (from prefill or the last
     /// batched decode)
     pending: Option<Vec<f32>>,
+    /// when the request entered the bounded queue (ttft anchor)
+    enqueued_at: Instant,
+    ttft_secs: f64,
+    last_token_at: Option<Instant>,
+    /// inter-token gaps, seconds
+    gaps: Vec<f64>,
 }
 
 impl Active {
-    fn new(req: ServeRequest, joined_step: usize) -> Active {
+    fn new(req: ServeRequest, joined_step: usize, enqueued_at: Instant) -> Active {
         let ctx = if req.prompt.is_empty() { vec![0] } else { req.prompt.clone() };
         Active {
             ctx,
@@ -149,7 +301,25 @@ impl Active {
             joined_step,
             cache: None,
             pending: None,
+            enqueued_at,
+            ttft_secs: 0.0,
+            last_token_at: None,
+            gaps: Vec::new(),
             req,
+        }
+    }
+
+    fn retire_finished(mut self, step: usize) -> FinishedRequest {
+        self.gaps.sort_by(|a, b| a.total_cmp(b));
+        FinishedRequest {
+            id: self.req.id,
+            prompt_tokens: self.req.prompt.len(),
+            tokens: self.generated,
+            joined_step: self.joined_step,
+            finished_step: step,
+            ttft_secs: self.ttft_secs,
+            gap_p50_secs: percentile_sorted(&self.gaps, 0.50),
+            gap_p95_secs: percentile_sorted(&self.gaps, 0.95),
         }
     }
 }
@@ -165,27 +335,40 @@ impl<'a> ServeEngine<'a> {
         ServeEngine { model, opts }
     }
 
-    /// Run the workload to drain: `incoming` is (arrival step, request)
-    /// pairs — requests become visible to the scheduler at their arrival
-    /// step, which is how a synthetic run exercises join/retire churn.
+    /// Run a preloaded workload to drain: `incoming` is (arrival step,
+    /// request) pairs — requests become visible to the scheduler at their
+    /// arrival step, which is how a synthetic run exercises join/retire
+    /// churn. Convenience wrapper over [`ServeEngine::run_source`] with a
+    /// [`SyntheticSource`] and no cancels.
     pub fn run(
         &self,
-        mut incoming: Vec<(usize, ServeRequest)>,
+        incoming: Vec<(usize, ServeRequest)>,
         on_event: &mut dyn FnMut(&ServeEvent),
     ) -> Result<EngineOutcome> {
-        // ordering is decided here, once: arrivals sort stably (FIFO within
-        // a step), joiners append, retirement compacts — the decode loop
-        // below never re-sorts the batch
-        incoming.sort_by_key(|(step, _)| *step);
+        self.run_source(&mut SyntheticSource::new(incoming, Vec::new()), on_event)
+    }
+
+    /// The step-driven live-intake loop. Each step: propagate cancels,
+    /// poll arrivals (shedding overflow), form the batch (chunked prefill
+    /// for joiners), decode one token per in-flight request and stream it
+    /// to the source, retire satisfied or disconnected requests. Runs
+    /// until the source is closed and every queue is empty.
+    pub fn run_source(
+        &self,
+        source: &mut dyn RequestSource,
+        on_event: &mut dyn FnMut(&ServeEvent),
+    ) -> Result<EngineOutcome> {
         let vocab = self.model.cfg.vocab;
         let unit = self.model.cache_bytes();
         let mut sched = Scheduler::new(self.opts.policy);
         let mut budget = CacheBudget::new(self.opts.cache_budget_bytes);
         let mut active: Vec<Active> = Vec::new();
         let mut finished: Vec<FinishedRequest> = Vec::new();
-        let mut next_arrival = 0usize;
+        let mut enqueued_at: HashMap<u64, Instant> = HashMap::new();
         let mut step = 0usize;
         let mut tokens = 0usize;
+        let mut cancelled = 0usize;
+        let mut rejected = 0usize;
         let mut decode_secs = 0.0f64;
         let mut prefill_secs = 0.0f64;
         let mut prefill_tokens = 0usize;
@@ -193,19 +376,45 @@ impl<'a> ServeEngine<'a> {
         let mut peak_cache_bytes = 0u64;
 
         loop {
-            // arrivals visible at this step enter the bounded queue; when it
-            // is full, the engine holds its own arrivals back (backpressure)
-            // and retries them on later steps once decode drains the queue
-            while next_arrival < incoming.len() && incoming[next_arrival].0 <= step {
-                if !sched.has_capacity() {
-                    break;
+            // disconnects and cancel frames observed since the last step
+            // retire first, so the budget headroom they free is visible to
+            // this step's admission; unknown or already-retired ids are
+            // no-ops
+            for id in source.take_cancelled(step) {
+                if let Some(i) = active.iter().position(|a| a.req.id == id) {
+                    let mut a = active.remove(i);
+                    if a.cache.take().is_some() {
+                        budget.release(unit);
+                    }
+                    cancelled += 1;
+                    on_event(&ServeEvent::Cancelled { id, step, tokens: a.generated.len() });
+                    source.cancelled(id, a.generated.len());
+                } else if sched.cancel(id) {
+                    enqueued_at.remove(&id);
+                    cancelled += 1;
+                    on_event(&ServeEvent::Cancelled { id, step, tokens: 0 });
+                    source.cancelled(id, 0);
                 }
-                let req = incoming[next_arrival].1.clone();
+            }
+            // arrivals visible at this step enter the bounded queue. A
+            // source that respects `queue_free` (the synthetic workload)
+            // holds its own arrivals back and retries on later steps once
+            // decode drains the queue; anything beyond capacity is shed
+            // with an explicit rejection instead of blocking the loop
+            for req in source.poll(step, sched.free_capacity()) {
+                if !sched.has_capacity() {
+                    rejected += 1;
+                    let (queue, cap) = (sched.queue_len(), sched.policy().queue_cap);
+                    on_event(&ServeEvent::Rejected { id: req.id, step, queue, cap });
+                    source.rejected(&req, queue, cap);
+                    continue;
+                }
                 let (id, prompt_tokens, max_new_tokens) =
                     (req.id, req.prompt.len(), req.max_new_tokens);
-                sched.submit(req)?;
+                enqueued_at.insert(id, Instant::now());
+                sched.submit(req.clone())?;
                 on_event(&ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens });
-                next_arrival += 1;
+                source.accepted(&req);
             }
             // batch formation: joiners ride this very step, capped by the
             // per-step prompt-token budget (both modes pay prompt cost) and
@@ -234,7 +443,8 @@ impl<'a> ServeEngine<'a> {
                     batch: active.len() + joined.len(),
                 });
                 for req in joined {
-                    let mut a = Active::new(req, step);
+                    let t_enq = enqueued_at.remove(&req.id).unwrap_or_else(Instant::now);
+                    let mut a = Active::new(req, step, t_enq);
                     if self.opts.kv_cache {
                         let mut cache = self.model.new_cache();
                         budget.reserve(unit);
@@ -266,10 +476,11 @@ impl<'a> ServeEngine<'a> {
                 }
             }
             if active.is_empty() {
-                if next_arrival >= incoming.len() && sched.is_empty() {
+                if source.closed() && sched.is_empty() {
                     break; // drained
                 }
                 step += 1; // idle tick: waiting on arrivals or the batch window
+                source.idle();
                 continue;
             }
 
@@ -318,18 +529,44 @@ impl<'a> ServeEngine<'a> {
                     a.pending = Some(logits.data()[i * vocab..(i + 1) * vocab].to_vec());
                 }
             }
+            // sample + stream: each token goes to the source as it is
+            // produced; a failed write means the client is gone, and the
+            // request retires as cancelled in this step's retire scan
+            let mut dead: Vec<u64> = Vec::new();
             for a in active.iter_mut() {
                 let logits = a.pending.take().expect("every in-flight request has logits");
                 let t = pick_token(&logits, self.opts.temperature, self.opts.top_k, &mut a.rng);
                 a.ctx.push(t);
                 a.generated.push(t);
                 tokens += 1;
+                let now = Instant::now();
+                match a.last_token_at {
+                    None => a.ttft_secs = now.duration_since(a.enqueued_at).as_secs_f64(),
+                    Some(prev) => a.gaps.push(now.duration_since(prev).as_secs_f64()),
+                }
+                a.last_token_at = Some(now);
+                if !source.token(a.req.id, a.generated.len() - 1, t) {
+                    dead.push(a.req.id);
+                }
             }
-            // retire satisfied requests (batch order preserved for the rest);
-            // dropping the cache returns its bytes to the budget
+            // retire satisfied and unreachable requests (batch order
+            // preserved for the rest); dropping the cache returns its bytes
+            // to the budget
             let mut i = 0;
             while i < active.len() {
-                if active[i].generated.len() >= active[i].req.max_new_tokens {
+                if dead.contains(&active[i].req.id) {
+                    let mut a = active.remove(i);
+                    if a.cache.take().is_some() {
+                        budget.release(unit);
+                    }
+                    cancelled += 1;
+                    on_event(&ServeEvent::Cancelled {
+                        id: a.req.id,
+                        step,
+                        tokens: a.generated.len(),
+                    });
+                    source.cancelled(a.req.id, a.generated.len());
+                } else if active[i].generated.len() >= active[i].req.max_new_tokens {
                     let mut a = active.remove(i);
                     if a.cache.take().is_some() {
                         budget.release(unit);
@@ -339,13 +576,9 @@ impl<'a> ServeEngine<'a> {
                         step,
                         tokens: a.generated.len(),
                     });
-                    finished.push(FinishedRequest {
-                        id: a.req.id,
-                        prompt_tokens: a.req.prompt.len(),
-                        tokens: a.generated,
-                        joined_step: a.joined_step,
-                        finished_step: step,
-                    });
+                    let fin = a.retire_finished(step);
+                    source.finished(&fin);
+                    finished.push(fin);
                 } else {
                     i += 1;
                 }
@@ -357,6 +590,8 @@ impl<'a> ServeEngine<'a> {
             finished,
             steps: step,
             tokens,
+            cancelled,
+            rejected,
             decode_secs,
             prefill_secs,
             prefill_tokens,
@@ -369,6 +604,8 @@ impl<'a> ServeEngine<'a> {
             requests: outcome.finished.len(),
             tokens: outcome.tokens,
             decode_secs: outcome.decode_secs,
+            cancelled: outcome.cancelled,
+            cache_bytes_in_use: outcome.cache_bytes_in_use,
         });
         Ok(outcome)
     }
@@ -419,6 +656,8 @@ mod tests {
         assert!(out.finished.iter().all(|f| f.tokens.len() == 3));
         assert_eq!(out.prefill_tokens, 15, "5 prompts of 3 tokens prefilled");
         assert_eq!(out.cache_bytes_in_use, 0, "retire returned every cache");
+        assert_eq!(out.cancelled, 0);
+        assert_eq!(out.rejected, 0);
         // ids all retire exactly once
         let mut ids: Vec<u64> = out.finished.iter().map(|f| f.id).collect();
         ids.sort_unstable();
@@ -474,6 +713,7 @@ mod tests {
         let out = ServeEngine::new(&m, opts).run(reqs, &mut |_| {}).unwrap();
         assert_eq!(out.finished.len(), 6);
         assert_eq!(out.tokens, 12);
+        assert_eq!(out.rejected, 0, "a deferring source is never shed");
     }
 
     #[test]
@@ -628,5 +868,144 @@ mod tests {
         // prefill fills positions 0..=2; decode appends 3, 4, 5 (the final
         // sampled token retires unprocessed) — positions 4 and 5 evict
         assert_eq!(evicted, 4);
+    }
+
+    #[test]
+    fn scripted_cancel_retires_active_request_and_frees_budget() {
+        // id 0 is cancelled at step 2, mid-stream with 2 of 4 tokens out;
+        // ids 1 and 2 run to completion and the budget drains to zero
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(2, 0, 16),
+            temperature: 0.0,
+            top_k: 0,
+            ..EngineOptions::default()
+        };
+        let mut cancel_events = Vec::new();
+        let mut src = SyntheticSource::new(requests(3, 4, 11), vec![(2, 0)]);
+        let out = ServeEngine::new(&m, opts)
+            .run_source(&mut src, &mut |e| {
+                if let ServeEvent::Cancelled { id, step, tokens } = e {
+                    cancel_events.push((*id, *step, *tokens));
+                }
+            })
+            .unwrap();
+        assert_eq!(out.cancelled, 1);
+        assert_eq!(cancel_events, vec![(0, 2, 2)], "disconnect lands mid-stream");
+        let mut ids: Vec<u64> = out.finished.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2], "untouched requests still finish");
+        assert_eq!(out.tokens, 2 + 4 + 4, "partial stream still counted");
+        assert_eq!(out.cache_bytes_in_use, 0, "cancel returned the reservation");
+    }
+
+    #[test]
+    fn cancel_of_queued_request_removes_it_before_admission() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(1, 0, 16),
+            temperature: 0.0,
+            top_k: 0,
+            ..EngineOptions::default()
+        };
+        // max_batch 1: id 1 arrives at step 1 and queues behind id 0, then
+        // its client disconnects at step 2, before it was ever admitted
+        let mut reqs = requests(2, 3, 11);
+        reqs[1].0 = 1;
+        let mut cancel_events = Vec::new();
+        let mut src = SyntheticSource::new(reqs, vec![(2, 1)]);
+        let out = ServeEngine::new(&m, opts)
+            .run_source(&mut src, &mut |e| {
+                if let ServeEvent::Cancelled { id, step, tokens } = e {
+                    cancel_events.push((*id, *step, *tokens));
+                }
+            })
+            .unwrap();
+        assert_eq!(out.cancelled, 1);
+        assert_eq!(cancel_events, vec![(1, 2, 0)], "queued cancel has zero tokens");
+        assert_eq!(out.finished.len(), 1);
+        assert_eq!(out.finished[0].id, 0);
+        assert_eq!(out.cache_bytes_in_use, 0);
+    }
+
+    /// A source that dumps its whole burst at step 0, ignoring the queue's
+    /// remaining capacity — the shape of a network source, which cannot
+    /// hold remote submissions back.
+    struct Burst {
+        reqs: Vec<ServeRequest>,
+        sent: bool,
+        shed: Vec<u64>,
+    }
+
+    impl RequestSource for Burst {
+        fn poll(&mut self, _step: usize, _queue_free: usize) -> Vec<ServeRequest> {
+            if self.sent {
+                Vec::new()
+            } else {
+                self.sent = true;
+                std::mem::take(&mut self.reqs)
+            }
+        }
+        fn take_cancelled(&mut self, _step: usize) -> Vec<u64> {
+            Vec::new()
+        }
+        fn closed(&self) -> bool {
+            self.sent
+        }
+        fn rejected(&mut self, req: &ServeRequest, _queue: usize, _cap: usize) {
+            self.shed.push(req.id);
+        }
+    }
+
+    #[test]
+    fn overflowing_burst_is_rejected_not_blocked() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(1, 0, 2), // queue_cap 2
+            temperature: 0.0,
+            top_k: 0,
+            ..EngineOptions::default()
+        };
+        let reqs: Vec<ServeRequest> =
+            requests(4, 2, 11).into_iter().map(|(_, r)| r).collect();
+        let mut src = Burst { reqs, sent: false, shed: Vec::new() };
+        let mut rejected_events = Vec::new();
+        let out = ServeEngine::new(&m, opts)
+            .run_source(&mut src, &mut |e| {
+                if let ServeEvent::Rejected { id, queue, cap, .. } = e {
+                    rejected_events.push((*id, *queue, *cap));
+                }
+            })
+            .unwrap();
+        assert_eq!(out.rejected, 2, "burst of 4 against 2 queue slots sheds 2");
+        assert_eq!(src.shed, vec![2, 3], "the overflow tail is shed in order");
+        assert_eq!(rejected_events, vec![(2, 2, 2), (3, 2, 2)]);
+        let mut ids: Vec<u64> = out.finished.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1], "accepted requests still drain");
+        assert_eq!(out.cache_bytes_in_use, 0);
+    }
+
+    #[test]
+    fn latency_stats_populate_on_finish() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(2, 0, 16),
+            temperature: 0.0,
+            top_k: 0,
+            ..EngineOptions::default()
+        };
+        let out = ServeEngine::new(&m, opts).run(requests(1, 4, 11), &mut |_| {}).unwrap();
+        let f = &out.finished[0];
+        assert!(f.ttft_secs > 0.0, "first token lands after enqueue");
+        assert!(f.gap_p50_secs >= 0.0 && f.gap_p95_secs >= f.gap_p50_secs);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile_sorted(&[], 0.5), 0.0);
+        assert_eq!(percentile_sorted(&[7.0], 0.95), 7.0);
+        assert_eq!(percentile_sorted(&[1.0, 2.0, 3.0], 0.5), 2.0);
+        assert_eq!(percentile_sorted(&[1.0, 2.0, 3.0, 4.0], 0.95), 4.0);
     }
 }

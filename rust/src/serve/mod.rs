@@ -17,18 +17,26 @@
 //!   batch formation (join running batches immediately, wait bounded time
 //!   for a full batch from idle, spread prefill bursts, respect the
 //!   cache-memory budget).
-//! * [`ServeEngine`] (`engine.rs`) — the decode loop: admit, chunked
-//!   prefill on join, one incremental token per request per step, retire
-//!   (freeing the cache), narrate lifecycle events.
+//! * [`ServeEngine`] (`engine.rs`) — the decode loop: poll the
+//!   [`RequestSource`] for live intake, admit, chunked prefill on join,
+//!   one incremental token per request per step, retire (freeing the
+//!   cache), propagate disconnects as cancellation, narrate lifecycle
+//!   events.
+//! * `net` (`net/`) — the TCP front door: a framed newline-delimited-JSON
+//!   protocol (`net/protocol.rs`), a `std::net` listener with per-connection
+//!   reader threads feeding the engine's intake queue (`net/server.rs`,
+//!   `net/conn.rs`), and the loopback client the CLI/tests drive it with
+//!   (`net/client.rs`).
 
 pub mod engine;
 pub mod kv;
 pub mod model;
+pub mod net;
 pub mod scheduler;
 
 pub use engine::{
-    EngineOptions, EngineOutcome, FinishedRequest, ServeEngine, ServeEvent,
-    DEFAULT_PREFILL_CHUNK,
+    percentile_sorted, EngineOptions, EngineOutcome, FinishedRequest, RequestSource, ServeEngine,
+    ServeEvent, SyntheticSource, DEFAULT_PREFILL_CHUNK,
 };
 pub use kv::{CacheBudget, KvCache};
 pub use model::SparseModel;

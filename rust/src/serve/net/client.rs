@@ -1,0 +1,269 @@
+//! Loopback client: the counterpart the CLI `client` subcommand, the
+//! net-parity test, and the CI smoke job all drive. Blocking `std::net`
+//! I/O, frames via the shared codec — deliberately the simplest correct
+//! reader of the protocol so it doubles as documentation.
+//!
+//! The client submits every request up front, then consumes the server's
+//! stream until each submission resolved (`finished`, `cancelled`, or
+//! `rejected`). `disconnect_after` drops the socket cold after N `token`
+//! frames — the tool the tests use to trigger the server's
+//! disconnect-as-cancellation path on purpose.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::net::protocol::{ClientFrame, FrameDecoder, ServerFrame};
+
+/// One request to submit (the server assigns the id; `tag` correlates).
+#[derive(Clone, Debug)]
+pub struct ClientRequest {
+    pub tag: Option<String>,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+/// Client behavior knobs.
+#[derive(Clone, Debug)]
+pub struct ClientOptions {
+    /// drop the connection cold after this many `token` frames (total,
+    /// across requests) — simulates a client vanishing mid-stream; when
+    /// set, `shutdown` is not sent
+    pub disconnect_after: Option<usize>,
+    /// send a `shutdown` frame once every request resolved (graceful
+    /// server drain)
+    pub shutdown: bool,
+    /// overall deadline waiting for server frames
+    pub timeout: Duration,
+}
+
+impl Default for ClientOptions {
+    fn default() -> ClientOptions {
+        ClientOptions { disconnect_after: None, shutdown: false, timeout: Duration::from_secs(60) }
+    }
+}
+
+/// What one client session observed.
+#[derive(Clone, Debug, Default)]
+pub struct ClientOutcome {
+    pub config: String,
+    pub vocab: usize,
+    /// request id → generated tokens, in stream order
+    pub streams: BTreeMap<u64, Vec<i32>>,
+    pub accepted: Vec<u64>,
+    pub finished: Vec<u64>,
+    /// (id, tokens already streamed) for requests the server cancelled
+    pub cancelled: Vec<(u64, usize)>,
+    pub rejected: usize,
+    /// true when `disconnect_after` tripped and the socket was dropped
+    pub disconnected: bool,
+}
+
+struct FrameReader {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    queue: VecDeque<String>,
+    deadline: Instant,
+}
+
+impl FrameReader {
+    fn next(&mut self, on_line: &mut dyn FnMut(&str)) -> Result<ServerFrame> {
+        loop {
+            if let Some(line) = self.queue.pop_front() {
+                on_line(&line);
+                return ServerFrame::parse(&line);
+            }
+            if Instant::now() > self.deadline {
+                bail!("timed out waiting for a server frame");
+            }
+            let mut buf = [0u8; 4096];
+            match self.stream.read(&mut buf) {
+                Ok(0) => bail!("server closed the connection mid-session"),
+                Ok(n) => self.queue.extend(self.dec.push(&buf[..n])?),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+                Err(e) => return Err(e).context("reading from server"),
+            }
+        }
+    }
+}
+
+/// Connect, submit `requests`, and consume the stream until every
+/// submission resolved (or `disconnect_after` trips). Every raw received
+/// line is handed to `on_line` before parsing — the CLI's `--json`
+/// passthrough.
+pub fn run_client(
+    addr: &str,
+    requests: &[ClientRequest],
+    opts: &ClientOptions,
+    on_line: &mut dyn FnMut(&str),
+) -> Result<ClientOutcome> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(Duration::from_millis(100))).context("read timeout")?;
+    let mut reader = FrameReader {
+        stream,
+        dec: FrameDecoder::new(),
+        queue: VecDeque::new(),
+        deadline: Instant::now() + opts.timeout,
+    };
+    let mut out = ClientOutcome::default();
+
+    match reader.next(on_line)? {
+        ServerFrame::Hello { config, vocab } => {
+            out.config = config;
+            out.vocab = vocab;
+        }
+        other => bail!("expected a hello frame, got {other:?}"),
+    }
+
+    for r in requests {
+        let frame = ClientFrame::Request {
+            tag: r.tag.clone(),
+            prompt: r.prompt.clone(),
+            max_new_tokens: r.max_new_tokens,
+            seed: r.seed,
+        };
+        reader.stream.write_all(frame.encode().as_bytes()).context("submitting request")?;
+    }
+
+    let mut unresolved = requests.len();
+    let mut tokens_seen = 0usize;
+    while unresolved > 0 {
+        match reader.next(on_line)? {
+            ServerFrame::Accepted { id, .. } => {
+                out.accepted.push(id);
+                out.streams.entry(id).or_default();
+            }
+            ServerFrame::Token { id, index, token } => {
+                let stream = out.streams.entry(id).or_default();
+                if index != stream.len() {
+                    bail!(
+                        "request {id}: token index {index} arrived out of order (have {})",
+                        stream.len()
+                    );
+                }
+                stream.push(token);
+                tokens_seen += 1;
+                if opts.disconnect_after.is_some_and(|k| tokens_seen >= k) {
+                    out.disconnected = true;
+                    let _ = reader.stream.shutdown(Shutdown::Both);
+                    return Ok(out);
+                }
+            }
+            ServerFrame::Finished { id, tokens, .. } => {
+                let have = out.streams.get(&id).map_or(0, |s| s.len());
+                if have != tokens {
+                    bail!("request {id}: finished claims {tokens} tokens, streamed {have}");
+                }
+                out.finished.push(id);
+                unresolved -= 1;
+            }
+            ServerFrame::Cancelled { id, tokens } => {
+                out.cancelled.push((id, tokens));
+                unresolved -= 1;
+            }
+            ServerFrame::Rejected { .. } => {
+                out.rejected += 1;
+                unresolved -= 1;
+            }
+            ServerFrame::Error { message } => bail!("server error: {message}"),
+            ServerFrame::Hello { .. } => bail!("unexpected second hello frame"),
+        }
+    }
+
+    if opts.shutdown {
+        reader
+            .stream
+            .write_all(ClientFrame::Shutdown.encode().as_bytes())
+            .context("sending shutdown")?;
+    }
+    Ok(out)
+}
+
+/// Connect and send only a `shutdown` frame — the CLI's remote off switch.
+pub fn send_shutdown(addr: &str, timeout: Duration) -> Result<()> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_millis(100))).context("read timeout")?;
+    let mut reader = FrameReader {
+        stream: stream.try_clone().context("cloning stream")?,
+        dec: FrameDecoder::new(),
+        queue: VecDeque::new(),
+        deadline: Instant::now() + timeout,
+    };
+    match reader.next(&mut |_| {})? {
+        ServerFrame::Hello { .. } => {}
+        other => bail!("expected a hello frame, got {other:?}"),
+    }
+    stream.write_all(ClientFrame::Shutdown.encode().as_bytes()).context("sending shutdown")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelCfg;
+    use crate::model::init::init_params;
+    use crate::serve::engine::{EngineOptions, ServeEngine};
+    use crate::serve::model::SparseModel;
+    use crate::serve::net::server::{NetServer, NetServerOptions};
+    use crate::serve::scheduler::ServeRequest;
+    use crate::sparse::PackPolicy;
+
+    fn model() -> SparseModel {
+        let cfg = ModelCfg::from_dims("net-test", 8, 1, 2, 1, 1, 11, 4);
+        SparseModel::from_params(&init_params(&cfg, 0), &PackPolicy::default()).unwrap()
+    }
+
+    #[test]
+    fn loopback_stream_matches_in_process_run() {
+        let m = model();
+        let engine_opts = EngineOptions { temperature: 0.7, top_k: 4, ..Default::default() };
+        let prompt = vec![1, 2, 3];
+        // the reference: same request served without a socket in sight
+        let expect = ServeEngine::new(&m, engine_opts)
+            .run(
+                vec![(
+                    0,
+                    ServeRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 5, seed: 9 },
+                )],
+                &mut |_| {},
+            )
+            .unwrap()
+            .finished[0]
+            .tokens
+            .clone();
+
+        let srv = NetServer::bind("127.0.0.1:0", NetServerOptions::new("net-test".into(), 11))
+            .unwrap();
+        let addr = srv.local_addr().to_string();
+        let client = std::thread::spawn(move || {
+            run_client(
+                &addr,
+                &[ClientRequest {
+                    tag: Some("t0".into()),
+                    prompt,
+                    max_new_tokens: 5,
+                    seed: 9,
+                }],
+                &ClientOptions { shutdown: true, ..Default::default() },
+                &mut |_| {},
+            )
+            .unwrap()
+        });
+        let out = srv.serve(&m, engine_opts, &mut |_| {}).unwrap();
+        let got = client.join().unwrap();
+        assert_eq!(got.streams.get(&0).unwrap(), &expect, "wire tokens == in-process tokens");
+        assert_eq!(got.finished, vec![0]);
+        assert_eq!(got.accepted, vec![0]);
+        assert_eq!(out.finished.len(), 1);
+        assert_eq!(out.cache_bytes_in_use, 0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Connection lifecycle: one [`Conn`] per accepted socket, shared between
+//! the reader thread (which owns the receive side) and the engine thread
+//! (which streams frames back).
+//!
+//! The write half lives behind a mutex so whole frames from either thread
+//! never interleave on the wire. A failed write flips the connection dead
+//! and half-closes the socket — the engine observes the `false` return
+//! from [`Conn::send`] and retires the client's requests as cancelled,
+//! which is exactly how a disconnect becomes a cancellation without the
+//! decode loop ever blocking on a dead peer.
+
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::serve::net::protocol::ServerFrame;
+
+/// One live client connection's shared state.
+pub struct Conn {
+    /// server-local connection id (distinct from request ids)
+    pub id: u64,
+    writer: Mutex<TcpStream>,
+    alive: AtomicBool,
+}
+
+impl Conn {
+    /// Wrap the write half of an accepted socket. The caller keeps the
+    /// read half for its reader thread (`TcpStream::try_clone` shares one
+    /// underlying socket, so shutdown on either half reaches both).
+    pub fn new(id: u64, writer: TcpStream) -> Conn {
+        Conn { id, writer: Mutex::new(writer), alive: AtomicBool::new(true) }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Write one frame; returns false when the client is unreachable (the
+    /// connection is then marked dead and closed, and every later send is
+    /// a cheap no-op false).
+    pub fn send(&self, frame: &ServerFrame) -> bool {
+        if !self.is_alive() {
+            return false;
+        }
+        let line = frame.encode();
+        let mut w = self.writer.lock().expect("conn writer lock");
+        match std::io::Write::write_all(&mut *w, line.as_bytes()) {
+            Ok(()) => true,
+            Err(_) => {
+                self.alive.store(false, Ordering::SeqCst);
+                let _ = w.shutdown(Shutdown::Both);
+                false
+            }
+        }
+    }
+
+    /// Mark dead and close both halves; the reader thread unblocks on the
+    /// resulting EOF/error. Idempotent.
+    pub fn close(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+        let w = self.writer.lock().expect("conn writer lock");
+        let _ = w.shutdown(Shutdown::Both);
+    }
+}

@@ -1,0 +1,26 @@
+//! The network front door: serve packed sparse checkpoints over TCP with
+//! per-token streaming, cancellation on disconnect, and 429-style
+//! backpressure — the ROADMAP's "network front door with streaming
+//! responses" built from `std::net` alone (no async runtime, no new
+//! dependencies).
+//!
+//! * [`protocol`] — the framed newline-delimited-JSON wire format
+//!   ([`ClientFrame`] / [`ServerFrame`]) and the read-boundary-proof
+//!   [`FrameDecoder`].
+//! * [`conn`] — per-connection shared state ([`Conn`]): a locked writer
+//!   whose failed writes become cancellations.
+//! * [`server`] — [`NetServer`]: the listener, per-connection reader
+//!   threads, and the `NetSource` adapter that feeds the engine's
+//!   step-driven intake loop.
+//! * [`client`] — [`run_client`]: the loopback client the CLI, the
+//!   net-parity test, and the CI smoke job drive.
+
+pub mod client;
+pub mod conn;
+pub mod protocol;
+pub mod server;
+
+pub use client::{run_client, send_shutdown, ClientOptions, ClientOutcome, ClientRequest};
+pub use conn::Conn;
+pub use protocol::{ClientFrame, FrameDecoder, ServerFrame, MAX_FRAME_BYTES};
+pub use server::{NetServer, NetServerOptions};

@@ -1,0 +1,442 @@
+//! The wire protocol: framed newline-delimited JSON, one object per
+//! `\n`-terminated line, discriminated by a `"reason"` field — the same
+//! shape as the JSONL event stream (`api/events.rs`), so a client that can
+//! read the event log can read the wire.
+//!
+//! Frame grammar (client → server):
+//!
+//! ```text
+//! {"reason":"request","prompt":[1,2,3],"max_new_tokens":8,"seed":7,"tag":"a"}
+//! {"reason":"cancel","id":4}
+//! {"reason":"shutdown"}
+//! ```
+//!
+//! and server → client:
+//!
+//! ```text
+//! {"reason":"hello","config":"tiny","vocab":101}
+//! {"reason":"accepted","id":4,"tag":"a"}
+//! {"reason":"token","id":4,"index":0,"token":17}
+//! {"reason":"finished","id":4,"tokens":8,"ttft_ms":1.9,"gap_p50_ms":0.4,"gap_p95_ms":0.9}
+//! {"reason":"rejected","id":5,"queue":64,"cap":64,"message":"..."}
+//! {"reason":"cancelled","id":4,"tokens":3}
+//! {"reason":"error","message":"..."}
+//! ```
+//!
+//! `tag` is an optional client-chosen correlation string echoed on
+//! `accepted`/`rejected` (the server assigns `id`s). Integer fields ride
+//! through JSON numbers (f64), so ids and seeds are capped at 2^53 — the
+//! codec rejects larger values instead of silently rounding them.
+//!
+//! [`FrameDecoder`] reassembles lines from arbitrary read boundaries and
+//! enforces [`MAX_FRAME_BYTES`]; any malformed input (overlong line,
+//! invalid UTF-8, bad JSON, unknown reason, missing or out-of-range
+//! fields) surfaces as a protocol `Err` — never a panic — which the
+//! connection layer answers with an `error` frame before closing
+//! (`tests/net_codec_props.rs` pins both properties).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Hard per-frame ceiling: a line longer than this (with no newline in
+/// sight) is a protocol error, bounding what a misbehaving peer can make
+/// the decoder buffer.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Largest integer JSON numbers carry exactly (2^53).
+const MAX_SAFE_INT: u64 = 1 << 53;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn num(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64> {
+    let n = v.get(key)?.as_f64()?;
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > MAX_SAFE_INT as f64 {
+        bail!("field {key:?} is not an integer in [0, 2^53]: {n}");
+    }
+    Ok(n as u64)
+}
+
+fn get_token(v: &Json) -> Result<i32> {
+    let n = v.as_f64()?;
+    if !n.is_finite() || n.fract() != 0.0 || n < i32::MIN as f64 || n > i32::MAX as f64 {
+        bail!("token id is not an i32: {n}");
+    }
+    Ok(n as i32)
+}
+
+fn opt_tag(v: &Json) -> Result<Option<String>> {
+    match v.opt("tag") {
+        Some(t) => Ok(Some(t.as_str()?.to_string())),
+        None => Ok(None),
+    }
+}
+
+fn tag_entry(entries: &mut Vec<(&str, Json)>, tag: &Option<String>) {
+    if let Some(t) = tag {
+        entries.push(("tag", Json::Str(t.clone())));
+    }
+}
+
+/// What a client may send.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientFrame {
+    /// submit one inference request; the server replies `accepted` (with
+    /// the assigned id) or `rejected`
+    Request { tag: Option<String>, prompt: Vec<i32>, max_new_tokens: usize, seed: u64 },
+    /// cancel a previously accepted request of this connection
+    Cancel { id: u64 },
+    /// graceful drain: stop admitting, finish in-flight requests, exit
+    Shutdown,
+}
+
+impl ClientFrame {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClientFrame::Request { tag, prompt, max_new_tokens, seed } => {
+                let mut entries = vec![
+                    ("reason", Json::Str("request".into())),
+                    (
+                        "prompt",
+                        Json::Arr(prompt.iter().map(|t| Json::Num(*t as f64)).collect()),
+                    ),
+                    ("max_new_tokens", num(*max_new_tokens as u64)),
+                    ("seed", num(*seed)),
+                ];
+                tag_entry(&mut entries, tag);
+                obj(entries)
+            }
+            ClientFrame::Cancel { id } => {
+                obj(vec![("reason", Json::Str("cancel".into())), ("id", num(*id))])
+            }
+            ClientFrame::Shutdown => obj(vec![("reason", Json::Str("shutdown".into()))]),
+        }
+    }
+
+    /// One wire line, newline-terminated.
+    pub fn encode(&self) -> String {
+        let mut s = self.to_json().to_string_compact();
+        s.push('\n');
+        s
+    }
+
+    pub fn parse(line: &str) -> Result<ClientFrame> {
+        let v = Json::parse(line).map_err(|e| anyhow!("malformed frame: {e}"))?;
+        let reason = v.get("reason")?.as_str()?.to_string();
+        match reason.as_str() {
+            "request" => {
+                let prompt = v
+                    .get("prompt")?
+                    .as_arr()?
+                    .iter()
+                    .map(get_token)
+                    .collect::<Result<Vec<i32>>>()?;
+                let max_new_tokens = get_u64(&v, "max_new_tokens")? as usize;
+                if max_new_tokens == 0 {
+                    bail!("max_new_tokens must be positive");
+                }
+                let seed = match v.opt("seed") {
+                    Some(_) => get_u64(&v, "seed")?,
+                    None => 0,
+                };
+                Ok(ClientFrame::Request { tag: opt_tag(&v)?, prompt, max_new_tokens, seed })
+            }
+            "cancel" => Ok(ClientFrame::Cancel { id: get_u64(&v, "id")? }),
+            "shutdown" => Ok(ClientFrame::Shutdown),
+            other => bail!("unknown client frame reason {other:?}"),
+        }
+    }
+}
+
+/// What the server sends back.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerFrame {
+    /// greeting on connect: which packed config is being served and its
+    /// vocabulary size (prompt token ids must be in `0..vocab`)
+    Hello { config: String, vocab: usize },
+    /// the request entered the bounded queue under the assigned id
+    Accepted { id: u64, tag: Option<String> },
+    /// one generated token, streamed as the engine samples it; `index` is
+    /// the token's position in the request's stream (0-based)
+    Token { id: u64, index: usize, token: i32 },
+    /// the request retired with its full budget; latency profile attached
+    Finished { id: u64, tokens: usize, ttft_ms: f64, gap_p50_ms: f64, gap_p95_ms: f64 },
+    /// the bounded queue was full (429 semantics) or the server is
+    /// draining — the request was shed, not blocked
+    Rejected { id: u64, tag: Option<String>, queue: usize, cap: usize, message: String },
+    /// the request retired early (cancel frame or disconnect) with
+    /// `tokens` already streamed
+    Cancelled { id: u64, tokens: usize },
+    /// protocol violation; the server closes the connection after this
+    Error { message: String },
+}
+
+impl ServerFrame {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServerFrame::Hello { config, vocab } => obj(vec![
+                ("reason", Json::Str("hello".into())),
+                ("config", Json::Str(config.clone())),
+                ("vocab", num(*vocab as u64)),
+            ]),
+            ServerFrame::Accepted { id, tag } => {
+                let mut entries =
+                    vec![("reason", Json::Str("accepted".into())), ("id", num(*id))];
+                tag_entry(&mut entries, tag);
+                obj(entries)
+            }
+            ServerFrame::Token { id, index, token } => obj(vec![
+                ("reason", Json::Str("token".into())),
+                ("id", num(*id)),
+                ("index", num(*index as u64)),
+                ("token", Json::Num(*token as f64)),
+            ]),
+            ServerFrame::Finished { id, tokens, ttft_ms, gap_p50_ms, gap_p95_ms } => obj(vec![
+                ("reason", Json::Str("finished".into())),
+                ("id", num(*id)),
+                ("tokens", num(*tokens as u64)),
+                ("ttft_ms", Json::Num(*ttft_ms)),
+                ("gap_p50_ms", Json::Num(*gap_p50_ms)),
+                ("gap_p95_ms", Json::Num(*gap_p95_ms)),
+            ]),
+            ServerFrame::Rejected { id, tag, queue, cap, message } => {
+                let mut entries = vec![
+                    ("reason", Json::Str("rejected".into())),
+                    ("id", num(*id)),
+                    ("queue", num(*queue as u64)),
+                    ("cap", num(*cap as u64)),
+                    ("message", Json::Str(message.clone())),
+                ];
+                tag_entry(&mut entries, tag);
+                obj(entries)
+            }
+            ServerFrame::Cancelled { id, tokens } => obj(vec![
+                ("reason", Json::Str("cancelled".into())),
+                ("id", num(*id)),
+                ("tokens", num(*tokens as u64)),
+            ]),
+            ServerFrame::Error { message } => obj(vec![
+                ("reason", Json::Str("error".into())),
+                ("message", Json::Str(message.clone())),
+            ]),
+        }
+    }
+
+    /// One wire line, newline-terminated.
+    pub fn encode(&self) -> String {
+        let mut s = self.to_json().to_string_compact();
+        s.push('\n');
+        s
+    }
+
+    pub fn parse(line: &str) -> Result<ServerFrame> {
+        let v = Json::parse(line).map_err(|e| anyhow!("malformed frame: {e}"))?;
+        let reason = v.get("reason")?.as_str()?.to_string();
+        match reason.as_str() {
+            "hello" => Ok(ServerFrame::Hello {
+                config: v.get("config")?.as_str()?.to_string(),
+                vocab: get_u64(&v, "vocab")? as usize,
+            }),
+            "accepted" => {
+                Ok(ServerFrame::Accepted { id: get_u64(&v, "id")?, tag: opt_tag(&v)? })
+            }
+            "token" => Ok(ServerFrame::Token {
+                id: get_u64(&v, "id")?,
+                index: get_u64(&v, "index")? as usize,
+                token: get_token(v.get("token")?)?,
+            }),
+            "finished" => Ok(ServerFrame::Finished {
+                id: get_u64(&v, "id")?,
+                tokens: get_u64(&v, "tokens")? as usize,
+                ttft_ms: v.get("ttft_ms")?.as_f64()?,
+                gap_p50_ms: v.get("gap_p50_ms")?.as_f64()?,
+                gap_p95_ms: v.get("gap_p95_ms")?.as_f64()?,
+            }),
+            "rejected" => Ok(ServerFrame::Rejected {
+                id: get_u64(&v, "id")?,
+                tag: opt_tag(&v)?,
+                queue: get_u64(&v, "queue")? as usize,
+                cap: get_u64(&v, "cap")? as usize,
+                message: v.get("message")?.as_str()?.to_string(),
+            }),
+            "cancelled" => Ok(ServerFrame::Cancelled {
+                id: get_u64(&v, "id")?,
+                tokens: get_u64(&v, "tokens")? as usize,
+            }),
+            "error" => {
+                Ok(ServerFrame::Error { message: v.get("message")?.as_str()?.to_string() })
+            }
+            other => bail!("unknown server frame reason {other:?}"),
+        }
+    }
+}
+
+/// Reassembles newline-delimited frames from arbitrary read boundaries: a
+/// TCP read may deliver half a frame or three and a half, so the decoder
+/// buffers bytes and yields exactly the complete lines. Blank lines are
+/// tolerated (keep-alive friendly) and a trailing `\r` is stripped so CRLF
+/// peers work. The partial-line buffer is capped at [`MAX_FRAME_BYTES`].
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Bytes buffered waiting for their newline.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Feed freshly read bytes; returns the complete lines they finish
+    /// (possibly none). Errors on an overlong frame or invalid UTF-8 —
+    /// the caller should answer with an `error` frame and close.
+    pub fn push(&mut self, bytes: &[u8]) -> Result<Vec<String>> {
+        self.buf.extend_from_slice(bytes);
+        let mut lines = Vec::new();
+        while let Some(nl) = self.buf.iter().position(|&b| b == b'\n') {
+            let mut line: Vec<u8> = self.buf.drain(..=nl).collect();
+            line.pop(); // the newline
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            if line.is_empty() {
+                continue;
+            }
+            let s = String::from_utf8(line)
+                .map_err(|_| anyhow!("frame is not valid UTF-8"))?;
+            lines.push(s);
+        }
+        if self.buf.len() > MAX_FRAME_BYTES {
+            bail!(
+                "frame exceeds {} bytes without a newline ({} buffered)",
+                MAX_FRAME_BYTES,
+                self.buf.len()
+            );
+        }
+        Ok(lines)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_frames_roundtrip() {
+        let frames = vec![
+            ClientFrame::Request {
+                tag: Some("a".into()),
+                prompt: vec![0, 5, -0, 99],
+                max_new_tokens: 8,
+                seed: 1234567,
+            },
+            ClientFrame::Request { tag: None, prompt: vec![], max_new_tokens: 1, seed: 0 },
+            ClientFrame::Cancel { id: 42 },
+            ClientFrame::Shutdown,
+        ];
+        for f in frames {
+            let line = f.encode();
+            assert!(line.ends_with('\n') && !line[..line.len() - 1].contains('\n'));
+            assert_eq!(ClientFrame::parse(line.trim_end()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn server_frames_roundtrip() {
+        let frames = vec![
+            ServerFrame::Hello { config: "tiny".into(), vocab: 101 },
+            ServerFrame::Accepted { id: 3, tag: Some("x".into()) },
+            ServerFrame::Accepted { id: 4, tag: None },
+            ServerFrame::Token { id: 3, index: 0, token: -7 },
+            ServerFrame::Finished {
+                id: 3,
+                tokens: 8,
+                ttft_ms: 1.5,
+                gap_p50_ms: 0.25,
+                gap_p95_ms: 0.75,
+            },
+            ServerFrame::Rejected {
+                id: 9,
+                tag: None,
+                queue: 64,
+                cap: 64,
+                message: "request queue full".into(),
+            },
+            ServerFrame::Cancelled { id: 3, tokens: 2 },
+            ServerFrame::Error { message: "bad \"frame\"\n".into() },
+        ];
+        for f in frames {
+            assert_eq!(ServerFrame::parse(f.encode().trim_end()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn decoder_reassembles_split_frames() {
+        let wire = format!(
+            "{}{}\r\n\n{}",
+            ClientFrame::Shutdown.encode(),
+            r#"{"reason":"cancel","id":7}"#,
+            ClientFrame::Cancel { id: 8 }.encode()
+        );
+        // feed one byte at a time: every boundary is exercised
+        let mut dec = FrameDecoder::new();
+        let mut lines = Vec::new();
+        for b in wire.as_bytes() {
+            lines.extend(dec.push(&[*b]).unwrap());
+        }
+        assert_eq!(lines.len(), 3);
+        assert_eq!(ClientFrame::parse(&lines[0]).unwrap(), ClientFrame::Shutdown);
+        assert_eq!(ClientFrame::parse(&lines[1]).unwrap(), ClientFrame::Cancel { id: 7 });
+        assert_eq!(ClientFrame::parse(&lines[2]).unwrap(), ClientFrame::Cancel { id: 8 });
+        assert_eq!(dec.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn malformed_frames_error_never_panic() {
+        for bad in [
+            "",
+            "{",
+            "nul",
+            "[]",
+            r#"{"reason":"nope"}"#,
+            r#"{"reason":"cancel"}"#,
+            r#"{"reason":"cancel","id":-1}"#,
+            r#"{"reason":"cancel","id":3.5}"#,
+            r#"{"reason":"request","prompt":[1e40],"max_new_tokens":1}"#,
+            r#"{"reason":"request","prompt":[0],"max_new_tokens":0}"#,
+            r#"{"reason":"request","prompt":"hi","max_new_tokens":1}"#,
+            r#"{"reason":"token","id":0,"index":0,"token":null}"#,
+        ] {
+            assert!(ClientFrame::parse(bad).is_err(), "client accepted {bad:?}");
+            assert!(ServerFrame::parse(bad).is_err(), "server accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_frame_is_a_protocol_error() {
+        let mut dec = FrameDecoder::new();
+        let chunk = vec![b'x'; MAX_FRAME_BYTES / 4];
+        for _ in 0..4 {
+            assert!(dec.push(&chunk).is_ok());
+        }
+        assert!(dec.push(b"x").is_err(), "past the cap without a newline");
+    }
+
+    #[test]
+    fn non_utf8_frame_is_a_protocol_error() {
+        let mut dec = FrameDecoder::new();
+        assert!(dec.push(&[0xff, 0xfe, b'\n']).is_err());
+    }
+}

@@ -1,0 +1,509 @@
+//! The TCP front door: a `std::net` listener whose accepted connections
+//! each get a reader thread parsing client frames into a shared intake
+//! queue, and a [`NetSource`] that feeds that intake to the engine's
+//! step-driven loop on the caller's thread.
+//!
+//! Threading model (no async runtime — blocking I/O and scoped lifetimes):
+//!
+//! * **accept thread** — nonblocking `accept` polled every few ms (so it
+//!   can observe shutdown; `std::net` has no way to unblock a blocking
+//!   accept), greets each client with a `hello` frame and spawns its
+//!   reader.
+//! * **reader threads** (one per connection) — blocking reads with a
+//!   short timeout, frames decoded via [`FrameDecoder`]; `request` frames
+//!   are validated, assigned an id, and pushed to the intake; `cancel`
+//!   and `shutdown` flip intake flags; EOF / read errors / protocol
+//!   violations mark the connection dead and register a disconnect.
+//! * **engine thread** (the `serve` caller) — [`ServeEngine::run_source`]
+//!   drains the intake between batch steps and streams `token` /
+//!   `finished` / `cancelled` / `rejected` frames back through each
+//!   connection's locked writer.
+//!
+//! Backpressure is 429-shaped: the reader never blocks a client on the
+//! bounded queue — overflow is answered with a `rejected` frame by the
+//! engine the moment it polls the submission. Graceful drain: a
+//! `shutdown` frame stops admission (readers reject new requests on
+//! arrival), in-flight requests finish, the engine exits, and every
+//! thread is joined before [`NetServer::serve`] returns — the budget
+//! invariant (`cache_bytes_in_use == 0`) holds even when clients vanished
+//! mid-stream. There is no SIGINT hook: `std` exposes no signal API and
+//! the build is dependency-free by construction, so process signals kill
+//! the process the usual way and graceful drain is the `shutdown` frame's
+//! job (see DESIGN.md).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::serve::engine::{
+    EngineOptions, EngineOutcome, FinishedRequest, RequestSource, ServeEngine, ServeEvent,
+};
+use crate::serve::model::SparseModel;
+use crate::serve::net::conn::Conn;
+use crate::serve::net::protocol::{ClientFrame, FrameDecoder, ServerFrame};
+use crate::serve::scheduler::ServeRequest;
+
+/// Front-door knobs (the engine's own knobs stay in [`EngineOptions`]).
+#[derive(Clone, Debug)]
+pub struct NetServerOptions {
+    /// config label echoed in the `hello` frame
+    pub config: String,
+    /// vocabulary size: prompts are validated against it on arrival
+    pub vocab: usize,
+    /// how long a frame write may block before the client counts as gone
+    pub write_timeout: Duration,
+    /// how long an idle engine step parks on the intake condvar
+    pub idle_wait: Duration,
+}
+
+impl NetServerOptions {
+    pub fn new(config: String, vocab: usize) -> NetServerOptions {
+        NetServerOptions {
+            config,
+            vocab,
+            write_timeout: Duration::from_secs(5),
+            idle_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One validated client submission waiting for the engine to poll it.
+struct Submission {
+    req: ServeRequest,
+    tag: Option<String>,
+    conn: Arc<Conn>,
+}
+
+/// Everything the reader threads and the engine share.
+struct IntakeState {
+    pending: VecDeque<Submission>,
+    /// (connection id, request id) cancel frames — ownership is checked
+    /// against the submitting connection before they reach the engine
+    cancels: Vec<(u64, u64)>,
+    /// connections that went away; every live request they own cancels
+    dead_conns: Vec<u64>,
+    /// stop admitting: readers reject new requests on arrival
+    shutdown: bool,
+    next_id: u64,
+    /// live connections, for closing on drain (readers prune their own)
+    conns: Vec<Arc<Conn>>,
+}
+
+struct Intake {
+    state: Mutex<IntakeState>,
+    cv: Condvar,
+}
+
+impl Intake {
+    fn new() -> Intake {
+        Intake {
+            state: Mutex::new(IntakeState {
+                pending: VecDeque::new(),
+                cancels: Vec::new(),
+                dead_conns: Vec::new(),
+                shutdown: false,
+                next_id: 0,
+                conns: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// The network as a [`RequestSource`]: live submissions polled between
+/// batch steps, disconnects surfaced as cancellation, per-token streaming
+/// through each request's connection.
+struct NetSource {
+    intake: Arc<Intake>,
+    idle_wait: Duration,
+    /// request id → (owning connection, client tag)
+    live: HashMap<u64, (Arc<Conn>, Option<String>)>,
+}
+
+impl NetSource {
+    fn new(intake: Arc<Intake>, idle_wait: Duration) -> NetSource {
+        NetSource { intake, idle_wait, live: HashMap::new() }
+    }
+}
+
+impl RequestSource for NetSource {
+    fn poll(&mut self, _step: usize, _queue_free: usize) -> Vec<ServeRequest> {
+        // the network cannot hold remote submissions back, so everything
+        // pending is handed over and the engine sheds what does not fit
+        let subs: Vec<Submission> = {
+            let mut st = self.intake.state.lock().expect("intake lock");
+            st.pending.drain(..).collect()
+        };
+        subs.into_iter()
+            .map(|s| {
+                self.live.insert(s.req.id, (s.conn, s.tag));
+                s.req
+            })
+            .collect()
+    }
+
+    fn take_cancelled(&mut self, _step: usize) -> Vec<u64> {
+        let (cancels, dead) = {
+            let mut st = self.intake.state.lock().expect("intake lock");
+            (std::mem::take(&mut st.cancels), std::mem::take(&mut st.dead_conns))
+        };
+        let mut out = Vec::new();
+        for (conn_id, id) in cancels {
+            if let Some((conn, _)) = self.live.get(&id) {
+                if conn.id == conn_id {
+                    out.push(id);
+                }
+            }
+        }
+        for conn_id in dead {
+            out.extend(
+                self.live
+                    .iter()
+                    .filter(|(_, (c, _))| c.id == conn_id)
+                    .map(|(id, _)| *id),
+            );
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn closed(&self) -> bool {
+        let st = self.intake.state.lock().expect("intake lock");
+        st.shutdown && st.pending.is_empty()
+    }
+
+    fn accepted(&mut self, req: &ServeRequest) {
+        if let Some((conn, tag)) = self.live.get(&req.id) {
+            conn.send(&ServerFrame::Accepted { id: req.id, tag: tag.clone() });
+        }
+    }
+
+    fn rejected(&mut self, req: &ServeRequest, queue: usize, cap: usize) {
+        if let Some((conn, tag)) = self.live.remove(&req.id) {
+            conn.send(&ServerFrame::Rejected {
+                id: req.id,
+                tag,
+                queue,
+                cap,
+                message: format!("request queue full ({queue} of {cap})"),
+            });
+        }
+    }
+
+    fn token(&mut self, id: u64, index: usize, token: i32) -> bool {
+        match self.live.get(&id) {
+            Some((conn, _)) => conn.send(&ServerFrame::Token { id, index, token }),
+            None => true,
+        }
+    }
+
+    fn finished(&mut self, fin: &FinishedRequest) {
+        if let Some((conn, _)) = self.live.remove(&fin.id) {
+            conn.send(&ServerFrame::Finished {
+                id: fin.id,
+                tokens: fin.tokens.len(),
+                ttft_ms: fin.ttft_secs * 1e3,
+                gap_p50_ms: fin.gap_p50_secs * 1e3,
+                gap_p95_ms: fin.gap_p95_secs * 1e3,
+            });
+        }
+    }
+
+    fn cancelled(&mut self, id: u64, tokens: usize) {
+        if let Some((conn, _)) = self.live.remove(&id) {
+            conn.send(&ServerFrame::Cancelled { id, tokens });
+        }
+    }
+
+    fn idle(&mut self) {
+        let st = self.intake.state.lock().expect("intake lock");
+        let quiet = st.pending.is_empty()
+            && st.cancels.is_empty()
+            && st.dead_conns.is_empty()
+            && !st.shutdown;
+        if quiet {
+            // parked until a reader notifies or the wait elapses — the
+            // idle engine never busy-spins on an empty intake
+            let _ = self.intake.cv.wait_timeout(st, self.idle_wait).expect("intake lock");
+        }
+    }
+}
+
+/// A bound listener ready to serve one engine run.
+pub struct NetServer {
+    listener: TcpListener,
+    local: SocketAddr,
+    intake: Arc<Intake>,
+    opts: NetServerOptions,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port — read the
+    /// actual address back with [`NetServer::local_addr`]).
+    pub fn bind(addr: &str, opts: NetServerOptions) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        Ok(NetServer { listener, local, intake: Arc::new(Intake::new()), opts })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Accept clients and run the engine until a `shutdown` frame drains
+    /// it. Returns with every spawned thread joined and every connection
+    /// closed.
+    pub fn serve(
+        &self,
+        model: &SparseModel,
+        engine_opts: EngineOptions,
+        on_event: &mut dyn FnMut(&ServeEvent),
+    ) -> Result<EngineOutcome> {
+        self.listener.set_nonblocking(true).context("nonblocking listener")?;
+        let done = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let listener = self.listener.try_clone().context("cloning listener")?;
+            let intake = self.intake.clone();
+            let opts = self.opts.clone();
+            let done = done.clone();
+            std::thread::spawn(move || accept_loop(listener, intake, opts, done))
+        };
+
+        let mut source = NetSource::new(self.intake.clone(), self.opts.idle_wait);
+        let outcome = ServeEngine::new(model, engine_opts).run_source(&mut source, on_event);
+
+        // drain epilogue: stop accepting, close every connection so its
+        // reader unblocks, and join the whole thread tree
+        done.store(true, Ordering::SeqCst);
+        let conns: Vec<Arc<Conn>> = {
+            let mut st = self.intake.state.lock().expect("intake lock");
+            st.shutdown = true;
+            st.conns.clone()
+        };
+        for c in &conns {
+            c.close();
+        }
+        accept_thread.join().expect("accept thread panicked");
+        outcome
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    intake: Arc<Intake>,
+    opts: NetServerOptions,
+    done: Arc<AtomicBool>,
+) {
+    let mut readers = Vec::new();
+    let mut next_conn = 0u64;
+    while !done.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // accepted sockets do not inherit the listener's
+                // nonblocking flag on every platform — pin both halves to
+                // the blocking discipline the reader expects
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+                let _ = stream.set_write_timeout(Some(opts.write_timeout));
+                let Ok(writer) = stream.try_clone() else { continue };
+                let conn = Arc::new(Conn::new(next_conn, writer));
+                next_conn += 1;
+                if !conn.send(&ServerFrame::Hello {
+                    config: opts.config.clone(),
+                    vocab: opts.vocab,
+                }) {
+                    continue; // died during the greeting
+                }
+                intake.state.lock().expect("intake lock").conns.push(conn.clone());
+                let intake = intake.clone();
+                let vocab = opts.vocab;
+                readers.push(std::thread::spawn(move || {
+                    reader_loop(conn, stream, intake, vocab)
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    for r in readers {
+        let _ = r.join();
+    }
+}
+
+/// Parse one connection's inbound bytes until EOF, error, protocol
+/// violation, or server drain; then mark the connection dead and register
+/// the disconnect so the engine cancels whatever the client still owned.
+fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream, intake: Arc<Intake>, vocab: usize) {
+    let mut dec = FrameDecoder::new();
+    let mut buf = [0u8; 4096];
+    'read: while conn.is_alive() {
+        let n = match stream.read(&mut buf) {
+            Ok(0) => break, // EOF: client closed its half
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue; // timeout tick: re-check liveness
+            }
+            Err(_) => break,
+        };
+        let lines = match dec.push(&buf[..n]) {
+            Ok(lines) => lines,
+            Err(e) => {
+                conn.send(&ServerFrame::Error { message: format!("{e}") });
+                break;
+            }
+        };
+        for line in lines {
+            let frame = match ClientFrame::parse(&line) {
+                Ok(f) => f,
+                Err(e) => {
+                    conn.send(&ServerFrame::Error { message: format!("{e}") });
+                    break 'read;
+                }
+            };
+            if !handle_frame(&conn, &intake, vocab, frame) {
+                break 'read;
+            }
+        }
+    }
+    conn.close();
+    {
+        let mut st = intake.state.lock().expect("intake lock");
+        st.dead_conns.push(conn.id);
+        st.conns.retain(|c| c.id != conn.id);
+    }
+    intake.cv.notify_one();
+}
+
+/// Dispatch one parsed frame; returns false when the connection must
+/// close (protocol violation).
+fn handle_frame(conn: &Arc<Conn>, intake: &Arc<Intake>, vocab: usize, frame: ClientFrame) -> bool {
+    match frame {
+        ClientFrame::Request { tag, prompt, max_new_tokens, seed } => {
+            if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+                conn.send(&ServerFrame::Error {
+                    message: format!("prompt token {t} outside the served vocab 0..{vocab}"),
+                });
+                return false;
+            }
+            let reply = {
+                let mut st = intake.state.lock().expect("intake lock");
+                let id = st.next_id;
+                st.next_id += 1;
+                if st.shutdown {
+                    Some(ServerFrame::Rejected {
+                        id,
+                        tag,
+                        queue: 0,
+                        cap: 0,
+                        message: "server is draining; request not admitted".into(),
+                    })
+                } else {
+                    st.pending.push_back(Submission {
+                        req: ServeRequest { id, prompt, max_new_tokens, seed },
+                        tag,
+                        conn: conn.clone(),
+                    });
+                    None
+                }
+            };
+            match reply {
+                Some(r) => {
+                    conn.send(&r);
+                }
+                None => intake.cv.notify_one(),
+            }
+            true
+        }
+        ClientFrame::Cancel { id } => {
+            intake.state.lock().expect("intake lock").cancels.push((conn.id, id));
+            intake.cv.notify_one();
+            true
+        }
+        ClientFrame::Shutdown => {
+            intake.state.lock().expect("intake lock").shutdown = true;
+            intake.cv.notify_all();
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelCfg;
+    use crate::model::init::init_params;
+    use crate::sparse::PackPolicy;
+
+    fn model() -> SparseModel {
+        let cfg = ModelCfg::from_dims("net-test", 8, 1, 2, 1, 1, 11, 4);
+        SparseModel::from_params(&init_params(&cfg, 0), &PackPolicy::default()).unwrap()
+    }
+
+    #[test]
+    fn shutdown_frame_drains_an_idle_server() {
+        let m = model();
+        let srv = NetServer::bind("127.0.0.1:0", NetServerOptions::new("net-test".into(), 11))
+            .unwrap();
+        let addr = srv.local_addr();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            // wait for the greeting so the reader thread is certainly up
+            let mut dec = FrameDecoder::new();
+            let mut buf = [0u8; 256];
+            let hello = loop {
+                let n = stream_read(&mut s, &mut buf);
+                if let Some(line) = dec.push(&buf[..n]).unwrap().into_iter().next() {
+                    break ServerFrame::parse(&line).unwrap();
+                }
+            };
+            assert!(matches!(hello, ServerFrame::Hello { vocab: 11, .. }));
+            std::io::Write::write_all(&mut s, ClientFrame::Shutdown.encode().as_bytes())
+                .unwrap();
+        });
+        let mut drained = 0;
+        let out = srv
+            .serve(&m, EngineOptions { temperature: 0.0, top_k: 0, ..Default::default() }, &mut |e| {
+                if matches!(e, ServeEvent::Drained { .. }) {
+                    drained += 1;
+                }
+            })
+            .unwrap();
+        client.join().unwrap();
+        assert_eq!(out.finished.len(), 0);
+        assert_eq!(out.cancelled, 0);
+        assert_eq!(drained, 1);
+        assert_eq!(out.cache_bytes_in_use, 0);
+    }
+
+    fn stream_read(s: &mut TcpStream, buf: &mut [u8]) -> usize {
+        loop {
+            match s.read(buf) {
+                Ok(n) => return n,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+                Err(e) => panic!("read failed: {e}"),
+            }
+        }
+    }
+}

@@ -118,6 +118,24 @@ impl Scheduler {
         self.queue.len()
     }
 
+    /// Remaining bounded-queue capacity — what the engine hands its
+    /// request source as the backpressure signal each step.
+    pub fn free_capacity(&self) -> usize {
+        self.policy.queue_cap.saturating_sub(self.queue.len())
+    }
+
+    /// Remove a still-queued request (its client cancelled or disconnected
+    /// before admission). Returns whether the id was found; in-flight and
+    /// already-retired ids are the engine's business, not the queue's.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(i) = self.queue.iter().position(|r| r.id == id) {
+            self.queue.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
     /// Whether the bounded queue can accept another request right now.
     pub fn has_capacity(&self) -> bool {
         self.queue.len() < self.policy.queue_cap
@@ -186,6 +204,23 @@ mod tests {
         s.submit(req(1)).unwrap();
         assert!(s.submit(req(2)).is_err());
         assert_eq!(s.queue_len(), 2);
+    }
+
+    #[test]
+    fn cancel_removes_queued_request_and_frees_capacity() {
+        let mut s = Scheduler::new(policy(2, 0, 2));
+        s.submit(req(0)).unwrap();
+        s.submit(req(1)).unwrap();
+        assert_eq!(s.free_capacity(), 0);
+        assert!(s.cancel(0), "queued id is removed");
+        assert!(!s.cancel(0), "second cancel of the same id is a no-op");
+        assert!(!s.cancel(9), "unknown id is a no-op");
+        assert_eq!(s.queue_len(), 1);
+        assert_eq!(s.free_capacity(), 1);
+        // the freed slot is usable again and FIFO order holds for the rest
+        s.submit(req(2)).unwrap();
+        let batch = s.admit(1, &StepLimits::unlimited());
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
     }
 
     #[test]

@@ -18,18 +18,39 @@ pub const TOKEN_TILE: usize = 256;
 /// thread spawn/join would rival the kernel work itself.
 const MIN_PARALLEL_OUT: usize = 8192;
 
+/// Parse a `SPARSEGPT_THREADS` value: a worker count (0 is treated as 1,
+/// matching the long-documented "0 means default" behavior). Anything
+/// unparseable is an explicit error — a typo like `SPARSEGPT_THREADS=eight`
+/// must not silently run single-threaded while the operator believes the
+/// kernels are parallel.
+pub fn parse_worker_count(raw: &str) -> Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(n) => Ok(n.max(1)),
+        Err(_) => Err(format!(
+            "SPARSEGPT_THREADS={raw:?} is not a worker count (expected a \
+             non-negative integer; 0 selects the single-thread default)"
+        )),
+    }
+}
+
+/// Worker count from `SPARSEGPT_THREADS` with the error surfaced — the CLI
+/// calls this at startup so a typo'd value fails the run up front instead
+/// of panicking mid-decode.
+pub fn worker_count() -> Result<usize, String> {
+    match std::env::var("SPARSEGPT_THREADS") {
+        Ok(raw) => parse_worker_count(&raw),
+        Err(_) => Ok(1),
+    }
+}
+
 /// Worker count from `SPARSEGPT_THREADS` (default 1; 0 is treated as 1).
 /// Read once per process — the kernels sit in the decode hot loop and must
-/// not take the env lock per call.
+/// not take the env lock per call. Panics on an unparseable value (library
+/// callers who want the error instead should check [`worker_count`] first,
+/// as the CLI does at startup).
 pub fn num_threads() -> usize {
     static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *THREADS.get_or_init(|| {
-        std::env::var("SPARSEGPT_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .map(|n| n.max(1))
-            .unwrap_or(1)
-    })
+    *THREADS.get_or_init(|| worker_count().unwrap_or_else(|e| panic!("{e}")))
 }
 
 /// Run `tile(t0, y_rows)` for every token tile `[t0, t0 + tb)` of an output
@@ -127,6 +148,19 @@ mod tests {
     fn env_default_is_single_thread() {
         if std::env::var_os("SPARSEGPT_THREADS").is_none() {
             assert_eq!(num_threads(), 1);
+        }
+    }
+
+    #[test]
+    fn worker_count_parses_strictly() {
+        assert_eq!(parse_worker_count("4"), Ok(4));
+        assert_eq!(parse_worker_count(" 2 "), Ok(2));
+        // 0 keeps its documented "use the default" meaning
+        assert_eq!(parse_worker_count("0"), Ok(1));
+        // regression: these used to silently fall back to 1 thread
+        for bad in ["eight", "", "4x", "-2", "1.5"] {
+            let err = parse_worker_count(bad).unwrap_err();
+            assert!(err.contains("SPARSEGPT_THREADS"), "{bad:?} -> {err}");
         }
     }
 }

@@ -109,6 +109,40 @@ fn json_and_memory_sinks_agree_on_event_count() {
     }
 }
 
+/// The serve-side lifecycle events added for the TCP front door keep a
+/// byte-stable wire shape (both network and synthetic runs emit them).
+#[test]
+fn serve_lifecycle_events_serialize_stably() {
+    let cases = [
+        (
+            Event::RequestCancelled { id: 1, step: 9, tokens: 4 },
+            r#"{"id":1,"reason":"request-cancelled","step":9,"tokens":4}"#,
+        ),
+        (
+            Event::RequestRejected { id: 2, step: 9, queue: 64, cap: 64 },
+            r#"{"cap":64,"id":2,"queue":64,"reason":"request-rejected","step":9}"#,
+        ),
+        (
+            Event::ServeListening { addr: "127.0.0.1:7070".into() },
+            r#"{"addr":"127.0.0.1:7070","reason":"serve-listening"}"#,
+        ),
+        (
+            Event::EngineDrained {
+                steps: 20,
+                requests: 2,
+                tokens: 32,
+                tokens_per_sec: 64.0,
+                cancelled: 1,
+                cache_bytes_in_use: 0,
+            },
+            r#"{"cache_bytes_in_use":0,"cancelled":1,"reason":"engine-drained","requests":2,"steps":20,"tokens":32,"tokens_per_sec":64}"#,
+        ),
+    ];
+    for (ev, want) in cases {
+        assert_eq!(ev.to_json().to_string_compact(), want);
+    }
+}
+
 /// Non-finite values (a diverged perplexity) must stay valid JSON.
 #[test]
 fn non_finite_values_serialize_as_null() {

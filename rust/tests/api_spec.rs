@@ -121,6 +121,11 @@ fn job_spec_label_round_trip() {
         "serve/nano/sparsegpt-50%,fmt=qdense:3",
         "serve/medium/sparsegpt-50%,kv=off,chunk=1,cache-mb=4,prefill=256,fmt=qcsr:4,g=32",
         "serve/nano/sparsegpt-50%,fmt=csr",
+        "serve/nano/sparsegpt-50%,net=127.0.0.1:7070",
+        "serve/nano/sparsegpt-50%,net=0.0.0.0:0",
+        "serve/nano/sparsegpt-50%,cancel=1@3",
+        "serve/small/sparsegpt-2:4,cancel=0@2+3@7",
+        "serve/medium/sparsegpt-50%,kv=off,fmt=qcsr:4,net=127.0.0.1:9000,cancel=2@5",
     ] {
         let spec = JobSpec::parse(label).unwrap_or_else(|e| panic!("{label}: {e:#}"));
         assert_eq!(spec.label(), label, "label round trip for {label}");
@@ -167,6 +172,10 @@ fn job_spec_rejects_malformed() {
         "serve/nano/sparsegpt-50%,fmt=qcsr:9",
         "serve/nano/sparsegpt-50%,g=128",
         "serve/nano/sparsegpt-50%,fmt=dense,g=8",
+        "serve/nano/sparsegpt-50%,net=",
+        "serve/nano/sparsegpt-50%,cancel=1",
+        "serve/nano/sparsegpt-50%,cancel=x@3",
+        "serve/nano/sparsegpt-50%,cancel=1@",
         "gen-data/nano",
     ] {
         assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
@@ -191,6 +200,24 @@ fn serve_quant_format_labels_map_to_fields() {
         panic!("wrong kind");
     };
     assert_eq!(d.format, PackFormat::Auto);
+}
+
+#[test]
+fn serve_net_and_cancel_knob_labels_map_to_fields() {
+    let JobSpec::Serve(s) =
+        JobSpec::parse("serve/nano/sparsegpt-50%,net=127.0.0.1:7070,cancel=1@3+0@5").unwrap()
+    else {
+        panic!("wrong kind");
+    };
+    assert_eq!(s.listen.as_deref(), Some("127.0.0.1:7070"));
+    assert_eq!(s.cancel, vec![(1, 3), (0, 5)]);
+    // defaults: no net/cancel knobs means synthetic workload, no cancels
+    let JobSpec::Serve(d) = JobSpec::parse("serve/nano/sparsegpt-50%").unwrap() else {
+        panic!("wrong kind");
+    };
+    assert!(d.listen.is_none());
+    assert!(d.cancel.is_empty());
+    assert!(d.addr_file.is_none());
 }
 
 #[test]

@@ -1,0 +1,266 @@
+//! Hand-rolled property tests for the wire codec (seeded [`Rng`], no
+//! proptest dependency): arbitrarily generated frames round-trip through
+//! encode/parse bit-exactly, [`FrameDecoder`] reassembly is invariant to
+//! read boundaries (including splits inside multi-byte UTF-8 and CRLF
+//! endings), malformed or mutated input errors but never panics, the
+//! [`MAX_FRAME_BYTES`] cap holds under any chunking, and the canonical
+//! wire bytes (keys alphabetical, one `\n`-terminated line per frame)
+//! stay pinned.
+//!
+//! [`Rng`]: sparsegpt::util::prng::Rng
+
+use sparsegpt::serve::net::{ClientFrame, FrameDecoder, ServerFrame, MAX_FRAME_BYTES};
+use sparsegpt::util::prng::Rng;
+
+/// Largest integer JSON numbers carry exactly (2^53): ids and seeds on
+/// the wire are capped here by the protocol.
+const MAX_SAFE_INT: u64 = 1 << 53;
+
+/// Alphabet chosen to stress the string escaper and the byte-oriented
+/// decoder: quotes, backslashes, control characters, and multi-byte
+/// UTF-8 that read boundaries will split mid-character.
+const CHARS: [char; 12] = ['a', 'Z', '7', '_', ' ', '"', '\\', '\n', '\t', '{', 'é', '🦀'];
+
+fn arb_string(rng: &mut Rng) -> String {
+    (0..rng.below(8)).map(|_| CHARS[rng.below(CHARS.len())]).collect()
+}
+
+fn arb_tag(rng: &mut Rng) -> Option<String> {
+    if rng.below(2) == 0 {
+        None
+    } else {
+        Some(arb_string(rng))
+    }
+}
+
+fn arb_id(rng: &mut Rng) -> u64 {
+    rng.next_u64() & (MAX_SAFE_INT - 1)
+}
+
+/// Dyadic rationals: exactly representable in f64 and in their decimal
+/// printing, so round-trip equality is meaningful.
+fn arb_f64(rng: &mut Rng) -> f64 {
+    rng.below(1 << 20) as f64 / 1024.0
+}
+
+/// Any i32, including negatives (the protocol does not restrict tokens).
+fn arb_token(rng: &mut Rng) -> i32 {
+    rng.next_u64() as u32 as i32
+}
+
+fn arb_client_frame(rng: &mut Rng) -> ClientFrame {
+    match rng.below(4) {
+        0 | 1 => ClientFrame::Request {
+            tag: arb_tag(rng),
+            prompt: (0..rng.below(6)).map(|_| arb_token(rng)).collect(),
+            max_new_tokens: 1 + rng.below(4096),
+            seed: arb_id(rng),
+        },
+        2 => ClientFrame::Cancel { id: arb_id(rng) },
+        _ => ClientFrame::Shutdown,
+    }
+}
+
+fn arb_server_frame(rng: &mut Rng) -> ServerFrame {
+    match rng.below(7) {
+        0 => ServerFrame::Hello { config: arb_string(rng), vocab: rng.below(1 << 20) },
+        1 => ServerFrame::Accepted { id: arb_id(rng), tag: arb_tag(rng) },
+        2 => ServerFrame::Token {
+            id: arb_id(rng),
+            index: rng.below(1 << 20),
+            token: arb_token(rng),
+        },
+        3 => ServerFrame::Finished {
+            id: arb_id(rng),
+            tokens: rng.below(1 << 20),
+            ttft_ms: arb_f64(rng),
+            gap_p50_ms: arb_f64(rng),
+            gap_p95_ms: arb_f64(rng),
+        },
+        4 => ServerFrame::Rejected {
+            id: arb_id(rng),
+            tag: arb_tag(rng),
+            queue: rng.below(128),
+            cap: rng.below(128),
+            message: arb_string(rng),
+        },
+        5 => ServerFrame::Cancelled { id: arb_id(rng), tokens: rng.below(1 << 20) },
+        _ => ServerFrame::Error { message: arb_string(rng) },
+    }
+}
+
+#[test]
+fn arbitrary_frames_round_trip_exactly() {
+    let mut rng = Rng::new(0xC0DEC);
+    for i in 0..500 {
+        let c = arb_client_frame(&mut rng);
+        let line = c.encode();
+        assert!(
+            line.ends_with('\n') && !line[..line.len() - 1].contains('\n'),
+            "client frame {i}: embedded newline escaped the framing"
+        );
+        assert_eq!(ClientFrame::parse(line.trim_end()).unwrap(), c, "client frame {i}");
+        let s = arb_server_frame(&mut rng);
+        let line = s.encode();
+        assert!(
+            line.ends_with('\n') && !line[..line.len() - 1].contains('\n'),
+            "server frame {i}: embedded newline escaped the framing"
+        );
+        assert_eq!(ServerFrame::parse(line.trim_end()).unwrap(), s, "server frame {i}");
+    }
+}
+
+#[test]
+fn decoder_is_invariant_to_read_boundaries() {
+    let mut rng = Rng::new(0xB0B);
+    for trial in 0..40 {
+        // one wire session: mixed frames, some CRLF-terminated, blank
+        // keep-alive lines interleaved (all tolerated by the decoder)
+        let mut frames = Vec::new();
+        let mut wire = String::new();
+        for _ in 0..1 + rng.below(30) {
+            let f = arb_server_frame(&mut rng);
+            let enc = f.encode();
+            if rng.below(4) == 0 {
+                wire.push_str(enc.trim_end());
+                wire.push_str("\r\n");
+            } else {
+                wire.push_str(&enc);
+            }
+            if rng.below(5) == 0 {
+                wire.push('\n');
+            }
+            frames.push(f);
+        }
+        // chunk at arbitrary byte boundaries — often mid-UTF-8-character
+        let bytes = wire.as_bytes();
+        let mut dec = FrameDecoder::new();
+        let mut lines = Vec::new();
+        let mut i = 0;
+        while i < bytes.len() {
+            let j = (i + 1 + rng.below(9)).min(bytes.len());
+            let chunk = &bytes[i..j];
+            lines.extend(dec.push(chunk).unwrap_or_else(|e| panic!("trial {trial}: {e:#}")));
+            i = j;
+        }
+        assert_eq!(dec.pending_bytes(), 0, "trial {trial}: bytes left behind");
+        let got: Vec<ServerFrame> = lines.iter().map(|l| ServerFrame::parse(l).unwrap()).collect();
+        assert_eq!(got, frames, "trial {trial}: reassembly changed the frames");
+    }
+}
+
+#[test]
+fn mutated_frames_error_or_parse_but_never_panic() {
+    // the property under mutation is purely "no panic": a flipped byte may
+    // happen to still be a valid frame, and that is fine
+    let mut rng = Rng::new(0xFADE);
+    for _ in 0..400 {
+        let line = if rng.below(2) == 0 {
+            arb_client_frame(&mut rng).encode()
+        } else {
+            arb_server_frame(&mut rng).encode()
+        };
+        let mut bytes = line.trim_end().as_bytes().to_vec();
+        match rng.below(3) {
+            0 => {
+                let i = rng.below(bytes.len());
+                bytes[i] = rng.next_u64() as u8;
+            }
+            1 => {
+                let keep = rng.below(bytes.len() + 1);
+                bytes.truncate(keep);
+            }
+            _ => {
+                let i = rng.below(bytes.len() + 1);
+                bytes.insert(i, rng.next_u64() as u8);
+            }
+        }
+        let s = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = ClientFrame::parse(&s);
+        let _ = ServerFrame::parse(&s);
+        // and through the decoder, raw (possibly invalid UTF-8) bytes
+        let mut dec = FrameDecoder::new();
+        bytes.push(b'\n');
+        if let Ok(lines) = dec.push(&bytes) {
+            for l in lines {
+                let _ = ClientFrame::parse(&l);
+                let _ = ServerFrame::parse(&l);
+            }
+        }
+    }
+}
+
+#[test]
+fn integers_past_2_53_are_rejected_not_rounded() {
+    for bad in [
+        r#"{"reason":"cancel","id":18446744073709551615}"#,
+        r#"{"reason":"cancel","id":1e300}"#,
+        r#"{"reason":"request","prompt":[],"max_new_tokens":1,"seed":1e60}"#,
+        r#"{"reason":"token","id":0,"index":1e20,"token":0}"#,
+    ] {
+        assert!(ClientFrame::parse(bad).is_err() || ServerFrame::parse(bad).is_err(), "{bad}");
+    }
+    // u64::MAX is rejected on both sides, not rounded into range
+    let huge = r#"{"reason":"cancel","id":18446744073709551615}"#;
+    assert!(ClientFrame::parse(huge).is_err());
+    // the cap itself is representable and accepted
+    let at_cap = format!(r#"{{"reason":"cancel","id":{MAX_SAFE_INT}}}"#);
+    assert_eq!(ClientFrame::parse(&at_cap).unwrap(), ClientFrame::Cancel { id: MAX_SAFE_INT });
+}
+
+#[test]
+fn frame_size_cap_holds_under_any_chunking() {
+    let mut rng = Rng::new(0xCAFE);
+    let bytes = vec![b'x'; MAX_FRAME_BYTES + 2];
+    let mut dec = FrameDecoder::new();
+    let mut i = 0;
+    let mut erred = false;
+    while i < bytes.len() {
+        let j = (i + 1 + rng.below(64 * 1024)).min(bytes.len());
+        if dec.push(&bytes[i..j]).is_err() {
+            erred = true;
+            break;
+        }
+        i = j;
+    }
+    assert!(erred, "an unbounded line crossed the cap without erroring");
+    // the same volume with newlines interleaved streams through fine
+    let mut dec = FrameDecoder::new();
+    let mut total = 0;
+    for _ in 0..8 {
+        let mut chunk = vec![b'y'; MAX_FRAME_BYTES / 2];
+        *chunk.last_mut().unwrap() = b'\n';
+        total += dec.push(&chunk).unwrap().len();
+    }
+    assert_eq!(total, 8);
+    assert_eq!(dec.pending_bytes(), 0);
+}
+
+#[test]
+fn canonical_wire_bytes_are_pinned() {
+    // keys serialize alphabetically (BTreeMap), one line per frame — the
+    // bytes a foreign-language client must produce and accept
+    let req = ClientFrame::Request {
+        tag: Some("a".into()),
+        prompt: vec![1, 2, 3],
+        max_new_tokens: 8,
+        seed: 7,
+    };
+    assert_eq!(
+        req.encode(),
+        "{\"max_new_tokens\":8,\"prompt\":[1,2,3],\"reason\":\"request\",\"seed\":7,\"tag\":\"a\"}\n"
+    );
+    let tok = ServerFrame::Token { id: 4, index: 0, token: 17 };
+    assert_eq!(tok.encode(), "{\"id\":4,\"index\":0,\"reason\":\"token\",\"token\":17}\n");
+    let fin = ServerFrame::Finished {
+        id: 4,
+        tokens: 2,
+        ttft_ms: 1.5,
+        gap_p50_ms: 0.25,
+        gap_p95_ms: 0.75,
+    };
+    assert_eq!(
+        fin.encode(),
+        "{\"gap_p50_ms\":0.25,\"gap_p95_ms\":0.75,\"id\":4,\"reason\":\"finished\",\"tokens\":2,\"ttft_ms\":1.5}\n"
+    );
+}

@@ -4,30 +4,35 @@
 //! prune → quantized pack (`qcsr:4`, written to disk) → KV-cached
 //! continuous-batching decode, and its lifecycle lines (`job-started`,
 //! `checkpoint-packed`, `request-enqueued`, `batch-formed`,
-//! `prefill-started`, `cache-evicted`, `request-finished`,
-//! `engine-drained`, `job-finished`) must serialize exactly as pinned in
-//! `golden/serve_events.jsonl`. Wall-clock fields (`secs`,
-//! `tokens_per_sec`) and filesystem fields (`path`, `bytes`) are
+//! `prefill-started`, `cache-evicted`, `request-cancelled`,
+//! `request-finished`, `engine-drained`, `job-finished`) must serialize
+//! exactly as pinned in `golden/serve_events.jsonl`. Wall-clock fields
+//! (`secs`, `tokens_per_sec`) and filesystem fields (`path`, `bytes`) are
 //! normalized; everything else — arrival order, batch formation, prefill
-//! chunking, eviction counts, join/retire steps, and the quantized pack's
-//! `density` 0.5 / `effective_bits` 3 (the solver zeroes exactly
+//! chunking, eviction counts, join/retire/cancel steps, and the quantized
+//! pack's `density` 0.5 / `effective_bits` 3 (the solver zeroes exactly
 //! round(p·numel) per selection window, so nano at 50% is exact) — is
 //! schedule-determined and pinned.
 //!
 //! The workload (3 requests with 130-token prompts arriving one per step
-//! into a batch of 2 with max_wait 1, 2 tokens each) is chosen to exercise
-//! every scheduler + cache behavior on nano's 128-token window: the idle
-//! wait, a full-batch launch, a trailing partial batch, a 5-chunk prefill
-//! whose overlong prompt evicts 2 ring entries (130 into 128), and one
-//! further eviction per decode step once the ring is full.
+//! into a batch of 2 with max_wait 1, 3 tokens each, and a scripted
+//! `cancel=1@3` mid-stream disconnect) exercises every scheduler + cache
+//! behavior on nano's 128-token window: the idle wait, a full-batch
+//! launch, a 5-chunk prefill whose overlong prompt evicts 2 ring entries
+//! (130 into 128), one further eviction per decode step once the ring is
+//! full, a mid-decode cancellation whose freed batch slot is refilled the
+//! same step, and a clean drain with the cache budget back at zero.
 //!
 //! Hand-verified schedule: id0 arrives at step 0 and waits (partial batch,
 //! max_wait 1); id1 arrives at step 1 forming the full batch — both
 //! prefill at step 1 (evicting 2 each) and sample their first token from
-//! the prefill logits; their single incremental decode at step 2 evicts 1
-//! each and retires both. id2 arrives at step 2, waits out step 3, joins
-//! alone at step 4, decodes and retires at step 5; the engine drains
-//! after 6 steps with 6 generated tokens.
+//! the prefill logits; their decode at step 2 evicts 1 each (tokens 2 of
+//! 3). At step 3 id1's client disconnects — it retires as cancelled with
+//! 2 tokens streamed, and id2 (queued since step 2) immediately joins the
+//! freed slot, prefilling at step 3 while id0 decodes its third token and
+//! finishes. id2 decodes at steps 4 and 5 and finishes; the engine drains
+//! after 6 steps with 8 generated tokens (3 + 2 + 3), 2 finished
+//! requests, 1 cancelled, and 0 cache bytes still reserved.
 
 use sparsegpt::api::{JobSpec, JsonlSink, ServeSpec, Session};
 use sparsegpt::harness::Workspace;
@@ -35,13 +40,14 @@ use sparsegpt::runtime::ReferenceBackend;
 use sparsegpt::sparse::PackFormat;
 use sparsegpt::util::json::Json;
 
-const PINNED: [&str; 9] = [
+const PINNED: [&str; 10] = [
     "job-started",
     "checkpoint-packed",
     "request-enqueued",
     "batch-formed",
     "prefill-started",
     "cache-evicted",
+    "request-cancelled",
     "request-finished",
     "engine-drained",
     "job-finished",
@@ -57,13 +63,15 @@ fn run_serve_jsonl() -> String {
     };
     let mut spec = ServeSpec::new("nano");
     spec.requests = 3;
-    spec.max_new_tokens = 2;
+    spec.max_new_tokens = 3;
     spec.prompt_len = 130; // 2 past nano's 128-token window: prefill evicts
     spec.arrival_every = 1;
     spec.max_batch = 2;
     spec.max_wait = 1;
     spec.temperature = 0.0; // greedy: the schedule alone determines events
     spec.calib = 4;
+    // id1's client disconnects at step 3, mid-stream (2 of 3 tokens out)
+    spec.cancel = vec![(1, 3)];
     // quantized leg: pack q4 CSR to disk so checkpoint-packed is emitted
     // with the effective-bits payload (0.5 * 4 + 1 = 3 bits/weight)
     spec.format = PackFormat::QCsr { bits: 4, group: 0 };
@@ -112,6 +120,7 @@ fn serve_lifecycle_events_match_golden() {
     let mut prefilled = 0;
     let mut evicted = 0;
     let mut finished = 0;
+    let mut cancelled = 0;
     let mut drained = 0;
     let mut packed = 0;
     let mut ok = false;
@@ -134,10 +143,20 @@ fn serve_lifecycle_events_match_golden() {
             }
             "cache-evicted" => evicted += v.get("evicted").unwrap().as_usize().unwrap(),
             "request-finished" => finished += 1,
+            "request-cancelled" => {
+                cancelled += 1;
+                // the scripted disconnect lands mid-stream: 2 of 3 tokens
+                assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 1);
+                assert_eq!(v.get("step").unwrap().as_usize().unwrap(), 3);
+                assert_eq!(v.get("tokens").unwrap().as_usize().unwrap(), 2);
+            }
             "engine-drained" => {
                 drained += 1;
-                assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 3);
-                assert_eq!(v.get("tokens").unwrap().as_usize().unwrap(), 6);
+                assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 2);
+                assert_eq!(v.get("tokens").unwrap().as_usize().unwrap(), 8);
+                assert_eq!(v.get("cancelled").unwrap().as_usize().unwrap(), 1);
+                // the cancelled request's reservation came back to the budget
+                assert_eq!(v.get("cache_bytes_in_use").unwrap().as_usize().unwrap(), 0);
             }
             "job-finished" => ok = matches!(v.get("ok").unwrap(), Json::Bool(true)),
             _ => {}
@@ -146,8 +165,12 @@ fn serve_lifecycle_events_match_golden() {
     assert_eq!(packed, 1, "the quantized .spkt is packed exactly once");
     assert_eq!(enqueued, 3, "every synthetic request is enqueued once");
     assert_eq!(prefilled, 3, "every request prefills exactly once");
-    assert_eq!(evicted, 9, "2 prefill evictions + 1 decode eviction per request");
-    assert_eq!(finished, 3, "every request retires exactly once");
+    assert_eq!(
+        evicted, 11,
+        "2 prefill evictions per request + 1 per decode step (2 + 1 + 2)"
+    );
+    assert_eq!(finished, 2, "both surviving requests retire exactly once");
+    assert_eq!(cancelled, 1, "the scripted disconnect cancels exactly once");
     assert_eq!(drained, 1);
     assert!(ok, "serve job must finish ok");
 }

@@ -1,0 +1,211 @@
+//! Differential test for the network front door invariant: **token streams
+//! served over TCP are byte-identical to an in-process engine run** — for
+//! every packed format (dense / CSR / quantized n:m), with three clients
+//! streaming concurrently, and with one client disconnecting mid-stream.
+//! Per-request streams depend only on (prompt, seed, max_new_tokens) — the
+//! kernels are row-independent, sampling uses a per-request rng, and
+//! attention is banded per request — so batch composition (and therefore
+//! network arrival nondeterminism) must never change what any client
+//! receives. After the mid-stream disconnect the engine must drain with
+//! every [`CacheBudget`] reservation returned (`cache_bytes_in_use == 0`).
+//!
+//! [`CacheBudget`]: sparsegpt::serve::CacheBudget
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use sparsegpt::model::init::init_params;
+use sparsegpt::model::layout::{FlatParams, PRUNABLE_KINDS};
+use sparsegpt::model::ModelCfg;
+use sparsegpt::serve::net::{
+    run_client, send_shutdown, ClientOptions, ClientRequest, NetServer, NetServerOptions,
+};
+use sparsegpt::serve::{EngineOptions, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel};
+use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+use sparsegpt::sparse::{PackFormat, PackPolicy};
+use sparsegpt::util::prng::Rng;
+
+fn cfg() -> ModelCfg {
+    ModelCfg::from_dims("net-parity", 8, 2, 2, 1, 1, 13, 6)
+}
+
+/// Prune every prunable linear of a fresh model with `f`.
+fn pruned_params(
+    cfg: &ModelCfg,
+    seed: u64,
+    f: impl Fn(&sparsegpt::tensor::Tensor) -> sparsegpt::tensor::Tensor,
+) -> FlatParams {
+    let mut fp = init_params(cfg, seed);
+    for layer in 0..cfg.layers {
+        for kind in PRUNABLE_KINDS {
+            let w = f(&fp.get_linear(kind, layer).unwrap());
+            fp.set_linear(kind, layer, &w).unwrap();
+        }
+    }
+    fp
+}
+
+/// One model per packed format: f32 dense and CSR over unstructured
+/// pruning, plus the quantized n:m packing (the `.spkt` v2 serving leg).
+fn models() -> Vec<(&'static str, SparseModel)> {
+    let cfg = cfg();
+    let unstructured = pruned_params(&cfg, 3, |w| magnitude_prune(w, 0.5).0);
+    let nm = pruned_params(&cfg, 4, |w| magnitude_prune_nm(w, 2, 4).0);
+    let qnm_policy = PackPolicy::with_format(PackFormat::QNm { bits: 4, group: 0 });
+    vec![
+        (
+            "dense",
+            SparseModel::from_params(&unstructured, &PackPolicy::with_format(PackFormat::Dense))
+                .unwrap(),
+        ),
+        (
+            "csr",
+            SparseModel::from_params(&unstructured, &PackPolicy::with_format(PackFormat::Csr))
+                .unwrap(),
+        ),
+        ("qnm-4bit", SparseModel::from_params(&nm, &qnm_policy).unwrap()),
+    ]
+}
+
+/// The reference: the same request served by the engine without a socket
+/// in sight (alone — per-request streams are batch-independent).
+fn expected_stream(model: &SparseModel, opts: EngineOptions, r: &ClientRequest) -> Vec<i32> {
+    let req = ServeRequest {
+        id: 0,
+        prompt: r.prompt.clone(),
+        max_new_tokens: r.max_new_tokens,
+        seed: r.seed,
+    };
+    let out = ServeEngine::new(model, opts).run(vec![(0, req)], &mut |_| {}).unwrap();
+    out.finished[0].tokens.clone()
+}
+
+fn client(tag: &str, prompt: Vec<i32>, max_new_tokens: usize, seed: u64) -> ClientRequest {
+    ClientRequest { tag: Some(tag.to_string()), prompt, max_new_tokens, seed }
+}
+
+#[test]
+fn tcp_streams_match_in_process_run_across_formats() {
+    for (label, model) in models() {
+        let vocab = model.cfg.vocab;
+        let mut rng = Rng::new(0xA11CE);
+        let mut prompt = |len: usize| -> Vec<i32> {
+            (0..len).map(|_| rng.below(vocab) as i32).collect()
+        };
+        // three concurrent clients; c2 disconnects after 2 of 64 tokens
+        let c0 = vec![client("c0-0", prompt(4), 5, 11), client("c0-1", prompt(9), 7, 12)];
+        let c1 = vec![client("c1-0", prompt(14), 6, 13)];
+        let c2 = vec![client("c2-0", prompt(5), 64, 14)];
+        let opts = EngineOptions {
+            temperature: 0.7,
+            top_k: 4,
+            // two cache slots for four requests: admission defers joins, so
+            // the server-side batch schedule differs from the solo runs —
+            // the streams must not care
+            cache_budget_bytes: 2 * model.cache_bytes(),
+            ..EngineOptions::default()
+        };
+        let mut expect: BTreeMap<String, Vec<i32>> = BTreeMap::new();
+        for r in c0.iter().chain(c1.iter()).chain(c2.iter()) {
+            expect.insert(r.tag.clone().unwrap(), expected_stream(&model, opts, r));
+        }
+
+        let srv_opts = NetServerOptions::new("net-parity".into(), vocab);
+        let srv = NetServer::bind("127.0.0.1:0", srv_opts).unwrap();
+        let addr = srv.local_addr().to_string();
+        let coordinator = {
+            let addr = addr.clone();
+            let (c0, c1, c2) = (c0.clone(), c1.clone(), c2.clone());
+            std::thread::spawn(move || {
+                let spawn = |reqs: Vec<ClientRequest>, o: ClientOptions| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || run_client(&addr, &reqs, &o, &mut |_| {}).unwrap())
+                };
+                let h0 = spawn(c0, ClientOptions::default());
+                let h1 = spawn(c1, ClientOptions::default());
+                let h2 = spawn(
+                    c2,
+                    ClientOptions { disconnect_after: Some(2), ..Default::default() },
+                );
+                let outs = (h0.join().unwrap(), h1.join().unwrap(), h2.join().unwrap());
+                // every client resolved (or dropped): drain the server
+                send_shutdown(&addr, Duration::from_secs(30)).unwrap();
+                outs
+            })
+        };
+        let outcome = srv.serve(&model, opts, &mut |_| {}).unwrap();
+        let (o0, o1, o2) = coordinator.join().unwrap();
+
+        // per connection, accepted order == submission order (one reader
+        // thread processes that socket's frames in order), so zip by index
+        for (out, reqs) in [(&o0, &c0), (&o1, &c1)] {
+            assert_eq!(out.accepted.len(), reqs.len(), "{label}: all accepted");
+            assert_eq!(out.finished.len(), reqs.len(), "{label}: all finished");
+            for (i, r) in reqs.iter().enumerate() {
+                let got = out.streams.get(&out.accepted[i]).unwrap();
+                let want = &expect[r.tag.as_deref().unwrap()];
+                assert_eq!(
+                    got, want,
+                    "{label} {:?}: wire stream differs from the in-process run",
+                    r.tag
+                );
+            }
+        }
+        // the disconnector saw an exact prefix of its stream before it
+        // dropped the socket cold
+        assert!(o2.disconnected, "{label}: disconnect_after must trip");
+        let got2 = o2.streams.get(&o2.accepted[0]).unwrap();
+        assert_eq!(got2.len(), 2, "{label}: dropped after 2 token frames");
+        assert_eq!(&expect["c2-0"][..2], &got2[..], "{label}: prefix parity before disconnect");
+        // server side: the disconnect retired as cancellation mid-stream,
+        // and the drain returned every cache reservation to the budget
+        assert_eq!(outcome.finished.len(), 3, "{label}: surviving requests finish");
+        assert_eq!(outcome.cancelled, 1, "{label}: one disconnect, one cancel");
+        assert_eq!(outcome.rejected, 0, "{label}");
+        assert_eq!(outcome.cache_bytes_in_use, 0, "{label}: budget back to zero");
+        assert!(
+            outcome.peak_cache_bytes <= 2 * model.cache_bytes(),
+            "{label}: admission never exceeded the two-slot budget"
+        );
+    }
+}
+
+#[test]
+fn overflowing_burst_is_rejected_with_429_semantics() {
+    // a one-slot queue in front of a one-slot batch, hit with an 8-request
+    // burst from a single connection: the queue can only drain one request
+    // per multi-step decode, so most of the burst must come back as
+    // `rejected` frames — and the engine must never block or drop silently
+    let (_, model) = models().remove(0);
+    let opts = EngineOptions {
+        policy: SchedulerPolicy { max_batch: 1, max_wait: 0, queue_cap: 1, max_prefill_tokens: 0 },
+        temperature: 0.0,
+        top_k: 0,
+        ..EngineOptions::default()
+    };
+    let srv_opts = NetServerOptions::new("net-parity".into(), model.cfg.vocab);
+    let srv = NetServer::bind("127.0.0.1:0", srv_opts).unwrap();
+    let addr = srv.local_addr().to_string();
+    let reqs: Vec<ClientRequest> =
+        (0..8).map(|i| client(&format!("b{i}"), vec![1, 2, 3], 6, i)).collect();
+    let handle = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            run_client(
+                &addr,
+                &reqs,
+                &ClientOptions { shutdown: true, ..Default::default() },
+                &mut |_| {},
+            )
+            .unwrap()
+        })
+    };
+    let outcome = srv.serve(&model, opts, &mut |_| {}).unwrap();
+    let out = handle.join().unwrap();
+    assert_eq!(out.finished.len() + out.rejected, 8, "every submission resolves exactly once");
+    assert!(out.rejected >= 1, "the burst must overflow the one-slot queue");
+    assert_eq!(outcome.rejected, out.rejected, "server and client agree");
+    assert_eq!(outcome.finished.len(), out.finished.len());
+    assert_eq!(outcome.cancelled, 0);
+    assert_eq!(outcome.cache_bytes_in_use, 0);
+}
