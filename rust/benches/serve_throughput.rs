@@ -20,8 +20,9 @@
 //! inside every re-forward decode step.
 //!
 //! Writes `BENCH_serve.json` (repo root + a copy under `reports/`) so the
-//! bench trajectory is machine-readable:
-//!   { "bench": "serve_throughput", "config": ..., "rows": [
+//! bench trajectory is machine-readable (`workers` records the kernel
+//! worker-pool size the engines decoded on):
+//!   { "bench": "serve_throughput", "config": ..., "workers": ..., "rows": [
 //!       { "variant": "csr-60%", "kv": "cached", "density": ...,
 //!         "effective_bits": ..., "bytes_per_weight": ...,
 //!         "tokens": ..., "decode_secs": ..., "prefill_secs": ...,
@@ -45,7 +46,7 @@ use sparsegpt::serve::{
     EngineOptions, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel,
 };
 use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
-use sparsegpt::sparse::{PackFormat, PackPolicy};
+use sparsegpt::sparse::{PackFormat, PackPolicy, WorkerPool};
 use sparsegpt::tensor::Tensor;
 use sparsegpt::util::json::Json;
 use sparsegpt::util::prng::Rng;
@@ -201,6 +202,7 @@ fn main() -> Result<()> {
     let doc = obj(vec![
         ("bench", Json::Str("serve_throughput".into())),
         ("config", Json::Str(config.clone())),
+        ("workers", Json::Num(WorkerPool::global().workers() as f64)),
         ("requests", Json::Num(requests as f64)),
         ("max_new_tokens", Json::Num(tokens as f64)),
         ("prompt_len", Json::Num(prompt_len as f64)),

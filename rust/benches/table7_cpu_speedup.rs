@@ -1,26 +1,49 @@
 //! Table 7: CPU inference acceleration from unstructured sparsity
 //! (the DeepSparse experiment). We run the full linear-layer stack of one
 //! model (all blocks' q/k/v/out/fc1/fc2) over a 400-token batch — the
-//! paper's OPT-2.7B setting — dense vs CSR at 40/50/60% sparsity, and
-//! report end-to-end speedups (paper: 1.57x / 1.82x / 2.16x).
+//! paper's OPT-2.7B setting — dense vs CSR (plus the row-permuted CSR
+//! layout) at 40/50/60% sparsity, and report end-to-end speedups
+//! (paper: 1.57x / 1.82x / 2.16x).
+//!
+//! Runtime depends only on shape and sparsity pattern, so the stack runs
+//! on seed-0 random weights and needs no workspace, artifacts or data.
+//! Kernels run on the process worker pool (sized from SPARSEGPT_THREADS;
+//! the `workers` field in the JSON records the size actually used).
+//!
+//! Writes `BENCH_table7.json` (repo root + a copy under `reports/`):
+//!   { "bench": "table7_cpu_speedup", "config": ..., "tokens": 400,
+//!     "workers": ..., "rows": [
+//!       { "layout": "csr", "sparsity": 0.5, "dense_secs": ...,
+//!         "sparse_secs": ..., "speedup": ..., "ideal": 2.0 }, ...] }
+//!
+//! Env knobs: SPARSEGPT_BENCH_CONFIGS (default "medium"),
+//! SPARSEGPT_BENCH_TOKENS (400).
 
-use anyhow::Result;
-use sparsegpt::bench::{env_configs, finish};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+use sparsegpt::bench::{env_configs, env_usize};
 use sparsegpt::eval::report::Table;
-use sparsegpt::harness::Workspace;
 use sparsegpt::model::layout::PRUNABLE_KINDS;
+use sparsegpt::model::ModelCfg;
 use sparsegpt::solver::magnitude::magnitude_prune;
-use sparsegpt::sparse::{dense_layer, CsrMatrix};
+use sparsegpt::sparse::{dense_layer, CsrMatrix, WorkerPool};
 use sparsegpt::tensor::Tensor;
+use sparsegpt::util::json::Json;
 use sparsegpt::util::prng::Rng;
 use sparsegpt::util::timer::bench_fn;
 
-const TOKENS: usize = 400;
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
 
 fn main() -> Result<()> {
-    let ws = Workspace::open()?;
     let config = env_configs(&["medium"]).remove(0);
-    let cfg = ws.config(&config)?;
+    let cfg = ModelCfg::builtin(&config)
+        .ok_or_else(|| anyhow!("unknown config {config:?} (expected nano..large)"))?;
+    let tokens = env_usize("SPARSEGPT_BENCH_TOKENS", 400);
+    let workers = WorkerPool::global().workers();
     let mut rng = Rng::new(0);
 
     // one weight stack (all blocks, all linears) with random weights —
@@ -34,9 +57,10 @@ fn main() -> Result<()> {
         .collect();
     let xs: Vec<Tensor> = shapes
         .iter()
-        .map(|(_, c)| Tensor::new(vec![TOKENS, *c], (0..TOKENS * c).map(|_| rng.normal_f32()).collect()))
+        .map(|(_, c)| Tensor::new(vec![tokens, *c], (0..tokens * c).map(|_| rng.normal_f32()).collect()))
         .collect();
 
+    println!("table7_cpu_speedup: {config}, {tokens} tokens, {workers} workers");
     let dense_stats = bench_fn(1, 3, || {
         for (w, x) in dense_ws.iter().zip(&xs) {
             std::hint::black_box(dense_layer(x, w));
@@ -45,28 +69,69 @@ fn main() -> Result<()> {
     println!("dense stack: {:.3}s", dense_stats.median);
 
     let mut table = Table::new(
-        &format!("Table 7 (CPU unstructured speedup, {config}, {TOKENS} tokens)"),
-        &["sparsity", "dense s", "sparse s", "speedup", "ideal"],
+        &format!("Table 7 (CPU unstructured speedup, {config}, {tokens} tokens, {workers} workers)"),
+        &["layout", "sparsity", "dense s", "sparse s", "speedup", "ideal"],
     );
+    let mut rows = Vec::new();
     for p in [0.4, 0.5, 0.6] {
-        let csrs: Vec<CsrMatrix> = dense_ws
-            .iter()
-            .map(|w| CsrMatrix::from_dense(&magnitude_prune(w, p).0))
-            .collect();
-        let sparse_stats = bench_fn(1, 3, || {
-            for (w, x) in csrs.iter().zip(&xs) {
-                std::hint::black_box(w.layer(x));
-            }
-        });
-        let speedup = dense_stats.median / sparse_stats.median;
-        println!("p={p}: {:.3}s -> {:.3}s ({speedup:.2}x)", dense_stats.median, sparse_stats.median);
-        table.row(vec![
-            format!("{:.0}%", p * 100.0),
-            format!("{:.3}", dense_stats.median),
-            format!("{:.3}", sparse_stats.median),
-            format!("{speedup:.2}x"),
-            format!("{:.2}x", 1.0 / (1.0 - p)),
-        ]);
+        let pruned: Vec<Tensor> = dense_ws.iter().map(|w| magnitude_prune(w, p).0).collect();
+        for permuted in [false, true] {
+            let layout = if permuted { "csr:perm" } else { "csr" };
+            let csrs: Vec<CsrMatrix> = pruned
+                .iter()
+                .map(|w| {
+                    if permuted {
+                        CsrMatrix::from_dense_permuted(w)
+                    } else {
+                        CsrMatrix::from_dense(w)
+                    }
+                })
+                .collect::<Result<_>>()?;
+            let sparse_stats = bench_fn(1, 3, || {
+                for (w, x) in csrs.iter().zip(&xs) {
+                    std::hint::black_box(w.layer(x));
+                }
+            });
+            let speedup = dense_stats.median / sparse_stats.median;
+            println!(
+                "p={p} {layout}: {:.3}s -> {:.3}s ({speedup:.2}x)",
+                dense_stats.median, sparse_stats.median
+            );
+            table.row(vec![
+                layout.to_string(),
+                format!("{:.0}%", p * 100.0),
+                format!("{:.3}", dense_stats.median),
+                format!("{:.3}", sparse_stats.median),
+                format!("{speedup:.2}x"),
+                format!("{:.2}x", 1.0 / (1.0 - p)),
+            ]);
+            rows.push(obj(vec![
+                ("layout", Json::Str(layout.to_string())),
+                ("sparsity", Json::Num(p)),
+                ("dense_secs", Json::Num(dense_stats.median)),
+                ("sparse_secs", Json::Num(sparse_stats.median)),
+                ("speedup", Json::Num(speedup)),
+                ("ideal", Json::Num(1.0 / (1.0 - p))),
+            ]));
+        }
     }
-    finish(&ws, &table, "table7_cpu_speedup")
+
+    let report_dir = std::env::var_os("SPARSEGPT_REPORTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| "reports".into());
+    std::fs::create_dir_all(&report_dir)?;
+    print!("{}", table.render());
+    table.save(&report_dir, "table7_cpu_speedup")?;
+    let doc = obj(vec![
+        ("bench", Json::Str("table7_cpu_speedup".into())),
+        ("config", Json::Str(config.clone())),
+        ("tokens", Json::Num(tokens as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let text = doc.to_string_pretty();
+    std::fs::write("BENCH_table7.json", &text)?;
+    std::fs::write(report_dir.join("BENCH_table7.json"), &text)?;
+    println!("(saved BENCH_table7.json + reports/table7_cpu_speedup.txt/.csv)");
+    Ok(())
 }

@@ -668,6 +668,7 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
         kv_cache: spec.kv_cache,
         prefill_chunk: spec.prefill_chunk,
         cache_budget_bytes: spec.cache_budget_mb as u64 * 1024 * 1024,
+        workers: spec.workers,
     };
     let mut listen_addr = None;
     let outcome = match &spec.listen {

@@ -417,7 +417,7 @@ pub use crate::serve::engine::DEFAULT_PREFILL_CHUNK;
 /// The cache and pack knobs round-trip through the job label as a comma
 /// list after the prune spec (only non-default values appear):
 /// `serve/<config>/<prune-spec>[,kv=off][,chunk=<n>][,cache-mb=<n>]`
-/// `[,prefill=<n>][,fmt=<pack-format>][,g=<cols>][,net=<addr>]`
+/// `[,prefill=<n>][,workers=<n>][,fmt=<pack-format>][,g=<cols>][,net=<addr>]`
 /// `[,cancel=<id>@<step>[+...]]` — `fmt` carries the base pack-format
 /// label (e.g. `qcsr:4`) and `g` the quantization group, kept separate so
 /// the comma-separated knob list stays flat; `net` switches from the
@@ -440,6 +440,9 @@ pub struct ServeSpec {
     pub cache_budget_mb: usize,
     /// prompt tokens admission may hand to prefill per step (0 = unlimited)
     pub max_prefill_tokens: usize,
+    /// kernel worker-pool size for this engine (`workers=<n>` knob; 0 =
+    /// share the process pool sized from `SPARSEGPT_THREADS` at startup)
+    pub workers: usize,
     /// synthetic request count
     pub requests: usize,
     /// tokens generated per request
@@ -489,6 +492,7 @@ impl ServeSpec {
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             cache_budget_mb: 0,
             max_prefill_tokens: 0,
+            workers: 0,
             requests: 8,
             max_new_tokens: 16,
             prompt_len: 8,
@@ -551,6 +555,9 @@ impl ServeSpec {
         if self.max_prefill_tokens != 0 {
             parts.push(format!("prefill={}", self.max_prefill_tokens));
         }
+        if self.workers != 0 {
+            parts.push(format!("workers={}", self.workers));
+        }
         if self.format != PackFormat::Auto {
             // the group rides as its own knob so fmt's value has no comma
             match self.format.label().split_once(',') {
@@ -582,8 +589,8 @@ impl ServeSpec {
             let err = || {
                 anyhow!(
                     "unrecognized serve knob {part:?} (expected kv=on|off, chunk=<n>, \
-                     cache-mb=<n>, prefill=<n>, fmt=<pack-format>, g=<cols>, \
-                     net=<addr> or cancel=<id>@<step>[+...])"
+                     cache-mb=<n>, prefill=<n>, workers=<n>, fmt=<pack-format>, \
+                     g=<cols>, net=<addr> or cancel=<id>@<step>[+...])"
                 )
             };
             let (key, value) = part.split_once('=').ok_or_else(err)?;
@@ -598,6 +605,7 @@ impl ServeSpec {
                 "chunk" => self.prefill_chunk = value.parse().map_err(|_| err())?,
                 "cache-mb" => self.cache_budget_mb = value.parse().map_err(|_| err())?,
                 "prefill" => self.max_prefill_tokens = value.parse().map_err(|_| err())?,
+                "workers" => self.workers = value.parse().map_err(|_| err())?,
                 "fmt" => self.format = PackFormat::parse(value)?,
                 "g" => {
                     let g: usize = value.parse().map_err(|_| err())?;

@@ -52,7 +52,7 @@ commands:
   serve     [--config nano] [--spec sparsegpt-50%]
             [--format auto|dense|csr|2:4|qdense:4|qcsr:4[,g=128]|qnm:4]
             [--kv-cache on|off] [--prefill-chunk 32] [--cache-mb 0]
-            [--max-prefill-tokens 0]
+            [--max-prefill-tokens 0] [--workers 0]
             [--requests 8] [--tokens 16] [--prompt-len 8] [--arrival-every 1]
             [--max-batch 8] [--max-wait 2] [--queue-cap 64]
             [--temperature 0.8] [--top-k 40] [--seed 0]
@@ -67,6 +67,9 @@ commands:
             instead of the synthetic workload; port 0 picks a free port
             and --addr-file writes the bound address for scripts;
             --cancel scripts synthetic-workload disconnects)
+            (--workers 0 shares the process-wide kernel pool sized from
+            SPARSEGPT_THREADS at startup; n > 0 gives this serve run a
+            private pool of n workers)
   client    --addr <host:port> | --addr-file <path>
             [--prompt 1,2,3] [--requests 1] [--tokens 16] [--seed 0]
             [--tag cli] [--disconnect-after <n>] [--timeout-secs 60]
@@ -102,8 +105,11 @@ fn main() {
 
 fn run(argv: &[String]) -> Result<()> {
     // fail fast on a typo'd SPARSEGPT_THREADS: a bad value must error here,
-    // not panic mid-decode (and never silently run single-threaded)
-    sparsegpt::sparse::threads::worker_count().map_err(|e| anyhow!(e))?;
+    // not panic mid-decode (and never silently run single-threaded). The
+    // validated count sizes the process-wide worker pool once, up front;
+    // kernels never consult the environment again after this point.
+    let workers = sparsegpt::sparse::threads::worker_count().map_err(|e| anyhow!(e))?;
+    sparsegpt::sparse::WorkerPool::init_global(workers);
     let args = Args::parse(argv, GLOBAL_BOOL_FLAGS)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     if cmd == "client" {
@@ -264,6 +270,7 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
             s.prefill_chunk = args.usize_or("prefill-chunk", s.prefill_chunk)?;
             s.cache_budget_mb = args.usize_or("cache-mb", s.cache_budget_mb)?;
             s.max_prefill_tokens = args.usize_or("max-prefill-tokens", s.max_prefill_tokens)?;
+            s.workers = args.usize_or("workers", s.workers)?;
             s.requests = args.usize_or("requests", s.requests)?;
             s.max_new_tokens = args.usize_or("tokens", s.max_new_tokens)?;
             s.prompt_len = args.usize_or("prompt-len", s.prompt_len)?;

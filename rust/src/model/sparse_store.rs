@@ -56,6 +56,7 @@ const KIND_TAGS: [LinearKind; 6] = PRUNABLE_KINDS;
 fn format_tag(m: &PackedMatrix) -> u8 {
     match m {
         PackedMatrix::Dense(_) => 0,
+        PackedMatrix::Csr(c) if c.perm.is_some() => 6, // row-permuted layout
         PackedMatrix::Csr(_) => 1,
         PackedMatrix::Nm(_) => 2,
         PackedMatrix::QDense(_) => 3,

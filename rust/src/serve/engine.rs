@@ -48,6 +48,7 @@ use crate::eval::generate::pick_token;
 use crate::serve::kv::{CacheBudget, KvCache};
 use crate::serve::model::SparseModel;
 use crate::serve::scheduler::{Scheduler, SchedulerPolicy, ServeRequest, StepLimits};
+use crate::sparse::pool::WorkerPool;
 use crate::util::prng::Rng;
 
 /// Default prefill chunk rows — the single source of truth; `ServeSpec`
@@ -68,6 +69,11 @@ pub struct EngineOptions {
     /// cache-memory budget in bytes (0 = unlimited); admission defers
     /// joins that would exceed it until retirements free caches
     pub cache_budget_bytes: u64,
+    /// kernel worker-pool size for this engine: 0 shares the process
+    /// global pool (sized from `SPARSEGPT_THREADS` at startup), n > 0
+    /// gives the engine a private pool of n workers — two engines in one
+    /// process can run with different counts
+    pub workers: usize,
 }
 
 impl Default for EngineOptions {
@@ -79,6 +85,7 @@ impl Default for EngineOptions {
             kv_cache: true,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             cache_budget_bytes: 0,
+            workers: 0,
         }
     }
 }
@@ -324,15 +331,28 @@ impl Active {
     }
 }
 
-/// The serving engine: owns the scheduler, borrows the model.
+/// The serving engine: owns the scheduler and its kernel worker pool,
+/// borrows the model.
 pub struct ServeEngine<'a> {
     model: &'a SparseModel,
     opts: EngineOptions,
+    /// pool the step loop installs around every forward (private when
+    /// `opts.workers > 0`, else a handle to the shared global pool)
+    pool: WorkerPool,
 }
 
 impl<'a> ServeEngine<'a> {
     pub fn new(model: &'a SparseModel, opts: EngineOptions) -> ServeEngine<'a> {
-        ServeEngine { model, opts }
+        let pool = match opts.workers {
+            0 => WorkerPool::current(),
+            n => WorkerPool::new(n),
+        };
+        ServeEngine { model, opts, pool }
+    }
+
+    /// Worker count of the pool this engine's kernels run on.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
     }
 
     /// Run a preloaded workload to drain: `incoming` is (arrival step,
@@ -352,8 +372,19 @@ impl<'a> ServeEngine<'a> {
     /// poll arrivals (shedding overflow), form the batch (chunked prefill
     /// for joiners), decode one token per in-flight request and stream it
     /// to the source, retire satisfied or disconnected requests. Runs
-    /// until the source is closed and every queue is empty.
+    /// until the source is closed and every queue is empty. The engine's
+    /// worker pool is installed for the duration, so every kernel under
+    /// the loop fans out over this engine's workers.
     pub fn run_source(
+        &self,
+        source: &mut dyn RequestSource,
+        on_event: &mut dyn FnMut(&ServeEvent),
+    ) -> Result<EngineOutcome> {
+        let pool = self.pool.clone();
+        pool.install(|| self.run_steps(source, on_event))
+    }
+
+    fn run_steps(
         &self,
         source: &mut dyn RequestSource,
         on_event: &mut dyn FnMut(&ServeEvent),

@@ -130,6 +130,12 @@ impl Scheduler {
     pub fn cancel(&mut self, id: u64) -> bool {
         if let Some(i) = self.queue.iter().position(|r| r.id == id) {
             self.queue.remove(i);
+            if self.queue.is_empty() {
+                // the idle wait was for a batch that no longer exists; a
+                // stale counter would short-change the next lone arrival's
+                // max_wait window
+                self.waited = 0;
+            }
             true
         } else {
             false
@@ -220,6 +226,42 @@ mod tests {
         // the freed slot is usable again and FIFO order holds for the rest
         s.submit(req(2)).unwrap();
         let batch = s.admit(1, &StepLimits::unlimited());
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn cancel_draining_the_queue_resets_the_idle_wait() {
+        // regression: a cancel() that emptied the queue mid-idle-wait left
+        // `waited` stale, so the next lone arrival waited fewer than
+        // max_wait steps before launching as a partial batch
+        let mut s = Scheduler::new(policy(4, 3, 16));
+        let lim = StepLimits::unlimited();
+        s.submit(req(0)).unwrap();
+        assert!(s.admit(0, &lim).is_empty(), "idle wait step 1");
+        assert!(s.admit(0, &lim).is_empty(), "idle wait step 2");
+        assert!(s.cancel(0), "queue drains via cancel mid-wait");
+        s.submit(req(1)).unwrap();
+        // the new arrival gets its full max_wait window...
+        assert!(s.admit(0, &lim).is_empty(), "fresh wait step 1");
+        assert!(s.admit(0, &lim).is_empty(), "fresh wait step 2");
+        assert!(s.admit(0, &lim).is_empty(), "fresh wait step 3");
+        // ...and only then launches as a partial batch
+        let batch = s.admit(0, &lim);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn cancel_with_requests_left_keeps_the_wait_counter() {
+        // counterpart: if the queue is NOT drained, the in-progress wait is
+        // for a batch that still exists and must keep aging
+        let mut s = Scheduler::new(policy(4, 2, 16));
+        let lim = StepLimits::unlimited();
+        s.submit(req(0)).unwrap();
+        s.submit(req(1)).unwrap();
+        assert!(s.admit(0, &lim).is_empty(), "idle wait step 1");
+        assert!(s.cancel(0), "one of two cancelled — queue not empty");
+        assert!(s.admit(0, &lim).is_empty(), "idle wait step 2");
+        let batch = s.admit(0, &lim);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
     }
 

@@ -2,6 +2,17 @@
 //! DeepSparse-style regime of Table 7). Skips zero weights entirely, so
 //! runtime scales with density; at 50% sparsity the ideal speedup is 2x
 //! minus index-overhead.
+//!
+//! Two layouts share the struct: the natural row order, and an optional
+//! row-reordered layout (`perm`) that stores rows sorted by nonzero count
+//! (ROSE-style permutation plumbing) — heavy rows stream the value/index
+//! arrays together at the front of the pass, and the kernel scatters each
+//! stored row back to its logical output column. Per-output-element f32
+//! accumulation order is identical in both layouts (a row's nonzero list
+//! does not change, only where it lives), so permuted and natural results
+//! are bit-identical.
+
+use anyhow::{bail, Result};
 
 use crate::sparse::threads::{for_each_token_tile, TOKEN_TILE};
 use crate::tensor::Tensor;
@@ -13,25 +24,54 @@ pub struct CsrMatrix {
     pub row_ptr: Vec<u32>,
     pub col_idx: Vec<u32>,
     pub values: Vec<f32>,
+    /// Row reordering: `perm[i]` = logical row stored at slot i (None =
+    /// natural order). Applied at pack time, inverted at output scatter.
+    pub perm: Option<Vec<u32>>,
 }
 
 impl CsrMatrix {
-    pub fn from_dense(w: &Tensor) -> CsrMatrix {
+    pub fn from_dense(w: &Tensor) -> Result<CsrMatrix> {
+        Self::build(w, None)
+    }
+
+    /// Pack with rows stored in descending nonzero-count order (stable, so
+    /// equal-weight rows keep their relative position). Bit-identical
+    /// results to [`CsrMatrix::from_dense`]; better locality for skewed
+    /// per-row densities.
+    pub fn from_dense_permuted(w: &Tensor) -> Result<CsrMatrix> {
+        let rows = w.rows();
+        let mut order: Vec<u32> = (0..rows as u32).collect();
+        let nnz_of = |r: &u32| w.row(*r as usize).iter().filter(|v| **v != 0.0).count();
+        order.sort_by_key(|r| std::cmp::Reverse(nnz_of(r)));
+        Self::build(w, Some(order))
+    }
+
+    fn build(w: &Tensor, perm: Option<Vec<u32>>) -> Result<CsrMatrix> {
         let (rows, cols) = (w.rows(), w.cols());
         let mut row_ptr = Vec::with_capacity(rows + 1);
         let mut col_idx = Vec::new();
         let mut values = Vec::new();
         row_ptr.push(0u32);
-        for r in 0..rows {
+        for slot in 0..rows {
+            let r = perm.as_ref().map_or(slot, |p| p[slot] as usize);
             for (c, &v) in w.row(r).iter().enumerate() {
                 if v != 0.0 {
                     col_idx.push(c as u32);
                     values.push(v);
                 }
             }
+            // u32 row_ptr: >2^32 nonzeros used to truncate silently and
+            // corrupt every later row's extent
+            if col_idx.len() > u32::MAX as usize {
+                bail!(
+                    "CSR nonzero count {} exceeds the u32 index space \
+                     ({rows}x{cols} matrix)",
+                    col_idx.len()
+                );
+            }
             row_ptr.push(col_idx.len() as u32);
         }
-        CsrMatrix { rows, cols, row_ptr, col_idx, values }
+        Ok(CsrMatrix { rows, cols, row_ptr, col_idx, values, perm })
     }
 
     pub fn nnz(&self) -> usize {
@@ -39,13 +79,26 @@ impl CsrMatrix {
     }
 
     pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0; // a degenerate matrix is empty, not NaN
+        }
         self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Logical output row stored at slot `i`.
+    #[inline]
+    fn logical_row(&self, i: usize) -> usize {
+        match &self.perm {
+            Some(p) => p[i] as usize,
+            None => i,
+        }
     }
 
     pub fn to_dense(&self) -> Tensor {
         let mut out = vec![0.0f32; self.rows * self.cols];
-        for r in 0..self.rows {
-            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+        for slot in 0..self.rows {
+            let r = self.logical_row(slot);
+            for i in self.row_ptr[slot] as usize..self.row_ptr[slot + 1] as usize {
                 out[r * self.cols + self.col_idx[i] as usize] = self.values[i];
             }
         }
@@ -57,8 +110,13 @@ impl CsrMatrix {
     /// `v * xT[k, :]` — a contiguous, auto-vectorizable axpy. This is the
     /// layout trick real CPU sparse engines (DeepSparse) use: sparsity in
     /// the weights, SIMD across the batch. The one-time transpose of x is
-    /// O(T·K) against the O(nnz·T) kernel. Token tiles fan out over
-    /// `SPARSEGPT_THREADS` workers (default 1).
+    /// O(T·K) against the O(nnz·T) kernel. Token tiles are stolen by the
+    /// current worker pool (see `sparse::threads`).
+    ///
+    /// The nonzero loop is unrolled 4 wide with one fused `+=` per term, so
+    /// each output element sees the exact accumulation sequence of the
+    /// scalar loop (bit-exactness contract — see DESIGN.md) while the four
+    /// axpy rows stay resident in registers together.
     pub fn layer(&self, x: &Tensor) -> Tensor {
         let (t_n, k_n) = (x.rows(), x.cols());
         assert_eq!(k_n, self.cols);
@@ -69,19 +127,45 @@ impl CsrMatrix {
         for_each_token_tile(t_n, o_n, &mut y, |t0, yrows| {
             let tb = yrows.len() / o_n;
             let mut acc = [0.0f32; TOKEN_TILE];
-            for o in 0..o_n {
-                let lo = self.row_ptr[o] as usize;
-                let hi = self.row_ptr[o + 1] as usize;
+            for slot in 0..o_n {
+                let lo = self.row_ptr[slot] as usize;
+                let hi = self.row_ptr[slot + 1] as usize;
                 let a = &mut acc[..tb];
                 a.fill(0.0);
-                for i in lo..hi {
+                let mut i = lo;
+                while i + 4 <= hi {
+                    let (v0, v1, v2, v3) = (
+                        self.values[i],
+                        self.values[i + 1],
+                        self.values[i + 2],
+                        self.values[i + 3],
+                    );
+                    let x0 = &xd[self.col_idx[i] as usize * t_n + t0..][..tb];
+                    let x1 = &xd[self.col_idx[i + 1] as usize * t_n + t0..][..tb];
+                    let x2 = &xd[self.col_idx[i + 2] as usize * t_n + t0..][..tb];
+                    let x3 = &xd[self.col_idx[i + 3] as usize * t_n + t0..][..tb];
+                    // one += per term keeps the per-element f32 order of
+                    // the serial loop (do NOT fold into one expression)
+                    for tt in 0..tb {
+                        let mut s = a[tt];
+                        s += v0 * x0[tt];
+                        s += v1 * x1[tt];
+                        s += v2 * x2[tt];
+                        s += v3 * x3[tt];
+                        a[tt] = s;
+                    }
+                    i += 4;
+                }
+                while i < hi {
                     let v = self.values[i];
                     let k = self.col_idx[i] as usize;
-                    let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
+                    let xr = &xd[k * t_n + t0..][..tb];
                     for (av, xv) in a.iter_mut().zip(xr) {
                         *av += v * xv; // vectorized axpy
                     }
+                    i += 1;
                 }
+                let o = self.logical_row(slot);
                 for (tt, &av) in a.iter().enumerate() {
                     yrows[tt * o_n + o] = av;
                 }
@@ -90,18 +174,20 @@ impl CsrMatrix {
         Tensor::new(vec![t_n, o_n], y)
     }
 
-    /// Scalar gather variant (kept for reference / tiny batches).
+    /// Scalar gather variant (kept as the bit-exactness reference and for
+    /// tiny batches).
     pub fn layer_gather(&self, x: &Tensor) -> Tensor {
         let (t_n, k_n) = (x.rows(), x.cols());
         assert_eq!(k_n, self.cols);
         let o_n = self.rows;
         let mut y = vec![0.0f32; t_n * o_n];
         let xd = x.data();
-        for o in 0..o_n {
-            let lo = self.row_ptr[o] as usize;
-            let hi = self.row_ptr[o + 1] as usize;
+        for slot in 0..o_n {
+            let lo = self.row_ptr[slot] as usize;
+            let hi = self.row_ptr[slot + 1] as usize;
             let idx = &self.col_idx[lo..hi];
             let val = &self.values[lo..hi];
+            let o = self.logical_row(slot);
             let mut t = 0;
             while t + 4 <= t_n {
                 let (x0, rest) = xd[t * k_n..].split_at(k_n);
@@ -152,7 +238,7 @@ mod tests {
     #[test]
     fn roundtrip_dense() {
         let w = sparse_w(0, 17, 23, 0.6);
-        let csr = CsrMatrix::from_dense(&w);
+        let csr = CsrMatrix::from_dense(&w).unwrap();
         assert_eq!(csr.to_dense(), w);
         assert!((csr.density() - 0.4).abs() < 0.05);
     }
@@ -162,7 +248,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let w = sparse_w(2, 32, 48, 0.5);
         let x = Tensor::new(vec![7, 48], (0..7 * 48).map(|_| rng.normal_f32()).collect());
-        let a = CsrMatrix::from_dense(&w).layer(&x);
+        let a = CsrMatrix::from_dense(&w).unwrap().layer(&x);
         let b = dense_layer(&x, &w);
         for (p, q) in a.data().iter().zip(b.data()) {
             assert!((p - q).abs() < 1e-3);
@@ -172,9 +258,56 @@ mod tests {
     #[test]
     fn empty_rows_ok() {
         let w = Tensor::new(vec![3, 4], vec![0.0; 12]);
-        let csr = CsrMatrix::from_dense(&w);
+        let csr = CsrMatrix::from_dense(&w).unwrap();
         assert_eq!(csr.nnz(), 0);
         let x = Tensor::ones(vec![2, 4]);
         assert!(csr.layer(&x).data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn degenerate_shapes_have_zero_density() {
+        // regression: 0 x N used to return NaN (0/0)
+        let w = Tensor::new(vec![0, 4], vec![]);
+        let csr = CsrMatrix::from_dense(&w).unwrap();
+        assert_eq!(csr.density(), 0.0);
+        assert!(!csr.density().is_nan());
+    }
+
+    #[test]
+    fn permuted_layout_is_bit_identical() {
+        let w = sparse_w(7, 29, 40, 0.55);
+        let nat = CsrMatrix::from_dense(&w).unwrap();
+        let per = CsrMatrix::from_dense_permuted(&w).unwrap();
+        assert!(per.perm.is_some());
+        assert_eq!(per.to_dense(), w);
+        assert_eq!(per.nnz(), nat.nnz());
+        let mut rng = Rng::new(8);
+        let x = Tensor::new(vec![11, 40], (0..11 * 40).map(|_| rng.normal_f32()).collect());
+        // bit-identical, not merely close: same per-element f32 op order
+        assert_eq!(per.layer(&x).data(), nat.layer(&x).data());
+        assert_eq!(per.layer_gather(&x).data(), nat.layer_gather(&x).data());
+    }
+
+    #[test]
+    fn permutation_sorts_rows_by_weight() {
+        let w = Tensor::new(
+            vec![3, 4],
+            vec![1.0, 0.0, 0.0, 0.0, 1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 0.0, 0.0],
+        );
+        let per = CsrMatrix::from_dense_permuted(&w).unwrap();
+        assert_eq!(per.perm.as_deref(), Some(&[1u32, 2, 0][..]));
+    }
+
+    #[test]
+    fn blocked_layer_matches_gather_bitwise() {
+        // the unrolled token-major kernel and the scalar gather reference
+        // must agree exactly (shared accumulation-order contract)
+        for (o, k, t) in [(5, 9, 3), (33, 64, 17), (48, 31, 9)] {
+            let w = sparse_w(o as u64, o, k, 0.5);
+            let mut rng = Rng::new(99);
+            let x = Tensor::new(vec![t, k], (0..t * k).map(|_| rng.normal_f32()).collect());
+            let csr = CsrMatrix::from_dense(&w).unwrap();
+            assert_eq!(csr.layer(&x).data(), csr.layer_gather(&x).data());
+        }
     }
 }

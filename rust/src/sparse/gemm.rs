@@ -1,7 +1,7 @@
 //! Dense baseline: y = x @ W^T with register-blocked inner loops — the
 //! "cuBLAS / dense DeepSparse" stand-in that the sparse kernels are
-//! measured against. Single-threaded by default; `SPARSEGPT_THREADS`
-//! fans token tiles out over scoped threads (see [`crate::sparse::threads`]).
+//! measured against. Token tiles are stolen by the current worker pool
+//! (see [`crate::sparse::threads`]); default pool size is 1.
 
 use crate::sparse::threads::{for_each_token_tile, TOKEN_TILE};
 use crate::tensor::Tensor;
@@ -10,7 +10,11 @@ use crate::tensor::Tensor;
 ///
 /// Same token-major axpy structure as the sparse kernels (one contiguous
 /// vectorizable update per weight), so Table 7/8 compare identical kernel
-/// shapes that differ only in how many weight terms they visit.
+/// shapes that differ only in how many weight terms they visit. The tile
+/// body blocks 4 output rows together, reusing each transposed x row for
+/// four weight rows; per output element the k-ascending one-`+=`-per-term
+/// accumulation order of the scalar loop is unchanged (bit-exactness
+/// contract — see DESIGN.md).
 pub fn dense_layer(x: &Tensor, w: &Tensor) -> Tensor {
     let (t_n, k_n) = (x.rows(), x.cols());
     let (o_n, k2) = (w.rows(), w.cols());
@@ -21,10 +25,47 @@ pub fn dense_layer(x: &Tensor, w: &Tensor) -> Tensor {
     let mut y = vec![0.0f32; t_n * o_n];
     for_each_token_tile(t_n, o_n, &mut y, |t0, yrows| {
         let tb = yrows.len() / o_n;
-        let mut acc = [0.0f32; TOKEN_TILE];
-        for o in 0..o_n {
+        let mut acc0 = [0.0f32; TOKEN_TILE];
+        let mut acc1 = [0.0f32; TOKEN_TILE];
+        let mut acc2 = [0.0f32; TOKEN_TILE];
+        let mut acc3 = [0.0f32; TOKEN_TILE];
+        let mut o = 0;
+        while o + 4 <= o_n {
+            let w0 = &wd[o * k_n..][..k_n];
+            let w1 = &wd[(o + 1) * k_n..][..k_n];
+            let w2 = &wd[(o + 2) * k_n..][..k_n];
+            let w3 = &wd[(o + 3) * k_n..][..k_n];
+            let a0 = &mut acc0[..tb];
+            let a1 = &mut acc1[..tb];
+            let a2 = &mut acc2[..tb];
+            let a3 = &mut acc3[..tb];
+            a0.fill(0.0);
+            a1.fill(0.0);
+            a2.fill(0.0);
+            a3.fill(0.0);
+            for k in 0..k_n {
+                let xr = &xd[k * t_n + t0..][..tb];
+                let (v0, v1, v2, v3) = (w0[k], w1[k], w2[k], w3[k]);
+                for tt in 0..tb {
+                    let xv = xr[tt];
+                    a0[tt] += v0 * xv;
+                    a1[tt] += v1 * xv;
+                    a2[tt] += v2 * xv;
+                    a3[tt] += v3 * xv;
+                }
+            }
+            for tt in 0..tb {
+                let yr = &mut yrows[tt * o_n + o..][..4];
+                yr[0] = a0[tt];
+                yr[1] = a1[tt];
+                yr[2] = a2[tt];
+                yr[3] = a3[tt];
+            }
+            o += 4;
+        }
+        while o < o_n {
             let wr = &wd[o * k_n..(o + 1) * k_n];
-            let a = &mut acc[..tb];
+            let a = &mut acc0[..tb];
             a.fill(0.0);
             for (k, &v) in wr.iter().enumerate() {
                 let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
@@ -35,6 +76,7 @@ pub fn dense_layer(x: &Tensor, w: &Tensor) -> Tensor {
             for (tt, &av) in a.iter().enumerate() {
                 yrows[tt * o_n + o] = av;
             }
+            o += 1;
         }
     });
     Tensor::new(vec![t_n, o_n], y)

@@ -12,6 +12,7 @@ pub mod csr;
 pub mod gemm;
 pub mod nm;
 pub mod pack;
+pub mod pool;
 pub mod quant;
 pub mod threads;
 
@@ -19,4 +20,5 @@ pub use csr::CsrMatrix;
 pub use gemm::dense_layer;
 pub use nm::NmMatrix;
 pub use pack::{PackFormat, PackPolicy, PackedMatrix};
+pub use pool::WorkerPool;
 pub use quant::{QCsrMatrix, QDenseMatrix, QNmMatrix};

@@ -80,7 +80,12 @@ impl NmMatrix {
     /// y = x @ W^T on the token-major layout (cf. `CsrMatrix::layer`): each
     /// kept value contributes a contiguous vectorizable axpy over the token
     /// tile — the CPU analog of the sparse-tensor-core dataflow. Token
-    /// tiles fan out over `SPARSEGPT_THREADS` workers (default 1).
+    /// tiles are stolen by the current worker pool (see `sparse::threads`).
+    ///
+    /// Kept values are paired up so two axpy rows stay in registers per
+    /// pass; the flush issues one fused `+=` per value in kept order, so
+    /// every output element sees the exact accumulation sequence of the
+    /// scalar loop (bit-exactness contract — see DESIGN.md).
     pub fn layer(&self, x: &Tensor) -> Tensor {
         let (t_n, k_n) = (x.rows(), x.cols());
         assert_eq!(k_n, self.cols);
@@ -97,6 +102,10 @@ impl NmMatrix {
                 let base = o * per_row;
                 let a = &mut acc[..tb];
                 a.fill(0.0);
+                // pending first half of an axpy pair (padding zeros skip)
+                let mut pk = 0usize;
+                let mut pv = 0.0f32;
+                let mut have = false;
                 for g in 0..groups {
                     let gb = g * self.m;
                     for i in 0..self.n {
@@ -106,10 +115,25 @@ impl NmMatrix {
                             continue;
                         }
                         let k = gb + self.offsets[idx] as usize;
-                        let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
-                        for (av, xv) in a.iter_mut().zip(xr) {
-                            *av += v * xv;
+                        if !have {
+                            (pk, pv, have) = (k, v, true);
+                            continue;
                         }
+                        let xp = &xd[pk * t_n + t0..][..tb];
+                        let xc = &xd[k * t_n + t0..][..tb];
+                        for tt in 0..tb {
+                            let mut s = a[tt];
+                            s += pv * xp[tt];
+                            s += v * xc[tt];
+                            a[tt] = s;
+                        }
+                        have = false;
+                    }
+                }
+                if have {
+                    let xp = &xd[pk * t_n + t0..][..tb];
+                    for (av, xv) in a.iter_mut().zip(xp) {
+                        *av += pv * xv;
                     }
                 }
                 for (tt, &av) in a.iter().enumerate() {

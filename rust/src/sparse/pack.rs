@@ -31,6 +31,9 @@ pub enum PackFormat {
     Auto,
     Dense,
     Csr,
+    /// CSR with rows stored in nonzero-descending order (permutation kept
+    /// in the matrix; bit-identical results — see `CsrMatrix::perm`)
+    CsrPerm,
     Nm(usize, usize),
     /// quantized dense fallback: survivor bitmask + `bits`-bit codes;
     /// `group` = columns per (scale, zero) pair, 0 = per-row
@@ -46,8 +49,8 @@ impl PackFormat {
     pub fn parse(s: &str) -> Result<PackFormat> {
         let err = || {
             anyhow!(
-                "unknown pack format {s:?} (expected auto|dense|csr|n:m or \
-                 q{{dense,csr,nm}}:<bits>[,g=<cols>], e.g. qcsr:4,g=128)"
+                "unknown pack format {s:?} (expected auto|dense|csr|csr:perm|n:m \
+                 or q{{dense,csr,nm}}:<bits>[,g=<cols>], e.g. qcsr:4,g=128)"
             )
         };
         // quantized labels: q<fmt>:<bits>[,g=<cols>]
@@ -80,6 +83,7 @@ impl PackFormat {
             "auto" => Ok(PackFormat::Auto),
             "dense" => Ok(PackFormat::Dense),
             "csr" => Ok(PackFormat::Csr),
+            "csr:perm" => Ok(PackFormat::CsrPerm),
             other => {
                 let (n, m) = other.split_once(':').ok_or_else(err)?;
                 let (n, m): (usize, usize) =
@@ -104,6 +108,7 @@ impl PackFormat {
             PackFormat::Auto => "auto".to_string(),
             PackFormat::Dense => "dense".to_string(),
             PackFormat::Csr => "csr".to_string(),
+            PackFormat::CsrPerm => "csr:perm".to_string(),
             PackFormat::Nm(n, m) => format!("{n}:{m}"),
             PackFormat::QDense { bits, group } => q("qdense", *bits, *group),
             PackFormat::QCsr { bits, group } => q("qcsr", *bits, *group),
@@ -186,7 +191,8 @@ impl PackedMatrix {
     pub fn pack(w: &Tensor, policy: &PackPolicy) -> Result<PackedMatrix> {
         match policy.format {
             PackFormat::Dense => Ok(PackedMatrix::Dense(w.clone())),
-            PackFormat::Csr => Ok(PackedMatrix::Csr(CsrMatrix::from_dense(w))),
+            PackFormat::Csr => Ok(PackedMatrix::Csr(CsrMatrix::from_dense(w)?)),
+            PackFormat::CsrPerm => Ok(PackedMatrix::Csr(CsrMatrix::from_dense_permuted(w)?)),
             PackFormat::Nm(n, m) => Ok(PackedMatrix::Nm(NmMatrix::from_dense(w, n, m)?)),
             PackFormat::QDense { bits, group } => {
                 Ok(PackedMatrix::QDense(QDenseMatrix::from_dense(w, bits, group)?))
@@ -217,7 +223,7 @@ impl PackedMatrix {
                         return Ok(PackedMatrix::Nm(NmMatrix::from_dense(w, n, m)?));
                     }
                 }
-                Ok(PackedMatrix::Csr(CsrMatrix::from_dense(w)))
+                Ok(PackedMatrix::Csr(CsrMatrix::from_dense(w)?))
             }
         }
     }
@@ -264,6 +270,7 @@ impl PackedMatrix {
     pub fn format_label(&self) -> &'static str {
         match self {
             PackedMatrix::Dense(_) => "dense",
+            PackedMatrix::Csr(c) if c.perm.is_some() => "csr:perm",
             PackedMatrix::Csr(_) => "csr",
             PackedMatrix::Nm(_) => "nm",
             PackedMatrix::QDense(_) => "qdense",
@@ -335,6 +342,7 @@ impl PackedMatrix {
     const TAG_QDENSE: u8 = 3;
     const TAG_QCSR: u8 = 4;
     const TAG_QNM: u8 = 5;
+    const TAG_CSRP: u8 = 6;
 
     /// Append this matrix's byte encoding to `out`.
     ///
@@ -356,6 +364,9 @@ impl PackedMatrix {
     /// qnm:    tag=5 u8, n u8, m u8, bits u8, rows u32, cols u32, kept u64,
     ///         grid, group bitmasks u8 * (rows*cols/m),
     ///         codes u8 * ceil(kept*bits/8)
+    /// csrp:   tag=6 u8, pad[3], rows u32, cols u32, nnz u64,
+    ///         perm u32 * rows (perm[i] = logical row stored at slot i),
+    ///         row_ptr u32 * (rows+1), col_idx u32 * nnz, values f32 * nnz
     /// ```
     pub fn write_bytes(&self, out: &mut Vec<u8>) {
         match self {
@@ -369,11 +380,25 @@ impl PackedMatrix {
                 }
             }
             PackedMatrix::Csr(c) => {
-                out.push(Self::TAG_CSR);
-                out.extend_from_slice(&[0u8; 3]);
-                out.extend_from_slice(&(c.rows as u32).to_le_bytes());
-                out.extend_from_slice(&(c.cols as u32).to_le_bytes());
-                out.extend_from_slice(&(c.nnz() as u64).to_le_bytes());
+                match &c.perm {
+                    None => {
+                        out.push(Self::TAG_CSR);
+                        out.extend_from_slice(&[0u8; 3]);
+                        out.extend_from_slice(&(c.rows as u32).to_le_bytes());
+                        out.extend_from_slice(&(c.cols as u32).to_le_bytes());
+                        out.extend_from_slice(&(c.nnz() as u64).to_le_bytes());
+                    }
+                    Some(perm) => {
+                        out.push(Self::TAG_CSRP);
+                        out.extend_from_slice(&[0u8; 3]);
+                        out.extend_from_slice(&(c.rows as u32).to_le_bytes());
+                        out.extend_from_slice(&(c.cols as u32).to_le_bytes());
+                        out.extend_from_slice(&(c.nnz() as u64).to_le_bytes());
+                        for v in perm {
+                            out.extend_from_slice(&v.to_le_bytes());
+                        }
+                    }
+                }
                 for v in &c.row_ptr {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
@@ -470,7 +495,7 @@ impl PackedMatrix {
                 let data = r.f32s(rows * cols)?;
                 Ok((PackedMatrix::Dense(Tensor::new(vec![rows, cols], data)), r.i))
             }
-            Self::TAG_CSR => {
+            Self::TAG_CSR | Self::TAG_CSRP => {
                 r.skip(3)?;
                 let rows = r.u32()? as usize;
                 let cols = r.u32()? as usize;
@@ -478,6 +503,24 @@ impl PackedMatrix {
                 if nnz > rows * cols {
                     bail!("csr nnz {nnz} exceeds {rows}x{cols}");
                 }
+                if nnz > u32::MAX as usize {
+                    // row_ptr is u32: a larger count cannot be represented
+                    // (the writer refuses the same way — CsrMatrix::build)
+                    bail!("csr nnz {nnz} exceeds the u32 index space");
+                }
+                let perm = if tag == Self::TAG_CSRP {
+                    let p = r.u32s(rows)?;
+                    let mut seen = vec![false; rows];
+                    for &v in &p {
+                        if v as usize >= rows || seen[v as usize] {
+                            bail!("csr:perm row permutation is not a permutation of 0..{rows}");
+                        }
+                        seen[v as usize] = true;
+                    }
+                    Some(p)
+                } else {
+                    None
+                };
                 let row_ptr = r.u32s(rows + 1)?;
                 if row_ptr.last().copied().unwrap_or(0) as usize != nnz {
                     bail!("csr row_ptr does not end at nnz");
@@ -494,7 +537,8 @@ impl PackedMatrix {
                     bail!("csr column index out of range");
                 }
                 let values = r.f32s(nnz)?;
-                Ok((PackedMatrix::Csr(CsrMatrix { rows, cols, row_ptr, col_idx, values }), r.i))
+                let c = CsrMatrix { rows, cols, row_ptr, col_idx, values, perm };
+                Ok((PackedMatrix::Csr(c), r.i))
             }
             Self::TAG_NM => {
                 let n = r.u8()? as usize;
@@ -573,6 +617,9 @@ impl PackedMatrix {
                 let nnz = r.u64()? as usize;
                 if !(2..=8).contains(&bits) || nnz > rows * cols {
                     bail!("qcsr header invalid: {bits} bits, {nnz} nnz in {rows}x{cols}");
+                }
+                if nnz > u32::MAX as usize {
+                    bail!("qcsr nnz {nnz} exceeds the u32 index space");
                 }
                 let grid = read_grid(&mut r, rows, cols, bits)?;
                 let row_ptr = r.u32s(rows + 1)?;
@@ -793,7 +840,7 @@ mod tests {
         let (w, _) = magnitude_prune(&random(7, 16, 32), 0.5);
         let x = random(8, 5, 32);
         let want = dense_layer(&x, &w);
-        for fmt in [PackFormat::Dense, PackFormat::Csr] {
+        for fmt in [PackFormat::Dense, PackFormat::Csr, PackFormat::CsrPerm] {
             let p = PackedMatrix::pack(&w, &PackPolicy::with_format(fmt)).unwrap();
             assert_eq!(p.layer(&x).data(), want.data(), "{}", p.format_label());
         }
@@ -825,10 +872,46 @@ mod tests {
             row_ptr: vec![0, 3, 2],
             col_idx: vec![0, 1],
             values: vec![1.0, 2.0],
+            perm: None,
         };
         let mut buf = Vec::new();
         PackedMatrix::Csr(bad).write_bytes(&mut buf);
         assert!(PackedMatrix::read_bytes(&buf).is_err());
+    }
+
+    #[test]
+    fn csr_perm_round_trips_and_bad_perms_rejected() {
+        let (w, _) = magnitude_prune(&random(20, 7, 16), 0.55);
+        let p = PackedMatrix::pack(&w, &PackPolicy::with_format(PackFormat::CsrPerm)).unwrap();
+        assert_eq!(p.format_label(), "csr:perm");
+        assert_eq!(p.to_dense(), w);
+        let mut buf = Vec::new();
+        p.write_bytes(&mut buf);
+        let (q, used) = PackedMatrix::read_bytes(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(q.format_label(), "csr:perm");
+        assert_eq!(q.to_dense(), p.to_dense());
+        match (&p, &q) {
+            (PackedMatrix::Csr(a), PackedMatrix::Csr(b)) => assert_eq!(a.perm, b.perm),
+            _ => panic!("expected csr"),
+        }
+        // a perm that is not a permutation (duplicate slot) must not decode
+        let mut evil = match q {
+            PackedMatrix::Csr(c) => c,
+            _ => unreachable!(),
+        };
+        let perm = evil.perm.as_mut().unwrap();
+        perm[1] = perm[0];
+        let mut buf = Vec::new();
+        PackedMatrix::Csr(evil).write_bytes(&mut buf);
+        assert!(PackedMatrix::read_bytes(&buf).is_err());
+        // truncations stay clean decode errors
+        let p2 = PackedMatrix::pack(&w, &PackPolicy::with_format(PackFormat::CsrPerm)).unwrap();
+        let mut buf = Vec::new();
+        p2.write_bytes(&mut buf);
+        for cut in [0, 1, 9, buf.len() - 1] {
+            assert!(PackedMatrix::read_bytes(&buf[..cut]).is_err(), "cut {cut}");
+        }
     }
 
     #[test]
@@ -837,6 +920,7 @@ mod tests {
             "auto",
             "dense",
             "csr",
+            "csr:perm",
             "2:4",
             "4:8",
             "qdense:4",
@@ -862,6 +946,8 @@ mod tests {
             "qcsr:4,g=x",
             "dense,g=4",
             "2:4,g=8",
+            "csr:perm,g=8",
+            "csr:x",
         ] {
             assert!(PackFormat::parse(bad).is_err(), "{bad:?}");
         }

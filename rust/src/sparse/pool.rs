@@ -1,0 +1,352 @@
+//! Persistent worker pool for the token-tile kernels.
+//!
+//! PR 3's driver spawned `std::thread::scope` workers on every kernel call;
+//! at serve rates (one call per linear per decode step) the spawn/join cost
+//! rivals the math. This pool replaces that: background workers are spawned
+//! once and parked on a condvar, and each `run` call publishes one job that
+//! every worker (plus the caller, who acts as worker 0) executes until the
+//! shared tile queue is drained.
+//!
+//! Sizing is explicit configuration, not ambient state: a pool is built
+//! with a worker count (the CLI validates `SPARSEGPT_THREADS` once at
+//! startup and sizes the process-global pool from it), and engines may own
+//! private pools with different counts in the same process — the old
+//! `num_threads()` `OnceLock`, which froze the first env read forever, is
+//! gone. Kernels find the pool through a thread-local installed by
+//! [`WorkerPool::install`], falling back to the global pool, so the hot
+//! kernels keep their signatures and never touch the environment.
+//!
+//! The job handed to workers borrows the caller's stack (the tile closure
+//! and output spans). That borrow is sound because `run` does not return
+//! until every background worker has finished the epoch it claimed: each
+//! `run` bumps an epoch counter and sets `pending` to the number of
+//! background workers; every worker claims each epoch exactly once and
+//! decrements `pending` when done; the caller blocks on `pending == 0`.
+
+use std::cell::RefCell;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::sparse::threads::worker_count;
+
+/// Type-erased borrow of the caller's `&(dyn Fn() + Sync)` job. The 'static
+/// here is a lie told to the type system only; `run` keeps the real borrow
+/// alive until every worker is done with it.
+#[derive(Clone, Copy)]
+struct Job {
+    ptr: *const (dyn Fn() + Sync + 'static),
+}
+// SAFETY: the pointee is `Sync` (shared by all workers) and outlives every
+// use (see the epoch/pending protocol above).
+unsafe impl Send for Job {}
+
+struct State {
+    job: Option<Job>,
+    /// Bumped once per `run`; workers claim each epoch exactly once.
+    epoch: u64,
+    /// Background workers still running the current epoch.
+    pending: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The submitting caller parks here until `pending == 0`.
+    done_cv: Condvar,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job;
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    job = st.job.expect("pool epoch advanced without a job");
+                    break;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        }
+        // run outside the lock; the body is a work-stealing loop that
+        // returns as soon as the shared tile queue is empty
+        (unsafe { &*job.ptr })();
+        let mut st = shared.state.lock().unwrap();
+        st.pending -= 1;
+        if st.pending == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+struct PoolCore {
+    shared: Arc<Shared>,
+    /// Spawned background workers (total workers = background + 1 caller).
+    background: usize,
+    workers: usize,
+    /// Serializes concurrent `run` calls (e.g. two engines sharing the
+    /// global pool): one job in flight at a time.
+    submit: Mutex<()>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.work_cv_wake();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl PoolCore {
+    fn work_cv_wake(&self) {
+        self.shared.work_cv.notify_all();
+    }
+}
+
+/// A long-lived pool of `workers` threads (the caller counts as one, so
+/// `workers - 1` are spawned). Cheap to clone — clones share the workers;
+/// the threads shut down when the last clone drops.
+#[derive(Clone)]
+pub struct WorkerPool {
+    core: Arc<PoolCore>,
+}
+
+thread_local! {
+    /// Pool installed for the current thread (see [`WorkerPool::install`]).
+    static CURRENT: RefCell<Option<WorkerPool>> = const { RefCell::new(None) };
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+impl WorkerPool {
+    /// Build a pool with `workers` total workers (min 1 — the caller).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, epoch: 0, pending: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers - 1);
+        for i in 1..workers {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("sparse-worker-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn sparse worker");
+            handles.push(h);
+        }
+        WorkerPool {
+            core: Arc::new(PoolCore {
+                shared,
+                background: workers - 1,
+                workers,
+                submit: Mutex::new(()),
+                handles: Mutex::new(handles),
+            }),
+        }
+    }
+
+    /// Total worker count, including the calling thread.
+    pub fn workers(&self) -> usize {
+        self.core.workers
+    }
+
+    /// Size the process-global pool explicitly (first call wins; the CLI
+    /// does this at startup from the validated `SPARSEGPT_THREADS`).
+    /// Returns the global pool.
+    pub fn init_global(workers: usize) -> &'static WorkerPool {
+        GLOBAL.get_or_init(|| WorkerPool::new(workers))
+    }
+
+    /// The process-global pool; lazily sized from `SPARSEGPT_THREADS` if
+    /// [`WorkerPool::init_global`] was never called (library/test use).
+    /// Panics on an unparseable value — CLI users get the friendly error
+    /// from the startup validation first.
+    pub fn global() -> &'static WorkerPool {
+        GLOBAL.get_or_init(|| {
+            WorkerPool::new(worker_count().unwrap_or_else(|e| panic!("{e}")))
+        })
+    }
+
+    /// Pool the current thread should run kernels on: the innermost
+    /// [`WorkerPool::install`] scope, else the global pool.
+    pub fn current() -> WorkerPool {
+        if let Some(p) = CURRENT.with(|c| c.borrow().clone()) {
+            return p;
+        }
+        WorkerPool::global().clone()
+    }
+
+    /// Make this pool the kernel pool for the current thread while `f`
+    /// runs (restored on exit, panic-safe; scopes nest). The serve engine
+    /// wraps its step loop in this so every kernel under it uses the
+    /// engine's own pool.
+    pub fn install<R>(&self, f: impl FnOnce() -> R) -> R {
+        struct Restore(Option<WorkerPool>);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                let prev = self.0.take();
+                CURRENT.with(|c| *c.borrow_mut() = prev);
+            }
+        }
+        let prev = CURRENT.with(|c| c.borrow_mut().replace(self.clone()));
+        let _restore = Restore(prev);
+        f()
+    }
+
+    /// Run `body` on every worker (background workers plus the calling
+    /// thread) until it returns; `body` is expected to drain a shared work
+    /// queue. Blocks until all workers have finished. Must not be called
+    /// from inside a running job (the pool runs one job at a time).
+    pub fn run(&self, body: &(dyn Fn() + Sync)) {
+        if self.core.background == 0 {
+            body();
+            return;
+        }
+        let _turn = self.core.submit.lock().unwrap();
+        let wide: *const (dyn Fn() + Sync) = body;
+        {
+            let mut st = self.core.shared.state.lock().unwrap();
+            // SAFETY: only extends the lifetime; `run` outlives all uses.
+            st.job = Some(Job { ptr: unsafe { std::mem::transmute(wide) } });
+            st.epoch = st.epoch.wrapping_add(1);
+            st.pending = self.core.background;
+        }
+        self.core.shared.work_cv.notify_all();
+        body(); // the caller is worker 0
+        let mut st = self.core.shared.state.lock().unwrap();
+        while st.pending != 0 {
+            st = self.core.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.workers()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Drain `n` work items through the pool, counting claims per item.
+    fn steal_all(pool: &WorkerPool, n: usize) -> Vec<usize> {
+        let next = AtomicUsize::new(0);
+        let claims: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(&|| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            claims[i].fetch_add(1, Ordering::Relaxed);
+        });
+        claims.into_iter().map(|c| c.into_inner()).collect()
+    }
+
+    #[test]
+    fn every_item_claimed_exactly_once() {
+        for workers in [1, 2, 3, 8] {
+            let pool = WorkerPool::new(workers);
+            for n in [0, 1, 7, 64] {
+                let claims = steal_all(&pool, n);
+                assert!(
+                    claims.iter().all(|&c| c == 1),
+                    "workers={workers} n={n}: {claims:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = WorkerPool::new(4);
+        for _ in 0..50 {
+            let claims = steal_all(&pool, 16);
+            assert!(claims.iter().all(|&c| c == 1));
+        }
+    }
+
+    #[test]
+    fn background_workers_participate() {
+        // with enough items, at least one claim must come from a thread
+        // other than the caller
+        let pool = WorkerPool::new(4);
+        let caller = std::thread::current().id();
+        let others = AtomicUsize::new(0);
+        let gate = std::sync::Barrier::new(4);
+        pool.run(&|| {
+            gate.wait(); // forces all 4 workers into the job
+            if std::thread::current().id() != caller {
+                others.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(others.into_inner(), 3);
+    }
+
+    #[test]
+    fn pools_with_different_sizes_coexist() {
+        let small = WorkerPool::new(1);
+        let big = WorkerPool::new(3);
+        assert_eq!(small.workers(), 1);
+        assert_eq!(big.workers(), 3);
+        assert!(steal_all(&small, 9).iter().all(|&c| c == 1));
+        assert!(steal_all(&big, 9).iter().all(|&c| c == 1));
+        // interleave to prove neither pool's state leaked into the other
+        assert!(steal_all(&small, 3).iter().all(|&c| c == 1));
+        assert!(steal_all(&big, 3).iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn install_sets_and_restores_current() {
+        let a = WorkerPool::new(2);
+        let b = WorkerPool::new(3);
+        assert_eq!(a.install(|| WorkerPool::current().workers()), 2);
+        // nested installs shadow and restore
+        let (inner, outer) = a.install(|| {
+            let inner = b.install(|| WorkerPool::current().workers());
+            (inner, WorkerPool::current().workers())
+        });
+        assert_eq!(inner, 3);
+        assert_eq!(outer, 2);
+        // after all scopes exit, current() falls back to the global pool
+        assert_eq!(WorkerPool::current().workers(), WorkerPool::global().workers());
+    }
+
+    #[test]
+    fn concurrent_submitters_are_serialized() {
+        let pool = WorkerPool::new(2);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let claims = steal_all(&pool, 8);
+                        assert!(claims.iter().all(|&c| c == 1));
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn dropping_a_clone_keeps_workers_alive() {
+        let pool = WorkerPool::new(3);
+        let clone = pool.clone();
+        drop(pool);
+        assert!(steal_all(&clone, 12).iter().all(|&c| c == 1));
+    }
+}

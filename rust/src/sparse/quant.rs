@@ -135,7 +135,11 @@ impl QCsrMatrix {
     }
 
     /// y = x @ W^T with dequantization fused into the axpy (cf.
-    /// [`crate::sparse::CsrMatrix::layer`] for the layout trick).
+    /// [`crate::sparse::CsrMatrix::layer`] for the layout trick). The
+    /// nonzero loop is unrolled 4 wide — four codes decoded up front, one
+    /// fused `+=` per term in stream order, so every output element sees
+    /// the exact accumulation sequence of the scalar loop (bit-exactness
+    /// contract — see DESIGN.md); `decode()` ops are unchanged.
     pub fn layer(&self, x: &Tensor) -> Tensor {
         let (t_n, k_n) = (x.rows(), x.cols());
         assert_eq!(k_n, self.cols);
@@ -151,7 +155,31 @@ impl QCsrMatrix {
                 let hi = self.row_ptr[o + 1] as usize;
                 let a = &mut acc[..tb];
                 a.fill(0.0);
-                for i in lo..hi {
+                let mut i = lo;
+                while i + 4 <= hi {
+                    let k0 = self.col_idx[i] as usize;
+                    let k1 = self.col_idx[i + 1] as usize;
+                    let k2 = self.col_idx[i + 2] as usize;
+                    let k3 = self.col_idx[i + 3] as usize;
+                    let v0 = self.grid.decode(o, k0, code_at(&self.codes, i, self.bits));
+                    let v1 = self.grid.decode(o, k1, code_at(&self.codes, i + 1, self.bits));
+                    let v2 = self.grid.decode(o, k2, code_at(&self.codes, i + 2, self.bits));
+                    let v3 = self.grid.decode(o, k3, code_at(&self.codes, i + 3, self.bits));
+                    let x0 = &xd[k0 * t_n + t0..][..tb];
+                    let x1 = &xd[k1 * t_n + t0..][..tb];
+                    let x2 = &xd[k2 * t_n + t0..][..tb];
+                    let x3 = &xd[k3 * t_n + t0..][..tb];
+                    for tt in 0..tb {
+                        let mut s = a[tt];
+                        s += v0 * x0[tt];
+                        s += v1 * x1[tt];
+                        s += v2 * x2[tt];
+                        s += v3 * x3[tt];
+                        a[tt] = s;
+                    }
+                    i += 4;
+                }
+                while i < hi {
                     let k = self.col_idx[i] as usize;
                     // dequant fused into the inner loop: exact decode() ops
                     let v = self.grid.decode(o, k, code_at(&self.codes, i, self.bits));
@@ -159,6 +187,7 @@ impl QCsrMatrix {
                     for (av, xv) in a.iter_mut().zip(xr) {
                         *av += v * xv;
                     }
+                    i += 1;
                 }
                 for (tt, &av) in a.iter().enumerate() {
                     yrows[tt * o_n + o] = av;
@@ -272,6 +301,11 @@ impl QNmMatrix {
             for o in 0..o_n {
                 let a = &mut acc[..tb];
                 a.fill(0.0);
+                // pair up stored entries so two axpy rows run per pass;
+                // one fused += per entry keeps the scalar f32 order
+                let mut pk = 0usize;
+                let mut pv = 0.0f32;
+                let mut have = false;
                 for g in 0..groups {
                     let mask = self.masks[o * groups + g];
                     if mask == 0 {
@@ -285,10 +319,25 @@ impl QNmMatrix {
                         let k = gb + j;
                         let v = self.grid.decode(o, k, code_at(&self.codes, ci, self.bits));
                         ci += 1;
-                        let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
-                        for (av, xv) in a.iter_mut().zip(xr) {
-                            *av += v * xv;
+                        if !have {
+                            (pk, pv, have) = (k, v, true);
+                            continue;
                         }
+                        let xp = &xd[pk * t_n + t0..][..tb];
+                        let xc = &xd[k * t_n + t0..][..tb];
+                        for tt in 0..tb {
+                            let mut s = a[tt];
+                            s += pv * xp[tt];
+                            s += v * xc[tt];
+                            a[tt] = s;
+                        }
+                        have = false;
+                    }
+                }
+                if have {
+                    let xp = &xd[pk * t_n + t0..][..tb];
+                    for (av, xv) in a.iter_mut().zip(xp) {
+                        *av += pv * xv;
                     }
                 }
                 for (tt, &av) in a.iter().enumerate() {
@@ -377,15 +426,35 @@ impl QDenseMatrix {
             for o in 0..o_n {
                 let a = &mut acc[..tb];
                 a.fill(0.0);
+                // pair up survivors (cf. QNmMatrix::layer): two axpy rows
+                // per pass, one fused += per survivor in mask-scan order
+                let mut pk = 0usize;
+                let mut pv = 0.0f32;
+                let mut have = false;
                 for k in 0..self.cols {
                     if !self.stored(o * self.cols + k) {
                         continue;
                     }
                     let v = self.grid.decode(o, k, code_at(&self.codes, ci, self.bits));
                     ci += 1;
-                    let xr = &xd[k * t_n + t0..k * t_n + t0 + tb];
-                    for (av, xv) in a.iter_mut().zip(xr) {
-                        *av += v * xv;
+                    if !have {
+                        (pk, pv, have) = (k, v, true);
+                        continue;
+                    }
+                    let xp = &xd[pk * t_n + t0..][..tb];
+                    let xc = &xd[k * t_n + t0..][..tb];
+                    for tt in 0..tb {
+                        let mut s = a[tt];
+                        s += pv * xp[tt];
+                        s += v * xc[tt];
+                        a[tt] = s;
+                    }
+                    have = false;
+                }
+                if have {
+                    let xp = &xd[pk * t_n + t0..][..tb];
+                    for (av, xv) in a.iter_mut().zip(xp) {
+                        *av += pv * xv;
                     }
                 }
                 for (tt, &av) in a.iter().enumerate() {

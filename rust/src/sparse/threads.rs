@@ -1,21 +1,34 @@
-//! Row-parallel driver for the sparse/dense layer kernels.
+//! Token-tile driver for the sparse/dense layer kernels.
 //!
-//! All three kernels (`dense_layer`, `CsrMatrix::layer`, `NmMatrix::layer`)
-//! share the same loop skeleton: the output y (tokens, d_out) is produced
-//! one token *tile* at a time, and tiles are independent. This module owns
-//! that skeleton and fans tiles out over `std::thread::scope` workers when
-//! `SPARSEGPT_THREADS` asks for more than one (default 1, so single-core
-//! bench numbers stay comparable with earlier PRs).
+//! All kernels (`dense_layer`, `CsrMatrix::layer`, `NmMatrix::layer`, the
+//! quantized variants) share the same loop skeleton: the output y
+//! (tokens, d_out) is produced one token *tile* at a time, and tiles are
+//! independent. This module owns that skeleton and drains the tiles over a
+//! persistent [`WorkerPool`](crate::sparse::pool::WorkerPool) with per-tile
+//! work stealing: workers race on a shared atomic tile counter, so a slow
+//! tile (cache misses, an uneven CSR row range) never leaves the other
+//! workers idle the way the old contiguous-span split could.
 //!
 //! Every output element is computed by exactly one worker with the same
 //! accumulation order as the serial loop, so results are bit-identical for
-//! any thread count — the parity proptests hold regardless of the setting.
+//! any worker count — the parity proptests hold regardless of the setting.
+//!
+//! Which pool runs the tiles is the caller's business, not the kernels':
+//! [`for_each_token_tile`] uses the thread's installed pool (the serve
+//! engine installs its own around the step loop) and falls back to the
+//! process-global one. The old `num_threads()` — a process-global
+//! `OnceLock` that froze the first `SPARSEGPT_THREADS` read forever — is
+//! gone; the env var is read once at startup when the global pool is built.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::sparse::pool::WorkerPool;
 
 /// Token tile kept L1/L2-resident by every kernel in this module's family.
 pub const TOKEN_TILE: usize = 256;
 
 /// Outputs smaller than this stay serial even with workers configured —
-/// thread spawn/join would rival the kernel work itself.
+/// waking the pool would rival the kernel work itself.
 const MIN_PARALLEL_OUT: usize = 8192;
 
 /// Parse a `SPARSEGPT_THREADS` value: a worker count (0 is treated as 1,
@@ -34,8 +47,8 @@ pub fn parse_worker_count(raw: &str) -> Result<usize, String> {
 }
 
 /// Worker count from `SPARSEGPT_THREADS` with the error surfaced — the CLI
-/// calls this at startup so a typo'd value fails the run up front instead
-/// of panicking mid-decode.
+/// calls this at startup (before sizing the global pool) so a typo'd value
+/// fails the run up front instead of panicking mid-decode.
 pub fn worker_count() -> Result<usize, String> {
     match std::env::var("SPARSEGPT_THREADS") {
         Ok(raw) => parse_worker_count(&raw),
@@ -43,32 +56,30 @@ pub fn worker_count() -> Result<usize, String> {
     }
 }
 
-/// Worker count from `SPARSEGPT_THREADS` (default 1; 0 is treated as 1).
-/// Read once per process — the kernels sit in the decode hot loop and must
-/// not take the env lock per call. Panics on an unparseable value (library
-/// callers who want the error instead should check [`worker_count`] first,
-/// as the CLI does at startup).
-pub fn num_threads() -> usize {
-    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *THREADS.get_or_init(|| worker_count().unwrap_or_else(|e| panic!("{e}")))
-}
-
 /// Run `tile(t0, y_rows)` for every token tile `[t0, t0 + tb)` of an output
 /// buffer `y` with `t_n` rows of `o_n` columns, where `y_rows` is exactly
-/// that tile's contiguous row span of `y`. Tiles are distributed over
-/// [`num_threads`] scoped threads (contiguous spans of whole tiles per
-/// worker), or run serially when one thread is configured.
+/// that tile's contiguous row span of `y`. Tiles are stolen one at a time
+/// by the current thread's [`WorkerPool`] (tiny outputs stay serial).
 pub fn for_each_token_tile<F>(t_n: usize, o_n: usize, y: &mut [f32], tile: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
-    // tiny outputs stay serial: spawn/join would rival the kernel work
-    let threads = if y.len() < MIN_PARALLEL_OUT { 1 } else { num_threads() };
-    for_each_token_tile_with(threads, t_n, o_n, y, tile)
+    // tiny outputs stay serial: waking the pool would rival the kernel work
+    if y.len() < MIN_PARALLEL_OUT {
+        return serial_tiles(t_n, o_n, y, &tile);
+    }
+    for_each_token_tile_in(&WorkerPool::current(), t_n, o_n, y, tile)
 }
 
-fn for_each_token_tile_with<F>(threads: usize, t_n: usize, o_n: usize, y: &mut [f32], tile: F)
-where
+/// [`for_each_token_tile`] on an explicit pool (no size cutoff — callers
+/// who name a pool mean it).
+pub fn for_each_token_tile_in<F>(
+    pool: &WorkerPool,
+    t_n: usize,
+    o_n: usize,
+    y: &mut [f32],
+    tile: F,
+) where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     debug_assert_eq!(y.len(), t_n * o_n);
@@ -76,48 +87,61 @@ where
         return;
     }
     let n_tiles = t_n.div_ceil(TOKEN_TILE);
-    let threads = threads.min(n_tiles);
-    if threads <= 1 {
-        for t0 in (0..t_n).step_by(TOKEN_TILE) {
-            let tb = TOKEN_TILE.min(t_n - t0);
-            tile(t0, &mut y[t0 * o_n..(t0 + tb) * o_n]);
-        }
-        return;
+    if pool.workers() <= 1 || n_tiles <= 1 {
+        return serial_tiles(t_n, o_n, y, &tile);
     }
-    // contiguous spans of whole tiles per worker, so each worker's output
-    // rows form one contiguous &mut slice of y
-    let rows_per = n_tiles.div_ceil(threads) * TOKEN_TILE;
-    std::thread::scope(|scope| {
-        let mut rest = &mut y[..];
-        let mut t0 = 0usize;
-        while t0 < t_n {
-            let span = rows_per.min(t_n - t0);
-            // move `rest` out so the split inherits its full lifetime
-            let taken = std::mem::take(&mut rest);
-            let (mine, tail) = taken.split_at_mut(span * o_n);
-            rest = tail;
-            let start = t0;
-            let tile = &tile;
-            scope.spawn(move || {
-                let mut off = 0usize;
-                while off < span {
-                    let tb = TOKEN_TILE.min(span - off);
-                    tile(start + off, &mut mine[off * o_n..(off + tb) * o_n]);
-                    off += tb;
-                }
-            });
-            t0 += span;
+    // Work stealing over a shared tile counter. Each claimed tile i owns
+    // the disjoint row span y[i*TOKEN_TILE*o_n ..], so handing workers raw
+    // sub-slices is sound: no element is reachable from two tiles.
+    let next = AtomicUsize::new(0);
+    let out = SpanOut { ptr: y.as_mut_ptr() };
+    let next = &next;
+    let out = &out;
+    let tile = &tile;
+    pool.run(&move || loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n_tiles {
+            break;
         }
+        let t0 = i * TOKEN_TILE;
+        let tb = TOKEN_TILE.min(t_n - t0);
+        // SAFETY: tile i exclusively owns rows [t0, t0 + tb) of y, and the
+        // pool's run() does not return until every worker is done.
+        let rows = unsafe { std::slice::from_raw_parts_mut(out.ptr.add(t0 * o_n), tb * o_n) };
+        tile(t0, rows);
     });
 }
+
+fn serial_tiles<F>(t_n: usize, o_n: usize, y: &mut [f32], tile: &F)
+where
+    F: Fn(usize, &mut [f32]),
+{
+    debug_assert_eq!(y.len(), t_n * o_n);
+    if t_n == 0 || o_n == 0 {
+        return;
+    }
+    for t0 in (0..t_n).step_by(TOKEN_TILE) {
+        let tb = TOKEN_TILE.min(t_n - t0);
+        tile(t0, &mut y[t0 * o_n..(t0 + tb) * o_n]);
+    }
+}
+
+/// Raw base pointer of the shared output buffer, smuggled past the closure
+/// capture rules; tile ownership (disjoint spans) makes the aliasing sound.
+struct SpanOut {
+    ptr: *mut f32,
+}
+unsafe impl Send for SpanOut {}
+unsafe impl Sync for SpanOut {}
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn fill(threads: usize, t_n: usize, o_n: usize) -> Vec<f32> {
+    fn fill(workers: usize, t_n: usize, o_n: usize) -> Vec<f32> {
+        let pool = WorkerPool::new(workers);
         let mut y = vec![0.0f32; t_n * o_n];
-        for_each_token_tile_with(threads, t_n, o_n, &mut y, |t0, rows| {
+        for_each_token_tile_in(&pool, t_n, o_n, &mut y, |t0, rows| {
             for (i, v) in rows.iter_mut().enumerate() {
                 *v = (t0 * o_n + i) as f32;
             }
@@ -127,27 +151,38 @@ mod tests {
 
     #[test]
     fn covers_every_element_exactly_once() {
-        for threads in [1, 2, 3, 8] {
+        for workers in [1, 2, 3, 8] {
             for (t_n, o_n) in [(1, 3), (255, 4), (256, 4), (257, 4), (1000, 7)] {
-                let y = fill(threads, t_n, o_n);
+                let y = fill(workers, t_n, o_n);
                 for (i, v) in y.iter().enumerate() {
-                    assert_eq!(*v, i as f32, "threads={threads} t_n={t_n} o_n={o_n} idx {i}");
+                    assert_eq!(*v, i as f32, "workers={workers} t_n={t_n} o_n={o_n} idx {i}");
                 }
             }
         }
     }
 
     #[test]
-    fn oversubscribed_thread_count_is_clamped() {
+    fn oversubscribed_worker_count_is_harmless() {
         // more workers than tiles must not panic or drop tiles
         let y = fill(64, 300, 2);
         assert_eq!(y.last().copied(), Some((300 * 2 - 1) as f32));
     }
 
     #[test]
-    fn env_default_is_single_thread() {
-        if std::env::var_os("SPARSEGPT_THREADS").is_none() {
-            assert_eq!(num_threads(), 1);
+    fn installed_pool_drives_the_implicit_driver() {
+        // large enough to clear MIN_PARALLEL_OUT so the pool path runs
+        let (t_n, o_n) = (513, 32);
+        let pool = WorkerPool::new(3);
+        let mut y = vec![0.0f32; t_n * o_n];
+        pool.install(|| {
+            for_each_token_tile(t_n, o_n, &mut y, |t0, rows| {
+                for (i, v) in rows.iter_mut().enumerate() {
+                    *v = (t0 * o_n + i) as f32;
+                }
+            });
+        });
+        for (i, v) in y.iter().enumerate() {
+            assert_eq!(*v, i as f32, "idx {i}");
         }
     }
 

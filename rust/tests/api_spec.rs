@@ -126,6 +126,9 @@ fn job_spec_label_round_trip() {
         "serve/nano/sparsegpt-50%,cancel=1@3",
         "serve/small/sparsegpt-2:4,cancel=0@2+3@7",
         "serve/medium/sparsegpt-50%,kv=off,fmt=qcsr:4,net=127.0.0.1:9000,cancel=2@5",
+        "serve/nano/sparsegpt-50%,workers=4",
+        "serve/medium/sparsegpt-50%,kv=off,chunk=1,workers=2,fmt=qcsr:4",
+        "serve/nano/sparsegpt-50%,fmt=csr:perm",
     ] {
         let spec = JobSpec::parse(label).unwrap_or_else(|e| panic!("{label}: {e:#}"));
         assert_eq!(spec.label(), label, "label round trip for {label}");
@@ -176,6 +179,8 @@ fn job_spec_rejects_malformed() {
         "serve/nano/sparsegpt-50%,cancel=1",
         "serve/nano/sparsegpt-50%,cancel=x@3",
         "serve/nano/sparsegpt-50%,cancel=1@",
+        "serve/nano/sparsegpt-50%,workers=",
+        "serve/nano/sparsegpt-50%,workers=x",
         "gen-data/nano",
     ] {
         assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
@@ -231,6 +236,10 @@ fn serve_cache_knob_labels_map_to_fields() {
     assert_eq!(s.prefill_chunk, 4);
     assert_eq!(s.cache_budget_mb, 8);
     assert_eq!(s.max_prefill_tokens, 64);
+    let JobSpec::Serve(s) = JobSpec::parse("serve/nano/sparsegpt-50%,workers=3").unwrap() else {
+        panic!("wrong kind");
+    };
+    assert_eq!(s.workers, 3);
     // defaults: the canonical label of a default spec carries no knob tail
     let JobSpec::Serve(d) = JobSpec::parse("serve/nano/sparsegpt-50%").unwrap() else {
         panic!("wrong kind");

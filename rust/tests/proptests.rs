@@ -16,7 +16,9 @@ use sparsegpt::solver::hessian::{dampened_hinv_chol_f64, layer_sq_error};
 use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
 use sparsegpt::solver::quant::QuantGrid;
 use sparsegpt::solver::sparsegpt_ref::{ref_sparsegpt, Pattern};
-use sparsegpt::sparse::{dense_layer, CsrMatrix, NmMatrix, PackFormat, PackPolicy, PackedMatrix};
+use sparsegpt::sparse::{
+    dense_layer, CsrMatrix, NmMatrix, PackFormat, PackPolicy, PackedMatrix, WorkerPool,
+};
 use sparsegpt::tensor::linalg::{dampen, Mat};
 use sparsegpt::tensor::Tensor;
 use sparsegpt::util::prng::Rng;
@@ -146,7 +148,7 @@ fn prop_sparse_engines_match_dense() {
         let p = rng.f64() * 0.9;
         let (wp, _) = magnitude_prune(&w, p);
         let yd = dense_layer(&x, &wp);
-        let yc = CsrMatrix::from_dense(&wp).layer(&x);
+        let yc = CsrMatrix::from_dense(&wp).unwrap().layer(&x);
         for (a, b) in yd.data().iter().zip(yc.data()) {
             assert!((a - b).abs() < 1e-3, "csr mismatch seed {seed}");
         }
@@ -180,7 +182,7 @@ fn prop_sparse_kernels_match_dense_on_arbitrary_masks() {
         let x = Tensor::new(vec![t, k], (0..t * k).map(|_| rng.normal_f32()).collect());
         let yd = dense_layer(&x, &w);
         let ymm = x.matmul(&w.transpose2());
-        let csr = CsrMatrix::from_dense(&w);
+        let csr = CsrMatrix::from_dense(&w).unwrap();
         for (label, y) in [("csr", csr.layer(&x)), ("csr-gather", csr.layer_gather(&x))] {
             for ((a, b), c) in y.data().iter().zip(yd.data()).zip(ymm.data()) {
                 assert!((a - b).abs() < 1e-3, "{label} vs dense, seed {seed}");
@@ -209,6 +211,113 @@ fn prop_sparse_kernels_match_dense_on_arbitrary_masks() {
             }
         }
     }
+}
+
+/// Token counts straddling the tile boundary (t_n ≡ -1, 0, +1 mod
+/// TOKEN_TILE = 256), with enough output columns that t_n * o_n clears
+/// MIN_PARALLEL_OUT and the parallel tile driver actually engages.
+const TILE_EDGE_SHAPES: [(usize, usize); 3] = [(255, 48), (256, 48), (257, 48)];
+
+/// Property: the blocked parallel kernels are BIT-identical to their
+/// scalar gather references for every pool size — the worker pool may
+/// change which thread computes a token tile, never the sequence of
+/// additions any output element sees.
+#[test]
+fn prop_blocked_kernels_bit_identical_across_pool_sizes() {
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(seed ^ 0x9A0);
+        for (t, o) in TILE_EDGE_SHAPES {
+            let k = 32;
+            let w = bernoulli_masked(&mut rng, o, k, rng.f64());
+            let x = Tensor::new(vec![t, k], (0..t * k).map(|_| rng.normal_f32()).collect());
+            let csr = CsrMatrix::from_dense(&w).unwrap();
+            let wnm = random_nm_masked(&mut rng, o, k, 2, 4);
+            let nm = NmMatrix::from_dense(&wnm, 2, 4).unwrap();
+            // scalar references, computed on a single-worker pool
+            let (csr_ref, nm_ref, dense_ref) = WorkerPool::new(1)
+                .install(|| (csr.layer_gather(&x), nm.layer_gather(&x), dense_layer(&x, &w)));
+            for workers in [1usize, 2, 3, 8] {
+                let pool = WorkerPool::new(workers);
+                let (yc, yn, yd) =
+                    pool.install(|| (csr.layer(&x), nm.layer(&x), dense_layer(&x, &w)));
+                assert_eq!(yc.data(), csr_ref.data(), "csr seed {seed} t {t} x{workers}");
+                assert_eq!(yn.data(), nm_ref.data(), "nm seed {seed} t {t} x{workers}");
+                assert_eq!(yd.data(), dense_ref.data(), "dense seed {seed} t {t} x{workers}");
+            }
+        }
+    }
+}
+
+/// Property: the row-permuted CSR layout is numerically invisible —
+/// to_dense, the blocked kernel and the gather kernel are all
+/// BIT-identical to the unpermuted layout on arbitrary masks.
+#[test]
+fn prop_permuted_csr_bit_identical_to_unpermuted() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xAA0);
+        let o = 4 + 4 * rng.below(10);
+        let k = 8 * (1 + rng.below(6));
+        let t = 1 + rng.below(10);
+        let w = bernoulli_masked(&mut rng, o, k, rng.f64());
+        let x = Tensor::new(vec![t, k], (0..t * k).map(|_| rng.normal_f32()).collect());
+        let plain = CsrMatrix::from_dense(&w).unwrap();
+        let perm = CsrMatrix::from_dense_permuted(&w).unwrap();
+        assert_eq!(perm.to_dense().data(), w.data(), "to_dense seed {seed}");
+        assert_eq!(perm.layer(&x).data(), plain.layer(&x).data(), "layer seed {seed}");
+        assert_eq!(
+            perm.layer_gather(&x).data(),
+            plain.layer_gather(&x).data(),
+            "gather seed {seed}"
+        );
+    }
+}
+
+/// Regression: two engines in one process can decode on DIFFERENT worker
+/// counts (the old process-wide OnceLock cached whatever count the first
+/// kernel call saw, forever), and the count never changes what anything
+/// decodes.
+#[test]
+fn prop_engines_with_different_worker_counts_agree() {
+    let cfg = prop_cfg("prop-workers");
+    let fp = init_params(&cfg, 0);
+    let model = SparseModel::from_params(&fp, &PackPolicy::default()).unwrap();
+    let reqs = || -> Vec<(usize, ServeRequest)> {
+        (0..3)
+            .map(|i| {
+                let r = ServeRequest {
+                    id: i as u64,
+                    prompt: vec![1, 2, 3],
+                    max_new_tokens: 6,
+                    seed: i as u64,
+                };
+                (0, r)
+            })
+            .collect()
+    };
+    // both engines alive at once, each sized differently
+    let opts = |workers: usize| EngineOptions {
+        temperature: 0.0,
+        top_k: 0,
+        workers,
+        ..EngineOptions::default()
+    };
+    let e1 = ServeEngine::new(&model, opts(1));
+    let e3 = ServeEngine::new(&model, opts(3));
+    assert_eq!((e1.workers(), e3.workers()), (1, 3), "pool sizes must be per-engine");
+    let streams = |e: &ServeEngine| -> Vec<(u64, Vec<i32>)> {
+        let mut out: Vec<(u64, Vec<i32>)> = e
+            .run(reqs(), &mut |_| {})
+            .unwrap()
+            .finished
+            .iter()
+            .map(|f| (f.id, f.tokens.clone()))
+            .collect();
+        out.sort_by_key(|(id, _)| *id);
+        out
+    };
+    let (a, b) = (streams(&e1), streams(&e3));
+    assert!(a.iter().any(|(_, t)| !t.is_empty()), "workload produced no tokens");
+    assert_eq!(a, b, "worker count changed decode output");
 }
 
 /// Build an arbitrary Bernoulli-masked matrix (any density, empty rows ok).
