@@ -27,7 +27,8 @@
 //!         "effective_bits": ..., "bytes_per_weight": ...,
 //!         "tokens": ..., "decode_secs": ..., "prefill_secs": ...,
 //!         "tokens_per_sec": ..., "speedup_vs_dense": ...,
-//!         "speedup_vs_uncached": ... }, ...] }
+//!         "speedup_vs_uncached": ... }, ...],
+//!     "metrics": { ...final Obs snapshot across every measured engine... } }
 //!
 //! Env knobs: SPARSEGPT_BENCH_CONFIGS (default "small"),
 //! SPARSEGPT_BENCH_SERVE_REQUESTS (4), SPARSEGPT_BENCH_SERVE_TOKENS (4),
@@ -42,6 +43,7 @@ use sparsegpt::eval::report::Table;
 use sparsegpt::model::init::init_params;
 use sparsegpt::model::layout::{FlatParams, PRUNABLE_KINDS};
 use sparsegpt::model::ModelCfg;
+use sparsegpt::obs::Obs;
 use sparsegpt::serve::{
     EngineOptions, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel,
 };
@@ -138,6 +140,9 @@ fn main() -> Result<()> {
         ],
     );
     let mut rows = Vec::new();
+    // one registry across every measured engine: the BENCH doc embeds its
+    // final snapshot so a bench run's token/step/phase totals ride along
+    let obs = Obs::default();
     // dense baseline tokens/sec per mode, for the per-mode "vs dense" column
     let mut dense_tps = [0.0f64; 2];
     for (label, params, fmt) in &variants {
@@ -147,7 +152,9 @@ fn main() -> Result<()> {
             let opts = opts_for(kv_cache);
             // warmup step keeps first-touch allocation out of the timing
             let _ = ServeEngine::new(&model, opts).run(workload(1, 1), &mut |_| {})?;
-            let out = ServeEngine::new(&model, opts).run(workload(batch, tokens), &mut |_| {})?;
+            let out = ServeEngine::new(&model, opts)
+                .with_obs(obs.clone())
+                .run(workload(batch, tokens), &mut |_| {})?;
             // end-to-end throughput: charge the cached mode its prefill
             // pass (which yields each request's first token)
             let total_secs = out.decode_secs + out.prefill_secs;
@@ -207,6 +214,7 @@ fn main() -> Result<()> {
         ("max_new_tokens", Json::Num(tokens as f64)),
         ("prompt_len", Json::Num(prompt_len as f64)),
         ("rows", Json::Arr(rows)),
+        ("metrics", obs.snapshot().to_json()),
     ]);
     let text = doc.to_string_pretty();
     std::fs::write("BENCH_serve.json", &text)?;

@@ -14,7 +14,8 @@
 //!   { "bench": "table7_cpu_speedup", "config": ..., "tokens": 400,
 //!     "workers": ..., "rows": [
 //!       { "layout": "csr", "sparsity": 0.5, "dense_secs": ...,
-//!         "sparse_secs": ..., "speedup": ..., "ideal": 2.0 }, ...] }
+//!         "sparse_secs": ..., "speedup": ..., "ideal": 2.0 }, ...],
+//!     "metrics": { ...Obs snapshot with per-worker busy_ns/tiles... } }
 //!
 //! Env knobs: SPARSEGPT_BENCH_CONFIGS (default "medium"),
 //! SPARSEGPT_BENCH_TOKENS (400).
@@ -27,6 +28,7 @@ use sparsegpt::bench::{env_configs, env_usize};
 use sparsegpt::eval::report::Table;
 use sparsegpt::model::layout::PRUNABLE_KINDS;
 use sparsegpt::model::ModelCfg;
+use sparsegpt::obs::Obs;
 use sparsegpt::solver::magnitude::magnitude_prune;
 use sparsegpt::sparse::{dense_layer, CsrMatrix, WorkerPool};
 use sparsegpt::tensor::Tensor;
@@ -44,6 +46,9 @@ fn main() -> Result<()> {
         .ok_or_else(|| anyhow!("unknown config {config:?} (expected nano..large)"))?;
     let tokens = env_usize("SPARSEGPT_BENCH_TOKENS", 400);
     let workers = WorkerPool::global().workers();
+    // snapshot the shared pool's busy-time/tile counters into the BENCH doc
+    let obs = Obs::default();
+    obs.attach_pool(WorkerPool::global().clone());
     let mut rng = Rng::new(0);
 
     // one weight stack (all blocks, all linears) with random weights —
@@ -128,6 +133,7 @@ fn main() -> Result<()> {
         ("tokens", Json::Num(tokens as f64)),
         ("workers", Json::Num(workers as f64)),
         ("rows", Json::Arr(rows)),
+        ("metrics", obs.snapshot().to_json()),
     ]);
     let text = doc.to_string_pretty();
     std::fs::write("BENCH_table7.json", &text)?;

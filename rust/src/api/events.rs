@@ -131,6 +131,12 @@ pub enum Event {
         /// release) is visible in the event stream and greppable in CI
         cache_bytes_in_use: u64,
     },
+    /// a point-in-time metrics snapshot from the serve-path [`Obs`]
+    /// registry (periodic `snap_every` ticks plus one at drain); the
+    /// payload is the snapshot object itself, flattened into the event
+    ///
+    /// [`Obs`]: crate::obs::Obs
+    MetricsSnapshot { snapshot: Json },
     /// the job finished (ok or failed)
     JobFinished { job: String, ok: bool, secs: f64 },
 }
@@ -186,6 +192,7 @@ impl Event {
             Event::RequestRejected { .. } => "request-rejected",
             Event::ServeListening { .. } => "serve-listening",
             Event::EngineDrained { .. } => "engine-drained",
+            Event::MetricsSnapshot { .. } => "metrics-snapshot",
             Event::JobFinished { .. } => "job-finished",
         }
     }
@@ -317,6 +324,15 @@ impl Event {
                 ("cancelled", n(*cancelled as f64)),
                 ("cache_bytes_in_use", n(*cache_bytes_in_use as f64)),
             ]),
+            Event::MetricsSnapshot { snapshot } => {
+                // flatten: the snapshot object IS the event, plus `reason`
+                let mut m = match snapshot {
+                    Json::Obj(m) => m.clone(),
+                    other => BTreeMap::from([("snapshot".to_string(), other.clone())]),
+                };
+                m.insert("reason".to_string(), s(self.reason()));
+                Json::Obj(m)
+            }
             Event::JobFinished { job, ok, secs } => obj(vec![
                 reason,
                 ("job", s(job)),
@@ -330,6 +346,13 @@ impl Event {
 /// Where a job's events go.
 pub trait EventSink {
     fn emit(&mut self, ev: &Event);
+
+    /// How many events this sink failed to deliver. Advisory streams
+    /// swallow write errors rather than abort the job; this makes the
+    /// loss countable (surfaced as the `events_dropped_total` metric).
+    fn dropped_count(&self) -> u64 {
+        0
+    }
 }
 
 /// Classic terminal log lines (what the CLI printed before the event
@@ -442,6 +465,8 @@ impl EventSink for HumanSink {
                  still reserved)",
                 self.tag("serve")
             ),
+            // machine-shaped payload — JSONL consumers want it, humans don't
+            Event::MetricsSnapshot { .. } => {}
             Event::JobFinished { .. } => {}
         }
     }
@@ -449,20 +474,22 @@ impl EventSink for HumanSink {
 
 /// Machine-readable JSON lines: one compact object per event, each with a
 /// `reason` field. Write errors are deliberately swallowed — the event
-/// stream is advisory and must never abort the job it narrates.
+/// stream is advisory and must never abort the job it narrates — but each
+/// swallowed event is counted in [`EventSink::dropped_count`].
 pub struct JsonlSink<W: Write> {
     out: W,
+    dropped: u64,
 }
 
 impl JsonlSink<std::io::Stdout> {
     pub fn stdout() -> JsonlSink<std::io::Stdout> {
-        JsonlSink { out: std::io::stdout() }
+        JsonlSink { out: std::io::stdout(), dropped: 0 }
     }
 }
 
 impl<W: Write> JsonlSink<W> {
     pub fn new(out: W) -> JsonlSink<W> {
-        JsonlSink { out }
+        JsonlSink { out, dropped: 0 }
     }
 
     pub fn into_inner(self) -> W {
@@ -472,8 +499,15 @@ impl<W: Write> JsonlSink<W> {
 
 impl<W: Write> EventSink for JsonlSink<W> {
     fn emit(&mut self, ev: &Event) {
-        let _ = writeln!(self.out, "{}", ev.to_json().to_string_compact());
-        let _ = self.out.flush();
+        let wrote = writeln!(self.out, "{}", ev.to_json().to_string_compact())
+            .and_then(|()| self.out.flush());
+        if wrote.is_err() {
+            self.dropped += 1;
+        }
+    }
+
+    fn dropped_count(&self) -> u64 {
+        self.dropped
     }
 }
 
@@ -540,6 +574,9 @@ mod tests {
                 cancelled: 1,
                 cache_bytes_in_use: 0,
             },
+            Event::MetricsSnapshot {
+                snapshot: Json::parse(r#"{"generation":1,"tokens_decoded_total":8}"#).unwrap(),
+            },
             Event::JobFinished { job: "prune".into(), ok: true, secs: 2.0 },
         ]
     }
@@ -574,5 +611,31 @@ mod tests {
         let mut sink = MemorySink::new();
         sink.emit(&Event::Message { text: "x".into() });
         assert_eq!(sink.events.len(), 1);
+    }
+
+    /// Every write fails — the disk-full / broken-pipe stand-in.
+    struct FailWriter;
+
+    impl Write for FailWriter {
+        fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::other("disk full"))
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_counts_dropped_events_instead_of_aborting() {
+        let mut sink = JsonlSink::new(FailWriter);
+        assert_eq!(sink.dropped_count(), 0);
+        sink.emit(&Event::Message { text: "x".into() });
+        sink.emit(&Event::Message { text: "y".into() });
+        assert_eq!(sink.dropped_count(), 2, "each failed write counts once");
+        // a healthy sink never counts drops
+        let mut ok = JsonlSink::new(Vec::new());
+        ok.emit(&Event::Message { text: "z".into() });
+        assert_eq!(ok.dropped_count(), 0);
     }
 }

@@ -9,6 +9,7 @@ use std::path::PathBuf;
 
 use crate::coordinator::MatrixReport;
 use crate::model::layout::FlatParams;
+use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
 pub struct GenDataReport {
@@ -167,6 +168,9 @@ pub struct ServeReport {
     pub requests: Vec<ServeRequestRow>,
     /// where the packed checkpoint was written, when requested
     pub packed_to: Option<PathBuf>,
+    /// the post-run [`Obs`](crate::obs::Obs) snapshot, as the same JSON
+    /// object the `stats` frame and `metrics-snapshot` event carry
+    pub metrics: Json,
 }
 
 /// The result of one executed [`crate::api::JobSpec`].

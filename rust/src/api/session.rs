@@ -32,6 +32,7 @@ use crate::model::init::init_params;
 use crate::model::layout::FlatParams;
 use crate::model::sparse_store::SparseStore;
 use crate::model::stats::ModelStats;
+use crate::obs::{Clock, Obs, Phase};
 use crate::runtime::BackendKind;
 use crate::serve::net::{NetServer, NetServerOptions};
 use crate::serve::{
@@ -606,6 +607,11 @@ fn run_e2e(ws: &Workspace, spec: &E2eSpec, sink: &mut dyn EventSink) -> Result<E
 /// sparse kernels, narrating the request lifecycle on the event stream.
 fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Result<ServeReport> {
     let cfg = ws.config(&spec.config)?;
+    // one registry for the whole run: prune/pack spans, engine counters,
+    // net traffic — every sink (stats frame, snapshot events, Prometheus
+    // dump, report) reads the same atomics. The mock clock (1ms per read)
+    // makes every timing deterministic for the golden tests.
+    let obs = if spec.mock_clock { Obs::new(Clock::mock(1_000_000)) } else { Obs::default() };
     let policy = PackPolicy::with_format(spec.format);
     let (store, label, packed_to) = match &spec.store {
         Some(path) => {
@@ -632,14 +638,23 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
                 exact_rows: None,
             };
             let chunks = calib_for(ws, &cfg, spec.calib, spec.calib_seed, initialized, sink)?;
-            let pr = prune_params(ws, &spec.config, params, &chunks, &opts, sink)?;
+            let pr = {
+                let _span = obs.span(Phase::Solve);
+                prune_params(ws, &spec.config, params, &chunks, &opts, sink)?
+            };
             match &spec.save_store {
                 Some(path) => {
-                    let store = pack_to(&pr.params, &pr.label, &policy, path, sink)?;
+                    let store = {
+                        let _span = obs.span(Phase::Pack);
+                        pack_to(&pr.params, &pr.label, &policy, path, sink)?
+                    };
                     (store, pr.label, Some(path.clone()))
                 }
                 None => {
-                    let store = SparseStore::pack(&pr.params, &policy, &pr.label)?;
+                    let store = {
+                        let _span = obs.span(Phase::Pack);
+                        SparseStore::pack(&pr.params, &policy, &pr.label)?
+                    };
                     sink.emit(&Event::Message {
                         text: format!(
                             "[serve {}] packed in-memory: {} (density {:.3}, {:.2} bits/weight)",
@@ -669,13 +684,19 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
         prefill_chunk: spec.prefill_chunk,
         cache_budget_bytes: spec.cache_budget_mb as u64 * 1024 * 1024,
         workers: spec.workers,
+        snap_every: spec.snap_every,
     };
+    // every engine event also refreshes the dropped-event counter from the
+    // sink, so a dying JSONL pipe shows up in the very stream that survives
+    let metrics = obs.metrics();
     let mut listen_addr = None;
     let outcome = match &spec.listen {
         Some(addr) => {
             // network front door: requests come in over TCP; the run drains
             // when a client sends a `shutdown` frame
-            let srv = NetServer::bind(addr, NetServerOptions::new(spec.config.clone(), cfg.vocab))?;
+            let mut net_opts = NetServerOptions::new(spec.config.clone(), cfg.vocab);
+            net_opts.obs = Some(obs.clone());
+            let srv = NetServer::bind(addr, net_opts)?;
             let bound = srv.local_addr().to_string();
             sink.emit(&Event::ServeListening { addr: bound.clone() });
             if let Some(path) = &spec.addr_file {
@@ -683,7 +704,10 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
                     .with_context(|| format!("writing listen address to {path:?}"))?;
             }
             listen_addr = Some(bound);
-            srv.serve(&model, opts, &mut |ev| sink.emit(&serve_event_to_event(ev)))?
+            srv.serve(&model, opts, &mut |ev| {
+                sink.emit(&serve_event_to_event(ev));
+                metrics.events_dropped_total.set_at_least(sink.dropped_count());
+            })?
         }
         None => {
             // synthetic workload: seeded prompts, staggered arrivals, plus
@@ -705,8 +729,13 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
             }
             let cancels = spec.cancel.iter().map(|&(id, step)| (step, id)).collect();
             let mut source = SyntheticSource::new(incoming, cancels);
-            ServeEngine::new(&model, opts)
-                .run_source(&mut source, &mut |ev| sink.emit(&serve_event_to_event(ev)))?
+            ServeEngine::new(&model, opts).with_obs(obs.clone()).run_source(
+                &mut source,
+                &mut |ev| {
+                    sink.emit(&serve_event_to_event(ev));
+                    metrics.events_dropped_total.set_at_least(sink.dropped_count());
+                },
+            )?
         }
     };
 
@@ -727,6 +756,12 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
     requests.sort_by_key(|r| r.id);
     let mut ttfts: Vec<f64> = requests.iter().map(|r| r.ttft_secs).collect();
     ttfts.sort_by(|a, b| a.total_cmp(b));
+    // one post-run snapshot feeds both the Prometheus dump and the report
+    let snap = obs.snapshot();
+    if let Some(path) = &spec.metrics_file {
+        std::fs::write(path, snap.to_prometheus())
+            .with_context(|| format!("writing Prometheus metrics to {path:?}"))?;
+    }
     Ok(ServeReport {
         config: spec.config.clone(),
         label,
@@ -749,6 +784,7 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
         listen: listen_addr,
         requests,
         packed_to,
+        metrics: snap.to_json(),
     })
 }
 
@@ -793,6 +829,9 @@ fn serve_event_to_event(ev: &ServeEvent) -> Event {
                 cancelled: *cancelled,
                 cache_bytes_in_use: *cache_bytes_in_use,
             }
+        }
+        ServeEvent::MetricsSnapshot { snapshot } => {
+            Event::MetricsSnapshot { snapshot: snapshot.clone() }
         }
     }
 }

@@ -418,11 +418,13 @@ pub use crate::serve::engine::DEFAULT_PREFILL_CHUNK;
 /// list after the prune spec (only non-default values appear):
 /// `serve/<config>/<prune-spec>[,kv=off][,chunk=<n>][,cache-mb=<n>]`
 /// `[,prefill=<n>][,workers=<n>][,fmt=<pack-format>][,g=<cols>][,net=<addr>]`
-/// `[,cancel=<id>@<step>[+...]]` — `fmt` carries the base pack-format
-/// label (e.g. `qcsr:4`) and `g` the quantization group, kept separate so
-/// the comma-separated knob list stays flat; `net` switches from the
-/// synthetic workload to the TCP front door, and `cancel` scripts
-/// synthetic-workload cancellations.
+/// `[,cancel=<id>@<step>[+...]][,snap=<n>][,clock=mock]` — `fmt` carries
+/// the base pack-format label (e.g. `qcsr:4`) and `g` the quantization
+/// group, kept separate so the comma-separated knob list stays flat; `net`
+/// switches from the synthetic workload to the TCP front door, `cancel`
+/// scripts synthetic-workload cancellations, `snap` emits periodic
+/// `metrics-snapshot` events, and `clock=mock` makes telemetry timing
+/// deterministic.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeSpec {
     pub config: String,
@@ -480,6 +482,16 @@ pub struct ServeSpec {
     /// pairs (`cancel=<id>@<step>[+<id>@<step>...]` knob); ignored with
     /// [`ServeSpec::listen`], where cancellation comes from disconnects
     pub cancel: Vec<(u64, usize)>,
+    /// emit a `metrics-snapshot` event every n engine steps plus once at
+    /// drain (`snap=<n>` knob; 0 = off)
+    pub snap_every: usize,
+    /// drive all telemetry timing from the deterministic mock clock
+    /// (`clock=mock` knob) — each read advances exactly 1ms; golden tests
+    /// pin snapshots under it
+    pub mock_clock: bool,
+    /// write a Prometheus text dump of the final snapshot here after the
+    /// drain (CLI `--metrics-file`; not part of the label)
+    pub metrics_file: Option<PathBuf>,
 }
 
 impl ServeSpec {
@@ -512,6 +524,9 @@ impl ServeSpec {
             listen: None,
             addr_file: None,
             cancel: Vec::new(),
+            snap_every: 0,
+            mock_clock: false,
+            metrics_file: None,
         }
     }
 
@@ -576,6 +591,12 @@ impl ServeSpec {
                 self.cancel.iter().map(|(id, step)| format!("{id}@{step}")).collect();
             parts.push(format!("cancel={}", cs.join("+")));
         }
+        if self.snap_every != 0 {
+            parts.push(format!("snap={}", self.snap_every));
+        }
+        if self.mock_clock {
+            parts.push("clock=mock".to_string());
+        }
         parts.join(",")
     }
 
@@ -590,7 +611,8 @@ impl ServeSpec {
                 anyhow!(
                     "unrecognized serve knob {part:?} (expected kv=on|off, chunk=<n>, \
                      cache-mb=<n>, prefill=<n>, workers=<n>, fmt=<pack-format>, \
-                     g=<cols>, net=<addr> or cancel=<id>@<step>[+...])"
+                     g=<cols>, net=<addr>, cancel=<id>@<step>[+...], snap=<n> or \
+                     clock=mock|real)"
                 )
             };
             let (key, value) = part.split_once('=').ok_or_else(err)?;
@@ -627,6 +649,14 @@ impl ServeSpec {
                         ));
                     }
                     self.cancel = cs;
+                }
+                "snap" => self.snap_every = value.parse().map_err(|_| err())?,
+                "clock" => {
+                    self.mock_clock = match value {
+                        "mock" => true,
+                        "real" => false,
+                        _ => return Err(err()),
+                    }
                 }
                 _ => return Err(err()),
             }
@@ -887,6 +917,34 @@ mod tests {
             "serve/nano/sparsegpt-50%,chunk=x",
             "serve/nano/sparsegpt-50%,wat=1",
             "serve/nano/sparsegpt-50%,kv",
+        ] {
+            assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn serve_telemetry_knobs_round_trip_through_labels() {
+        let mut spec = ServeSpec::new("nano");
+        spec.snap_every = 4;
+        spec.mock_clock = true;
+        let j = JobSpec::Serve(spec);
+        assert_eq!(j.label(), "serve/nano/sparsegpt-50%,snap=4,clock=mock");
+        assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
+        // clock=real is accepted but, being the default, never emitted
+        let JobSpec::Serve(parsed) =
+            JobSpec::parse("serve/nano/sparsegpt-50%,clock=real").unwrap()
+        else {
+            panic!("not a serve spec")
+        };
+        assert!(!parsed.mock_clock);
+        // metrics_file is CLI plumbing, deliberately not in the label
+        let mut spec = ServeSpec::new("nano");
+        spec.metrics_file = Some("metrics.prom".into());
+        assert_eq!(JobSpec::Serve(spec).label(), "serve/nano/sparsegpt-50%");
+        for bad in [
+            "serve/nano/sparsegpt-50%,snap=x",
+            "serve/nano/sparsegpt-50%,clock=maybe",
+            "serve/nano/sparsegpt-50%,clock=",
         ] {
             assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
         }

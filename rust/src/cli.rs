@@ -18,6 +18,8 @@ pub const GLOBAL_BOOL_FLAGS: &[&str] = &[
     "pack",
     "shutdown",
     "shutdown-only",
+    "stats",
+    "stats-only",
 ];
 
 #[derive(Clone, Debug, Default)]

@@ -27,6 +27,7 @@ pub mod data;
 pub mod eval;
 pub mod harness;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod solver;

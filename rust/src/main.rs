@@ -15,7 +15,7 @@ use sparsegpt::api::{
     PruneJobSpec, PruneSpec, ServeSpec, Session, StatsSpec, SweepSpec, TrainSpec, ZeroShotSpec,
 };
 use sparsegpt::cli::{parse_nm, Args, GLOBAL_BOOL_FLAGS};
-use sparsegpt::serve::net::{run_client, send_shutdown, ClientOptions, ClientRequest};
+use sparsegpt::serve::net::{fetch_stats, run_client, send_shutdown, ClientOptions, ClientRequest};
 use sparsegpt::coordinator::{PruneMethod, SkipSpec};
 use sparsegpt::runtime::BackendKind;
 use sparsegpt::sparse::PackFormat;
@@ -60,6 +60,7 @@ commands:
             [--store <path.spkt>] [--save-store <path.spkt>]
             [--listen <host:port>] [--addr-file <path>]
             [--cancel <id>@<step>[+<id>@<step>...]]
+            [--snap-every <n>] [--metrics-file <path>]
             (kv-cache on = incremental decode through per-request KV ring
             buffers with chunked prefill; off = the full re-forward
             reference path — token-for-token identical, O(ctx) slower)
@@ -70,16 +71,22 @@ commands:
             (--workers 0 shares the process-wide kernel pool sized from
             SPARSEGPT_THREADS at startup; n > 0 gives this serve run a
             private pool of n workers)
+            (--snap-every n emits a metrics-snapshot event every n engine
+            steps plus once at drain; --metrics-file writes the final
+            snapshot as Prometheus text after the drain)
   client    --addr <host:port> | --addr-file <path>
             [--prompt 1,2,3] [--requests 1] [--tokens 16] [--seed 0]
             [--tag cli] [--disconnect-after <n>] [--timeout-secs 60]
-            [--shutdown] [--shutdown-only]
+            [--shutdown] [--shutdown-only] [--stats] [--stats-only]
             (loopback client for a `serve --listen` server: submits
             requests and prints the streamed tokens; with --json every
             raw server frame passes through to stdout. --shutdown drains
             the server once resolved; --shutdown-only only sends the
             drain frame; --disconnect-after drops the socket cold after
-            n token frames, exercising disconnect-as-cancellation)
+            n token frames, exercising disconnect-as-cancellation;
+            --stats-only just asks the server for a metrics snapshot and
+            prints it — a table, or the raw JSON object with --json —
+            and --stats prints the same snapshot after the requests)
 
 global flags:
   --json    emit machine-readable JSON-lines events on stdout
@@ -292,6 +299,8 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
             if let Some(list) = args.get("cancel") {
                 s.cancel = parse_cancels(list)?;
             }
+            s.snap_every = args.usize_or("snap-every", s.snap_every)?;
+            s.metrics_file = args.get("metrics-file").map(PathBuf::from);
             JobSpec::Serve(s)
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
@@ -338,6 +347,15 @@ fn run_net_client(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    if args.has("stats-only") {
+        let snapshot = fetch_stats(&addr, timeout)?;
+        if json {
+            println!("{}", snapshot.to_string_compact());
+        } else {
+            print_stats(&snapshot);
+        }
+        return Ok(());
+    }
     let prompt: Vec<i32> = match args.get("prompt") {
         Some(p) => p
             .split(',')
@@ -381,7 +399,53 @@ fn run_net_client(args: &Args) -> Result<()> {
             if out.disconnected { " | disconnected mid-stream" } else { "" }
         );
     }
+    if args.has("stats") && !out.disconnected {
+        let snapshot = fetch_stats(&addr, timeout)?;
+        if json {
+            println!("{}", snapshot.to_string_compact());
+        } else {
+            print_stats(&snapshot);
+        }
+    }
     Ok(())
+}
+
+/// Render a metrics snapshot as aligned `name value` lines: scalars
+/// verbatim, histograms as their count/sum, workers one line each.
+fn print_stats(snapshot: &sparsegpt::util::json::Json) {
+    use sparsegpt::util::json::Json;
+    let Json::Obj(fields) = snapshot else {
+        println!("{}", snapshot.to_string_compact());
+        return;
+    };
+    let fmt_num =
+        |v: f64| if v.fract() == 0.0 { format!("{}", v as i64) } else { format!("{v}") };
+    for (name, value) in fields {
+        match value {
+            Json::Num(v) => println!("{name:<32} {}", fmt_num(*v)),
+            // histograms carry {buckets, count, sum}
+            Json::Obj(h) => {
+                let get = |k: &str| h.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                println!(
+                    "{name:<32} count {} sum {}",
+                    fmt_num(get("count")),
+                    fmt_num(get("sum"))
+                );
+            }
+            Json::Arr(workers) => {
+                for w in workers {
+                    let get = |k: &str| w.opt(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                    println!(
+                        "{name}[{}] busy_ns {} tiles {}",
+                        fmt_num(get("worker")),
+                        fmt_num(get("busy_ns")),
+                        fmt_num(get("tiles"))
+                    );
+                }
+            }
+            other => println!("{name:<32} {}", other.to_string_compact()),
+        }
+    }
 }
 
 /// Build the prune method from `--spec <label>` or the granular flags.

@@ -1,0 +1,120 @@
+//! The time source behind every serve-path measurement.
+//!
+//! [`Clock`] hides whether time is real or simulated. The real variant
+//! reads a monotonic [`Instant`] anchored at a process-wide origin; the
+//! mock variant advances a shared atomic by a fixed tick on every read,
+//! so durations become a pure function of *how many times* the code
+//! under test looks at the clock — which makes metric and span output
+//! golden-pinnable (see `tests/metrics_golden.rs`).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// The process-wide origin for real-clock readings. Anchoring every
+/// reading to one origin keeps `now_ns` values comparable across
+/// threads and components for the whole process lifetime.
+fn origin() -> Instant {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    *ORIGIN.get_or_init(Instant::now)
+}
+
+/// A monotonic nanosecond clock: real time or a deterministic mock.
+/// Cloning is cheap and clones of a mock share the same timeline.
+#[derive(Clone)]
+pub struct Clock(Inner);
+
+#[derive(Clone)]
+enum Inner {
+    Real,
+    Mock(Arc<MockState>),
+}
+
+struct MockState {
+    now_ns: AtomicU64,
+    tick_ns: u64,
+}
+
+impl Clock {
+    /// Wall-clock time (monotonic, nanoseconds since the process origin).
+    pub fn real() -> Clock {
+        Clock(Inner::Real)
+    }
+
+    /// A deterministic clock that advances by `tick_ns` on every
+    /// [`Clock::now_ns`] call. All clones share one timeline.
+    pub fn mock(tick_ns: u64) -> Clock {
+        Clock(Inner::Mock(Arc::new(MockState { now_ns: AtomicU64::new(0), tick_ns })))
+    }
+
+    /// Nanoseconds since an arbitrary fixed origin. The mock variant
+    /// advances its timeline by one tick per call (the first call
+    /// returns exactly one tick).
+    pub fn now_ns(&self) -> u64 {
+        match &self.0 {
+            // u64 nanoseconds wrap after ~584 years of uptime
+            Inner::Real => origin().elapsed().as_nanos() as u64,
+            Inner::Mock(m) => m.now_ns.fetch_add(m.tick_ns, Ordering::Relaxed) + m.tick_ns,
+        }
+    }
+
+    /// Seconds elapsed since a `now_ns` reading taken earlier (reads the
+    /// clock once).
+    pub fn secs_since(&self, start_ns: u64) -> f64 {
+        self.now_ns().saturating_sub(start_ns) as f64 * 1e-9
+    }
+
+    pub fn is_mock(&self) -> bool {
+        matches!(self.0, Inner::Mock(_))
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::real()
+    }
+}
+
+impl fmt::Debug for Clock {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.0 {
+            Inner::Real => write!(f, "Clock::Real"),
+            Inner::Mock(m) => write!(f, "Clock::Mock(tick={}ns)", m.tick_ns),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_is_monotone() {
+        let c = Clock::real();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+        assert!(!c.is_mock());
+    }
+
+    #[test]
+    fn mock_clock_advances_one_tick_per_read() {
+        let c = Clock::mock(1_000);
+        assert_eq!(c.now_ns(), 1_000);
+        assert_eq!(c.now_ns(), 2_000);
+        assert!(c.is_mock());
+        // clones share the timeline — a read through either advances both
+        let d = c.clone();
+        assert_eq!(d.now_ns(), 3_000);
+        assert_eq!(c.now_ns(), 4_000);
+    }
+
+    #[test]
+    fn secs_since_counts_exactly_one_read() {
+        let c = Clock::mock(500);
+        let t0 = c.now_ns(); // 500
+        assert_eq!(c.secs_since(t0), 500.0 * 1e-9); // reads 1000
+        assert_eq!(c.now_ns(), 1_500);
+    }
+}

@@ -1,0 +1,203 @@
+//! Lock-free metric primitives: counters, gauges and log-bucket
+//! histograms, all plain `AtomicU64`s with `Relaxed` ordering.
+//!
+//! The memory-ordering contract (documented in DESIGN.md): every update
+//! is a single relaxed atomic RMW, so the hot path costs one uncontended
+//! atomic per event and can never block or fence. Each individual metric
+//! is exactly counted (RMWs never lose increments) and monotone where it
+//! should be; *cross*-metric skew while writers are running is bounded
+//! by the histogram's read-until-stable retry, and every snapshot is
+//! exact once the writers are quiescent (the drain path).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    /// Raise the counter to `v` if it is currently lower (`fetch_max`),
+    /// for counters mirrored from an external total (e.g. the event
+    /// sink's drop count) — keeps the counter monotone even if the
+    /// mirror is refreshed out of order.
+    pub fn set_at_least(&self, v: u64) {
+        self.0.fetch_max(v, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// A gauge: a value that can move both ways (queue depth, bytes in use).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Relaxed);
+    }
+
+    /// Raise to `v` if currently lower — high-watermark tracking.
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    /// Decrement; callers pair every `dec` with an earlier `inc`.
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Bucket count: one bucket per bit length of the observed value
+/// (0, 1, 2–3, 4–7, …, so bucket `i` has upper bound `2^i - 1`), plus
+/// the full-width top bucket.
+pub const HIST_BUCKETS: usize = 65;
+
+/// A fixed log-bucket histogram. `observe` is three relaxed RMWs; no
+/// allocation, no locks, no float math.
+#[derive(Debug)]
+pub struct Histogram {
+    // written bucket -> sum -> count, so a reader that sees `count`
+    // include an observation also sees its bucket (on x86; elsewhere the
+    // snapshot retry below still converges once writers pause)
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        let idx = 64 - v.leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    /// Read the histogram, retrying (bounded) until the bucket total
+    /// matches `count` and `count` is stable across the read — a
+    /// consistent snapshot whenever writers pause for an instant, and a
+    /// best-effort one under sustained concurrent writes.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut last = None;
+        for _ in 0..8 {
+            let count = self.count.load(Relaxed);
+            let sum = self.sum.load(Relaxed);
+            let buckets: Vec<(u64, u64)> = self
+                .buckets
+                .iter()
+                .enumerate()
+                .filter_map(|(i, b)| {
+                    let n = b.load(Relaxed);
+                    (n > 0).then(|| (bucket_le(i), n))
+                })
+                .collect();
+            let total: u64 = buckets.iter().map(|(_, n)| n).sum();
+            let snap = HistSnapshot { count, sum, buckets };
+            if total == count && self.count.load(Relaxed) == count {
+                return snap;
+            }
+            last = Some(snap);
+        }
+        last.expect("retry loop ran")
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (values of bit length `i`).
+fn bucket_le(i: usize) -> u64 {
+    if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// A point-in-time histogram reading: total count, total sum, and the
+/// non-empty buckets as `(inclusive upper bound, count)` pairs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: Vec<(u64, u64)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.set_at_least(3); // lower: no-op
+        assert_eq!(c.get(), 5);
+        c.set_at_least(9);
+        assert_eq!(c.get(), 9);
+        let g = Gauge::default();
+        g.set(7);
+        g.set_max(3); // lower: no-op
+        assert_eq!(g.get(), 7);
+        g.set_max(11);
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 11);
+    }
+
+    #[test]
+    fn histogram_buckets_by_bit_length() {
+        let h = Histogram::default();
+        for v in [0, 1, 2, 3, 7, 8, 1000] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 7);
+        assert_eq!(s.sum, 1021);
+        // 0 -> le 0; 1 -> le 1; 2,3 -> le 3; 7 -> le 7; 8 -> le 15; 1000 -> le 1023
+        assert_eq!(s.buckets, vec![(0, 1), (1, 1), (3, 2), (7, 1), (15, 1), (1023, 1)]);
+    }
+
+    #[test]
+    fn histogram_top_bucket_holds_max() {
+        let h = Histogram::default();
+        h.observe(u64::MAX);
+        assert_eq!(h.snapshot().buckets, vec![(u64::MAX, 1)]);
+    }
+
+    #[test]
+    fn empty_histogram_snapshot() {
+        let s = Histogram::default().snapshot();
+        assert_eq!(s, HistSnapshot { count: 0, sum: 0, buckets: vec![] });
+    }
+}

@@ -1,0 +1,500 @@
+//! Process-wide serve-path telemetry: a lock-free metrics registry with
+//! one snapshot type feeding three sinks.
+//!
+//! * [`Clock`] — real vs. deterministic mock time; every engine duration
+//!   and phase span reads it, so metric output is golden-pinnable.
+//! * [`Counter`] / [`Gauge`] / [`Histogram`] — plain relaxed atomics, no
+//!   dependencies; updates are wait-free single RMWs (contract in
+//!   DESIGN.md "Observability").
+//! * [`Obs`] — the registry handle. Cheap to clone (an `Arc`); the serve
+//!   engine, scheduler, KV budget, net front door and worker pool all
+//!   write into one shared instance.
+//! * [`Snapshot`] — a generation-stamped point-in-time reading, rendered
+//!   as flat JSON (the `stats` TCP frame and the `metrics-snapshot`
+//!   event) or Prometheus-style text exposition (`--metrics-file`).
+//!
+//! Phase spans ([`Obs::span`] / [`Obs::record_phase`]) feed fixed
+//! log-bucket duration histograms per phase (prefill, decode, pack,
+//! solve, net-read, net-write) — cheap enough to leave on everywhere.
+
+pub mod clock;
+pub mod metrics;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use clock::Clock;
+pub use metrics::{Counter, Gauge, HistSnapshot, Histogram};
+
+use crate::sparse::WorkerPool;
+use crate::util::json::Json;
+
+/// The instrumented phases of the serve path, each backed by a duration
+/// histogram (`phase_<name>_ns`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Chunked prompt prefill through the packed linears.
+    Prefill,
+    /// One decode step over the active batch.
+    Decode,
+    /// Packing pruned params into a `SparseStore`.
+    Pack,
+    /// The one-shot prune (Hessian solve) before serving.
+    Solve,
+    /// Blocking socket reads on a net connection.
+    NetRead,
+    /// Frame writes back to a net client.
+    NetWrite,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] = [
+        Phase::Prefill,
+        Phase::Decode,
+        Phase::Pack,
+        Phase::Solve,
+        Phase::NetRead,
+        Phase::NetWrite,
+    ];
+
+    /// The histogram key (`phase_*_ns`) this phase records into.
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "phase_prefill_ns",
+            Phase::Decode => "phase_decode_ns",
+            Phase::Pack => "phase_pack_ns",
+            Phase::Solve => "phase_solve_ns",
+            Phase::NetRead => "phase_net_read_ns",
+            Phase::NetWrite => "phase_net_write_ns",
+        }
+    }
+}
+
+/// The fixed metric registry: every serve-path metric as a named field.
+/// Fixed fields (not a string-keyed map) keep the hot path at one atomic
+/// RMW with zero lookups, and make the snapshot schema a compile-time
+/// fact.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    // counters
+    pub tokens_decoded_total: Counter,
+    pub tokens_prefilled_total: Counter,
+    pub steps_total: Counter,
+    pub requests_enqueued_total: Counter,
+    pub requests_admitted_total: Counter,
+    pub requests_finished_total: Counter,
+    pub requests_cancelled_total: Counter,
+    pub requests_rejected_total: Counter,
+    pub cache_evictions_total: Counter,
+    /// Events a sink failed to write (satellite of the silent
+    /// `JsonlSink` error swallow); mirrored via `set_at_least`.
+    pub events_dropped_total: Counter,
+    /// ttft anchors missing from the engine's enqueue map — each one is
+    /// a silently-zeroed ttft sample (should stay 0).
+    pub ttft_anchor_missing_total: Counter,
+    pub net_frames_read_total: Counter,
+    pub net_bytes_read_total: Counter,
+    pub net_frames_written_total: Counter,
+    pub net_bytes_written_total: Counter,
+    // gauges
+    pub queue_depth: Gauge,
+    pub queue_depth_peak: Gauge,
+    pub cache_bytes_in_use: Gauge,
+    pub cache_bytes_peak: Gauge,
+    pub connections_open: Gauge,
+    // histograms
+    pub batch_size: Histogram,
+    pub phase_prefill_ns: Histogram,
+    pub phase_decode_ns: Histogram,
+    pub phase_pack_ns: Histogram,
+    pub phase_solve_ns: Histogram,
+    pub phase_net_read_ns: Histogram,
+    pub phase_net_write_ns: Histogram,
+}
+
+impl Metrics {
+    pub fn phase_hist(&self, phase: Phase) -> &Histogram {
+        match phase {
+            Phase::Prefill => &self.phase_prefill_ns,
+            Phase::Decode => &self.phase_decode_ns,
+            Phase::Pack => &self.phase_pack_ns,
+            Phase::Solve => &self.phase_solve_ns,
+            Phase::NetRead => &self.phase_net_read_ns,
+            Phase::NetWrite => &self.phase_net_write_ns,
+        }
+    }
+}
+
+struct ObsInner {
+    clock: Clock,
+    metrics: Metrics,
+    /// Snapshot serial number; bumped per [`Obs::snapshot`].
+    generation: AtomicU64,
+    /// Pool whose per-worker stats ride in the snapshot (attached by the
+    /// engine). The lock sits on the cold snapshot path only — metric
+    /// updates never touch it.
+    pool: Mutex<Option<WorkerPool>>,
+}
+
+/// Shared handle to one telemetry registry. Clone freely; all clones
+/// write into the same atomics.
+#[derive(Clone)]
+pub struct Obs {
+    inner: Arc<ObsInner>,
+}
+
+impl Default for Obs {
+    fn default() -> Obs {
+        Obs::new(Clock::real())
+    }
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs").field("clock", &self.inner.clock).finish()
+    }
+}
+
+impl Obs {
+    pub fn new(clock: Clock) -> Obs {
+        Obs {
+            inner: Arc::new(ObsInner {
+                clock,
+                metrics: Metrics::default(),
+                generation: AtomicU64::new(0),
+                pool: Mutex::new(None),
+            }),
+        }
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.inner.clock
+    }
+
+    /// The registry fields, for direct hot-path updates
+    /// (`obs.metrics().tokens_decoded_total.inc()`).
+    pub fn metrics(&self) -> &Metrics {
+        &self.inner.metrics
+    }
+
+    /// Attach the worker pool whose per-worker busy/tile stats the
+    /// snapshot should report (replaces any earlier attachment).
+    pub fn attach_pool(&self, pool: WorkerPool) {
+        *self.inner.pool.lock().unwrap() = Some(pool);
+    }
+
+    /// Record one completed phase duration.
+    pub fn record_phase(&self, phase: Phase, ns: u64) {
+        self.inner.metrics.phase_hist(phase).observe(ns);
+    }
+
+    /// Start a phase span; the duration (clock reads at start and drop)
+    /// lands in the phase histogram when the guard drops.
+    pub fn span(&self, phase: Phase) -> PhaseSpan<'_> {
+        PhaseSpan { obs: self, phase, start_ns: self.inner.clock.now_ns() }
+    }
+
+    /// A generation-stamped point-in-time reading of every metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let m = &self.inner.metrics;
+        let generation = self.inner.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        let workers: Vec<WorkerSnap> = self
+            .inner
+            .pool
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|p| p.stats())
+            .unwrap_or_default()
+            .into_iter()
+            .enumerate()
+            .map(|(i, (busy_ns, tiles))| WorkerSnap { worker: i, busy_ns, tiles })
+            .collect();
+        Snapshot {
+            generation,
+            counters: vec![
+                ("tokens_decoded_total", m.tokens_decoded_total.get()),
+                ("tokens_prefilled_total", m.tokens_prefilled_total.get()),
+                ("steps_total", m.steps_total.get()),
+                ("requests_enqueued_total", m.requests_enqueued_total.get()),
+                ("requests_admitted_total", m.requests_admitted_total.get()),
+                ("requests_finished_total", m.requests_finished_total.get()),
+                ("requests_cancelled_total", m.requests_cancelled_total.get()),
+                ("requests_rejected_total", m.requests_rejected_total.get()),
+                ("cache_evictions_total", m.cache_evictions_total.get()),
+                ("events_dropped_total", m.events_dropped_total.get()),
+                ("ttft_anchor_missing_total", m.ttft_anchor_missing_total.get()),
+                ("net_frames_read_total", m.net_frames_read_total.get()),
+                ("net_bytes_read_total", m.net_bytes_read_total.get()),
+                ("net_frames_written_total", m.net_frames_written_total.get()),
+                ("net_bytes_written_total", m.net_bytes_written_total.get()),
+            ],
+            gauges: vec![
+                ("queue_depth", m.queue_depth.get()),
+                ("queue_depth_peak", m.queue_depth_peak.get()),
+                ("cache_bytes_in_use", m.cache_bytes_in_use.get()),
+                ("cache_bytes_peak", m.cache_bytes_peak.get()),
+                ("connections_open", m.connections_open.get()),
+            ],
+            hists: {
+                let mut hs = vec![("batch_size", m.batch_size.snapshot())];
+                for p in Phase::ALL {
+                    hs.push((p.metric_name(), m.phase_hist(p).snapshot()));
+                }
+                hs
+            },
+            workers,
+        }
+    }
+}
+
+/// Drop guard recording a phase duration (see [`Obs::span`]).
+pub struct PhaseSpan<'a> {
+    obs: &'a Obs,
+    phase: Phase,
+    start_ns: u64,
+}
+
+impl Drop for PhaseSpan<'_> {
+    fn drop(&mut self) {
+        let dt = self.obs.clock().now_ns().saturating_sub(self.start_ns);
+        self.obs.record_phase(self.phase, dt);
+    }
+}
+
+/// One worker's lifetime stats from the attached [`WorkerPool`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSnap {
+    pub worker: usize,
+    pub busy_ns: u64,
+    pub tiles: u64,
+}
+
+/// A point-in-time reading of the whole registry. One snapshot feeds all
+/// three sinks: [`Snapshot::to_json`] (the `stats` frame and the
+/// `metrics-snapshot` event) and [`Snapshot::to_prometheus`]
+/// (`--metrics-file`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub generation: u64,
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub hists: Vec<(&'static str, HistSnapshot)>,
+    pub workers: Vec<WorkerSnap>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(n, _)| *n == name).map(|(_, h)| h)
+    }
+
+    /// Flat JSON object: scalar metrics as top-level keys (greppable,
+    /// e.g. `"tokens_decoded_total":24`), histograms as
+    /// `{buckets: [[le, n], ...], count, sum}`, worker stats under
+    /// `"workers"`.
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("generation".to_string(), Json::Num(self.generation as f64));
+        for (name, v) in self.counters.iter().chain(self.gauges.iter()) {
+            o.insert(name.to_string(), Json::Num(*v as f64));
+        }
+        for (name, h) in &self.hists {
+            let buckets = h
+                .buckets
+                .iter()
+                .map(|(le, n)| Json::Arr(vec![Json::Num(*le as f64), Json::Num(*n as f64)]))
+                .collect();
+            let mut ho = std::collections::BTreeMap::new();
+            ho.insert("buckets".to_string(), Json::Arr(buckets));
+            ho.insert("count".to_string(), Json::Num(h.count as f64));
+            ho.insert("sum".to_string(), Json::Num(h.sum as f64));
+            o.insert(name.to_string(), Json::Obj(ho));
+        }
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| {
+                let mut wo = std::collections::BTreeMap::new();
+                wo.insert("busy_ns".to_string(), Json::Num(w.busy_ns as f64));
+                wo.insert("tiles".to_string(), Json::Num(w.tiles as f64));
+                wo.insert("worker".to_string(), Json::Num(w.worker as f64));
+                Json::Obj(wo)
+            })
+            .collect();
+        o.insert("workers".to_string(), Json::Arr(workers));
+        Json::Obj(o)
+    }
+
+    /// Prometheus-style text exposition (`# TYPE` lines, `sparsegpt_`
+    /// prefix, cumulative histogram buckets, worker stats labelled
+    /// `{worker="i"}`).
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "# TYPE sparsegpt_{name} counter");
+            let _ = writeln!(out, "sparsegpt_{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "# TYPE sparsegpt_{name} gauge");
+            let _ = writeln!(out, "sparsegpt_{name} {v}");
+        }
+        for (name, h) in &self.hists {
+            let _ = writeln!(out, "# TYPE sparsegpt_{name} histogram");
+            let mut cum = 0u64;
+            for (le, n) in &h.buckets {
+                cum += n;
+                let _ = writeln!(out, "sparsegpt_{name}_bucket{{le=\"{le}\"}} {cum}");
+            }
+            let _ = writeln!(out, "sparsegpt_{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+            let _ = writeln!(out, "sparsegpt_{name}_sum {}", h.sum);
+            let _ = writeln!(out, "sparsegpt_{name}_count {}", h.count);
+        }
+        let _ = writeln!(out, "# TYPE sparsegpt_snapshot_generation gauge");
+        let _ = writeln!(out, "sparsegpt_snapshot_generation {}", self.generation);
+        if !self.workers.is_empty() {
+            let _ = writeln!(out, "# TYPE sparsegpt_worker_busy_ns counter");
+            for w in &self.workers {
+                let _ = writeln!(
+                    out,
+                    "sparsegpt_worker_busy_ns{{worker=\"{}\"}} {}",
+                    w.worker, w.busy_ns
+                );
+            }
+            let _ = writeln!(out, "# TYPE sparsegpt_worker_tiles_total counter");
+            for w in &self.workers {
+                let _ = writeln!(
+                    out,
+                    "sparsegpt_worker_tiles_total{{worker=\"{}\"}} {}",
+                    w.worker, w.tiles
+                );
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_generation_increments_per_read() {
+        let obs = Obs::default();
+        assert_eq!(obs.snapshot().generation, 1);
+        assert_eq!(obs.snapshot().generation, 2);
+        // clones share the registry (and its generation)
+        assert_eq!(obs.clone().snapshot().generation, 3);
+    }
+
+    #[test]
+    fn spans_and_counters_land_in_the_snapshot() {
+        let obs = Obs::new(Clock::mock(1_000));
+        obs.metrics().tokens_decoded_total.add(3);
+        obs.metrics().queue_depth.set(2);
+        obs.metrics().queue_depth_peak.set_max(5);
+        obs.metrics().batch_size.observe(2);
+        {
+            let _span = obs.span(Phase::Decode); // start read + drop read = 1 tick
+        }
+        obs.record_phase(Phase::Prefill, 5);
+        let s = obs.snapshot();
+        assert_eq!(s.counter("tokens_decoded_total"), Some(3));
+        assert_eq!(s.counter("requests_rejected_total"), Some(0));
+        assert_eq!(s.gauge("queue_depth"), Some(2));
+        assert_eq!(s.gauge("queue_depth_peak"), Some(5));
+        let d = s.hist("phase_decode_ns").unwrap();
+        assert_eq!((d.count, d.sum), (1, 1_000));
+        assert_eq!(s.hist("phase_prefill_ns").unwrap().buckets, vec![(7, 1)]);
+        assert!(s.workers.is_empty(), "no pool attached");
+    }
+
+    #[test]
+    fn attached_pool_stats_appear() {
+        let obs = Obs::default();
+        obs.attach_pool(crate::sparse::WorkerPool::new(2));
+        let s = obs.snapshot();
+        assert_eq!(s.workers.len(), 2);
+        assert_eq!(s.workers[0], WorkerSnap { worker: 0, busy_ns: 0, tiles: 0 });
+    }
+
+    /// The snapshot's two renderings are the format contract for all
+    /// three sinks — pinned byte-exactly under a hand-driven mock clock.
+    #[test]
+    fn rendered_formats_are_pinned() {
+        let obs = Obs::new(Clock::mock(1_000));
+        obs.metrics().tokens_decoded_total.add(24);
+        obs.metrics().requests_finished_total.add(2);
+        obs.metrics().queue_depth_peak.set_max(3);
+        obs.metrics().batch_size.observe(2);
+        obs.metrics().batch_size.observe(2);
+        obs.record_phase(Phase::Decode, 1_000);
+        let s = obs.snapshot();
+        assert_eq!(
+            s.to_json().to_string_compact(),
+            concat!(
+                "{\"batch_size\":{\"buckets\":[[3,2]],\"count\":2,\"sum\":4},",
+                "\"cache_bytes_in_use\":0,",
+                "\"cache_bytes_peak\":0,",
+                "\"cache_evictions_total\":0,",
+                "\"connections_open\":0,",
+                "\"events_dropped_total\":0,",
+                "\"generation\":1,",
+                "\"net_bytes_read_total\":0,",
+                "\"net_bytes_written_total\":0,",
+                "\"net_frames_read_total\":0,",
+                "\"net_frames_written_total\":0,",
+                "\"phase_decode_ns\":{\"buckets\":[[1023,1]],\"count\":1,\"sum\":1000},",
+                "\"phase_net_read_ns\":{\"buckets\":[],\"count\":0,\"sum\":0},",
+                "\"phase_net_write_ns\":{\"buckets\":[],\"count\":0,\"sum\":0},",
+                "\"phase_pack_ns\":{\"buckets\":[],\"count\":0,\"sum\":0},",
+                "\"phase_prefill_ns\":{\"buckets\":[],\"count\":0,\"sum\":0},",
+                "\"phase_solve_ns\":{\"buckets\":[],\"count\":0,\"sum\":0},",
+                "\"queue_depth\":0,",
+                "\"queue_depth_peak\":3,",
+                "\"requests_admitted_total\":0,",
+                "\"requests_cancelled_total\":0,",
+                "\"requests_enqueued_total\":0,",
+                "\"requests_finished_total\":2,",
+                "\"requests_rejected_total\":0,",
+                "\"steps_total\":0,",
+                "\"tokens_decoded_total\":24,",
+                "\"tokens_prefilled_total\":0,",
+                "\"ttft_anchor_missing_total\":0,",
+                "\"workers\":[]}"
+            )
+        );
+        let prom = s.to_prometheus();
+        assert!(prom.contains(
+            "# TYPE sparsegpt_tokens_decoded_total counter\nsparsegpt_tokens_decoded_total 24\n"
+        ));
+        assert!(prom.contains(
+            "# TYPE sparsegpt_queue_depth_peak gauge\nsparsegpt_queue_depth_peak 3\n"
+        ));
+        assert!(prom.contains(
+            "# TYPE sparsegpt_phase_decode_ns histogram\n\
+             sparsegpt_phase_decode_ns_bucket{le=\"1023\"} 1\n\
+             sparsegpt_phase_decode_ns_bucket{le=\"+Inf\"} 1\n\
+             sparsegpt_phase_decode_ns_sum 1000\n\
+             sparsegpt_phase_decode_ns_count 1\n"
+        ));
+        assert!(prom.contains(
+            "# TYPE sparsegpt_batch_size histogram\n\
+             sparsegpt_batch_size_bucket{le=\"3\"} 2\n\
+             sparsegpt_batch_size_bucket{le=\"+Inf\"} 2\n\
+             sparsegpt_batch_size_sum 4\n\
+             sparsegpt_batch_size_count 2\n"
+        ));
+        assert!(prom.ends_with(
+            "# TYPE sparsegpt_snapshot_generation gauge\nsparsegpt_snapshot_generation 1\n"
+        ));
+    }
+}

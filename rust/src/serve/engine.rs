@@ -40,15 +40,16 @@
 //! with the byte-exact net-parity test.
 
 use std::collections::HashMap;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::eval::generate::pick_token;
+use crate::obs::{Obs, Phase};
 use crate::serve::kv::{CacheBudget, KvCache};
 use crate::serve::model::SparseModel;
 use crate::serve::scheduler::{Scheduler, SchedulerPolicy, ServeRequest, StepLimits};
 use crate::sparse::pool::WorkerPool;
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 
 /// Default prefill chunk rows — the single source of truth; `ServeSpec`
@@ -74,6 +75,9 @@ pub struct EngineOptions {
     /// gives the engine a private pool of n workers — two engines in one
     /// process can run with different counts
     pub workers: usize,
+    /// emit a [`ServeEvent::MetricsSnapshot`] every n steps and once at
+    /// drain (0 = no snapshot events)
+    pub snap_every: usize,
 }
 
 impl Default for EngineOptions {
@@ -86,6 +90,7 @@ impl Default for EngineOptions {
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             cache_budget_bytes: 0,
             workers: 0,
+            snap_every: 0,
         }
     }
 }
@@ -110,6 +115,9 @@ pub enum ServeEvent {
     /// a submission landed on a full bounded queue and was shed with
     /// 429 semantics instead of blocking the decode loop
     Rejected { id: u64, step: usize, queue: usize, cap: usize },
+    /// periodic metrics snapshot ([`EngineOptions::snap_every`]): the full
+    /// [`Obs`] registry rendered to JSON, also emitted once at drain
+    MetricsSnapshot { snapshot: Json },
     Drained {
         steps: usize,
         requests: usize,
@@ -290,16 +298,17 @@ struct Active {
     /// next-token logits awaiting sampling (from prefill or the last
     /// batched decode)
     pending: Option<Vec<f32>>,
-    /// when the request entered the bounded queue (ttft anchor)
-    enqueued_at: Instant,
+    /// when the request entered the bounded queue, in [`Obs`] clock
+    /// nanoseconds (ttft anchor)
+    enqueued_at: u64,
     ttft_secs: f64,
-    last_token_at: Option<Instant>,
+    last_token_at: Option<u64>,
     /// inter-token gaps, seconds
     gaps: Vec<f64>,
 }
 
 impl Active {
-    fn new(req: ServeRequest, joined_step: usize, enqueued_at: Instant) -> Active {
+    fn new(req: ServeRequest, joined_step: usize, enqueued_at: u64) -> Active {
         let ctx = if req.prompt.is_empty() { vec![0] } else { req.prompt.clone() };
         Active {
             ctx,
@@ -339,6 +348,9 @@ pub struct ServeEngine<'a> {
     /// pool the step loop installs around every forward (private when
     /// `opts.workers > 0`, else a handle to the shared global pool)
     pool: WorkerPool,
+    /// metrics registry + clock; a private real-clock default unless the
+    /// caller shares one via [`ServeEngine::with_obs`]
+    obs: Obs,
 }
 
 impl<'a> ServeEngine<'a> {
@@ -347,7 +359,18 @@ impl<'a> ServeEngine<'a> {
             0 => WorkerPool::current(),
             n => WorkerPool::new(n),
         };
-        ServeEngine { model, opts, pool }
+        let obs = Obs::default();
+        obs.attach_pool(pool.clone());
+        ServeEngine { model, opts, pool, obs }
+    }
+
+    /// Share an externally owned [`Obs`] (registry + clock): the engine
+    /// records into it, and its pool becomes the snapshot's worker table.
+    /// With a mock clock every duration in the run becomes deterministic.
+    pub fn with_obs(mut self, obs: Obs) -> ServeEngine<'a> {
+        obs.attach_pool(self.pool.clone());
+        self.obs = obs;
+        self
     }
 
     /// Worker count of the pool this engine's kernels run on.
@@ -391,11 +414,14 @@ impl<'a> ServeEngine<'a> {
     ) -> Result<EngineOutcome> {
         let vocab = self.model.cfg.vocab;
         let unit = self.model.cache_bytes();
+        let obs = &self.obs;
+        let clock = obs.clock().clone();
+        let m = obs.metrics();
         let mut sched = Scheduler::new(self.opts.policy);
         let mut budget = CacheBudget::new(self.opts.cache_budget_bytes);
         let mut active: Vec<Active> = Vec::new();
         let mut finished: Vec<FinishedRequest> = Vec::new();
-        let mut enqueued_at: HashMap<u64, Instant> = HashMap::new();
+        let mut enqueued_at: HashMap<u64, u64> = HashMap::new();
         let mut step = 0usize;
         let mut tokens = 0usize;
         let mut cancelled = 0usize;
@@ -416,13 +442,16 @@ impl<'a> ServeEngine<'a> {
                     let mut a = active.remove(i);
                     if a.cache.take().is_some() {
                         budget.release(unit);
+                        m.cache_bytes_in_use.set(budget.in_use());
                     }
                     cancelled += 1;
+                    m.requests_cancelled_total.inc();
                     on_event(&ServeEvent::Cancelled { id, step, tokens: a.generated.len() });
                     source.cancelled(id, a.generated.len());
                 } else if sched.cancel(id) {
                     enqueued_at.remove(&id);
                     cancelled += 1;
+                    m.requests_cancelled_total.inc();
                     on_event(&ServeEvent::Cancelled { id, step, tokens: 0 });
                     source.cancelled(id, 0);
                 }
@@ -435,6 +464,7 @@ impl<'a> ServeEngine<'a> {
             for req in source.poll(step, sched.free_capacity()) {
                 if !sched.has_capacity() {
                     rejected += 1;
+                    m.requests_rejected_total.inc();
                     let (queue, cap) = (sched.queue_len(), sched.policy().queue_cap);
                     on_event(&ServeEvent::Rejected { id: req.id, step, queue, cap });
                     source.rejected(&req, queue, cap);
@@ -442,8 +472,9 @@ impl<'a> ServeEngine<'a> {
                 }
                 let (id, prompt_tokens, max_new_tokens) =
                     (req.id, req.prompt.len(), req.max_new_tokens);
-                enqueued_at.insert(id, Instant::now());
+                enqueued_at.insert(id, clock.now_ns());
                 sched.submit(req.clone())?;
+                m.requests_enqueued_total.inc();
                 on_event(&ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens });
                 source.accepted(&req);
             }
@@ -467,19 +498,30 @@ impl<'a> ServeEngine<'a> {
             };
             let limits = StepLimits { prefill_tokens: prefill_budget, cache_slots };
             let joined = sched.admit(active.len(), &limits);
+            m.queue_depth.set(sched.queue_len() as u64);
+            m.queue_depth_peak.set_max(sched.queue_peak() as u64);
             if !joined.is_empty() {
+                m.requests_admitted_total.add(joined.len() as u64);
                 on_event(&ServeEvent::BatchFormed {
                     step,
                     joined: joined.len(),
                     batch: active.len() + joined.len(),
                 });
                 for req in joined {
-                    let t_enq = enqueued_at.remove(&req.id).unwrap_or_else(Instant::now);
+                    let t_enq = enqueued_at.remove(&req.id).unwrap_or_else(|| {
+                        // admission without an enqueue record should be
+                        // impossible; the counter makes a regression visible
+                        // instead of silently zeroing the request's ttft
+                        m.ttft_anchor_missing_total.inc();
+                        clock.now_ns()
+                    });
                     let mut a = Active::new(req, step, t_enq);
                     if self.opts.kv_cache {
                         let mut cache = self.model.new_cache();
                         budget.reserve(unit);
                         peak_cache_bytes = peak_cache_bytes.max(budget.in_use());
+                        m.cache_bytes_in_use.set(budget.in_use());
+                        m.cache_bytes_peak.set_max(budget.in_use());
                         let chunk = if self.opts.prefill_chunk == 0 {
                             a.ctx.len()
                         } else {
@@ -491,13 +533,17 @@ impl<'a> ServeEngine<'a> {
                             prompt_tokens: a.ctx.len(),
                             chunks: (a.ctx.len() + chunk - 1) / chunk,
                         });
-                        let t0 = Instant::now();
+                        let t0 = clock.now_ns();
                         let (logits, evicted) =
                             self.model.prefill(&a.ctx, &mut cache, self.opts.prefill_chunk)?;
-                        prefill_secs += t0.elapsed().as_secs_f64();
+                        let dt = clock.now_ns().saturating_sub(t0);
+                        obs.record_phase(Phase::Prefill, dt);
+                        prefill_secs += dt as f64 * 1e-9;
                         prefill_tokens += a.ctx.len();
+                        m.tokens_prefilled_total.add(a.ctx.len() as u64);
                         if evicted > 0 {
                             cache_evictions += evicted;
+                            m.cache_evictions_total.add(evicted as u64);
                             on_event(&ServeEvent::CacheEvicted { id: a.req.id, step, evicted });
                         }
                         a.cache = Some(cache);
@@ -511,9 +557,14 @@ impl<'a> ServeEngine<'a> {
                     break; // drained
                 }
                 step += 1; // idle tick: waiting on arrivals or the batch window
+                m.steps_total.inc();
+                if self.opts.snap_every > 0 && step % self.opts.snap_every == 0 {
+                    on_event(&ServeEvent::MetricsSnapshot { snapshot: obs.snapshot().to_json() });
+                }
                 source.idle();
                 continue;
             }
+            m.batch_size.observe(active.len() as u64);
 
             // one next-token step for every in-flight request
             if self.opts.kv_cache {
@@ -528,7 +579,7 @@ impl<'a> ServeEngine<'a> {
                     }
                 }
                 if !decode_idx.is_empty() {
-                    let t0 = Instant::now();
+                    let t0 = clock.now_ns();
                     let (logits, evictions) = {
                         let mut caches: Vec<&mut KvCache> = active
                             .iter_mut()
@@ -537,12 +588,15 @@ impl<'a> ServeEngine<'a> {
                             .collect();
                         self.model.decode_cached(&toks, &mut caches)?
                     };
-                    decode_secs += t0.elapsed().as_secs_f64();
+                    let dt = clock.now_ns().saturating_sub(t0);
+                    obs.record_phase(Phase::Decode, dt);
+                    decode_secs += dt as f64 * 1e-9;
                     for (row, &i) in decode_idx.iter().enumerate() {
                         active[i].pending =
                             Some(logits.data()[row * vocab..(row + 1) * vocab].to_vec());
                         if evictions[row] > 0 {
                             cache_evictions += evictions[row];
+                            m.cache_evictions_total.add(evictions[row] as u64);
                             on_event(&ServeEvent::CacheEvicted {
                                 id: active[i].req.id,
                                 step,
@@ -553,9 +607,11 @@ impl<'a> ServeEngine<'a> {
                 }
             } else {
                 let seqs: Vec<&[i32]> = active.iter().map(|a| a.ctx.as_slice()).collect();
-                let t0 = Instant::now();
+                let t0 = clock.now_ns();
                 let logits = self.model.forward_logits(&seqs)?;
-                decode_secs += t0.elapsed().as_secs_f64();
+                let dt = clock.now_ns().saturating_sub(t0);
+                obs.record_phase(Phase::Decode, dt);
+                decode_secs += dt as f64 * 1e-9;
                 for (i, a) in active.iter_mut().enumerate() {
                     a.pending = Some(logits.data()[i * vocab..(i + 1) * vocab].to_vec());
                 }
@@ -570,10 +626,11 @@ impl<'a> ServeEngine<'a> {
                 a.ctx.push(t);
                 a.generated.push(t);
                 tokens += 1;
-                let now = Instant::now();
+                m.tokens_decoded_total.inc();
+                let now = clock.now_ns();
                 match a.last_token_at {
-                    None => a.ttft_secs = now.duration_since(a.enqueued_at).as_secs_f64(),
-                    Some(prev) => a.gaps.push(now.duration_since(prev).as_secs_f64()),
+                    None => a.ttft_secs = now.saturating_sub(a.enqueued_at) as f64 * 1e-9,
+                    Some(prev) => a.gaps.push(now.saturating_sub(prev) as f64 * 1e-9),
                 }
                 a.last_token_at = Some(now);
                 if !source.token(a.req.id, a.generated.len() - 1, t) {
@@ -589,8 +646,10 @@ impl<'a> ServeEngine<'a> {
                     let mut a = active.remove(i);
                     if a.cache.take().is_some() {
                         budget.release(unit);
+                        m.cache_bytes_in_use.set(budget.in_use());
                     }
                     cancelled += 1;
+                    m.requests_cancelled_total.inc();
                     on_event(&ServeEvent::Cancelled {
                         id: a.req.id,
                         step,
@@ -601,7 +660,9 @@ impl<'a> ServeEngine<'a> {
                     let mut a = active.remove(i);
                     if a.cache.take().is_some() {
                         budget.release(unit);
+                        m.cache_bytes_in_use.set(budget.in_use());
                     }
+                    m.requests_finished_total.inc();
                     on_event(&ServeEvent::Finished {
                         id: a.req.id,
                         step,
@@ -615,6 +676,10 @@ impl<'a> ServeEngine<'a> {
                 }
             }
             step += 1;
+            m.steps_total.inc();
+            if self.opts.snap_every > 0 && step % self.opts.snap_every == 0 {
+                on_event(&ServeEvent::MetricsSnapshot { snapshot: obs.snapshot().to_json() });
+            }
         }
         debug_assert_eq!(budget.in_use(), 0, "retire must return every cache to the budget");
         let outcome = EngineOutcome {
@@ -630,6 +695,11 @@ impl<'a> ServeEngine<'a> {
             peak_cache_bytes,
             cache_bytes_in_use: budget.in_use(),
         };
+        m.queue_depth.set(sched.queue_len() as u64);
+        m.cache_bytes_in_use.set(budget.in_use());
+        if self.opts.snap_every > 0 {
+            on_event(&ServeEvent::MetricsSnapshot { snapshot: obs.snapshot().to_json() });
+        }
         on_event(&ServeEvent::Drained {
             steps: outcome.steps,
             requests: outcome.finished.len(),
@@ -1030,6 +1100,74 @@ mod tests {
         let f = &out.finished[0];
         assert!(f.ttft_secs > 0.0, "first token lands after enqueue");
         assert!(f.gap_p50_secs >= 0.0 && f.gap_p95_secs >= f.gap_p50_secs);
+    }
+
+    #[test]
+    fn obs_counters_and_gauges_track_the_run() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(2, 1, 16),
+            temperature: 0.0,
+            top_k: 0,
+            ..EngineOptions::default()
+        };
+        let obs = Obs::new(crate::obs::Clock::mock(1_000));
+        let out = ServeEngine::new(&m, opts)
+            .with_obs(obs.clone())
+            .run(requests(5, 3, 11), &mut |_| {})
+            .unwrap();
+        let s = obs.snapshot();
+        assert_eq!(s.counter("tokens_decoded_total"), Some(out.tokens as u64));
+        assert_eq!(s.counter("tokens_prefilled_total"), Some(out.prefill_tokens as u64));
+        assert_eq!(s.counter("steps_total"), Some(out.steps as u64));
+        assert_eq!(s.counter("requests_enqueued_total"), Some(5));
+        assert_eq!(s.counter("requests_admitted_total"), Some(5));
+        assert_eq!(s.counter("requests_finished_total"), Some(5));
+        assert_eq!(s.counter("cache_evictions_total"), Some(out.cache_evictions as u64));
+        assert_eq!(s.counter("ttft_anchor_missing_total"), Some(0));
+        assert_eq!(s.gauge("queue_depth"), Some(0), "drained queue");
+        assert_eq!(s.gauge("cache_bytes_in_use"), Some(0), "drained budget");
+        assert_eq!(s.gauge("cache_bytes_peak"), Some(out.peak_cache_bytes));
+        assert!(s.gauge("queue_depth_peak").unwrap() >= 1);
+        assert!(s.hist("batch_size").unwrap().count > 0);
+        assert!(s.hist("phase_decode_ns").unwrap().count > 0);
+        // mock clock: each timed phase is exactly one tick, so the prefill
+        // histogram sums to one tick per admitted request
+        assert_eq!(s.hist("phase_prefill_ns").unwrap().sum, 5 * 1_000);
+        assert!(!s.workers.is_empty(), "engine pool rides in the snapshot");
+    }
+
+    #[test]
+    fn snap_every_emits_periodic_and_drain_snapshots() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(2, 1, 16),
+            temperature: 0.0,
+            top_k: 0,
+            snap_every: 1,
+            ..EngineOptions::default()
+        };
+        let obs = Obs::new(crate::obs::Clock::mock(1_000));
+        let mut snaps = Vec::new();
+        let out = ServeEngine::new(&m, opts)
+            .with_obs(obs)
+            .run(requests(3, 2, 11), &mut |e| {
+                if let ServeEvent::MetricsSnapshot { snapshot } = e {
+                    snaps.push(snapshot.clone());
+                }
+            })
+            .unwrap();
+        // one per step (idle ticks included) plus the drain snapshot
+        assert_eq!(snaps.len(), out.steps + 1);
+        let last = snaps.last().unwrap();
+        match last {
+            Json::Obj(o) => {
+                assert_eq!(o.get("tokens_decoded_total"), Some(&Json::Num(out.tokens as f64)));
+                // generations stamp the emission order, one per snapshot
+                assert_eq!(o.get("generation"), Some(&Json::Num((out.steps + 1) as f64)));
+            }
+            other => panic!("snapshot event carries an object, got {other:?}"),
+        }
     }
 
     #[test]

@@ -27,6 +27,11 @@
 //!   reader threads feeding the engine's intake queue (`net/server.rs`,
 //!   `net/conn.rs`), and the loopback client the CLI/tests drive it with
 //!   (`net/client.rs`).
+//!
+//! Telemetry: every layer writes into a shared [`Obs`](crate::obs::Obs)
+//! registry — engine counters/phase spans, scheduler queue depth, cache
+//! gauges, per-connection net traffic — and one snapshot feeds the `stats`
+//! frame, the `metrics-snapshot` event, and the Prometheus text dump.
 
 pub mod engine;
 pub mod kv;

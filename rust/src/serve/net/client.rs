@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::serve::net::protocol::{ClientFrame, FrameDecoder, ServerFrame};
+use crate::util::json::Json;
 
 /// One request to submit (the server assigns the id; `tag` correlates).
 #[derive(Clone, Debug)]
@@ -176,6 +177,8 @@ pub fn run_client(
             }
             ServerFrame::Error { message } => bail!("server error: {message}"),
             ServerFrame::Hello { .. } => bail!("unexpected second hello frame"),
+            // only answers a stats ask; harmless if it ever interleaves
+            ServerFrame::Stats { .. } => {}
         }
     }
 
@@ -186,6 +189,32 @@ pub fn run_client(
             .context("sending shutdown")?;
     }
     Ok(out)
+}
+
+/// Connect, ask for a metrics snapshot (`stats` frame), and return the
+/// server's snapshot JSON — the CLI's `--stats` / `--stats-only` path.
+pub fn fetch_stats(addr: &str, timeout: Duration) -> Result<Json> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_millis(100))).context("read timeout")?;
+    let mut reader = FrameReader {
+        stream: stream.try_clone().context("cloning stream")?,
+        dec: FrameDecoder::new(),
+        queue: VecDeque::new(),
+        deadline: Instant::now() + timeout,
+    };
+    match reader.next(&mut |_| {})? {
+        ServerFrame::Hello { .. } => {}
+        other => bail!("expected a hello frame, got {other:?}"),
+    }
+    stream.write_all(ClientFrame::Stats.encode().as_bytes()).context("sending stats ask")?;
+    loop {
+        match reader.next(&mut |_| {})? {
+            ServerFrame::Stats { snapshot } => return Ok(snapshot),
+            ServerFrame::Error { message } => bail!("server error: {message}"),
+            _ => {} // other traffic may interleave on a busy server
+        }
+    }
 }
 
 /// Connect and send only a `shutdown` frame — the CLI's remote off switch.

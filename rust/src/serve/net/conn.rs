@@ -8,11 +8,17 @@
 //! from [`Conn::send`] and retires the client's requests as cancelled,
 //! which is exactly how a disconnect becomes a cancellation without the
 //! decode loop ever blocking on a dead peer.
+//!
+//! Every frame written is double-counted: per-connection atomics here
+//! (local accounting, unit-testable without a registry) and the shared
+//! [`Obs`] frame/byte totals plus a net-write phase span (what the
+//! `stats` frame and Prometheus dump report).
 
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::obs::{Obs, Phase};
 use crate::serve::net::protocol::ServerFrame;
 
 /// One live client connection's shared state.
@@ -21,18 +27,38 @@ pub struct Conn {
     pub id: u64,
     writer: Mutex<TcpStream>,
     alive: AtomicBool,
+    obs: Obs,
+    frames_written: AtomicU64,
+    bytes_written: AtomicU64,
 }
 
 impl Conn {
     /// Wrap the write half of an accepted socket. The caller keeps the
     /// read half for its reader thread (`TcpStream::try_clone` shares one
     /// underlying socket, so shutdown on either half reaches both).
-    pub fn new(id: u64, writer: TcpStream) -> Conn {
-        Conn { id, writer: Mutex::new(writer), alive: AtomicBool::new(true) }
+    pub fn new(id: u64, writer: TcpStream, obs: Obs) -> Conn {
+        Conn {
+            id,
+            writer: Mutex::new(writer),
+            alive: AtomicBool::new(true),
+            obs,
+            frames_written: AtomicU64::new(0),
+            bytes_written: AtomicU64::new(0),
+        }
     }
 
     pub fn is_alive(&self) -> bool {
         self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Frames successfully written to this connection.
+    pub fn frames_written(&self) -> u64 {
+        self.frames_written.load(Ordering::Relaxed)
+    }
+
+    /// Bytes successfully written to this connection.
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.load(Ordering::Relaxed)
     }
 
     /// Write one frame; returns false when the client is unreachable (the
@@ -43,9 +69,17 @@ impl Conn {
             return false;
         }
         let line = frame.encode();
+        let _span = self.obs.span(Phase::NetWrite);
         let mut w = self.writer.lock().expect("conn writer lock");
         match std::io::Write::write_all(&mut *w, line.as_bytes()) {
-            Ok(()) => true,
+            Ok(()) => {
+                self.frames_written.fetch_add(1, Ordering::Relaxed);
+                self.bytes_written.fetch_add(line.len() as u64, Ordering::Relaxed);
+                let m = self.obs.metrics();
+                m.net_frames_written_total.inc();
+                m.net_bytes_written_total.add(line.len() as u64);
+                true
+            }
             Err(_) => {
                 self.alive.store(false, Ordering::SeqCst);
                 let _ = w.shutdown(Shutdown::Both);
@@ -60,5 +94,43 @@ impl Conn {
         self.alive.store(false, Ordering::SeqCst);
         let w = self.writer.lock().expect("conn writer lock");
         let _ = w.shutdown(Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read as _;
+    use std::net::TcpListener;
+
+    #[test]
+    fn send_counts_frames_and_bytes_per_conn_and_in_obs() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+
+        let obs = Obs::default();
+        let conn = Conn::new(1, server_side, obs.clone());
+        let frame = ServerFrame::Cancelled { id: 3, tokens: 2 };
+        let wire = frame.encode();
+        assert!(conn.send(&frame));
+        assert_eq!(conn.frames_written(), 1);
+        assert_eq!(conn.bytes_written(), wire.len() as u64);
+        let s = obs.snapshot();
+        assert_eq!(s.counter("net_frames_written_total"), Some(1));
+        assert_eq!(s.counter("net_bytes_written_total"), Some(wire.len() as u64));
+        assert_eq!(s.hist("phase_net_write_ns").unwrap().count, 1);
+
+        // the bytes really did land on the wire
+        let mut buf = vec![0u8; wire.len()];
+        let mut client = client;
+        client.read_exact(&mut buf).unwrap();
+        assert_eq!(buf, wire.as_bytes());
+
+        // a closed connection drops sends without counting them
+        conn.close();
+        assert!(!conn.send(&frame));
+        assert_eq!(conn.frames_written(), 1);
     }
 }

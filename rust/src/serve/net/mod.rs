@@ -20,7 +20,9 @@ pub mod conn;
 pub mod protocol;
 pub mod server;
 
-pub use client::{run_client, send_shutdown, ClientOptions, ClientOutcome, ClientRequest};
+pub use client::{
+    fetch_stats, run_client, send_shutdown, ClientOptions, ClientOutcome, ClientRequest,
+};
 pub use conn::Conn;
 pub use protocol::{ClientFrame, FrameDecoder, ServerFrame, MAX_FRAME_BYTES};
 pub use server::{NetServer, NetServerOptions};

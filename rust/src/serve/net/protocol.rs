@@ -8,6 +8,7 @@
 //! ```text
 //! {"reason":"request","prompt":[1,2,3],"max_new_tokens":8,"seed":7,"tag":"a"}
 //! {"reason":"cancel","id":4}
+//! {"reason":"stats"}
 //! {"reason":"shutdown"}
 //! ```
 //!
@@ -20,6 +21,7 @@
 //! {"reason":"finished","id":4,"tokens":8,"ttft_ms":1.9,"gap_p50_ms":0.4,"gap_p95_ms":0.9}
 //! {"reason":"rejected","id":5,"queue":64,"cap":64,"message":"..."}
 //! {"reason":"cancelled","id":4,"tokens":3}
+//! {"reason":"stats","snapshot":{"generation":3,"tokens_decoded_total":24,...}}
 //! {"reason":"error","message":"..."}
 //! ```
 //!
@@ -94,6 +96,8 @@ pub enum ClientFrame {
     Request { tag: Option<String>, prompt: Vec<i32>, max_new_tokens: usize, seed: u64 },
     /// cancel a previously accepted request of this connection
     Cancel { id: u64 },
+    /// ask for a metrics snapshot; the server replies with a `stats` frame
+    Stats,
     /// graceful drain: stop admitting, finish in-flight requests, exit
     Shutdown,
 }
@@ -117,6 +121,7 @@ impl ClientFrame {
             ClientFrame::Cancel { id } => {
                 obj(vec![("reason", Json::Str("cancel".into())), ("id", num(*id))])
             }
+            ClientFrame::Stats => obj(vec![("reason", Json::Str("stats".into()))]),
             ClientFrame::Shutdown => obj(vec![("reason", Json::Str("shutdown".into()))]),
         }
     }
@@ -150,6 +155,7 @@ impl ClientFrame {
                 Ok(ClientFrame::Request { tag: opt_tag(&v)?, prompt, max_new_tokens, seed })
             }
             "cancel" => Ok(ClientFrame::Cancel { id: get_u64(&v, "id")? }),
+            "stats" => Ok(ClientFrame::Stats),
             "shutdown" => Ok(ClientFrame::Shutdown),
             other => bail!("unknown client frame reason {other:?}"),
         }
@@ -175,6 +181,9 @@ pub enum ServerFrame {
     /// the request retired early (cancel frame or disconnect) with
     /// `tokens` already streamed
     Cancelled { id: u64, tokens: usize },
+    /// a metrics snapshot (the `Obs` registry's flat JSON rendering),
+    /// answering a client `stats` frame
+    Stats { snapshot: Json },
     /// protocol violation; the server closes the connection after this
     Error { message: String },
 }
@@ -222,6 +231,10 @@ impl ServerFrame {
                 ("reason", Json::Str("cancelled".into())),
                 ("id", num(*id)),
                 ("tokens", num(*tokens as u64)),
+            ]),
+            ServerFrame::Stats { snapshot } => obj(vec![
+                ("reason", Json::Str("stats".into())),
+                ("snapshot", snapshot.clone()),
             ]),
             ServerFrame::Error { message } => obj(vec![
                 ("reason", Json::Str("error".into())),
@@ -271,6 +284,7 @@ impl ServerFrame {
                 id: get_u64(&v, "id")?,
                 tokens: get_u64(&v, "tokens")? as usize,
             }),
+            "stats" => Ok(ServerFrame::Stats { snapshot: v.get("snapshot")?.clone() }),
             "error" => {
                 Ok(ServerFrame::Error { message: v.get("message")?.as_str()?.to_string() })
             }
@@ -344,6 +358,7 @@ mod tests {
             },
             ClientFrame::Request { tag: None, prompt: vec![], max_new_tokens: 1, seed: 0 },
             ClientFrame::Cancel { id: 42 },
+            ClientFrame::Stats,
             ClientFrame::Shutdown,
         ];
         for f in frames {
@@ -375,6 +390,9 @@ mod tests {
                 message: "request queue full".into(),
             },
             ServerFrame::Cancelled { id: 3, tokens: 2 },
+            ServerFrame::Stats {
+                snapshot: Json::parse(r#"{"generation":3,"tokens_decoded_total":24}"#).unwrap(),
+            },
             ServerFrame::Error { message: "bad \"frame\"\n".into() },
         ];
         for f in frames {

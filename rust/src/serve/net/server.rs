@@ -40,6 +40,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::obs::{Obs, Phase};
 use crate::serve::engine::{
     EngineOptions, EngineOutcome, FinishedRequest, RequestSource, ServeEngine, ServeEvent,
 };
@@ -59,6 +60,9 @@ pub struct NetServerOptions {
     pub write_timeout: Duration,
     /// how long an idle engine step parks on the intake condvar
     pub idle_wait: Duration,
+    /// telemetry registry shared with the engine and every connection
+    /// (answers the `stats` frame); `None` gets a private real-clock one
+    pub obs: Option<Obs>,
 }
 
 impl NetServerOptions {
@@ -68,6 +72,7 @@ impl NetServerOptions {
             vocab,
             write_timeout: Duration::from_secs(5),
             idle_wait: Duration::from_millis(2),
+            obs: None,
         }
     }
 }
@@ -267,17 +272,21 @@ impl NetServer {
         on_event: &mut dyn FnMut(&ServeEvent),
     ) -> Result<EngineOutcome> {
         self.listener.set_nonblocking(true).context("nonblocking listener")?;
+        let obs = self.opts.obs.clone().unwrap_or_default();
         let done = Arc::new(AtomicBool::new(false));
         let accept_thread = {
             let listener = self.listener.try_clone().context("cloning listener")?;
             let intake = self.intake.clone();
             let opts = self.opts.clone();
             let done = done.clone();
-            std::thread::spawn(move || accept_loop(listener, intake, opts, done))
+            let obs = obs.clone();
+            std::thread::spawn(move || accept_loop(listener, intake, opts, done, obs))
         };
 
         let mut source = NetSource::new(self.intake.clone(), self.opts.idle_wait);
-        let outcome = ServeEngine::new(model, engine_opts).run_source(&mut source, on_event);
+        let outcome = ServeEngine::new(model, engine_opts)
+            .with_obs(obs)
+            .run_source(&mut source, on_event);
 
         // drain epilogue: stop accepting, close every connection so its
         // reader unblocks, and join the whole thread tree
@@ -300,6 +309,7 @@ fn accept_loop(
     intake: Arc<Intake>,
     opts: NetServerOptions,
     done: Arc<AtomicBool>,
+    obs: Obs,
 ) {
     let mut readers = Vec::new();
     let mut next_conn = 0u64;
@@ -316,7 +326,7 @@ fn accept_loop(
                 let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
                 let _ = stream.set_write_timeout(Some(opts.write_timeout));
                 let Ok(writer) = stream.try_clone() else { continue };
-                let conn = Arc::new(Conn::new(next_conn, writer));
+                let conn = Arc::new(Conn::new(next_conn, writer, obs.clone()));
                 next_conn += 1;
                 if !conn.send(&ServerFrame::Hello {
                     config: opts.config.clone(),
@@ -324,11 +334,13 @@ fn accept_loop(
                 }) {
                     continue; // died during the greeting
                 }
+                obs.metrics().connections_open.inc();
                 intake.state.lock().expect("intake lock").conns.push(conn.clone());
                 let intake = intake.clone();
                 let vocab = opts.vocab;
+                let obs = obs.clone();
                 readers.push(std::thread::spawn(move || {
-                    reader_loop(conn, stream, intake, vocab)
+                    reader_loop(conn, stream, intake, vocab, obs)
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -345,10 +357,17 @@ fn accept_loop(
 /// Parse one connection's inbound bytes until EOF, error, protocol
 /// violation, or server drain; then mark the connection dead and register
 /// the disconnect so the engine cancels whatever the client still owned.
-fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream, intake: Arc<Intake>, vocab: usize) {
+fn reader_loop(
+    conn: Arc<Conn>,
+    mut stream: TcpStream,
+    intake: Arc<Intake>,
+    vocab: usize,
+    obs: Obs,
+) {
     let mut dec = FrameDecoder::new();
     let mut buf = [0u8; 4096];
     'read: while conn.is_alive() {
+        let t0 = obs.clock().now_ns();
         let n = match stream.read(&mut buf) {
             Ok(0) => break, // EOF: client closed its half
             Ok(n) => n,
@@ -358,10 +377,13 @@ fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream, intake: Arc<Intake>, voca
                     std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
                 ) =>
             {
-                continue; // timeout tick: re-check liveness
+                continue; // timeout tick: re-check liveness (not a net-read
+                          // sample — idle ticks would drown the histogram)
             }
             Err(_) => break,
         };
+        obs.record_phase(Phase::NetRead, obs.clock().now_ns().saturating_sub(t0));
+        obs.metrics().net_bytes_read_total.add(n as u64);
         let lines = match dec.push(&buf[..n]) {
             Ok(lines) => lines,
             Err(e) => {
@@ -370,6 +392,7 @@ fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream, intake: Arc<Intake>, voca
             }
         };
         for line in lines {
+            obs.metrics().net_frames_read_total.inc();
             let frame = match ClientFrame::parse(&line) {
                 Ok(f) => f,
                 Err(e) => {
@@ -377,12 +400,13 @@ fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream, intake: Arc<Intake>, voca
                     break 'read;
                 }
             };
-            if !handle_frame(&conn, &intake, vocab, frame) {
+            if !handle_frame(&conn, &intake, vocab, &obs, frame) {
                 break 'read;
             }
         }
     }
     conn.close();
+    obs.metrics().connections_open.dec();
     {
         let mut st = intake.state.lock().expect("intake lock");
         st.dead_conns.push(conn.id);
@@ -393,7 +417,13 @@ fn reader_loop(conn: Arc<Conn>, mut stream: TcpStream, intake: Arc<Intake>, voca
 
 /// Dispatch one parsed frame; returns false when the connection must
 /// close (protocol violation).
-fn handle_frame(conn: &Arc<Conn>, intake: &Arc<Intake>, vocab: usize, frame: ClientFrame) -> bool {
+fn handle_frame(
+    conn: &Arc<Conn>,
+    intake: &Arc<Intake>,
+    vocab: usize,
+    obs: &Obs,
+    frame: ClientFrame,
+) -> bool {
     match frame {
         ClientFrame::Request { tag, prompt, max_new_tokens, seed } => {
             if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
@@ -434,6 +464,12 @@ fn handle_frame(conn: &Arc<Conn>, intake: &Arc<Intake>, vocab: usize, frame: Cli
         ClientFrame::Cancel { id } => {
             intake.state.lock().expect("intake lock").cancels.push((conn.id, id));
             intake.cv.notify_one();
+            true
+        }
+        ClientFrame::Stats => {
+            // answered from the reader thread — a consistent snapshot of
+            // the shared registry needs no engine round-trip
+            conn.send(&ServerFrame::Stats { snapshot: obs.snapshot().to_json() });
             true
         }
         ClientFrame::Shutdown => {
@@ -491,6 +527,55 @@ mod tests {
         assert_eq!(out.cancelled, 0);
         assert_eq!(drained, 1);
         assert_eq!(out.cache_bytes_in_use, 0);
+    }
+
+    #[test]
+    fn stats_frame_answers_with_a_snapshot() {
+        let m = model();
+        let mut opts = NetServerOptions::new("net-test".into(), 11);
+        let obs = Obs::default();
+        opts.obs = Some(obs.clone());
+        let srv = NetServer::bind("127.0.0.1:0", opts).unwrap();
+        let addr = srv.local_addr();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut dec = FrameDecoder::new();
+            let mut buf = [0u8; 4096];
+            let mut frames = Vec::new();
+            std::io::Write::write_all(&mut s, ClientFrame::Stats.encode().as_bytes()).unwrap();
+            // hello + stats, then shut the server down
+            while frames.len() < 2 {
+                let n = stream_read(&mut s, &mut buf);
+                for line in dec.push(&buf[..n]).unwrap() {
+                    frames.push(ServerFrame::parse(&line).unwrap());
+                }
+            }
+            std::io::Write::write_all(&mut s, ClientFrame::Shutdown.encode().as_bytes())
+                .unwrap();
+            frames
+        });
+        srv.serve(
+            &m,
+            EngineOptions { temperature: 0.0, top_k: 0, ..Default::default() },
+            &mut |_| {},
+        )
+        .unwrap();
+        let frames = client.join().unwrap();
+        assert!(matches!(frames[0], ServerFrame::Hello { .. }));
+        match &frames[1] {
+            ServerFrame::Stats { snapshot } => {
+                let gen = snapshot.get("generation").unwrap().as_f64().unwrap();
+                assert!(gen >= 1.0, "stamped snapshot");
+                assert!(snapshot.get("tokens_decoded_total").is_ok());
+            }
+            other => panic!("expected a stats frame, got {other:?}"),
+        }
+        // the shared registry saw the connection's traffic
+        let s = obs.snapshot();
+        assert!(s.counter("net_frames_read_total").unwrap() >= 2, "stats + shutdown");
+        assert!(s.counter("net_frames_written_total").unwrap() >= 2, "hello + stats");
+        assert_eq!(s.gauge("connections_open"), Some(0), "reader exit closed it out");
     }
 
     fn stream_read(s: &mut TcpStream, buf: &mut [u8]) -> usize {

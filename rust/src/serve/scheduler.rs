@@ -87,12 +87,14 @@ pub struct Scheduler {
     queue: VecDeque<ServeRequest>,
     /// idle steps spent waiting for a full batch
     waited: usize,
+    /// deepest the queue has ever been (the telemetry high-watermark)
+    peak_queue: usize,
 }
 
 impl Scheduler {
     pub fn new(policy: SchedulerPolicy) -> Scheduler {
         assert!(policy.max_batch > 0, "max_batch must be positive");
-        Scheduler { policy, queue: VecDeque::new(), waited: 0 }
+        Scheduler { policy, queue: VecDeque::new(), waited: 0, peak_queue: 0 }
     }
 
     pub fn policy(&self) -> &SchedulerPolicy {
@@ -111,11 +113,18 @@ impl Scheduler {
             );
         }
         self.queue.push_back(req);
+        self.peak_queue = self.peak_queue.max(self.queue.len());
         Ok(())
     }
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Deepest the bounded queue has ever been over this scheduler's
+    /// lifetime (feeds the `queue_depth_peak` gauge).
+    pub fn queue_peak(&self) -> usize {
+        self.peak_queue
     }
 
     /// Remaining bounded-queue capacity — what the engine hands its
@@ -210,6 +219,21 @@ mod tests {
         s.submit(req(1)).unwrap();
         assert!(s.submit(req(2)).is_err());
         assert_eq!(s.queue_len(), 2);
+    }
+
+    #[test]
+    fn queue_peak_is_a_lifetime_high_watermark() {
+        let mut s = Scheduler::new(policy(2, 0, 4));
+        assert_eq!(s.queue_peak(), 0);
+        s.submit(req(0)).unwrap();
+        s.submit(req(1)).unwrap();
+        s.submit(req(2)).unwrap();
+        assert_eq!(s.queue_peak(), 3);
+        // draining the queue never lowers the watermark
+        assert_eq!(s.admit(0, &StepLimits::unlimited()).len(), 2);
+        assert!(s.cancel(2));
+        assert_eq!(s.queue_len(), 0);
+        assert_eq!(s.queue_peak(), 3);
     }
 
     #[test]

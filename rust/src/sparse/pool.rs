@@ -23,8 +23,10 @@
 //! background workers; every worker claims each epoch exactly once and
 //! decrements `pending` when done; the caller blocks on `pending == 0`.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::sparse::threads::worker_count;
 
@@ -48,15 +50,33 @@ struct State {
     shutdown: bool,
 }
 
+/// Lifetime stats for one worker slot (slot 0 = the calling thread):
+/// wall time spent inside jobs and tiles claimed by the steal loops.
+/// Relaxed atomics — written by the owning worker, read by snapshots.
+#[derive(Default)]
+struct WorkerStat {
+    busy_ns: AtomicU64,
+    tiles: AtomicU64,
+}
+
 struct Shared {
     state: Mutex<State>,
     /// Workers park here between jobs.
     work_cv: Condvar,
     /// The submitting caller parks here until `pending == 0`.
     done_cv: Condvar,
+    /// Per-slot busy/tile stats, indexed by worker id.
+    stats: Vec<WorkerStat>,
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+thread_local! {
+    /// This thread's slot in its pool's stats (background workers set
+    /// their index once at spawn; everyone else — i.e. callers — is 0).
+    static WORKER_ID: Cell<usize> = const { Cell::new(0) };
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    WORKER_ID.with(|id| id.set(me));
     let mut seen = 0u64;
     loop {
         let job;
@@ -76,7 +96,11 @@ fn worker_loop(shared: Arc<Shared>) {
         }
         // run outside the lock; the body is a work-stealing loop that
         // returns as soon as the shared tile queue is empty
+        let t0 = Instant::now();
         (unsafe { &*job.ptr })();
+        shared.stats[me]
+            .busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let mut st = shared.state.lock().unwrap();
         st.pending -= 1;
         if st.pending == 0 {
@@ -135,13 +159,14 @@ impl WorkerPool {
             state: Mutex::new(State { job: None, epoch: 0, pending: 0, shutdown: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            stats: (0..workers).map(|_| WorkerStat::default()).collect(),
         });
         let mut handles = Vec::with_capacity(workers - 1);
         for i in 1..workers {
             let sh = Arc::clone(&shared);
             let h = std::thread::Builder::new()
                 .name(format!("sparse-worker-{i}"))
-                .spawn(move || worker_loop(sh))
+                .spawn(move || worker_loop(sh, i))
                 .expect("spawn sparse worker");
             handles.push(h);
         }
@@ -210,7 +235,9 @@ impl WorkerPool {
     /// from inside a running job (the pool runs one job at a time).
     pub fn run(&self, body: &(dyn Fn() + Sync)) {
         if self.core.background == 0 {
+            let t0 = Instant::now();
             body();
+            self.note_busy(0, t0.elapsed().as_nanos() as u64);
             return;
         }
         let _turn = self.core.submit.lock().unwrap();
@@ -223,12 +250,35 @@ impl WorkerPool {
             st.pending = self.core.background;
         }
         self.core.shared.work_cv.notify_all();
+        let t0 = Instant::now();
         body(); // the caller is worker 0
+        self.note_busy(0, t0.elapsed().as_nanos() as u64);
         let mut st = self.core.shared.state.lock().unwrap();
         while st.pending != 0 {
             st = self.core.shared.done_cv.wait(st).unwrap();
         }
         st.job = None;
+    }
+
+    fn note_busy(&self, slot: usize, ns: u64) {
+        self.core.shared.stats[slot].busy_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Count one stolen tile for the current thread's slot (the kernel
+    /// steal loops call this per claimed tile).
+    pub fn note_tile(&self) {
+        let slot = WORKER_ID.with(|id| id.get()).min(self.core.workers - 1);
+        self.core.shared.stats[slot].tiles.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lifetime `(busy_ns, tiles)` per worker slot (slot 0 = callers).
+    pub fn stats(&self) -> Vec<(u64, u64)> {
+        self.core
+            .shared
+            .stats
+            .iter()
+            .map(|s| (s.busy_ns.load(Ordering::Relaxed), s.tiles.load(Ordering::Relaxed)))
+            .collect()
     }
 }
 
@@ -340,6 +390,21 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn stats_track_busy_time_and_tiles() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.stats(), vec![(0, 0), (0, 0)]);
+        pool.run(&|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        let stats = pool.stats();
+        assert_eq!(stats.len(), 2);
+        // both the caller (slot 0) and the background worker ran the job
+        assert!(stats.iter().all(|&(busy, _)| busy > 0), "{stats:?}");
+        // tile counts only move through note_tile (the kernel steal loops)
+        assert!(stats.iter().all(|&(_, tiles)| tiles == 0), "{stats:?}");
+        pool.note_tile(); // caller thread books to slot 0
+        assert_eq!(pool.stats()[0].1, 1);
     }
 
     #[test]

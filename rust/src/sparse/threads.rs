@@ -103,6 +103,7 @@ pub fn for_each_token_tile_in<F>(
         if i >= n_tiles {
             break;
         }
+        pool.note_tile();
         let t0 = i * TOKEN_TILE;
         let tb = TOKEN_TILE.min(t_n - t0);
         // SAFETY: tile i exclusively owns rows [t0, t0 + tb) of y, and the
@@ -184,6 +185,24 @@ mod tests {
         for (i, v) in y.iter().enumerate() {
             assert_eq!(*v, i as f32, "idx {i}");
         }
+    }
+
+    #[test]
+    fn stolen_tiles_are_counted_once_each() {
+        let pool = WorkerPool::new(2);
+        let (t_n, o_n) = (1000, 4); // 4 tiles of TOKEN_TILE=256
+        let mut y = vec![0.0f32; t_n * o_n];
+        for_each_token_tile_in(&pool, t_n, o_n, &mut y, |_, rows| {
+            for v in rows.iter_mut() {
+                *v = 1.0;
+            }
+        });
+        let total: u64 = pool.stats().iter().map(|&(_, tiles)| tiles).sum();
+        assert_eq!(total, t_n.div_ceil(TOKEN_TILE) as u64);
+        // the serial path (single worker) never books tiles
+        let solo = WorkerPool::new(1);
+        for_each_token_tile_in(&solo, t_n, o_n, &mut y, |_, _| {});
+        assert_eq!(solo.stats(), vec![(0, 0)]);
     }
 
     #[test]

@@ -1,18 +1,34 @@
 //! Timing + summary statistics for the bench harness (criterion is not
 //! available offline). Benches report min/median/mean over repeated runs
 //! after a warmup, which is what the paper-style tables need.
+//!
+//! `Timer` reads a [`Clock`](crate::obs::Clock) rather than raw
+//! `Instant::now()`, so timing-bearing output can be made deterministic
+//! under the mock clock ([`Timer::with_clock`]); the plain
+//! [`Timer::start`] keeps real-time behavior.
 
-use std::time::Instant;
+use crate::obs::Clock;
 
-pub struct Timer(Instant);
+pub struct Timer {
+    clock: Clock,
+    start_ns: u64,
+}
 
 impl Timer {
+    /// A real-time timer (the bench default).
     pub fn start() -> Self {
-        Timer(Instant::now())
+        Timer::with_clock(Clock::real())
+    }
+
+    /// A timer on an explicit clock — pass `Clock::mock(tick)` to make
+    /// readings a pure function of how often the clock is consulted.
+    pub fn with_clock(clock: Clock) -> Self {
+        let start_ns = clock.now_ns();
+        Timer { clock, start_ns }
     }
 
     pub fn secs(&self) -> f64 {
-        self.0.elapsed().as_secs_f64()
+        self.clock.secs_since(self.start_ns)
     }
 
     pub fn ms(&self) -> f64 {
@@ -79,5 +95,12 @@ mod tests {
         let s = bench_fn(2, 5, || count += 1);
         assert_eq!(count, 7);
         assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn mock_clock_timer_is_deterministic() {
+        let t = Timer::with_clock(Clock::mock(1_000_000)); // 1ms tick
+        assert_eq!(t.secs(), 1e-3); // exactly one read after start
+        assert_eq!(t.ms(), 2.0);
     }
 }

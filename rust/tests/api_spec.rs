@@ -129,6 +129,9 @@ fn job_spec_label_round_trip() {
         "serve/nano/sparsegpt-50%,workers=4",
         "serve/medium/sparsegpt-50%,kv=off,chunk=1,workers=2,fmt=qcsr:4",
         "serve/nano/sparsegpt-50%,fmt=csr:perm",
+        "serve/nano/sparsegpt-50%,snap=4",
+        "serve/nano/sparsegpt-50%,clock=mock",
+        "serve/medium/sparsegpt-50%,kv=off,net=127.0.0.1:9000,cancel=2@5,snap=8,clock=mock",
     ] {
         let spec = JobSpec::parse(label).unwrap_or_else(|e| panic!("{label}: {e:#}"));
         assert_eq!(spec.label(), label, "label round trip for {label}");
@@ -181,6 +184,10 @@ fn job_spec_rejects_malformed() {
         "serve/nano/sparsegpt-50%,cancel=1@",
         "serve/nano/sparsegpt-50%,workers=",
         "serve/nano/sparsegpt-50%,workers=x",
+        "serve/nano/sparsegpt-50%,snap=",
+        "serve/nano/sparsegpt-50%,snap=x",
+        "serve/nano/sparsegpt-50%,clock=",
+        "serve/nano/sparsegpt-50%,clock=maybe",
         "gen-data/nano",
     ] {
         assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
@@ -223,6 +230,31 @@ fn serve_net_and_cancel_knob_labels_map_to_fields() {
     assert!(d.listen.is_none());
     assert!(d.cancel.is_empty());
     assert!(d.addr_file.is_none());
+}
+
+#[test]
+fn serve_telemetry_knob_labels_map_to_fields() {
+    let JobSpec::Serve(s) =
+        JobSpec::parse("serve/nano/sparsegpt-50%,snap=4,clock=mock").unwrap()
+    else {
+        panic!("wrong kind");
+    };
+    assert_eq!(s.snap_every, 4);
+    assert!(s.mock_clock);
+    // the metrics file is a CLI-only knob: never encoded in the label
+    assert!(s.metrics_file.is_none());
+    // clock=real parses (explicit default) but canonicalizes away
+    let JobSpec::Serve(s) = JobSpec::parse("serve/nano/sparsegpt-50%,clock=real").unwrap() else {
+        panic!("wrong kind");
+    };
+    assert!(!s.mock_clock);
+    assert_eq!(JobSpec::Serve(s).label(), "serve/nano/sparsegpt-50%");
+    // defaults: no periodic snapshots, real clock
+    let JobSpec::Serve(d) = JobSpec::parse("serve/nano/sparsegpt-50%").unwrap() else {
+        panic!("wrong kind");
+    };
+    assert_eq!(d.snap_every, 0);
+    assert!(!d.mock_clock);
 }
 
 #[test]

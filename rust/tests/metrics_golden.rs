@@ -1,0 +1,185 @@
+//! Golden test for the serve-path telemetry contract: the same
+//! hand-verified zero-artifact workload as `serve_events_golden` (3
+//! requests, 130-token prompts into nano's 128-token window, batch 2,
+//! scripted `cancel=1@3`; 6 steps, 8 tokens, 11 evictions, 2 finished,
+//! 1 cancelled) runs with `snap=100` + `clock=mock` + `--metrics-file`,
+//! and the one drain-time `metrics-snapshot` event plus the Prometheus
+//! dump must match `golden/metrics_snapshot.jsonl` / `golden/metrics.prom`
+//! byte for byte after normalization.
+//!
+//! Normalization keeps exactly the scalars the schedule determines (the
+//! `SCHEDULE_PINNED` whitelist) and zeroes everything wall-clock- or
+//! host-shaped (histograms, worker stats, peaks that depend on admission
+//! interleaving). Snapshot generations are real pins: the engine's drain
+//! snapshot is generation 1, and the job's post-run snapshot (report +
+//! Prometheus file) is generation 2 — a third snapshot sneaking into the
+//! serve path breaks the golden on purpose.
+//!
+//! Mock-clock discipline: every phase span is bounded by exactly two
+//! clock reads with none in between, so under `clock=mock` each recorded
+//! duration is exactly one tick (1ms). The report asserts pin that for
+//! the solve/pack/prefill spans.
+
+use std::collections::BTreeMap;
+
+use sparsegpt::api::{JobSpec, JsonlSink, ServeReport, ServeSpec, Session};
+use sparsegpt::harness::Workspace;
+use sparsegpt::runtime::ReferenceBackend;
+use sparsegpt::sparse::PackFormat;
+use sparsegpt::util::json::Json;
+
+/// Scalars whose values the hand-verified schedule fully determines —
+/// the normalizer keeps these verbatim, so the goldens pin them.
+const SCHEDULE_PINNED: &[&str] = &[
+    "generation",
+    "tokens_decoded_total",
+    "steps_total",
+    "requests_enqueued_total",
+    "requests_finished_total",
+    "requests_cancelled_total",
+    "requests_rejected_total",
+    "cache_evictions_total",
+    "events_dropped_total",
+    "ttft_anchor_missing_total",
+    "net_frames_read_total",
+    "net_bytes_read_total",
+    "net_frames_written_total",
+    "net_bytes_written_total",
+    "queue_depth",
+    "cache_bytes_in_use",
+    "connections_open",
+];
+
+/// Keep pinned scalars, zero all other numbers, empty histograms/arrays.
+fn normalize(v: &Json) -> Json {
+    let Json::Obj(m) = v else { return v.clone() };
+    let mut out = BTreeMap::new();
+    for (k, val) in m {
+        let norm = match val {
+            Json::Num(_) if SCHEDULE_PINNED.contains(&k.as_str()) => val.clone(),
+            Json::Num(_) => Json::Num(0.0),
+            // histograms keep their shape, lose their timing-shaped samples
+            Json::Obj(_) => Json::parse(r#"{"buckets":[],"count":0,"sum":0}"#).unwrap(),
+            Json::Arr(_) => Json::Arr(Vec::new()),
+            other => other.clone(),
+        };
+        out.insert(k.clone(), norm);
+    }
+    Json::Obj(out)
+}
+
+fn run_serve_with_telemetry() -> (String, String, ServeReport) {
+    let dir = std::env::temp_dir().join(format!("sgpt_metrics_golden_{}", std::process::id()));
+    let ws = Workspace {
+        data_dir: dir.join("data"), // absent: the synthetic-calibration fallback engages
+        ckpt_dir: dir.join("checkpoints"), // absent: the seed-0 init fallback engages
+        report_dir: dir.join("reports"),
+        rt: Box::new(ReferenceBackend::new()),
+    };
+    // the serve_events_golden workload, verbatim — its schedule is already
+    // hand-verified there, so the counter values below are known
+    let mut spec = ServeSpec::new("nano");
+    spec.requests = 3;
+    spec.max_new_tokens = 3;
+    spec.prompt_len = 130;
+    spec.arrival_every = 1;
+    spec.max_batch = 2;
+    spec.max_wait = 1;
+    spec.temperature = 0.0;
+    spec.calib = 4;
+    spec.cancel = vec![(1, 3)];
+    spec.format = PackFormat::QCsr { bits: 4, group: 0 };
+    spec.save_store = Some(dir.join("nano-metrics.spkt"));
+    // telemetry knobs: 6 steps < 100, so only the drain snapshot fires;
+    // the mock clock makes every duration exactly one 1ms tick
+    spec.snap_every = 100;
+    spec.mock_clock = true;
+    let prom_path = dir.join("metrics.prom");
+    spec.metrics_file = Some(prom_path.clone());
+    let mut sink = JsonlSink::new(Vec::new());
+    let mut session = Session::with_workspace(ws);
+    let report = session.run(&JobSpec::Serve(spec), &mut sink).unwrap().into_serve().unwrap();
+    let prom = std::fs::read_to_string(&prom_path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    (String::from_utf8(sink.into_inner()).unwrap(), prom, report)
+}
+
+#[test]
+fn metrics_snapshot_event_and_prometheus_dump_match_goldens() {
+    let (jsonl, prom, report) = run_serve_with_telemetry();
+
+    // exactly one metrics-snapshot event (the drain one; 6 steps < snap=100)
+    let snaps: Vec<Json> = jsonl
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("unparseable line {l:?}: {e:#}")))
+        .filter(|v| v.get("reason").unwrap().as_str().unwrap() == "metrics-snapshot")
+        .collect();
+    assert_eq!(snaps.len(), 1, "only the drain snapshot fires under snap=100");
+    let got = normalize(&snaps[0]).to_string_compact() + "\n";
+    let want = include_str!("golden/metrics_snapshot.jsonl");
+    assert_eq!(
+        got, want,
+        "metrics-snapshot schema drifted — update \
+         rust/tests/golden/metrics_snapshot.jsonl deliberately (the stats \
+         frame and Prometheus dump render the same snapshot)"
+    );
+
+    // the Prometheus dump: keep the schedule-pinned scalar lines (plus the
+    // generation stamp), drop timing-shaped histogram/worker lines
+    let mut kept = String::new();
+    for line in prom.lines() {
+        let metric = match line.strip_prefix("# TYPE sparsegpt_") {
+            Some(rest) => rest.split(' ').next().unwrap(),
+            None => line
+                .strip_prefix("sparsegpt_")
+                .unwrap_or("")
+                .split([' ', '{'])
+                .next()
+                .unwrap(),
+        };
+        if SCHEDULE_PINNED.contains(&metric) || metric == "snapshot_generation" {
+            kept.push_str(line);
+            kept.push('\n');
+        }
+    }
+    let want_prom = include_str!("golden/metrics.prom");
+    assert_eq!(
+        kept, want_prom,
+        "Prometheus exposition drifted — update rust/tests/golden/metrics.prom \
+         deliberately (scrapers parse these lines)"
+    );
+
+    // the report embeds the post-run snapshot (generation 2: the drain
+    // event consumed 1) and its totals agree with the engine outcome
+    let m = &report.metrics;
+    let get = |k: &str| m.get(k).unwrap().as_f64().unwrap() as u64;
+    assert_eq!(get("generation"), 2);
+    assert_eq!(get("tokens_decoded_total") as usize, report.tokens);
+    assert_eq!(get("steps_total") as usize, report.steps);
+    assert_eq!(get("cache_evictions_total") as usize, report.cache_evictions);
+    assert_eq!(get("requests_cancelled_total") as usize, report.cancelled);
+    assert_eq!(get("tokens_prefilled_total") as usize, report.prefill_tokens);
+    assert_eq!(get("cache_bytes_peak"), report.peak_cache_bytes);
+    assert_eq!(get("queue_depth"), 0, "drained");
+    assert_eq!(get("cache_bytes_in_use"), 0, "every reservation released");
+
+    // mock-clock discipline: each span is two clock reads with none in
+    // between, so every recorded duration is exactly one 1ms tick
+    let hist = |k: &str| {
+        let h = m.get(k).unwrap();
+        let count = h.get("count").unwrap().as_f64().unwrap() as u64;
+        let sum = h.get("sum").unwrap().as_f64().unwrap() as u64;
+        (count, sum)
+    };
+    assert_eq!(hist("phase_solve_ns"), (1, 1_000_000), "one prune pass");
+    assert_eq!(hist("phase_pack_ns"), (1, 1_000_000), "one pack pass");
+    let (prefills, prefill_ns) = hist("phase_prefill_ns");
+    assert_eq!(prefills, 3, "every request prefills exactly once");
+    assert_eq!(prefill_ns, prefills * 1_000_000);
+    let (decodes, decode_ns) = hist("phase_decode_ns");
+    assert!(decodes >= 1);
+    assert_eq!(decode_ns, decodes * 1_000_000);
+    for net in ["phase_net_read_ns", "phase_net_write_ns"] {
+        assert_eq!(hist(net), (0, 0), "no sockets in a synthetic run");
+    }
+}

@@ -2,12 +2,16 @@
 //! inputs over many seeds, asserting the coordinator/solver invariants that
 //! the paper's method guarantees by construction.
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+
 use sparsegpt::coordinator::SkipSpec;
 use sparsegpt::data::corpus::{gen_corpus, CorpusStyle, Lexicon};
 use sparsegpt::data::Tokenizer;
 use sparsegpt::model::init::init_params;
 use sparsegpt::model::layout::{LinearKind, PRUNABLE_KINDS};
 use sparsegpt::model::{ModelCfg, SparseStore};
+use sparsegpt::obs::{Counter, Histogram};
 use sparsegpt::serve::{
     EngineOptions, KvCache, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel,
 };
@@ -667,6 +671,78 @@ fn prop_skip_policies_consistent() {
                 }
             }
         }
+    }
+}
+
+/// Property: the lock-free metric primitives are exactly counted under
+/// concurrency — writer threads hammer one Counter and one Histogram
+/// while a reader polls (reads are monotone and `snapshot()`'s bounded
+/// retry always terminates under fire), and once the writers join, the
+/// totals and per-bucket counts equal the precomputed expectation: no
+/// increment is ever lost.
+#[test]
+fn prop_metrics_concurrent_updates_never_lose_increments() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xB10);
+        let writers = 2 + rng.below(3);
+        let per_writer = 500 + rng.below(1500);
+        // precomputed value streams (shifted for varied bit lengths), so
+        // the expected totals and bucket shape are exact
+        let mut streams: Vec<Vec<u64>> = Vec::new();
+        for _ in 0..writers {
+            let vals: Vec<u64> =
+                (0..per_writer).map(|_| rng.next_u64() >> (rng.below(64) as u32)).collect();
+            streams.push(vals);
+        }
+        let expect_count = (writers * per_writer) as u64;
+        let mut expect_counter = expect_count; // one inc() per observation, plus add(v % 3)
+        let mut expect_sum = 0u64;
+        let mut expect_buckets: BTreeMap<u64, u64> = BTreeMap::new();
+        for &v in streams.iter().flatten() {
+            expect_counter += v % 3;
+            expect_sum = expect_sum.wrapping_add(v); // atomic sum wraps too
+            let bits = 64 - v.leading_zeros() as usize;
+            let le = if bits >= 64 { u64::MAX } else { (1u64 << bits) - 1 };
+            *expect_buckets.entry(le).or_insert(0) += 1;
+        }
+        let (c, h) = (Counter::default(), Histogram::default());
+        let done = AtomicBool::new(false);
+        let (c, h, done) = (&c, &h, &done);
+        std::thread::scope(|s| {
+            let reader = s.spawn(move || {
+                let (mut last_c, mut last_n) = (0u64, 0u64);
+                while !done.load(Relaxed) {
+                    let (now_c, now_n) = (c.get(), h.count());
+                    assert!(now_c >= last_c, "counter moved backwards");
+                    assert!(now_n >= last_n, "histogram count moved backwards");
+                    (last_c, last_n) = (now_c, now_n);
+                    let hs = h.snapshot(); // bounded retry must return mid-fire
+                    assert!(hs.count <= expect_count);
+                }
+            });
+            let mut handles = Vec::new();
+            for vals in &streams {
+                handles.push(s.spawn(move || {
+                    for &v in vals {
+                        c.inc();
+                        c.add(v % 3);
+                        h.observe(v);
+                    }
+                }));
+            }
+            for t in handles {
+                t.join().unwrap();
+            }
+            done.store(true, Relaxed);
+            reader.join().unwrap();
+        });
+        // writers quiescent: the snapshot is exact, and nothing was lost
+        assert_eq!(c.get(), expect_counter, "seed {seed}: counter lost increments");
+        let snap = h.snapshot();
+        assert_eq!(snap.count, expect_count, "seed {seed}: histogram lost observations");
+        assert_eq!(snap.sum, expect_sum, "seed {seed}: histogram lost sum");
+        let want: Vec<(u64, u64)> = expect_buckets.into_iter().collect();
+        assert_eq!(snap.buckets, want, "seed {seed}: per-bucket counts drifted");
     }
 }
 
