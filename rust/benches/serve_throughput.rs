@@ -29,6 +29,10 @@
 //!         "tokens_per_sec": ..., "speedup_vs_dense": ...,
 //!         "speedup_vs_uncached": ... }, ...],
 //!     "metrics": { ...final Obs snapshot across every measured engine... } }
+//! plus one `"variant": "fleet-3"` row ("models": 3): a single engine
+//! serving the dense default with csr-50% and q4-50% as named mmap-backed
+//! fleet variants, requests round-robined across them with per-request
+//! `model=` routing.
 //!
 //! Env knobs: SPARSEGPT_BENCH_CONFIGS (default "small"),
 //! SPARSEGPT_BENCH_SERVE_REQUESTS (4), SPARSEGPT_BENCH_SERVE_TOKENS (4),
@@ -44,8 +48,9 @@ use sparsegpt::model::init::init_params;
 use sparsegpt::model::layout::{FlatParams, PRUNABLE_KINDS};
 use sparsegpt::model::ModelCfg;
 use sparsegpt::obs::Obs;
+use sparsegpt::model::sparse_store::SparseStore;
 use sparsegpt::serve::{
-    EngineOptions, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel,
+    EngineOptions, ModelFleet, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel,
 };
 use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
 use sparsegpt::sparse::{PackFormat, PackPolicy, WorkerPool};
@@ -85,7 +90,13 @@ fn main() -> Result<()> {
             .map(|i| {
                 let prompt: Vec<i32> =
                     (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
-                (0, ServeRequest { id: i as u64, prompt, max_new_tokens: n_tok, seed: i as u64 })
+                (0, ServeRequest {
+                    id: i as u64,
+                    prompt,
+                    max_new_tokens: n_tok,
+                    seed: i as u64,
+                    model: None,
+                })
             })
             .collect()
     };
@@ -198,6 +209,74 @@ fn main() -> Result<()> {
                 ("speedup_vs_uncached", Json::Num(vs_uncached)),
             ]));
         }
+    }
+
+    // fleet row: one process serving a 3-model fleet (dense default plus
+    // csr-50% and q4-50% as named mmap-backed variants) with per-request
+    // model= routing — the multi-tenant overhead against the single-model
+    // cached rows above
+    {
+        let fleet_dir =
+            std::env::temp_dir().join(format!("sgpt_bench_fleet_{}", std::process::id()));
+        std::fs::create_dir_all(&fleet_dir)?;
+        let mut named = Vec::new();
+        for (name, idx) in [("csr-50%", 1usize), ("q4-50%", 5)] {
+            let (_, params, fmt) = &variants[idx];
+            let store = SparseStore::pack(params, &PackPolicy::with_format(*fmt), name)?;
+            let path = fleet_dir.join(format!("{}.spkt", name.replace(['%', ':'], "")));
+            store.save(&path)?;
+            named.push((name.to_string(), path));
+        }
+        let default_model =
+            SparseModel::from_params(&variants[0].1, &PackPolicy::with_format(PackFormat::Dense))?;
+        let routes = [None, Some("csr-50%".to_string()), Some("q4-50%".to_string())];
+        let fleet_workload: Vec<(usize, ServeRequest)> = workload(batch, tokens)
+            .into_iter()
+            .enumerate()
+            .map(|(i, (step, mut req))| {
+                req.model = routes[i % routes.len()].clone();
+                (step, req)
+            })
+            .collect();
+        let fleet = ModelFleet::new(&cfg, &named, 0)?;
+        let out = ServeEngine::new(&default_model, opts_for(true))
+            .with_fleet(fleet)
+            .with_obs(obs.clone())
+            .run(fleet_workload, &mut |_| {})?;
+        let total_secs = out.decode_secs + out.prefill_secs;
+        let tps = if total_secs > 0.0 { out.tokens as f64 / total_secs } else { 0.0 };
+        let vs_dense = if dense_tps[1] > 0.0 { tps / dense_tps[1] } else { 1.0 };
+        println!(
+            "  {:<8} {:<8} 3 models  {} tok in {total_secs:.3}s -> {tps:.1} tok/s \
+             ({vs_dense:.2}x dense-cached)",
+            "fleet-3", "cached", out.tokens
+        );
+        table.row(vec![
+            "fleet-3".to_string(),
+            "cached".to_string(),
+            format!("{:.3}", default_model.density()),
+            format!("{:.2}", default_model.effective_bits()),
+            out.tokens.to_string(),
+            format!("{total_secs:.3}"),
+            format!("{tps:.1}"),
+            format!("{vs_dense:.2}x"),
+            "-".to_string(),
+        ]);
+        rows.push(obj(vec![
+            ("variant", Json::Str("fleet-3".into())),
+            ("kv", Json::Str("cached".into())),
+            ("models", Json::Num(3.0)),
+            ("density", Json::Num(default_model.density())),
+            ("effective_bits", Json::Num(default_model.effective_bits())),
+            ("bytes_per_weight", Json::Num(default_model.effective_bits() / 8.0)),
+            ("tokens", Json::Num(out.tokens as f64)),
+            ("decode_secs", Json::Num(out.decode_secs)),
+            ("prefill_secs", Json::Num(out.prefill_secs)),
+            ("tokens_per_sec", Json::Num(tps)),
+            ("speedup_vs_dense", Json::Num(vs_dense)),
+            ("speedup_vs_uncached", Json::Num(1.0)),
+        ]));
+        std::fs::remove_dir_all(&fleet_dir).ok();
     }
 
     let report_dir = std::env::var_os("SPARSEGPT_REPORTS")

@@ -117,6 +117,21 @@ pub enum Event {
         queue: usize,
         cap: usize,
     },
+    /// a fleet model variant became resident (lazy mmap-backed load at
+    /// admission); `mapped` of its `bytes` are served from mapped pages
+    ModelLoaded {
+        name: String,
+        step: usize,
+        bytes: u64,
+        mapped: u64,
+    },
+    /// a fleet model variant was dropped — by the LRU weight-residency
+    /// budget or by the drain
+    ModelEvicted {
+        name: String,
+        step: usize,
+        bytes: u64,
+    },
     /// the serve TCP front door is accepting connections on `addr`
     ServeListening { addr: String },
     /// the serve engine drained its workload
@@ -190,6 +205,8 @@ impl Event {
             Event::RequestFinished { .. } => "request-finished",
             Event::RequestCancelled { .. } => "request-cancelled",
             Event::RequestRejected { .. } => "request-rejected",
+            Event::ModelLoaded { .. } => "model-loaded",
+            Event::ModelEvicted { .. } => "model-evicted",
             Event::ServeListening { .. } => "serve-listening",
             Event::EngineDrained { .. } => "engine-drained",
             Event::MetricsSnapshot { .. } => "metrics-snapshot",
@@ -306,6 +323,19 @@ impl Event {
                 ("step", n(*step as f64)),
                 ("queue", n(*queue as f64)),
                 ("cap", n(*cap as f64)),
+            ]),
+            Event::ModelLoaded { name, step, bytes, mapped } => obj(vec![
+                reason,
+                ("name", s(name)),
+                ("step", n(*step as f64)),
+                ("bytes", n(*bytes as f64)),
+                ("mapped", n(*mapped as f64)),
+            ]),
+            Event::ModelEvicted { name, step, bytes } => obj(vec![
+                reason,
+                ("name", s(name)),
+                ("step", n(*step as f64)),
+                ("bytes", n(*bytes as f64)),
             ]),
             Event::ServeListening { addr } => obj(vec![reason, ("addr", s(addr))]),
             Event::EngineDrained {
@@ -449,6 +479,15 @@ impl EventSink for HumanSink {
                 "[{}] step {step}: request {id} rejected (queue full, {queue} of {cap})",
                 self.tag("serve")
             ),
+            Event::ModelLoaded { name, step, bytes, mapped } => println!(
+                "[{}] step {step}: model {name:?} loaded ({bytes} weight bytes, \
+                 {mapped} mapped)",
+                self.tag("serve")
+            ),
+            Event::ModelEvicted { name, step, bytes } => println!(
+                "[{}] step {step}: model {name:?} evicted ({bytes} weight bytes freed)",
+                self.tag("serve")
+            ),
             Event::ServeListening { addr } => {
                 println!("[{}] listening on {addr}", self.tag("serve"))
             }
@@ -565,6 +604,8 @@ mod tests {
             Event::RequestFinished { id: 0, step: 17, tokens: 16 },
             Event::RequestCancelled { id: 1, step: 9, tokens: 4 },
             Event::RequestRejected { id: 2, step: 9, queue: 64, cap: 64 },
+            Event::ModelLoaded { name: "q4".into(), step: 3, bytes: 4096, mapped: 4096 },
+            Event::ModelEvicted { name: "q4".into(), step: 18, bytes: 4096 },
             Event::ServeListening { addr: "127.0.0.1:7070".into() },
             Event::EngineDrained {
                 steps: 20,

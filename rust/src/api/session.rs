@@ -36,8 +36,8 @@ use crate::obs::{Clock, Obs, Phase};
 use crate::runtime::BackendKind;
 use crate::serve::net::{NetServer, NetServerOptions};
 use crate::serve::{
-    percentile_sorted, EngineOptions, SchedulerPolicy, ServeEngine, ServeEvent, ServeRequest,
-    SparseModel, SyntheticSource,
+    percentile_sorted, EngineOptions, ModelFleet, SchedulerPolicy, ServeEngine, ServeEvent,
+    ServeRequest, SparseModel, SyntheticSource,
 };
 use crate::sparse::PackPolicy;
 use crate::util::prng::Rng;
@@ -689,6 +689,17 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
     // every engine event also refreshes the dropped-event counter from the
     // sink, so a dying JSONL pipe shows up in the very stream that survives
     let metrics = obs.metrics();
+    // named fleet variants: validated up front (duplicate/empty names),
+    // loaded lazily at first routed request
+    let fleet = if spec.models.is_empty() {
+        None
+    } else {
+        Some(ModelFleet::new(
+            &cfg,
+            &spec.models,
+            spec.model_cache_mb as u64 * 1024 * 1024,
+        )?)
+    };
     let mut listen_addr = None;
     let outcome = match &spec.listen {
         Some(addr) => {
@@ -704,7 +715,7 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
                     .with_context(|| format!("writing listen address to {path:?}"))?;
             }
             listen_addr = Some(bound);
-            srv.serve(&model, opts, &mut |ev| {
+            srv.serve_with_fleet(&model, opts, fleet, &mut |ev| {
                 sink.emit(&serve_event_to_event(ev));
                 metrics.events_dropped_total.set_at_least(sink.dropped_count());
             })?
@@ -713,6 +724,12 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
             // synthetic workload: seeded prompts, staggered arrivals, plus
             // the spec's scripted cancels ((id, step) -> source's (step, id))
             let mut rng = Rng::new(spec.seed ^ 0x5e21e5);
+            // with a fleet, synthetic requests round-robin across the
+            // default model and every named variant — no fleet means every
+            // request keeps `model: None` and the stream is unchanged
+            let routes: Vec<Option<String>> = std::iter::once(None)
+                .chain(spec.models.iter().map(|(name, _)| Some(name.clone())))
+                .collect();
             let mut incoming = Vec::with_capacity(spec.requests);
             for i in 0..spec.requests {
                 let prompt: Vec<i32> =
@@ -724,12 +741,17 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
                         prompt,
                         max_new_tokens: spec.max_new_tokens.max(1),
                         seed: spec.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        model: routes[i % routes.len()].clone(),
                     },
                 ));
             }
             let cancels = spec.cancel.iter().map(|&(id, step)| (step, id)).collect();
             let mut source = SyntheticSource::new(incoming, cancels);
-            ServeEngine::new(&model, opts).with_obs(obs.clone()).run_source(
+            let mut engine = ServeEngine::new(&model, opts).with_obs(obs.clone());
+            if let Some(f) = fleet {
+                engine = engine.with_fleet(f);
+            }
+            engine.run_source(
                 &mut source,
                 &mut |ev| {
                     sink.emit(&serve_event_to_event(ev));
@@ -819,6 +841,15 @@ fn serve_event_to_event(ev: &ServeEvent) -> Event {
         }
         ServeEvent::Rejected { id, step, queue, cap } => {
             Event::RequestRejected { id: *id, step: *step, queue: *queue, cap: *cap }
+        }
+        ServeEvent::ModelLoaded { name, step, bytes, mapped } => Event::ModelLoaded {
+            name: name.clone(),
+            step: *step,
+            bytes: *bytes,
+            mapped: *mapped,
+        },
+        ServeEvent::ModelEvicted { name, step, bytes } => {
+            Event::ModelEvicted { name: name.clone(), step: *step, bytes: *bytes }
         }
         ServeEvent::Drained { steps, requests, tokens, decode_secs, cancelled, cache_bytes_in_use } => {
             Event::EngineDrained {

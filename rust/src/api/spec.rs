@@ -418,13 +418,16 @@ pub use crate::serve::engine::DEFAULT_PREFILL_CHUNK;
 /// list after the prune spec (only non-default values appear):
 /// `serve/<config>/<prune-spec>[,kv=off][,chunk=<n>][,cache-mb=<n>]`
 /// `[,prefill=<n>][,workers=<n>][,fmt=<pack-format>][,g=<cols>][,net=<addr>]`
-/// `[,cancel=<id>@<step>[+...]][,snap=<n>][,clock=mock]` — `fmt` carries
+/// `[,cancel=<id>@<step>[+...]][,snap=<n>][,clock=mock]`
+/// `[,models=<name>@<path>[+...]][,model-cache-mb=<n>]` — `fmt` carries
 /// the base pack-format label (e.g. `qcsr:4`) and `g` the quantization
 /// group, kept separate so the comma-separated knob list stays flat; `net`
 /// switches from the synthetic workload to the TCP front door, `cancel`
 /// scripts synthetic-workload cancellations, `snap` emits periodic
-/// `metrics-snapshot` events, and `clock=mock` makes telemetry timing
-/// deterministic.
+/// `metrics-snapshot` events, `clock=mock` makes telemetry timing
+/// deterministic, `models` registers named `.spkt` fleet variants for
+/// per-request routing, and `model-cache-mb` bounds their resident weight
+/// bytes (LRU eviction; 0 = unlimited).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeSpec {
     pub config: String,
@@ -492,6 +495,14 @@ pub struct ServeSpec {
     /// write a Prometheus text dump of the final snapshot here after the
     /// drain (CLI `--metrics-file`; not part of the label)
     pub metrics_file: Option<PathBuf>,
+    /// named packed-checkpoint fleet variants served from the same process
+    /// (`models=<name>@<path>[+...]` knob); requests route with `model=`,
+    /// omitted = the default checkpoint
+    pub models: Vec<(String, PathBuf)>,
+    /// weight-residency budget for fleet variants in MiB
+    /// (`model-cache-mb=<n>` knob; 0 = unlimited) — LRU eviction, the
+    /// default checkpoint never counts against it
+    pub model_cache_mb: usize,
 }
 
 impl ServeSpec {
@@ -527,6 +538,8 @@ impl ServeSpec {
             snap_every: 0,
             mock_clock: false,
             metrics_file: None,
+            models: Vec::new(),
+            model_cache_mb: 0,
         }
     }
 
@@ -597,6 +610,17 @@ impl ServeSpec {
         if self.mock_clock {
             parts.push("clock=mock".to_string());
         }
+        if !self.models.is_empty() {
+            let ms: Vec<String> = self
+                .models
+                .iter()
+                .map(|(name, path)| format!("{name}@{}", path.display()))
+                .collect();
+            parts.push(format!("models={}", ms.join("+")));
+        }
+        if self.model_cache_mb != 0 {
+            parts.push(format!("model-cache-mb={}", self.model_cache_mb));
+        }
         parts.join(",")
     }
 
@@ -611,8 +635,9 @@ impl ServeSpec {
                 anyhow!(
                     "unrecognized serve knob {part:?} (expected kv=on|off, chunk=<n>, \
                      cache-mb=<n>, prefill=<n>, workers=<n>, fmt=<pack-format>, \
-                     g=<cols>, net=<addr>, cancel=<id>@<step>[+...], snap=<n> or \
-                     clock=mock|real)"
+                     g=<cols>, net=<addr>, cancel=<id>@<step>[+...], snap=<n>, \
+                     clock=mock|real, models=<name>@<path>[+...] or \
+                     model-cache-mb=<n>)"
                 )
             };
             let (key, value) = part.split_once('=').ok_or_else(err)?;
@@ -658,6 +683,18 @@ impl ServeSpec {
                         _ => return Err(err()),
                     }
                 }
+                "models" => {
+                    let mut ms = Vec::new();
+                    for m in value.split('+') {
+                        let (name, path) = m.split_once('@').ok_or_else(err)?;
+                        if name.is_empty() || path.is_empty() {
+                            return Err(err());
+                        }
+                        ms.push((name.to_string(), PathBuf::from(path)));
+                    }
+                    self.models = ms;
+                }
+                "model-cache-mb" => self.model_cache_mb = value.parse().map_err(|_| err())?,
                 _ => return Err(err()),
             }
         }
@@ -945,6 +982,32 @@ mod tests {
             "serve/nano/sparsegpt-50%,snap=x",
             "serve/nano/sparsegpt-50%,clock=maybe",
             "serve/nano/sparsegpt-50%,clock=",
+        ] {
+            assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn serve_fleet_knobs_round_trip_through_labels() {
+        let mut spec = ServeSpec::new("nano");
+        spec.models = vec![
+            ("dense".to_string(), PathBuf::from("out/dense.spkt")),
+            ("q4".to_string(), PathBuf::from("out/q4.spkt")),
+        ];
+        spec.model_cache_mb = 2;
+        let j = JobSpec::Serve(spec);
+        assert_eq!(
+            j.label(),
+            "serve/nano/sparsegpt-50%,models=dense@out/dense.spkt+q4@out/q4.spkt,model-cache-mb=2"
+        );
+        assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
+        // an empty fleet and an unlimited budget stay out of the label
+        assert_eq!(JobSpec::Serve(ServeSpec::new("nano")).label(), "serve/nano/sparsegpt-50%");
+        for bad in [
+            "serve/nano/sparsegpt-50%,models=dense",      // no @path
+            "serve/nano/sparsegpt-50%,models=@x.spkt",    // empty name
+            "serve/nano/sparsegpt-50%,models=a@",         // empty path
+            "serve/nano/sparsegpt-50%,model-cache-mb=x",
         ] {
             assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
         }

@@ -58,6 +58,8 @@ commands:
             [--temperature 0.8] [--top-k 40] [--seed 0]
             [--damp 0.01] [--calib 32] [--calib-seed 0] [--ckpt <path>]
             [--store <path.spkt>] [--save-store <path.spkt>]
+            [--models <name>=<path.spkt>[,<name>=<path.spkt>...]]
+            [--model-cache-mb <n>]
             [--listen <host:port>] [--addr-file <path>]
             [--cancel <id>@<step>[+<id>@<step>...]]
             [--snap-every <n>] [--metrics-file <path>]
@@ -74,13 +76,22 @@ commands:
             (--snap-every n emits a metrics-snapshot event every n engine
             steps plus once at drain; --metrics-file writes the final
             snapshot as Prometheus text after the drain)
+            (--models registers named .spkt fleet variants of the same
+            config, served from one process: network requests route with
+            model=<name>, the synthetic workload round-robins across the
+            default model and every variant; --model-cache-mb bounds
+            their resident weight bytes with LRU eviction, 0 = unlimited)
   client    --addr <host:port> | --addr-file <path>
             [--prompt 1,2,3] [--requests 1] [--tokens 16] [--seed 0]
-            [--tag cli] [--disconnect-after <n>] [--timeout-secs 60]
+            [--model <name>[,<name>...]] [--tag cli]
+            [--disconnect-after <n>] [--timeout-secs 60]
             [--shutdown] [--shutdown-only] [--stats] [--stats-only]
             (loopback client for a `serve --listen` server: submits
             requests and prints the streamed tokens; with --json every
-            raw server frame passes through to stdout. --shutdown drains
+            raw server frame passes through to stdout. --model routes
+            requests to named fleet variants, round-robin when a comma
+            list is given — a bare `,`-leading entry means the default
+            model. --shutdown drains
             the server once resolved; --shutdown-only only sends the
             drain frame; --disconnect-after drops the socket cold after
             n token frames, exercising disconnect-as-cancellation;
@@ -294,6 +305,10 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
             s.ckpt = args.get("ckpt").map(PathBuf::from);
             s.store = args.get("store").map(PathBuf::from);
             s.save_store = args.get("save-store").map(PathBuf::from);
+            if let Some(list) = args.get("models") {
+                s.models = parse_models(list)?;
+            }
+            s.model_cache_mb = args.usize_or("model-cache-mb", s.model_cache_mb)?;
             s.listen = args.get("listen").map(String::from);
             s.addr_file = args.get("addr-file").map(PathBuf::from);
             if let Some(list) = args.get("cancel") {
@@ -305,6 +320,21 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
     })
+}
+
+/// Parse `--models <name>=<path.spkt>[,<name>=<path.spkt>...]`.
+fn parse_models(list: &str) -> Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    for part in list.split(',') {
+        let (name, path) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--models takes <name>=<path>[,...] (got {part:?})"))?;
+        if name.is_empty() || path.is_empty() {
+            bail!("--models entry {part:?} needs a non-empty name and path");
+        }
+        out.push((name.to_string(), PathBuf::from(path)));
+    }
+    Ok(out)
 }
 
 /// Parse `--cancel <id>@<step>[+<id>@<step>...]`.
@@ -367,12 +397,25 @@ fn run_net_client(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 0)?;
     let tokens = args.usize_or("tokens", 16)?.max(1);
     let tag = args.get_or("tag", "cli");
+    // --model a,b round-robins requests across fleet variants; an empty
+    // segment routes to the server's default model
+    let routes: Vec<Option<String>> = match args.get("model") {
+        Some(list) => list
+            .split(',')
+            .map(|m| {
+                let m = m.trim();
+                if m.is_empty() { None } else { Some(m.to_string()) }
+            })
+            .collect(),
+        None => vec![None],
+    };
     let requests: Vec<ClientRequest> = (0..n)
         .map(|i| ClientRequest {
             tag: Some(format!("{tag}-{i}")),
             prompt: prompt.clone(),
             max_new_tokens: tokens,
             seed: seed.wrapping_add(i as u64),
+            model: routes[i % routes.len()].clone(),
         })
         .collect();
     let disconnect_after = args

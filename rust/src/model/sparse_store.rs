@@ -36,12 +36,14 @@
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::model::config::ModelCfg;
 use crate::model::layout::{FlatParams, LinearKind, PRUNABLE_KINDS};
 use crate::sparse::{PackPolicy, PackedMatrix};
+use crate::util::mmap::{ByteSource, MmapRegion};
 
 const MAGIC: &[u8; 8] = b"SGPTSPKT";
 const VERSION: u32 = 2;
@@ -235,6 +237,17 @@ impl SparseStore {
         }
     }
 
+    /// Weight-section bytes currently served from mapped pages (0 for
+    /// packed-in-memory or owned-loaded stores).
+    pub fn mapped_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.matrix.mapped_bytes()).sum()
+    }
+
+    /// Total packed weight-stream bytes, however backed.
+    pub fn payload_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.matrix.payload_bytes()).sum()
+    }
+
     /// Serialize to `path`; returns the byte size written.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<u64> {
         let path = path.as_ref();
@@ -278,13 +291,17 @@ impl SparseStore {
             put(&mut f, &mut written, MAGIC)?;
             put(&mut f, &mut written, &VERSION.to_le_bytes())?;
             put(&mut f, &mut written, &0u32.to_le_bytes())?;
-            put(&mut f, &mut written, &(name.len() as u32).to_le_bytes())?;
+            put(&mut f, &mut written, &u32_len(name.len(), "config name")?.to_le_bytes())?;
             put(&mut f, &mut written, name)?;
-            put(&mut f, &mut written, &(src.len() as u32).to_le_bytes())?;
+            put(&mut f, &mut written, &u32_len(src.len(), "source label")?.to_le_bytes())?;
             put(&mut f, &mut written, src)?;
             put(&mut f, &mut written, &(self.n_params as u64).to_le_bytes())?;
-            put(&mut f, &mut written, &(self.layers as u32).to_le_bytes())?;
-            put(&mut f, &mut written, &(self.entries.len() as u32).to_le_bytes())?;
+            put(&mut f, &mut written, &u32_len(self.layers, "layer count")?.to_le_bytes())?;
+            put(
+                &mut f,
+                &mut written,
+                &u32_len(self.entries.len(), "entry count")?.to_le_bytes(),
+            )?;
             put(&mut f, &mut written, &(rest_off as u64).to_le_bytes())?;
             put(&mut f, &mut written, &(self.rest.len() as u64).to_le_bytes())?;
             debug_assert_eq!(written, header_len);
@@ -321,13 +338,39 @@ impl SparseStore {
         Ok(bytes)
     }
 
+    /// Zero-copy load: map the file ([`MmapRegion`]; owned aligned copy
+    /// where mapping is unavailable) and hand the kernels validated views
+    /// into the weight sections instead of copying them.
     pub fn load(path: impl AsRef<Path>) -> Result<SparseStore> {
+        let path = path.as_ref();
+        let region = Arc::new(
+            MmapRegion::load(path)
+                .with_context(|| format!("opening packed checkpoint {path:?}"))?,
+        );
+        Self::load_region(&region, path, true)
+    }
+
+    /// Copying load: every stream decoded into owned buffers. The
+    /// differential reference for the zero-copy path (`tests/mmap_parity`)
+    /// — and the escape hatch if a mapped file must not be held open.
+    pub fn load_owned(path: impl AsRef<Path>) -> Result<SparseStore> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path)
+            .with_context(|| format!("opening packed checkpoint {path:?}"))?;
+        let region = Arc::new(MmapRegion::from_bytes(&buf));
+        Self::load_region(&region, path, false)
+    }
+
+    fn load_region(region: &Arc<MmapRegion>, path: &Path, zero_copy: bool) -> Result<SparseStore> {
         fn take<'a>(buf: &'a [u8], i: &mut usize, n: usize) -> Result<&'a [u8]> {
-            if *i + n > buf.len() {
+            // checked: `n` comes from unvalidated header fields, so `i + n`
+            // must not wrap around usize
+            let end = i.checked_add(n).filter(|&e| e <= buf.len());
+            let Some(end) = end else {
                 bail!("packed checkpoint truncated at byte {i}");
-            }
-            let out = &buf[*i..*i + n];
-            *i += n;
+            };
+            let out = &buf[*i..end];
+            *i = end;
             Ok(out)
         }
         fn u32_at(buf: &[u8], i: &mut usize) -> Result<u32> {
@@ -336,10 +379,7 @@ impl SparseStore {
         fn u64_at(buf: &[u8], i: &mut usize) -> Result<u64> {
             Ok(u64::from_le_bytes(take(buf, i, 8)?.try_into().unwrap()))
         }
-        let path = path.as_ref();
-        let buf = std::fs::read(path)
-            .with_context(|| format!("opening packed checkpoint {path:?}"))?;
-        let buf = buf.as_slice();
+        let buf = region.bytes();
         let mut i = 0usize;
         if take(buf, &mut i, 8)? != MAGIC {
             bail!("{path:?} is not a packed sparse checkpoint (bad magic)");
@@ -369,11 +409,29 @@ impl SparseStore {
         }
         let toc_off = align8(i);
 
-        // remainder section
-        if rest_off < i || rest_off + rest_len * 4 > buf.len() {
+        // validate the whole TOC extent up front: `n_entries` is hostile
+        // input until now, and it sizes the allocation below
+        let toc_entry = if version >= VERSION { TOC_ENTRY_V2 } else { TOC_ENTRY_V1 };
+        let toc_end = n_entries
+            .checked_mul(toc_entry)
+            .and_then(|b| toc_off.checked_add(b))
+            .filter(|&e| e <= buf.len());
+        if toc_end.is_none() {
+            bail!("{path:?}: TOC for {n_entries} entries out of bounds");
+        }
+
+        // remainder section (checked: rest_off/rest_len are u64 fields)
+        let rest_end = rest_len
+            .checked_mul(4)
+            .and_then(|b| rest_off.checked_add(b))
+            .filter(|&e| e <= buf.len());
+        let Some(rest_end) = rest_end else {
+            bail!("{path:?}: remainder section out of bounds");
+        };
+        if rest_off < i {
             bail!("{path:?}: remainder section out of bounds");
         }
-        let rest: Vec<f32> = buf[rest_off..rest_off + rest_len * 4]
+        let rest: Vec<f32> = buf[rest_off..rest_end]
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
@@ -405,11 +463,15 @@ impl SparseStore {
             if layer >= layers {
                 bail!("TOC entry layer {layer} out of range");
             }
-            if off + len > buf.len() {
+            if off.checked_add(len).filter(|&e| e <= buf.len()).is_none() {
                 bail!("TOC entry section out of bounds");
             }
-            let (matrix, used) = PackedMatrix::read_bytes(&buf[off..off + len])
-                .with_context(|| format!("decoding layer {layer} {}", kind.label()))?;
+            let (matrix, used) = if zero_copy {
+                PackedMatrix::read_bytes_mapped(region, off, len)
+            } else {
+                PackedMatrix::read_bytes(&buf[off..off + len])
+            }
+            .with_context(|| format!("decoding layer {layer} {}", kind.label()))?;
             if used != len {
                 bail!("section for layer {layer} {} has trailing bytes", kind.label());
             }
@@ -434,6 +496,13 @@ impl SparseStore {
 
 fn align8(n: usize) -> usize {
     (n + 7) & !7
+}
+
+/// Checked narrowing for the `.spkt` header's u32 length fields: an
+/// oversized value must fail the save, not silently truncate and produce a
+/// file whose header lies about its own layout.
+fn u32_len(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n).map_err(|_| anyhow!("{what} length {n} exceeds the .spkt u32 field"))
 }
 
 #[cfg(test)]
@@ -561,6 +630,82 @@ mod tests {
         let path = dir.join("bad.spkt");
         std::fs::write(&path, b"definitely not a packed checkpoint").unwrap();
         assert!(SparseStore::load(&path).is_err());
+
+        // corrupt a real file: every hostile header field must produce a
+        // clean error, never a giant allocation or an out-of-bounds slice
+        let cfg = test_cfg();
+        let store =
+            SparseStore::pack(&pruned_params(&cfg, 0.8), &PackPolicy::default(), "g").unwrap();
+        store.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        assert!(SparseStore::load(&path).is_ok());
+
+        let check = |bytes: &[u8], why: &str| {
+            let p = dir.join("evil.spkt");
+            std::fs::write(&p, bytes).unwrap();
+            assert!(SparseStore::load(&p).is_err(), "{why}");
+            assert!(SparseStore::load_owned(&p).is_err(), "{why} (owned)");
+        };
+
+        // truncation at every structural boundary
+        for k in [0, 7, 12, 40, good.len() / 2, good.len() - 1] {
+            check(&good[..k], &format!("truncated to {k} bytes"));
+        }
+
+        // header field byte offsets (see the save layout)
+        let name = store.config_name.len();
+        let src = store.source_label.len();
+        let hdr = 8 + 4 + 4 + 4 + name + 4 + src + 8;
+        let patch = |off: usize, with: &[u8]| {
+            let mut b = good.clone();
+            b[off..off + with.len()].copy_from_slice(with);
+            b
+        };
+        // layers huge + entry count huge but "plausible" for those layers:
+        // the TOC extent check must fire before the entry allocation
+        let evil = patch(hdr, &0x2000_0000u32.to_le_bytes());
+        let evil2 = {
+            let mut b = evil;
+            b[hdr + 4..hdr + 8].copy_from_slice(&0x3000_0000u32.to_le_bytes());
+            b
+        };
+        check(&evil2, "oversized TOC");
+        // remainder length off the end of the file
+        check(&patch(hdr + 16, &u64::MAX.to_le_bytes()), "oversized remainder");
+        // remainder length that overflows rest_off + rest_len * 4
+        check(&patch(hdr + 16, &(u64::MAX / 4).to_le_bytes()), "overflowing remainder");
+        // first TOC entry's section offset far out of bounds
+        let toc_off = align8(hdr + 4 + 4 + 8 + 8);
+        check(&patch(toc_off + 8, &u64::MAX.to_le_bytes()), "section offset out of bounds");
+
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn u32_len_rejects_past_the_field_width() {
+        assert_eq!(u32_len(0, "x").unwrap(), 0);
+        assert_eq!(u32_len(u32::MAX as usize, "x").unwrap(), u32::MAX);
+        let err = u32_len(u32::MAX as usize + 1, "entry count").unwrap_err();
+        assert!(err.to_string().contains("entry count"), "{err}");
+    }
+
+    #[test]
+    fn mapped_load_matches_owned_load() {
+        let cfg = test_cfg();
+        let fp = pruned_params(&cfg, 0.8);
+        let store = SparseStore::pack(&fp, &PackPolicy::default(), "mm").unwrap();
+        let dir = std::env::temp_dir().join(format!("sgpt_spkt_mm_{}", std::process::id()));
+        let path = dir.join("m.spkt");
+        store.save(&path).unwrap();
+
+        let mapped = SparseStore::load(&path).unwrap();
+        let owned = SparseStore::load_owned(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+
+        assert_eq!(mapped.unpack(&cfg).unwrap().data, owned.unpack(&cfg).unwrap().data);
+        assert_eq!(mapped.payload_bytes(), owned.payload_bytes());
+        assert_eq!(owned.mapped_bytes(), 0);
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert!(mapped.mapped_bytes() > 0, "zero-copy load should serve mapped sections");
     }
 }

@@ -102,6 +102,12 @@ pub struct Metrics {
     pub cache_bytes_in_use: Gauge,
     pub cache_bytes_peak: Gauge,
     pub connections_open: Gauge,
+    /// fleet variants currently resident (0 when no fleet is attached —
+    /// the always-resident default model is not counted)
+    pub models_resident: Gauge,
+    /// weight bytes served straight from mapped `.spkt` pages, default
+    /// model + resident fleet variants
+    pub weight_bytes_mapped: Gauge,
     // histograms
     pub batch_size: Histogram,
     pub phase_prefill_ns: Histogram,
@@ -235,6 +241,8 @@ impl Obs {
                 ("cache_bytes_in_use", m.cache_bytes_in_use.get()),
                 ("cache_bytes_peak", m.cache_bytes_peak.get()),
                 ("connections_open", m.connections_open.get()),
+                ("models_resident", m.models_resident.get()),
+                ("weight_bytes_mapped", m.weight_bytes_mapped.get()),
             ],
             hists: {
                 let mut hs = vec![("batch_size", m.batch_size.snapshot())];
@@ -448,6 +456,7 @@ mod tests {
                 "\"connections_open\":0,",
                 "\"events_dropped_total\":0,",
                 "\"generation\":1,",
+                "\"models_resident\":0,",
                 "\"net_bytes_read_total\":0,",
                 "\"net_bytes_written_total\":0,",
                 "\"net_frames_read_total\":0,",
@@ -469,6 +478,7 @@ mod tests {
                 "\"tokens_decoded_total\":24,",
                 "\"tokens_prefilled_total\":0,",
                 "\"ttft_anchor_missing_total\":0,",
+                "\"weight_bytes_mapped\":0,",
                 "\"workers\":[]}"
             )
         );

@@ -39,12 +39,14 @@
 //! makes the network path's nondeterministic arrival timing compatible
 //! with the byte-exact net-parity test.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::eval::generate::pick_token;
 use crate::obs::{Obs, Phase};
+use crate::serve::fleet::{FleetEvent, ModelFleet};
 use crate::serve::kv::{CacheBudget, KvCache};
 use crate::serve::model::SparseModel;
 use crate::serve::scheduler::{Scheduler, SchedulerPolicy, ServeRequest, StepLimits};
@@ -107,6 +109,11 @@ pub enum ServeEvent {
     PrefillStarted { id: u64, step: usize, prompt_tokens: usize, chunks: usize },
     /// a request's ring buffer evicted `evicted` positions this step
     CacheEvicted { id: u64, step: usize, evicted: usize },
+    /// a fleet variant became resident (lazy mmap-backed load at
+    /// admission); `mapped` of its `bytes` are served from mapped pages
+    ModelLoaded { name: String, step: usize, bytes: u64, mapped: u64 },
+    /// the weight-residency budget (LRU) or the drain dropped a variant
+    ModelEvicted { name: String, step: usize, bytes: u64 },
     Finished { id: u64, step: usize, tokens: usize },
     /// the client went away (disconnect or explicit cancel frame): the
     /// request retired early with `tokens` already generated and its cache
@@ -293,6 +300,10 @@ struct Active {
     generated: Vec<i32>,
     rng: Rng,
     joined_step: usize,
+    /// resolved fleet variant this request decodes on (`None` = the
+    /// engine's default model); the `Arc` keeps the variant — and its
+    /// mapped pages — alive across a registry eviction
+    model: Option<Arc<SparseModel>>,
     /// per-request KV cache (KV-cached mode)
     cache: Option<KvCache>,
     /// next-token logits awaiting sampling (from prefill or the last
@@ -308,13 +319,19 @@ struct Active {
 }
 
 impl Active {
-    fn new(req: ServeRequest, joined_step: usize, enqueued_at: u64) -> Active {
+    fn new(
+        req: ServeRequest,
+        joined_step: usize,
+        enqueued_at: u64,
+        model: Option<Arc<SparseModel>>,
+    ) -> Active {
         let ctx = if req.prompt.is_empty() { vec![0] } else { req.prompt.clone() };
         Active {
             ctx,
             generated: Vec::with_capacity(req.max_new_tokens),
             rng: Rng::new(req.seed ^ 0x5e21e),
             joined_step,
+            model,
             cache: None,
             pending: None,
             enqueued_at,
@@ -351,6 +368,9 @@ pub struct ServeEngine<'a> {
     /// metrics registry + clock; a private real-clock default unless the
     /// caller shares one via [`ServeEngine::with_obs`]
     obs: Obs,
+    /// named model variants requests can route to ([`ServeRequest::model`]);
+    /// the mutex serializes lazy loads/evictions against the step loop
+    fleet: Option<Mutex<ModelFleet>>,
 }
 
 impl<'a> ServeEngine<'a> {
@@ -361,7 +381,16 @@ impl<'a> ServeEngine<'a> {
         };
         let obs = Obs::default();
         obs.attach_pool(pool.clone());
-        ServeEngine { model, opts, pool, obs }
+        ServeEngine { model, opts, pool, obs, fleet: None }
+    }
+
+    /// Attach a [`ModelFleet`] of named variants. Requests whose
+    /// [`ServeRequest::model`] names a fleet entry decode on that variant
+    /// (loaded lazily at admission); unnamed requests keep the default
+    /// model, byte-for-byte unaffected.
+    pub fn with_fleet(mut self, fleet: ModelFleet) -> ServeEngine<'a> {
+        self.fleet = Some(Mutex::new(fleet));
+        self
     }
 
     /// Share an externally owned [`Obs`] (registry + clock): the engine
@@ -431,6 +460,13 @@ impl<'a> ServeEngine<'a> {
         let mut prefill_tokens = 0usize;
         let mut cache_evictions = 0usize;
         let mut peak_cache_bytes = 0u64;
+        m.models_resident.set(
+            self.fleet
+                .as_ref()
+                .map(|f| f.lock().unwrap().resident_models() as u64)
+                .unwrap_or(0),
+        );
+        m.weight_bytes_mapped.set(self.model.mapped_bytes());
 
         loop {
             // disconnects and cancel frames observed since the last step
@@ -462,6 +498,23 @@ impl<'a> ServeEngine<'a> {
             // decode drains the queue; anything beyond capacity is shed
             // with an explicit rejection instead of blocking the loop
             for req in source.poll(step, sched.free_capacity()) {
+                // membership is validated at enqueue so a typo'd model
+                // name is shed immediately, not discovered at admission
+                if let Some(name) = req.model.as_deref() {
+                    let known = self
+                        .fleet
+                        .as_ref()
+                        .map(|f| f.lock().unwrap().contains(name))
+                        .unwrap_or(false);
+                    if !known {
+                        rejected += 1;
+                        m.requests_rejected_total.inc();
+                        let (queue, cap) = (sched.queue_len(), sched.policy().queue_cap);
+                        on_event(&ServeEvent::Rejected { id: req.id, step, queue, cap });
+                        source.rejected(&req, queue, cap);
+                        continue;
+                    }
+                }
                 if !sched.has_capacity() {
                     rejected += 1;
                     m.requests_rejected_total.inc();
@@ -515,9 +568,37 @@ impl<'a> ServeEngine<'a> {
                         m.ttft_anchor_missing_total.inc();
                         clock.now_ns()
                     });
-                    let mut a = Active::new(req, step, t_enq);
+                    // route to the fleet variant (lazy load + LRU now,
+                    // while the request's admission is being paid anyway)
+                    let handle = match req.model.as_deref() {
+                        None => None,
+                        Some(name) => {
+                            let fleet =
+                                self.fleet.as_ref().expect("membership validated at enqueue");
+                            let mut fleet = fleet.lock().unwrap();
+                            let mut fev = Vec::new();
+                            let resolved = fleet.resolve(name, &mut fev)?;
+                            m.models_resident.set(fleet.resident_models() as u64);
+                            m.weight_bytes_mapped
+                                .set(self.model.mapped_bytes() + fleet.mapped_bytes());
+                            drop(fleet);
+                            for ev in fev {
+                                match ev {
+                                    FleetEvent::Loaded { name, bytes, mapped } => on_event(
+                                        &ServeEvent::ModelLoaded { name, step, bytes, mapped },
+                                    ),
+                                    FleetEvent::Evicted { name, bytes } => on_event(
+                                        &ServeEvent::ModelEvicted { name, step, bytes },
+                                    ),
+                                }
+                            }
+                            Some(resolved)
+                        }
+                    };
+                    let mut a = Active::new(req, step, t_enq, handle);
+                    let model = a.model.as_deref().unwrap_or(self.model);
                     if self.opts.kv_cache {
-                        let mut cache = self.model.new_cache();
+                        let mut cache = model.new_cache();
                         budget.reserve(unit);
                         peak_cache_bytes = peak_cache_bytes.max(budget.in_use());
                         m.cache_bytes_in_use.set(budget.in_use());
@@ -535,7 +616,7 @@ impl<'a> ServeEngine<'a> {
                         });
                         let t0 = clock.now_ns();
                         let (logits, evicted) =
-                            self.model.prefill(&a.ctx, &mut cache, self.opts.prefill_chunk)?;
+                            model.prefill(&a.ctx, &mut cache, self.opts.prefill_chunk)?;
                         let dt = clock.now_ns().saturating_sub(t0);
                         obs.record_phase(Phase::Prefill, dt);
                         prefill_secs += dt as f64 * 1e-9;
@@ -569,29 +650,38 @@ impl<'a> ServeEngine<'a> {
             // one next-token step for every in-flight request
             if self.opts.kv_cache {
                 // fresh joiners already hold their prefill logits; everyone
-                // else advances by one incremental token
-                let mut decode_idx = Vec::new();
-                let mut toks = Vec::new();
+                // else advances by one incremental token. Decode runs in
+                // per-model groups, deterministically ordered (default
+                // model first — `None < Some` — then variants by name), so
+                // a single-model run is one group and byte-identical to
+                // the ungrouped loop.
+                let mut groups: BTreeMap<Option<String>, Vec<usize>> = BTreeMap::new();
                 for (i, a) in active.iter().enumerate() {
                     if a.pending.is_none() {
-                        decode_idx.push(i);
-                        toks.push(*a.ctx.last().expect("context never empty"));
+                        groups.entry(a.req.model.clone()).or_default().push(i);
                     }
                 }
-                if !decode_idx.is_empty() {
+                for (_, idxs) in groups {
+                    let toks: Vec<i32> = idxs
+                        .iter()
+                        .map(|&i| *active[i].ctx.last().expect("context never empty"))
+                        .collect();
+                    let handle = active[idxs[0]].model.clone();
+                    let model = handle.as_deref().unwrap_or(self.model);
                     let t0 = clock.now_ns();
                     let (logits, evictions) = {
                         let mut caches: Vec<&mut KvCache> = active
                             .iter_mut()
-                            .filter(|a| a.pending.is_none())
-                            .map(|a| a.cache.as_mut().expect("cached mode"))
+                            .enumerate()
+                            .filter(|(i, _)| idxs.binary_search(i).is_ok())
+                            .map(|(_, a)| a.cache.as_mut().expect("cached mode"))
                             .collect();
-                        self.model.decode_cached(&toks, &mut caches)?
+                        model.decode_cached(&toks, &mut caches)?
                     };
                     let dt = clock.now_ns().saturating_sub(t0);
                     obs.record_phase(Phase::Decode, dt);
                     decode_secs += dt as f64 * 1e-9;
-                    for (row, &i) in decode_idx.iter().enumerate() {
+                    for (row, &i) in idxs.iter().enumerate() {
                         active[i].pending =
                             Some(logits.data()[row * vocab..(row + 1) * vocab].to_vec());
                         if evictions[row] > 0 {
@@ -606,14 +696,24 @@ impl<'a> ServeEngine<'a> {
                     }
                 }
             } else {
-                let seqs: Vec<&[i32]> = active.iter().map(|a| a.ctx.as_slice()).collect();
-                let t0 = clock.now_ns();
-                let logits = self.model.forward_logits(&seqs)?;
-                let dt = clock.now_ns().saturating_sub(t0);
-                obs.record_phase(Phase::Decode, dt);
-                decode_secs += dt as f64 * 1e-9;
-                for (i, a) in active.iter_mut().enumerate() {
-                    a.pending = Some(logits.data()[i * vocab..(i + 1) * vocab].to_vec());
+                let mut groups: BTreeMap<Option<String>, Vec<usize>> = BTreeMap::new();
+                for (i, a) in active.iter().enumerate() {
+                    groups.entry(a.req.model.clone()).or_default().push(i);
+                }
+                for (_, idxs) in groups {
+                    let handle = active[idxs[0]].model.clone();
+                    let model = handle.as_deref().unwrap_or(self.model);
+                    let seqs: Vec<&[i32]> =
+                        idxs.iter().map(|&i| active[i].ctx.as_slice()).collect();
+                    let t0 = clock.now_ns();
+                    let logits = model.forward_logits(&seqs)?;
+                    let dt = clock.now_ns().saturating_sub(t0);
+                    obs.record_phase(Phase::Decode, dt);
+                    decode_secs += dt as f64 * 1e-9;
+                    for (row, &i) in idxs.iter().enumerate() {
+                        active[i].pending =
+                            Some(logits.data()[row * vocab..(row + 1) * vocab].to_vec());
+                    }
                 }
             }
             // sample + stream: each token goes to the source as it is
@@ -682,6 +782,22 @@ impl<'a> ServeEngine<'a> {
             }
         }
         debug_assert_eq!(budget.in_use(), 0, "retire must return every cache to the budget");
+        // drain the fleet: residency returns to zero with an eviction
+        // event per resident variant, mirroring the cache-budget contract
+        if let Some(fleet) = &self.fleet {
+            let mut fleet = fleet.lock().unwrap();
+            let mut fev = Vec::new();
+            fleet.evict_all(&mut fev);
+            debug_assert_eq!(fleet.resident_bytes(), 0, "drain must empty the fleet budget");
+            drop(fleet);
+            m.models_resident.set(0);
+            m.weight_bytes_mapped.set(self.model.mapped_bytes());
+            for ev in fev {
+                if let FleetEvent::Evicted { name, bytes } = ev {
+                    on_event(&ServeEvent::ModelEvicted { name, step, bytes });
+                }
+            }
+        }
         let outcome = EngineOutcome {
             finished,
             steps: step,
@@ -734,7 +850,14 @@ mod tests {
         (0..n)
             .map(|i| {
                 let prompt: Vec<i32> = (0..3).map(|_| rng.below(vocab) as i32).collect();
-                (i, ServeRequest { id: i as u64, prompt, max_new_tokens: tokens, seed: i as u64 })
+                let req = ServeRequest {
+                    id: i as u64,
+                    prompt,
+                    max_new_tokens: tokens,
+                    seed: i as u64,
+                    model: None,
+                };
+                (i, req)
             })
             .collect()
     }
@@ -882,9 +1005,15 @@ mod tests {
             ..EngineOptions::default()
         };
         let reqs = vec![
-            (0, ServeRequest { id: 5, prompt: vec![1, 2], max_new_tokens: 6, seed: 5 }),
-            (0, ServeRequest { id: 2, prompt: vec![3], max_new_tokens: 6, seed: 2 }),
-            (2, ServeRequest { id: 1, prompt: vec![4, 5], max_new_tokens: 4, seed: 1 }),
+            (
+                0,
+                ServeRequest { id: 5, prompt: vec![1, 2], max_new_tokens: 6, seed: 5, model: None },
+            ),
+            (0, ServeRequest { id: 2, prompt: vec![3], max_new_tokens: 6, seed: 2, model: None }),
+            (
+                2,
+                ServeRequest { id: 1, prompt: vec![4, 5], max_new_tokens: 4, seed: 1, model: None },
+            ),
         ];
         let mut finish_order = Vec::new();
         let out = ServeEngine::new(&m, opts)
@@ -1168,6 +1297,83 @@ mod tests {
             }
             other => panic!("snapshot event carries an object, got {other:?}"),
         }
+    }
+
+    fn save_fleet_variants(dir: &std::path::Path) -> Vec<(String, std::path::PathBuf)> {
+        use crate::model::sparse_store::SparseStore;
+        use crate::sparse::PackFormat;
+        let cfg = ModelCfg::from_dims("engine-test", 8, 1, 2, 1, 1, 11, 4);
+        std::fs::create_dir_all(dir).unwrap();
+        let mut out = Vec::new();
+        for (name, fmt) in [("va", PackFormat::Dense), ("vb", PackFormat::Csr)] {
+            let fp = init_params(&cfg, 0);
+            let store = SparseStore::pack(&fp, &PackPolicy::with_format(fmt), name).unwrap();
+            let path = dir.join(format!("{name}.spkt"));
+            store.save(&path).unwrap();
+            out.push((name.to_string(), path));
+        }
+        out
+    }
+
+    #[test]
+    fn fleet_routes_per_request_and_drains_residency() {
+        use crate::serve::fleet::ModelFleet;
+        let dir = std::env::temp_dir()
+            .join(format!("sgpt_engine_fleet_{}", std::process::id()));
+        let variants = save_fleet_variants(&dir);
+        let m = model();
+        let fleet = ModelFleet::new(&m.cfg, &variants, 0).unwrap();
+        let opts = EngineOptions {
+            policy: policy(4, 0, 16),
+            temperature: 0.0,
+            top_k: 0,
+            ..EngineOptions::default()
+        };
+        let mut reqs = requests(3, 2, 11);
+        reqs[1].1.model = Some("va".to_string());
+        reqs[2].1.model = Some("vb".to_string());
+        let (mut loaded, mut evicted) = (Vec::new(), Vec::new());
+        let out = ServeEngine::new(&m, opts)
+            .with_fleet(fleet)
+            .run(reqs, &mut |e| match e {
+                ServeEvent::ModelLoaded { name, .. } => loaded.push(name.clone()),
+                ServeEvent::ModelEvicted { name, .. } => evicted.push(name.clone()),
+                _ => {}
+            })
+            .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(out.finished.len(), 3, "routed and default requests all drain");
+        loaded.sort();
+        assert_eq!(loaded, vec!["va", "vb"], "each variant loads lazily, once");
+        evicted.sort();
+        assert_eq!(evicted, vec!["va", "vb"], "drain evicts every resident variant");
+    }
+
+    #[test]
+    fn unknown_model_name_is_rejected_at_enqueue() {
+        let m = model();
+        let opts = EngineOptions {
+            policy: policy(2, 0, 16),
+            temperature: 0.0,
+            top_k: 0,
+            ..EngineOptions::default()
+        };
+        // no fleet attached: any named model is unknown and must shed
+        // immediately instead of failing the run at admission
+        let mut reqs = requests(2, 2, 11);
+        reqs[1].1.model = Some("ghost".to_string());
+        let mut shed = Vec::new();
+        let out = ServeEngine::new(&m, opts)
+            .run(reqs, &mut |e| {
+                if let ServeEvent::Rejected { id, .. } = e {
+                    shed.push(*id);
+                }
+            })
+            .unwrap();
+        assert_eq!(out.rejected, 1);
+        assert_eq!(shed, vec![1]);
+        assert_eq!(out.finished.len(), 1);
+        assert_eq!(out.finished[0].id, 0, "the default-model request still drains");
     }
 
     #[test]

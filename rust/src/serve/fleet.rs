@@ -1,0 +1,344 @@
+//! Multi-model residency for one serve process: a registry of named `.spkt`
+//! variants of the *same* config (e.g. the dense baseline next to 50%
+//! SparseGPT and 2:4+4-bit — the paper's Table-7/8 grid served side by
+//! side), loaded lazily on first request and held under an LRU
+//! weight-residency budget.
+//!
+//! The default model (the one the engine was built with) is *not* a fleet
+//! entry: it is always resident and requests that name no model route to
+//! it, so single-model runs are byte-for-byte unaffected by the fleet's
+//! existence. Named variants resolve at admission: a cache hit just bumps
+//! LRU recency; a miss maps the variant's `.spkt` ([`SparseStore::load`] —
+//! weights served straight from the mapped pages) and, if the resident
+//! bytes would exceed the budget, evicts least-recently-used variants
+//! first. Eviction drops the registry's `Arc` only — in-flight requests
+//! keep their model (and its mapped pages) alive until they retire, so
+//! eviction can never corrupt a running decode.
+//!
+//! Accounting reuses [`CacheBudget`] with weight bytes as the unit, the
+//! same pattern the KV path uses for cache memory: `total == 0` means
+//! unlimited, and a budget smaller than a single variant still serves one
+//! at a time (floor of one resident, mirroring the engine's cache floor).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::config::ModelCfg;
+use crate::model::sparse_store::SparseStore;
+use crate::serve::kv::CacheBudget;
+use crate::serve::model::SparseModel;
+
+/// Residency changes from one [`ModelFleet::resolve`] or
+/// [`ModelFleet::evict_all`] — the engine forwards these as
+/// `model-loaded` / `model-evicted` events.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetEvent {
+    Loaded { name: String, bytes: u64, mapped: u64 },
+    Evicted { name: String, bytes: u64 },
+}
+
+struct FleetEntry {
+    path: PathBuf,
+    model: Option<Arc<SparseModel>>,
+    /// weight bytes reserved while resident (0 otherwise)
+    bytes: u64,
+    /// resolve tick of the last request that touched this variant
+    last_used: u64,
+}
+
+/// Named model variants behind one serve process (see module docs).
+pub struct ModelFleet {
+    /// the default model's config — every variant must serve it, so all
+    /// variants share vocab/seq/d and one KV-cache geometry
+    cfg: ModelCfg,
+    entries: BTreeMap<String, FleetEntry>,
+    budget: CacheBudget,
+    tick: u64,
+}
+
+impl ModelFleet {
+    /// Register `variants` as (name, `.spkt` path) pairs under a resident
+    /// weight budget in bytes (0 = unlimited). Nothing is loaded yet.
+    pub fn new(
+        cfg: &ModelCfg,
+        variants: &[(String, PathBuf)],
+        budget_bytes: u64,
+    ) -> Result<ModelFleet> {
+        let mut entries = BTreeMap::new();
+        for (name, path) in variants {
+            if name.is_empty() {
+                bail!("fleet model name must be non-empty");
+            }
+            let entry =
+                FleetEntry { path: path.clone(), model: None, bytes: 0, last_used: 0 };
+            if entries.insert(name.clone(), entry).is_some() {
+                bail!("duplicate fleet model name {name:?}");
+            }
+        }
+        Ok(ModelFleet {
+            cfg: cfg.clone(),
+            entries,
+            budget: CacheBudget::new(budget_bytes),
+            tick: 0,
+        })
+    }
+
+    /// Registered variant names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Variants currently resident (the `models_resident` gauge).
+    pub fn resident_models(&self) -> usize {
+        self.entries.values().filter(|e| e.model.is_some()).count()
+    }
+
+    /// Weight bytes reserved by resident variants.
+    pub fn resident_bytes(&self) -> u64 {
+        self.budget.in_use()
+    }
+
+    /// Resident weight bytes served straight from mapped `.spkt` pages
+    /// (feeds the `weight_bytes_mapped` gauge alongside the default
+    /// model's own mapping).
+    pub fn mapped_bytes(&self) -> u64 {
+        self.entries
+            .values()
+            .filter_map(|e| e.model.as_ref())
+            .map(|m| m.mapped_bytes())
+            .sum()
+    }
+
+    /// Resolve a variant by name: bump recency on a hit; on a miss, map
+    /// its `.spkt`, validate it against the default config, evict LRU
+    /// residents until the budget fits (never the variant being loaded),
+    /// and make it resident. Residency changes append to `events`.
+    pub fn resolve(
+        &mut self,
+        name: &str,
+        events: &mut Vec<FleetEvent>,
+    ) -> Result<Arc<SparseModel>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("unknown fleet model {name:?}"))?;
+        if let Some(m) = &entry.model {
+            entry.last_used = tick;
+            return Ok(m.clone());
+        }
+        let path = entry.path.clone();
+        let store = SparseStore::load(&path)
+            .with_context(|| format!("loading fleet model {name:?}"))?;
+        let model = Arc::new(SparseModel::from_store(&store, &self.cfg).with_context(|| {
+            format!("fleet model {name:?} does not serve config {:?}", self.cfg.name)
+        })?);
+        // a packed store is never truly free; a 1-byte floor keeps the
+        // LRU ordering meaningful even for degenerate test fixtures
+        let bytes = model.weight_bytes().max(1);
+        while self.budget.total() > 0
+            && self.budget.in_use() > 0
+            && self.budget.in_use() + bytes > self.budget.total()
+        {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(n, e)| e.model.is_some() && n.as_str() != name)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(n, _)| n.clone());
+            let Some(victim) = victim else { break };
+            self.evict(&victim, events);
+        }
+        let entry = self.entries.get_mut(name).expect("checked above");
+        entry.model = Some(model.clone());
+        entry.bytes = bytes;
+        entry.last_used = tick;
+        self.budget.reserve(bytes);
+        events.push(FleetEvent::Loaded {
+            name: name.to_string(),
+            bytes,
+            mapped: model.mapped_bytes(),
+        });
+        Ok(model)
+    }
+
+    fn evict(&mut self, name: &str, events: &mut Vec<FleetEvent>) {
+        let Some(entry) = self.entries.get_mut(name) else { return };
+        if entry.model.take().is_some() {
+            self.budget.release(entry.bytes);
+            events.push(FleetEvent::Evicted { name: name.to_string(), bytes: entry.bytes });
+            entry.bytes = 0;
+        }
+    }
+
+    /// Drop every resident variant (the engine's drain path): the
+    /// residency budget must return to zero.
+    pub fn evict_all(&mut self, events: &mut Vec<FleetEvent>) {
+        let names: Vec<String> = self.entries.keys().cloned().collect();
+        for name in names {
+            self.evict(&name, events);
+        }
+        debug_assert_eq!(self.budget.in_use(), 0, "evict_all must drain the residency budget");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::model::layout::PRUNABLE_KINDS;
+    use crate::solver::magnitude::magnitude_prune;
+    use crate::sparse::{PackFormat, PackPolicy};
+
+    fn test_cfg() -> ModelCfg {
+        ModelCfg::from_dims("fleet-test", 8, 2, 2, 1, 1, 13, 6)
+    }
+
+    /// Save one variant per pack format into `dir`; returns (name, path).
+    fn save_variants(dir: &std::path::Path) -> Vec<(String, PathBuf)> {
+        let cfg = test_cfg();
+        let mut fp = init_params(&cfg, 3);
+        for layer in 0..cfg.layers {
+            for kind in PRUNABLE_KINDS {
+                let w = magnitude_prune(&fp.get_linear(kind, layer).unwrap(), 0.5).0;
+                fp.set_linear(kind, layer, &w).unwrap();
+            }
+        }
+        let mut out = Vec::new();
+        for (name, fmt) in [
+            ("dense", PackFormat::Dense),
+            ("csr", PackFormat::Csr),
+            ("q4", PackFormat::QCsr { bits: 4, group: 4 }),
+        ] {
+            let store =
+                SparseStore::pack(&fp, &PackPolicy::with_format(fmt), name).unwrap();
+            let path = dir.join(format!("{name}.spkt"));
+            store.save(&path).unwrap();
+            out.push((name.to_string(), path));
+        }
+        out
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sgpt_fleet_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn lazy_load_hit_and_unknown_name() {
+        let dir = tmp("lazy");
+        let variants = save_variants(&dir);
+        let mut fleet = ModelFleet::new(&test_cfg(), &variants, 0).unwrap();
+        assert_eq!(fleet.resident_models(), 0, "nothing loads at registration");
+
+        let mut ev = Vec::new();
+        let a = fleet.resolve("csr", &mut ev).unwrap();
+        assert_eq!(fleet.resident_models(), 1);
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(&ev[0], FleetEvent::Loaded { name, .. } if name == "csr"));
+
+        // a hit returns the same Arc and emits nothing
+        ev.clear();
+        let b = fleet.resolve("csr", &mut ev).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(ev.is_empty());
+
+        assert!(fleet.resolve("nope", &mut ev).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lru_eviction_under_budget_and_drain_to_zero() {
+        let dir = tmp("lru");
+        let variants = save_variants(&dir);
+        let mut fleet = ModelFleet::new(&test_cfg(), &variants, 0).unwrap();
+        // budget sized for roughly one variant: find one variant's bytes
+        let mut ev = Vec::new();
+        let one = fleet.resolve("csr", &mut ev).unwrap().weight_bytes();
+        fleet.evict_all(&mut ev);
+        ev.clear();
+
+        let mut fleet =
+            ModelFleet::new(&test_cfg(), &variants, one + one / 2).unwrap();
+        fleet.resolve("csr", &mut ev).unwrap();
+        fleet.resolve("dense", &mut ev).unwrap();
+        // the second load must have pushed out the least-recent (csr)
+        assert!(
+            ev.iter().any(|e| matches!(e, FleetEvent::Evicted { name, .. } if name == "csr")),
+            "{ev:?}"
+        );
+        assert!(fleet.resident_bytes() <= one + one / 2);
+
+        // touch dense, load q4: dense is now most recent, csr not resident
+        ev.clear();
+        fleet.resolve("dense", &mut ev).unwrap();
+        fleet.resolve("q4", &mut ev).unwrap();
+        assert!(fleet.resident_models() >= 1);
+
+        // drain: residency budget returns to zero, one Evicted per resident
+        ev.clear();
+        fleet.evict_all(&mut ev);
+        assert_eq!(fleet.resident_models(), 0);
+        assert_eq!(fleet.resident_bytes(), 0);
+        assert!(!ev.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn eviction_never_invalidates_a_held_model() {
+        let dir = tmp("held");
+        let variants = save_variants(&dir);
+        let mut fleet = ModelFleet::new(&test_cfg(), &variants, 1).unwrap();
+        let mut ev = Vec::new();
+        let held = fleet.resolve("csr", &mut ev).unwrap();
+        // 1-byte budget: loading dense evicts csr from the registry...
+        fleet.resolve("dense", &mut ev).unwrap();
+        assert!(
+            ev.iter().any(|e| matches!(e, FleetEvent::Evicted { name, .. } if name == "csr"))
+        );
+        // ...but the held Arc still decodes (mapped pages stay alive)
+        assert!(held.weight_bytes() > 0);
+        assert_eq!(held.cfg.name, "fleet-test");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_duplicate_and_empty_names() {
+        let cfg = test_cfg();
+        let v = |n: &str| (n.to_string(), PathBuf::from("/x.spkt"));
+        assert!(ModelFleet::new(&cfg, &[v("a"), v("a")], 0).is_err());
+        assert!(ModelFleet::new(&cfg, &[v("")], 0).is_err());
+        let fleet = ModelFleet::new(&cfg, &[v("a"), v("b")], 0).unwrap();
+        assert_eq!(fleet.names(), vec!["a", "b"]);
+        assert!(fleet.contains("a") && !fleet.contains("c"));
+    }
+
+    #[test]
+    fn wrong_config_variant_fails_resolve() {
+        let dir = tmp("wrongcfg");
+        let variants = save_variants(&dir);
+        let other = ModelCfg::from_dims("other-cfg", 8, 2, 2, 1, 1, 13, 6);
+        let mut fleet = ModelFleet::new(&other, &variants, 0).unwrap();
+        let mut ev = Vec::new();
+        assert!(fleet.resolve("csr", &mut ev).is_err());
+        assert_eq!(fleet.resident_models(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -78,7 +78,7 @@ impl KvCache {
     /// Attention window for a query at absolute position `p`: positions
     /// `start..=p`, exactly the band the uncached re-forward uses.
     pub fn window_start(&self, p: usize) -> usize {
-        p.saturating_sub(self.cap - 1)
+        p.saturating_sub(self.cap.saturating_sub(1))
     }
 
     fn idx(&self, layer: usize, pos: usize) -> usize {
@@ -223,5 +223,23 @@ mod tests {
         b.release(40);
         assert_eq!(b.in_use(), 0);
         assert_eq!(CacheBudget::new(0).free_slots(40), None, "0 = unlimited");
+    }
+
+    #[test]
+    fn zero_unit_budget_never_divides() {
+        // a zero-byte cache unit (degenerate model) must not panic the
+        // budget math — treat it as "always fits", like unlimited
+        let mut b = CacheBudget::new(100);
+        assert_eq!(b.free_slots(0), None);
+        b.reserve(100);
+        assert_eq!(b.free_slots(0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "KvCache dims must be positive")]
+    fn zero_capacity_cache_is_rejected_at_construction() {
+        // cap == 0 would underflow window_start's `cap - 1` and make the
+        // ring index `pos % 0` — construction is the place to fail
+        let _ = KvCache::new(1, 1, 0);
     }
 }

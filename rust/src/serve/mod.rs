@@ -17,6 +17,9 @@
 //!   batch formation (join running batches immediately, wait bounded time
 //!   for a full batch from idle, spread prefill bursts, respect the
 //!   cache-memory budget).
+//! * [`ModelFleet`] (`fleet.rs`) — named `.spkt` variants of one config
+//!   served from one process: per-request `model=` routing, lazy
+//!   mmap-backed loads, LRU weight-residency budget.
 //! * [`ServeEngine`] (`engine.rs`) — the decode loop: poll the
 //!   [`RequestSource`] for live intake, admit, chunked prefill on join,
 //!   one incremental token per request per step, retire (freeing the
@@ -34,6 +37,7 @@
 //! frame, the `metrics-snapshot` event, and the Prometheus text dump.
 
 pub mod engine;
+pub mod fleet;
 pub mod kv;
 pub mod model;
 pub mod net;
@@ -43,6 +47,7 @@ pub use engine::{
     percentile_sorted, EngineOptions, EngineOutcome, FinishedRequest, RequestSource, ServeEngine,
     ServeEvent, SyntheticSource, DEFAULT_PREFILL_CHUNK,
 };
+pub use fleet::{FleetEvent, ModelFleet};
 pub use kv::{CacheBudget, KvCache};
 pub use model::SparseModel;
 pub use scheduler::{Scheduler, SchedulerPolicy, ServeRequest, StepLimits};

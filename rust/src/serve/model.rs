@@ -74,6 +74,10 @@ pub struct SparseModel {
     density: f64,
     format_summary: String,
     effective_bits: f64,
+    /// total packed weight-stream bytes behind the prunable linears
+    weight_bytes: u64,
+    /// how many of those bytes are zero-copy views into a mapped `.spkt`
+    mapped_bytes: u64,
 }
 
 impl SparseModel {
@@ -85,6 +89,19 @@ impl SparseModel {
                 store.config_name,
                 cfg.name
             );
+        }
+        // a degenerate config would hit zero-sized rings and
+        // divide-by-zero position math deep in the decode path — reject
+        // it here with a message that names the field
+        for (v, what) in [
+            (cfg.d, "model width d"),
+            (cfg.layers, "layer count"),
+            (cfg.seq, "context length seq"),
+            (cfg.vocab, "vocab size"),
+        ] {
+            if v == 0 {
+                bail!("config {:?} has zero {what}; cannot serve", cfg.name);
+            }
         }
         // slice the dense remainder back into named regions (layout order)
         let mut rest: BTreeMap<&str, &[f32]> = BTreeMap::new();
@@ -164,6 +181,8 @@ impl SparseModel {
             density: store.density(),
             format_summary: store.format_summary(),
             effective_bits: store.effective_bits(),
+            weight_bytes: store.payload_bytes(),
+            mapped_bytes: store.mapped_bytes(),
         })
     }
 
@@ -187,6 +206,18 @@ impl SparseModel {
     /// 3.0 for the 50%-sparse 4-bit configuration the paper highlights.
     pub fn effective_bits(&self) -> f64 {
         self.effective_bits
+    }
+
+    /// Packed weight-stream bytes behind the prunable linears (the
+    /// fleet-residency budget unit).
+    pub fn weight_bytes(&self) -> u64 {
+        self.weight_bytes
+    }
+
+    /// How many of those bytes are served straight from mapped `.spkt`
+    /// pages (0 for owned loads and in-memory packs).
+    pub fn mapped_bytes(&self) -> u64 {
+        self.mapped_bytes
     }
 
     /// A fresh per-request KV cache sized for this model (one ring of

@@ -26,6 +26,8 @@ pub struct ClientRequest {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub seed: u64,
+    /// fleet variant to route to (`None` = the default checkpoint)
+    pub model: Option<String>,
 }
 
 /// Client behavior knobs.
@@ -131,6 +133,7 @@ pub fn run_client(
             prompt: r.prompt.clone(),
             max_new_tokens: r.max_new_tokens,
             seed: r.seed,
+            model: r.model.clone(),
         };
         reader.stream.write_all(frame.encode().as_bytes()).context("submitting request")?;
     }
@@ -261,7 +264,13 @@ mod tests {
             .run(
                 vec![(
                     0,
-                    ServeRequest { id: 0, prompt: prompt.clone(), max_new_tokens: 5, seed: 9 },
+                    ServeRequest {
+                        id: 0,
+                        prompt: prompt.clone(),
+                        max_new_tokens: 5,
+                        seed: 9,
+                        model: None,
+                    },
                 )],
                 &mut |_| {},
             )
@@ -281,6 +290,7 @@ mod tests {
                     prompt,
                     max_new_tokens: 5,
                     seed: 9,
+                    model: None,
                 }],
                 &ClientOptions { shutdown: true, ..Default::default() },
                 &mut |_| {},

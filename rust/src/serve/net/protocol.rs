@@ -6,7 +6,7 @@
 //! Frame grammar (client → server):
 //!
 //! ```text
-//! {"reason":"request","prompt":[1,2,3],"max_new_tokens":8,"seed":7,"tag":"a"}
+//! {"reason":"request","prompt":[1,2,3],"max_new_tokens":8,"seed":7,"tag":"a","model":"q4"}
 //! {"reason":"cancel","id":4}
 //! {"reason":"stats"}
 //! {"reason":"shutdown"}
@@ -26,7 +26,9 @@
 //! ```
 //!
 //! `tag` is an optional client-chosen correlation string echoed on
-//! `accepted`/`rejected` (the server assigns `id`s). Integer fields ride
+//! `accepted`/`rejected` (the server assigns `id`s). `model` is an
+//! optional fleet-variant name: omitted means the default checkpoint, an
+//! unknown name is answered with a `rejected` frame. Integer fields ride
 //! through JSON numbers (f64), so ids and seeds are capped at 2^53 — the
 //! codec rejects larger values instead of silently rounding them.
 //!
@@ -75,11 +77,15 @@ fn get_token(v: &Json) -> Result<i32> {
     Ok(n as i32)
 }
 
-fn opt_tag(v: &Json) -> Result<Option<String>> {
-    match v.opt("tag") {
+fn opt_str(v: &Json, key: &str) -> Result<Option<String>> {
+    match v.opt(key) {
         Some(t) => Ok(Some(t.as_str()?.to_string())),
         None => Ok(None),
     }
+}
+
+fn opt_tag(v: &Json) -> Result<Option<String>> {
+    opt_str(v, "tag")
 }
 
 fn tag_entry(entries: &mut Vec<(&str, Json)>, tag: &Option<String>) {
@@ -92,8 +98,15 @@ fn tag_entry(entries: &mut Vec<(&str, Json)>, tag: &Option<String>) {
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientFrame {
     /// submit one inference request; the server replies `accepted` (with
-    /// the assigned id) or `rejected`
-    Request { tag: Option<String>, prompt: Vec<i32>, max_new_tokens: usize, seed: u64 },
+    /// the assigned id) or `rejected`. `model` names a fleet variant
+    /// (`None` = the default checkpoint).
+    Request {
+        tag: Option<String>,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        seed: u64,
+        model: Option<String>,
+    },
     /// cancel a previously accepted request of this connection
     Cancel { id: u64 },
     /// ask for a metrics snapshot; the server replies with a `stats` frame
@@ -105,7 +118,7 @@ pub enum ClientFrame {
 impl ClientFrame {
     pub fn to_json(&self) -> Json {
         match self {
-            ClientFrame::Request { tag, prompt, max_new_tokens, seed } => {
+            ClientFrame::Request { tag, prompt, max_new_tokens, seed, model } => {
                 let mut entries = vec![
                     ("reason", Json::Str("request".into())),
                     (
@@ -116,6 +129,9 @@ impl ClientFrame {
                     ("seed", num(*seed)),
                 ];
                 tag_entry(&mut entries, tag);
+                if let Some(m) = model {
+                    entries.push(("model", Json::Str(m.clone())));
+                }
                 obj(entries)
             }
             ClientFrame::Cancel { id } => {
@@ -152,7 +168,13 @@ impl ClientFrame {
                     Some(_) => get_u64(&v, "seed")?,
                     None => 0,
                 };
-                Ok(ClientFrame::Request { tag: opt_tag(&v)?, prompt, max_new_tokens, seed })
+                Ok(ClientFrame::Request {
+                    tag: opt_tag(&v)?,
+                    prompt,
+                    max_new_tokens,
+                    seed,
+                    model: opt_str(&v, "model")?,
+                })
             }
             "cancel" => Ok(ClientFrame::Cancel { id: get_u64(&v, "id")? }),
             "stats" => Ok(ClientFrame::Stats),
@@ -355,8 +377,15 @@ mod tests {
                 prompt: vec![0, 5, -0, 99],
                 max_new_tokens: 8,
                 seed: 1234567,
+                model: None,
             },
-            ClientFrame::Request { tag: None, prompt: vec![], max_new_tokens: 1, seed: 0 },
+            ClientFrame::Request {
+                tag: None,
+                prompt: vec![],
+                max_new_tokens: 1,
+                seed: 0,
+                model: Some("q4".into()),
+            },
             ClientFrame::Cancel { id: 42 },
             ClientFrame::Stats,
             ClientFrame::Shutdown,
@@ -435,6 +464,7 @@ mod tests {
             r#"{"reason":"request","prompt":[1e40],"max_new_tokens":1}"#,
             r#"{"reason":"request","prompt":[0],"max_new_tokens":0}"#,
             r#"{"reason":"request","prompt":"hi","max_new_tokens":1}"#,
+            r#"{"reason":"request","prompt":[0],"max_new_tokens":1,"model":7}"#,
             r#"{"reason":"token","id":0,"index":0,"token":null}"#,
         ] {
             assert!(ClientFrame::parse(bad).is_err(), "client accepted {bad:?}");

@@ -44,6 +44,7 @@ use crate::obs::{Obs, Phase};
 use crate::serve::engine::{
     EngineOptions, EngineOutcome, FinishedRequest, RequestSource, ServeEngine, ServeEvent,
 };
+use crate::serve::fleet::ModelFleet;
 use crate::serve::model::SparseModel;
 use crate::serve::net::conn::Conn;
 use crate::serve::net::protocol::{ClientFrame, FrameDecoder, ServerFrame};
@@ -271,6 +272,19 @@ impl NetServer {
         engine_opts: EngineOptions,
         on_event: &mut dyn FnMut(&ServeEvent),
     ) -> Result<EngineOutcome> {
+        self.serve_with_fleet(model, engine_opts, None, on_event)
+    }
+
+    /// [`NetServer::serve`] with a [`ModelFleet`] of named variants
+    /// attached: request frames carrying `model=<name>` decode on that
+    /// variant, unnamed requests keep the default model.
+    pub fn serve_with_fleet(
+        &self,
+        model: &SparseModel,
+        engine_opts: EngineOptions,
+        fleet: Option<ModelFleet>,
+        on_event: &mut dyn FnMut(&ServeEvent),
+    ) -> Result<EngineOutcome> {
         self.listener.set_nonblocking(true).context("nonblocking listener")?;
         let obs = self.opts.obs.clone().unwrap_or_default();
         let done = Arc::new(AtomicBool::new(false));
@@ -284,9 +298,11 @@ impl NetServer {
         };
 
         let mut source = NetSource::new(self.intake.clone(), self.opts.idle_wait);
-        let outcome = ServeEngine::new(model, engine_opts)
-            .with_obs(obs)
-            .run_source(&mut source, on_event);
+        let mut engine = ServeEngine::new(model, engine_opts).with_obs(obs);
+        if let Some(f) = fleet {
+            engine = engine.with_fleet(f);
+        }
+        let outcome = engine.run_source(&mut source, on_event);
 
         // drain epilogue: stop accepting, close every connection so its
         // reader unblocks, and join the whole thread tree
@@ -425,7 +441,7 @@ fn handle_frame(
     frame: ClientFrame,
 ) -> bool {
     match frame {
-        ClientFrame::Request { tag, prompt, max_new_tokens, seed } => {
+        ClientFrame::Request { tag, prompt, max_new_tokens, seed, model } => {
             if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
                 conn.send(&ServerFrame::Error {
                     message: format!("prompt token {t} outside the served vocab 0..{vocab}"),
@@ -446,7 +462,7 @@ fn handle_frame(
                     })
                 } else {
                     st.pending.push_back(Submission {
-                        req: ServeRequest { id, prompt, max_new_tokens, seed },
+                        req: ServeRequest { id, prompt, max_new_tokens, seed, model },
                         tag,
                         conn: conn.clone(),
                     });

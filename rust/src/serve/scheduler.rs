@@ -26,6 +26,11 @@ pub struct ServeRequest {
     pub max_new_tokens: usize,
     /// per-request sampling stream seed
     pub seed: u64,
+    /// fleet variant to decode on (`None` = the engine's default model);
+    /// named variants are resolved through the [`ModelFleet`] at admission
+    ///
+    /// [`ModelFleet`]: crate::serve::fleet::ModelFleet
+    pub model: Option<String>,
 }
 
 impl ServeRequest {
@@ -201,11 +206,11 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> ServeRequest {
-        ServeRequest { id, prompt: vec![1, 2], max_new_tokens: 4, seed: id }
+        ServeRequest { id, prompt: vec![1, 2], max_new_tokens: 4, seed: id, model: None }
     }
 
     fn req_prompt(id: u64, prompt_len: usize) -> ServeRequest {
-        ServeRequest { id, prompt: vec![1; prompt_len], max_new_tokens: 4, seed: id }
+        ServeRequest { id, prompt: vec![1; prompt_len], max_new_tokens: 4, seed: id, model: None }
     }
 
     fn policy(max_batch: usize, max_wait: usize, queue_cap: usize) -> SchedulerPolicy {

@@ -1,0 +1,207 @@
+//! Section buffers: the owned-or-mapped storage behind every packed stream.
+//!
+//! [`SectionBuf<T>`] is what a kernel struct field like `row_ptr` or
+//! `values` actually holds — either an owned `Vec<T>` (the historical path,
+//! still used for in-memory packing and big-endian targets) or a typed view
+//! into an [`MmapRegion`] validated at construction. Kernels are oblivious:
+//! `Deref<Target = [T]>` makes indexing, slicing and iteration identical on
+//! both variants, and the first mutable access silently converts a mapped
+//! view into an owned copy (copy-on-write), so tests that poke bytes keep
+//! working.
+//!
+//! Safety rests on three checks done **once**, in [`SectionBuf::mapped`]:
+//! the byte offset is `align_of::<T>()`-aligned (region bases are always at
+//! least 8-aligned, see `util::mmap`), the element range lies inside the
+//! region, and the target is little-endian (on big-endian targets callers
+//! must decode into owned buffers — `.spkt` bytes are little-endian).
+
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::util::mmap::{ByteSource, MmapRegion};
+
+/// Element types that may be reinterpreted directly from `.spkt` bytes:
+/// plain-old-data, no padding, no invalid bit patterns, alignment ≤ 8.
+///
+/// # Safety
+/// Implementors must be inhabited by every bit pattern of their size.
+pub unsafe trait SectionElem: Copy + PartialEq + std::fmt::Debug + 'static {}
+unsafe impl SectionElem for u8 {}
+unsafe impl SectionElem for u32 {}
+unsafe impl SectionElem for f32 {}
+
+/// Owned vector or validated mapped view — see the module docs.
+#[derive(Clone)]
+pub enum SectionBuf<T: SectionElem> {
+    Owned(Vec<T>),
+    Mapped {
+        region: Arc<MmapRegion>,
+        /// Byte offset of the first element within the region.
+        off: usize,
+        /// Element (not byte) count.
+        len: usize,
+    },
+}
+
+impl<T: SectionElem> SectionBuf<T> {
+    /// Validated zero-copy view of `len` elements at byte offset `off`.
+    /// Fails rather than hands out a misaligned, out-of-bounds, or
+    /// wrong-endian view.
+    pub fn mapped(region: Arc<MmapRegion>, off: usize, len: usize) -> Result<Self> {
+        if !cfg!(target_endian = "little") {
+            bail!("mapped sections require a little-endian target");
+        }
+        let size = std::mem::size_of::<T>();
+        if off % std::mem::align_of::<T>() != 0 {
+            bail!("section offset {off} is not aligned for {}", std::any::type_name::<T>());
+        }
+        let Some(bytes) = len.checked_mul(size).and_then(|b| b.checked_add(off)) else {
+            bail!("section extent overflows: off {off} + {len} elems");
+        };
+        if bytes > region.len() {
+            bail!("section [{off}, {bytes}) exceeds region of {} bytes", region.len());
+        }
+        Ok(SectionBuf::Mapped { region, off, len })
+    }
+
+    /// True when the elements are served from mapped pages.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            SectionBuf::Owned(_) => false,
+            SectionBuf::Mapped { region, .. } => region.is_mapped(),
+        }
+    }
+
+    /// Bytes of this buffer currently backed by mapped pages (0 when owned).
+    pub fn mapped_bytes(&self) -> u64 {
+        if self.is_mapped() {
+            (self.len() * std::mem::size_of::<T>()) as u64
+        } else {
+            0
+        }
+    }
+
+    /// Total bytes of element payload, however it is backed.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.len() * std::mem::size_of::<T>()) as u64
+    }
+}
+
+impl<T: SectionElem> Deref for SectionBuf<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match self {
+            SectionBuf::Owned(v) => v,
+            SectionBuf::Mapped { region, off, len } => {
+                // SAFETY: alignment, bounds and endianness were validated in
+                // `mapped()`; the region is immutable and outlives the view
+                // through the Arc.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        region.bytes().as_ptr().add(*off) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl<T: SectionElem> DerefMut for SectionBuf<T> {
+    /// Copy-on-write: the first mutable access to a mapped view detaches it
+    /// into an owned copy (mapped pages are PROT_READ).
+    fn deref_mut(&mut self) -> &mut [T] {
+        if let SectionBuf::Mapped { .. } = self {
+            *self = SectionBuf::Owned((**self).to_vec());
+        }
+        match self {
+            SectionBuf::Owned(v) => v,
+            SectionBuf::Mapped { .. } => unreachable!("detached above"),
+        }
+    }
+}
+
+impl<T: SectionElem> From<Vec<T>> for SectionBuf<T> {
+    fn from(v: Vec<T>) -> Self {
+        SectionBuf::Owned(v)
+    }
+}
+
+impl<T: SectionElem> PartialEq for SectionBuf<T> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: SectionElem> std::fmt::Debug for SectionBuf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        (**self).fmt(f)
+    }
+}
+
+impl<'a, T: SectionElem> IntoIterator for &'a SectionBuf<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        (**self).iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region_of(words: &[u32]) -> Arc<MmapRegion> {
+        let mut bytes = Vec::with_capacity(words.len() * 4);
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        Arc::new(MmapRegion::from_bytes(&bytes))
+    }
+
+    #[test]
+    fn mapped_view_reads_like_a_slice() {
+        let r = region_of(&[7, 11, 13, 17]);
+        let b = SectionBuf::<u32>::mapped(r, 4, 3).unwrap();
+        assert_eq!(&b[..], &[11, 13, 17]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.iter().copied().sum::<u32>(), 41);
+        let mut seen = Vec::new();
+        for v in &b {
+            seen.push(*v);
+        }
+        assert_eq!(seen, vec![11, 13, 17]);
+    }
+
+    #[test]
+    fn misaligned_or_oob_views_are_rejected() {
+        let r = region_of(&[1, 2, 3]);
+        assert!(SectionBuf::<u32>::mapped(r.clone(), 2, 1).is_err(), "misaligned");
+        assert!(SectionBuf::<u32>::mapped(r.clone(), 4, 3).is_err(), "past the end");
+        assert!(SectionBuf::<u32>::mapped(r, usize::MAX - 2, 2).is_err(), "overflow");
+    }
+
+    #[test]
+    fn mutation_detaches_into_owned_copy() {
+        let r = region_of(&[5, 6, 7]);
+        let mut b = SectionBuf::<u32>::mapped(r.clone(), 0, 3).unwrap();
+        b[1] = 99;
+        assert_eq!(&b[..], &[5, 99, 7]);
+        assert!(!b.is_mapped(), "mutated buffer must be owned");
+        // the region itself is untouched
+        let fresh = SectionBuf::<u32>::mapped(r, 0, 3).unwrap();
+        assert_eq!(&fresh[..], &[5, 6, 7]);
+    }
+
+    #[test]
+    fn owned_and_mapped_compare_equal() {
+        let r = region_of(&[1, 2]);
+        let m = SectionBuf::<u32>::mapped(r, 0, 2).unwrap();
+        let o: SectionBuf<u32> = vec![1, 2].into();
+        assert_eq!(m, o);
+        assert_eq!(m.payload_bytes(), 8);
+        assert_eq!(o.mapped_bytes(), 0);
+    }
+}

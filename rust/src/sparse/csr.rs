@@ -14,6 +14,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::sparse::buf::SectionBuf;
 use crate::sparse::threads::{for_each_token_tile, TOKEN_TILE};
 use crate::tensor::Tensor;
 
@@ -21,12 +22,12 @@ use crate::tensor::Tensor;
 pub struct CsrMatrix {
     pub rows: usize,
     pub cols: usize,
-    pub row_ptr: Vec<u32>,
-    pub col_idx: Vec<u32>,
-    pub values: Vec<f32>,
+    pub row_ptr: SectionBuf<u32>,
+    pub col_idx: SectionBuf<u32>,
+    pub values: SectionBuf<f32>,
     /// Row reordering: `perm[i]` = logical row stored at slot i (None =
     /// natural order). Applied at pack time, inverted at output scatter.
-    pub perm: Option<Vec<u32>>,
+    pub perm: Option<SectionBuf<u32>>,
 }
 
 impl CsrMatrix {
@@ -71,7 +72,14 @@ impl CsrMatrix {
             }
             row_ptr.push(col_idx.len() as u32);
         }
-        Ok(CsrMatrix { rows, cols, row_ptr, col_idx, values, perm })
+        Ok(CsrMatrix {
+            rows,
+            cols,
+            row_ptr: row_ptr.into(),
+            col_idx: col_idx.into(),
+            values: values.into(),
+            perm: perm.map(Into::into),
+        })
     }
 
     pub fn nnz(&self) -> usize {

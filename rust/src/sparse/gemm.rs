@@ -16,12 +16,19 @@ use crate::tensor::Tensor;
 /// accumulation order of the scalar loop is unchanged (bit-exactness
 /// contract — see DESIGN.md).
 pub fn dense_layer(x: &Tensor, w: &Tensor) -> Tensor {
-    let (t_n, k_n) = (x.rows(), x.cols());
-    let (o_n, k2) = (w.rows(), w.cols());
+    dense_layer_slice(x, w.data(), w.rows(), w.cols())
+}
+
+/// Slice-weight twin of [`dense_layer`]: `wd` is the row-major (O, K) weight
+/// payload, possibly a view straight into a mapped `.spkt` section. Same
+/// tile body, same accumulation order — the two entry points are
+/// element-identical by construction.
+pub fn dense_layer_slice(x: &Tensor, wd: &[f32], o_n: usize, k_n: usize) -> Tensor {
+    let (t_n, k2) = (x.rows(), x.cols());
     assert_eq!(k_n, k2);
+    assert_eq!(wd.len(), o_n * k_n);
     let xt = x.transpose2();
     let xd = xt.data();
-    let wd = w.data();
     let mut y = vec![0.0f32; t_n * o_n];
     for_each_token_tile(t_n, o_n, &mut y, |t0, yrows| {
         let tb = yrows.len() / o_n;

@@ -8,6 +8,7 @@
 //! in f32 or with bit-packed quantized codes dequantized inside the inner
 //! loop (`quant.rs`).
 
+pub mod buf;
 pub mod csr;
 pub mod gemm;
 pub mod nm;
@@ -16,9 +17,10 @@ pub mod pool;
 pub mod quant;
 pub mod threads;
 
+pub use buf::SectionBuf;
 pub use csr::CsrMatrix;
 pub use gemm::dense_layer;
 pub use nm::NmMatrix;
-pub use pack::{PackFormat, PackPolicy, PackedMatrix};
+pub use pack::{DenseMatrix, PackFormat, PackPolicy, PackedMatrix};
 pub use pool::WorkerPool;
 pub use quant::{QCsrMatrix, QDenseMatrix, QNmMatrix};

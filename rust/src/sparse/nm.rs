@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::sparse::buf::SectionBuf;
 use crate::sparse::threads::{for_each_token_tile, TOKEN_TILE};
 use crate::tensor::Tensor;
 
@@ -16,10 +17,13 @@ pub struct NmMatrix {
     pub m: usize,
     pub rows: usize,
     pub cols: usize,
-    /// (rows * cols/m * n) packed kept values
-    pub values: Vec<f32>,
+    /// (rows * cols/m * n) packed kept values. Always owned in practice:
+    /// the `.spkt` byte layout (masks + kept values) differs from this
+    /// zero-padded in-memory layout, so n:m decode is a real transform,
+    /// not a view — see DESIGN.md "Zero-copy mmap serving".
+    pub values: SectionBuf<f32>,
     /// within-group column offsets of each kept value
-    pub offsets: Vec<u8>,
+    pub offsets: SectionBuf<u8>,
 }
 
 impl NmMatrix {
@@ -57,7 +61,7 @@ impl NmMatrix {
                 }
             }
         }
-        Ok(NmMatrix { n, m, rows, cols, values, offsets })
+        Ok(NmMatrix { n, m, rows, cols, values: values.into(), offsets: offsets.into() })
     }
 
     pub fn to_dense(&self) -> Tensor {

@@ -15,12 +15,17 @@
 //! element-identical to quantize-then-dense-decode (pinned by
 //! `tests/quant_parity.rs`).
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::solver::quant::QuantGrid;
+use crate::sparse::buf::SectionBuf;
+use crate::sparse::gemm::dense_layer_slice;
 use crate::sparse::quant::{code_stream_len, QCsrMatrix, QDenseMatrix, QNmMatrix};
-use crate::sparse::{dense_layer, CsrMatrix, NmMatrix};
+use crate::sparse::{CsrMatrix, NmMatrix};
 use crate::tensor::Tensor;
+use crate::util::mmap::{ByteSource, MmapRegion};
 
 /// Which storage format to pack a matrix into.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -159,10 +164,37 @@ impl PackPolicy {
     }
 }
 
+/// A dense weight matrix whose payload may be a view straight into a
+/// mapped `.spkt` section ([`SectionBuf`]) rather than a `Tensor`-owned
+/// `Vec<f32>` — the zero-copy carrier for layers the pruner left dense.
+#[derive(Clone, Debug)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// row-major (rows, cols) f32 payload
+    pub data: SectionBuf<f32>,
+}
+
+impl DenseMatrix {
+    pub fn from_tensor(t: &Tensor) -> DenseMatrix {
+        DenseMatrix { rows: t.rows(), cols: t.cols(), data: t.data().to_vec().into() }
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(vec![self.rows, self.cols], self.data.to_vec())
+    }
+
+    /// y = x @ W^T through [`dense_layer_slice`] — element-identical to
+    /// `dense_layer` on the equivalent `Tensor`.
+    pub fn layer(&self, x: &Tensor) -> Tensor {
+        dense_layer_slice(x, &self.data, self.rows, self.cols)
+    }
+}
+
 /// One weight matrix in its serving format.
 #[derive(Clone, Debug)]
 pub enum PackedMatrix {
-    Dense(Tensor),
+    Dense(DenseMatrix),
     Csr(CsrMatrix),
     Nm(NmMatrix),
     QDense(QDenseMatrix),
@@ -190,7 +222,7 @@ impl PackedMatrix {
     /// Pack a (pruned) dense matrix per `policy`.
     pub fn pack(w: &Tensor, policy: &PackPolicy) -> Result<PackedMatrix> {
         match policy.format {
-            PackFormat::Dense => Ok(PackedMatrix::Dense(w.clone())),
+            PackFormat::Dense => Ok(PackedMatrix::Dense(DenseMatrix::from_tensor(w))),
             PackFormat::Csr => Ok(PackedMatrix::Csr(CsrMatrix::from_dense(w)?)),
             PackFormat::CsrPerm => Ok(PackedMatrix::Csr(CsrMatrix::from_dense_permuted(w)?)),
             PackFormat::Nm(n, m) => Ok(PackedMatrix::Nm(NmMatrix::from_dense(w, n, m)?)),
@@ -214,7 +246,7 @@ impl PackedMatrix {
             PackFormat::Auto => {
                 let density = 1.0 - w.sparsity();
                 if density > policy.dense_cutoff {
-                    return Ok(PackedMatrix::Dense(w.clone()));
+                    return Ok(PackedMatrix::Dense(DenseMatrix::from_tensor(w)));
                 }
                 for (n, m) in [(2usize, 4usize), (4, 8)] {
                     // prefer the structured format only when the pattern is
@@ -230,7 +262,7 @@ impl PackedMatrix {
 
     pub fn rows(&self) -> usize {
         match self {
-            PackedMatrix::Dense(t) => t.rows(),
+            PackedMatrix::Dense(d) => d.rows,
             PackedMatrix::Csr(c) => c.rows,
             PackedMatrix::Nm(n) => n.rows,
             PackedMatrix::QDense(q) => q.rows,
@@ -241,7 +273,7 @@ impl PackedMatrix {
 
     pub fn cols(&self) -> usize {
         match self {
-            PackedMatrix::Dense(t) => t.cols(),
+            PackedMatrix::Dense(d) => d.cols,
             PackedMatrix::Csr(c) => c.cols,
             PackedMatrix::Nm(n) => n.cols,
             PackedMatrix::QDense(q) => q.cols,
@@ -254,7 +286,7 @@ impl PackedMatrix {
     /// structurally stored (code-bearing) for the quantized ones.
     pub fn nnz(&self) -> usize {
         match self {
-            PackedMatrix::Dense(t) => t.data().iter().filter(|&&v| v != 0.0).count(),
+            PackedMatrix::Dense(d) => d.data.iter().filter(|&&v| v != 0.0).count(),
             PackedMatrix::Csr(c) => c.nnz(),
             PackedMatrix::Nm(n) => n.values.iter().filter(|&&v| v != 0.0).count(),
             PackedMatrix::QDense(q) => q.nnz(),
@@ -314,7 +346,7 @@ impl PackedMatrix {
     /// [`QuantGrid::decode`] operations).
     pub fn layer(&self, x: &Tensor) -> Tensor {
         match self {
-            PackedMatrix::Dense(t) => dense_layer(x, t),
+            PackedMatrix::Dense(d) => d.layer(x),
             PackedMatrix::Csr(c) => c.layer(x),
             PackedMatrix::Nm(n) => n.layer(x),
             PackedMatrix::QDense(q) => q.layer(x),
@@ -323,9 +355,47 @@ impl PackedMatrix {
         }
     }
 
+    /// Bytes of this matrix's streams currently served from mapped pages.
+    pub fn mapped_bytes(&self) -> u64 {
+        match self {
+            PackedMatrix::Dense(d) => d.data.mapped_bytes(),
+            PackedMatrix::Csr(c) => {
+                c.row_ptr.mapped_bytes()
+                    + c.col_idx.mapped_bytes()
+                    + c.values.mapped_bytes()
+                    + c.perm.as_ref().map_or(0, |p| p.mapped_bytes())
+            }
+            PackedMatrix::Nm(n) => n.values.mapped_bytes() + n.offsets.mapped_bytes(),
+            PackedMatrix::QDense(q) => q.mask.mapped_bytes() + q.codes.mapped_bytes(),
+            PackedMatrix::QCsr(q) => {
+                q.row_ptr.mapped_bytes() + q.col_idx.mapped_bytes() + q.codes.mapped_bytes()
+            }
+            PackedMatrix::QNm(q) => q.masks.mapped_bytes() + q.codes.mapped_bytes(),
+        }
+    }
+
+    /// Total stream payload bytes, however backed (mapped or owned).
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            PackedMatrix::Dense(d) => d.data.payload_bytes(),
+            PackedMatrix::Csr(c) => {
+                c.row_ptr.payload_bytes()
+                    + c.col_idx.payload_bytes()
+                    + c.values.payload_bytes()
+                    + c.perm.as_ref().map_or(0, |p| p.payload_bytes())
+            }
+            PackedMatrix::Nm(n) => n.values.payload_bytes() + n.offsets.payload_bytes(),
+            PackedMatrix::QDense(q) => q.mask.payload_bytes() + q.codes.payload_bytes(),
+            PackedMatrix::QCsr(q) => {
+                q.row_ptr.payload_bytes() + q.col_idx.payload_bytes() + q.codes.payload_bytes()
+            }
+            PackedMatrix::QNm(q) => q.masks.payload_bytes() + q.codes.payload_bytes(),
+        }
+    }
+
     pub fn to_dense(&self) -> Tensor {
         match self {
-            PackedMatrix::Dense(t) => t.clone(),
+            PackedMatrix::Dense(d) => d.to_tensor(),
             PackedMatrix::Csr(c) => c.to_dense(),
             PackedMatrix::Nm(n) => n.to_dense(),
             PackedMatrix::QDense(q) => q.to_dense(),
@@ -370,12 +440,12 @@ impl PackedMatrix {
     /// ```
     pub fn write_bytes(&self, out: &mut Vec<u8>) {
         match self {
-            PackedMatrix::Dense(t) => {
+            PackedMatrix::Dense(d) => {
                 out.push(Self::TAG_DENSE);
                 out.extend_from_slice(&[0u8; 3]);
-                out.extend_from_slice(&(t.rows() as u32).to_le_bytes());
-                out.extend_from_slice(&(t.cols() as u32).to_le_bytes());
-                for v in t.data() {
+                out.extend_from_slice(&(d.rows as u32).to_le_bytes());
+                out.extend_from_slice(&(d.cols as u32).to_le_bytes());
+                for v in &d.data {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
@@ -483,17 +553,41 @@ impl PackedMatrix {
         }
     }
 
-    /// Decode one matrix from `buf`; returns it plus the bytes consumed.
+    /// Decode one matrix from an owned byte buffer; returns it plus the
+    /// bytes consumed. All streams come back owned (copied).
     pub fn read_bytes(buf: &[u8]) -> Result<(PackedMatrix, usize)> {
-        let mut r = Reader { buf, i: 0 };
+        Self::read_with(Reader { buf, i: 0, src: None })
+    }
+
+    /// Decode one matrix from `len` bytes at `off` inside a mapped region.
+    /// Headers are validated exactly as in [`read_bytes`]; the bulk streams
+    /// (indices, values, masks, codes) come back as zero-copy views into
+    /// the region wherever alignment and endianness allow.
+    pub fn read_bytes_mapped(
+        region: &Arc<MmapRegion>,
+        off: usize,
+        len: usize,
+    ) -> Result<(PackedMatrix, usize)> {
+        let end = off.checked_add(len).filter(|&e| e <= region.len());
+        let Some(end) = end else {
+            bail!("packed-matrix section [{off}, +{len}) exceeds the mapped region");
+        };
+        let buf = &region.bytes()[off..end];
+        Self::read_with(Reader { buf, i: 0, src: Some((region.clone(), off)) })
+    }
+
+    fn read_with(mut r: Reader) -> Result<(PackedMatrix, usize)> {
         let tag = r.u8()?;
         match tag {
             Self::TAG_DENSE => {
                 r.skip(3)?;
                 let rows = r.u32()? as usize;
                 let cols = r.u32()? as usize;
-                let data = r.f32s(rows * cols)?;
-                Ok((PackedMatrix::Dense(Tensor::new(vec![rows, cols], data)), r.i))
+                let n = rows
+                    .checked_mul(cols)
+                    .ok_or_else(|| anyhow!("dense extent {rows}x{cols} overflows"))?;
+                let data = r.f32s(n)?;
+                Ok((PackedMatrix::Dense(DenseMatrix { rows, cols, data }), r.i))
             }
             Self::TAG_CSR | Self::TAG_CSRP => {
                 r.skip(3)?;
@@ -580,7 +674,17 @@ impl PackedMatrix {
                 if ki != kept.len() {
                     bail!("nm kept-value count mismatch");
                 }
-                Ok((PackedMatrix::Nm(NmMatrix { n, m, rows, cols, values, offsets }), r.i))
+                Ok((
+                    PackedMatrix::Nm(NmMatrix {
+                        n,
+                        m,
+                        rows,
+                        cols,
+                        values: values.into(),
+                        offsets: offsets.into(),
+                    }),
+                    r.i,
+                ))
             }
             Self::TAG_QDENSE => {
                 let bits = r.u8()?;
@@ -592,7 +696,7 @@ impl PackedMatrix {
                     bail!("qdense header invalid: {bits} bits, {kept} kept in {rows}x{cols}");
                 }
                 let grid = read_grid(&mut r, rows, cols, bits)?;
-                let mask = r.bytes((rows * cols).div_ceil(8))?.to_vec();
+                let mask = r.u8s((rows * cols).div_ceil(8))?;
                 let stored = mask
                     .iter()
                     .enumerate()
@@ -605,7 +709,7 @@ impl PackedMatrix {
                 if stored != kept {
                     bail!("qdense bitmask has {stored} survivors, header says {kept}");
                 }
-                let codes = r.bytes(code_stream_len(kept, bits))?.to_vec();
+                let codes = r.u8s(code_stream_len(kept, bits))?;
                 let q = QDenseMatrix { rows, cols, bits, mask, codes, kept, grid };
                 Ok((PackedMatrix::QDense(q), r.i))
             }
@@ -633,7 +737,7 @@ impl PackedMatrix {
                 if col_idx.iter().any(|&c| c as usize >= cols) {
                     bail!("qcsr column index out of range");
                 }
-                let codes = r.bytes(code_stream_len(nnz, bits))?.to_vec();
+                let codes = r.u8s(code_stream_len(nnz, bits))?;
                 let q = QCsrMatrix { rows, cols, bits, row_ptr, col_idx, codes, grid };
                 Ok((PackedMatrix::QCsr(q), r.i))
             }
@@ -649,7 +753,7 @@ impl PackedMatrix {
                 let kept = r.u64()? as usize;
                 let grid = read_grid(&mut r, rows, cols, bits)?;
                 let groups = rows * cols / m;
-                let masks = r.bytes(groups)?.to_vec();
+                let masks = r.u8s(groups)?;
                 let mut stored = 0usize;
                 for &mask in &masks {
                     let c = (mask & mask_low_bits(m)).count_ones() as usize;
@@ -661,7 +765,7 @@ impl PackedMatrix {
                 if stored != kept {
                     bail!("qnm masks store {stored} entries, header says {kept}");
                 }
-                let codes = r.bytes(code_stream_len(kept, bits))?.to_vec();
+                let codes = r.u8s(code_stream_len(kept, bits))?;
                 let q = QNmMatrix { n, m, rows, cols, bits, masks, codes, kept, grid };
                 Ok((PackedMatrix::QNm(q), r.i))
             }
@@ -716,16 +820,46 @@ fn read_grid(r: &mut Reader, rows: usize, cols: usize, bits: u8) -> Result<Quant
 struct Reader<'a> {
     buf: &'a [u8],
     i: usize,
+    /// When decoding in place from a mapped region: the region plus the
+    /// byte offset of `buf[0]` within it. Stream reads (`u8s`/`u32s`/
+    /// `f32s`) then return views instead of copies.
+    src: Option<(Arc<MmapRegion>, usize)>,
 }
 
 impl<'a> Reader<'a> {
     fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.buf.len() {
+        // checked: `n` can come from a hostile u64 TOC field, so `i + n`
+        // must not wrap around usize
+        let end = self.i.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
             bail!("packed matrix truncated at byte {}", self.i);
-        }
-        let out = &self.buf[self.i..self.i + n];
-        self.i += n;
+        };
+        let out = &self.buf[self.i..end];
+        self.i = end;
         Ok(out)
+    }
+
+    /// Section view of `n * size` bytes when mapped, aligned, and
+    /// little-endian; an owned copy otherwise. `decode` turns the raw
+    /// bytes into one element for the owned path.
+    fn stream<T, F>(&mut self, n: usize, size: usize, decode: F) -> Result<SectionBuf<T>>
+    where
+        T: crate::sparse::buf::SectionElem,
+        F: Fn(&[u8]) -> T,
+    {
+        let nbytes = n
+            .checked_mul(size)
+            .ok_or_else(|| anyhow!("packed stream of {n} elements overflows"))?;
+        let start = self.i;
+        let b = self.bytes(nbytes)?;
+        if let Some((region, base)) = &self.src {
+            let off = base + start;
+            if cfg!(target_endian = "little") && off % std::mem::align_of::<T>() == 0 {
+                // bounds were just proven by `bytes()`: buf ⊆ region
+                return SectionBuf::mapped(region.clone(), off, n);
+            }
+        }
+        Ok(b.chunks_exact(size).map(|c| decode(c)).collect::<Vec<T>>().into())
     }
 
     fn skip(&mut self, n: usize) -> Result<()> {
@@ -755,14 +889,16 @@ impl<'a> Reader<'a> {
         Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
     }
 
-    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
-        let b = self.bytes(n * 4)?;
-        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    fn u8s(&mut self, n: usize) -> Result<SectionBuf<u8>> {
+        self.stream(n, 1, |c| c[0])
     }
 
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        let b = self.bytes(n * 4)?;
-        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    fn u32s(&mut self, n: usize) -> Result<SectionBuf<u32>> {
+        self.stream(n, 4, |c| u32::from_le_bytes(c.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<SectionBuf<f32>> {
+        self.stream(n, 4, |c| f32::from_le_bytes(c.try_into().unwrap()))
     }
 }
 
@@ -770,6 +906,7 @@ impl<'a> Reader<'a> {
 mod tests {
     use super::*;
     use crate::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+    use crate::sparse::gemm::dense_layer;
     use crate::util::prng::Rng;
 
     fn random(seed: u64, r: usize, c: usize) -> Tensor {
@@ -869,9 +1006,9 @@ mod tests {
         let bad = CsrMatrix {
             rows: 2,
             cols: 4,
-            row_ptr: vec![0, 3, 2],
-            col_idx: vec![0, 1],
-            values: vec![1.0, 2.0],
+            row_ptr: vec![0, 3, 2].into(),
+            col_idx: vec![0, 1].into(),
+            values: vec![1.0, 2.0].into(),
             perm: None,
         };
         let mut buf = Vec::new();
@@ -990,6 +1127,48 @@ mod tests {
             for cut in [0, 1, 9, buf.len() - 1] {
                 assert!(PackedMatrix::read_bytes(&buf[..cut]).is_err(), "cut {cut}");
             }
+        }
+    }
+
+    #[test]
+    fn mapped_decode_is_element_identical_to_owned_decode() {
+        // the Reader-level mmap contract: a matrix decoded from a region
+        // (views) equals the same bytes decoded owned (copies), for every
+        // format, at an 8-aligned section offset like sparse_store uses
+        let (w50, _) = magnitude_prune(&random(30, 9, 24), 0.6);
+        let (w24, _) = magnitude_prune_nm(&random(31, 8, 24), 2, 4);
+        let pol = PackPolicy::with_format;
+        let cases = [
+            PackedMatrix::pack(&random(32, 5, 7), &pol(PackFormat::Dense)).unwrap(),
+            PackedMatrix::pack(&w50, &pol(PackFormat::Csr)).unwrap(),
+            PackedMatrix::pack(&w50, &pol(PackFormat::CsrPerm)).unwrap(),
+            PackedMatrix::pack(&w24, &pol(PackFormat::Nm(2, 4))).unwrap(),
+            PackedMatrix::pack(&w50, &pol(PackFormat::QCsr { bits: 4, group: 8 })).unwrap(),
+            PackedMatrix::pack(&w24, &pol(PackFormat::QNm { bits: 4, group: 0 })).unwrap(),
+            PackedMatrix::pack(&random(33, 5, 8), &pol(PackFormat::QDense { bits: 4, group: 0 }))
+                .unwrap(),
+        ];
+        let x = random(34, 3, 24);
+        for p in cases {
+            let mut buf = vec![0u8; 16]; // 8-aligned, nonzero section offset
+            p.write_bytes(&mut buf);
+            let region = Arc::new(MmapRegion::from_bytes(&buf));
+            let (owned, n1) = PackedMatrix::read_bytes(&buf[16..]).unwrap();
+            let (mapped, n2) =
+                PackedMatrix::read_bytes_mapped(&region, 16, buf.len() - 16).unwrap();
+            assert_eq!(n1, n2, "{}", p.format_label());
+            assert_eq!(mapped.format_label(), owned.format_label());
+            assert_eq!(mapped.to_dense().data(), owned.to_dense().data());
+            if p.cols() == 24 {
+                assert_eq!(
+                    mapped.layer(&x).data(),
+                    owned.layer(&x).data(),
+                    "{}",
+                    p.format_label()
+                );
+            }
+            assert_eq!(mapped.payload_bytes(), owned.payload_bytes());
+            assert_eq!(owned.mapped_bytes(), 0, "owned decode must not report mapped bytes");
         }
     }
 

@@ -22,6 +22,7 @@
 use anyhow::{bail, Result};
 
 use crate::solver::quant::QuantGrid;
+use crate::sparse::buf::SectionBuf;
 use crate::sparse::threads::{for_each_token_tile, TOKEN_TILE};
 use crate::tensor::Tensor;
 
@@ -87,10 +88,10 @@ pub struct QCsrMatrix {
     pub rows: usize,
     pub cols: usize,
     pub bits: u8,
-    pub row_ptr: Vec<u32>,
-    pub col_idx: Vec<u32>,
+    pub row_ptr: SectionBuf<u32>,
+    pub col_idx: SectionBuf<u32>,
     /// bit-packed codes, one per stored entry (same order as `col_idx`)
-    pub codes: Vec<u8>,
+    pub codes: SectionBuf<u8>,
     pub grid: QuantGrid,
 }
 
@@ -115,7 +116,15 @@ impl QCsrMatrix {
             row_ptr.push(col_idx.len() as u32);
         }
         let codes = pack_codes(&raw, bits);
-        Ok(QCsrMatrix { rows, cols, bits, row_ptr, col_idx, codes, grid })
+        Ok(QCsrMatrix {
+            rows,
+            cols,
+            bits,
+            row_ptr: row_ptr.into(),
+            col_idx: col_idx.into(),
+            codes: codes.into(),
+            grid,
+        })
     }
 
     /// Stored (structural-survivor) entries.
@@ -209,9 +218,9 @@ pub struct QNmMatrix {
     pub cols: usize,
     pub bits: u8,
     /// one mask byte per group (bit j = column g*m + j stored)
-    pub masks: Vec<u8>,
+    pub masks: SectionBuf<u8>,
     /// bit-packed codes of stored entries, row-major, ascending bits
-    pub codes: Vec<u8>,
+    pub codes: SectionBuf<u8>,
     /// stored-entry count (set bits across all masks)
     pub kept: usize,
     pub grid: QuantGrid,
@@ -256,7 +265,17 @@ impl QNmMatrix {
         }
         let kept = raw.len();
         let codes = pack_codes(&raw, bits);
-        Ok(QNmMatrix { n, m, rows, cols, bits, masks, codes, kept, grid })
+        Ok(QNmMatrix {
+            n,
+            m,
+            rows,
+            cols,
+            bits,
+            masks: masks.into(),
+            codes: codes.into(),
+            kept,
+            grid,
+        })
     }
 
     pub fn nnz(&self) -> usize {
@@ -358,9 +377,9 @@ pub struct QDenseMatrix {
     pub cols: usize,
     pub bits: u8,
     /// survivor bitmask over rows*cols elements, row-major, LSB-first
-    pub mask: Vec<u8>,
+    pub mask: SectionBuf<u8>,
     /// bit-packed codes of survivors, row-major
-    pub codes: Vec<u8>,
+    pub codes: SectionBuf<u8>,
     /// survivor count (set bits in `mask`)
     pub kept: usize,
     pub grid: QuantGrid,
@@ -383,7 +402,7 @@ impl QDenseMatrix {
         }
         let kept = raw.len();
         let codes = pack_codes(&raw, bits);
-        Ok(QDenseMatrix { rows, cols, bits, mask, codes, kept, grid })
+        Ok(QDenseMatrix { rows, cols, bits, mask: mask.into(), codes: codes.into(), kept, grid })
     }
 
     #[inline]

@@ -1,0 +1,283 @@
+//! Read-only memory-mapped file regions without `libc`.
+//!
+//! [`MmapRegion`] maps a whole file `PROT_READ`/`MAP_PRIVATE` through a thin
+//! raw-syscall shim (x86_64 and aarch64 Linux), so `.spkt` weight sections can
+//! be served straight from page cache instead of being copied into owned
+//! buffers. Everywhere else — other targets, empty files, or a failed `mmap` —
+//! it falls back to reading the file into an **8-byte-aligned owned buffer**,
+//! so downstream alignment reasoning is identical on both paths:
+//!
+//! * the region base is always at least 8-aligned (page-aligned when mapped,
+//!   `Vec<u64>`-backed when owned), and
+//! * a section offset that is `align_of::<T>()`-aligned therefore yields a
+//!   `T`-aligned pointer for every `T` with alignment ≤ 8.
+//!
+//! Tests exercise the owned path via [`MmapRegion::from_bytes`]; both paths
+//! hand out bytes through the same [`ByteSource`] trait, so nothing downstream
+//! can tell them apart. The safety contract for handing these bytes to
+//! kernels lives in DESIGN.md ("Zero-copy mmap serving").
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Uniform byte access over mapped and owned regions. The one seam the
+/// zero-copy loaders go through, so unit tests can run on owned buffers
+/// while production serves from mapped pages.
+pub trait ByteSource {
+    fn bytes(&self) -> &[u8];
+}
+
+/// An immutable byte region backing one `.spkt` file: either live mapped
+/// pages (unmapped on drop) or an owned 8-aligned copy.
+pub struct MmapRegion {
+    inner: Inner,
+}
+
+enum Inner {
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    Mapped { ptr: *const u8, len: usize },
+    /// `Vec<u64>` storage guarantees an 8-aligned base; `len` is the byte
+    /// count actually used (the final word may be padding).
+    Owned { words: Vec<u64>, len: usize },
+}
+
+// SAFETY: the mapped pages are PROT_READ and private; nothing ever writes
+// through `ptr`, so sharing the region across threads is sound. The owned
+// variant is a plain Vec.
+unsafe impl Send for MmapRegion {}
+unsafe impl Sync for MmapRegion {}
+
+impl MmapRegion {
+    /// Map `path` read-only; fall back to an owned aligned copy when mapping
+    /// is unavailable (non-Linux target, empty file, or `mmap` failure).
+    pub fn load(path: &Path) -> Result<Self> {
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            if let Some(r) = Self::try_map(path) {
+                return Ok(r);
+            }
+        }
+        let data =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Ok(Self::from_bytes(&data))
+    }
+
+    /// Owned 8-aligned copy of `data` — the test-path constructor and the
+    /// universal fallback.
+    pub fn from_bytes(data: &[u8]) -> Self {
+        let len = data.len();
+        let mut words = vec![0u64; len.div_ceil(8)];
+        // SAFETY: the word buffer spans at least `len` bytes and the ranges
+        // cannot overlap (freshly allocated destination).
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), words.as_mut_ptr() as *mut u8, len);
+        }
+        MmapRegion { inner: Inner::Owned { words, len } }
+    }
+
+    /// True when the bytes are served from mapped pages rather than an
+    /// owned copy.
+    pub fn is_mapped(&self) -> bool {
+        match &self.inner {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Inner::Mapped { .. } => true,
+            Inner::Owned { .. } => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Inner::Mapped { len, .. } => *len,
+            Inner::Owned { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn try_map(path: &Path) -> Option<Self> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path).ok()?;
+        let len = file.metadata().ok()?.len();
+        if len == 0 || len > usize::MAX as u64 {
+            return None; // mmap(len=0) is EINVAL; empty stores use the owned path
+        }
+        let len = len as usize;
+        let fd = file.as_raw_fd();
+        // mmap(NULL, len, PROT_READ, MAP_PRIVATE, fd, 0); the mapping
+        // outlives `file` — closing the descriptor does not unmap.
+        let ret = unsafe {
+            sys::syscall6(sys::SYS_MMAP, 0, len, sys::PROT_READ, sys::MAP_PRIVATE, fd as usize, 0)
+        };
+        if (-4095..0).contains(&ret) {
+            return None;
+        }
+        Some(MmapRegion { inner: Inner::Mapped { ptr: ret as usize as *const u8, len } })
+    }
+}
+
+impl ByteSource for MmapRegion {
+    fn bytes(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            // SAFETY: `ptr` spans `len` readable bytes for the life of the
+            // mapping, which is the life of `self`.
+            Inner::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Inner::Owned { words, len } => {
+                // SAFETY: the word buffer spans at least `len` bytes.
+                unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, *len) }
+            }
+        }
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        if let Inner::Mapped { ptr, len } = self.inner {
+            // SAFETY: exactly the range returned by mmap, unmapped once.
+            unsafe {
+                sys::syscall6(sys::SYS_MUNMAP, ptr as usize, len, 0, 0, 0, 0);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MmapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapRegion")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+/// Raw Linux syscall shim — the repo builds fully offline with no `libc`
+/// crate, so `mmap`/`munmap` go straight through the syscall instruction.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod sys {
+    pub const SYS_MMAP: usize = 9;
+    pub const SYS_MUNMAP: usize = 11;
+    pub const PROT_READ: usize = 1;
+    pub const MAP_PRIVATE: usize = 2;
+
+    /// # Safety
+    /// Caller must uphold the contract of the invoked syscall.
+    pub unsafe fn syscall6(
+        nr: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+mod sys {
+    pub const SYS_MMAP: usize = 222;
+    pub const SYS_MUNMAP: usize = 215;
+    pub const PROT_READ: usize = 1;
+    pub const MAP_PRIVATE: usize = 2;
+
+    /// # Safety
+    /// Caller must uphold the contract of the invoked syscall.
+    pub unsafe fn syscall6(
+        nr: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 as isize => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            options(nostack),
+        );
+        ret
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_region_is_eight_aligned_and_exact() {
+        let data: Vec<u8> = (0..23u8).collect();
+        let r = MmapRegion::from_bytes(&data);
+        assert_eq!(r.bytes(), &data[..]);
+        assert_eq!(r.len(), 23);
+        assert!(!r.is_mapped());
+        assert_eq!(r.bytes().as_ptr() as usize % 8, 0);
+    }
+
+    #[test]
+    fn empty_region_is_fine() {
+        let r = MmapRegion::from_bytes(&[]);
+        assert!(r.is_empty());
+        assert_eq!(r.bytes(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn load_round_trips_a_real_file() {
+        let dir = std::env::temp_dir().join(format!("mmap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("region.bin");
+        let data: Vec<u8> = (0..4097).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let r = MmapRegion::load(&path).unwrap();
+        assert_eq!(r.len(), data.len());
+        assert_eq!(r.bytes(), &data[..]);
+        assert_eq!(r.bytes().as_ptr() as usize % 8, 0, "base must be 8-aligned");
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert!(r.is_mapped(), "linux path should map, not copy");
+        drop(r); // munmap must not fault
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(MmapRegion::load(Path::new("/no/such/file.spkt")).is_err());
+    }
+}

@@ -5,5 +5,6 @@
 //! replaced by the minimal implementations in this module tree.
 
 pub mod json;
+pub mod mmap;
 pub mod prng;
 pub mod timer;

@@ -1,0 +1,303 @@
+//! Differential suite for the zero-copy serving tentpole: **a store loaded
+//! from mapped pages must be element-identical to the owned-buffer load**
+//! — for every packed format (`dense` / `csr` / `csr:perm` / `nm` / the
+//! three quantized packings, grouped and ungrouped) — and a model built on
+//! mapped sections must decode token streams byte-for-byte equal to one
+//! built on copied buffers. On top of the byte-level contract, the fleet
+//! leg proves LRU weight residency under a tight `--model-cache-mb` budget
+//! returns to zero at drain: every byte a `model-loaded` event reports is
+//! matched by a `model-evicted` byte before the engine exits.
+
+use std::path::{Path, PathBuf};
+
+use sparsegpt::model::init::init_params;
+use sparsegpt::model::layout::{FlatParams, PRUNABLE_KINDS};
+use sparsegpt::model::sparse_store::SparseStore;
+use sparsegpt::model::ModelCfg;
+use sparsegpt::serve::{
+    EngineOptions, ModelFleet, SchedulerPolicy, ServeEngine, ServeEvent, ServeRequest, SparseModel,
+};
+use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+use sparsegpt::sparse::{PackFormat, PackPolicy};
+use sparsegpt::util::prng::Rng;
+
+fn cfg() -> ModelCfg {
+    ModelCfg::from_dims("mmap-parity", 8, 2, 2, 1, 1, 13, 6)
+}
+
+/// Prune every prunable linear of a fresh model with `f`.
+fn pruned_params(
+    cfg: &ModelCfg,
+    seed: u64,
+    f: impl Fn(&sparsegpt::tensor::Tensor) -> sparsegpt::tensor::Tensor,
+) -> FlatParams {
+    let mut fp = init_params(cfg, seed);
+    for layer in 0..cfg.layers {
+        for kind in PRUNABLE_KINDS {
+            let w = f(&fp.get_linear(kind, layer).unwrap());
+            fp.set_linear(kind, layer, &w).unwrap();
+        }
+    }
+    fp
+}
+
+/// Every format the store serializes. N:M formats get 2:4-pruned weights
+/// so the structural invariant holds; the rest get unstructured 50%.
+fn formats() -> Vec<PackFormat> {
+    vec![
+        PackFormat::Dense,
+        PackFormat::Csr,
+        PackFormat::CsrPerm,
+        PackFormat::Nm(2, 4),
+        PackFormat::QDense { bits: 4, group: 0 },
+        PackFormat::QCsr { bits: 4, group: 0 },
+        PackFormat::QCsr { bits: 4, group: 2 },
+        PackFormat::QNm { bits: 4, group: 0 },
+    ]
+}
+
+fn params_for(fmt: PackFormat) -> FlatParams {
+    let cfg = cfg();
+    match fmt {
+        PackFormat::Nm(..) | PackFormat::QNm { .. } => {
+            pruned_params(&cfg, 4, |w| magnitude_prune_nm(w, 2, 4).0)
+        }
+        _ => pruned_params(&cfg, 3, |w| magnitude_prune(w, 0.5).0),
+    }
+}
+
+/// Pack + save one variant, returning its `.spkt` path.
+fn save_variant(dir: &Path, fmt: PackFormat) -> PathBuf {
+    let fp = params_for(fmt);
+    let store = SparseStore::pack(&fp, &PackPolicy::with_format(fmt), "mmap-parity-test").unwrap();
+    let path = dir.join(format!("{}.spkt", fmt.label().replace([':', '%'], "_")));
+    store.save(&path).unwrap();
+    path
+}
+
+/// Whether the mapped loader serves this format's streams zero-copy.
+/// N:M slot arrays are rebuilt on decode (disk layout != memory layout),
+/// so `nm` is the one format that is always owned even from a mapping.
+fn maps_zero_copy(fmt: PackFormat) -> bool {
+    !matches!(fmt, PackFormat::Nm(..))
+}
+
+#[test]
+fn mapped_store_is_element_identical_to_owned_load_for_every_format() {
+    let dir = std::env::temp_dir().join(format!("sgpt_mmap_parity_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for fmt in formats() {
+        let label = fmt.label();
+        let path = save_variant(&dir, fmt);
+        let mapped = SparseStore::load(&path).unwrap();
+        let owned = SparseStore::load_owned(&path).unwrap();
+
+        assert_eq!(mapped.config_name, owned.config_name, "{label}");
+        assert_eq!(mapped.source_label, owned.source_label, "{label}");
+        assert_eq!(mapped.n_params, owned.n_params, "{label}");
+        assert_eq!(mapped.layers, owned.layers, "{label}");
+        assert_eq!(mapped.rest, owned.rest, "{label}: rest stream diverged");
+        assert_eq!(mapped.entries.len(), owned.entries.len(), "{label}");
+        for (me, oe) in mapped.entries.iter().zip(owned.entries.iter()) {
+            assert_eq!(me.layer, oe.layer, "{label}");
+            assert_eq!(me.kind, oe.kind, "{label}");
+            assert_eq!(
+                me.matrix.format_label(),
+                oe.matrix.format_label(),
+                "{label}: decode picked different formats per backing"
+            );
+            assert_eq!(
+                me.matrix.payload_bytes(),
+                oe.matrix.payload_bytes(),
+                "{label} {:?}/{}",
+                oe.kind,
+                oe.layer
+            );
+            // the core contract: exact element equality, not approximate
+            assert_eq!(
+                me.matrix.to_dense().data(),
+                oe.matrix.to_dense().data(),
+                "{label} {:?}/{}: mapped decode diverged from owned",
+                oe.kind,
+                oe.layer
+            );
+        }
+
+        // the owned path never claims mapped pages
+        assert_eq!(owned.mapped_bytes(), 0, "{label}: owned load must copy");
+        assert_eq!(
+            mapped.payload_bytes(),
+            owned.payload_bytes(),
+            "{label}: payload accounting diverged"
+        );
+        // where the raw-syscall mapping is live, zero-copy formats must
+        // actually be served from the mapping, not silently copied
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            if maps_zero_copy(fmt) {
+                assert!(
+                    mapped.mapped_bytes() > 0,
+                    "{label}: mapped load fell back to copying every stream"
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Random workload: mixed prompt lengths (past the attention window),
+/// staggered arrivals, mixed token budgets — the kv-parity shape.
+fn workload(rng: &mut Rng, vocab: usize, seq: usize) -> Vec<(usize, ServeRequest)> {
+    let n = 1 + rng.below(5);
+    (0..n)
+        .map(|i| {
+            let plen = 1 + rng.below(3 * seq);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            (
+                rng.below(4),
+                ServeRequest {
+                    id: i as u64,
+                    prompt,
+                    max_new_tokens: 1 + rng.below(2 * seq),
+                    seed: rng.next_u64(),
+                    model: None,
+                },
+            )
+        })
+        .collect()
+}
+
+fn token_streams(
+    model: &SparseModel,
+    opts: EngineOptions,
+    reqs: Vec<(usize, ServeRequest)>,
+) -> Vec<(u64, Vec<i32>)> {
+    let mut out: Vec<(u64, Vec<i32>)> = ServeEngine::new(model, opts)
+        .run(reqs, &mut |_| {})
+        .unwrap()
+        .finished
+        .iter()
+        .map(|f| (f.id, f.tokens.clone()))
+        .collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+#[test]
+fn mapped_model_serves_identical_token_streams_to_owned_model() {
+    let dir = std::env::temp_dir().join(format!("sgpt_mmap_engine_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = cfg();
+    for fmt in formats() {
+        let label = fmt.label();
+        let path = save_variant(&dir, fmt);
+        let m_mapped = SparseModel::from_store(&SparseStore::load(&path).unwrap(), &cfg).unwrap();
+        let m_owned =
+            SparseModel::from_store(&SparseStore::load_owned(&path).unwrap(), &cfg).unwrap();
+        assert_eq!(
+            m_mapped.weight_bytes(),
+            m_owned.weight_bytes(),
+            "{label}: weight accounting depends on the backing"
+        );
+        assert_eq!(m_owned.mapped_bytes(), 0, "{label}");
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            if maps_zero_copy(fmt) {
+                assert!(m_mapped.mapped_bytes() > 0, "{label}: model dropped its mapping");
+            }
+        }
+        for seed in 0..3u64 {
+            let mut rng = Rng::new(seed ^ 0x33AA);
+            let reqs = workload(&mut rng, cfg.vocab, cfg.seq);
+            let policy = SchedulerPolicy {
+                max_batch: 1 + rng.below(4),
+                max_wait: rng.below(3),
+                queue_cap: 16,
+                max_prefill_tokens: [0, cfg.seq][rng.below(2)],
+            };
+            let opts = EngineOptions {
+                policy,
+                temperature: [0.0, 0.9][rng.below(2)],
+                top_k: 4,
+                prefill_chunk: [0, 1, 2, 5][rng.below(4)],
+                cache_budget_bytes: [0, m_owned.cache_bytes()][rng.below(2)],
+                kv_cache: true,
+                workers: 0,
+            };
+            assert_eq!(
+                token_streams(&m_mapped, opts, reqs.clone()),
+                token_streams(&m_owned, opts, reqs),
+                "{label} seed {seed}: mapped weights changed what a request decodes"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fleet_eviction_under_tight_budget_returns_residency_to_zero() {
+    let dir = std::env::temp_dir().join(format!("sgpt_mmap_fleet_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = cfg();
+    // three variants of the same config, one request routed to each plus a
+    // default-model request; a one-byte budget forces every new load to
+    // evict the previous resident (down to the floor of one)
+    let fleet_fmts =
+        [PackFormat::Dense, PackFormat::Csr, PackFormat::QDense { bits: 4, group: 0 }];
+    let variants: Vec<(String, PathBuf)> = fleet_fmts
+        .iter()
+        .map(|&fmt| (fmt.label().replace([':', '%'], "_"), save_variant(&dir, fmt)))
+        .collect();
+    let default_model = SparseModel::from_params(
+        &params_for(PackFormat::Dense),
+        &PackPolicy::with_format(PackFormat::Dense),
+    )
+    .unwrap();
+    let fleet = ModelFleet::new(&cfg, &variants, 1).unwrap();
+
+    let mut reqs = Vec::new();
+    let mut routes = vec![None];
+    routes.extend(variants.iter().map(|(name, _)| Some(name.clone())));
+    for (i, route) in routes.into_iter().enumerate() {
+        reqs.push((
+            0,
+            ServeRequest {
+                id: i as u64,
+                prompt: vec![1, 2, 3],
+                max_new_tokens: 3,
+                seed: 7 + i as u64,
+                model: route,
+            },
+        ));
+    }
+    let opts = EngineOptions {
+        policy: SchedulerPolicy { max_batch: 4, max_wait: 0, queue_cap: 16, max_prefill_tokens: 0 },
+        temperature: 0.0,
+        top_k: 0,
+        ..EngineOptions::default()
+    };
+    let (mut loaded, mut evicted) = (Vec::new(), Vec::new());
+    let out = ServeEngine::new(&default_model, opts)
+        .with_fleet(fleet)
+        .run(reqs, &mut |e| match e {
+            ServeEvent::ModelLoaded { name, bytes, .. } => loaded.push((name.clone(), *bytes)),
+            ServeEvent::ModelEvicted { name, bytes, .. } => evicted.push((name.clone(), *bytes)),
+            _ => {}
+        })
+        .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(out.finished.len(), 4, "default and all three routed requests drain");
+    assert_eq!(out.rejected, 0);
+    assert_eq!(loaded.len(), 3, "each variant loads exactly once: {loaded:?}");
+    assert_eq!(evicted.len(), 3, "every load is matched by an eviction: {evicted:?}");
+    let mut l_names: Vec<&str> = loaded.iter().map(|(n, _)| n.as_str()).collect();
+    let mut e_names: Vec<&str> = evicted.iter().map(|(n, _)| n.as_str()).collect();
+    l_names.sort_unstable();
+    e_names.sort_unstable();
+    assert_eq!(l_names, e_names, "evictions cover exactly the loaded set");
+    let l_bytes: u64 = loaded.iter().map(|(_, b)| b).sum();
+    let e_bytes: u64 = evicted.iter().map(|(_, b)| b).sum();
+    assert_eq!(l_bytes, e_bytes, "weight residency did not return to zero at drain");
+    assert!(l_bytes > 0, "loads must account real weight bytes");
+}

@@ -55,6 +55,7 @@ fn arb_client_frame(rng: &mut Rng) -> ClientFrame {
             prompt: (0..rng.below(6)).map(|_| arb_token(rng)).collect(),
             max_new_tokens: 1 + rng.below(4096),
             seed: arb_id(rng),
+            model: if rng.below(2) == 0 { None } else { Some(arb_string(rng)) },
         },
         2 => ClientFrame::Cancel { id: arb_id(rng) },
         _ => ClientFrame::Shutdown,
@@ -245,10 +246,22 @@ fn canonical_wire_bytes_are_pinned() {
         prompt: vec![1, 2, 3],
         max_new_tokens: 8,
         seed: 7,
+        model: None,
     };
     assert_eq!(
         req.encode(),
         "{\"max_new_tokens\":8,\"prompt\":[1,2,3],\"reason\":\"request\",\"seed\":7,\"tag\":\"a\"}\n"
+    );
+    let routed = ClientFrame::Request {
+        tag: None,
+        prompt: vec![1],
+        max_new_tokens: 2,
+        seed: 0,
+        model: Some("q4".into()),
+    };
+    assert_eq!(
+        routed.encode(),
+        "{\"max_new_tokens\":2,\"model\":\"q4\",\"prompt\":[1],\"reason\":\"request\",\"seed\":0}\n"
     );
     let tok = ServerFrame::Token { id: 4, index: 0, token: 17 };
     assert_eq!(tok.encode(), "{\"id\":4,\"index\":0,\"reason\":\"token\",\"token\":17}\n");

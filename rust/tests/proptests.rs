@@ -293,6 +293,7 @@ fn prop_engines_with_different_worker_counts_agree() {
                     prompt: vec![1, 2, 3],
                     max_new_tokens: 6,
                     seed: i as u64,
+                    model: None,
                 };
                 (0, r)
             })
@@ -604,6 +605,7 @@ fn prop_retire_returns_cache_budget_to_zero() {
                         prompt: (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect(),
                         max_new_tokens: 1 + rng.below(8),
                         seed: rng.next_u64(),
+                        model: None,
                     },
                 )
             })

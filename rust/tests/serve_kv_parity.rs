@@ -76,6 +76,7 @@ fn workload(rng: &mut Rng, vocab: usize, seq: usize) -> Vec<(usize, ServeRequest
                     prompt,
                     max_new_tokens: 1 + rng.below(2 * seq),
                     seed: rng.next_u64(),
+                    model: None,
                 },
             )
         })

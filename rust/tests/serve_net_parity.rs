@@ -75,13 +75,14 @@ fn expected_stream(model: &SparseModel, opts: EngineOptions, r: &ClientRequest) 
         prompt: r.prompt.clone(),
         max_new_tokens: r.max_new_tokens,
         seed: r.seed,
+        model: None,
     };
     let out = ServeEngine::new(model, opts).run(vec![(0, req)], &mut |_| {}).unwrap();
     out.finished[0].tokens.clone()
 }
 
 fn client(tag: &str, prompt: Vec<i32>, max_new_tokens: usize, seed: u64) -> ClientRequest {
-    ClientRequest { tag: Some(tag.to_string()), prompt, max_new_tokens, seed }
+    ClientRequest { tag: Some(tag.to_string()), prompt, max_new_tokens, seed, model: None }
 }
 
 #[test]
