@@ -32,7 +32,10 @@
 //! plus one `"variant": "fleet-3"` row ("models": 3): a single engine
 //! serving the dense default with csr-50% and q4-50% as named mmap-backed
 //! fleet variants, requests round-robined across them with per-request
-//! `model=` routing.
+//! `model=` routing, and `"variant": "replicas-{1,2,4}"` rows: the cached
+//! csr-50% engine behind the admission router at 1/2/4 replicas (each fed
+//! a full batch; wall-clock is the slowest replica, so tokens/sec shows
+//! scale-out).
 //!
 //! Env knobs: SPARSEGPT_BENCH_CONFIGS (default "small"),
 //! SPARSEGPT_BENCH_SERVE_REQUESTS (4), SPARSEGPT_BENCH_SERVE_TOKENS (4),
@@ -50,7 +53,7 @@ use sparsegpt::model::ModelCfg;
 use sparsegpt::obs::Obs;
 use sparsegpt::model::sparse_store::SparseStore;
 use sparsegpt::serve::{
-    EngineOptions, ModelFleet, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel,
+    EngineOptions, ModelFleet, Router, SchedulerPolicy, ServeEngine, ServeRequest, SparseModel,
 };
 use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
 use sparsegpt::sparse::{PackFormat, PackPolicy, WorkerPool};
@@ -277,6 +280,61 @@ fn main() -> Result<()> {
             ("speedup_vs_uncached", Json::Num(1.0)),
         ]));
         std::fs::remove_dir_all(&fleet_dir).ok();
+    }
+
+    // scale-out rows: the cached csr-50% engine behind the admission
+    // router at 1/2/4 replicas. Every replica is fed one full batch, so
+    // the workload grows with the fleet; aggregate wall-clock is the
+    // slowest replica's and tokens/sec is the scale-out headline
+    {
+        let (_, params, fmt) = &variants[1];
+        let model = SparseModel::from_params(params, &PackPolicy::with_format(*fmt))?;
+        let mut single_tps = 0.0f64;
+        for n in [1usize, 2, 4] {
+            let router = Router::new(&model, opts_for(true), n).with_obs(obs.clone());
+            // warmup keeps replica-thread spinup and first-touch
+            // allocation out of the timing
+            let _ = router.run(workload(n, 1), &mut |_| {})?;
+            let out = router.run(workload(batch * n, tokens), &mut |_| {})?.total;
+            let total_secs = out.decode_secs + out.prefill_secs;
+            let tps = if total_secs > 0.0 { out.tokens as f64 / total_secs } else { 0.0 };
+            if n == 1 {
+                single_tps = tps;
+            }
+            let vs_single = if single_tps > 0.0 { tps / single_tps } else { 1.0 };
+            let vs_dense = if dense_tps[1] > 0.0 { tps / dense_tps[1] } else { 1.0 };
+            let label = format!("replicas-{n}");
+            println!(
+                "  {label:<8} {:<8} {n} engines  {} tok in {total_secs:.3}s -> {tps:.1} tok/s \
+                 ({vs_single:.2}x single-replica)",
+                "cached", out.tokens
+            );
+            table.row(vec![
+                label.clone(),
+                "cached".to_string(),
+                format!("{:.3}", model.density()),
+                format!("{:.2}", model.effective_bits()),
+                out.tokens.to_string(),
+                format!("{total_secs:.3}"),
+                format!("{tps:.1}"),
+                format!("{vs_dense:.2}x"),
+                format!("{vs_single:.2}x vs 1-rep"),
+            ]);
+            rows.push(obj(vec![
+                ("variant", Json::Str(label)),
+                ("kv", Json::Str("cached".into())),
+                ("replicas", Json::Num(n as f64)),
+                ("density", Json::Num(model.density())),
+                ("effective_bits", Json::Num(model.effective_bits())),
+                ("bytes_per_weight", Json::Num(model.effective_bits() / 8.0)),
+                ("tokens", Json::Num(out.tokens as f64)),
+                ("decode_secs", Json::Num(out.decode_secs)),
+                ("prefill_secs", Json::Num(out.prefill_secs)),
+                ("tokens_per_sec", Json::Num(tps)),
+                ("speedup_vs_dense", Json::Num(vs_dense)),
+                ("speedup_vs_single_replica", Json::Num(vs_single)),
+            ]));
+        }
     }
 
     let report_dir = std::env::var_os("SPARSEGPT_REPORTS")

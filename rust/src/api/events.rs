@@ -76,12 +76,15 @@ pub enum Event {
         step: usize,
         prompt_tokens: usize,
         max_new_tokens: usize,
+        /// router replica that owns the request (0 for a bare engine)
+        replica: usize,
     },
     /// queued requests joined the decode batch
     BatchFormed {
         step: usize,
         joined: usize,
         batch: usize,
+        replica: usize,
     },
     /// a joiner's chunked prefill began populating its KV cache
     PrefillStarted {
@@ -89,18 +92,21 @@ pub enum Event {
         step: usize,
         prompt_tokens: usize,
         chunks: usize,
+        replica: usize,
     },
     /// a request's KV ring buffer evicted positions this step
     CacheEvicted {
         id: u64,
         step: usize,
         evicted: usize,
+        replica: usize,
     },
     /// a serve request finished (token budget reached) and retired
     RequestFinished {
         id: u64,
         step: usize,
         tokens: usize,
+        replica: usize,
     },
     /// a serve request's client went away (disconnect or cancel frame);
     /// the request retired early with `tokens` already generated
@@ -108,6 +114,7 @@ pub enum Event {
         id: u64,
         step: usize,
         tokens: usize,
+        replica: usize,
     },
     /// a serve submission was shed because the bounded queue was full
     /// (429 semantics — never blocks the decode loop)
@@ -134,7 +141,8 @@ pub enum Event {
     },
     /// the serve TCP front door is accepting connections on `addr`
     ServeListening { addr: String },
-    /// the serve engine drained its workload
+    /// the serve engine drained its workload (one event per replica in a
+    /// multi-replica run)
     EngineDrained {
         steps: usize,
         requests: usize,
@@ -145,6 +153,7 @@ pub enum Event {
         /// leaked reservation (e.g. a disconnect that skipped its
         /// release) is visible in the event stream and greppable in CI
         cache_bytes_in_use: u64,
+        replica: usize,
     },
     /// a point-in-time metrics snapshot from the serve-path [`Obs`]
     /// registry (periodic `snap_every` ticks plus one at drain); the
@@ -279,43 +288,51 @@ impl Event {
                     ("effective_bits", n(*effective_bits)),
                 ])
             }
-            Event::RequestEnqueued { id, step, prompt_tokens, max_new_tokens } => obj(vec![
-                reason,
-                ("id", n(*id as f64)),
-                ("step", n(*step as f64)),
-                ("prompt_tokens", n(*prompt_tokens as f64)),
-                ("max_new_tokens", n(*max_new_tokens as f64)),
-            ]),
-            Event::BatchFormed { step, joined, batch } => obj(vec![
+            Event::RequestEnqueued { id, step, prompt_tokens, max_new_tokens, replica } => {
+                obj(vec![
+                    reason,
+                    ("id", n(*id as f64)),
+                    ("step", n(*step as f64)),
+                    ("prompt_tokens", n(*prompt_tokens as f64)),
+                    ("max_new_tokens", n(*max_new_tokens as f64)),
+                    ("replica", n(*replica as f64)),
+                ])
+            }
+            Event::BatchFormed { step, joined, batch, replica } => obj(vec![
                 reason,
                 ("step", n(*step as f64)),
                 ("joined", n(*joined as f64)),
                 ("batch", n(*batch as f64)),
+                ("replica", n(*replica as f64)),
             ]),
-            Event::PrefillStarted { id, step, prompt_tokens, chunks } => obj(vec![
+            Event::PrefillStarted { id, step, prompt_tokens, chunks, replica } => obj(vec![
                 reason,
                 ("id", n(*id as f64)),
                 ("step", n(*step as f64)),
                 ("prompt_tokens", n(*prompt_tokens as f64)),
                 ("chunks", n(*chunks as f64)),
+                ("replica", n(*replica as f64)),
             ]),
-            Event::CacheEvicted { id, step, evicted } => obj(vec![
+            Event::CacheEvicted { id, step, evicted, replica } => obj(vec![
                 reason,
                 ("id", n(*id as f64)),
                 ("step", n(*step as f64)),
                 ("evicted", n(*evicted as f64)),
+                ("replica", n(*replica as f64)),
             ]),
-            Event::RequestFinished { id, step, tokens } => obj(vec![
+            Event::RequestFinished { id, step, tokens, replica } => obj(vec![
                 reason,
                 ("id", n(*id as f64)),
                 ("step", n(*step as f64)),
                 ("tokens", n(*tokens as f64)),
+                ("replica", n(*replica as f64)),
             ]),
-            Event::RequestCancelled { id, step, tokens } => obj(vec![
+            Event::RequestCancelled { id, step, tokens, replica } => obj(vec![
                 reason,
                 ("id", n(*id as f64)),
                 ("step", n(*step as f64)),
                 ("tokens", n(*tokens as f64)),
+                ("replica", n(*replica as f64)),
             ]),
             Event::RequestRejected { id, step, queue, cap } => obj(vec![
                 reason,
@@ -345,6 +362,7 @@ impl Event {
                 tokens_per_sec,
                 cancelled,
                 cache_bytes_in_use,
+                replica,
             } => obj(vec![
                 reason,
                 ("steps", n(*steps as f64)),
@@ -353,6 +371,7 @@ impl Event {
                 ("tokens_per_sec", n(*tokens_per_sec)),
                 ("cancelled", n(*cancelled as f64)),
                 ("cache_bytes_in_use", n(*cache_bytes_in_use as f64)),
+                ("replica", n(*replica as f64)),
             ]),
             Event::MetricsSnapshot { snapshot } => {
                 // flatten: the snapshot object IS the event, plus `reason`
@@ -448,29 +467,29 @@ impl EventSink for HumanSink {
                     self.tag("pack")
                 )
             }
-            Event::RequestEnqueued { id, step, prompt_tokens, max_new_tokens } => println!(
+            Event::RequestEnqueued { id, step, prompt_tokens, max_new_tokens, .. } => println!(
                 "[{}] step {step}: request {id} enqueued ({prompt_tokens} prompt, \
                  {max_new_tokens} max tokens)",
                 self.tag("serve")
             ),
-            Event::BatchFormed { step, joined, batch } => println!(
+            Event::BatchFormed { step, joined, batch, .. } => println!(
                 "[{}] step {step}: +{joined} joined, batch {batch}",
                 self.tag("serve")
             ),
-            Event::PrefillStarted { id, step, prompt_tokens, chunks } => println!(
+            Event::PrefillStarted { id, step, prompt_tokens, chunks, .. } => println!(
                 "[{}] step {step}: request {id} prefilling {prompt_tokens} tokens \
                  in {chunks} chunks",
                 self.tag("serve")
             ),
-            Event::CacheEvicted { id, step, evicted } => println!(
+            Event::CacheEvicted { id, step, evicted, .. } => println!(
                 "[{}] step {step}: request {id} evicted {evicted} cached positions",
                 self.tag("serve")
             ),
-            Event::RequestFinished { id, step, tokens } => println!(
+            Event::RequestFinished { id, step, tokens, .. } => println!(
                 "[{}] step {step}: request {id} finished ({tokens} tokens)",
                 self.tag("serve")
             ),
-            Event::RequestCancelled { id, step, tokens } => println!(
+            Event::RequestCancelled { id, step, tokens, .. } => println!(
                 "[{}] step {step}: request {id} cancelled by its client \
                  ({tokens} tokens streamed)",
                 self.tag("serve")
@@ -498,6 +517,7 @@ impl EventSink for HumanSink {
                 tokens_per_sec,
                 cancelled,
                 cache_bytes_in_use,
+                ..
             } => println!(
                 "[{}] drained: {requests} requests (+{cancelled} cancelled), {tokens} tokens \
                  in {steps} steps ({tokens_per_sec:.1} tok/s, {cache_bytes_in_use} cache bytes \
@@ -597,12 +617,12 @@ mod tests {
                 formats: "qcsr:12".into(),
                 effective_bits: 3.0,
             },
-            Event::RequestEnqueued { id: 0, step: 0, prompt_tokens: 8, max_new_tokens: 16 },
-            Event::BatchFormed { step: 1, joined: 2, batch: 2 },
-            Event::PrefillStarted { id: 0, step: 1, prompt_tokens: 8, chunks: 1 },
-            Event::CacheEvicted { id: 0, step: 5, evicted: 1 },
-            Event::RequestFinished { id: 0, step: 17, tokens: 16 },
-            Event::RequestCancelled { id: 1, step: 9, tokens: 4 },
+            Event::RequestEnqueued { id: 0, step: 0, prompt_tokens: 8, max_new_tokens: 16, replica: 0 },
+            Event::BatchFormed { step: 1, joined: 2, batch: 2, replica: 0 },
+            Event::PrefillStarted { id: 0, step: 1, prompt_tokens: 8, chunks: 1, replica: 1 },
+            Event::CacheEvicted { id: 0, step: 5, evicted: 1, replica: 0 },
+            Event::RequestFinished { id: 0, step: 17, tokens: 16, replica: 1 },
+            Event::RequestCancelled { id: 1, step: 9, tokens: 4, replica: 0 },
             Event::RequestRejected { id: 2, step: 9, queue: 64, cap: 64 },
             Event::ModelLoaded { name: "q4".into(), step: 3, bytes: 4096, mapped: 4096 },
             Event::ModelEvicted { name: "q4".into(), step: 18, bytes: 4096 },
@@ -614,6 +634,7 @@ mod tests {
                 tokens_per_sec: 64.0,
                 cancelled: 1,
                 cache_bytes_in_use: 0,
+                replica: 0,
             },
             Event::MetricsSnapshot {
                 snapshot: Json::parse(r#"{"generation":1,"tokens_decoded_total":8}"#).unwrap(),

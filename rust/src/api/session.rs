@@ -36,8 +36,8 @@ use crate::obs::{Clock, Obs, Phase};
 use crate::runtime::BackendKind;
 use crate::serve::net::{NetServer, NetServerOptions};
 use crate::serve::{
-    percentile_sorted, EngineOptions, ModelFleet, SchedulerPolicy, ServeEngine, ServeEvent,
-    ServeRequest, SparseModel, SyntheticSource,
+    percentile_sorted, EngineOptions, ModelFleet, Router, SchedulerPolicy, ServeEngine,
+    ServeEvent, ServeRequest, SparseModel, SyntheticSource,
 };
 use crate::sparse::PackPolicy;
 use crate::util::prng::Rng;
@@ -685,6 +685,7 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
         cache_budget_bytes: spec.cache_budget_mb as u64 * 1024 * 1024,
         workers: spec.workers,
         snap_every: spec.snap_every,
+        replica: 0,
     };
     // every engine event also refreshes the dropped-event counter from the
     // sink, so a dying JSONL pipe shows up in the very stream that survives
@@ -715,7 +716,7 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
                     .with_context(|| format!("writing listen address to {path:?}"))?;
             }
             listen_addr = Some(bound);
-            srv.serve_with_fleet(&model, opts, fleet, &mut |ev| {
+            srv.serve_router(&model, opts, spec.replicas, fleet, &mut |ev| {
                 sink.emit(&serve_event_to_event(ev));
                 metrics.events_dropped_total.set_at_least(sink.dropped_count());
             })?
@@ -747,17 +748,26 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
             }
             let cancels = spec.cancel.iter().map(|&(id, step)| (step, id)).collect();
             let mut source = SyntheticSource::new(incoming, cancels);
-            let mut engine = ServeEngine::new(&model, opts).with_obs(obs.clone());
-            if let Some(f) = fleet {
-                engine = engine.with_fleet(f);
+            let mut on_event = |ev: &ServeEvent| {
+                sink.emit(&serve_event_to_event(ev));
+                metrics.events_dropped_total.set_at_least(sink.dropped_count());
+            };
+            if spec.replicas > 1 {
+                // admission router: the synthetic intake fans out across N
+                // replica engines; the report reads the aggregated outcome
+                let mut router =
+                    Router::new(&model, opts, spec.replicas).with_obs(obs.clone());
+                if let Some(f) = fleet {
+                    router = router.with_fleet(f);
+                }
+                router.run_source(&mut source, &mut on_event)?.total
+            } else {
+                let mut engine = ServeEngine::new(&model, opts).with_obs(obs.clone());
+                if let Some(f) = fleet {
+                    engine = engine.with_fleet(f);
+                }
+                engine.run_source(&mut source, &mut on_event)?
             }
-            engine.run_source(
-                &mut source,
-                &mut |ev| {
-                    sink.emit(&serve_event_to_event(ev));
-                    metrics.events_dropped_total.set_at_least(sink.dropped_count());
-                },
-            )?
         }
     };
 
@@ -813,31 +823,35 @@ fn run_serve(ws: &Workspace, spec: &ServeSpec, sink: &mut dyn EventSink) -> Resu
 /// Map the engine's serve-side events onto the session event stream.
 fn serve_event_to_event(ev: &ServeEvent) -> Event {
     match ev {
-        ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens } => {
+        ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens, replica } => {
             Event::RequestEnqueued {
                 id: *id,
                 step: *step,
                 prompt_tokens: *prompt_tokens,
                 max_new_tokens: *max_new_tokens,
+                replica: *replica,
             }
         }
-        ServeEvent::BatchFormed { step, joined, batch } => {
-            Event::BatchFormed { step: *step, joined: *joined, batch: *batch }
+        ServeEvent::BatchFormed { step, joined, batch, replica } => {
+            Event::BatchFormed { step: *step, joined: *joined, batch: *batch, replica: *replica }
         }
-        ServeEvent::PrefillStarted { id, step, prompt_tokens, chunks } => Event::PrefillStarted {
-            id: *id,
-            step: *step,
-            prompt_tokens: *prompt_tokens,
-            chunks: *chunks,
-        },
-        ServeEvent::CacheEvicted { id, step, evicted } => {
-            Event::CacheEvicted { id: *id, step: *step, evicted: *evicted }
+        ServeEvent::PrefillStarted { id, step, prompt_tokens, chunks, replica } => {
+            Event::PrefillStarted {
+                id: *id,
+                step: *step,
+                prompt_tokens: *prompt_tokens,
+                chunks: *chunks,
+                replica: *replica,
+            }
         }
-        ServeEvent::Finished { id, step, tokens } => {
-            Event::RequestFinished { id: *id, step: *step, tokens: *tokens }
+        ServeEvent::CacheEvicted { id, step, evicted, replica } => {
+            Event::CacheEvicted { id: *id, step: *step, evicted: *evicted, replica: *replica }
         }
-        ServeEvent::Cancelled { id, step, tokens } => {
-            Event::RequestCancelled { id: *id, step: *step, tokens: *tokens }
+        ServeEvent::Finished { id, step, tokens, replica } => {
+            Event::RequestFinished { id: *id, step: *step, tokens: *tokens, replica: *replica }
+        }
+        ServeEvent::Cancelled { id, step, tokens, replica } => {
+            Event::RequestCancelled { id: *id, step: *step, tokens: *tokens, replica: *replica }
         }
         ServeEvent::Rejected { id, step, queue, cap } => {
             Event::RequestRejected { id: *id, step: *step, queue: *queue, cap: *cap }
@@ -851,16 +865,23 @@ fn serve_event_to_event(ev: &ServeEvent) -> Event {
         ServeEvent::ModelEvicted { name, step, bytes } => {
             Event::ModelEvicted { name: name.clone(), step: *step, bytes: *bytes }
         }
-        ServeEvent::Drained { steps, requests, tokens, decode_secs, cancelled, cache_bytes_in_use } => {
-            Event::EngineDrained {
-                steps: *steps,
-                requests: *requests,
-                tokens: *tokens,
-                tokens_per_sec: if *decode_secs > 0.0 { *tokens as f64 / *decode_secs } else { 0.0 },
-                cancelled: *cancelled,
-                cache_bytes_in_use: *cache_bytes_in_use,
-            }
-        }
+        ServeEvent::Drained {
+            steps,
+            requests,
+            tokens,
+            decode_secs,
+            cancelled,
+            cache_bytes_in_use,
+            replica,
+        } => Event::EngineDrained {
+            steps: *steps,
+            requests: *requests,
+            tokens: *tokens,
+            tokens_per_sec: if *decode_secs > 0.0 { *tokens as f64 / *decode_secs } else { 0.0 },
+            cancelled: *cancelled,
+            cache_bytes_in_use: *cache_bytes_in_use,
+            replica: *replica,
+        },
         ServeEvent::MetricsSnapshot { snapshot } => {
             Event::MetricsSnapshot { snapshot: snapshot.clone() }
         }

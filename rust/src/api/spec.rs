@@ -417,8 +417,8 @@ pub use crate::serve::engine::DEFAULT_PREFILL_CHUNK;
 /// The cache and pack knobs round-trip through the job label as a comma
 /// list after the prune spec (only non-default values appear):
 /// `serve/<config>/<prune-spec>[,kv=off][,chunk=<n>][,cache-mb=<n>]`
-/// `[,prefill=<n>][,workers=<n>][,fmt=<pack-format>][,g=<cols>][,net=<addr>]`
-/// `[,cancel=<id>@<step>[+...]][,snap=<n>][,clock=mock]`
+/// `[,prefill=<n>][,workers=<n>][,replicas=<n>][,fmt=<pack-format>]`
+/// `[,g=<cols>][,net=<addr>][,cancel=<id>@<step>[+...]][,snap=<n>][,clock=mock]`
 /// `[,models=<name>@<path>[+...]][,model-cache-mb=<n>]` — `fmt` carries
 /// the base pack-format label (e.g. `qcsr:4`) and `g` the quantization
 /// group, kept separate so the comma-separated knob list stays flat; `net`
@@ -448,6 +448,10 @@ pub struct ServeSpec {
     /// kernel worker-pool size for this engine (`workers=<n>` knob; 0 =
     /// share the process pool sized from `SPARSEGPT_THREADS` at startup)
     pub workers: usize,
+    /// engine replicas behind the admission router (`replicas=<n>` knob;
+    /// 1 = the bare engine). Each replica gets its own worker pool and an
+    /// even split of `cache_budget_mb`, sharing read-only mapped weights
+    pub replicas: usize,
     /// synthetic request count
     pub requests: usize,
     /// tokens generated per request
@@ -516,6 +520,7 @@ impl ServeSpec {
             cache_budget_mb: 0,
             max_prefill_tokens: 0,
             workers: 0,
+            replicas: 1,
             requests: 8,
             max_new_tokens: 16,
             prompt_len: 8,
@@ -586,6 +591,9 @@ impl ServeSpec {
         if self.workers != 0 {
             parts.push(format!("workers={}", self.workers));
         }
+        if self.replicas != 1 {
+            parts.push(format!("replicas={}", self.replicas));
+        }
         if self.format != PackFormat::Auto {
             // the group rides as its own knob so fmt's value has no comma
             match self.format.label().split_once(',') {
@@ -634,10 +642,10 @@ impl ServeSpec {
             let err = || {
                 anyhow!(
                     "unrecognized serve knob {part:?} (expected kv=on|off, chunk=<n>, \
-                     cache-mb=<n>, prefill=<n>, workers=<n>, fmt=<pack-format>, \
-                     g=<cols>, net=<addr>, cancel=<id>@<step>[+...], snap=<n>, \
-                     clock=mock|real, models=<name>@<path>[+...] or \
-                     model-cache-mb=<n>)"
+                     cache-mb=<n>, prefill=<n>, workers=<n>, replicas=<n>, \
+                     fmt=<pack-format>, g=<cols>, net=<addr>, \
+                     cancel=<id>@<step>[+...], snap=<n>, clock=mock|real, \
+                     models=<name>@<path>[+...] or model-cache-mb=<n>)"
                 )
             };
             let (key, value) = part.split_once('=').ok_or_else(err)?;
@@ -653,6 +661,12 @@ impl ServeSpec {
                 "cache-mb" => self.cache_budget_mb = value.parse().map_err(|_| err())?,
                 "prefill" => self.max_prefill_tokens = value.parse().map_err(|_| err())?,
                 "workers" => self.workers = value.parse().map_err(|_| err())?,
+                "replicas" => {
+                    self.replicas = value.parse().map_err(|_| err())?;
+                    if self.replicas == 0 {
+                        return Err(err());
+                    }
+                }
                 "fmt" => self.format = PackFormat::parse(value)?,
                 "g" => {
                     let g: usize = value.parse().map_err(|_| err())?;
@@ -982,6 +996,31 @@ mod tests {
             "serve/nano/sparsegpt-50%,snap=x",
             "serve/nano/sparsegpt-50%,clock=maybe",
             "serve/nano/sparsegpt-50%,clock=",
+        ] {
+            assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn serve_replicas_knob_round_trips_through_labels() {
+        let mut spec = ServeSpec::new("nano");
+        spec.replicas = 4;
+        spec.workers = 2;
+        let j = JobSpec::Serve(spec);
+        assert_eq!(j.label(), "serve/nano/sparsegpt-50%,workers=2,replicas=4");
+        assert_eq!(JobSpec::parse(&j.label()).unwrap(), j);
+        // the single-replica default stays out of the label entirely
+        assert_eq!(JobSpec::Serve(ServeSpec::new("nano")).label(), "serve/nano/sparsegpt-50%");
+        let JobSpec::Serve(parsed) =
+            JobSpec::parse("serve/nano/sparsegpt-50%,replicas=1").unwrap()
+        else {
+            panic!("not a serve spec")
+        };
+        assert_eq!(parsed.replicas, 1);
+        for bad in [
+            "serve/nano/sparsegpt-50%,replicas=x",
+            "serve/nano/sparsegpt-50%,replicas=0",
+            "serve/nano/sparsegpt-50%,replicas=",
         ] {
             assert!(JobSpec::parse(bad).is_err(), "should reject {bad:?}");
         }

@@ -52,7 +52,7 @@ commands:
   serve     [--config nano] [--spec sparsegpt-50%]
             [--format auto|dense|csr|2:4|qdense:4|qcsr:4[,g=128]|qnm:4]
             [--kv-cache on|off] [--prefill-chunk 32] [--cache-mb 0]
-            [--max-prefill-tokens 0] [--workers 0]
+            [--max-prefill-tokens 0] [--workers 0] [--replicas 1]
             [--requests 8] [--tokens 16] [--prompt-len 8] [--arrival-every 1]
             [--max-batch 8] [--max-wait 2] [--queue-cap 64]
             [--temperature 0.8] [--top-k 40] [--seed 0]
@@ -73,6 +73,11 @@ commands:
             (--workers 0 shares the process-wide kernel pool sized from
             SPARSEGPT_THREADS at startup; n > 0 gives this serve run a
             private pool of n workers)
+            (--replicas n > 1 runs n engine replicas behind an admission
+            router: least-outstanding-tokens routing with sticky
+            request ownership, per-replica worker pools, the cache
+            budget split evenly, weights shared read-only; requests
+            are rejected only when every replica's queue is full)
             (--snap-every n emits a metrics-snapshot event every n engine
             steps plus once at drain; --metrics-file writes the final
             snapshot as Prometheus text after the drain)
@@ -289,6 +294,10 @@ fn spec_from_args(cmd: &str, args: &Args) -> Result<JobSpec> {
             s.cache_budget_mb = args.usize_or("cache-mb", s.cache_budget_mb)?;
             s.max_prefill_tokens = args.usize_or("max-prefill-tokens", s.max_prefill_tokens)?;
             s.workers = args.usize_or("workers", s.workers)?;
+            s.replicas = args.usize_or("replicas", s.replicas)?;
+            if s.replicas == 0 {
+                bail!("--replicas takes a positive replica count");
+            }
             s.requests = args.usize_or("requests", s.requests)?;
             s.max_new_tokens = args.usize_or("tokens", s.max_new_tokens)?;
             s.prompt_len = args.usize_or("prompt-len", s.prompt_len)?;

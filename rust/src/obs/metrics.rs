@@ -151,6 +151,26 @@ pub struct HistSnapshot {
     pub buckets: Vec<(u64, u64)>,
 }
 
+impl HistSnapshot {
+    /// Fold another reading into this one: counts and sums add, buckets
+    /// combine by upper bound (the result stays le-sorted) — how a
+    /// multi-replica snapshot aggregates per-replica histograms into one
+    /// totals row.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        let mut all: Vec<(u64, u64)> = std::mem::take(&mut self.buckets);
+        all.extend(other.buckets.iter().copied());
+        all.sort_by_key(|(le, _)| *le);
+        for (le, n) in all {
+            match self.buckets.last_mut() {
+                Some((last_le, last_n)) if *last_le == le => *last_n += n,
+                _ => self.buckets.push((le, n)),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +219,23 @@ mod tests {
     fn empty_histogram_snapshot() {
         let s = Histogram::default().snapshot();
         assert_eq!(s, HistSnapshot { count: 0, sum: 0, buckets: vec![] });
+    }
+
+    #[test]
+    fn hist_snapshot_merge_combines_buckets_by_le() {
+        let mut a = HistSnapshot { count: 3, sum: 6, buckets: vec![(1, 2), (7, 1)] };
+        let b = HistSnapshot { count: 2, sum: 18, buckets: vec![(3, 1), (15, 1)] };
+        a.merge(&b);
+        assert_eq!(a.count, 5);
+        assert_eq!(a.sum, 24);
+        assert_eq!(a.buckets, vec![(1, 2), (3, 1), (7, 1), (15, 1)]);
+        // overlapping buckets add instead of duplicating
+        let c = HistSnapshot { count: 1, sum: 1, buckets: vec![(1, 1)] };
+        a.merge(&c);
+        assert_eq!(a.buckets, vec![(1, 3), (3, 1), (7, 1), (15, 1)]);
+        // merging an empty reading is a no-op on the buckets
+        let before = a.clone();
+        a.merge(&HistSnapshot { count: 0, sum: 0, buckets: vec![] });
+        assert_eq!(a, before);
     }
 }

@@ -140,6 +140,12 @@ struct ObsInner {
     /// engine). The lock sits on the cold snapshot path only — metric
     /// updates never touch it.
     pool: Mutex<Option<WorkerPool>>,
+    /// Per-replica registries attached by the admission router: each
+    /// engine replica writes into its own `Obs`, and this (front-door)
+    /// registry's snapshot folds them in — aggregated totals at the top
+    /// level plus flat `replica_N_*` families. Empty for a bare engine,
+    /// which keeps the single-registry renderings byte-identical.
+    replicas: Mutex<Vec<Obs>>,
 }
 
 /// Shared handle to one telemetry registry. Clone freely; all clones
@@ -169,6 +175,7 @@ impl Obs {
                 metrics: Metrics::default(),
                 generation: AtomicU64::new(0),
                 pool: Mutex::new(None),
+                replicas: Mutex::new(Vec::new()),
             }),
         }
     }
@@ -189,6 +196,15 @@ impl Obs {
         *self.inner.pool.lock().unwrap() = Some(pool);
     }
 
+    /// Attach the router's per-replica registries (replaces any earlier
+    /// attachment): [`Obs::snapshot`] on this handle then reports
+    /// aggregated totals (counters and non-peak gauges summed, `*_peak`
+    /// gauges maxed, histograms merged) plus a `replica_N_*` family per
+    /// replica, all in one snapshot.
+    pub fn attach_replicas(&self, replicas: Vec<Obs>) {
+        *self.inner.replicas.lock().unwrap() = replicas;
+    }
+
     /// Record one completed phase duration.
     pub fn record_phase(&self, phase: Phase, ns: u64) {
         self.inner.metrics.phase_hist(phase).observe(ns);
@@ -200,7 +216,12 @@ impl Obs {
         PhaseSpan { obs: self, phase, start_ns: self.inner.clock.now_ns() }
     }
 
-    /// A generation-stamped point-in-time reading of every metric.
+    /// A generation-stamped point-in-time reading of every metric. With
+    /// replica registries attached, the top-level values are aggregated
+    /// across this registry and every replica (counters and non-peak
+    /// gauges sum, `*_peak` gauges max, histograms merge bucket-wise),
+    /// and each replica's own reading rides along in
+    /// [`Snapshot::replicas`].
     pub fn snapshot(&self) -> Snapshot {
         let m = &self.inner.metrics;
         let generation = self.inner.generation.fetch_add(1, Ordering::Relaxed) + 1;
@@ -216,44 +237,76 @@ impl Obs {
             .enumerate()
             .map(|(i, (busy_ns, tiles))| WorkerSnap { worker: i, busy_ns, tiles })
             .collect();
-        Snapshot {
-            generation,
-            counters: vec![
-                ("tokens_decoded_total", m.tokens_decoded_total.get()),
-                ("tokens_prefilled_total", m.tokens_prefilled_total.get()),
-                ("steps_total", m.steps_total.get()),
-                ("requests_enqueued_total", m.requests_enqueued_total.get()),
-                ("requests_admitted_total", m.requests_admitted_total.get()),
-                ("requests_finished_total", m.requests_finished_total.get()),
-                ("requests_cancelled_total", m.requests_cancelled_total.get()),
-                ("requests_rejected_total", m.requests_rejected_total.get()),
-                ("cache_evictions_total", m.cache_evictions_total.get()),
-                ("events_dropped_total", m.events_dropped_total.get()),
-                ("ttft_anchor_missing_total", m.ttft_anchor_missing_total.get()),
-                ("net_frames_read_total", m.net_frames_read_total.get()),
-                ("net_bytes_read_total", m.net_bytes_read_total.get()),
-                ("net_frames_written_total", m.net_frames_written_total.get()),
-                ("net_bytes_written_total", m.net_bytes_written_total.get()),
-            ],
-            gauges: vec![
-                ("queue_depth", m.queue_depth.get()),
-                ("queue_depth_peak", m.queue_depth_peak.get()),
-                ("cache_bytes_in_use", m.cache_bytes_in_use.get()),
-                ("cache_bytes_peak", m.cache_bytes_peak.get()),
-                ("connections_open", m.connections_open.get()),
-                ("models_resident", m.models_resident.get()),
-                ("weight_bytes_mapped", m.weight_bytes_mapped.get()),
-            ],
-            hists: {
-                let mut hs = vec![("batch_size", m.batch_size.snapshot())];
-                for p in Phase::ALL {
-                    hs.push((p.metric_name(), m.phase_hist(p).snapshot()));
+        let mut counters = read_counters(m);
+        let mut gauges = read_gauges(m);
+        let mut hists = read_hists(m);
+        let mut replicas = Vec::new();
+        for (i, r) in self.inner.replicas.lock().unwrap().iter().enumerate() {
+            let rm = r.metrics();
+            let (rc, rg, rh) = (read_counters(rm), read_gauges(rm), read_hists(rm));
+            for ((_, total), (_, v)) in counters.iter_mut().zip(&rc) {
+                *total += v;
+            }
+            for ((name, total), (_, v)) in gauges.iter_mut().zip(&rg) {
+                if name.ends_with("_peak") {
+                    // a high watermark across replicas is the worst single
+                    // replica, not the sum of per-replica peaks (the peaks
+                    // need not have coincided in time)
+                    *total = (*total).max(*v);
+                } else {
+                    *total += v;
                 }
-                hs
-            },
-            workers,
+            }
+            for ((_, total), (_, h)) in hists.iter_mut().zip(&rh) {
+                total.merge(h);
+            }
+            replicas.push(ReplicaSnap { replica: i, counters: rc, gauges: rg, hists: rh });
         }
+        Snapshot { generation, counters, gauges, hists, workers, replicas }
     }
+}
+
+/// The fixed counter schema, read in declaration order (shared by the
+/// top-level registry and each attached replica, so aggregation can zip
+/// the vectors index-wise).
+fn read_counters(m: &Metrics) -> Vec<(&'static str, u64)> {
+    vec![
+        ("tokens_decoded_total", m.tokens_decoded_total.get()),
+        ("tokens_prefilled_total", m.tokens_prefilled_total.get()),
+        ("steps_total", m.steps_total.get()),
+        ("requests_enqueued_total", m.requests_enqueued_total.get()),
+        ("requests_admitted_total", m.requests_admitted_total.get()),
+        ("requests_finished_total", m.requests_finished_total.get()),
+        ("requests_cancelled_total", m.requests_cancelled_total.get()),
+        ("requests_rejected_total", m.requests_rejected_total.get()),
+        ("cache_evictions_total", m.cache_evictions_total.get()),
+        ("events_dropped_total", m.events_dropped_total.get()),
+        ("ttft_anchor_missing_total", m.ttft_anchor_missing_total.get()),
+        ("net_frames_read_total", m.net_frames_read_total.get()),
+        ("net_bytes_read_total", m.net_bytes_read_total.get()),
+        ("net_frames_written_total", m.net_frames_written_total.get()),
+        ("net_bytes_written_total", m.net_bytes_written_total.get()),
+    ]
+}
+
+fn read_gauges(m: &Metrics) -> Vec<(&'static str, u64)> {
+    vec![
+        ("queue_depth", m.queue_depth.get()),
+        ("queue_depth_peak", m.queue_depth_peak.get()),
+        ("cache_bytes_in_use", m.cache_bytes_in_use.get()),
+        ("cache_bytes_peak", m.cache_bytes_peak.get()),
+        ("connections_open", m.connections_open.get()),
+        ("models_resident", m.models_resident.get()),
+        ("weight_bytes_mapped", m.weight_bytes_mapped.get()),
+    ]
+}
+
+fn read_hists(m: &Metrics) -> Vec<(&'static str, HistSnapshot)> {
+    let mut hs = vec![("batch_size", m.batch_size.snapshot())];
+    for p in Phase::ALL {
+        hs.push((p.metric_name(), m.phase_hist(p).snapshot()));
+    }
+    hs
 }
 
 /// Drop guard recording a phase duration (see [`Obs::span`]).
@@ -278,6 +331,26 @@ pub struct WorkerSnap {
     pub tiles: u64,
 }
 
+/// One replica's registry reading inside a multi-replica [`Snapshot`]
+/// (same schema as the top-level vectors).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaSnap {
+    pub replica: usize,
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub hists: Vec<(&'static str, HistSnapshot)>,
+}
+
+impl ReplicaSnap {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+}
+
 /// A point-in-time reading of the whole registry. One snapshot feeds all
 /// three sinks: [`Snapshot::to_json`] (the `stats` frame and the
 /// `metrics-snapshot` event) and [`Snapshot::to_prometheus`]
@@ -289,6 +362,10 @@ pub struct Snapshot {
     pub gauges: Vec<(&'static str, u64)>,
     pub hists: Vec<(&'static str, HistSnapshot)>,
     pub workers: Vec<WorkerSnap>,
+    /// Per-replica readings when the router attached replica registries
+    /// ([`Obs::attach_replicas`]); empty for a bare engine. The scalar
+    /// top-level values already aggregate these.
+    pub replicas: Vec<ReplicaSnap>,
 }
 
 impl Snapshot {
@@ -338,6 +415,14 @@ impl Snapshot {
             })
             .collect();
         o.insert("workers".to_string(), Json::Arr(workers));
+        // flat per-replica scalar families (`replica_0_tokens_decoded_total`)
+        // stay as greppable as the aggregated keys; per-replica histograms
+        // are omitted — the merged top-level histograms carry the totals
+        for r in &self.replicas {
+            for (name, v) in r.counters.iter().chain(r.gauges.iter()) {
+                o.insert(format!("replica_{}_{name}", r.replica), Json::Num(*v as f64));
+            }
+        }
         Json::Obj(o)
     }
 
@@ -386,6 +471,16 @@ impl Snapshot {
                 );
             }
         }
+        for r in &self.replicas {
+            for (name, v) in &r.counters {
+                let _ = writeln!(out, "# TYPE sparsegpt_replica_{}_{name} counter", r.replica);
+                let _ = writeln!(out, "sparsegpt_replica_{}_{name} {v}", r.replica);
+            }
+            for (name, v) in &r.gauges {
+                let _ = writeln!(out, "# TYPE sparsegpt_replica_{}_{name} gauge", r.replica);
+                let _ = writeln!(out, "sparsegpt_replica_{}_{name} {v}", r.replica);
+            }
+        }
         out
     }
 }
@@ -423,6 +518,42 @@ mod tests {
         assert_eq!((d.count, d.sum), (1, 1_000));
         assert_eq!(s.hist("phase_prefill_ns").unwrap().buckets, vec![(7, 1)]);
         assert!(s.workers.is_empty(), "no pool attached");
+    }
+
+    #[test]
+    fn attached_replicas_aggregate_and_expose_flat_families() {
+        let front = Obs::new(Clock::mock(1_000));
+        let (r0, r1) = (Obs::new(Clock::mock(1_000)), Obs::new(Clock::mock(1_000)));
+        front.metrics().requests_rejected_total.add(1); // router-side 429
+        r0.metrics().tokens_decoded_total.add(10);
+        r0.metrics().cache_bytes_peak.set_max(100);
+        r0.metrics().batch_size.observe(2);
+        r1.metrics().tokens_decoded_total.add(5);
+        r1.metrics().cache_bytes_peak.set_max(40);
+        r1.metrics().batch_size.observe(2);
+        r1.metrics().batch_size.observe(8);
+        front.attach_replicas(vec![r0, r1]);
+        let s = front.snapshot();
+        // counters sum across the front registry and both replicas
+        assert_eq!(s.counter("tokens_decoded_total"), Some(15));
+        assert_eq!(s.counter("requests_rejected_total"), Some(1));
+        // peak gauges take the worst replica, not the sum
+        assert_eq!(s.gauge("cache_bytes_peak"), Some(100));
+        // histograms merge bucket-wise
+        let b = s.hist("batch_size").unwrap();
+        assert_eq!((b.count, b.sum), (3, 12));
+        assert_eq!(b.buckets, vec![(3, 2), (15, 1)]);
+        // each replica's own reading rides along, flat in both renderings
+        assert_eq!(s.replicas.len(), 2);
+        assert_eq!(s.replicas[0].counter("tokens_decoded_total"), Some(10));
+        assert_eq!(s.replicas[1].counter("tokens_decoded_total"), Some(5));
+        let j = s.to_json().to_string_compact();
+        assert!(j.contains("\"replica_0_tokens_decoded_total\":10"));
+        assert!(j.contains("\"replica_1_tokens_decoded_total\":5"));
+        assert!(j.contains("\"tokens_decoded_total\":15"));
+        let prom = s.to_prometheus();
+        assert!(prom.contains("sparsegpt_replica_0_tokens_decoded_total 10\n"));
+        assert!(prom.contains("sparsegpt_replica_1_cache_bytes_peak 40\n"));
     }
 
     #[test]

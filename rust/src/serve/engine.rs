@@ -80,6 +80,10 @@ pub struct EngineOptions {
     /// emit a [`ServeEvent::MetricsSnapshot`] every n steps and once at
     /// drain (0 = no snapshot events)
     pub snap_every: usize,
+    /// which router replica this engine is (0 for a bare engine): stamped
+    /// into every lifecycle event and [`FinishedRequest`] so a multi-replica
+    /// run's event stream attributes each request to its owner
+    pub replica: usize,
 }
 
 impl Default for EngineOptions {
@@ -93,6 +97,7 @@ impl Default for EngineOptions {
             cache_budget_bytes: 0,
             workers: 0,
             snap_every: 0,
+            replica: 0,
         }
     }
 }
@@ -103,22 +108,22 @@ impl Default for EngineOptions {
 /// `request-rejected` / `engine-drained` JSONL events).
 #[derive(Clone, Debug)]
 pub enum ServeEvent {
-    Enqueued { id: u64, step: usize, prompt_tokens: usize, max_new_tokens: usize },
-    BatchFormed { step: usize, joined: usize, batch: usize },
+    Enqueued { id: u64, step: usize, prompt_tokens: usize, max_new_tokens: usize, replica: usize },
+    BatchFormed { step: usize, joined: usize, batch: usize, replica: usize },
     /// a joiner's chunked prefill pass began populating its KV cache
-    PrefillStarted { id: u64, step: usize, prompt_tokens: usize, chunks: usize },
+    PrefillStarted { id: u64, step: usize, prompt_tokens: usize, chunks: usize, replica: usize },
     /// a request's ring buffer evicted `evicted` positions this step
-    CacheEvicted { id: u64, step: usize, evicted: usize },
+    CacheEvicted { id: u64, step: usize, evicted: usize, replica: usize },
     /// a fleet variant became resident (lazy mmap-backed load at
     /// admission); `mapped` of its `bytes` are served from mapped pages
     ModelLoaded { name: String, step: usize, bytes: u64, mapped: u64 },
     /// the weight-residency budget (LRU) or the drain dropped a variant
     ModelEvicted { name: String, step: usize, bytes: u64 },
-    Finished { id: u64, step: usize, tokens: usize },
+    Finished { id: u64, step: usize, tokens: usize, replica: usize },
     /// the client went away (disconnect or explicit cancel frame): the
     /// request retired early with `tokens` already generated and its cache
     /// reservation returned to the budget
-    Cancelled { id: u64, step: usize, tokens: usize },
+    Cancelled { id: u64, step: usize, tokens: usize, replica: usize },
     /// a submission landed on a full bounded queue and was shed with
     /// 429 semantics instead of blocking the decode loop
     Rejected { id: u64, step: usize, queue: usize, cap: usize },
@@ -134,6 +139,7 @@ pub enum ServeEvent {
         /// cache memory still reserved — always 0 after a clean drain,
         /// including runs with mid-stream disconnects
         cache_bytes_in_use: u64,
+        replica: usize,
     },
 }
 
@@ -145,6 +151,8 @@ pub struct FinishedRequest {
     pub tokens: Vec<i32>,
     pub joined_step: usize,
     pub finished_step: usize,
+    /// router replica that decoded this request (0 for a bare engine)
+    pub replica: usize,
     /// enqueue → first generated token wall time
     pub ttft_secs: f64,
     /// median inter-token gap (0.0 with fewer than two tokens)
@@ -342,7 +350,7 @@ impl Active {
         }
     }
 
-    fn retire_finished(mut self, step: usize) -> FinishedRequest {
+    fn retire_finished(mut self, step: usize, replica: usize) -> FinishedRequest {
         self.gaps.sort_by(|a, b| a.total_cmp(b));
         FinishedRequest {
             id: self.req.id,
@@ -350,6 +358,7 @@ impl Active {
             tokens: self.generated,
             joined_step: self.joined_step,
             finished_step: step,
+            replica,
             ttft_secs: self.ttft_secs,
             gap_p50_secs: percentile_sorted(&self.gaps, 0.50),
             gap_p95_secs: percentile_sorted(&self.gaps, 0.95),
@@ -369,8 +378,11 @@ pub struct ServeEngine<'a> {
     /// caller shares one via [`ServeEngine::with_obs`]
     obs: Obs,
     /// named model variants requests can route to ([`ServeRequest::model`]);
-    /// the mutex serializes lazy loads/evictions against the step loop
-    fleet: Option<Mutex<ModelFleet>>,
+    /// the mutex serializes lazy loads/evictions against the step loop. An
+    /// `Arc` so router replicas can share one registry — mapped pages are
+    /// read-only, so N replicas alias one mapping with zero copy (eviction
+    /// only drops the registry `Arc`; a replica's held model stays valid)
+    fleet: Option<Arc<Mutex<ModelFleet>>>,
 }
 
 impl<'a> ServeEngine<'a> {
@@ -389,7 +401,16 @@ impl<'a> ServeEngine<'a> {
     /// (loaded lazily at admission); unnamed requests keep the default
     /// model, byte-for-byte unaffected.
     pub fn with_fleet(mut self, fleet: ModelFleet) -> ServeEngine<'a> {
-        self.fleet = Some(Mutex::new(fleet));
+        self.fleet = Some(Arc::new(Mutex::new(fleet)));
+        self
+    }
+
+    /// Share an externally owned fleet registry across engines: every
+    /// router replica resolves variants through (and charges the residency
+    /// budget of) the same registry, while the mapped weight pages are
+    /// aliased read-only — N replicas, one copy of the bytes.
+    pub fn with_shared_fleet(mut self, fleet: Arc<Mutex<ModelFleet>>) -> ServeEngine<'a> {
+        self.fleet = Some(fleet);
         self
     }
 
@@ -443,6 +464,7 @@ impl<'a> ServeEngine<'a> {
     ) -> Result<EngineOutcome> {
         let vocab = self.model.cfg.vocab;
         let unit = self.model.cache_bytes();
+        let replica = self.opts.replica;
         let obs = &self.obs;
         let clock = obs.clock().clone();
         let m = obs.metrics();
@@ -482,13 +504,18 @@ impl<'a> ServeEngine<'a> {
                     }
                     cancelled += 1;
                     m.requests_cancelled_total.inc();
-                    on_event(&ServeEvent::Cancelled { id, step, tokens: a.generated.len() });
+                    on_event(&ServeEvent::Cancelled {
+                        id,
+                        step,
+                        tokens: a.generated.len(),
+                        replica,
+                    });
                     source.cancelled(id, a.generated.len());
                 } else if sched.cancel(id) {
                     enqueued_at.remove(&id);
                     cancelled += 1;
                     m.requests_cancelled_total.inc();
-                    on_event(&ServeEvent::Cancelled { id, step, tokens: 0 });
+                    on_event(&ServeEvent::Cancelled { id, step, tokens: 0, replica });
                     source.cancelled(id, 0);
                 }
             }
@@ -528,7 +555,7 @@ impl<'a> ServeEngine<'a> {
                 enqueued_at.insert(id, clock.now_ns());
                 sched.submit(req.clone())?;
                 m.requests_enqueued_total.inc();
-                on_event(&ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens });
+                on_event(&ServeEvent::Enqueued { id, step, prompt_tokens, max_new_tokens, replica });
                 source.accepted(&req);
             }
             // batch formation: joiners ride this very step, capped by the
@@ -559,6 +586,7 @@ impl<'a> ServeEngine<'a> {
                     step,
                     joined: joined.len(),
                     batch: active.len() + joined.len(),
+                    replica,
                 });
                 for req in joined {
                     let t_enq = enqueued_at.remove(&req.id).unwrap_or_else(|| {
@@ -613,6 +641,7 @@ impl<'a> ServeEngine<'a> {
                             step,
                             prompt_tokens: a.ctx.len(),
                             chunks: (a.ctx.len() + chunk - 1) / chunk,
+                            replica,
                         });
                         let t0 = clock.now_ns();
                         let (logits, evicted) =
@@ -625,7 +654,12 @@ impl<'a> ServeEngine<'a> {
                         if evicted > 0 {
                             cache_evictions += evicted;
                             m.cache_evictions_total.add(evicted as u64);
-                            on_event(&ServeEvent::CacheEvicted { id: a.req.id, step, evicted });
+                            on_event(&ServeEvent::CacheEvicted {
+                                id: a.req.id,
+                                step,
+                                evicted,
+                                replica,
+                            });
                         }
                         a.cache = Some(cache);
                         a.pending = Some(logits);
@@ -691,6 +725,7 @@ impl<'a> ServeEngine<'a> {
                                 id: active[i].req.id,
                                 step,
                                 evicted: evictions[row],
+                                replica,
                             });
                         }
                     }
@@ -754,6 +789,7 @@ impl<'a> ServeEngine<'a> {
                         id: a.req.id,
                         step,
                         tokens: a.generated.len(),
+                        replica,
                     });
                     source.cancelled(a.req.id, a.generated.len());
                 } else if active[i].generated.len() >= active[i].req.max_new_tokens {
@@ -767,8 +803,9 @@ impl<'a> ServeEngine<'a> {
                         id: a.req.id,
                         step,
                         tokens: a.generated.len(),
+                        replica,
                     });
-                    let fin = a.retire_finished(step);
+                    let fin = a.retire_finished(step, replica);
                     source.finished(&fin);
                     finished.push(fin);
                 } else {
@@ -823,6 +860,7 @@ impl<'a> ServeEngine<'a> {
             decode_secs: outcome.decode_secs,
             cancelled: outcome.cancelled,
             cache_bytes_in_use: outcome.cache_bytes_in_use,
+            replica,
         });
         Ok(outcome)
     }
@@ -1115,7 +1153,7 @@ mod tests {
         let mut src = SyntheticSource::new(requests(3, 4, 11), vec![(2, 0)]);
         let out = ServeEngine::new(&m, opts)
             .run_source(&mut src, &mut |e| {
-                if let ServeEvent::Cancelled { id, step, tokens } = e {
+                if let ServeEvent::Cancelled { id, step, tokens, .. } = e {
                     cancel_events.push((*id, *step, *tokens));
                 }
             })
@@ -1146,7 +1184,7 @@ mod tests {
         let mut src = SyntheticSource::new(reqs, vec![(2, 1)]);
         let out = ServeEngine::new(&m, opts)
             .run_source(&mut src, &mut |e| {
-                if let ServeEvent::Cancelled { id, step, tokens } = e {
+                if let ServeEvent::Cancelled { id, step, tokens, .. } = e {
                     cancel_events.push((*id, *step, *tokens));
                 }
             })

@@ -25,6 +25,11 @@
 //!   one incremental token per request per step, retire (freeing the
 //!   cache), propagate disconnects as cancellation, narrate lifecycle
 //!   events.
+//! * [`Router`] (`router.rs`) — the admission router: one intake fanned
+//!   out to N engine replicas (each with its own worker pool and KV
+//!   budget slice, sharing read-only mapped weights), least-outstanding-
+//!   tokens routing with sticky request→replica ownership, 429s only
+//!   when every replica's bounded queue is full.
 //! * `net` (`net/`) — the TCP front door: a framed newline-delimited-JSON
 //!   protocol (`net/protocol.rs`), a `std::net` listener with per-connection
 //!   reader threads feeding the engine's intake queue (`net/server.rs`,
@@ -41,6 +46,7 @@ pub mod fleet;
 pub mod kv;
 pub mod model;
 pub mod net;
+pub mod router;
 pub mod scheduler;
 
 pub use engine::{
@@ -50,4 +56,5 @@ pub use engine::{
 pub use fleet::{FleetEvent, ModelFleet};
 pub use kv::{CacheBudget, KvCache};
 pub use model::SparseModel;
+pub use router::{Router, RouterOutcome};
 pub use scheduler::{Scheduler, SchedulerPolicy, ServeRequest, StepLimits};

@@ -33,9 +33,10 @@ pub struct ClientRequest {
 /// Client behavior knobs.
 #[derive(Clone, Debug)]
 pub struct ClientOptions {
-    /// drop the connection cold after this many `token` frames (total,
-    /// across requests) — simulates a client vanishing mid-stream; when
-    /// set, `shutdown` is not sent
+    /// drop the connection cold after *exactly* this many `token` frames
+    /// (total, across requests) — simulates a client vanishing mid-stream;
+    /// `Some(0)` drops right after the submissions are on the wire, before
+    /// any token frame is consumed; when set, `shutdown` is not sent
     pub disconnect_after: Option<usize>,
     /// send a `shutdown` frame once every request resolved (graceful
     /// server drain)
@@ -138,6 +139,16 @@ pub fn run_client(
         reader.stream.write_all(frame.encode().as_bytes()).context("submitting request")?;
     }
 
+    if opts.disconnect_after == Some(0) {
+        // "after zero token frames" means before consuming any: the >= k
+        // check below only runs once a token frame arrived, so 0 would
+        // otherwise behave like 1 (an off-by-one the net-parity golden's
+        // cut point would inherit)
+        out.disconnected = true;
+        let _ = reader.stream.shutdown(Shutdown::Both);
+        return Ok(out);
+    }
+
     let mut unresolved = requests.len();
     let mut tokens_seen = 0usize;
     while unresolved > 0 {
@@ -155,6 +166,8 @@ pub fn run_client(
                     );
                 }
                 stream.push(token);
+                // count the frame *before* the check: the k-th token frame
+                // is consumed, then the socket drops — exactly k frames
                 tokens_seen += 1;
                 if opts.disconnect_after.is_some_and(|k| tokens_seen >= k) {
                     out.disconnected = true;
@@ -304,5 +317,52 @@ mod tests {
         assert_eq!(got.accepted, vec![0]);
         assert_eq!(out.finished.len(), 1);
         assert_eq!(out.cache_bytes_in_use, 0);
+    }
+
+    #[test]
+    fn disconnect_after_cuts_after_exactly_n_token_frames() {
+        // pins the cut point the net-parity golden depends on: --disconnect-
+        // after N consumes exactly N token frames, and N = 0 consumes none
+        let m = model();
+        // uncached decode over a long prompt keeps each step expensive, so
+        // the reader registers the disconnect long before the 64-token
+        // budget could drain into the dead socket
+        let engine_opts =
+            EngineOptions { temperature: 0.0, top_k: 0, kv_cache: false, ..Default::default() };
+        for (k, want_tokens) in [(0usize, 0usize), (3, 3)] {
+            let srv =
+                NetServer::bind("127.0.0.1:0", NetServerOptions::new("net-test".into(), 11))
+                    .unwrap();
+            let addr = srv.local_addr().to_string();
+            let client = std::thread::spawn(move || {
+                let got = run_client(
+                    &addr,
+                    &[ClientRequest {
+                        tag: Some("cut".into()),
+                        prompt: vec![1; 100],
+                        max_new_tokens: 64,
+                        seed: 7,
+                        model: None,
+                    }],
+                    &ClientOptions { disconnect_after: Some(k), ..Default::default() },
+                    &mut |_| {},
+                )
+                .unwrap();
+                // the disconnected socket cannot drain the server: a second
+                // connection sends the shutdown frame
+                send_shutdown(&addr, Duration::from_secs(30)).unwrap();
+                got
+            });
+            let out = srv.serve(&m, engine_opts, &mut |_| {}).unwrap();
+            let got = client.join().unwrap();
+            assert!(got.disconnected, "k={k}: disconnect_after must trip");
+            let streamed: usize = got.streams.values().map(|s| s.len()).sum();
+            assert_eq!(streamed, want_tokens, "k={k}: exactly k token frames consumed");
+            // server side: the vanished client retired as a cancellation,
+            // never a finish, and the drain returned the budget
+            assert_eq!(out.finished.len(), 0, "k={k}");
+            assert_eq!(out.cancelled, 1, "k={k}");
+            assert_eq!(out.cache_bytes_in_use, 0, "k={k}");
+        }
     }
 }

@@ -34,7 +34,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -48,6 +48,7 @@ use crate::serve::fleet::ModelFleet;
 use crate::serve::model::SparseModel;
 use crate::serve::net::conn::Conn;
 use crate::serve::net::protocol::{ClientFrame, FrameDecoder, ServerFrame};
+use crate::serve::router::Router;
 use crate::serve::scheduler::ServeRequest;
 
 /// Front-door knobs (the engine's own knobs stay in [`EngineOptions`]).
@@ -247,6 +248,10 @@ pub struct NetServer {
     local: SocketAddr,
     intake: Arc<Intake>,
     opts: NetServerOptions,
+    /// most reader-thread handles the accept loop ever held at once —
+    /// pins the opportunistic reaping of finished readers (a long-lived
+    /// server must not accumulate handles across short-lived connections)
+    reader_peak: Arc<AtomicUsize>,
 }
 
 impl NetServer {
@@ -256,7 +261,13 @@ impl NetServer {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
         let local = listener.local_addr().context("reading bound address")?;
-        Ok(NetServer { listener, local, intake: Arc::new(Intake::new()), opts })
+        Ok(NetServer {
+            listener,
+            local,
+            intake: Arc::new(Intake::new()),
+            opts,
+            reader_peak: Arc::new(AtomicUsize::new(0)),
+        })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -285,6 +296,48 @@ impl NetServer {
         fleet: Option<ModelFleet>,
         on_event: &mut dyn FnMut(&ServeEvent),
     ) -> Result<EngineOutcome> {
+        self.with_accept_loop(|source, obs| {
+            let mut engine = ServeEngine::new(model, engine_opts).with_obs(obs);
+            if let Some(f) = fleet {
+                engine = engine.with_fleet(f);
+            }
+            engine.run_source(source, on_event)
+        })
+    }
+
+    /// [`NetServer::serve_with_fleet`] fanned out over `replicas` engine
+    /// replicas behind the admission [`Router`]: the intake load-balances
+    /// by least outstanding tokens, sticky cancels reach the owning
+    /// replica, and a submission is rejected only when every replica's
+    /// bounded queue is full. `replicas <= 1` keeps the bare engine path.
+    pub fn serve_router(
+        &self,
+        model: &SparseModel,
+        engine_opts: EngineOptions,
+        replicas: usize,
+        fleet: Option<ModelFleet>,
+        on_event: &mut dyn FnMut(&ServeEvent),
+    ) -> Result<EngineOutcome> {
+        if replicas <= 1 {
+            return self.serve_with_fleet(model, engine_opts, fleet, on_event);
+        }
+        self.with_accept_loop(|source, obs| {
+            let mut router = Router::new(model, engine_opts, replicas).with_obs(obs);
+            if let Some(f) = fleet {
+                router = router.with_fleet(f);
+            }
+            router.run_source(source, on_event).map(|o| o.total)
+        })
+    }
+
+    /// Shared serve scaffold: spin up the accept thread, hand the
+    /// [`NetSource`] to `run` on the caller's thread, then the drain
+    /// epilogue — stop accepting, close every connection so its reader
+    /// unblocks, and join the whole thread tree.
+    fn with_accept_loop(
+        &self,
+        run: impl FnOnce(&mut NetSource, Obs) -> Result<EngineOutcome>,
+    ) -> Result<EngineOutcome> {
         self.listener.set_nonblocking(true).context("nonblocking listener")?;
         let obs = self.opts.obs.clone().unwrap_or_default();
         let done = Arc::new(AtomicBool::new(false));
@@ -294,18 +347,13 @@ impl NetServer {
             let opts = self.opts.clone();
             let done = done.clone();
             let obs = obs.clone();
-            std::thread::spawn(move || accept_loop(listener, intake, opts, done, obs))
+            let reader_peak = self.reader_peak.clone();
+            std::thread::spawn(move || accept_loop(listener, intake, opts, done, obs, reader_peak))
         };
 
         let mut source = NetSource::new(self.intake.clone(), self.opts.idle_wait);
-        let mut engine = ServeEngine::new(model, engine_opts).with_obs(obs);
-        if let Some(f) = fleet {
-            engine = engine.with_fleet(f);
-        }
-        let outcome = engine.run_source(&mut source, on_event);
+        let outcome = run(&mut source, obs);
 
-        // drain epilogue: stop accepting, close every connection so its
-        // reader unblocks, and join the whole thread tree
         done.store(true, Ordering::SeqCst);
         let conns: Vec<Arc<Conn>> = {
             let mut st = self.intake.state.lock().expect("intake lock");
@@ -326,10 +374,24 @@ fn accept_loop(
     opts: NetServerOptions,
     done: Arc<AtomicBool>,
     obs: Obs,
+    reader_peak: Arc<AtomicUsize>,
 ) {
-    let mut readers = Vec::new();
+    let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let mut next_conn = 0u64;
     while !done.load(Ordering::SeqCst) {
+        // reap finished readers each tick: joining here keeps the handle
+        // list proportional to *live* connections, not to every connection
+        // the server ever accepted (join consumes the handle, so this is a
+        // swap_remove sweep rather than a retain)
+        let mut i = 0;
+        while i < readers.len() {
+            if readers[i].is_finished() {
+                let _ = readers.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+        reader_peak.fetch_max(readers.len(), Ordering::Relaxed);
         match listener.accept() {
             Ok((stream, _peer)) => {
                 // accepted sockets do not inherit the listener's
@@ -358,6 +420,7 @@ fn accept_loop(
                 readers.push(std::thread::spawn(move || {
                     reader_loop(conn, stream, intake, vocab, obs)
                 }));
+                reader_peak.fetch_max(readers.len(), Ordering::Relaxed);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
@@ -543,6 +606,56 @@ mod tests {
         assert_eq!(out.cancelled, 0);
         assert_eq!(drained, 1);
         assert_eq!(out.cache_bytes_in_use, 0);
+    }
+
+    #[test]
+    fn sequential_connections_keep_the_reader_handle_list_bounded() {
+        // regression: accept_loop used to push every reader handle and only
+        // join at drain, so 100 short-lived connections left 100 finished
+        // handles resident; opportunistic reaping must keep the list
+        // proportional to live connections
+        let m = model();
+        let srv = NetServer::bind("127.0.0.1:0", NetServerOptions::new("net-test".into(), 11))
+            .unwrap();
+        let addr = srv.local_addr();
+        let peak = srv.reader_peak.clone();
+        let client = std::thread::spawn(move || {
+            let await_hello = |s: &mut TcpStream| {
+                s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                let mut dec = FrameDecoder::new();
+                let mut buf = [0u8; 256];
+                loop {
+                    let n = stream_read(s, &mut buf);
+                    if let Some(line) = dec.push(&buf[..n]).unwrap().into_iter().next() {
+                        let f = ServerFrame::parse(&line).unwrap();
+                        assert!(matches!(f, ServerFrame::Hello { .. }));
+                        return;
+                    }
+                }
+            };
+            for _ in 0..100 {
+                let mut s = TcpStream::connect(addr).unwrap();
+                await_hello(&mut s);
+                // drop cold: the reader sees EOF and exits
+            }
+            let mut s = TcpStream::connect(addr).unwrap();
+            await_hello(&mut s);
+            std::io::Write::write_all(&mut s, ClientFrame::Shutdown.encode().as_bytes())
+                .unwrap();
+        });
+        srv.serve(
+            &m,
+            EngineOptions { temperature: 0.0, top_k: 0, ..Default::default() },
+            &mut |_| {},
+        )
+        .unwrap();
+        client.join().unwrap();
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(
+            peak <= 16,
+            "reader handle list must stay bounded across 100 sequential \
+             connections (peaked at {peak})"
+        );
     }
 
     #[test]

@@ -1,0 +1,539 @@
+//! The admission router: one intake fanned out to N [`ServeEngine`]
+//! replicas, each on its own thread with a private worker pool, a private
+//! KV [`CacheBudget`] slice, and shared read-only weights (the borrowed
+//! [`SparseModel`] plus an optional `Arc`-shared [`ModelFleet`] — mapped
+//! `.spkt` pages are immutable, so every replica aliases one mapping with
+//! zero copy).
+//!
+//! The seam is [`RequestSource`]: to a replica engine, the router is just
+//! another source; to the outer source (TCP [`NetSource`] or a synthetic
+//! workload), the router looks like one big engine. The dispatcher runs on
+//! the caller's thread — the outer source and the event sink are `&mut`
+//! and never leave it — and talks to replica threads through two tiny
+//! lock+condvar queues:
+//!
+//! * **downstream** (per replica): pending requests, pending cancels, and
+//!   the closed flag, plus a *capacity hint* the replica refreshes at
+//!   every poll (its bounded queue's free space minus what the router
+//!   already sent). The dispatcher only routes to replicas with a
+//!   positive hint, so engine-side capacity rejections never fire under
+//!   the router.
+//! * **upstream** (shared): lifecycle events and result-hook calls
+//!   (accepted / token / finished / cancelled), relayed in order so the
+//!   caller's sink and source observe a single serialized stream.
+//!
+//! Routing policy: **least outstanding tokens** — each replica's load is
+//! the sum of `max_new_tokens` still unproduced across requests it owns —
+//! with FIFO tie-break (lowest replica index wins). Ownership is sticky:
+//! the request→replica map routes cancels and dead-client disconnects to
+//! the owning replica. Backpressure stays 429-shaped: a submission is
+//! rejected only when *every* replica's hint is zero.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::obs::Obs;
+use crate::serve::engine::{
+    EngineOptions, EngineOutcome, FinishedRequest, RequestSource, ServeEngine, ServeEvent,
+    SyntheticSource,
+};
+use crate::serve::fleet::ModelFleet;
+use crate::serve::model::SparseModel;
+use crate::serve::scheduler::ServeRequest;
+
+/// How long a parked side (replica intake or dispatcher relay) sleeps
+/// before re-checking its queue — short enough that drain latency is
+/// invisible, long enough that idle replicas cost ~nothing.
+const PARK: Duration = Duration::from_millis(1);
+
+/// What a drained router run produced: the aggregated totals plus each
+/// replica's own [`EngineOutcome`] (the differential suites pin
+/// per-replica invariants like `cache_bytes_in_use == 0`).
+#[derive(Clone, Debug)]
+pub struct RouterOutcome {
+    /// Totals across replicas: `finished` concatenated (sorted by id),
+    /// token/cancel/reject counts summed, wall-clock fields (`steps`,
+    /// `decode_secs`, `prefill_secs`) taken as the max since replicas run
+    /// in parallel — which is what lets `tokens_per_sec` show scale-out.
+    pub total: EngineOutcome,
+    /// Outcome of replica `i` at index `i`.
+    pub per_replica: Vec<EngineOutcome>,
+}
+
+/// Admission router over N engine replicas. Construction mirrors
+/// [`ServeEngine`]: borrow the model, take the per-replica
+/// [`EngineOptions`] template, optionally share a fleet and an [`Obs`].
+pub struct Router<'a> {
+    model: &'a SparseModel,
+    opts: EngineOptions,
+    replicas: usize,
+    fleet: Option<Arc<Mutex<ModelFleet>>>,
+    /// front-door registry: router-level 429s/cancels land here, and the
+    /// per-replica registries are attached so one snapshot reports
+    /// aggregated totals plus `replica_N_*` families
+    obs: Obs,
+}
+
+impl<'a> Router<'a> {
+    /// `opts` is the template every replica runs with, except:
+    /// `opts.replica` is overwritten with the replica index, and
+    /// `opts.cache_budget_bytes` is treated as the *total* budget, split
+    /// evenly — N replicas never hold more cache than one engine with the
+    /// same setting would (a 1-replica router gets the whole budget,
+    /// preserving parity with the bare engine).
+    pub fn new(model: &'a SparseModel, opts: EngineOptions, replicas: usize) -> Router<'a> {
+        Router { model, opts, replicas: replicas.max(1), fleet: None, obs: Obs::default() }
+    }
+
+    /// Share one [`ModelFleet`] registry across all replicas (wrapped for
+    /// sharing; see [`ServeEngine::with_shared_fleet`]).
+    pub fn with_fleet(mut self, fleet: ModelFleet) -> Router<'a> {
+        self.fleet = Some(Arc::new(Mutex::new(fleet)));
+        self
+    }
+
+    pub fn with_shared_fleet(mut self, fleet: Arc<Mutex<ModelFleet>>) -> Router<'a> {
+        self.fleet = Some(fleet);
+        self
+    }
+
+    /// Share the front-door [`Obs`]. Each replica still gets a private
+    /// registry (same clock); [`Router::run_source`] attaches them here so
+    /// the caller's snapshot carries the aggregate and the `replica_N_*`
+    /// families.
+    pub fn with_obs(mut self, obs: Obs) -> Router<'a> {
+        self.obs = obs;
+        self
+    }
+
+    /// Convenience mirror of [`ServeEngine::run`]: a preloaded synthetic
+    /// workload routed across the replicas.
+    pub fn run(
+        &self,
+        incoming: Vec<(usize, ServeRequest)>,
+        on_event: &mut dyn FnMut(&ServeEvent),
+    ) -> Result<RouterOutcome> {
+        self.run_source(&mut SyntheticSource::new(incoming, Vec::new()), on_event)
+    }
+
+    /// Drain the outer source through the replica fleet. Replica threads
+    /// are scoped to this call; the outer `source` and `on_event` only
+    /// ever run on the caller's thread.
+    pub fn run_source(
+        &self,
+        source: &mut dyn RequestSource,
+        on_event: &mut dyn FnMut(&ServeEvent),
+    ) -> Result<RouterOutcome> {
+        let n = self.replicas;
+        let queue_cap = self.opts.policy.queue_cap.max(1);
+        let per_replica_budget = self.opts.cache_budget_bytes / n as u64;
+        let replica_obs: Vec<Obs> =
+            (0..n).map(|_| Obs::new(self.obs.clock().clone())).collect();
+        self.obs.attach_replicas(replica_obs.clone());
+        let downstream: Vec<Downstream> = (0..n).map(|_| Downstream::new(queue_cap)).collect();
+        let relay = Relay::default();
+
+        let mut dispatch = Dispatcher {
+            downstream: &downstream,
+            relay: &relay,
+            hints: vec![queue_cap; n],
+            outstanding: vec![0; n],
+            dead: vec![false; n],
+            live: HashMap::new(),
+            done: 0,
+            queue_cap,
+            router_cancelled: 0,
+            router_rejected: 0,
+            intake_closed: false,
+        };
+
+        let outcomes: Vec<Result<EngineOutcome>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .map(|i| {
+                    let mut opts = self.opts;
+                    opts.replica = i;
+                    opts.cache_budget_bytes = per_replica_budget;
+                    let robs = replica_obs[i].clone();
+                    let fleet = self.fleet.clone();
+                    let (down, relay) = (&downstream[i], &relay);
+                    scope.spawn(move || {
+                        let mut engine = ServeEngine::new(self.model, opts).with_obs(robs);
+                        if let Some(f) = fleet {
+                            engine = engine.with_shared_fleet(f);
+                        }
+                        let mut src = ReplicaSource { down, relay };
+                        let out = engine
+                            .run_source(&mut src, &mut |ev| relay.push(Feedback::Event(ev.clone())));
+                        // always announce — the dispatcher must not wait on
+                        // a replica that died early
+                        relay.push(Feedback::Done(i));
+                        out
+                    })
+                })
+                .collect();
+
+            dispatch.run(source, on_event, &self.obs);
+
+            handles.into_iter().map(|h| h.join().expect("replica thread panicked")).collect()
+        });
+
+        let mut per_replica = Vec::with_capacity(n);
+        for out in outcomes {
+            per_replica.push(out?);
+        }
+        let total = aggregate(&per_replica, dispatch.router_rejected, dispatch.router_cancelled);
+        Ok(RouterOutcome { total, per_replica })
+    }
+}
+
+/// Totals across replicas; see [`RouterOutcome::total`] for the
+/// sum-vs-max conventions.
+fn aggregate(per_replica: &[EngineOutcome], rejected: usize, cancelled: usize) -> EngineOutcome {
+    let mut finished: Vec<FinishedRequest> =
+        per_replica.iter().flat_map(|o| o.finished.iter().cloned()).collect();
+    finished.sort_by_key(|f| f.id);
+    EngineOutcome {
+        finished,
+        steps: per_replica.iter().map(|o| o.steps).max().unwrap_or(0),
+        tokens: per_replica.iter().map(|o| o.tokens).sum(),
+        cancelled: cancelled + per_replica.iter().map(|o| o.cancelled).sum::<usize>(),
+        rejected: rejected + per_replica.iter().map(|o| o.rejected).sum::<usize>(),
+        decode_secs: per_replica.iter().map(|o| o.decode_secs).fold(0.0, f64::max),
+        prefill_secs: per_replica.iter().map(|o| o.prefill_secs).fold(0.0, f64::max),
+        prefill_tokens: per_replica.iter().map(|o| o.prefill_tokens).sum(),
+        cache_evictions: per_replica.iter().map(|o| o.cache_evictions).sum(),
+        peak_cache_bytes: per_replica.iter().map(|o| o.peak_cache_bytes).sum(),
+        cache_bytes_in_use: per_replica.iter().map(|o| o.cache_bytes_in_use).sum(),
+    }
+}
+
+/// Dispatcher → replica queue: requests routed to this replica, cancels
+/// for requests it owns, and the drain flag.
+struct DownState {
+    pending: VecDeque<ServeRequest>,
+    cancels: Vec<u64>,
+    closed: bool,
+    /// how many more requests the dispatcher may push right now without
+    /// overflowing this replica's bounded queue; refreshed by the replica
+    /// at every poll, decremented by both sides as requests are routed
+    hint: usize,
+}
+
+struct Downstream {
+    state: Mutex<DownState>,
+    cv: Condvar,
+}
+
+impl Downstream {
+    fn new(queue_cap: usize) -> Downstream {
+        Downstream {
+            state: Mutex::new(DownState {
+                pending: VecDeque::new(),
+                cancels: Vec::new(),
+                closed: false,
+                hint: queue_cap,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push_request(&self, req: ServeRequest) {
+        let mut s = self.state.lock().unwrap();
+        s.pending.push_back(req);
+        s.hint = s.hint.saturating_sub(1);
+        self.cv.notify_one();
+    }
+
+    /// Deliver a cancel for a request this replica owns. A request still
+    /// sitting in `pending` (the engine has not polled it yet) is yanked
+    /// here instead — returns true, and the dispatcher retires it as
+    /// cancelled-at-zero-tokens itself.
+    fn push_cancel(&self, id: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if let Some(pos) = s.pending.iter().position(|r| r.id == id) {
+            s.pending.remove(pos);
+            s.hint += 1;
+            return true;
+        }
+        s.cancels.push(id);
+        self.cv.notify_one();
+        false
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_one();
+    }
+}
+
+/// Replica → dispatcher relay: one shared in-order queue of lifecycle
+/// events and result-hook calls.
+enum Feedback {
+    Event(ServeEvent),
+    Accepted(ServeRequest),
+    Rejected(ServeRequest, usize, usize),
+    Token { id: u64, index: usize, token: i32 },
+    Finished(Box<FinishedRequest>),
+    Cancelled { id: u64, tokens: usize },
+    /// replica `i`'s run returned (ok or err) — nothing follows from it
+    Done(usize),
+}
+
+#[derive(Default)]
+struct Relay {
+    q: Mutex<VecDeque<Feedback>>,
+    cv: Condvar,
+}
+
+impl Relay {
+    fn push(&self, fb: Feedback) {
+        self.q.lock().unwrap().push_back(fb);
+        self.cv.notify_one();
+    }
+
+    /// Everything queued right now; parks up to [`PARK`] when empty.
+    fn drain(&self) -> Vec<Feedback> {
+        let mut q = self.q.lock().unwrap();
+        if q.is_empty() {
+            q = self.cv.wait_timeout(q, PARK).unwrap().0;
+        }
+        q.drain(..).collect()
+    }
+}
+
+/// The [`RequestSource`] a replica engine drains: pulls from its
+/// [`Downstream`] queue, relays every result hook upstream. `token`
+/// always answers reachable — dead clients come back asynchronously as a
+/// cancel from the dispatcher, which the engine retires next step.
+struct ReplicaSource<'x> {
+    down: &'x Downstream,
+    relay: &'x Relay,
+}
+
+impl RequestSource for ReplicaSource<'_> {
+    fn poll(&mut self, _step: usize, queue_free: usize) -> Vec<ServeRequest> {
+        let mut s = self.down.state.lock().unwrap();
+        let take = queue_free.min(s.pending.len());
+        let out: Vec<ServeRequest> = s.pending.drain(..take).collect();
+        s.hint = queue_free.saturating_sub(take + s.pending.len());
+        out
+    }
+
+    fn take_cancelled(&mut self, _step: usize) -> Vec<u64> {
+        std::mem::take(&mut self.down.state.lock().unwrap().cancels)
+    }
+
+    fn closed(&self) -> bool {
+        let s = self.down.state.lock().unwrap();
+        s.closed && s.pending.is_empty() && s.cancels.is_empty()
+    }
+
+    fn accepted(&mut self, req: &ServeRequest) {
+        self.relay.push(Feedback::Accepted(req.clone()));
+    }
+
+    fn rejected(&mut self, req: &ServeRequest, queue: usize, cap: usize) {
+        self.relay.push(Feedback::Rejected(req.clone(), queue, cap));
+    }
+
+    fn token(&mut self, id: u64, index: usize, token: i32) -> bool {
+        self.relay.push(Feedback::Token { id, index, token });
+        true
+    }
+
+    fn finished(&mut self, fin: &FinishedRequest) {
+        self.relay.push(Feedback::Finished(Box::new(fin.clone())));
+    }
+
+    fn cancelled(&mut self, id: u64, tokens: usize) {
+        self.relay.push(Feedback::Cancelled { id, tokens });
+    }
+
+    fn idle(&mut self) {
+        let s = self.down.state.lock().unwrap();
+        if s.pending.is_empty() && s.cancels.is_empty() && !s.closed {
+            let _ = self.down.cv.wait_timeout(s, PARK).unwrap();
+        }
+    }
+}
+
+/// The caller-thread half: routes intake, relays feedback to the outer
+/// source and event sink, tracks sticky ownership and per-replica load.
+struct Dispatcher<'x> {
+    downstream: &'x [Downstream],
+    relay: &'x Relay,
+    /// local copy of each replica's capacity hint, refreshed every tick
+    hints: Vec<usize>,
+    /// tokens still unproduced across requests each replica owns
+    outstanding: Vec<usize>,
+    /// replicas whose run returned while intake was still open (an error
+    /// drain) — never routed to again
+    dead: Vec<bool>,
+    /// sticky ownership: id → (replica, tokens still unproduced)
+    live: HashMap<u64, (usize, usize)>,
+    done: usize,
+    queue_cap: usize,
+    router_cancelled: usize,
+    router_rejected: usize,
+    intake_closed: bool,
+}
+
+impl Dispatcher<'_> {
+    fn run(
+        &mut self,
+        source: &mut dyn RequestSource,
+        on_event: &mut dyn FnMut(&ServeEvent),
+        obs: &Obs,
+    ) {
+        let n = self.downstream.len();
+        let mut tick = 0usize;
+        loop {
+            let mut progressed = false;
+            for fb in self.relay.drain() {
+                progressed = true;
+                self.feedback(fb, tick, source, on_event);
+            }
+            if self.done == n {
+                break;
+            }
+            // sticky cancellation: the outer source's cancels go to the
+            // owning replica; ids the router never routed are no-ops
+            for id in source.take_cancelled(tick) {
+                progressed = true;
+                if let Some(&(r, _)) = self.live.get(&id) {
+                    if self.downstream[r].push_cancel(id) {
+                        // still queued router-side: retire it here — the
+                        // engine never saw it, so the dispatcher owns the
+                        // lifecycle narration
+                        self.remove_live(id);
+                        self.router_cancelled += 1;
+                        obs.metrics().requests_cancelled_total.inc();
+                        on_event(&ServeEvent::Cancelled { id, step: tick, tokens: 0, replica: r });
+                        source.cancelled(id, 0);
+                    }
+                }
+            }
+            // refresh capacity hints: the shared copy is authoritative —
+            // it is debited on every push and recomputed at every replica
+            // poll, so it can never promise more than the bounded queue
+            // can take (the local copy only tracks intra-tick routing)
+            for (i, d) in self.downstream.iter().enumerate() {
+                self.hints[i] = if self.dead[i] { 0 } else { d.state.lock().unwrap().hint };
+            }
+            let free: usize = self.hints.iter().sum();
+            for req in source.poll(tick, free) {
+                progressed = true;
+                match self.pick_replica() {
+                    Some(r) => {
+                        self.hints[r] -= 1;
+                        self.outstanding[r] += req.max_new_tokens;
+                        self.live.insert(req.id, (r, req.max_new_tokens));
+                        self.downstream[r].push_request(req);
+                        // Accepted/Enqueued narration arrives upstream once
+                        // the owning engine admits it to its bounded queue
+                    }
+                    None => {
+                        // every replica's queue is full: 429, never block
+                        self.router_rejected += 1;
+                        obs.metrics().requests_rejected_total.inc();
+                        let cap = self.queue_cap * n;
+                        on_event(&ServeEvent::Rejected { id: req.id, step: tick, queue: cap, cap });
+                        source.rejected(&req, cap, cap);
+                    }
+                }
+            }
+            // drain: intake closed and every routed request retired →
+            // release the replicas (their own drain condition is a closed
+            // flag plus empty queues)
+            if !self.intake_closed && source.closed() && self.live.is_empty() {
+                self.intake_closed = true;
+                for d in self.downstream {
+                    d.close();
+                }
+            }
+            if !progressed {
+                source.idle();
+            }
+            tick += 1;
+        }
+    }
+
+    /// Least outstanding tokens among replicas with queue headroom, FIFO
+    /// tie-break (lowest index).
+    fn pick_replica(&self) -> Option<usize> {
+        (0..self.downstream.len())
+            .filter(|&i| self.hints[i] > 0 && !self.dead[i])
+            .min_by_key(|&i| (self.outstanding[i], i))
+    }
+
+    fn remove_live(&mut self, id: u64) {
+        if let Some((r, remaining)) = self.live.remove(&id) {
+            self.outstanding[r] = self.outstanding[r].saturating_sub(remaining);
+        }
+    }
+
+    fn feedback(
+        &mut self,
+        fb: Feedback,
+        tick: usize,
+        source: &mut dyn RequestSource,
+        on_event: &mut dyn FnMut(&ServeEvent),
+    ) {
+        match fb {
+            Feedback::Event(ev) => on_event(&ev),
+            Feedback::Accepted(req) => source.accepted(&req),
+            Feedback::Rejected(req, queue, cap) => {
+                // engine-side shed (unknown model name; capacity sheds
+                // can't fire under the hint discipline): ownership ends
+                self.remove_live(req.id);
+                source.rejected(&req, queue, cap);
+            }
+            Feedback::Token { id, index, token } => {
+                if let Some(e) = self.live.get_mut(&id) {
+                    e.1 = e.1.saturating_sub(1);
+                    self.outstanding[e.0] = self.outstanding[e.0].saturating_sub(1);
+                }
+                if !source.token(id, index, token) {
+                    // dead client: route the disconnect to the owner; the
+                    // engine retires it as cancelled next step (a token
+                    // came from the decode batch, so the request cannot
+                    // still be sitting in the pending queue)
+                    if let Some(&(r, _)) = self.live.get(&id) {
+                        let _ = self.downstream[r].push_cancel(id);
+                    }
+                }
+            }
+            Feedback::Finished(fin) => {
+                self.remove_live(fin.id);
+                source.finished(&fin);
+            }
+            Feedback::Cancelled { id, tokens } => {
+                self.remove_live(id);
+                source.cancelled(id, tokens);
+            }
+            Feedback::Done(i) => {
+                self.done += 1;
+                // a replica that returned while intake is still open died
+                // on an error: stop routing to it and drop the requests it
+                // owned from the live map, so the drain condition can
+                // still be met and the other replicas still release
+                if !self.intake_closed {
+                    self.dead[i] = true;
+                    self.hints[i] = 0;
+                    let orphans: Vec<u64> = self
+                        .live
+                        .iter()
+                        .filter(|(_, &(r, _))| r == i)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    for id in orphans {
+                        self.remove_live(id);
+                    }
+                }
+            }
+        }
+    }
+}

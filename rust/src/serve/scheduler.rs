@@ -178,7 +178,12 @@ impl Scheduler {
         if free == 0 || self.queue.is_empty() {
             return Vec::new();
         }
-        let partial = self.queue.len() < self.policy.max_batch;
+        // "partial" is judged against the *effective* cap for this step:
+        // when the cache budget caps the batch below max_batch, a queue
+        // that fills the capped batch is as full as this step can get —
+        // waiting max_wait steps for a max_batch it can never form would
+        // just burn idle steps
+        let partial = self.queue.len() < free;
         if active == 0 && partial && self.waited < self.policy.max_wait {
             // idle engine, partial batch: hold for up to max_wait steps
             self.waited += 1;
@@ -378,6 +383,27 @@ mod tests {
         assert_eq!(s.admit(0, &lim).len(), 2, "5 + 5 fills the 10-token limit");
         // and None really is unconstrained: the rest joins at once
         assert_eq!(s.admit(2, &StepLimits::unlimited()).len(), 1);
+    }
+
+    #[test]
+    fn cache_capped_full_batch_launches_immediately() {
+        // regression: `partial` compared queue.len() against max_batch even
+        // when cache_slots already capped the step below it — an idle
+        // engine whose queue filled the *cache-capped* batch burned
+        // max_wait steps waiting for a full max_batch it could never form
+        let mut s = Scheduler::new(policy(4, 3, 16));
+        s.submit(req(0)).unwrap();
+        s.submit(req(1)).unwrap();
+        let lim = StepLimits { prefill_tokens: None, cache_slots: Some(2) };
+        let batch = s.admit(0, &lim);
+        assert_eq!(
+            batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1],
+            "two queued fill the two cache slots: launch now, no idle wait"
+        );
+        // a queue that does NOT fill the capped batch still waits
+        s.submit(req(2)).unwrap();
+        assert!(s.admit(0, &lim).is_empty(), "one of two slots: idle wait holds");
     }
 
     #[test]

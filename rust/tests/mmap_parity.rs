@@ -222,7 +222,7 @@ fn mapped_model_serves_identical_token_streams_to_owned_model() {
                 prefill_chunk: [0, 1, 2, 5][rng.below(4)],
                 cache_budget_bytes: [0, m_owned.cache_bytes()][rng.below(2)],
                 kv_cache: true,
-                workers: 0,
+                ..EngineOptions::default()
             };
             assert_eq!(
                 token_streams(&m_mapped, opts, reqs.clone()),

@@ -219,7 +219,7 @@ fn quantized_cached_decode_matches_reforward_through_the_engine() {
                     prefill_chunk: [0, 1, 2, 5][rng.below(4)],
                     cache_budget_bytes: [0, model.cache_bytes()][rng.below(2)],
                     kv_cache: true,
-                    workers: 0,
+                    ..EngineOptions::default()
                 };
                 let cached = token_streams(&model, base, reqs.clone());
                 let uncached =

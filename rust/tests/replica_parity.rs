@@ -1,0 +1,317 @@
+//! Differential suite for the admission router: **putting a router in
+//! front of the engine must never change what any request decodes.**
+//!
+//! * A 1-replica [`Router`] is token-for-token identical to the bare
+//!   [`ServeEngine`] across packed formats (dense / CSR / quantized n:m) —
+//!   the router only relocates the admission decision, and per-request
+//!   streams depend on nothing but prompt and seed.
+//! * An N-replica drain returns every replica's `CacheBudget` to exactly
+//!   zero — the per-replica budget split leaks nothing.
+//! * Chaos: a burst of clients against 2 replicas where one client
+//!   disconnects mid-stream and both bounded queues are full at admission
+//!   time. Cancellation lands on the owning replica (sticky routing), 429s
+//!   are shaped as fleet-wide capacity, and the drain is clean.
+
+use std::collections::BTreeMap;
+
+use sparsegpt::model::init::init_params;
+use sparsegpt::model::layout::{FlatParams, PRUNABLE_KINDS};
+use sparsegpt::model::ModelCfg;
+use sparsegpt::serve::{
+    EngineOptions, RequestSource, Router, SchedulerPolicy, ServeEngine, ServeEvent, ServeRequest,
+    SparseModel,
+};
+use sparsegpt::solver::magnitude::{magnitude_prune, magnitude_prune_nm};
+use sparsegpt::sparse::{PackFormat, PackPolicy};
+use sparsegpt::util::prng::Rng;
+
+const TRIALS: u64 = 4;
+
+fn cfg() -> ModelCfg {
+    ModelCfg::from_dims("replica-parity", 8, 2, 2, 1, 1, 13, 6)
+}
+
+/// Prune every prunable linear of a fresh model with `f`.
+fn pruned_params(
+    cfg: &ModelCfg,
+    seed: u64,
+    f: impl Fn(&sparsegpt::tensor::Tensor) -> sparsegpt::tensor::Tensor,
+) -> FlatParams {
+    let mut fp = init_params(cfg, seed);
+    for layer in 0..cfg.layers {
+        for kind in PRUNABLE_KINDS {
+            let w = f(&fp.get_linear(kind, layer).unwrap());
+            fp.set_linear(kind, layer, &w).unwrap();
+        }
+    }
+    fp
+}
+
+/// One model per packed format the issue pins: dense, CSR, quantized n:m.
+fn models() -> Vec<(&'static str, SparseModel)> {
+    let cfg = cfg();
+    let unstructured = pruned_params(&cfg, 3, |w| magnitude_prune(w, 0.5).0);
+    let nm = pruned_params(&cfg, 4, |w| magnitude_prune_nm(w, 2, 4).0);
+    vec![
+        (
+            "dense",
+            SparseModel::from_params(&unstructured, &PackPolicy::with_format(PackFormat::Dense))
+                .unwrap(),
+        ),
+        (
+            "csr",
+            SparseModel::from_params(&unstructured, &PackPolicy::with_format(PackFormat::Csr))
+                .unwrap(),
+        ),
+        (
+            "qnm-8",
+            SparseModel::from_params(
+                &nm,
+                &PackPolicy::with_format(PackFormat::QNm { bits: 8, group: 0 }),
+            )
+            .unwrap(),
+        ),
+    ]
+}
+
+/// Random workload: mixed prompt lengths (past the attention window, so
+/// prefill evicts), staggered arrivals, mixed token budgets.
+fn workload(rng: &mut Rng, vocab: usize, seq: usize) -> Vec<(usize, ServeRequest)> {
+    let n = 2 + rng.below(5);
+    (0..n)
+        .map(|i| {
+            let plen = 1 + rng.below(3 * seq);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            (
+                rng.below(4),
+                ServeRequest {
+                    id: i as u64,
+                    prompt,
+                    max_new_tokens: 1 + rng.below(2 * seq),
+                    seed: rng.next_u64(),
+                    model: None,
+                },
+            )
+        })
+        .collect()
+}
+
+fn sorted_streams(finished: &[sparsegpt::serve::FinishedRequest]) -> Vec<(u64, Vec<i32>)> {
+    let mut out: Vec<(u64, Vec<i32>)> =
+        finished.iter().map(|f| (f.id, f.tokens.clone())).collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+#[test]
+fn single_replica_router_matches_bare_engine_on_all_packed_formats() {
+    for (label, model) in models() {
+        let (vocab, seq) = (model.cfg.vocab, model.cfg.seq);
+        for seed in 0..TRIALS {
+            let mut rng = Rng::new(seed ^ 0x707E);
+            let reqs = workload(&mut rng, vocab, seq);
+            let opts = EngineOptions {
+                policy: SchedulerPolicy {
+                    max_batch: 1 + rng.below(4),
+                    max_wait: rng.below(3),
+                    queue_cap: 16,
+                    max_prefill_tokens: [0, seq][rng.below(2)],
+                },
+                temperature: [0.0, 0.9][rng.below(2)],
+                top_k: 4,
+                prefill_chunk: [0, 2][rng.below(2)],
+                cache_budget_bytes: [0, model.cache_bytes()][rng.below(2)],
+                ..EngineOptions::default()
+            };
+            let bare = ServeEngine::new(&model, opts).run(reqs.clone(), &mut |_| {}).unwrap();
+            let routed = Router::new(&model, opts, 1).run(reqs, &mut |_| {}).unwrap();
+            assert_eq!(
+                sorted_streams(&routed.total.finished),
+                sorted_streams(&bare.finished),
+                "{label} seed {seed}: a 1-replica router changed a token stream"
+            );
+            assert_eq!(routed.per_replica.len(), 1, "{label} seed {seed}");
+            assert!(
+                routed.total.finished.iter().all(|f| f.replica == 0),
+                "{label} seed {seed}: single replica must stamp replica 0"
+            );
+            assert_eq!(routed.total.tokens, bare.tokens, "{label} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn multi_replica_drain_returns_every_replica_budget_to_zero() {
+    let (_, model) = models().remove(0);
+    let replicas = 3;
+    let mut rng = Rng::new(0xD12A1);
+    let reqs: Vec<(usize, ServeRequest)> = (0..12)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..4).map(|_| rng.below(model.cfg.vocab) as i32).collect();
+            (
+                0,
+                ServeRequest {
+                    id: i as u64,
+                    prompt,
+                    max_new_tokens: 6,
+                    seed: rng.next_u64(),
+                    model: None,
+                },
+            )
+        })
+        .collect();
+    let opts = EngineOptions {
+        policy: SchedulerPolicy { max_batch: 2, max_wait: 0, queue_cap: 16, max_prefill_tokens: 0 },
+        temperature: 0.0,
+        top_k: 0,
+        // a *total* budget of 6 cache slots: each replica gets 2
+        cache_budget_bytes: 6 * model.cache_bytes(),
+        ..EngineOptions::default()
+    };
+    let out = Router::new(&model, opts, replicas).run(reqs, &mut |_| {}).unwrap();
+    assert_eq!(out.per_replica.len(), replicas);
+    assert_eq!(out.total.finished.len(), 12, "every request must retire");
+    let mut tokens = 0;
+    for (i, r) in out.per_replica.iter().enumerate() {
+        assert_eq!(
+            r.cache_bytes_in_use, 0,
+            "replica {i} drained with cache bytes still reserved"
+        );
+        assert!(r.peak_cache_bytes > 0, "replica {i} never admitted a request");
+        tokens += r.tokens;
+    }
+    assert_eq!(tokens, out.total.tokens, "aggregate token count must be the per-replica sum");
+    assert_eq!(out.total.cache_bytes_in_use, 0);
+}
+
+/// A burst of client submissions that doesn't respect backpressure (like
+/// the network front door): everything lands at once, the router sheds the
+/// overflow, and one client hangs up mid-stream.
+struct ChaosSource {
+    burst: Vec<ServeRequest>,
+    sent: bool,
+    victim: u64,
+    cut_after: usize,
+    rejected: Vec<(u64, usize, usize)>,
+    cancelled: Vec<(u64, usize)>,
+    finished: Vec<u64>,
+}
+
+impl RequestSource for ChaosSource {
+    fn poll(&mut self, _step: usize, _queue_free: usize) -> Vec<ServeRequest> {
+        if self.sent {
+            Vec::new()
+        } else {
+            self.sent = true;
+            std::mem::take(&mut self.burst)
+        }
+    }
+    fn take_cancelled(&mut self, _step: usize) -> Vec<u64> {
+        Vec::new()
+    }
+    fn closed(&self) -> bool {
+        self.sent
+    }
+    fn rejected(&mut self, req: &ServeRequest, queue: usize, cap: usize) {
+        self.rejected.push((req.id, queue, cap));
+    }
+    fn token(&mut self, id: u64, index: usize, _token: i32) -> bool {
+        // the victim's client drops its connection after `cut_after` tokens
+        !(id == self.victim && index + 1 >= self.cut_after)
+    }
+    fn finished(&mut self, fin: &sparsegpt::serve::FinishedRequest) {
+        self.finished.push(fin.id);
+    }
+    fn cancelled(&mut self, id: u64, tokens: usize) {
+        self.cancelled.push((id, tokens));
+    }
+}
+
+#[test]
+fn chaos_burst_sticky_cancel_and_fleet_shaped_backpressure() {
+    let (_, model) = models().remove(0);
+    let mut rng = Rng::new(0xC4A05);
+    // six clients against 2 replicas x queue_cap 2: four admitted, two shed.
+    // Client 0 wants an effectively unbounded stream and disconnects after
+    // two tokens — its cancel must land on whichever replica owns it.
+    let burst: Vec<ServeRequest> = (0..6)
+        .map(|i| ServeRequest {
+            id: i as u64,
+            prompt: (0..4).map(|_| rng.below(model.cfg.vocab) as i32).collect(),
+            max_new_tokens: if i == 0 { 10_000 } else { 6 },
+            seed: rng.next_u64(),
+            model: None,
+        })
+        .collect();
+    let mut source = ChaosSource {
+        burst,
+        sent: false,
+        victim: 0,
+        cut_after: 2,
+        rejected: Vec::new(),
+        cancelled: Vec::new(),
+        finished: Vec::new(),
+    };
+    let opts = EngineOptions {
+        policy: SchedulerPolicy { max_batch: 1, max_wait: 0, queue_cap: 2, max_prefill_tokens: 0 },
+        temperature: 0.0,
+        top_k: 0,
+        ..EngineOptions::default()
+    };
+    let mut events = Vec::new();
+    let out = Router::new(&model, opts, 2)
+        .run_source(&mut source, &mut |e| events.push(e.clone()))
+        .unwrap();
+
+    // 429s fire only once *both* bounded queues are full, and report the
+    // fleet-wide capacity (2 replicas x queue_cap 2)
+    let mut shed: Vec<u64> = source.rejected.iter().map(|&(id, _, _)| id).collect();
+    shed.sort_unstable();
+    assert_eq!(shed, vec![4, 5], "exactly the overflow past fleet capacity is shed");
+    for &(id, queue, cap) in &source.rejected {
+        assert_eq!((queue, cap), (4, 4), "429 for {id} must be shaped as full fleet capacity");
+    }
+    assert_eq!(out.total.rejected, 2);
+
+    // sticky ownership: the victim's cancellation retired on the replica
+    // that enqueued it
+    let mut enqueued: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut cancelled: BTreeMap<u64, usize> = BTreeMap::new();
+    for e in &events {
+        match e {
+            ServeEvent::Enqueued { id, replica, .. } => {
+                enqueued.insert(*id, *replica);
+            }
+            ServeEvent::Cancelled { id, replica, .. } => {
+                cancelled.insert(*id, *replica);
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(enqueued.len(), 4, "four clients admitted");
+    assert_eq!(
+        cancelled.get(&0),
+        enqueued.get(&0),
+        "cancel must reach the replica that owns request 0"
+    );
+    assert_eq!(out.total.cancelled, 1);
+    let (cancel_id, cancel_tokens) = source.cancelled[0];
+    assert_eq!(cancel_id, 0);
+    assert!(
+        (2..10_000).contains(&cancel_tokens),
+        "victim retired early with {cancel_tokens} tokens"
+    );
+
+    // the survivors finish, spread across both replicas
+    let mut done = source.finished.clone();
+    done.sort_unstable();
+    assert_eq!(done, vec![1, 2, 3]);
+    let replicas_used: std::collections::BTreeSet<usize> = enqueued.values().copied().collect();
+    assert_eq!(replicas_used.len(), 2, "the burst must fan out across both replicas");
+
+    // clean drain: every replica's budget is back to zero
+    for (i, r) in out.per_replica.iter().enumerate() {
+        assert_eq!(r.cache_bytes_in_use, 0, "replica {i} leaked cache reservation");
+    }
+}

@@ -124,7 +124,7 @@ fn cached_decode_matches_reforward_on_all_packed_formats() {
                 prefill_chunk: chunk,
                 cache_budget_bytes,
                 kv_cache: true,
-                workers: 0,
+                ..EngineOptions::default()
             };
             let cached = token_streams(&model, base, reqs.clone());
             let uncached =
